@@ -1,0 +1,28 @@
+//! §Perf measurement probe: stable best-of-N GFlop/s for the two executors
+//! on the two paper regimes (used for the EXPERIMENTS.md §Perf log).
+use merge_spmm::gen;
+use merge_spmm::spmm::{merge_spmm, rowsplit_spmm};
+
+fn main() {
+    let long = gen::uniform_rows(16_384, 62, Some(4096), 1);
+    let short = gen::power_law(65_536, 1.3, 512, 2);
+    for (name, a) in [("long", &long), ("short", &short)] {
+        let b = gen::dense_matrix(a.k, 64, 3);
+        type SpmmFn = fn(&merge_spmm::formats::Csr, &[f32], usize, usize) -> Vec<f32>;
+        for (alg, f) in [
+            ("rowsplit", rowsplit_spmm as SpmmFn),
+            ("merge", merge_spmm as SpmmFn),
+        ] {
+            let mut best = f64::INFINITY;
+            for _ in 0..12 {
+                let t0 = std::time::Instant::now();
+                std::hint::black_box(f(a, &b, 64, 1));
+                best = best.min(t0.elapsed().as_secs_f64());
+            }
+            println!(
+                "{name}/{alg}: {:.2} GFlop/s (best of 12)",
+                2.0 * a.nnz() as f64 * 64.0 / best / 1e9
+            );
+        }
+    }
+}

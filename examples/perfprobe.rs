@@ -1,0 +1,44 @@
+//! Perf probe: break the engine PJRT latency into stages.
+use merge_spmm::formats::Csr;
+use merge_spmm::gen;
+use merge_spmm::runtime::{pad, Runtime};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::Path::new("artifacts");
+    let rt = Runtime::load_filtered(dir, |a| a.entry == "spmm_merge")?;
+    let art = rt.manifest().by_entry("spmm_merge").next().unwrap().clone();
+    let a = Csr::random(900, 900, 4.0, 1);
+    let b = gen::dense_matrix(900, 64, 2);
+    let reps = 50;
+
+    let mut t_pad = 0.0; let mut t_lit = 0.0; let mut t_exec = 0.0; let mut t_unpad = 0.0;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let p = pad::pad_coo(&a, &art).unwrap();
+        let bp = pad::pad_dense(&b, 900, 64, p.k, p.n).unwrap();
+        t_pad += t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let args = vec![
+            Runtime::literal_i32(&p.row_idx, &[p.nnz_pad])?,
+            Runtime::literal_i32(&p.col_idx, &[p.nnz_pad])?,
+            Runtime::literal_f32(&p.vals, &[p.nnz_pad])?,
+            Runtime::literal_f32(&bp, &[p.k, p.n])?,
+        ];
+        t_lit += t1.elapsed().as_secs_f64();
+
+        let t2 = Instant::now();
+        let out = rt.execute(&art.name, &args)?;
+        t_exec += t2.elapsed().as_secs_f64();
+
+        let t3 = Instant::now();
+        let c = pad::unpad_output(&out, p.m, p.n, a.m, 64);
+        std::hint::black_box(c);
+        t_unpad += t3.elapsed().as_secs_f64();
+    }
+    let ms = |t: f64| t / reps as f64 * 1e3;
+    println!("pad {:.3}ms  literals {:.3}ms  execute {:.3}ms  unpad {:.3}ms  total {:.3}ms",
+        ms(t_pad), ms(t_lit), ms(t_exec), ms(t_unpad), ms(t_pad+t_lit+t_exec+t_unpad));
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Quickstart: build a sparse matrix, run SpMM through the engine, and see
+//! which algorithm the paper's heuristic picked.
+//!
+//! ```bash
+//! make artifacts            # once: AOT-compile the Pallas kernels
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Works without artifacts too (CPU executors): the engine falls back
+//! automatically when the matrix fits no AOT bucket, and `--cpu-only`
+//! via `EngineConfig { artifacts_dir: None, .. }` skips PJRT entirely.
+
+use merge_spmm::coordinator::{EngineConfig, SpmmEngine};
+use merge_spmm::formats::Csr;
+use merge_spmm::gen;
+use merge_spmm::util::gflops;
+
+fn main() -> anyhow::Result<()> {
+    // An engine: loads + compiles every AOT artifact once (falls back to
+    // CPU executors if `make artifacts` hasn't been run).
+    let artifacts = std::path::Path::new("artifacts");
+    let engine = if artifacts.join("manifest.json").exists() {
+        SpmmEngine::new(EngineConfig::default())?
+    } else {
+        eprintln!("(no artifacts/ — running CPU executors only)");
+        SpmmEngine::cpu_only(9.35, 0)
+    };
+
+    // Two matrices on opposite sides of the paper's d = 9.35 threshold.
+    let short_rows = Csr::random(1000, 1000, 4.0, 1); // d ≈ 4  → merge-based
+    let long_rows = gen::uniform_rows(1000, 24, Some(1000), 2); // d = 24 → row-split
+    let b = gen::dense_matrix(1000, 64, 3); // the tall-skinny dense matrix
+
+    for (name, a) in [("short-row graph", &short_rows), ("long-row matrix", &long_rows)] {
+        let r = engine.spmm(a, &b, 64)?;
+        println!(
+            "{name}: d = {:5.2} → {:<11} via {:?}{}  ({:.2} ms, {:.2} GFlop/s)",
+            a.mean_row_length(),
+            r.algorithm.to_string(),
+            r.path,
+            r.bucket.as_deref().map(|s| format!(" [{s}]")).unwrap_or_default(),
+            r.latency_s * 1e3,
+            gflops(a.nnz(), 64, r.latency_s),
+        );
+        // verify against the textbook reference
+        let want = merge_spmm::spmm::spmm_reference(a, &b, 64);
+        let max_err = r
+            .c
+            .iter()
+            .zip(&want)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        println!("  max |err| vs reference = {max_err:.2e}");
+    }
+
+    println!("\nmetrics: {}", engine.metrics.snapshot());
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! Serving driver: batched SpMM requests against the full engine —
+//! router → bucket batcher → per-worker PJRT engines → heuristic kernels.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example spmm_server
+//! cargo run --release --example spmm_server -- 500 4   # requests, workers
+//! ```
+//!
+//! The workload mixes the paper's two regimes (short-row graphs → merge
+//! buckets, long-row matrices → row-split buckets) plus oversize matrices
+//! that exercise the CPU fallback.  Reports throughput and the latency
+//! distribution; recorded in EXPERIMENTS.md §E2E.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use merge_spmm::coordinator::{EngineConfig, Server, ServerConfig};
+use merge_spmm::formats::Csr;
+use merge_spmm::gen;
+use merge_spmm::util::{percentile, XorShift};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(300);
+    let workers: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(2);
+
+    let artifacts = std::path::Path::new("artifacts");
+    let engine_cfg = if artifacts.join("manifest.json").exists() {
+        EngineConfig::default()
+    } else {
+        eprintln!("(no artifacts/ — CPU executors only)");
+        EngineConfig {
+            artifacts_dir: None,
+            ..Default::default()
+        }
+    };
+    let server = Server::start(
+        engine_cfg,
+        ServerConfig {
+            workers,
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            queue_capacity: 256,
+        },
+    )?;
+
+    // Workload mix: 40 % short-row graphs (merge), 40 % long-row (row-split),
+    // 20 % oversize (CPU fallback).
+    let mut rng = XorShift::new(7);
+    let short: Vec<Arc<Csr>> = (0..4)
+        .map(|i| Arc::new(Csr::random(900, 900, 4.0, 50 + i)))
+        .collect();
+    let long: Vec<Arc<Csr>> = (0..4)
+        .map(|i| Arc::new(gen::uniform_rows(900, 24, Some(900), 60 + i)))
+        .collect();
+    let oversize: Vec<Arc<Csr>> = (0..2)
+        .map(|i| Arc::new(Csr::random(5000, 5000, 3.0, 70 + i)))
+        .collect();
+    let b900 = Arc::new(gen::dense_matrix(900, 64, 80));
+    let b5000 = Arc::new(gen::dense_matrix(5000, 64, 81));
+
+    println!("submitting {requests} requests to {workers} workers…");
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..requests)
+        .map(|_| match rng.below(10) {
+            0..=3 => server.submit(
+                Arc::clone(&short[rng.below(short.len())]),
+                Arc::clone(&b900),
+                64,
+            ),
+            4..=7 => server.submit(
+                Arc::clone(&long[rng.below(long.len())]),
+                Arc::clone(&b900),
+                64,
+            ),
+            _ => server.submit(
+                Arc::clone(&oversize[rng.below(oversize.len())]),
+                Arc::clone(&b5000),
+                64,
+            ),
+        })
+        .collect();
+
+    let mut lat = Vec::with_capacity(requests);
+    let mut errors = 0usize;
+    for h in handles {
+        match h.recv() {
+            Ok(Ok(r)) => lat.push(r.latency_s),
+            _ => errors += 1,
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = server.shutdown();
+
+    println!(
+        "\n{} ok / {errors} errors in {wall:.2}s — {:.1} req/s",
+        lat.len(),
+        lat.len() as f64 / wall
+    );
+    println!(
+        "engine latency p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms",
+        percentile(&lat, 50.0) * 1e3,
+        percentile(&lat, 95.0) * 1e3,
+        percentile(&lat, 99.0) * 1e3
+    );
+    println!(
+        "algorithms: row-split {}  merge {}  |  paths: pjrt {}  cpu-fallback {}",
+        snap.rowsplit, snap.merge, snap.pjrt, snap.cpu_fallback
+    );
+    anyhow::ensure!(errors == 0, "{errors} requests failed");
+    Ok(())
+}

@@ -1,0 +1,174 @@
+"""AOT pipeline: lower every (entry point × shape bucket) to HLO **text**.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (``make artifacts``):
+  artifacts/<name>.hlo.txt   — one per entry × bucket
+  artifacts/manifest.json    — arg shapes/dtypes + bucket metadata for the
+                               Rust ``runtime::manifest`` loader
+
+Run from ``python/``:  python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import functools
+import hashlib
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import buckets as bk
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _entries():
+    """Yield (name, jittable fn, arg specs, arg names, bucket meta)."""
+    i32, f32 = jnp.int32, jnp.float32
+    for b in bk.ROWSPLIT_BUCKETS:
+        yield (
+            b.name,
+            model.spmm_rowsplit_entry,
+            [
+                _spec((b.m, b.ell), i32),
+                _spec((b.m, b.ell), f32),
+                _spec((b.k, b.n), f32),
+            ],
+            ["col_idx", "vals", "b"],
+            {"entry": "spmm_rowsplit", "m": b.m, "k": b.k, "ell": b.ell, "n": b.n},
+        )
+    for b in bk.MERGE_BUCKETS:
+        yield (
+            b.name,
+            functools.partial(model.spmm_merge_entry, m=b.m),
+            [
+                _spec((b.nnz_pad,), i32),
+                _spec((b.nnz_pad,), i32),
+                _spec((b.nnz_pad,), f32),
+                _spec((b.k, b.n), f32),
+            ],
+            ["row_idx", "col_idx", "vals", "b"],
+            {
+                "entry": "spmm_merge",
+                "m": b.m,
+                "k": b.k,
+                "nnz_pad": b.nnz_pad,
+                "n": b.n,
+            },
+        )
+    for b in bk.SPMV_ROWSPLIT_BUCKETS:
+        yield (
+            b.name,
+            model.spmv_rowsplit_entry,
+            [
+                _spec((b.m, b.ell), i32),
+                _spec((b.m, b.ell), f32),
+                _spec((b.k,), f32),
+            ],
+            ["col_idx", "vals", "x"],
+            {"entry": "spmv_rowsplit", "m": b.m, "k": b.k, "ell": b.ell},
+        )
+    for b in bk.SPMV_MERGE_BUCKETS:
+        yield (
+            b.name,
+            functools.partial(model.spmv_merge_entry, m=b.m),
+            [
+                _spec((b.nnz_pad,), i32),
+                _spec((b.nnz_pad,), i32),
+                _spec((b.nnz_pad,), f32),
+                _spec((b.k,), f32),
+            ],
+            ["row_idx", "col_idx", "vals", "x"],
+            {"entry": "spmv_merge", "m": b.m, "k": b.k, "nnz_pad": b.nnz_pad},
+        )
+    for b in bk.GEMM_BUCKETS:
+        yield (
+            b.name,
+            model.gemm_entry,
+            [_spec((b.m, b.k), f32), _spec((b.k, b.n), f32)],
+            ["a", "b"],
+            {"entry": "gemm", "m": b.m, "k": b.k, "n": b.n},
+        )
+    for b in bk.GCN_BUCKETS:
+        yield (
+            b.name,
+            model.gcn_fwd,
+            [
+                _spec((b.m, b.ell), i32),
+                _spec((b.m, b.ell), f32),
+                _spec((b.m, b.f), f32),
+                _spec((b.f, b.h), f32),
+                _spec((b.h, b.o), f32),
+            ],
+            ["col_idx", "vals", "x", "w1", "w2"],
+            {
+                "entry": "gcn_fwd",
+                "m": b.m,
+                "ell": b.ell,
+                "f": b.f,
+                "h": b.h,
+                "o": b.o,
+            },
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on artifact name")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    manifest = {"format": "hlo-text-v1", "artifacts": []}
+    for name, fn, specs, arg_names, meta in _entries():
+        if args.only and args.only not in name:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        out_aval = jax.eval_shape(fn, *specs)[0]
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": path.name,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                "args": [
+                    {
+                        "name": an,
+                        "shape": list(s.shape),
+                        "dtype": str(s.dtype),
+                    }
+                    for an, s in zip(arg_names, specs)
+                ],
+                "out": {"shape": list(out_aval.shape), "dtype": str(out_aval.dtype)},
+                "meta": meta,
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2) + "\n")
+    print(f"wrote {out_dir / 'manifest.json'} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Shape-bucket registry shared between the AOT pipeline and the Rust engine.
+
+XLA executables have static shapes, so the serve path buckets every incoming
+CSR matrix: the Rust coordinator picks the smallest bucket that fits
+(m ≤ bucket.m, max row length ≤ bucket.ell or nnz ≤ bucket.nnz_pad) and
+pads.  ``aot.py`` lowers one artifact per (entry point × bucket) and writes
+``artifacts/manifest.json`` describing every artifact; the Rust
+``runtime::manifest`` module parses that file, so this table is the single
+source of truth.
+
+Bucket sizing rationale: n = 64 is the paper's dense-matrix width
+throughout §5; m/k cover the small-to-mid SuiteSparse range the serve
+examples use; ELL widths follow the paper's row-length regimes (short ≈ 8,
+the heuristic crossover ≈ 9.35, long ≈ 62.5 → 32/128 padded widths).
+"""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class RowsplitBucket:
+    m: int
+    k: int
+    ell: int
+    n: int
+
+    @property
+    def name(self) -> str:
+        return f"spmm_rowsplit_m{self.m}_k{self.k}_l{self.ell}_n{self.n}"
+
+
+@dataclasses.dataclass(frozen=True)
+class MergeBucket:
+    m: int
+    k: int
+    nnz_pad: int
+    n: int
+
+    @property
+    def name(self) -> str:
+        return f"spmm_merge_m{self.m}_k{self.k}_z{self.nnz_pad}_n{self.n}"
+
+
+@dataclasses.dataclass(frozen=True)
+class SpmvRowsplitBucket:
+    m: int
+    k: int
+    ell: int
+
+    @property
+    def name(self) -> str:
+        return f"spmv_rowsplit_m{self.m}_k{self.k}_l{self.ell}"
+
+
+@dataclasses.dataclass(frozen=True)
+class SpmvMergeBucket:
+    m: int
+    k: int
+    nnz_pad: int
+
+    @property
+    def name(self) -> str:
+        return f"spmv_merge_m{self.m}_k{self.k}_z{self.nnz_pad}"
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmBucket:
+    m: int
+    k: int
+    n: int
+
+    @property
+    def name(self) -> str:
+        return f"gemm_m{self.m}_k{self.k}_n{self.n}"
+
+
+@dataclasses.dataclass(frozen=True)
+class GcnBucket:
+    m: int  # nodes (Â is m×m)
+    ell: int  # ELL width of Â
+    f: int  # input feature width
+    h: int  # hidden width
+    o: int  # output width
+
+    @property
+    def name(self) -> str:
+        return f"gcn_fwd_m{self.m}_l{self.ell}_f{self.f}_h{self.h}_o{self.o}"
+
+
+ROWSPLIT_BUCKETS = [
+    # ell=16 bucket: short-row matrices (d < 9.35 regime) pay 2× less
+    # padding work than in the 32-wide bucket (§Perf iteration 2)
+    RowsplitBucket(m=1024, k=1024, ell=16, n=64),
+    RowsplitBucket(m=1024, k=1024, ell=32, n=64),
+    RowsplitBucket(m=1024, k=1024, ell=128, n=64),
+    RowsplitBucket(m=4096, k=4096, ell=32, n=64),
+    RowsplitBucket(m=4096, k=4096, ell=128, n=64),
+]
+
+MERGE_BUCKETS = [
+    # z=4096 bucket: small/sparse matrices avoid 4× padded execute time
+    # (§Perf iteration 2: execute dominates request latency)
+    MergeBucket(m=1024, k=1024, nnz_pad=4096, n=64),
+    MergeBucket(m=1024, k=1024, nnz_pad=16384, n=64),
+    MergeBucket(m=4096, k=4096, nnz_pad=65536, n=64),
+]
+
+SPMV_ROWSPLIT_BUCKETS = [SpmvRowsplitBucket(m=1024, k=1024, ell=32)]
+SPMV_MERGE_BUCKETS = [SpmvMergeBucket(m=1024, k=1024, nnz_pad=16384)]
+
+GEMM_BUCKETS = [
+    GemmBucket(m=1024, k=1024, n=64),
+]
+
+GCN_BUCKETS = [GcnBucket(m=1024, ell=32, f=64, h=64, o=16)]

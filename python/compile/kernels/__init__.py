@@ -1,0 +1,17 @@
+"""L1 — Pallas kernels for the paper's two SpMM algorithms + baselines.
+
+Public surface:
+  rowsplit.rowsplit_spmm   — Algorithm I (paper §4.1)
+  merge.merge_spmm         — Algorithm II (paper §4.2)
+  spmv.spmv_rowsplit / spmv.spmv_merge — SpMV ancestors (§4, Fig. 1)
+  gemm.gemm                — dense baseline (Fig. 7)
+  ref.*                    — pure-jnp oracles
+  formats.*                — host CSR → static-shape device views
+"""
+
+from .gemm import gemm
+from .merge import merge_spmm
+from .rowsplit import rowsplit_spmm
+from .spmv import spmv_merge, spmv_rowsplit
+
+__all__ = ["gemm", "merge_spmm", "rowsplit_spmm", "spmv_merge", "spmv_rowsplit"]

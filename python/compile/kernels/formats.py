@@ -1,0 +1,98 @@
+"""Host-side sparse-format helpers shared by tests, the model, and AOT.
+
+Converts a host CSR matrix (numpy ``row_ptr``/``col_idx``/``vals``) into the
+two static-shape device views the kernels consume (see ``ref.py`` for the
+conventions).  These run at build/trace time only — the Rust ``formats``
+module is the serve-time counterpart and is tested to produce bit-identical
+views.
+"""
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class CsrHost:
+    """A host-side CSR matrix: ``m × k`` with ``nnz`` nonzeros."""
+
+    m: int
+    k: int
+    row_ptr: np.ndarray  # [m+1] int64
+    col_idx: np.ndarray  # [nnz] int32
+    vals: np.ndarray  # [nnz] f32
+
+    @property
+    def nnz(self) -> int:
+        return int(self.row_ptr[-1])
+
+    @property
+    def mean_row_length(self) -> float:
+        """The paper's heuristic statistic d = nnz / m (§5.4)."""
+        return self.nnz / max(self.m, 1)
+
+    def to_dense(self) -> np.ndarray:
+        out = np.zeros((self.m, self.k), dtype=np.float32)
+        for i in range(self.m):
+            s, e = self.row_ptr[i], self.row_ptr[i + 1]
+            np.add.at(out[i], self.col_idx[s:e], self.vals[s:e])
+        return out
+
+
+def random_csr(m: int, k: int, avg_row: float, seed: int = 0) -> CsrHost:
+    """Random CSR with geometric-ish row lengths around ``avg_row``."""
+    rng = np.random.default_rng(seed)
+    lens = rng.poisson(avg_row, size=m).clip(0, k)
+    row_ptr = np.zeros(m + 1, dtype=np.int64)
+    np.cumsum(lens, out=row_ptr[1:])
+    nnz = int(row_ptr[-1])
+    col_idx = np.empty(nnz, dtype=np.int32)
+    for i in range(m):
+        s, e = row_ptr[i], row_ptr[i + 1]
+        col_idx[s:e] = np.sort(rng.choice(k, size=e - s, replace=False))
+    vals = rng.standard_normal(nnz).astype(np.float32)
+    return CsrHost(m, k, row_ptr, col_idx, vals)
+
+
+def csr_to_ell(csr: CsrHost, ell: int | None = None, pad_to: int = 1):
+    """CSR → ELL-padded view (row-split kernels).
+
+    Returns ``(col_idx[m, L], vals[m, L])`` with ``L = max row length``
+    rounded up to a multiple of ``pad_to`` (or the explicit ``ell``).
+    Rows longer than ``L`` raise — the caller picks the bucket.
+    """
+    lens = np.diff(csr.row_ptr)
+    max_len = int(lens.max()) if csr.m else 0
+    if ell is None:
+        ell = max(-(-max_len // pad_to) * pad_to, pad_to)
+    elif max_len > ell:
+        raise ValueError(f"row length {max_len} exceeds ELL width {ell}")
+    cols = np.zeros((csr.m, ell), dtype=np.int32)
+    vals = np.zeros((csr.m, ell), dtype=np.float32)
+    for i in range(csr.m):
+        s, e = csr.row_ptr[i], csr.row_ptr[i + 1]
+        cols[i, : e - s] = csr.col_idx[s:e]
+        vals[i, : e - s] = csr.vals[s:e]
+    return cols, vals
+
+
+def csr_to_coo(csr: CsrHost, nnz_pad: int | None = None, pad_to: int = 1):
+    """CSR → flat COO view (merge-based kernels): the *PrepareSpmm* flatten.
+
+    Returns ``(row_idx, col_idx, vals)`` each ``[nnz_pad]``; padding entries
+    have ``row_idx = m`` (dump row), ``col_idx = 0``, ``vals = 0``.
+    """
+    nnz = csr.nnz
+    if nnz_pad is None:
+        nnz_pad = max(-(-nnz // pad_to) * pad_to, pad_to)
+    elif nnz > nnz_pad:
+        raise ValueError(f"nnz {nnz} exceeds pad {nnz_pad}")
+    row_idx = np.full(nnz_pad, csr.m, dtype=np.int32)
+    col_idx = np.zeros(nnz_pad, dtype=np.int32)
+    vals = np.zeros(nnz_pad, dtype=np.float32)
+    row_idx[:nnz] = np.repeat(
+        np.arange(csr.m, dtype=np.int32), np.diff(csr.row_ptr)
+    )
+    col_idx[:nnz] = csr.col_idx
+    vals[:nnz] = csr.vals
+    return row_idx, col_idx, vals

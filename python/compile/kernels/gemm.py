@@ -1,0 +1,54 @@
+"""Dense GEMM Pallas kernel — the Fig. 7 cuBLAS-sgemm baseline.
+
+Fig. 7 measures where merge-based SpMM stops beating dense-dense GEMM as
+the sparse matrix fills in (the paper finds the crossover near 9 %
+density).  Regenerating that figure needs a dense baseline compiled through
+the same stack, so it is a Pallas kernel too: the classic MXU-tiled matmul
+with a sequential accumulation grid over k.
+
+On a real TPU the (TM, TK)/(TK, TN) operand tiles feed the 128×128 MXU
+systolic array; ``preferred_element_type=float32`` keeps the accumulator in
+f32 as the paper's single-precision setup does.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(a_ref, b_ref, c_ref):
+    kk = pl.program_id(2)  # innermost: sequential accumulation over k tiles
+
+    @pl.when(kk == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    c_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "tk"))
+def gemm(a, b, *, tm: int = 128, tn: int = 64, tk: int = 128):
+    """Tiled dense GEMM: C = A·B, both dense row-major."""
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {k} vs {k2}")
+    tm, tn, tk = min(tm, m), min(tn, n), min(tk, k)
+    if m % tm or n % tn or k % tk:
+        raise ValueError(f"tiles ({tm},{tn},{tk}) must divide ({m},{n},{k})")
+
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=(m // tm, n // tn, k // tk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,95 @@
+"""Algorithm II — merge-based (nonzero-split) SpMM as a Pallas kernel (§4.2).
+
+The paper's two-phase decomposition:
+
+* **Phase 1 (PartitionSpmm)** — divide the nonzero stream evenly across
+  CTAs.  Here the partition is the *grid itself*: the flat COO stream is
+  tiled in equal ``TZ``-nonzero blocks, so every grid step gets exactly the
+  same amount of work — the explicit load-balancing that eliminates Type-1
+  and Type-2 imbalance.  (The binary search over ``row_ptr`` the GPU needs
+  to find each CTA's starting row is done once at build time by the
+  CSR→COO flatten — the paper's *PrepareSpmm* — and at serve time by the
+  Rust ``loadbalance`` layer, where parallelism is real.)
+* **Phase 2** — each step computes ``vals[e] * B[col[e], :]`` for its TZ
+  nonzeros and segment-adds them into C rows.
+
+Carry-out handling: on the GPU, rows spanning CTA boundaries need a
+carry-out buffer plus a fix-up kernel because CTAs cannot synchronize.  A
+Pallas grid executes *sequentially* per core, so the TPU-idiomatic
+equivalent is accumulation across grid steps into a revisited output block
+(``index_map`` ignores the nonzero-tile index).  The parallel carry-out
+fix-up is implemented and tested in the Rust executor
+(``rust/src/spmm/merge.rs``), where CTAs are real threads.
+
+Padding convention: the flat COO stream is padded to a multiple of TZ with
+``row_idx = m`` (one past the last row); C is materialized with ``m+1``
+rows and the dump row is sliced off at the end.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _merge_kernel(rows_ref, cols_ref, vals_ref, b_ref, c_ref):
+    """One grid step: TZ nonzeros × a (k, TN) B-column tile."""
+    z = pl.program_id(1)  # nonzero-tile index (innermost → sequential acc)
+
+    @pl.when(z == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    rows = rows_ref[...]  # (TZ,) int32, pad rows = m
+    cols = cols_ref[...]  # (TZ,) int32
+    vals = vals_ref[...]  # (TZ,) f32
+    b = b_ref[...]  # (k, TN) f32
+
+    prods = vals[:, None] * b[cols]  # (TZ, TN) — the flat products
+    # Segmented reduction into C rows.  Scatter-add subsumes the in-block
+    # segmented scan + carry-out of the GPU formulation.
+    c_ref[...] = c_ref[...].at[rows].add(prods)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "tz", "tn"))
+def merge_spmm(row_idx, col_idx, vals, b, *, m: int, tz: int = 1024, tn: int = 64):
+    """Merge-based SpMM: C = A·B with A as a flat COO nonzero stream.
+
+    Args:
+      row_idx: ``[nnz_pad]`` int32 — row of each nonzero (pad = m).
+      col_idx: ``[nnz_pad]`` int32 — column of each nonzero (pad = 0).
+      vals:    ``[nnz_pad]`` f32   — value of each nonzero (pad = 0.0).
+      b:       ``[k, n]`` f32 — dense row-major matrix.
+      m:       number of rows of A / C.
+      tz:      nonzeros per grid step (the paper's per-CTA work quantum).
+      tn:      B-column tile size.
+
+    Returns:
+      ``[m, n]`` f32 dense C.
+    """
+    (nnz_pad,) = row_idx.shape
+    k, n = b.shape
+    tz = min(tz, nnz_pad)
+    tn = min(tn, n)
+    if nnz_pad % tz or n % tn:
+        raise ValueError(f"tiles ({tz},{tn}) must divide ({nnz_pad},{n})")
+
+    # Column tiles outermost, nonzero tiles innermost: consecutive steps
+    # revisit the same C block, which Pallas keeps resident (the
+    # accumulation pattern).
+    grid = (n // tn, nnz_pad // tz)
+    out = pl.pallas_call(
+        _merge_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tz,), lambda j, z: (z,)),  # row_idx tile
+            pl.BlockSpec((tz,), lambda j, z: (z,)),  # col_idx tile
+            pl.BlockSpec((tz,), lambda j, z: (z,)),  # vals tile
+            pl.BlockSpec((k, tn), lambda j, z: (0, j)),  # B column tile
+        ],
+        out_specs=pl.BlockSpec((m + 1, tn), lambda j, z: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m + 1, n), jnp.float32),
+        interpret=True,  # CPU path; real-TPU lowering emits Mosaic custom-calls
+    )(row_idx, col_idx, vals, b)
+    return out[:m]

@@ -1,0 +1,66 @@
+"""Pure-jnp correctness oracles for every kernel in this package.
+
+These are the ground truth the Pallas kernels (and, transitively, the Rust
+CPU executors, which are tested against HLO artifacts lowered from the
+kernels) are validated against.
+
+Sparse operand conventions
+--------------------------
+The paper's input format is CSR.  XLA needs static shapes, so the build
+path carries two *static-shape* views of the same CSR matrix:
+
+* **ELL-padded view** (row-split kernels): ``col_idx[m, L]`` / ``vals[m, L]``
+  where ``L`` is the padded row length.  Padding entries have ``col_idx = 0``
+  and ``vals = 0`` so they contribute nothing.
+* **Flat COO view** (merge-based kernels): ``row_idx[nnz_pad]`` /
+  ``col_idx[nnz_pad]`` / ``vals[nnz_pad]`` — the CSR nonzero stream with the
+  row index materialized (the paper's *PrepareSpmm* "flatten CSR-to-COO"
+  step).  Padding entries have ``row_idx = m`` (one past the end) so a
+  segment-sum over ``m + 1`` buckets drops them.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def spmm_ell_ref(col_idx, vals, b):
+    """SpMM oracle over the ELL-padded view.
+
+    C[i, :] = sum_l vals[i, l] * B[col_idx[i, l], :]
+    """
+    gathered = b[col_idx]  # [m, L, n]
+    return jnp.einsum("ml,mln->mn", vals, gathered)
+
+
+def spmm_coo_ref(row_idx, col_idx, vals, b, m):
+    """SpMM oracle over the flat COO view (padding rows land in bucket m)."""
+    prods = vals[:, None] * b[col_idx]  # [nnz_pad, n]
+    out = jax.ops.segment_sum(prods, row_idx, num_segments=m + 1)
+    return out[:m]
+
+
+def spmv_ell_ref(col_idx, vals, x):
+    """SpMV oracle over the ELL-padded view."""
+    return jnp.sum(vals * x[col_idx], axis=1)
+
+
+def spmv_coo_ref(row_idx, col_idx, vals, x, m):
+    """SpMV oracle over the flat COO view."""
+    prods = vals * x[col_idx]
+    out = jax.ops.segment_sum(prods, row_idx, num_segments=m + 1)
+    return out[:m]
+
+
+def gemm_ref(a, b):
+    """Dense GEMM oracle (Fig. 7 baseline)."""
+    return a @ b
+
+
+def gcn_fwd_ref(col_idx, vals, x, w1, w2):
+    """2-layer GCN-style propagation oracle: ReLU((Â·X)·W1)·W2.
+
+    Â is the ELL-padded sparse matrix; X the dense feature matrix.
+    """
+    h = spmm_ell_ref(col_idx, vals, x)
+    h = jax.nn.relu(h @ w1)
+    return h @ w2

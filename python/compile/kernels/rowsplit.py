@@ -1,0 +1,98 @@
+"""Algorithm I — row-split SpMM as a Pallas kernel (paper §4.1).
+
+GPU→TPU adaptation (DESIGN.md §Hardware-Adaptation)
+---------------------------------------------------
+The paper assigns one *warp of 32 threads* per CSR row; each thread owns one
+column of B, and the row's nonzero column indices are shuffle-broadcast so
+the whole warp loads each needed B row coalesced.  On TPU the warp becomes
+the VPU *lane* dimension: the B-column tile ``TN`` is the minor axis of the
+block, so one gathered row of B is a single vector op across all TN output
+columns — the broadcast the paper pays ``__shfl`` for is free across lanes.
+
+* The CTA row tile becomes ``BlockSpec((TM, L))`` over the ELL-padded
+  ``col_idx``/``vals`` operands.
+* The paper's "batches of 32" ILP structure (a warp processes a row's
+  nonzeros 32 at a time; a row of length 33 costs two batches — its Type-2
+  sensitivity) is kept as the ``W``-wide chunked ``fori_loop`` over the
+  padded row length ``L``: the kernel issues one gather + one FMA per chunk,
+  which is exactly the independent-instruction stream Table 1 counts.
+* B is tiled over columns only (``(k, TN)`` resident per step).  On a real
+  TPU this block must fit VMEM: ``k*TN*4`` bytes, e.g. k=4096, TN=128 → 2 MB
+  of the 16 MB budget, leaving room for the (TM, L) index/value tiles and
+  the (TM, TN) accumulator.  ``interpret=True`` does not enforce this; the
+  footprint accounting lives in DESIGN.md §Perf.
+
+Padding convention: entries beyond a row's true length have ``col_idx = 0``
+and ``vals = 0.0`` (the paper's "dummy column index").
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rowsplit_kernel(cols_ref, vals_ref, b_ref, c_ref, *, chunk: int):
+    """One grid step: a (TM, L) row tile × a (k, TN) B-column tile."""
+    cols = cols_ref[...]  # (TM, L) int32
+    vals = vals_ref[...]  # (TM, L) f32
+    b = b_ref[...]  # (k, TN) f32
+    tm, ell = cols.shape
+    tn = b.shape[1]
+
+    nchunks = ell // chunk
+
+    def body(t, acc):
+        # One "warp batch": chunk nonzeros per row, gathered and FMA'd
+        # across all TN lanes at once.
+        ck = jax.lax.dynamic_slice(cols, (0, t * chunk), (tm, chunk))
+        vk = jax.lax.dynamic_slice(vals, (0, t * chunk), (tm, chunk))
+        gathered = b[ck]  # (TM, chunk, TN) — the broadcast B-row loads
+        return acc + jnp.einsum(
+            "ml,mln->mn", vk, gathered, preferred_element_type=jnp.float32
+        )
+
+    acc = jnp.zeros((tm, tn), dtype=jnp.float32)
+    c_ref[...] = jax.lax.fori_loop(0, nchunks, body, acc)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "chunk"))
+def rowsplit_spmm(col_idx, vals, b, *, tm: int = 128, tn: int = 64, chunk: int = 32):
+    """Row-split SpMM: C = A·B with A in ELL-padded CSR view.
+
+    Args:
+      col_idx: ``[m, L]`` int32 — padded per-row column indices (pad = 0).
+      vals:    ``[m, L]`` f32   — padded per-row values (pad = 0.0).
+      b:       ``[k, n]`` f32   — dense row-major matrix.
+      tm, tn:  row / B-column tile sizes (must divide m / n).
+      chunk:   warp-batch width over the row length (L padded to multiple).
+
+    Returns:
+      ``[m, n]`` f32 dense C.
+    """
+    m, ell = col_idx.shape
+    k, n = b.shape
+    tm = min(tm, m)
+    tn = min(tn, n)
+    if m % tm or n % tn:
+        raise ValueError(f"tile ({tm},{tn}) must divide ({m},{n})")
+    if ell % chunk:
+        pad = chunk - ell % chunk
+        col_idx = jnp.pad(col_idx, ((0, 0), (0, pad)))
+        vals = jnp.pad(vals, ((0, 0), (0, pad)))
+        ell += pad
+
+    grid = (m // tm, n // tn)
+    return pl.pallas_call(
+        functools.partial(_rowsplit_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, ell), lambda i, j: (i, 0)),  # col_idx row tile
+            pl.BlockSpec((tm, ell), lambda i, j: (i, 0)),  # vals row tile
+            pl.BlockSpec((k, tn), lambda i, j: (0, j)),  # B column tile
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU path; real-TPU lowering emits Mosaic custom-calls
+    )(col_idx, vals, b)

@@ -1,0 +1,101 @@
+"""SpMV ancestors of the two SpMM algorithms (paper §4, Fig. 1/2 baselines).
+
+The paper derives its SpMM designs from three CSR SpMV parallelizations
+(row split, nonzero split, merge path).  These kernels implement the SpMV
+row-split and merge-based variants so the Fig. 1 synthetic benchmark (SpMV
+vs SpMM behaviour across aspect ratios) can be regenerated end-to-end, and
+so Table 1's SpMV column has a live counterpart.
+
+Same operand conventions as ``rowsplit.py`` / ``merge.py``; the dense
+vector x plays the role of the single B column (SpMV is the n=1 SpMM, the
+"left-most column of B" in the paper's Fig. 3 description).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmv_rowsplit_kernel(cols_ref, vals_ref, x_ref, y_ref, *, chunk: int):
+    cols = cols_ref[...]  # (TM, L)
+    vals = vals_ref[...]  # (TM, L)
+    x = x_ref[...]  # (k,)
+    tm, ell = cols.shape
+
+    def body(t, acc):
+        ck = jax.lax.dynamic_slice(cols, (0, t * chunk), (tm, chunk))
+        vk = jax.lax.dynamic_slice(vals, (0, t * chunk), (tm, chunk))
+        # SpMV has only T=1 independent loads per lane (Table 1): each
+        # gathered x element serves a single output, the uncoalesced
+        # random access the paper contrasts against SpMM.
+        return acc + jnp.sum(vk * x[ck], axis=1)
+
+    acc = jnp.zeros((tm,), dtype=jnp.float32)
+    y_ref[...] = jax.lax.fori_loop(0, ell // chunk, body, acc)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "chunk"))
+def spmv_rowsplit(col_idx, vals, x, *, tm: int = 128, chunk: int = 32):
+    """Row-split SpMV: y = A·x with A in ELL-padded CSR view."""
+    m, ell = col_idx.shape
+    (k,) = x.shape
+    tm = min(tm, m)
+    if m % tm:
+        raise ValueError(f"tile {tm} must divide {m}")
+    if ell % chunk:
+        pad = chunk - ell % chunk
+        col_idx = jnp.pad(col_idx, ((0, 0), (0, pad)))
+        vals = jnp.pad(vals, ((0, 0), (0, pad)))
+        ell += pad
+
+    return pl.pallas_call(
+        functools.partial(_spmv_rowsplit_kernel, chunk=chunk),
+        grid=(m // tm,),
+        in_specs=[
+            pl.BlockSpec((tm, ell), lambda i: (i, 0)),
+            pl.BlockSpec((tm, ell), lambda i: (i, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=True,
+    )(col_idx, vals, x)
+
+
+def _spmv_merge_kernel(rows_ref, cols_ref, vals_ref, x_ref, y_ref):
+    z = pl.program_id(0)
+
+    @pl.when(z == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    rows = rows_ref[...]  # (TZ,)
+    prods = vals_ref[...] * x_ref[...][cols_ref[...]]  # (TZ,)
+    y_ref[...] = y_ref[...].at[rows].add(prods)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "tz"))
+def spmv_merge(row_idx, col_idx, vals, x, *, m: int, tz: int = 1024):
+    """Merge-based SpMV: y = A·x with A as a flat COO nonzero stream."""
+    (nnz_pad,) = row_idx.shape
+    (k,) = x.shape
+    tz = min(tz, nnz_pad)
+    if nnz_pad % tz:
+        raise ValueError(f"tile {tz} must divide {nnz_pad}")
+
+    out = pl.pallas_call(
+        _spmv_merge_kernel,
+        grid=(nnz_pad // tz,),
+        in_specs=[
+            pl.BlockSpec((tz,), lambda z: (z,)),
+            pl.BlockSpec((tz,), lambda z: (z,)),
+            pl.BlockSpec((tz,), lambda z: (z,)),
+            pl.BlockSpec((k,), lambda z: (0,)),
+        ],
+        out_specs=pl.BlockSpec((m + 1,), lambda z: (0,)),
+        out_shape=jax.ShapeDtypeStruct((m + 1,), jnp.float32),
+        interpret=True,
+    )(row_idx, col_idx, vals, x)
+    return out[:m]

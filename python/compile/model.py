@@ -1,0 +1,70 @@
+"""L2 — JAX compute graphs built on the L1 Pallas kernels.
+
+Two kinds of entry points are lowered to HLO artifacts by ``aot.py``:
+
+1. **Standalone kernels** — ``spmm_rowsplit`` / ``spmm_merge`` / SpMV /
+   GEMM, one artifact per shape bucket.  These are what the Rust
+   coordinator's serve path executes: the engine buckets an incoming CSR
+   matrix, pads it into the bucket's static ELL/COO view, and runs the
+   artifact chosen by the paper's heuristic.
+2. **A motivating application graph** — a 2-layer GCN-style feature
+   propagation network ``Y = ReLU((Â·X)·W₁)·W₂`` (the paper's intro
+   workload class: graph centrality, pruned-network inference — SpMM
+   against a tall-skinny dense feature matrix).  The SpMM inside is the
+   row-split Pallas kernel, so the whole network lowers into a single fused
+   HLO module.
+
+Everything here is build-time Python: traced once, lowered to HLO text,
+never imported at runtime.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gemm, merge_spmm, rowsplit_spmm, spmv_merge, spmv_rowsplit
+
+# Default tile parameters used for AOT artifacts.  TN = 64 keeps the whole
+# tall-skinny B resident per step (the paper's "assign 32 columns per CTA"
+# choice, doubled for the TPU lane width); TM/TZ mirror the paper's CTA
+# sizing (B = 128 threads, T = 1 → 128-row / 1024-nnz work quanta).
+ROWSPLIT_TM = 128
+MERGE_TZ = 1024
+TILE_N = 64
+
+
+def spmm_rowsplit_entry(col_idx, vals, b):
+    """Algorithm I entry point: C = A·B (ELL view)."""
+    return (rowsplit_spmm(col_idx, vals, b, tm=ROWSPLIT_TM, tn=TILE_N),)
+
+
+def spmm_merge_entry(row_idx, col_idx, vals, b, *, m):
+    """Algorithm II entry point: C = A·B (flat COO view)."""
+    return (merge_spmm(row_idx, col_idx, vals, b, m=m, tz=MERGE_TZ, tn=TILE_N),)
+
+
+def spmv_rowsplit_entry(col_idx, vals, x):
+    """Row-split SpMV entry point: y = A·x."""
+    return (spmv_rowsplit(col_idx, vals, x, tm=ROWSPLIT_TM),)
+
+
+def spmv_merge_entry(row_idx, col_idx, vals, x, *, m):
+    """Merge-based SpMV entry point: y = A·x."""
+    return (spmv_merge(row_idx, col_idx, vals, x, m=m, tz=MERGE_TZ),)
+
+
+def gemm_entry(a, b):
+    """Dense GEMM entry point (Fig. 7 baseline): C = A·B."""
+    return (gemm(a, b, tm=128, tn=TILE_N, tk=128),)
+
+
+def gcn_fwd(col_idx, vals, x, w1, w2):
+    """2-layer GCN-style propagation: Y = ReLU((Â·X)·W₁)·W₂.
+
+    Â is square (m×m) in ELL view; X is [m, f] node features.  The sparse
+    propagation is the row-split Pallas kernel; the dense projections are
+    the MXU-tiled GEMM kernel, so every FLOP in the network goes through L1.
+    """
+    h = rowsplit_spmm(col_idx, vals, x, tm=ROWSPLIT_TM, tn=min(TILE_N, x.shape[1]))
+    h = jax.nn.relu(gemm(h, w1, tm=128, tn=min(TILE_N, w1.shape[1]), tk=min(128, h.shape[1])))
+    y = gemm(h, w2, tm=128, tn=min(TILE_N, w2.shape[1]), tk=min(128, h.shape[1]))
+    return (y,)

@@ -1,0 +1,89 @@
+"""Host-side format conversion tests: CSR → ELL / COO views.
+
+These conversions are mirrored in Rust (`rust/src/formats/`); the Rust test
+suite checks the same invariants so the two sides stay bit-identical.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import formats
+
+
+def test_ell_roundtrip_dense():
+    csr = formats.random_csr(32, 48, 6.0, seed=1)
+    cols, vals = formats.csr_to_ell(csr)
+    dense = np.zeros((csr.m, csr.k), dtype=np.float32)
+    for i in range(csr.m):
+        np.add.at(dense[i], cols[i], vals[i])
+    np.testing.assert_allclose(dense, csr.to_dense(), atol=1e-6)
+
+
+def test_coo_roundtrip_dense():
+    csr = formats.random_csr(32, 48, 6.0, seed=2)
+    ri, ci, vv = formats.csr_to_coo(csr)
+    dense = np.zeros((csr.m + 1, csr.k), dtype=np.float32)
+    np.add.at(dense, (ri, ci), vv)
+    np.testing.assert_allclose(dense[: csr.m], csr.to_dense(), atol=1e-6)
+
+
+def test_ell_width_rounding():
+    csr = formats.random_csr(16, 64, 10.0, seed=3)
+    cols, _ = formats.csr_to_ell(csr, pad_to=32)
+    assert cols.shape[1] % 32 == 0
+
+
+def test_ell_explicit_width_too_small_raises():
+    csr = formats.random_csr(16, 64, 20.0, seed=4)
+    max_len = int(np.diff(csr.row_ptr).max())
+    with pytest.raises(ValueError):
+        formats.csr_to_ell(csr, ell=max_len - 1)
+
+
+def test_coo_pad_too_small_raises():
+    csr = formats.random_csr(16, 64, 10.0, seed=5)
+    with pytest.raises(ValueError):
+        formats.csr_to_coo(csr, nnz_pad=csr.nnz - 1)
+
+
+def test_coo_padding_goes_to_dump_row():
+    csr = formats.random_csr(8, 16, 2.0, seed=6)
+    ri, _, vv = formats.csr_to_coo(csr, nnz_pad=csr.nnz + 13)
+    assert np.all(ri[csr.nnz :] == csr.m)
+    assert np.all(vv[csr.nnz :] == 0.0)
+
+
+def test_mean_row_length_is_heuristic_d():
+    csr = formats.random_csr(100, 200, 9.0, seed=7)
+    assert csr.mean_row_length == csr.nnz / 100
+
+
+def test_empty_matrix():
+    csr = formats.CsrHost(
+        0, 8, np.zeros(1, dtype=np.int64), np.zeros(0, np.int32), np.zeros(0, np.float32)
+    )
+    cols, vals = formats.csr_to_ell(csr, pad_to=4)
+    assert cols.shape == (0, 4)
+    ri, ci, vv = formats.csr_to_coo(csr, pad_to=4)
+    assert ri.shape == (4,)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.integers(1, 32),
+    k=st.integers(1, 32),
+    avg=st.floats(0.1, 10.0),
+    seed=st.integers(0, 1000),
+)
+def test_views_describe_same_matrix(m, k, avg, seed):
+    """ELL and COO views of the same CSR must reconstruct the same dense A."""
+    csr = formats.random_csr(m, k, avg, seed=seed)
+    cols, vals = formats.csr_to_ell(csr, pad_to=8)
+    ri, ci, vv = formats.csr_to_coo(csr, pad_to=8)
+    d_ell = np.zeros((m, k), dtype=np.float32)
+    for i in range(m):
+        np.add.at(d_ell[i], cols[i], vals[i])
+    d_coo = np.zeros((m + 1, k), dtype=np.float32)
+    np.add.at(d_coo, (ri, ci), vv)
+    np.testing.assert_allclose(d_ell, d_coo[:m], atol=1e-6)

@@ -1,0 +1,257 @@
+"""Core correctness signal: every Pallas kernel vs the pure-jnp oracle and
+vs a dense numpy ground truth, over fixed cases + hypothesis sweeps.
+
+The fixed cases target the paper's own edge regimes:
+  * row length 33 — the §4.1 Type-2 sensitivity case (L mod 32 = 1),
+  * empty rows — the pathological case merge-based exists to handle,
+  * one giant row — extreme Type-1 imbalance,
+  * short uniform rows (d < 9.35) and long rows (d ≈ 62.5) — the two
+    heuristic regimes of §5.2/§5.3.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    formats,
+    gemm,
+    merge_spmm,
+    rowsplit_spmm,
+    spmv_merge,
+    spmv_rowsplit,
+)
+from compile.kernels import ref
+
+ATOL = 2e-3
+RTOL = 1e-4
+
+
+def make_csr_from_lens(lens, k, seed=0):
+    """Build a CSR matrix with exact per-row lengths."""
+    rng = np.random.default_rng(seed)
+    m = len(lens)
+    row_ptr = np.zeros(m + 1, dtype=np.int64)
+    np.cumsum(np.asarray(lens).clip(0, k), out=row_ptr[1:])
+    nnz = int(row_ptr[-1])
+    col_idx = np.empty(nnz, dtype=np.int32)
+    for i in range(m):
+        s, e = row_ptr[i], row_ptr[i + 1]
+        col_idx[s:e] = np.sort(rng.choice(k, size=e - s, replace=False))
+    vals = rng.standard_normal(nnz).astype(np.float32)
+    return formats.CsrHost(m, k, row_ptr, col_idx, vals)
+
+
+def dense_b(k, n, seed=1):
+    return np.random.default_rng(seed).standard_normal((k, n)).astype(np.float32)
+
+
+def run_both_spmm(csr, b, tm=32, tn=None, tz=None):
+    """Run both algorithms on the same matrix, return (rowsplit, merge, truth)."""
+    n = b.shape[1]
+    tn = tn or min(32, n)
+    cols, vals = formats.csr_to_ell(csr, pad_to=32)
+    ri, ci, vv = formats.csr_to_coo(csr, pad_to=tz or 256)
+    rs = rowsplit_spmm(
+        jnp.asarray(cols), jnp.asarray(vals), jnp.asarray(b), tm=tm, tn=tn
+    )
+    mg = merge_spmm(
+        jnp.asarray(ri),
+        jnp.asarray(ci),
+        jnp.asarray(vv),
+        jnp.asarray(b),
+        m=csr.m,
+        tz=tz or 256,
+        tn=tn,
+    )
+    truth = csr.to_dense() @ b
+    return np.asarray(rs), np.asarray(mg), truth
+
+
+class TestSpmmFixedCases:
+    def test_row_length_33(self):
+        """Paper §4.1: L mod 32 = 1 costs a second warp batch; must stay exact."""
+        csr = make_csr_from_lens([33] * 64, 128, seed=3)
+        rs, mg, truth = run_both_spmm(csr, dense_b(128, 32))
+        np.testing.assert_allclose(rs, truth, atol=ATOL, rtol=RTOL)
+        np.testing.assert_allclose(mg, truth, atol=ATOL, rtol=RTOL)
+
+    def test_empty_rows(self):
+        """Merge-based exists to handle (infinitely) many empty rows."""
+        lens = [0] * 60 + [5, 0, 7, 0]
+        csr = make_csr_from_lens(lens, 64, seed=4)
+        rs, mg, truth = run_both_spmm(csr, dense_b(64, 32))
+        np.testing.assert_allclose(rs, truth, atol=ATOL, rtol=RTOL)
+        np.testing.assert_allclose(mg, truth, atol=ATOL, rtol=RTOL)
+
+    def test_one_giant_row(self):
+        """Extreme Type-1 imbalance: one row holds almost all nonzeros."""
+        lens = [120] + [1] * 63
+        csr = make_csr_from_lens(lens, 128, seed=5)
+        rs, mg, truth = run_both_spmm(csr, dense_b(128, 32))
+        np.testing.assert_allclose(rs, truth, atol=ATOL, rtol=RTOL)
+        np.testing.assert_allclose(mg, truth, atol=ATOL, rtol=RTOL)
+
+    def test_short_row_regime(self):
+        """d ≈ 8 < 9.35 — the regime where the heuristic picks merge-based."""
+        csr = formats.random_csr(128, 128, 8.0, seed=6)
+        rs, mg, truth = run_both_spmm(csr, dense_b(128, 32))
+        np.testing.assert_allclose(rs, truth, atol=ATOL, rtol=RTOL)
+        np.testing.assert_allclose(mg, truth, atol=ATOL, rtol=RTOL)
+
+    def test_long_row_regime(self):
+        """d ≈ 62.5 — the Fig. 5(a) long-row regime (row split's home turf)."""
+        csr = formats.random_csr(64, 256, 62.5, seed=7)
+        rs, mg, truth = run_both_spmm(csr, dense_b(256, 32), tz=8192)
+        np.testing.assert_allclose(rs, truth, atol=ATOL, rtol=RTOL)
+        np.testing.assert_allclose(mg, truth, atol=ATOL, rtol=RTOL)
+
+    def test_all_zero_matrix(self):
+        csr = make_csr_from_lens([0] * 32, 64)
+        rs, mg, truth = run_both_spmm(csr, dense_b(64, 32))
+        assert np.all(rs == 0) and np.all(mg == 0)
+
+    def test_algorithms_agree(self):
+        """Row-split and merge-based must agree on the same A."""
+        csr = formats.random_csr(96, 96, 12.0, seed=8)
+        rs, mg, _ = run_both_spmm(csr, dense_b(96, 32), tm=32)
+        np.testing.assert_allclose(rs, mg, atol=ATOL, rtol=RTOL)
+
+    def test_duplicate_columns_accumulate(self):
+        """CSR with repeated column indices in a row must sum, not overwrite."""
+        row_ptr = np.array([0, 3], dtype=np.int64)
+        col_idx = np.array([2, 2, 2], dtype=np.int32)
+        vals = np.array([1.0, 2.0, 3.0], dtype=np.float32)
+        csr = formats.CsrHost(1, 8, row_ptr, col_idx, vals)
+        b = dense_b(8, 32)
+        rs, mg, truth = run_both_spmm(csr, b, tm=1)
+        np.testing.assert_allclose(rs, truth, atol=ATOL, rtol=RTOL)
+        np.testing.assert_allclose(mg, truth, atol=ATOL, rtol=RTOL)
+
+
+class TestSpmmVsRef:
+    """Pallas kernel vs pure-jnp oracle (independent of to_dense)."""
+
+    @pytest.mark.parametrize("avg_row", [2.0, 9.35, 30.0])
+    @pytest.mark.parametrize("n", [8, 32, 64])
+    def test_rowsplit_vs_ref(self, avg_row, n):
+        csr = formats.random_csr(64, 96, avg_row, seed=11)
+        cols, vals = formats.csr_to_ell(csr, pad_to=32)
+        b = dense_b(96, n)
+        got = rowsplit_spmm(
+            jnp.asarray(cols), jnp.asarray(vals), jnp.asarray(b), tm=32, tn=min(8, n)
+        )
+        want = ref.spmm_ell_ref(jnp.asarray(cols), jnp.asarray(vals), jnp.asarray(b))
+        np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+    @pytest.mark.parametrize("avg_row", [2.0, 9.35, 30.0])
+    @pytest.mark.parametrize("n", [8, 32, 64])
+    def test_merge_vs_ref(self, avg_row, n):
+        csr = formats.random_csr(64, 96, avg_row, seed=12)
+        ri, ci, vv = formats.csr_to_coo(csr, pad_to=512)
+        b = dense_b(96, n)
+        got = merge_spmm(
+            jnp.asarray(ri),
+            jnp.asarray(ci),
+            jnp.asarray(vv),
+            jnp.asarray(b),
+            m=64,
+            tz=512,
+            tn=min(8, n),
+        )
+        want = ref.spmm_coo_ref(
+            jnp.asarray(ri), jnp.asarray(ci), jnp.asarray(vv), jnp.asarray(b), 64
+        )
+        np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+
+class TestSpmv:
+    @pytest.mark.parametrize("avg_row", [3.0, 20.0])
+    def test_spmv_rowsplit(self, avg_row):
+        csr = formats.random_csr(64, 96, avg_row, seed=13)
+        cols, vals = formats.csr_to_ell(csr, pad_to=32)
+        x = dense_b(96, 1)[:, 0]
+        got = spmv_rowsplit(jnp.asarray(cols), jnp.asarray(vals), jnp.asarray(x), tm=32)
+        np.testing.assert_allclose(got, csr.to_dense() @ x, atol=ATOL, rtol=RTOL)
+
+    @pytest.mark.parametrize("avg_row", [3.0, 20.0])
+    def test_spmv_merge(self, avg_row):
+        csr = formats.random_csr(64, 96, avg_row, seed=14)
+        ri, ci, vv = formats.csr_to_coo(csr, pad_to=512)
+        x = dense_b(96, 1)[:, 0]
+        got = spmv_merge(
+            jnp.asarray(ri), jnp.asarray(ci), jnp.asarray(vv), jnp.asarray(x),
+            m=64, tz=512,
+        )
+        np.testing.assert_allclose(got, csr.to_dense() @ x, atol=ATOL, rtol=RTOL)
+
+    def test_spmv_equals_spmm_column(self):
+        """SpMV is the n=1 SpMM (the paper's Fig. 3 framing)."""
+        csr = formats.random_csr(64, 64, 6.0, seed=15)
+        cols, vals = formats.csr_to_ell(csr, pad_to=32)
+        b = dense_b(64, 8)
+        y = spmv_rowsplit(jnp.asarray(cols), jnp.asarray(vals), jnp.asarray(b[:, 0]), tm=32)
+        c = rowsplit_spmm(jnp.asarray(cols), jnp.asarray(vals), jnp.asarray(b), tm=32, tn=8)
+        np.testing.assert_allclose(y, np.asarray(c)[:, 0], atol=ATOL, rtol=RTOL)
+
+
+class TestGemm:
+    @pytest.mark.parametrize("shape", [(64, 64, 32), (128, 96, 64), (32, 256, 8)])
+    def test_gemm_matches_numpy(self, shape):
+        m, k, n = shape
+        rng = np.random.default_rng(16)
+        a = rng.standard_normal((m, k)).astype(np.float32)
+        b = rng.standard_normal((k, n)).astype(np.float32)
+        got = gemm(jnp.asarray(a), jnp.asarray(b), tm=32, tn=min(8, n), tk=32)
+        np.testing.assert_allclose(got, a @ b, atol=5e-3, rtol=1e-4)
+
+
+@st.composite
+def csr_strategy(draw):
+    m = draw(st.integers(min_value=1, max_value=48))
+    k = draw(st.integers(min_value=1, max_value=48))
+    lens = draw(
+        st.lists(st.integers(min_value=0, max_value=min(k, 40)), min_size=m, max_size=m)
+    )
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    return make_csr_from_lens(lens, k, seed=seed)
+
+
+class TestHypothesis:
+    @settings(max_examples=25, deadline=None)
+    @given(csr=csr_strategy(), n=st.sampled_from([1, 4, 8, 16]))
+    def test_rowsplit_any_shape(self, csr, n):
+        cols, vals = formats.csr_to_ell(csr, pad_to=32)
+        b = dense_b(csr.k, n, seed=csr.m)
+        got = rowsplit_spmm(
+            jnp.asarray(cols), jnp.asarray(vals), jnp.asarray(b),
+            tm=csr.m, tn=n, chunk=32,
+        )
+        np.testing.assert_allclose(got, csr.to_dense() @ b, atol=ATOL, rtol=1e-3)
+
+    @settings(max_examples=25, deadline=None)
+    @given(csr=csr_strategy(), n=st.sampled_from([1, 4, 8, 16]))
+    def test_merge_any_shape(self, csr, n):
+        ri, ci, vv = formats.csr_to_coo(csr, pad_to=64)
+        b = dense_b(csr.k, n, seed=csr.k)
+        got = merge_spmm(
+            jnp.asarray(ri), jnp.asarray(ci), jnp.asarray(vv), jnp.asarray(b),
+            m=csr.m, tz=64, tn=n,
+        )
+        np.testing.assert_allclose(got, csr.to_dense() @ b, atol=ATOL, rtol=1e-3)
+
+    @settings(max_examples=15, deadline=None)
+    @given(csr=csr_strategy())
+    def test_algorithms_agree_any_shape(self, csr):
+        b = dense_b(csr.k, 8, seed=7)
+        cols, vals = formats.csr_to_ell(csr, pad_to=32)
+        ri, ci, vv = formats.csr_to_coo(csr, pad_to=64)
+        rs = rowsplit_spmm(
+            jnp.asarray(cols), jnp.asarray(vals), jnp.asarray(b), tm=csr.m, tn=8
+        )
+        mg = merge_spmm(
+            jnp.asarray(ri), jnp.asarray(ci), jnp.asarray(vv), jnp.asarray(b),
+            m=csr.m, tz=64, tn=8,
+        )
+        np.testing.assert_allclose(rs, mg, atol=ATOL, rtol=1e-3)

@@ -1,0 +1,63 @@
+//! Serving-engine benchmark: request throughput across batching policies
+//! and worker counts (the coordinator's §Perf target), CPU-only so it runs
+//! without artifacts and measures the coordination overhead itself.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use merge_spmm::bench::Bencher;
+use merge_spmm::coordinator::{EngineConfig, Server, ServerConfig};
+use merge_spmm::formats::Csr;
+use merge_spmm::gen;
+
+fn run_server(workers: usize, max_batch: usize, requests: usize) {
+    let server = Server::start(
+        EngineConfig {
+            artifacts_dir: None,
+            threshold: 9.35,
+            cpu_workers: 1,
+        },
+        ServerConfig {
+            workers,
+            max_batch,
+            max_wait: Duration::from_micros(500),
+            queue_capacity: 512,
+        },
+    )
+    .unwrap();
+    let a = Arc::new(Csr::random(2000, 2000, 6.0, 21));
+    let long = Arc::new(gen::uniform_rows(2000, 24, Some(2000), 22));
+    let b = Arc::new(gen::dense_matrix(2000, 32, 23));
+    let handles: Vec<_> = (0..requests)
+        .map(|i| {
+            let m = if i % 2 == 0 { &a } else { &long };
+            server.submit(Arc::clone(m), Arc::clone(&b), 32)
+        })
+        .collect();
+    for h in handles {
+        let _ = h.recv().unwrap();
+    }
+    server.shutdown();
+}
+
+fn main() {
+    let requests = if std::env::var("BENCH_QUICK").is_ok() { 40 } else { 160 };
+    let mut bench = Bencher::new("engine").with_reps(1, 5);
+    for workers in [1usize, 2, 4] {
+        for max_batch in [1usize, 8, 32] {
+            bench.bench(
+                &format!("w{workers}_b{max_batch}"),
+                Some(requests as f64),
+                || run_server(workers, max_batch, requests),
+            );
+        }
+    }
+    println!("\n(throughput column = requests/s)");
+    // direct engine call (no router) as the coordination-overhead baseline
+    let engine = merge_spmm::coordinator::SpmmEngine::cpu_only(9.35, 1);
+    let a = Csr::random(2000, 2000, 6.0, 21);
+    let b = gen::dense_matrix(2000, 32, 23);
+    bench.bench("direct_engine_call", Some(1.0), || {
+        std::hint::black_box(engine.spmm(&a, &b, 32).unwrap());
+    });
+}

@@ -1,0 +1,31 @@
+//! `cargo bench --bench figures` — regenerate every paper table/figure
+//! (simulated K40c; see DESIGN.md §Substitutions) and write results/*.csv.
+//! This is the canonical "one bench per paper table AND figure" target.
+
+use merge_spmm::bench;
+
+fn main() {
+    let seed = 42;
+    let out = std::path::Path::new("results");
+    let t0 = std::time::Instant::now();
+    let reports = vec![
+        bench::fig1(seed),
+        bench::table1(),
+        bench::fig4(seed, std::env::var("BENCH_QUICK").is_err()),
+        bench::fig5a(seed),
+        bench::fig5b(seed),
+        bench::fig6(seed),
+        bench::fig7(seed),
+        bench::heuristic_eval(seed),
+        bench::threshold_sweep(seed),
+        bench::conversion_cost(seed),
+    ];
+    for r in &reports {
+        println!("{r}");
+        match r.write_csv(out) {
+            Ok(p) => println!("-> {}\n", p.display()),
+            Err(e) => eprintln!("(csv write failed: {e})"),
+        }
+    }
+    println!("regenerated {} paper artifacts in {:.1}s", reports.len(), t0.elapsed().as_secs_f64());
+}

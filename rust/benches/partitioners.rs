@@ -1,0 +1,47 @@
+//! Phase-1 decomposition cost (the paper's §4.2 "additional kernel"
+//! overhead): how much does each partitioner cost, and how does it scale
+//! with processor count?  Also benches the merge-coordinate binary search
+//! itself (O(P log m) total).
+
+use merge_spmm::bench::Bencher;
+use merge_spmm::formats::Csr;
+use merge_spmm::gen;
+use merge_spmm::loadbalance::{mergepath::merge_coord, MergePath, NonzeroSplit, Partitioner, RowSplit};
+
+fn main() {
+    let a = Csr::random(1_000_000, 1_000_000, 8.0, 11);
+    println!("matrix: {}x{} nnz {}", a.m, a.k, a.nnz());
+
+    let mut bench = Bencher::new("partition");
+    for p in [16usize, 256, 4096] {
+        bench.bench(&format!("rowsplit/p{p}"), None, || {
+            std::hint::black_box(RowSplit::default().partition(&a, p));
+        });
+        bench.bench(&format!("nzsplit/p{p}"), None, || {
+            std::hint::black_box(NonzeroSplit.partition(&a, p));
+        });
+        bench.bench(&format!("mergepath/p{p}"), None, || {
+            std::hint::black_box(MergePath.partition(&a, p));
+        });
+    }
+
+    // the 2-D diagonal search in isolation (per-CTA cost on the GPU)
+    let total = a.m + a.nnz();
+    bench.bench("merge_coord/single", None, || {
+        for d in (0..total).step_by(total / 1024) {
+            std::hint::black_box(merge_coord(&a, d));
+        }
+    });
+
+    // partition cost relative to the SpMM it load-balances (must be ≪)
+    let b = gen::dense_matrix(a.k.min(4096), 8, 12);
+    let small = Csr::random(100_000, 4096, 8.0, 13);
+    bench.bench("spmm_for_scale/100k_x8", None, || {
+        std::hint::black_box(merge_spmm::spmm::merge_spmm(&small, &b, 8, 0));
+    });
+    if let Some(ratio) = bench.speedup("spmm_for_scale/100k_x8", "mergepath/p4096") {
+        println!("\nmerge-path partition is {ratio:.0}x cheaper than the SpMM it balances");
+    }
+}
+
+use merge_spmm as _;

@@ -1,0 +1,63 @@
+//! Measured CPU-executor benchmark — the wallclock companion to the
+//! simulated Fig. 5 (one case per paper-table regime).
+//!
+//! `cargo bench --bench spmm_executors` (set BENCH_QUICK=1 for a fast run).
+
+use merge_spmm::bench::Bencher;
+use merge_spmm::formats::SellP;
+use merge_spmm::gen;
+use merge_spmm::spmm::{baselines, merge_spmm, rowsplit_spmm, spmm_reference};
+
+fn main() {
+    let n = 64;
+
+    // Fig. 5(a) regime: long regular rows (d ≈ 62.5)
+    let long = gen::uniform_rows(16_384, 62, Some(4096), 1);
+    // Fig. 5(b) regime: short irregular rows (d ≈ 8)
+    let short = gen::power_law(65_536, 1.3, 512, 2);
+    println!(
+        "long: {}x{} nnz {}  |  short: {}x{} nnz {} (d {:.1})",
+        long.m,
+        long.k,
+        long.nnz(),
+        short.m,
+        short.k,
+        short.nnz(),
+        short.mean_row_length()
+    );
+
+    for (regime, a) in [("long", &long), ("short", &short)] {
+        let b = gen::dense_matrix(a.k, n, 3);
+        let b_cm = baselines::to_col_major(&b, a.k, n);
+        let sellp = SellP::from_csr(a, 8, 4);
+        let flops = 2.0 * a.nnz() as f64 * n as f64;
+        let mut bench = Bencher::new(&format!("spmm/{regime}"));
+        bench.bench("reference_serial", Some(flops), || {
+            std::hint::black_box(spmm_reference(a, &b, n));
+        });
+        bench.bench("rowsplit", Some(flops), || {
+            std::hint::black_box(rowsplit_spmm(a, &b, n, 0));
+        });
+        bench.bench("merge", Some(flops), || {
+            std::hint::black_box(merge_spmm(a, &b, n, 0));
+        });
+        bench.bench("csrmm_colmajor", Some(flops), || {
+            std::hint::black_box(baselines::csrmm(a, &b_cm, n, 0));
+        });
+        bench.bench("csrmm2", Some(flops), || {
+            std::hint::black_box(baselines::csrmm2(a, &b, n, 0));
+        });
+        bench.bench("sellp", Some(flops), || {
+            std::hint::black_box(baselines::sellp_spmm(&sellp, &b, n, 0));
+        });
+        // The paper's headline: our kernels vs the best vendor-like baseline.
+        for ours in ["rowsplit", "merge"] {
+            for base in ["csrmm_colmajor", "csrmm2"] {
+                if let Some(s) = bench.speedup(base, ours) {
+                    println!("  {ours} vs {base}: {s:.2}x");
+                }
+            }
+        }
+        println!();
+    }
+}

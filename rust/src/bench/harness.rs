@@ -1,0 +1,135 @@
+//! Micro-bench framework for `cargo bench` targets.
+//!
+//! criterion is not in the offline vendor set, so this provides the part
+//! we need: warmup, repeated timed runs, min/median/mean statistics, and
+//! throughput reporting, with a stable one-line-per-benchmark output.
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub reps: usize,
+    pub min_s: f64,
+    pub median_s: f64,
+    pub mean_s: f64,
+    /// optional work units per iteration for throughput (e.g. flops)
+    pub work_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    /// Work units per second based on median time.
+    pub fn throughput(&self) -> Option<f64> {
+        self.work_per_iter.map(|w| w / self.median_s.max(1e-12))
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} min {:>10.3?}  median {:>10.3?}  mean {:>10.3?}",
+            self.name,
+            std::time::Duration::from_secs_f64(self.min_s),
+            std::time::Duration::from_secs_f64(self.median_s),
+            std::time::Duration::from_secs_f64(self.mean_s),
+        )?;
+        if let Some(tp) = self.throughput() {
+            write!(f, "  {:>8.2} GFlop/s", tp / 1e9)?;
+        }
+        Ok(())
+    }
+}
+
+/// The bench runner: `Bencher::new("suite").bench("case", work, || ...)`.
+pub struct Bencher {
+    suite: String,
+    warmup: usize,
+    reps: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Bencher {
+    pub fn new(suite: &str) -> Self {
+        // Honor the same quick-mode env var the Makefile uses.
+        let quick = std::env::var("BENCH_QUICK").is_ok();
+        Self {
+            suite: suite.to_string(),
+            warmup: if quick { 1 } else { 2 },
+            reps: if quick { 3 } else { 10 },
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_reps(mut self, warmup: usize, reps: usize) -> Self {
+        self.warmup = warmup;
+        self.reps = reps.max(1);
+        self
+    }
+
+    /// Run one case. `work_per_iter` feeds throughput reporting (flops).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, work_per_iter: Option<f64>, mut f: F) {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times = Vec::with_capacity(self.reps);
+        for _ in 0..self.reps {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let r = BenchResult {
+            name: format!("{}/{}", self.suite, name),
+            reps: self.reps,
+            min_s: times[0],
+            median_s: times[times.len() / 2],
+            mean_s: times.iter().sum::<f64>() / times.len() as f64,
+            work_per_iter,
+        };
+        println!("{r}");
+        self.results.push(r);
+    }
+
+    /// Ratio of two cases' median times (for speedup assertions in benches).
+    pub fn speedup(&self, baseline: &str, contender: &str) -> Option<f64> {
+        let find = |n: &str| {
+            self.results
+                .iter()
+                .find(|r| r.name.ends_with(n))
+                .map(|r| r.median_s)
+        };
+        Some(find(baseline)? / find(contender)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_stats() {
+        let mut b = Bencher::new("t").with_reps(0, 5);
+        let mut acc = 0u64;
+        b.bench("spin", Some(1000.0), || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i);
+            }
+        });
+        assert_eq!(b.results.len(), 1);
+        let r = &b.results[0];
+        assert!(r.min_s <= r.median_s && r.median_s <= r.mean_s * 2.0);
+        assert!(r.throughput().unwrap() > 0.0);
+        assert!(format!("{r}").contains("t/spin"));
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let mut b = Bencher::new("t").with_reps(0, 3);
+        b.bench("slow", None, || std::thread::sleep(std::time::Duration::from_millis(4)));
+        b.bench("fast", None, || std::thread::sleep(std::time::Duration::from_millis(1)));
+        let s = b.speedup("slow", "fast").unwrap();
+        assert!(s > 1.5, "speedup = {s}");
+    }
+}

@@ -1,0 +1,17 @@
+//! Benchmark harnesses that regenerate every table and figure of the
+//! paper's evaluation (§5), plus the in-crate micro-bench framework used
+//! by `rust/benches/` (the offline vendor set has no criterion).
+//!
+//! Each `fig*` function returns printable rows *and* writes a CSV under
+//! `results/` so EXPERIMENTS.md can reference exact numbers.  Simulated
+//! K40c numbers are the primary signal (DESIGN.md §Substitutions);
+//! `Measured` variants additionally time the real CPU executors.
+
+pub mod figures;
+pub mod harness;
+
+pub use figures::{
+    conversion_cost, fig1, fig4, fig5a, fig5b, fig6, fig7, heuristic_eval, table1,
+    threshold_sweep, FigureReport,
+};
+pub use harness::{BenchResult, Bencher};

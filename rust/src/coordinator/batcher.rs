@@ -1,0 +1,190 @@
+//! Bucket batcher: groups same-bucket requests so a worker executes them
+//! back-to-back against one compiled executable.
+//!
+//! Batching policy: flush a bucket's queue when it reaches `max_batch`
+//! requests or when its oldest request has waited `max_wait`.  Same
+//! trade-off as any dynamic batcher (throughput vs latency); the engine
+//! bench sweeps both knobs.
+
+use std::collections::{HashMap, VecDeque};
+use std::time::{Duration, Instant};
+
+/// A batch of request ids that share a bucket key.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Batch {
+    pub bucket: String,
+    pub requests: Vec<u64>,
+}
+
+/// Accumulates request ids per bucket and emits flush-ready batches.
+#[derive(Debug)]
+pub struct BatchQueue {
+    max_batch: usize,
+    max_wait: Duration,
+    queues: HashMap<String, VecDeque<(u64, Instant)>>,
+}
+
+impl BatchQueue {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        Self {
+            max_batch: max_batch.max(1),
+            max_wait,
+            queues: HashMap::new(),
+        }
+    }
+
+    /// Enqueue a request; returns a batch if the bucket just became full.
+    pub fn push(&mut self, bucket: &str, request: u64) -> Option<Batch> {
+        let q = self.queues.entry(bucket.to_string()).or_default();
+        q.push_back((request, Instant::now()));
+        if q.len() >= self.max_batch {
+            return self.flush(bucket);
+        }
+        None
+    }
+
+    /// Flush one bucket unconditionally.
+    pub fn flush(&mut self, bucket: &str) -> Option<Batch> {
+        let q = self.queues.get_mut(bucket)?;
+        if q.is_empty() {
+            return None;
+        }
+        let requests = q.drain(..).map(|(r, _)| r).collect();
+        Some(Batch {
+            bucket: bucket.to_string(),
+            requests,
+        })
+    }
+
+    /// Flush every bucket whose oldest request exceeded `max_wait`.
+    pub fn flush_expired(&mut self) -> Vec<Batch> {
+        let now = Instant::now();
+        let expired: Vec<String> = self
+            .queues
+            .iter()
+            .filter(|(_, q)| {
+                q.front()
+                    .is_some_and(|(_, t)| now.duration_since(*t) >= self.max_wait)
+            })
+            .map(|(k, _)| k.clone())
+            .collect();
+        expired
+            .iter()
+            .filter_map(|k| self.flush(k))
+            .collect()
+    }
+
+    /// Flush everything (shutdown).
+    pub fn flush_all(&mut self) -> Vec<Batch> {
+        let keys: Vec<String> = self.queues.keys().cloned().collect();
+        keys.iter().filter_map(|k| self.flush(k)).collect()
+    }
+
+    /// Total queued requests.
+    pub fn pending(&self) -> usize {
+        self.queues.values().map(|q| q.len()).sum()
+    }
+
+    /// Time until the next deadline flush (None if empty).
+    pub fn next_deadline(&self) -> Option<Duration> {
+        let now = Instant::now();
+        self.queues
+            .values()
+            .filter_map(|q| q.front())
+            .map(|(_, t)| {
+                self.max_wait
+                    .saturating_sub(now.duration_since(*t))
+            })
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fills_to_max_batch() {
+        let mut bq = BatchQueue::new(3, Duration::from_secs(10));
+        assert!(bq.push("a", 1).is_none());
+        assert!(bq.push("a", 2).is_none());
+        let batch = bq.push("a", 3).unwrap();
+        assert_eq!(batch.requests, vec![1, 2, 3]);
+        assert_eq!(bq.pending(), 0);
+    }
+
+    #[test]
+    fn buckets_are_independent() {
+        let mut bq = BatchQueue::new(2, Duration::from_secs(10));
+        assert!(bq.push("a", 1).is_none());
+        assert!(bq.push("b", 2).is_none());
+        let batch = bq.push("a", 3).unwrap();
+        assert_eq!(batch.bucket, "a");
+        assert_eq!(bq.pending(), 1); // b still queued
+    }
+
+    #[test]
+    fn deadline_flush() {
+        let mut bq = BatchQueue::new(100, Duration::from_millis(1));
+        bq.push("a", 1);
+        std::thread::sleep(Duration::from_millis(5));
+        let batches = bq.flush_expired();
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].requests, vec![1]);
+    }
+
+    #[test]
+    fn no_premature_deadline_flush() {
+        let mut bq = BatchQueue::new(100, Duration::from_secs(60));
+        bq.push("a", 1);
+        assert!(bq.flush_expired().is_empty());
+        assert_eq!(bq.pending(), 1);
+    }
+
+    #[test]
+    fn flush_all_drains_everything() {
+        let mut bq = BatchQueue::new(100, Duration::from_secs(60));
+        for i in 0..10 {
+            bq.push(if i % 2 == 0 { "a" } else { "b" }, i);
+        }
+        let batches = bq.flush_all();
+        let total: usize = batches.iter().map(|b| b.requests.len()).sum();
+        assert_eq!(total, 10);
+        assert_eq!(bq.pending(), 0);
+    }
+
+    #[test]
+    fn never_drops_or_duplicates() {
+        // property-style: random pushes/flushes preserve the multiset
+        let mut rng = crate::util::XorShift::new(77);
+        let mut bq = BatchQueue::new(4, Duration::from_secs(60));
+        let mut seen = Vec::new();
+        let mut sent = Vec::new();
+        for i in 0..1000u64 {
+            let bucket = ["a", "b", "c"][rng.below(3)];
+            sent.push(i);
+            if let Some(b) = bq.push(bucket, i) {
+                seen.extend(b.requests);
+            }
+            if rng.below(10) == 0 {
+                for b in bq.flush_all() {
+                    seen.extend(b.requests);
+                }
+            }
+        }
+        for b in bq.flush_all() {
+            seen.extend(b.requests);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, sent);
+    }
+
+    #[test]
+    fn next_deadline_ordering() {
+        let mut bq = BatchQueue::new(100, Duration::from_millis(50));
+        assert!(bq.next_deadline().is_none());
+        bq.push("a", 1);
+        let d = bq.next_deadline().unwrap();
+        assert!(d <= Duration::from_millis(50));
+    }
+}

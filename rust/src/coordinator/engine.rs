@@ -1,0 +1,302 @@
+//! The synchronous engine core: heuristic → bucket → execute.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::formats::Csr;
+use crate::runtime::{pad, Runtime};
+use crate::spmm::{self, Algorithm, Heuristic};
+
+use super::metrics::Metrics;
+
+/// How a request was executed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecutionPath {
+    /// AOT artifact via PJRT, with the bucket name implied by the report
+    Pjrt,
+    /// in-process CPU executor (no bucket fit, or runtime disabled)
+    CpuFallback,
+}
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// artifacts directory; `None` disables PJRT (CPU executors only)
+    pub artifacts_dir: Option<std::path::PathBuf>,
+    /// heuristic threshold (paper: 9.35)
+    pub threshold: f64,
+    /// CPU executor worker threads (0 = auto)
+    pub cpu_workers: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: Some(std::path::PathBuf::from("artifacts")),
+            threshold: spmm::DEFAULT_THRESHOLD,
+            cpu_workers: 0,
+        }
+    }
+}
+
+/// Result of one SpMM execution.
+#[derive(Debug)]
+pub struct SpmmResult {
+    /// `m×n` row-major
+    pub c: Vec<f32>,
+    pub algorithm: Algorithm,
+    pub path: ExecutionPath,
+    /// artifact used, when `path == Pjrt`
+    pub bucket: Option<String>,
+    pub latency_s: f64,
+}
+
+/// The SpMM serving engine (paper's full pipeline: heuristic + both
+/// algorithms + CSR-native input).
+pub struct SpmmEngine {
+    runtime: Option<Runtime>,
+    heuristic: Heuristic,
+    cpu_workers: usize,
+    pub metrics: Arc<Metrics>,
+}
+
+impl SpmmEngine {
+    /// Build an engine; loads + compiles artifacts if configured.
+    pub fn new(cfg: EngineConfig) -> Result<Self> {
+        let runtime = match &cfg.artifacts_dir {
+            Some(dir) if dir.join("manifest.json").exists() => Some(Runtime::load(dir)?),
+            Some(dir) => {
+                return Err(anyhow!(
+                    "artifacts dir {} has no manifest.json (run `make artifacts`)",
+                    dir.display()
+                ))
+            }
+            None => None,
+        };
+        Ok(Self {
+            runtime,
+            heuristic: Heuristic::new(cfg.threshold),
+            cpu_workers: cfg.cpu_workers,
+            metrics: Arc::new(Metrics::new()),
+        })
+    }
+
+    /// CPU-only engine (no artifacts needed) — used by tests and benches.
+    pub fn cpu_only(threshold: f64, workers: usize) -> Self {
+        Self {
+            runtime: None,
+            heuristic: Heuristic::new(threshold),
+            cpu_workers: workers,
+            metrics: Arc::new(Metrics::new()),
+        }
+    }
+
+    pub fn has_runtime(&self) -> bool {
+        self.runtime.is_some()
+    }
+
+    pub fn heuristic(&self) -> &Heuristic {
+        &self.heuristic
+    }
+
+    /// Execute `C = A·B`; `b` is `k×n` row-major.
+    pub fn spmm(&self, a: &Csr, b: &[f32], n: usize) -> Result<SpmmResult> {
+        let t0 = Instant::now();
+        self.metrics
+            .requests
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let algorithm = self.heuristic.select(a);
+        let result = self.dispatch(a, b, n, algorithm);
+        match &result {
+            Ok(_) => {
+                self.metrics
+                    .completed
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                match algorithm {
+                    Algorithm::RowSplit => &self.metrics.rowsplit,
+                    Algorithm::MergeBased => &self.metrics.merge,
+                }
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            }
+            Err(_) => {
+                self.metrics
+                    .errors
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            }
+        }
+        let latency = t0.elapsed().as_secs_f64();
+        self.metrics.record_latency(latency);
+        result.map(|(c, path, bucket)| {
+            match path {
+                ExecutionPath::Pjrt => &self.metrics.pjrt,
+                ExecutionPath::CpuFallback => &self.metrics.cpu_fallback,
+            }
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            SpmmResult {
+                c,
+                algorithm,
+                path,
+                bucket,
+                latency_s: latency,
+            }
+        })
+    }
+
+    fn dispatch(
+        &self,
+        a: &Csr,
+        b: &[f32],
+        n: usize,
+        algorithm: Algorithm,
+    ) -> Result<(Vec<f32>, ExecutionPath, Option<String>)> {
+        if b.len() != a.k * n {
+            return Err(anyhow!("B must be k×n row-major ({}×{n})", a.k));
+        }
+        if let Some(rt) = &self.runtime {
+            match algorithm {
+                Algorithm::RowSplit => {
+                    if let Some(art) = pad::pick_rowsplit_bucket(rt.manifest(), a) {
+                        let name = art.name.clone();
+                        let c = self.run_rowsplit_artifact(rt, a, b, n, &name)?;
+                        return Ok((c, ExecutionPath::Pjrt, Some(name)));
+                    }
+                }
+                Algorithm::MergeBased => {
+                    if let Some(art) = pad::pick_merge_bucket(rt.manifest(), a) {
+                        let name = art.name.clone();
+                        let c = self.run_merge_artifact(rt, a, b, n, &name)?;
+                        return Ok((c, ExecutionPath::Pjrt, Some(name)));
+                    }
+                }
+            }
+        }
+        // CPU fallback — same algorithms, in-process executors.
+        let c = match algorithm {
+            Algorithm::RowSplit => spmm::rowsplit_spmm(a, b, n, self.cpu_workers),
+            Algorithm::MergeBased => spmm::merge_spmm(a, b, n, self.cpu_workers),
+        };
+        Ok((c, ExecutionPath::CpuFallback, None))
+    }
+
+    fn run_rowsplit_artifact(
+        &self,
+        rt: &Runtime,
+        a: &Csr,
+        b: &[f32],
+        n: usize,
+        name: &str,
+    ) -> Result<Vec<f32>> {
+        let art = rt.artifact(name).ok_or_else(|| anyhow!("no {name}"))?;
+        let p = pad::pad_ell(a, art).map_err(|e| anyhow!(e))?;
+        let bpad = pad::pad_dense(b, a.k, n, p.k, p.n).map_err(|e| anyhow!(e))?;
+        let args = vec![
+            Runtime::literal_i32(&p.col_idx, &[p.m, p.ell])?,
+            Runtime::literal_f32(&p.vals, &[p.m, p.ell])?,
+            Runtime::literal_f32(&bpad, &[p.k, p.n])?,
+        ];
+        let out = rt.execute(name, &args)?;
+        Ok(pad::unpad_output(&out, p.m, p.n, a.m, n))
+    }
+
+    fn run_merge_artifact(
+        &self,
+        rt: &Runtime,
+        a: &Csr,
+        b: &[f32],
+        n: usize,
+        name: &str,
+    ) -> Result<Vec<f32>> {
+        let art = rt.artifact(name).ok_or_else(|| anyhow!("no {name}"))?;
+        let p = pad::pad_coo(a, art).map_err(|e| anyhow!(e))?;
+        let bpad = pad::pad_dense(b, a.k, n, p.k, p.n).map_err(|e| anyhow!(e))?;
+        let args = vec![
+            Runtime::literal_i32(&p.row_idx, &[p.nnz_pad])?,
+            Runtime::literal_i32(&p.col_idx, &[p.nnz_pad])?,
+            Runtime::literal_f32(&p.vals, &[p.nnz_pad])?,
+            Runtime::literal_f32(&bpad, &[p.k, p.n])?,
+        ];
+        let out = rt.execute(name, &args)?;
+        Ok(pad::unpad_output(&out, p.m, p.n, a.m, n))
+    }
+
+    /// Load a runtime from an explicit path after construction (testing).
+    pub fn with_runtime(mut self, dir: &Path) -> Result<Self> {
+        self.runtime = Some(Runtime::load(dir)?);
+        Ok(self)
+    }
+
+    /// Borrow the runtime (router uses the manifest for bucket routing).
+    pub fn runtime_ref(&self) -> Option<&Runtime> {
+        self.runtime.as_ref()
+    }
+
+    /// Replace the metrics sink with a shared one (the server shares one
+    /// `Metrics` across all worker-owned engines).
+    pub fn with_shared_metrics(mut self, metrics: Arc<Metrics>) -> Self {
+        self.metrics = metrics;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_only_engine_runs_both_algorithms() {
+        let eng = SpmmEngine::cpu_only(9.35, 2);
+        let b = crate::gen::dense_matrix(300, 8, 1101);
+
+        let short = Csr::random(300, 300, 4.0, 1102);
+        let r = eng.spmm(&short, &b, 8).unwrap();
+        assert_eq!(r.algorithm, Algorithm::MergeBased);
+        assert_eq!(r.path, ExecutionPath::CpuFallback);
+        let want = spmm::spmm_reference(&short, &b, 8);
+        for (x, y) in r.c.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()));
+        }
+
+        let long = crate::gen::uniform_rows(300, 20, Some(300), 1103);
+        let r2 = eng.spmm(&long, &b, 8).unwrap();
+        assert_eq!(r2.algorithm, Algorithm::RowSplit);
+
+        let snap = eng.metrics.snapshot();
+        assert_eq!(snap.completed, 2);
+        assert_eq!(snap.rowsplit, 1);
+        assert_eq!(snap.merge, 1);
+        assert_eq!(snap.cpu_fallback, 2);
+    }
+
+    #[test]
+    fn result_matches_reference() {
+        let eng = SpmmEngine::cpu_only(9.35, 4);
+        let a = Csr::random(200, 150, 12.0, 1104);
+        let b = crate::gen::dense_matrix(150, 16, 1105);
+        let r = eng.spmm(&a, &b, 16).unwrap();
+        let want = spmm::spmm_reference(&a, &b, 16);
+        for (x, y) in r.c.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()));
+        }
+    }
+
+    #[test]
+    fn bad_b_shape_is_error() {
+        let eng = SpmmEngine::cpu_only(9.35, 2);
+        let a = Csr::random(10, 10, 2.0, 1106);
+        let b = vec![0.0f32; 5];
+        assert!(eng.spmm(&a, &b, 8).is_err());
+        assert_eq!(eng.metrics.snapshot().errors, 1);
+    }
+
+    #[test]
+    fn missing_artifacts_dir_is_error() {
+        let cfg = EngineConfig {
+            artifacts_dir: Some("/nonexistent/path".into()),
+            ..Default::default()
+        };
+        assert!(SpmmEngine::new(cfg).is_err());
+    }
+}

@@ -1,0 +1,142 @@
+//! Serving metrics: counters + latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Log-spaced latency buckets (seconds).
+const BUCKETS: [f64; 12] = [
+    1e-5, 3e-5, 1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 1e-1, 3e-1, 1.0, 3.0,
+];
+
+/// Thread-safe serving metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub errors: AtomicU64,
+    pub rowsplit: AtomicU64,
+    pub merge: AtomicU64,
+    pub pjrt: AtomicU64,
+    pub cpu_fallback: AtomicU64,
+    hist: Mutex<[u64; BUCKETS.len() + 1]>,
+    latency_sum_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_latency(&self, secs: f64) {
+        let mut h = self.hist.lock().unwrap();
+        let idx = BUCKETS.partition_point(|&b| b < secs);
+        h[idx] += 1;
+        drop(h);
+        self.latency_sum_us
+            .fetch_add((secs * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    /// Approximate p-th latency percentile from the histogram (upper bound
+    /// of the containing bucket).
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        let h = self.hist.lock().unwrap();
+        let total: u64 = h.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (p / 100.0 * total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in h.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return *BUCKETS.get(i).unwrap_or(&f64::INFINITY);
+            }
+        }
+        f64::INFINITY
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let completed = self.completed.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            completed,
+            errors: self.errors.load(Ordering::Relaxed),
+            rowsplit: self.rowsplit.load(Ordering::Relaxed),
+            merge: self.merge.load(Ordering::Relaxed),
+            pjrt: self.pjrt.load(Ordering::Relaxed),
+            cpu_fallback: self.cpu_fallback.load(Ordering::Relaxed),
+            p50_s: self.latency_percentile(50.0),
+            p99_s: self.latency_percentile(99.0),
+            mean_latency_s: if completed > 0 {
+                self.latency_sum_us.load(Ordering::Relaxed) as f64 / 1e6 / completed as f64
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+/// Point-in-time copy for reporting.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub completed: u64,
+    pub errors: u64,
+    pub rowsplit: u64,
+    pub merge: u64,
+    pub pjrt: u64,
+    pub cpu_fallback: u64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub mean_latency_s: f64,
+}
+
+impl std::fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "req={} ok={} err={} rowsplit={} merge={} pjrt={} cpu={} p50={:.1}ms p99={:.1}ms",
+            self.requests,
+            self.completed,
+            self.errors,
+            self.rowsplit,
+            self.merge,
+            self.pjrt,
+            self.cpu_fallback,
+            self.p50_s * 1e3,
+            self.p99_s * 1e3
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_percentiles() {
+        let m = Metrics::new();
+        for _ in 0..90 {
+            m.record_latency(5e-4); // bucket ≤ 1e-3
+        }
+        for _ in 0..10 {
+            m.record_latency(0.2); // bucket ≤ 3e-1
+        }
+        m.completed.store(100, Ordering::Relaxed);
+        let p50 = m.latency_percentile(50.0);
+        assert!(p50 <= 1e-3, "p50 = {p50}");
+        let p99 = m.latency_percentile(99.0);
+        assert!(p99 >= 0.1, "p99 = {p99}");
+        let snap = m.snapshot();
+        assert_eq!(snap.completed, 100);
+        assert!(snap.mean_latency_s > 0.0);
+        assert!(format!("{snap}").contains("p99"));
+    }
+
+    #[test]
+    fn empty_metrics() {
+        let m = Metrics::new();
+        assert_eq!(m.latency_percentile(99.0), 0.0);
+        assert_eq!(m.snapshot().mean_latency_s, 0.0);
+    }
+}

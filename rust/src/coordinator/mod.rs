@@ -1,0 +1,29 @@
+//! The serving engine — Layer 3's coordination role.
+//!
+//! A production SpMM service in the mold of an inference router: requests
+//! carry a CSR matrix (or a handle to a cached one) and a dense tall-skinny
+//! B; the engine
+//!
+//! 1. **selects the algorithm** with the paper's O(1) heuristic
+//!    (`d = nnz/m` vs 9.35 — [`crate::spmm::Heuristic`]),
+//! 2. **routes** the request to the smallest AOT shape bucket that fits
+//!    ([`crate::runtime::pad`]), falling back to the in-process CPU
+//!    executors when nothing fits,
+//! 3. **batches** same-bucket requests ([`batcher`]) so one worker runs
+//!    them back-to-back against the compiled executable,
+//! 4. records **metrics** (per-algorithm counts, latency percentiles,
+//!    fallback rate — [`metrics`]).
+//!
+//! [`engine`] is the synchronous core; [`router`] puts a threaded
+//! request-queue front-end on top (std threads + channels; the offline
+//! vendor set has no tokio, and the serve path is CPU-bound anyway).
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod router;
+
+pub use batcher::{Batch, BatchQueue};
+pub use engine::{EngineConfig, ExecutionPath, SpmmEngine, SpmmResult};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use router::{Server, ServerConfig};

@@ -1,0 +1,350 @@
+//! Threaded request front-end: bounded queue (backpressure) → router
+//! thread (bucket batching) → worker pool → reply channels.
+//!
+//! std threads + channels rather than an async runtime: the serve path is
+//! CPU-bound PJRT execution, one OS thread per worker is the right shape,
+//! and the offline vendor set carries no tokio.
+//!
+//! The xla crate's `PjRtClient` is `Rc`-based (not `Send`), so the PJRT
+//! runtime cannot be shared across threads: **each worker owns a full
+//! engine** (its own client + compiled executables), built inside the
+//! worker thread from a shared [`EngineConfig`].  Metrics are shared
+//! through one `Arc<Metrics>`.  The router thread does bucket routing from
+//! the (plain-data) manifest alone.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::formats::Csr;
+use crate::runtime::{pad, Manifest};
+use crate::spmm::{Algorithm, Heuristic};
+
+use super::batcher::BatchQueue;
+use super::engine::{EngineConfig, SpmmEngine, SpmmResult};
+use super::metrics::{Metrics, MetricsSnapshot};
+
+/// Server tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// worker threads, each owning a PJRT engine
+    pub workers: usize,
+    /// flush a bucket at this many queued requests
+    pub max_batch: usize,
+    /// …or when its oldest request has waited this long
+    pub max_wait: Duration,
+    /// bounded ingress queue (backpressure: submit blocks when full)
+    pub queue_capacity: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            queue_capacity: 256,
+        }
+    }
+}
+
+struct Request {
+    id: u64,
+    csr: Arc<Csr>,
+    b: Arc<Vec<f32>>,
+    n: usize,
+    reply: Sender<Result<SpmmResult>>,
+}
+
+enum RouterMsg {
+    Req(Request),
+    Shutdown,
+}
+
+/// A running SpMM server.
+pub struct Server {
+    ingress: SyncSender<RouterMsg>,
+    router: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+}
+
+impl Server {
+    /// Start the router + worker threads.  Worker engines are constructed
+    /// inside their threads from `engine_cfg`; errors there surface on the
+    /// affected requests' reply channels.
+    pub fn start(engine_cfg: EngineConfig, cfg: ServerConfig) -> Result<Self> {
+        let metrics = Arc::new(Metrics::new());
+        // Router needs the manifest for bucket keys (plain data, Send).
+        let manifest: Option<Manifest> = match &engine_cfg.artifacts_dir {
+            Some(dir) if dir.join("manifest.json").exists() => {
+                Some(Manifest::load(dir).map_err(anyhow::Error::msg)?)
+            }
+            _ => None,
+        };
+        let heuristic = Heuristic::new(engine_cfg.threshold);
+
+        let (ingress_tx, ingress_rx) = sync_channel::<RouterMsg>(cfg.queue_capacity);
+        let (work_tx, work_rx) = sync_channel::<Vec<Request>>(cfg.queue_capacity);
+        let work_rx = Arc::new(std::sync::Mutex::new(work_rx));
+
+        // worker pool: each thread owns a full engine
+        let mut workers = Vec::with_capacity(cfg.workers.max(1));
+        for _ in 0..cfg.workers.max(1) {
+            let work_rx = Arc::clone(&work_rx);
+            let metrics = Arc::clone(&metrics);
+            let engine_cfg = engine_cfg.clone();
+            workers.push(std::thread::spawn(move || {
+                let engine = match SpmmEngine::new(engine_cfg) {
+                    Ok(e) => e.with_shared_metrics(metrics),
+                    Err(e) => {
+                        // Engine failed to build: fail every batch we get.
+                        let err = e.to_string();
+                        loop {
+                            let batch = { work_rx.lock().unwrap().recv() };
+                            match batch {
+                                Ok(reqs) => {
+                                    for r in reqs {
+                                        let _ = r
+                                            .reply
+                                            .send(Err(anyhow::anyhow!("engine init: {err}")));
+                                    }
+                                }
+                                Err(_) => return,
+                            }
+                        }
+                    }
+                };
+                loop {
+                    let batch = { work_rx.lock().unwrap().recv() };
+                    match batch {
+                        Ok(reqs) => {
+                            // same-bucket requests run back-to-back against
+                            // one compiled executable
+                            for r in reqs {
+                                let res = engine.spmm(&r.csr, &r.b, r.n);
+                                let _ = r.reply.send(res);
+                            }
+                        }
+                        Err(_) => break, // channel closed: shutdown
+                    }
+                }
+            }));
+        }
+
+        // router thread: bucket batching with deadline flushes
+        let router = std::thread::spawn(move || {
+            let mut bq = BatchQueue::new(cfg.max_batch, cfg.max_wait);
+            let mut pending: HashMap<u64, Request> = HashMap::new();
+            let send_batch = |ids: Vec<u64>, pending: &mut HashMap<u64, Request>| {
+                let reqs: Vec<Request> =
+                    ids.into_iter().filter_map(|id| pending.remove(&id)).collect();
+                if !reqs.is_empty() {
+                    let _ = work_tx.send(reqs);
+                }
+            };
+            loop {
+                let timeout = bq.next_deadline().unwrap_or(Duration::from_millis(50));
+                match ingress_rx.recv_timeout(timeout) {
+                    Ok(RouterMsg::Req(req)) => {
+                        let key = bucket_key(manifest.as_ref(), &heuristic, &req.csr);
+                        let id = req.id;
+                        pending.insert(id, req);
+                        if let Some(batch) = bq.push(&key, id) {
+                            send_batch(batch.requests, &mut pending);
+                        }
+                    }
+                    Ok(RouterMsg::Shutdown) => {
+                        for batch in bq.flush_all() {
+                            send_batch(batch.requests, &mut pending);
+                        }
+                        break;
+                    }
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                        for batch in bq.flush_expired() {
+                            send_batch(batch.requests, &mut pending);
+                        }
+                    }
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                        for batch in bq.flush_all() {
+                            send_batch(batch.requests, &mut pending);
+                        }
+                        break;
+                    }
+                }
+            }
+            // dropping work_tx closes the worker pool
+        });
+
+        Ok(Self {
+            ingress: ingress_tx,
+            router: Some(router),
+            workers,
+            metrics,
+            next_id: AtomicU64::new(0),
+        })
+    }
+
+    /// Submit a request; returns a handle to await the result.
+    /// Blocks when the ingress queue is full (backpressure).
+    pub fn submit(
+        &self,
+        csr: Arc<Csr>,
+        b: Arc<Vec<f32>>,
+        n: usize,
+    ) -> Receiver<Result<SpmmResult>> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            csr,
+            b,
+            n,
+            reply: tx,
+        };
+        let _ = self.ingress.send(RouterMsg::Req(req));
+        rx
+    }
+
+    /// Submit and wait.
+    pub fn submit_blocking(
+        &self,
+        csr: Arc<Csr>,
+        b: Arc<Vec<f32>>,
+        n: usize,
+    ) -> Result<SpmmResult> {
+        self.submit(csr, b, n)
+            .recv()
+            .map_err(|e| anyhow::anyhow!("server shut down: {e}"))?
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Drain queues and stop all threads.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        let _ = self.ingress.send(RouterMsg::Shutdown);
+        if let Some(h) = self.router.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        self.metrics.snapshot()
+    }
+}
+
+/// Routing key: the AOT bucket this request would use, or the algorithm
+/// name for CPU-fallback requests (still groups similar work).
+fn bucket_key(manifest: Option<&Manifest>, heuristic: &Heuristic, csr: &Csr) -> String {
+    let alg = heuristic.select(csr);
+    if let Some(m) = manifest {
+        let pick = match alg {
+            Algorithm::RowSplit => pad::pick_rowsplit_bucket(m, csr),
+            Algorithm::MergeBased => pad::pick_merge_bucket(m, csr),
+        };
+        if let Some(art) = pick {
+            return art.name.clone();
+        }
+    }
+    format!("cpu:{alg}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cpu_cfg() -> EngineConfig {
+        EngineConfig {
+            artifacts_dir: None,
+            threshold: 9.35,
+            cpu_workers: 2,
+        }
+    }
+
+    #[test]
+    fn serves_requests_cpu_only() {
+        let server = Server::start(cpu_cfg(), ServerConfig::default()).unwrap();
+        let a = Arc::new(Csr::random(100, 100, 5.0, 1201));
+        let b = Arc::new(crate::gen::dense_matrix(100, 8, 1202));
+        let want = crate::spmm::spmm_reference(&a, &b, 8);
+
+        let handles: Vec<_> = (0..20)
+            .map(|_| server.submit(Arc::clone(&a), Arc::clone(&b), 8))
+            .collect();
+        for h in handles {
+            let r = h.recv().unwrap().unwrap();
+            for (x, y) in r.c.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()));
+            }
+        }
+        let snap = server.shutdown();
+        assert_eq!(snap.completed, 20);
+        assert_eq!(snap.errors, 0);
+    }
+
+    #[test]
+    fn mixed_workloads_route_to_both_algorithms() {
+        let server = Server::start(cpu_cfg(), ServerConfig::default()).unwrap();
+        let short = Arc::new(Csr::random(200, 200, 3.0, 1203));
+        let long = Arc::new(crate::gen::uniform_rows(200, 30, Some(200), 1204));
+        let b = Arc::new(crate::gen::dense_matrix(200, 8, 1205));
+
+        let r1 = server
+            .submit_blocking(Arc::clone(&short), Arc::clone(&b), 8)
+            .unwrap();
+        let r2 = server.submit_blocking(long, b, 8).unwrap();
+        assert_eq!(r1.algorithm, Algorithm::MergeBased);
+        assert_eq!(r2.algorithm, Algorithm::RowSplit);
+        let snap = server.shutdown();
+        assert_eq!(snap.rowsplit, 1);
+        assert_eq!(snap.merge, 1);
+    }
+
+    #[test]
+    fn shutdown_drains_pending() {
+        let server = Server::start(
+            cpu_cfg(),
+            ServerConfig {
+                max_batch: 1000,                   // never fills
+                max_wait: Duration::from_secs(60), // never expires
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let a = Arc::new(Csr::random(50, 50, 4.0, 1206));
+        let b = Arc::new(crate::gen::dense_matrix(50, 4, 1207));
+        let handles: Vec<_> = (0..5)
+            .map(|_| server.submit(Arc::clone(&a), Arc::clone(&b), 4))
+            .collect();
+        let snap = server.shutdown(); // must flush the un-full batch
+        assert_eq!(snap.completed, 5);
+        for h in handles {
+            assert!(h.recv().unwrap().is_ok());
+        }
+    }
+
+    #[test]
+    fn deadline_flush_under_low_load() {
+        let server = Server::start(
+            cpu_cfg(),
+            ServerConfig {
+                max_batch: 1000,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let a = Arc::new(Csr::random(50, 50, 4.0, 1208));
+        let b = Arc::new(crate::gen::dense_matrix(50, 4, 1209));
+        // single request must complete without filling the batch
+        let r = server.submit_blocking(a, b, 4);
+        assert!(r.is_ok());
+        server.shutdown();
+    }
+}

@@ -1,0 +1,156 @@
+//! Coordinate format + the flat padded view the merge-based kernel consumes.
+
+use super::Csr;
+
+/// COO triplets. Entries need not be sorted unless stated.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Coo {
+    pub m: usize,
+    pub k: usize,
+    pub row_idx: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Coo {
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// CSR → COO (the paper's *PrepareSpmm* "flatten CSR-to-COO" step).
+    /// Output is row-major sorted because CSR is.
+    pub fn from_csr(csr: &Csr) -> Self {
+        let nnz = csr.nnz();
+        let mut row_idx = Vec::with_capacity(nnz);
+        for i in 0..csr.m {
+            row_idx.extend(std::iter::repeat(i as u32).take(csr.row_len(i)));
+        }
+        Self {
+            m: csr.m,
+            k: csr.k,
+            row_idx,
+            col_idx: csr.col_idx.clone(),
+            vals: csr.vals.clone(),
+        }
+    }
+
+    /// COO → CSR. Requires entries sorted by (row, col); duplicates kept.
+    pub fn to_csr(&self) -> Result<Csr, String> {
+        let mut row_ptr = vec![0usize; self.m + 1];
+        for &r in &self.row_idx {
+            if r as usize >= self.m {
+                return Err(format!("row index {r} out of range {}", self.m));
+            }
+            row_ptr[r as usize + 1] += 1;
+        }
+        for i in 0..self.m {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        // verify sortedness by row
+        if self.row_idx.windows(2).any(|w| w[0] > w[1]) {
+            return Err("COO not sorted by row".into());
+        }
+        Csr::new(
+            self.m,
+            self.k,
+            row_ptr,
+            self.col_idx.clone(),
+            self.vals.clone(),
+        )
+    }
+
+    /// The static-shape flat view for the merge artifacts: padded to
+    /// `nnz_pad` with dump-row entries (`row = m`, `col = 0`, `val = 0`).
+    /// Bit-identical to Python `formats.csr_to_coo`.
+    pub fn flatten_padded(csr: &Csr, nnz_pad: usize) -> Result<FlatCoo, String> {
+        let nnz = csr.nnz();
+        if nnz > nnz_pad {
+            return Err(format!("nnz {nnz} exceeds pad {nnz_pad}"));
+        }
+        let coo = Self::from_csr(csr);
+        let mut row_idx = vec![csr.m as u32; nnz_pad];
+        let mut col_idx = vec![0u32; nnz_pad];
+        let mut vals = vec![0.0f32; nnz_pad];
+        row_idx[..nnz].copy_from_slice(&coo.row_idx);
+        col_idx[..nnz].copy_from_slice(&coo.col_idx);
+        vals[..nnz].copy_from_slice(&coo.vals);
+        Ok(FlatCoo {
+            m: csr.m,
+            k: csr.k,
+            nnz,
+            row_idx,
+            col_idx,
+            vals,
+        })
+    }
+}
+
+/// Padded flat COO device view (see `python/compile/kernels/ref.py`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlatCoo {
+    pub m: usize,
+    pub k: usize,
+    /// true nonzero count (entries `nnz..` are padding)
+    pub nnz: usize,
+    pub row_idx: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Csr {
+        Csr::new(
+            3,
+            3,
+            vec![0, 2, 2, 4],
+            vec![0, 2, 0, 1],
+            vec![1.0, 2.0, 3.0, 4.0],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn csr_coo_roundtrip() {
+        let a = small();
+        let coo = Coo::from_csr(&a);
+        assert_eq!(coo.row_idx, vec![0, 0, 2, 2]);
+        let back = coo.to_csr().unwrap();
+        assert_eq!(back, a);
+    }
+
+    #[test]
+    fn roundtrip_random() {
+        let a = Csr::random(200, 300, 5.0, 17);
+        assert_eq!(Coo::from_csr(&a).to_csr().unwrap(), a);
+    }
+
+    #[test]
+    fn flatten_padded_layout() {
+        let a = small();
+        let f = Coo::flatten_padded(&a, 8).unwrap();
+        assert_eq!(f.nnz, 4);
+        assert_eq!(&f.row_idx[..4], &[0, 0, 2, 2]);
+        assert_eq!(&f.row_idx[4..], &[3, 3, 3, 3]); // dump row = m
+        assert_eq!(&f.vals[4..], &[0.0; 4]);
+    }
+
+    #[test]
+    fn flatten_pad_too_small() {
+        assert!(Coo::flatten_padded(&small(), 3).is_err());
+    }
+
+    #[test]
+    fn unsorted_coo_rejected() {
+        let coo = Coo {
+            m: 2,
+            k: 2,
+            row_idx: vec![1, 0],
+            col_idx: vec![0, 0],
+            vals: vec![1.0, 1.0],
+        };
+        assert!(coo.to_csr().is_err());
+    }
+}

@@ -1,0 +1,125 @@
+//! Compressed Sparse Column — needed for the SpMM_T discussion (§6) and as
+//! a conversion-cost data point: CSR→CSC is a full transpose-scatter, one of
+//! the expensive conversions the paper's CSR-only design avoids.
+
+use super::Csr;
+
+/// CSC: column-major dual of CSR.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csc {
+    pub m: usize,
+    pub k: usize,
+    /// `k + 1` offsets into `row_idx`/`vals`.
+    pub col_ptr: Vec<usize>,
+    pub row_idx: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Csc {
+    pub fn nnz(&self) -> usize {
+        self.col_ptr[self.k]
+    }
+
+    /// CSR → CSC transpose-scatter (counting sort by column).
+    pub fn from_csr(csr: &Csr) -> Self {
+        let nnz = csr.nnz();
+        let mut col_ptr = vec![0usize; csr.k + 1];
+        for &c in &csr.col_idx {
+            col_ptr[c as usize + 1] += 1;
+        }
+        for j in 0..csr.k {
+            col_ptr[j + 1] += col_ptr[j];
+        }
+        let mut cursor = col_ptr.clone();
+        let mut row_idx = vec![0u32; nnz];
+        let mut vals = vec![0.0f32; nnz];
+        for i in 0..csr.m {
+            let (cols, vs) = csr.row(i);
+            for (&c, &v) in cols.iter().zip(vs) {
+                let dst = cursor[c as usize];
+                row_idx[dst] = i as u32;
+                vals[dst] = v;
+                cursor[c as usize] += 1;
+            }
+        }
+        Self {
+            m: csr.m,
+            k: csr.k,
+            col_ptr,
+            row_idx,
+            vals,
+        }
+    }
+
+    /// CSC → CSR (transpose back).
+    pub fn to_csr(&self) -> Csr {
+        let nnz = self.nnz();
+        let mut row_ptr = vec![0usize; self.m + 1];
+        for &r in &self.row_idx {
+            row_ptr[r as usize + 1] += 1;
+        }
+        for i in 0..self.m {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        let mut cursor = row_ptr.clone();
+        let mut col_idx = vec![0u32; nnz];
+        let mut vals = vec![0.0f32; nnz];
+        for j in 0..self.k {
+            for p in self.col_ptr[j]..self.col_ptr[j + 1] {
+                let r = self.row_idx[p] as usize;
+                col_idx[cursor[r]] = j as u32;
+                vals[cursor[r]] = self.vals[p];
+                cursor[r] += 1;
+            }
+        }
+        Csr::new(self.m, self.k, row_ptr, col_idx, vals).expect("valid by construction")
+    }
+
+    /// y = Aᵀ·x via CSC (column-major walk) — the SpMM_T primitive.
+    pub fn transpose_spmv(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.m);
+        let mut y = vec![0.0f32; self.k];
+        for j in 0..self.k {
+            let mut acc = 0.0f32;
+            for p in self.col_ptr[j]..self.col_ptr[j + 1] {
+                acc += self.vals[p] * x[self.row_idx[p] as usize];
+            }
+            y[j] = acc;
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csr_csc_roundtrip() {
+        let a = Csr::random(150, 220, 6.0, 5);
+        let back = Csc::from_csr(&a).to_csr();
+        assert_eq!(back, a);
+    }
+
+    #[test]
+    fn transpose_spmv_matches_dense() {
+        let a = Csr::random(40, 30, 4.0, 9);
+        let csc = Csc::from_csr(&a);
+        let x: Vec<f32> = (0..40).map(|i| (i as f32) * 0.25 - 3.0).collect();
+        let y = csc.transpose_spmv(&x);
+        // dense A^T x
+        let d = a.to_dense();
+        for j in 0..30 {
+            let want: f32 = (0..40).map(|i| d[i * 30 + j] * x[i]).sum();
+            assert!((y[j] - want).abs() < 1e-3, "col {j}: {} vs {want}", y[j]);
+        }
+    }
+
+    #[test]
+    fn empty() {
+        let a = Csr::empty(3, 4);
+        let csc = Csc::from_csr(&a);
+        assert_eq!(csc.nnz(), 0);
+        assert_eq!(csc.to_csr(), a);
+    }
+}

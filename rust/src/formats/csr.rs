@@ -1,0 +1,263 @@
+//! Compressed Sparse Row — the paper's canonical input format.
+//!
+//! Storage is `m + 2·nnz` words (§2.2): a `row_ptr` array of `m+1` offsets
+//! plus per-nonzero column indices and values.
+
+use crate::util::XorShift;
+
+/// A CSR sparse matrix: `m × k`, f32 values, u32 column indices.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    pub m: usize,
+    pub k: usize,
+    /// `m + 1` offsets into `col_idx`/`vals`; `row_ptr[0] == 0`,
+    /// `row_ptr[m] == nnz`, non-decreasing.
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from parts, validating the CSR invariants.
+    pub fn new(
+        m: usize,
+        k: usize,
+        row_ptr: Vec<usize>,
+        col_idx: Vec<u32>,
+        vals: Vec<f32>,
+    ) -> Result<Self, String> {
+        if row_ptr.len() != m + 1 {
+            return Err(format!("row_ptr len {} != m+1 {}", row_ptr.len(), m + 1));
+        }
+        if row_ptr[0] != 0 {
+            return Err("row_ptr[0] != 0".into());
+        }
+        if row_ptr.windows(2).any(|w| w[0] > w[1]) {
+            return Err("row_ptr not non-decreasing".into());
+        }
+        let nnz = row_ptr[m];
+        if col_idx.len() != nnz || vals.len() != nnz {
+            return Err(format!(
+                "nnz mismatch: row_ptr says {nnz}, col_idx {}, vals {}",
+                col_idx.len(),
+                vals.len()
+            ));
+        }
+        if col_idx.iter().any(|&c| c as usize >= k) {
+            return Err("column index out of range".into());
+        }
+        Ok(Self {
+            m,
+            k,
+            row_ptr,
+            col_idx,
+            vals,
+        })
+    }
+
+    /// An empty `m × k` matrix.
+    pub fn empty(m: usize, k: usize) -> Self {
+        Self {
+            m,
+            k,
+            row_ptr: vec![0; m + 1],
+            col_idx: Vec::new(),
+            vals: Vec::new(),
+        }
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.row_ptr[self.m]
+    }
+
+    /// The paper's heuristic statistic `d = nnz / m` (§5.4).
+    pub fn mean_row_length(&self) -> f64 {
+        self.nnz() as f64 / self.m.max(1) as f64
+    }
+
+    /// Length of row `i`.
+    #[inline]
+    pub fn row_len(&self, i: usize) -> usize {
+        self.row_ptr[i + 1] - self.row_ptr[i]
+    }
+
+    /// `(col_idx, vals)` slices of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        (&self.col_idx[s..e], &self.vals[s..e])
+    }
+
+    /// Longest row (the ELL width driver).
+    pub fn max_row_length(&self) -> usize {
+        (0..self.m).map(|i| self.row_len(i)).max().unwrap_or(0)
+    }
+
+    /// Number of empty rows (the merge-path pathological case, §4).
+    pub fn empty_rows(&self) -> usize {
+        (0..self.m).filter(|&i| self.row_len(i) == 0).count()
+    }
+
+    /// Coefficient of variation of row lengths — the irregularity measure
+    /// Fig. 6's x-axis spectrum spans.
+    pub fn row_length_cv(&self) -> f64 {
+        if self.m == 0 {
+            return 0.0;
+        }
+        let mean = self.mean_row_length();
+        if mean == 0.0 {
+            return 0.0;
+        }
+        let var = (0..self.m)
+            .map(|i| {
+                let d = self.row_len(i) as f64 - mean;
+                d * d
+            })
+            .sum::<f64>()
+            / self.m as f64;
+        var.sqrt() / mean
+    }
+
+    /// Dense row-major materialization (test oracle; duplicates accumulate).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.m * self.k];
+        for i in 0..self.m {
+            let (cols, vals) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                out[i * self.k + c as usize] += v;
+            }
+        }
+        out
+    }
+
+    /// Random CSR with Poisson-ish row lengths around `avg_row` —
+    /// mirrors `formats.random_csr` on the Python side.
+    pub fn random(m: usize, k: usize, avg_row: f64, seed: u64) -> Self {
+        let mut rng = XorShift::new(seed);
+        let mut row_ptr = Vec::with_capacity(m + 1);
+        row_ptr.push(0usize);
+        // Poisson via sum of Bernoulli on 4 draws (cheap approximation with
+        // the right mean; the generators module has richer distributions).
+        let mut lens = Vec::with_capacity(m);
+        for _ in 0..m {
+            let mut len = 0usize;
+            let lambda = avg_row;
+            // inverse-CDF geometric-ish sampling, capped at k
+            let acc = rng.f32() as f64;
+            let mut p = (-lambda).exp();
+            let mut cdf = p;
+            while acc > cdf && len < k && len < 4 * avg_row as usize + 16 {
+                len += 1;
+                p *= lambda / len as f64;
+                cdf += p;
+            }
+            lens.push(len.min(k));
+        }
+        for &l in &lens {
+            row_ptr.push(row_ptr.last().unwrap() + l);
+        }
+        let nnz = *row_ptr.last().unwrap();
+        let mut col_idx = Vec::with_capacity(nnz);
+        let mut vals = Vec::with_capacity(nnz);
+        for &l in &lens {
+            col_idx.extend(rng.distinct_sorted(l, k));
+            for _ in 0..l {
+                vals.push(rng.normal());
+            }
+        }
+        Self {
+            m,
+            k,
+            row_ptr,
+            col_idx,
+            vals,
+        }
+    }
+
+    /// Memory footprint in bytes (the §2.2 `m + 2nnz` argument, in bytes).
+    pub fn bytes(&self) -> usize {
+        (self.m + 1) * std::mem::size_of::<usize>()
+            + self.nnz() * (std::mem::size_of::<u32>() + std::mem::size_of::<f32>())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Csr {
+        // [[1, 0, 2], [0, 0, 0], [3, 4, 0]]
+        Csr::new(
+            3,
+            3,
+            vec![0, 2, 2, 4],
+            vec![0, 2, 0, 1],
+            vec![1.0, 2.0, 3.0, 4.0],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn construction_and_accessors() {
+        let a = small();
+        assert_eq!(a.nnz(), 4);
+        assert_eq!(a.row_len(0), 2);
+        assert_eq!(a.row_len(1), 0);
+        assert_eq!(a.max_row_length(), 2);
+        assert_eq!(a.empty_rows(), 1);
+        assert!((a.mean_row_length() - 4.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn to_dense() {
+        let d = small().to_dense();
+        assert_eq!(d, vec![1.0, 0.0, 2.0, 0.0, 0.0, 0.0, 3.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn validation_rejects_bad_row_ptr() {
+        assert!(Csr::new(2, 2, vec![0, 2, 1], vec![0, 1], vec![1.0, 1.0]).is_err());
+        assert!(Csr::new(2, 2, vec![1, 1, 2], vec![0, 1], vec![1.0, 1.0]).is_err());
+        assert!(Csr::new(2, 2, vec![0, 1], vec![0], vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn validation_rejects_out_of_range_column() {
+        assert!(Csr::new(1, 2, vec![0, 1], vec![5], vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn validation_rejects_nnz_mismatch() {
+        assert!(Csr::new(1, 4, vec![0, 2], vec![0], vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn random_has_requested_stats() {
+        let a = Csr::random(2000, 500, 8.0, 3);
+        assert_eq!(a.m, 2000);
+        let d = a.mean_row_length();
+        assert!((6.0..10.0).contains(&d), "d = {d}");
+        // sorted distinct columns per row
+        for i in 0..a.m {
+            let (cols, _) = a.row(i);
+            for w in cols.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let a = Csr::empty(4, 7);
+        assert_eq!(a.nnz(), 0);
+        assert_eq!(a.row_length_cv(), 0.0);
+        assert_eq!(a.to_dense(), vec![0.0; 28]);
+    }
+
+    #[test]
+    fn cv_zero_for_uniform_rows() {
+        let a = Csr::random(64, 4096, 0.0, 1); // all empty
+        assert_eq!(a.row_length_cv(), 0.0);
+    }
+}

@@ -1,0 +1,149 @@
+//! Doubly-Compressed Sparse Row — the format Hong et al. [21] use for the
+//! *light* rows of their heavy/light split (§2.2).  Only non-empty rows are
+//! stored, so matrices with many empty rows (the merge-path pathological
+//! case) stay compact.
+
+use super::Csr;
+
+/// DCSR: CSR over the non-empty rows only, with a `row_ids` map back to the
+/// original row numbers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dcsr {
+    pub m: usize,
+    pub k: usize,
+    /// original row index of each stored row, ascending
+    pub row_ids: Vec<u32>,
+    /// `row_ids.len() + 1` offsets
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Dcsr {
+    pub fn nnz(&self) -> usize {
+        *self.row_ptr.last().unwrap_or(&0)
+    }
+
+    pub fn stored_rows(&self) -> usize {
+        self.row_ids.len()
+    }
+
+    pub fn from_csr(csr: &Csr) -> Self {
+        let mut row_ids = Vec::new();
+        let mut row_ptr = vec![0usize];
+        let mut col_idx = Vec::with_capacity(csr.nnz());
+        let mut vals = Vec::with_capacity(csr.nnz());
+        for i in 0..csr.m {
+            if csr.row_len(i) > 0 {
+                let (cols, vs) = csr.row(i);
+                row_ids.push(i as u32);
+                col_idx.extend_from_slice(cols);
+                vals.extend_from_slice(vs);
+                row_ptr.push(col_idx.len());
+            }
+        }
+        Self {
+            m: csr.m,
+            k: csr.k,
+            row_ids,
+            row_ptr,
+            col_idx,
+            vals,
+        }
+    }
+
+    pub fn to_csr(&self) -> Csr {
+        let mut row_ptr = vec![0usize; self.m + 1];
+        for (s, &orig) in self.row_ids.iter().enumerate() {
+            row_ptr[orig as usize + 1] = self.row_ptr[s + 1] - self.row_ptr[s];
+        }
+        for i in 0..self.m {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        Csr::new(
+            self.m,
+            self.k,
+            row_ptr,
+            self.col_idx.clone(),
+            self.vals.clone(),
+        )
+        .expect("valid by construction")
+    }
+
+    /// Heavy/light split à la Hong et al.: rows with ≥ `threshold` nonzeros
+    /// go to the heavy CSR, the rest stay in a light DCSR.
+    pub fn split_heavy_light(csr: &Csr, threshold: usize) -> (Csr, Dcsr) {
+        let mut heavy_ptr = vec![0usize; csr.m + 1];
+        let mut heavy_cols = Vec::new();
+        let mut heavy_vals = Vec::new();
+        let mut light = Csr::empty(csr.m, csr.k);
+        let mut light_ptr = vec![0usize; csr.m + 1];
+        let mut light_cols = Vec::new();
+        let mut light_vals = Vec::new();
+        for i in 0..csr.m {
+            let (cols, vs) = csr.row(i);
+            if cols.len() >= threshold {
+                heavy_cols.extend_from_slice(cols);
+                heavy_vals.extend_from_slice(vs);
+            } else {
+                light_cols.extend_from_slice(cols);
+                light_vals.extend_from_slice(vs);
+            }
+            heavy_ptr[i + 1] = heavy_cols.len();
+            light_ptr[i + 1] = light_cols.len();
+        }
+        light.row_ptr = light_ptr;
+        light.col_idx = light_cols;
+        light.vals = light_vals;
+        let heavy = Csr::new(csr.m, csr.k, heavy_ptr, heavy_cols, heavy_vals)
+            .expect("valid by construction");
+        (heavy, Dcsr::from_csr(&light))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_with_empty_rows() {
+        let a = Csr::new(
+            5,
+            4,
+            vec![0, 2, 2, 2, 3, 3],
+            vec![0, 3, 1],
+            vec![1.0, 2.0, 3.0],
+        )
+        .unwrap();
+        let d = Dcsr::from_csr(&a);
+        assert_eq!(d.stored_rows(), 2);
+        assert_eq!(d.row_ids, vec![0, 3]);
+        assert_eq!(d.to_csr(), a);
+    }
+
+    #[test]
+    fn roundtrip_random() {
+        let a = Csr::random(300, 200, 2.0, 41); // plenty of empty rows
+        assert!(a.empty_rows() > 0);
+        assert_eq!(Dcsr::from_csr(&a).to_csr(), a);
+    }
+
+    #[test]
+    fn heavy_light_split_partitions_nnz() {
+        let a = Csr::random(200, 300, 8.0, 43);
+        let (heavy, light) = Dcsr::split_heavy_light(&a, 8);
+        assert_eq!(heavy.nnz() + light.nnz(), a.nnz());
+        // recombining reproduces the dense matrix
+        let mut dense = heavy.to_dense();
+        let dl = light.to_csr().to_dense();
+        for (x, y) in dense.iter_mut().zip(dl) {
+            *x += y;
+        }
+        assert_eq!(dense, a.to_dense());
+        // all heavy rows really are >= threshold
+        for i in 0..heavy.m {
+            let l = heavy.row_len(i);
+            assert!(l == 0 || l >= 8);
+        }
+    }
+}

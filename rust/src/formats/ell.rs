@@ -1,0 +1,139 @@
+//! ELLPACK padded format — both a baseline format in its own right
+//! (ELLPACK-R, Ortega et al. [16]) and the static-shape *device view* the
+//! row-split AOT kernel consumes.
+
+use super::Csr;
+
+/// ELL: every row padded to a fixed width. Row-major `m × width` arrays.
+/// Padding entries have `col_idx = 0`, `vals = 0.0` (the paper's "dummy
+/// column index"), plus the ELLPACK-R style `row_len` array so executors
+/// can skip padding.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Ell {
+    pub m: usize,
+    pub k: usize,
+    pub width: usize,
+    /// `m × width`, row-major.
+    pub col_idx: Vec<u32>,
+    /// `m × width`, row-major.
+    pub vals: Vec<f32>,
+    /// true (unpadded) length of each row — the "-R" in ELLPACK-R.
+    pub row_len: Vec<u32>,
+}
+
+impl Ell {
+    /// CSR → ELL with width = max row length rounded up to `pad_to`.
+    pub fn from_csr(csr: &Csr, pad_to: usize) -> Self {
+        let pad_to = pad_to.max(1);
+        let max_len = csr.max_row_length();
+        let width = (max_len.max(1)).div_ceil(pad_to) * pad_to;
+        Self::from_csr_padded(csr, width).expect("width >= max row length")
+    }
+
+    /// CSR → ELL with an explicit width (the AOT bucket's ELL width).
+    /// Errors if any row exceeds `width`.  Bit-identical layout to Python
+    /// `formats.csr_to_ell`.
+    pub fn from_csr_padded(csr: &Csr, width: usize) -> Result<Self, String> {
+        let max_len = csr.max_row_length();
+        if max_len > width {
+            return Err(format!("row length {max_len} exceeds ELL width {width}"));
+        }
+        let mut col_idx = vec![0u32; csr.m * width];
+        let mut vals = vec![0.0f32; csr.m * width];
+        let mut row_len = vec![0u32; csr.m];
+        for i in 0..csr.m {
+            let (cols, vs) = csr.row(i);
+            col_idx[i * width..i * width + cols.len()].copy_from_slice(cols);
+            vals[i * width..i * width + vs.len()].copy_from_slice(vs);
+            row_len[i] = cols.len() as u32;
+        }
+        Ok(Self {
+            m: csr.m,
+            k: csr.k,
+            width,
+            col_idx,
+            vals,
+            row_len,
+        })
+    }
+
+    /// ELL → CSR (drops padding using `row_len`).
+    pub fn to_csr(&self) -> Csr {
+        let mut row_ptr = vec![0usize; self.m + 1];
+        for i in 0..self.m {
+            row_ptr[i + 1] = row_ptr[i] + self.row_len[i] as usize;
+        }
+        let nnz = row_ptr[self.m];
+        let mut col_idx = Vec::with_capacity(nnz);
+        let mut vals = Vec::with_capacity(nnz);
+        for i in 0..self.m {
+            let s = i * self.width;
+            let l = self.row_len[i] as usize;
+            col_idx.extend_from_slice(&self.col_idx[s..s + l]);
+            vals.extend_from_slice(&self.vals[s..s + l]);
+        }
+        Csr::new(self.m, self.k, row_ptr, col_idx, vals).expect("valid by construction")
+    }
+
+    /// Padding overhead ratio: stored entries / true nonzeros.  The reason
+    /// ELL loses to CSR on irregular matrices (one long row blows up every
+    /// row's storage).
+    pub fn padding_overhead(&self) -> f64 {
+        let true_nnz: usize = self.row_len.iter().map(|&l| l as usize).sum();
+        if true_nnz == 0 {
+            return if self.m == 0 { 1.0 } else { f64::INFINITY };
+        }
+        (self.m * self.width) as f64 / true_nnz as f64
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.m * self.width * 8 + self.m * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let a = Csr::random(100, 120, 7.0, 21);
+        let ell = Ell::from_csr(&a, 8);
+        assert_eq!(ell.width % 8, 0);
+        assert_eq!(ell.to_csr(), a);
+    }
+
+    #[test]
+    fn explicit_width_too_small_errors() {
+        let a = Csr::random(50, 100, 10.0, 22);
+        let max = a.max_row_length();
+        assert!(Ell::from_csr_padded(&a, max - 1).is_err());
+        assert!(Ell::from_csr_padded(&a, max).is_ok());
+    }
+
+    #[test]
+    fn padding_layout() {
+        let a = Csr::new(2, 4, vec![0, 1, 3], vec![2, 0, 3], vec![5.0, 1.0, 2.0]).unwrap();
+        let ell = Ell::from_csr_padded(&a, 4).unwrap();
+        assert_eq!(ell.col_idx, vec![2, 0, 0, 0, 0, 3, 0, 0]);
+        assert_eq!(ell.vals, vec![5.0, 0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 0.0]);
+        assert_eq!(ell.row_len, vec![1, 2]);
+    }
+
+    #[test]
+    fn overhead_blows_up_with_one_long_row() {
+        // 63 rows of 1 nonzero + 1 row of 64 → width 64, overhead ≈ 32×
+        let mut row_ptr = vec![0usize];
+        let mut col_idx = Vec::new();
+        for i in 0..63 {
+            col_idx.push((i % 64) as u32);
+            row_ptr.push(col_idx.len());
+        }
+        col_idx.extend(0..64u32);
+        row_ptr.push(col_idx.len());
+        let vals = vec![1.0f32; col_idx.len()];
+        let a = Csr::new(64, 64, row_ptr, col_idx, vals).unwrap();
+        let ell = Ell::from_csr(&a, 1);
+        assert!(ell.padding_overhead() > 20.0);
+    }
+}

@@ -1,0 +1,176 @@
+//! Matrix Market I/O — so the suite can also run on *real* SuiteSparse
+//! downloads (the paper's 157 datasets are `.mtx` files).
+//!
+//! Supports the `matrix coordinate (real|integer|pattern) (general|symmetric)`
+//! subset, which covers the SuiteSparse collection.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::path::Path;
+
+use super::{Coo, Csr};
+
+/// Parse a Matrix Market stream into CSR.
+pub fn read_mm<R: Read>(reader: R) -> Result<Csr, String> {
+    let mut lines = BufReader::new(reader).lines();
+    let header = lines
+        .next()
+        .ok_or("empty file")?
+        .map_err(|e| e.to_string())?;
+    let h: Vec<&str> = header.split_whitespace().collect();
+    if h.len() < 5 || !h[0].starts_with("%%MatrixMarket") {
+        return Err(format!("bad header: {header}"));
+    }
+    if h[1] != "matrix" || h[2] != "coordinate" {
+        return Err(format!("unsupported object/format: {header}"));
+    }
+    let field = h[3]; // real | integer | pattern
+    let symmetry = h[4]; // general | symmetric
+    if !matches!(field, "real" | "integer" | "pattern") {
+        return Err(format!("unsupported field: {field}"));
+    }
+    if !matches!(symmetry, "general" | "symmetric") {
+        return Err(format!("unsupported symmetry: {symmetry}"));
+    }
+
+    // skip comments, read size line
+    let mut size_line = None;
+    for line in lines.by_ref() {
+        let line = line.map_err(|e| e.to_string())?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        size_line = Some(t.to_string());
+        break;
+    }
+    let size_line = size_line.ok_or("missing size line")?;
+    let dims: Vec<usize> = size_line
+        .split_whitespace()
+        .map(|s| s.parse().map_err(|e| format!("bad size '{s}': {e}")))
+        .collect::<Result<_, _>>()?;
+    if dims.len() != 3 {
+        return Err(format!("bad size line: {size_line}"));
+    }
+    let (m, k, nnz_decl) = (dims[0], dims[1], dims[2]);
+
+    let mut entries: Vec<(u32, u32, f32)> = Vec::with_capacity(nnz_decl);
+    for line in lines {
+        let line = line.map_err(|e| e.to_string())?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let i: usize = it
+            .next()
+            .ok_or("short entry")?
+            .parse()
+            .map_err(|e| format!("bad row: {e}"))?;
+        let j: usize = it
+            .next()
+            .ok_or("short entry")?
+            .parse()
+            .map_err(|e| format!("bad col: {e}"))?;
+        let v: f32 = if field == "pattern" {
+            1.0
+        } else {
+            it.next()
+                .ok_or("missing value")?
+                .parse()
+                .map_err(|e| format!("bad val: {e}"))?
+        };
+        if i == 0 || j == 0 || i > m || j > k {
+            return Err(format!("entry ({i},{j}) out of range {m}×{k}"));
+        }
+        entries.push((i as u32 - 1, j as u32 - 1, v));
+        if symmetry == "symmetric" && i != j {
+            entries.push((j as u32 - 1, i as u32 - 1, v));
+        }
+    }
+    entries.sort_unstable_by_key(|&(r, c, _)| (r, c));
+    let coo = Coo {
+        m,
+        k,
+        row_idx: entries.iter().map(|e| e.0).collect(),
+        col_idx: entries.iter().map(|e| e.1).collect(),
+        vals: entries.iter().map(|e| e.2).collect(),
+    };
+    coo.to_csr()
+}
+
+/// Read a `.mtx` file into CSR.
+pub fn read_mm_file<P: AsRef<Path>>(path: P) -> Result<Csr, String> {
+    let f = std::fs::File::open(path.as_ref())
+        .map_err(|e| format!("{}: {e}", path.as_ref().display()))?;
+    read_mm(f)
+}
+
+/// Write CSR as `matrix coordinate real general`.
+pub fn write_mm<W: Write>(csr: &Csr, mut w: W) -> std::io::Result<()> {
+    writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(w, "{} {} {}", csr.m, csr.k, csr.nnz())?;
+    for i in 0..csr.m {
+        let (cols, vals) = csr.row(i);
+        for (&c, &v) in cols.iter().zip(vals) {
+            writeln!(w, "{} {} {}", i + 1, c + 1, v)?;
+        }
+    }
+    Ok(())
+}
+
+/// Write CSR to a `.mtx` file.
+pub fn write_mm_file<P: AsRef<Path>>(csr: &Csr, path: P) -> std::io::Result<()> {
+    write_mm(csr, std::fs::File::create(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let a = Csr::random(60, 80, 4.0, 51);
+        let mut buf = Vec::new();
+        write_mm(&a, &mut buf).unwrap();
+        let b = read_mm(&buf[..]).unwrap();
+        assert_eq!(a.m, b.m);
+        assert_eq!(a.k, b.k);
+        assert_eq!(a.nnz(), b.nnz());
+        let (da, db) = (a.to_dense(), b.to_dense());
+        for (x, y) in da.iter().zip(&db) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn pattern_and_symmetric() {
+        let text = "%%MatrixMarket matrix coordinate pattern symmetric\n\
+                    % a comment\n\
+                    3 3 2\n\
+                    2 1\n\
+                    3 3\n";
+        let a = read_mm(text.as_bytes()).unwrap();
+        assert_eq!(a.m, 3);
+        // (2,1) mirrored to (1,2); (3,3) diagonal not mirrored
+        assert_eq!(a.nnz(), 3);
+        let d = a.to_dense();
+        assert_eq!(d[1 * 3 + 0], 1.0);
+        assert_eq!(d[0 * 3 + 1], 1.0);
+        assert_eq!(d[2 * 3 + 2], 1.0);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(read_mm("not a matrix".as_bytes()).is_err());
+        assert!(read_mm("%%MatrixMarket matrix array real general\n1 1\n1".as_bytes()).is_err());
+        let oob = "%%MatrixMarket matrix coordinate real general\n2 2 1\n5 1 1.0\n";
+        assert!(read_mm(oob.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn integer_field() {
+        let text = "%%MatrixMarket matrix coordinate integer general\n2 2 1\n1 2 7\n";
+        let a = read_mm(text.as_bytes()).unwrap();
+        assert_eq!(a.to_dense(), vec![0.0, 7.0, 0.0, 0.0]);
+    }
+}

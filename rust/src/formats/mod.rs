@@ -1,0 +1,31 @@
+//! Sparse matrix formats and conversions (paper §2.2).
+//!
+//! The paper's central format argument: deviating from CSR costs a
+//! conversion pass (often more expensive than the SpMM itself) plus a
+//! second resident copy of the matrix.  This module implements CSR as the
+//! canonical format, the alternatives the paper discusses — COO, CSC,
+//! ELLPACK(-R), SELL-P (the MAGMA baseline of Fig. 5), and DCSR (the
+//! Hong et al. heavy/light split) — and the conversions between them, with
+//! flop/byte accounting so the conversion-cost argument can be *measured*
+//! (see `benches/` and `bench::conversion`).
+//!
+//! The static-shape device views the AOT kernels consume (padded ELL and
+//! flat COO) are produced by [`Ell::from_csr_padded`] and
+//! [`Coo::flatten_padded`] — bit-identical to the Python
+//! `compile/kernels/formats.py` counterparts (tested in
+//! `rust/tests/parity.rs`).
+
+pub mod coo;
+pub mod csc;
+pub mod csr;
+pub mod dcsr;
+pub mod ell;
+pub mod mm;
+pub mod sellp;
+
+pub use coo::Coo;
+pub use csc::Csc;
+pub use csr::Csr;
+pub use dcsr::Dcsr;
+pub use ell::Ell;
+pub use sellp::SellP;

@@ -1,0 +1,166 @@
+//! SELL-P (padded sliced ELLPACK) — the MAGMA baseline of Fig. 5
+//! (Anzt, Tomov, Dongarra [17]).
+//!
+//! The matrix is cut into slices of `slice_height` rows; each slice is
+//! ELL-packed to its *own* width (the slice's max row length, rounded up to
+//! `pad_align` so warp-sized thread blocks stay aligned).  Far less padding
+//! than plain ELL on irregular matrices, but still vulnerable to a long row
+//! inside a slice — which is exactly why the paper's CSR-native kernels
+//! beat it on the Fig. 5 dataset mix.
+
+use super::Csr;
+
+/// SELL-P sliced storage. Slice `s` occupies
+/// `slice_ptr[s] .. slice_ptr[s+1]` in `col_idx`/`vals`, stored
+/// **column-major within the slice** (lane-friendly, as on the GPU):
+/// entry (row r, position p) of slice s lives at
+/// `slice_ptr[s] + p * height_s + (r - s*slice_height)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SellP {
+    pub m: usize,
+    pub k: usize,
+    pub slice_height: usize,
+    /// per-slice ELL width (padded to `pad_align`)
+    pub slice_width: Vec<usize>,
+    /// offsets into col_idx/vals per slice (+1 trailing)
+    pub slice_ptr: Vec<usize>,
+    pub col_idx: Vec<u32>,
+    pub vals: Vec<f32>,
+    pub row_len: Vec<u32>,
+}
+
+impl SellP {
+    pub fn num_slices(&self) -> usize {
+        self.slice_width.len()
+    }
+
+    /// CSR → SELL-P.
+    pub fn from_csr(csr: &Csr, slice_height: usize, pad_align: usize) -> Self {
+        let slice_height = slice_height.max(1);
+        let pad_align = pad_align.max(1);
+        let num_slices = csr.m.div_ceil(slice_height).max(if csr.m == 0 { 0 } else { 1 });
+        let mut slice_width = Vec::with_capacity(num_slices);
+        let mut slice_ptr = vec![0usize];
+        for s in 0..num_slices {
+            let r0 = s * slice_height;
+            let r1 = (r0 + slice_height).min(csr.m);
+            let wmax = (r0..r1).map(|i| csr.row_len(i)).max().unwrap_or(0);
+            let w = wmax.div_ceil(pad_align).max(1) * pad_align;
+            slice_width.push(w);
+            let height = r1 - r0;
+            slice_ptr.push(slice_ptr.last().unwrap() + w * height);
+        }
+        let total = *slice_ptr.last().unwrap_or(&0);
+        let mut col_idx = vec![0u32; total];
+        let mut vals = vec![0.0f32; total];
+        let mut row_len = vec![0u32; csr.m];
+        for s in 0..num_slices {
+            let r0 = s * slice_height;
+            let r1 = (r0 + slice_height).min(csr.m);
+            let height = r1 - r0;
+            let base = slice_ptr[s];
+            for r in r0..r1 {
+                let (cols, vs) = csr.row(r);
+                row_len[r] = cols.len() as u32;
+                for (p, (&c, &v)) in cols.iter().zip(vs).enumerate() {
+                    let off = base + p * height + (r - r0);
+                    col_idx[off] = c;
+                    vals[off] = v;
+                }
+            }
+        }
+        Self {
+            m: csr.m,
+            k: csr.k,
+            slice_height,
+            slice_width,
+            slice_ptr,
+            col_idx,
+            vals,
+            row_len,
+        }
+    }
+
+    /// SELL-P → CSR.
+    pub fn to_csr(&self) -> Csr {
+        let mut row_ptr = vec![0usize; self.m + 1];
+        for i in 0..self.m {
+            row_ptr[i + 1] = row_ptr[i] + self.row_len[i] as usize;
+        }
+        let nnz = row_ptr[self.m];
+        let mut col_idx = Vec::with_capacity(nnz);
+        let mut vals = Vec::with_capacity(nnz);
+        for r in 0..self.m {
+            let s = r / self.slice_height;
+            let r0 = s * self.slice_height;
+            let r1 = (r0 + self.slice_height).min(self.m);
+            let height = r1 - r0;
+            let base = self.slice_ptr[s];
+            for p in 0..self.row_len[r] as usize {
+                let off = base + p * height + (r - r0);
+                col_idx.push(self.col_idx[off]);
+                vals.push(self.vals[off]);
+            }
+        }
+        Csr::new(self.m, self.k, row_ptr, col_idx, vals).expect("valid by construction")
+    }
+
+    /// Stored entries / true nonzeros.
+    pub fn padding_overhead(&self) -> f64 {
+        let true_nnz: usize = self.row_len.iter().map(|&l| l as usize).sum();
+        let stored = *self.slice_ptr.last().unwrap_or(&0);
+        if true_nnz == 0 {
+            return if stored == 0 { 1.0 } else { f64::INFINITY };
+        }
+        stored as f64 / true_nnz as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let a = Csr::random(130, 90, 6.0, 31);
+        for &(h, p) in &[(8usize, 4usize), (32, 1), (16, 8), (1, 1)] {
+            let s = SellP::from_csr(&a, h, p);
+            assert_eq!(s.to_csr(), a, "slice_height={h} pad={p}");
+        }
+    }
+
+    #[test]
+    fn less_padding_than_ell_on_skewed_rows() {
+        // one long row per 64 — SELL-P pads only its slice
+        let mut row_ptr = vec![0usize];
+        let mut col_idx: Vec<u32> = Vec::new();
+        for i in 0..256 {
+            let l = if i == 0 { 64 } else { 2 };
+            for j in 0..l {
+                col_idx.push(j as u32);
+            }
+            row_ptr.push(col_idx.len());
+        }
+        let vals = vec![1.0f32; col_idx.len()];
+        let a = Csr::new(256, 64, row_ptr, col_idx, vals).unwrap();
+        let sell = SellP::from_csr(&a, 8, 1);
+        let ell = super::super::Ell::from_csr(&a, 1);
+        assert!(sell.padding_overhead() < ell.padding_overhead());
+    }
+
+    #[test]
+    fn ragged_tail_slice() {
+        let a = Csr::random(37, 50, 3.0, 33); // 37 % 8 != 0
+        let s = SellP::from_csr(&a, 8, 4);
+        assert_eq!(s.to_csr(), a);
+        assert_eq!(s.num_slices(), 5);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let a = Csr::empty(0, 5);
+        let s = SellP::from_csr(&a, 8, 4);
+        assert_eq!(s.num_slices(), 0);
+        assert_eq!(s.padding_overhead(), 1.0);
+    }
+}

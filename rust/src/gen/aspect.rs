@@ -1,0 +1,85 @@
+//! Aspect-ratio sweep generators (Fig. 1 and Fig. 4).
+//!
+//! The paper's microbenchmark holds total nonzeros fixed (≈16.7M on the
+//! K40c; scaled down here) and sweeps the shape from "2 rows × 8.3M
+//! nonzeros per row" to "8.3M rows × 2 nonzeros per row".  The right side
+//! of the x-axis (many short rows per processor) exposes Type-1 imbalance
+//! in row-per-thread designs; the left side (few huge rows) exposes Type-2
+//! / starvation.
+
+use crate::formats::Csr;
+use crate::util::XorShift;
+
+/// A matrix with exactly `m` rows of exactly `row_len` nonzeros each at
+/// uniform-random distinct columns (k = max(row_len·2, 64) unless given).
+pub fn uniform_rows(m: usize, row_len: usize, k: Option<usize>, seed: u64) -> Csr {
+    let k = k.unwrap_or_else(|| (row_len * 2).max(64));
+    let row_len = row_len.min(k);
+    let mut rng = XorShift::new(seed);
+    let mut row_ptr = Vec::with_capacity(m + 1);
+    row_ptr.push(0);
+    let mut col_idx = Vec::with_capacity(m * row_len);
+    for _ in 0..m {
+        col_idx.extend(rng.distinct_sorted(row_len, k));
+        row_ptr.push(col_idx.len());
+    }
+    let mut vals = Vec::with_capacity(col_idx.len());
+    for _ in 0..col_idx.len() {
+        vals.push(rng.normal());
+    }
+    Csr::new(m, k, row_ptr, col_idx, vals).expect("valid by construction")
+}
+
+/// The Fig. 1/4 sweep: matrices with `total_nnz` nonzeros shaped
+/// `m × (total_nnz/m)` for m in powers of two from `2` up to
+/// `total_nnz / 2`.  Returns `(m, row_len, matrix)` triples.
+pub fn aspect_sweep(total_nnz: usize, seed: u64) -> Vec<(usize, usize, Csr)> {
+    let mut out = Vec::new();
+    let mut m = 2usize;
+    while m <= total_nnz / 2 {
+        let row_len = total_nnz / m;
+        out.push((m, row_len, uniform_rows(m, row_len, None, seed ^ m as u64)));
+        m *= 4; // quarter-decade steps keep the sweep affordable
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_rows_exact() {
+        let a = uniform_rows(50, 7, None, 91);
+        assert_eq!(a.m, 50);
+        assert_eq!(a.nnz(), 350);
+        for i in 0..a.m {
+            assert_eq!(a.row_len(i), 7);
+        }
+        assert_eq!(a.row_length_cv(), 0.0);
+    }
+
+    #[test]
+    fn row_len_capped_at_k() {
+        let a = uniform_rows(4, 100, Some(10), 92);
+        for i in 0..4 {
+            assert_eq!(a.row_len(i), 10);
+        }
+    }
+
+    #[test]
+    fn sweep_preserves_total_nnz() {
+        let sweep = aspect_sweep(1 << 14, 93);
+        assert!(sweep.len() >= 5);
+        for (m, row_len, a) in &sweep {
+            assert_eq!(a.m, *m);
+            assert_eq!(a.nnz(), m * row_len);
+            // within 2x of requested total (integer division)
+            assert!(a.nnz() <= 1 << 14);
+            assert!(a.nnz() > 1 << 13);
+        }
+        // endpoints: few long rows … many short rows
+        assert_eq!(sweep.first().unwrap().0, 2);
+        assert!(sweep.last().unwrap().1 <= 8);
+    }
+}

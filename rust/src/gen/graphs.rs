@@ -1,0 +1,124 @@
+//! Graph-topology generators spanning the paper's dataset spectrum
+//! (§5.1: "small-degree large-diameter (road network) to scale-free").
+
+use crate::formats::Csr;
+use crate::util::XorShift;
+
+/// Erdős–Rényi-ish G(n, d/n): every row gets ~Poisson(d) distinct columns.
+pub fn erdos_renyi(n: usize, avg_degree: f64, seed: u64) -> Csr {
+    Csr::random(n, n, avg_degree, seed)
+}
+
+/// Scale-free graph: row lengths drawn from a Pareto distribution with
+/// shape `alpha` (smaller alpha → heavier tail → more Type-1 imbalance).
+pub fn power_law(n: usize, alpha: f64, max_degree: usize, seed: u64) -> Csr {
+    let mut rng = XorShift::new(seed);
+    let cap = max_degree.min(n).max(1);
+    let mut row_ptr = Vec::with_capacity(n + 1);
+    row_ptr.push(0usize);
+    let lens: Vec<usize> = (0..n).map(|_| rng.pareto(alpha, cap)).collect();
+    for &l in &lens {
+        row_ptr.push(row_ptr.last().unwrap() + l);
+    }
+    let nnz = *row_ptr.last().unwrap();
+    let mut col_idx = Vec::with_capacity(nnz);
+    let mut vals = Vec::with_capacity(nnz);
+    for &l in &lens {
+        col_idx.extend(rng.distinct_sorted(l, n));
+        for _ in 0..l {
+            vals.push(rng.normal());
+        }
+    }
+    Csr::new(n, n, row_ptr, col_idx, vals).expect("valid by construction")
+}
+
+/// Road-network-like banded matrix: each row links to `degree` neighbours
+/// within a `bandwidth` diagonal band (small degree, large diameter).
+pub fn banded(n: usize, degree: usize, bandwidth: usize, seed: u64) -> Csr {
+    let mut rng = XorShift::new(seed);
+    let mut row_ptr = Vec::with_capacity(n + 1);
+    row_ptr.push(0usize);
+    let mut col_idx: Vec<u32> = Vec::with_capacity(n * degree);
+    let mut vals = Vec::with_capacity(n * degree);
+    for i in 0..n {
+        let lo = i.saturating_sub(bandwidth);
+        let hi = (i + bandwidth + 1).min(n);
+        let window = hi - lo;
+        let d = degree.min(window);
+        let picks = rng.distinct_sorted(d, window);
+        for p in picks {
+            col_idx.push((lo + p as usize) as u32);
+            vals.push(rng.normal());
+        }
+        row_ptr.push(col_idx.len());
+    }
+    Csr::new(n, n, row_ptr, col_idx, vals).expect("valid by construction")
+}
+
+/// Fixed-density random matrix for the Fig. 7 density sweep: each row has
+/// exactly `round(density·k)` nonzeros sampled without replacement (the
+/// paper's construction for the 100k×100k experiment).
+pub fn fixed_density(m: usize, k: usize, density: f64, seed: u64) -> Csr {
+    let per_row = ((density * k as f64).round() as usize).min(k);
+    let mut rng = XorShift::new(seed);
+    let mut row_ptr = Vec::with_capacity(m + 1);
+    row_ptr.push(0usize);
+    let mut col_idx = Vec::with_capacity(m * per_row);
+    let mut vals = Vec::with_capacity(m * per_row);
+    for _ in 0..m {
+        col_idx.extend(rng.distinct_sorted(per_row, k));
+        for _ in 0..per_row {
+            vals.push(rng.normal());
+        }
+        row_ptr.push(col_idx.len());
+    }
+    Csr::new(m, k, row_ptr, col_idx, vals).expect("valid by construction")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erdos_degree() {
+        let g = erdos_renyi(2000, 6.0, 101);
+        let d = g.mean_row_length();
+        assert!((4.5..7.5).contains(&d), "d = {d}");
+    }
+
+    #[test]
+    fn power_law_has_heavy_tail() {
+        let g = power_law(4000, 1.2, 512, 103);
+        // heavier irregularity than uniform
+        assert!(g.row_length_cv() > 0.8, "cv = {}", g.row_length_cv());
+        assert!(g.max_row_length() > 10 * g.mean_row_length() as usize);
+    }
+
+    #[test]
+    fn banded_stays_in_band() {
+        let g = banded(1000, 4, 8, 105);
+        for i in 0..g.m {
+            let (cols, _) = g.row(i);
+            for &c in cols {
+                let dist = (c as i64 - i as i64).abs();
+                assert!(dist <= 8, "row {i} col {c}");
+            }
+        }
+        // small-degree: cv near 0
+        assert!(g.row_length_cv() < 0.2);
+    }
+
+    #[test]
+    fn fixed_density_exact_fill() {
+        let g = fixed_density(100, 200, 0.05, 107);
+        assert_eq!(g.nnz(), 100 * 10);
+        let fill = g.nnz() as f64 / (g.m * g.k) as f64;
+        assert!((fill - 0.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn density_one_is_dense() {
+        let g = fixed_density(10, 16, 1.0, 109);
+        assert_eq!(g.nnz(), 160);
+    }
+}

@@ -1,0 +1,40 @@
+//! Synthetic matrix generators + the 157-matrix SuiteSparse-like suite.
+//!
+//! The paper evaluates on (a) a synthetic aspect-ratio sweep with fixed
+//! total nonzeros (Fig. 1, Fig. 4), (b) 157 matrices randomly sampled from
+//! the SuiteSparse collection spanning "small-degree large-diameter (road
+//! network) to scale-free" topologies (Fig. 5/6, §5.1), and (c) uniformly
+//! random matrices of fixed density (Fig. 7).  We have no SuiteSparse
+//! mirror in this environment, so [`suite`] synthesizes a seeded,
+//! reproducible 157-matrix population over the same topology spectrum —
+//! the properties the paper's results depend on (row-length mean d and
+//! irregularity) are swept explicitly.  Real `.mtx` files can be
+//! substituted via [`crate::formats::mm`] and the CLI's `--mtx-dir`.
+
+pub mod aspect;
+pub mod graphs;
+pub mod suite;
+
+pub use aspect::{aspect_sweep, uniform_rows};
+pub use graphs::{banded, erdos_renyi, fixed_density, power_law};
+pub use suite::{suite_157, Dataset, Topology};
+
+use crate::util::XorShift;
+
+/// Dense row-major matrix filled with deterministic normals — the
+/// tall-skinny B of every experiment.
+pub fn dense_matrix(rows: usize, cols: usize, seed: u64) -> Vec<f32> {
+    let mut rng = XorShift::new(seed);
+    (0..rows * cols).map(|_| rng.normal()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_matrix_deterministic() {
+        assert_eq!(dense_matrix(8, 4, 9), dense_matrix(8, 4, 9));
+        assert_ne!(dense_matrix(8, 4, 9), dense_matrix(8, 4, 10));
+    }
+}

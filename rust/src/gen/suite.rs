@@ -1,0 +1,244 @@
+//! The 157-matrix synthetic "SuiteSparse-like" suite (Fig. 5/6, §5.4).
+//!
+//! The paper samples 157 matrices at random from the SuiteSparse
+//! collection.  We synthesize a seeded population over the same topology
+//! spectrum — banded/road-like, Erdős–Rényi, scale-free power-law, and
+//! uniform-row — with sizes and mean row lengths `d` spanning the range
+//! the heuristic threshold (d = 9.35) must discriminate.  The suite is
+//! deterministic: `suite_157(seed)` always produces the same matrices, so
+//! EXPERIMENTS.md numbers are reproducible.
+//!
+//! Also provides the Fig. 5 sub-suites: 10 *long-row* datasets
+//! (d ≈ 62.5 in the paper) and 10 *short-row* datasets (d ≈ 7.92).
+
+use super::graphs::{banded, erdos_renyi, power_law};
+use super::aspect::uniform_rows;
+use crate::formats::Csr;
+
+/// Topology class of a synthetic dataset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    /// road-network-like: small degree, large diameter, banded
+    Banded,
+    /// Erdős–Rényi uniform random
+    Uniform,
+    /// scale-free power-law degree distribution
+    ScaleFree,
+    /// exact-row-length synthetic
+    Regular,
+}
+
+/// One dataset of the suite.
+pub struct Dataset {
+    pub name: String,
+    pub topology: Topology,
+    pub csr: Csr,
+}
+
+impl Dataset {
+    /// The heuristic feature d = nnz / m.
+    pub fn d(&self) -> f64 {
+        self.csr.mean_row_length()
+    }
+}
+
+/// The full 157-matrix suite, memoized per seed (generation costs tens of
+/// seconds at full scale and every figure harness walks it).  Sizes are
+/// scaled to ~10⁴–10⁵ rows — large enough that the K40c model is not
+/// launch/starvation-dominated, as the paper's SuiteSparse sample is not
+/// (DESIGN.md §Substitutions).
+pub fn suite_157(seed: u64) -> &'static [Dataset] {
+    use std::collections::HashMap;
+    use std::sync::{Mutex, OnceLock};
+    static CACHE: OnceLock<Mutex<HashMap<u64, &'static [Dataset]>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut guard = cache.lock().unwrap();
+    if let Some(&s) = guard.get(&seed) {
+        return s;
+    }
+    let built: &'static [Dataset] = Box::leak(build_suite_157(seed).into_boxed_slice());
+    guard.insert(seed, built);
+    built
+}
+
+fn build_suite_157(seed: u64) -> Vec<Dataset> {
+    let mut out = Vec::with_capacity(157);
+    let mut idx = 0usize;
+    let push = |out: &mut Vec<Dataset>, name: String, topology: Topology, csr: Csr| {
+        out.push(Dataset {
+            name,
+            topology,
+            csr,
+        });
+    };
+
+    // 40 banded road-like: d in 2..12
+    for i in 0..40 {
+        let n = 16_000 + (i % 8) * 8_000;
+        let degree = 2 + i % 10;
+        let s = seed ^ (0x1000 + idx as u64);
+        push(
+            &mut out,
+            format!("road_{i:02}_n{n}_d{degree}"),
+            Topology::Banded,
+            banded(n, degree, degree * 3 + 2, s),
+        );
+        idx += 1;
+    }
+    // 40 Erdős–Rényi: d in 1..39
+    for i in 0..40 {
+        let n = 12_000 + (i % 10) * 6_000;
+        let d = 1.0 + (i as f64 % 16.0) * 2.5;
+        let s = seed ^ (0x2000 + idx as u64);
+        push(
+            &mut out,
+            format!("er_{i:02}_n{n}_d{d:.0}"),
+            Topology::Uniform,
+            erdos_renyi(n, d, s),
+        );
+        idx += 1;
+    }
+    // 40 scale-free: alpha in 1.05..2.0, heavy Type-1 candidates
+    for i in 0..40 {
+        let n = 16_000 + (i % 6) * 9_000;
+        let alpha = 1.05 + (i as f64 % 10.0) * 0.1;
+        let s = seed ^ (0x3000 + idx as u64);
+        push(
+            &mut out,
+            format!("sf_{i:02}_n{n}_a{alpha:.2}"),
+            Topology::ScaleFree,
+            power_law(n, alpha, n / 4, s),
+        );
+        idx += 1;
+    }
+    // 37 regular synthetic: exact row lengths bracketing the 9.35 threshold
+    let lens = [
+        1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 14, 16, 20, 24, 28, 32, 40, 48, 56, 64, 80,
+        96, 112, 128, 160, 192, 224, 256, 320, 384, 448, 512, 33, 31, 65,
+    ];
+    for (i, &l) in lens.iter().enumerate() {
+        // target ≈ 256k nonzeros per matrix, bounded row counts
+        let m = (262_144 / l.max(1)).clamp(2_048, 32_768);
+        let s = seed ^ (0x4000 + idx as u64);
+        push(
+            &mut out,
+            format!("reg_{i:02}_len{l}"),
+            Topology::Regular,
+            uniform_rows(m, l, Some((l * 4).max(256)), s),
+        );
+        idx += 1;
+    }
+    assert_eq!(out.len(), 157);
+    out
+}
+
+/// Fig. 5(a): 10 long-row datasets — paper mean 62.5 nnz/row.
+pub fn long_row_10(seed: u64) -> Vec<Dataset> {
+    let lens = [40usize, 48, 56, 60, 64, 64, 72, 80, 96, 45];
+    lens.iter()
+        .enumerate()
+        .map(|(i, &l)| Dataset {
+            name: format!("long_{i:02}_len{l}"),
+            topology: Topology::Regular,
+            csr: uniform_rows(16_384, l, Some(l * 8), seed ^ (0x5000 + i as u64)),
+        })
+        .collect()
+}
+
+/// Fig. 5(b): 10 short-row datasets — paper mean 7.92 nnz/row.
+pub fn short_row_10(seed: u64) -> Vec<Dataset> {
+    let specs: [(f64, bool); 10] = [
+        (4.0, false),
+        (5.5, false),
+        (6.0, true),
+        (7.0, false),
+        (8.0, true),
+        (8.5, false),
+        (9.0, true),
+        (10.0, false),
+        (10.5, true),
+        (11.0, false),
+    ];
+    specs
+        .iter()
+        .enumerate()
+        .map(|(i, &(d, scale_free))| Dataset {
+            name: format!("short_{i:02}_d{d:.1}"),
+            topology: if scale_free {
+                Topology::ScaleFree
+            } else {
+                Topology::Uniform
+            },
+            csr: if scale_free {
+                power_law(24_000, 1.0 + d / 10.0, 1_600, seed ^ (0x6000 + i as u64))
+            } else {
+                erdos_renyi(24_000, d, seed ^ (0x6000 + i as u64))
+            },
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::geomean;
+
+    #[test]
+    fn exactly_157() {
+        let s = suite_157(42);
+        assert_eq!(s.len(), 157);
+        // names unique
+        let names: std::collections::BTreeSet<_> = s.iter().map(|d| d.name.clone()).collect();
+        assert_eq!(names.len(), 157);
+    }
+
+    #[test]
+    fn deterministic() {
+        // build twice (bypassing the memo cache) — must be identical
+        let a = build_suite_157(42);
+        let b = build_suite_157(42);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.csr, y.csr);
+        }
+    }
+
+    #[test]
+    fn spans_heuristic_threshold() {
+        let s = suite_157(42);
+        let below = s.iter().filter(|d| d.d() < 9.35).count();
+        let above = s.iter().filter(|d| d.d() >= 9.35).count();
+        assert!(below >= 30, "below = {below}");
+        assert!(above >= 30, "above = {above}");
+    }
+
+    #[test]
+    fn spans_irregularity() {
+        let s = suite_157(42);
+        let max_cv = s
+            .iter()
+            .map(|d| d.csr.row_length_cv())
+            .fold(0.0f64, f64::max);
+        let min_cv = s
+            .iter()
+            .map(|d| d.csr.row_length_cv())
+            .fold(f64::INFINITY, f64::min);
+        assert!(max_cv > 1.0, "no irregular matrices (max cv {max_cv})");
+        assert!(min_cv < 0.1, "no regular matrices (min cv {min_cv})");
+    }
+
+    #[test]
+    fn long_suite_mean_row_length() {
+        let l = long_row_10(42);
+        assert_eq!(l.len(), 10);
+        let d = geomean(&l.iter().map(|x| x.d()).collect::<Vec<_>>());
+        assert!((40.0..90.0).contains(&d), "long-row geomean d = {d}");
+    }
+
+    #[test]
+    fn short_suite_mean_row_length() {
+        let s = short_row_10(42);
+        assert_eq!(s.len(), 10);
+        let d = s.iter().map(|x| x.d()).sum::<f64>() / 10.0;
+        assert!((4.0..12.0).contains(&d), "short-row mean d = {d}");
+    }
+}

@@ -1,0 +1,41 @@
+//! # merge-spmm
+//!
+//! Reproduction of **"Design Principles for Sparse Matrix Multiplication on
+//! the GPU"** (Carl Yang, Aydın Buluç, John D. Owens — Euro-Par 2018).
+//!
+//! The paper contributes two CSR SpMM algorithms — *row-split* (one warp per
+//! sparse row, coalesced row-major access into the dense matrix) and
+//! *merge-based* (equal-nonzero two-phase decomposition with carry-out
+//! fix-up) — plus an `O(1)` heuristic (`d = nnz/m`) that picks between them
+//! with 99.3 % oracle accuracy, yielding a 31.7 % geomean / 4.1× peak
+//! speedup over cuSPARSE csrmm2 on 157 SuiteSparse matrices.
+//!
+//! This crate is the Layer-3 (serve-time) half of a three-layer stack:
+//!
+//! * **L1/L2 (build time, Python)** — Pallas kernels + JAX graphs, lowered
+//!   once to HLO text artifacts (`make artifacts`).
+//! * **L3 (this crate)** — everything the paper's system needs at serve
+//!   time, in Rust:
+//!   - [`formats`] — CSR/COO/CSC/ELL/SELL-P/DCSR + Matrix Market I/O,
+//!   - [`loadbalance`] — the abstracted load-balancing layer the paper's
+//!     future-work section calls for (row split, nonzero split, merge path),
+//!   - [`spmm`] — multi-threaded CPU executors for both algorithms, the
+//!     heuristic selector, baselines, and the Table-1 analytic model,
+//!   - [`sim`] — a K40c cost-model simulator that regenerates the paper's
+//!     figures (we have no K40c; see DESIGN.md §Substitutions),
+//!   - [`gen`] — matrix generators incl. the 157-matrix synthetic suite,
+//!   - [`runtime`] — PJRT CPU client running the AOT artifacts,
+//!   - [`coordinator`] — the serving engine: router, bucket batcher,
+//!     heuristic kernel selection, metrics,
+//!   - [`bench`] — harnesses that print every paper table/figure.
+
+// bench wired in after sim/runtime/coordinator land
+pub mod bench;
+pub mod coordinator;
+pub mod formats;
+pub mod gen;
+pub mod loadbalance;
+pub mod runtime;
+pub mod sim;
+pub mod spmm;
+pub mod util;

@@ -1,0 +1,189 @@
+//! Merge-path decomposition: equal *(rows + nonzeros)* per processor via a
+//! 2-D diagonal binary search (paper Fig. 2c; Merrill & Garland [14]).
+//!
+//! The CSR structure is viewed as a merge of two sorted lists — the row-end
+//! offsets `row_ptr[1..]` and the natural numbers `0..nnz` (nonzero
+//! indices).  Splitting the merge path at equally-spaced diagonals charges
+//! one unit for consuming a row *boundary* and one for consuming a
+//! *nonzero*, which is "an implicit assumption that a write to C has the
+//! same cost as a read from A and B" (§4) — and it solves the pathological
+//! case of unboundedly many empty rows, which nonzero-split walks serially.
+
+use super::{Partitioner, Segment};
+use crate::formats::Csr;
+
+/// Equal-(rows+nonzeros) partitioner.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MergePath;
+
+/// 2-D merge coordinate for `diagonal`: returns `(rows_consumed,
+/// nonzeros_consumed)` with `rows + nz = diagonal`, found by binary search
+/// on the diagonal (paper Fig. 2c's orange markers).
+pub fn merge_coord(csr: &Csr, diagonal: usize) -> (usize, usize) {
+    let nnz = csr.nnz();
+    let m = csr.m;
+    debug_assert!(diagonal <= m + nnz);
+    let mut lo = diagonal.saturating_sub(nnz);
+    let mut hi = diagonal.min(m);
+    // Invariant: the split consumes `x` row-ends and `diagonal - x`
+    // nonzeros; row-end i (value row_ptr[i+1]) is consumed before nonzero j
+    // iff row_ptr[i+1] <= j.
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        // Consuming row-end `mid` as the (mid+1)-th item requires its
+        // value <= the next nonzero index (diagonal - mid - 1).
+        if csr.row_ptr[mid + 1] <= diagonal - mid - 1 {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    (lo, diagonal - lo)
+}
+
+impl Partitioner for MergePath {
+    fn partition(&self, csr: &Csr, p: usize) -> Vec<Segment> {
+        let p = p.max(1);
+        let total = csr.m + csr.nnz();
+        if total == 0 {
+            return vec![];
+        }
+        let per = total.div_ceil(p);
+        let mut segs = Vec::with_capacity(p);
+        let (mut i0, mut j0) = (0usize, 0usize);
+        let mut d = 0usize;
+        while d < total {
+            let d1 = (d + per).min(total);
+            let (i1, j1) = merge_coord(csr, d1);
+            // Rows touched: [i0, …]. If the segment ends mid-row (j1 beyond
+            // the last fully consumed row-end), row i1 is partially touched.
+            let row_end = if j1 > csr.row_ptr[i1] { i1 + 1 } else { i1 };
+            segs.push(Segment {
+                row_start: i0,
+                row_end: row_end.max(i0),
+                nz_start: j0,
+                nz_end: j1,
+            });
+            (i0, j0) = (i1, j1);
+            d = d1;
+        }
+        // Ensure the final segment covers trailing rows (e.g. empty rows at
+        // the bottom consumed as row-ends only).
+        if let Some(last) = segs.last_mut() {
+            last.row_end = last.row_end.max(csr.m);
+        }
+        segs
+    }
+
+    fn name(&self) -> &'static str {
+        "merge-path"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loadbalance::validate_segments;
+
+    /// Linear-scan oracle for the merge coordinate.
+    fn merge_coord_oracle(csr: &Csr, diagonal: usize) -> (usize, usize) {
+        let (mut i, mut j) = (0usize, 0usize);
+        for _ in 0..diagonal {
+            if i < csr.m && csr.row_ptr[i + 1] <= j {
+                i += 1; // consume a row boundary
+            } else {
+                j += 1; // consume a nonzero
+            }
+        }
+        (i, j)
+    }
+
+    #[test]
+    fn merge_coord_matches_oracle() {
+        let csr = Csr::random(60, 50, 4.0, 81);
+        let total = csr.m + csr.nnz();
+        for d in 0..=total {
+            assert_eq!(
+                merge_coord(&csr, d),
+                merge_coord_oracle(&csr, d),
+                "diagonal {d}"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_coord_with_empty_rows() {
+        let csr = Csr::new(
+            5,
+            4,
+            vec![0, 0, 2, 2, 2, 3],
+            vec![1, 2, 0],
+            vec![1.0; 3],
+        )
+        .unwrap();
+        let total = csr.m + csr.nnz();
+        for d in 0..=total {
+            assert_eq!(merge_coord(&csr, d), merge_coord_oracle(&csr, d));
+        }
+    }
+
+    #[test]
+    fn partitions_cover_and_balance() {
+        let csr = Csr::random(400, 300, 6.0, 83);
+        for p in [1, 2, 7, 32, 128] {
+            let segs = MergePath.partition(&csr, p);
+            validate_segments(&csr, &segs).unwrap();
+            // merge-path balance: rows+nnz per segment within ceil
+            let per = (csr.m + csr.nnz()).div_ceil(p);
+            for s in &segs {
+                // each segment consumes <= per diagonal units (rows counted
+                // as fully-consumed row-ends, which is <= rows touched)
+                assert!(s.nnz() <= per, "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_row_pathology_balanced() {
+        // 10k empty rows + a few nonzeros: nonzero-split gives one segment
+        // a huge row walk; merge-path spreads the *rows* too.
+        let m = 10_000;
+        let mut row_ptr = vec![0usize; m + 1];
+        // 10 nonzeros all in the last row
+        row_ptr[m] = 10;
+        for i in (0..m).rev() {
+            if row_ptr[i + 1] != 0 && i + 1 != m {
+                break;
+            }
+        }
+        let csr = Csr::new(
+            m,
+            16,
+            row_ptr,
+            (0..10u32).collect(),
+            vec![1.0; 10],
+        )
+        .unwrap();
+        let segs = MergePath.partition(&csr, 8);
+        validate_segments(&csr, &segs).unwrap();
+        // rows spread across segments, not all on one
+        let max_rows = segs.iter().map(|s| s.rows()).max().unwrap();
+        assert!(max_rows < m, "one segment got all rows");
+        assert!(segs.len() > 1);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let csr = Csr::empty(0, 10);
+        assert!(MergePath.partition(&csr, 4).is_empty());
+    }
+
+    #[test]
+    fn single_processor_gets_everything() {
+        let csr = Csr::random(50, 50, 3.0, 85);
+        let segs = MergePath.partition(&csr, 1);
+        assert_eq!(segs.len(), 1);
+        assert_eq!(segs[0].nz_end, csr.nnz());
+        assert_eq!(segs[0].row_end, csr.m);
+    }
+}

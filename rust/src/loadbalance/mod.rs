@@ -1,0 +1,149 @@
+//! The abstracted load-balancing layer (paper §4 + §6 future work).
+//!
+//! The paper's closing ask: *"It would be interesting to discover how to
+//! abstract out the load balancing from the computation … the user would
+//! identify the quantities that are desirable for load balancing separately
+//! from the computation."*  This module is that library: the three CSR
+//! decompositions as interchangeable [`Partitioner`]s over a shared
+//! [`Segment`] work descriptor, independent of what the consumer computes.
+//!
+//! * [`RowSplit`] — equal *rows* per processor (§4, Fig. 2a). No phase-1
+//!   cost; vulnerable to Type-1 (a long row stalls its processor) and
+//!   Type-2 (short rows idle lanes) imbalance.
+//! * [`NonzeroSplit`] — equal *nonzeros* per processor via a 1-D binary
+//!   search on `row_ptr` (Baxter / Dalton et al., Fig. 2b).  Fixes Type-1,
+//!   but a processor landing inside a run of empty rows still pays a
+//!   row-walk.
+//! * [`MergePath`] — equal *(nonzeros + rows)* per processor via a 2-D
+//!   diagonal binary search (Merrill & Garland, Fig. 2c), treating the CSR
+//!   as a merge of the row-boundary list with the nonzero list; fixes the
+//!   infinitely-many-empty-rows pathology.
+//!
+//! Segments carry `(row, nnz-offset)` start/end coordinates; every
+//! partitioner guarantees the segments exactly tile the matrix (proptest in
+//! `rust/tests/loadbalance_props.rs`).
+
+pub mod mergepath;
+pub mod nzsplit;
+pub mod rowsplit;
+
+pub use mergepath::MergePath;
+pub use nzsplit::NonzeroSplit;
+pub use rowsplit::RowSplit;
+
+use crate::formats::Csr;
+
+/// A contiguous span of CSR work assigned to one processor:
+/// nonzeros `nz_start..nz_end`, beginning inside row `row_start` and ending
+/// inside row `row_end` (both inclusive bounds of the rows *touched*).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Segment {
+    /// first row this processor touches
+    pub row_start: usize,
+    /// one past the last row this processor touches
+    pub row_end: usize,
+    /// first nonzero index (global, into `col_idx`/`vals`)
+    pub nz_start: usize,
+    /// one past the last nonzero index
+    pub nz_end: usize,
+}
+
+impl Segment {
+    pub fn nnz(&self) -> usize {
+        self.nz_end - self.nz_start
+    }
+
+    pub fn rows(&self) -> usize {
+        self.row_end - self.row_start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nnz() == 0 && self.rows() == 0
+    }
+}
+
+/// A CSR work decomposition strategy.
+pub trait Partitioner {
+    /// Split `csr` into at most `p` segments that exactly tile the matrix:
+    /// non-overlapping by nonzero range, covering `[0, nnz)`, rows
+    /// monotonically non-decreasing across segments.
+    fn partition(&self, csr: &Csr, p: usize) -> Vec<Segment>;
+
+    /// Human-readable name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Validate the tiling invariants shared by all partitioners — used by
+/// tests and debug assertions.
+pub fn validate_segments(csr: &Csr, segs: &[Segment]) -> Result<(), String> {
+    let nnz = csr.nnz();
+    let mut expected_nz = 0usize;
+    let mut prev_row_end = 0usize;
+    for (i, s) in segs.iter().enumerate() {
+        if s.nz_start != expected_nz {
+            return Err(format!(
+                "segment {i}: nz_start {} != expected {expected_nz}",
+                s.nz_start
+            ));
+        }
+        if s.nz_end < s.nz_start {
+            return Err(format!("segment {i}: nz range reversed"));
+        }
+        if s.row_end < s.row_start {
+            return Err(format!("segment {i}: row range reversed"));
+        }
+        if s.row_start > csr.m || s.row_end > csr.m {
+            return Err(format!("segment {i}: rows out of range"));
+        }
+        if i > 0 && s.row_start < prev_row_end.saturating_sub(1) {
+            // A row may be *shared* (split across segments) but rows must
+            // not rewind past the previous segment's last touched row.
+            return Err(format!("segment {i}: rows rewind"));
+        }
+        expected_nz = s.nz_end;
+        prev_row_end = s.row_end;
+    }
+    if expected_nz != nnz {
+        return Err(format!("segments cover {expected_nz} of {nnz} nonzeros"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn segment_accessors() {
+        let s = Segment {
+            row_start: 2,
+            row_end: 5,
+            nz_start: 10,
+            nz_end: 25,
+        };
+        assert_eq!(s.nnz(), 15);
+        assert_eq!(s.rows(), 3);
+        assert!(!s.is_empty());
+    }
+
+    #[test]
+    fn validate_catches_gap() {
+        let csr = Csr::random(10, 10, 3.0, 1);
+        let nnz = csr.nnz();
+        let bad = vec![
+            Segment {
+                row_start: 0,
+                row_end: 5,
+                nz_start: 0,
+                nz_end: nnz / 2,
+            },
+            Segment {
+                row_start: 5,
+                row_end: 10,
+                nz_start: nnz / 2 + 1, // gap
+                nz_end: nnz,
+            },
+        ];
+        assert!(validate_segments(&csr, &bad).is_err());
+    }
+}

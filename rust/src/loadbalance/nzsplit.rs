@@ -1,0 +1,136 @@
+//! Nonzero-split decomposition: equal *nonzeros* per processor via 1-D
+//! binary search on `row_ptr` (paper Fig. 2b; Baxter's Modern GPU concept
+//! the paper extends to SpMM as "merge-based SpMM").
+//!
+//! Eliminates Type-1 imbalance: every processor gets exactly
+//! `ceil(nnz / p)` nonzeros (the last may get fewer).  Rows crossing a
+//! boundary are *shared* — the consumer must handle partial sums
+//! (carry-out, paper Algorithm 1 line 24).
+
+use super::{Partitioner, Segment};
+use crate::formats::Csr;
+
+/// Equal-nonzero partitioner.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NonzeroSplit;
+
+/// Largest row `r` with `row_ptr[r] <= nz` — the row containing nonzero
+/// `nz` (or the boundary row if `nz` sits exactly on a row start).
+/// This is the phase-1 binary search (paper Algorithm 1, line 2).
+pub fn row_of(csr: &Csr, nz: usize) -> usize {
+    // partition_point returns the first index where pred is false:
+    // row_ptr is non-decreasing, so this finds #{r : row_ptr[r] <= nz}.
+    let idx = csr.row_ptr.partition_point(|&off| off <= nz);
+    idx.saturating_sub(1).min(csr.m)
+}
+
+impl Partitioner for NonzeroSplit {
+    fn partition(&self, csr: &Csr, p: usize) -> Vec<Segment> {
+        let p = p.max(1);
+        let nnz = csr.nnz();
+        if nnz == 0 {
+            // Degenerate: no nonzeros — one empty segment covering all rows
+            // so row-oriented consumers still see the matrix.
+            return vec![Segment {
+                row_start: 0,
+                row_end: csr.m,
+                nz_start: 0,
+                nz_end: 0,
+            }];
+        }
+        let per = nnz.div_ceil(p);
+        let mut segs = Vec::with_capacity(p);
+        let mut nz = 0usize;
+        while nz < nnz {
+            let nz_end = (nz + per).min(nnz);
+            let row_start = row_of(csr, nz);
+            // row containing the last nonzero of this span
+            let last_row = row_of(csr, nz_end - 1);
+            segs.push(Segment {
+                row_start,
+                row_end: last_row + 1,
+                nz_start: nz,
+                nz_end,
+            });
+            nz = nz_end;
+        }
+        segs
+    }
+
+    fn name(&self) -> &'static str {
+        "nonzero-split"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loadbalance::{rowsplit::type1_imbalance, validate_segments};
+
+    #[test]
+    fn row_of_basics() {
+        let csr = Csr::new(
+            3,
+            4,
+            vec![0, 2, 2, 5],
+            vec![0, 1, 0, 1, 2],
+            vec![1.0; 5],
+        )
+        .unwrap();
+        assert_eq!(row_of(&csr, 0), 0);
+        assert_eq!(row_of(&csr, 1), 0);
+        // nz 2 starts row 2 (row 1 is empty) — row_of returns the *last*
+        // row whose offset <= 2, i.e. row 2
+        assert_eq!(row_of(&csr, 2), 2);
+        assert_eq!(row_of(&csr, 4), 2);
+    }
+
+    #[test]
+    fn equal_nonzeros_per_segment() {
+        let csr = Csr::random(500, 400, 7.0, 71);
+        for p in [1, 2, 5, 16, 64] {
+            let segs = NonzeroSplit.partition(&csr, p);
+            validate_segments(&csr, &segs).unwrap();
+            assert!(segs.len() <= p);
+            // Type-1 imbalance bounded by construction
+            assert!(type1_imbalance(&segs) < 1.5, "p={p}");
+            let per = csr.nnz().div_ceil(p);
+            for s in &segs[..segs.len() - 1] {
+                assert_eq!(s.nnz(), per);
+            }
+        }
+    }
+
+    #[test]
+    fn long_row_is_split() {
+        // the failure mode row-split cannot handle
+        let col_idx: Vec<u32> = (0..1000).collect();
+        let csr = Csr::new(1, 1024, vec![0, 1000], col_idx, vec![1.0; 1000]).unwrap();
+        let segs = NonzeroSplit.partition(&csr, 8);
+        assert_eq!(segs.len(), 8);
+        for s in &segs {
+            assert_eq!(s.row_start, 0);
+            assert_eq!(s.row_end, 1);
+            assert_eq!(s.nnz(), 125);
+        }
+    }
+
+    #[test]
+    fn all_empty_rows() {
+        let csr = Csr::empty(100, 10);
+        let segs = NonzeroSplit.partition(&csr, 4);
+        validate_segments(&csr, &segs).unwrap();
+        assert_eq!(segs.len(), 1);
+        assert_eq!(segs[0].rows(), 100);
+    }
+
+    #[test]
+    fn more_processors_than_nonzeros() {
+        let csr = Csr::random(10, 10, 1.0, 73);
+        let segs = NonzeroSplit.partition(&csr, 1000);
+        validate_segments(&csr, &segs).unwrap();
+        for s in &segs {
+            assert!(s.nnz() >= 1);
+        }
+    }
+}

@@ -1,0 +1,129 @@
+//! Row-split decomposition: equal *rows* per processor (paper Fig. 2a).
+//!
+//! Zero phase-1 cost (no search), which is why the paper's row-split SpMM
+//! wins whenever rows are long enough to amortize lane-level work — but a
+//! single long row lands entirely on one processor (Type-1 imbalance).
+
+use super::{Partitioner, Segment};
+use crate::formats::Csr;
+
+/// Equal-row partitioner. `granularity` rounds each processor's row count
+/// up to a multiple (the paper assigns rows to warps in CTA-sized groups).
+#[derive(Debug, Clone, Copy)]
+pub struct RowSplit {
+    pub granularity: usize,
+}
+
+impl Default for RowSplit {
+    fn default() -> Self {
+        Self { granularity: 1 }
+    }
+}
+
+impl RowSplit {
+    pub fn new(granularity: usize) -> Self {
+        Self {
+            granularity: granularity.max(1),
+        }
+    }
+}
+
+impl Partitioner for RowSplit {
+    fn partition(&self, csr: &Csr, p: usize) -> Vec<Segment> {
+        let p = p.max(1);
+        if csr.m == 0 {
+            return vec![];
+        }
+        let rows_per = csr
+            .m
+            .div_ceil(p)
+            .div_ceil(self.granularity)
+            .max(1)
+            * self.granularity;
+        let mut segs = Vec::with_capacity(csr.m.div_ceil(rows_per));
+        let mut r = 0usize;
+        while r < csr.m {
+            let r_end = (r + rows_per).min(csr.m);
+            segs.push(Segment {
+                row_start: r,
+                row_end: r_end,
+                nz_start: csr.row_ptr[r],
+                nz_end: csr.row_ptr[r_end],
+            });
+            r = r_end;
+        }
+        segs
+    }
+
+    fn name(&self) -> &'static str {
+        "row-split"
+    }
+}
+
+/// Type-1 imbalance measure for a decomposition: max segment nnz / mean
+/// segment nnz.  1.0 = perfectly balanced.  Used by the simulator and the
+/// Fig. 1 analysis.
+pub fn type1_imbalance(segs: &[Segment]) -> f64 {
+    if segs.is_empty() {
+        return 1.0;
+    }
+    let total: usize = segs.iter().map(|s| s.nnz()).sum();
+    let mean = total as f64 / segs.len() as f64;
+    if mean == 0.0 {
+        return 1.0;
+    }
+    let max = segs.iter().map(|s| s.nnz()).max().unwrap() as f64;
+    max / mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loadbalance::validate_segments;
+
+    #[test]
+    fn covers_matrix() {
+        let csr = Csr::random(100, 80, 5.0, 61);
+        for p in [1, 2, 3, 7, 32, 100, 1000] {
+            let segs = RowSplit::default().partition(&csr, p);
+            validate_segments(&csr, &segs).unwrap();
+            assert!(segs.len() <= p.max(1));
+            // row-split never splits a row
+            for s in &segs {
+                assert_eq!(s.nz_start, csr.row_ptr[s.row_start]);
+                assert_eq!(s.nz_end, csr.row_ptr[s.row_end]);
+            }
+        }
+    }
+
+    #[test]
+    fn granularity_respected() {
+        let csr = Csr::random(100, 80, 5.0, 62);
+        let segs = RowSplit::new(8).partition(&csr, 4);
+        for s in &segs[..segs.len() - 1] {
+            assert_eq!(s.rows() % 8, 0);
+        }
+    }
+
+    #[test]
+    fn long_row_causes_type1_imbalance() {
+        // 1 row of 1000 nonzeros + 99 rows of 1
+        let mut row_ptr = vec![0usize];
+        let mut col_idx: Vec<u32> = (0..1000).collect();
+        row_ptr.push(1000);
+        for i in 0..99 {
+            col_idx.push(i);
+            row_ptr.push(1000 + i as usize + 1);
+        }
+        let vals = vec![1.0; col_idx.len()];
+        let csr = Csr::new(100, 1024, row_ptr, col_idx, vals).unwrap();
+        let segs = RowSplit::default().partition(&csr, 10);
+        assert!(type1_imbalance(&segs) > 5.0);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let csr = Csr::empty(0, 10);
+        assert!(RowSplit::default().partition(&csr, 4).is_empty());
+    }
+}

@@ -1,0 +1,299 @@
+//! merge-spmm CLI — the leader entrypoint.
+//!
+//! ```text
+//! merge-spmm bench <fig1|table1|fig4|fig5a|fig5b|fig6|fig7|heuristic|all>
+//!            [--measured] [--seed N] [--out DIR]     regenerate paper figures
+//! merge-spmm run --mtx FILE [--n N] [--artifacts DIR]  SpMM one matrix
+//! merge-spmm serve [--requests N] [--workers W] [--cpu-only]
+//!                                                    demo serving workload
+//! merge-spmm suite [--seed N]                        dataset inventory
+//! merge-spmm info [--artifacts DIR]                  platform + artifacts
+//! ```
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use merge_spmm::bench;
+use merge_spmm::coordinator::{EngineConfig, Server, ServerConfig, SpmmEngine};
+use merge_spmm::formats::{mm, Csr};
+use merge_spmm::gen;
+use merge_spmm::runtime::Runtime;
+use merge_spmm::util::XorShift;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(String::as_str) {
+        Some("bench") => cmd_bench(&args[1..]),
+        Some("run") => cmd_run(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("suite") => cmd_suite(&args[1..]),
+        Some("info") => cmd_info(&args[1..]),
+        Some("help") | Some("--help") | Some("-h") | None => {
+            print!("{}", HELP);
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown command `{other}`\n{HELP}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+const HELP: &str = "\
+merge-spmm — CSR SpMM with row-split + merge-based kernels and the d=nnz/m heuristic
+           (reproduction of Yang, Buluç & Owens, Euro-Par 2018)
+
+USAGE:
+  merge-spmm bench <id|all> [--measured] [--seed N] [--out DIR]
+  merge-spmm run --mtx FILE [--n N] [--artifacts DIR] [--cpu-only]
+  merge-spmm serve [--requests N] [--workers W] [--cpu-only] [--artifacts DIR]
+  merge-spmm suite [--seed N]
+  merge-spmm info [--artifacts DIR]
+
+bench ids: fig1 table1 fig4 fig5a fig5b fig6 fig7 heuristic threshold conversion all
+";
+
+fn flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn opt(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+/// Positional argument: first token that is neither a flag nor a flag value.
+fn positional(args: &[String]) -> Option<&str> {
+    let mut skip = false;
+    for a in args {
+        if skip {
+            skip = false;
+            continue;
+        }
+        if a == "--seed" || a == "--out" || a == "--n" || a == "--mtx" || a == "--artifacts"
+            || a == "--requests" || a == "--workers"
+        {
+            skip = true;
+            continue;
+        }
+        if a.starts_with("--") {
+            continue;
+        }
+        return Some(a);
+    }
+    None
+}
+
+fn cmd_bench(args: &[String]) -> i32 {
+    let seed: u64 = opt(args, "--seed").and_then(|s| s.parse().ok()).unwrap_or(42);
+    let out: PathBuf = opt(args, "--out").unwrap_or_else(|| "results".into()).into();
+    let measured = flag(args, "--measured");
+    let which = positional(args).unwrap_or("all");
+
+    let mut reports = Vec::new();
+    let run = |id: &str, reports: &mut Vec<bench::FigureReport>| match id {
+        "fig1" => reports.push(bench::fig1(seed)),
+        "table1" => reports.push(bench::table1()),
+        "fig4" => reports.push(bench::fig4(seed, measured)),
+        "fig5a" => reports.push(bench::fig5a(seed)),
+        "fig5b" => reports.push(bench::fig5b(seed)),
+        "fig6" => reports.push(bench::fig6(seed)),
+        "fig7" => reports.push(bench::fig7(seed)),
+        "heuristic" => reports.push(bench::heuristic_eval(seed)),
+        "threshold" => reports.push(bench::threshold_sweep(seed)),
+        "conversion" => reports.push(bench::conversion_cost(seed)),
+        other => eprintln!("unknown bench id {other}"),
+    };
+    if which == "all" {
+        for id in [
+            "fig1", "table1", "fig4", "fig5a", "fig5b", "fig6", "fig7", "heuristic",
+            "threshold", "conversion",
+        ] {
+            run(id, &mut reports);
+        }
+    } else {
+        run(which, &mut reports);
+    }
+    if reports.is_empty() {
+        return 2;
+    }
+    for r in &reports {
+        println!("{r}");
+        match r.write_csv(&out) {
+            Ok(p) => println!("-> {}\n", p.display()),
+            Err(e) => eprintln!("(csv write failed: {e})"),
+        }
+    }
+    0
+}
+
+fn cmd_run(args: &[String]) -> i32 {
+    let Some(path) = opt(args, "--mtx") else {
+        eprintln!("run: --mtx FILE required");
+        return 2;
+    };
+    let n: usize = opt(args, "--n").and_then(|s| s.parse().ok()).unwrap_or(64);
+    let a = match mm::read_mm_file(&path) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("failed to read {path}: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "{path}: {}x{}, nnz {}, d = {:.2}, cv {:.2}, max row {}",
+        a.m,
+        a.k,
+        a.nnz(),
+        a.mean_row_length(),
+        a.row_length_cv(),
+        a.max_row_length()
+    );
+    let engine = match build_engine(args) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let b = gen::dense_matrix(a.k, n, 7);
+    match engine.spmm(&a, &b, n) {
+        Ok(r) => {
+            let gf = merge_spmm::util::gflops(a.nnz(), n, r.latency_s);
+            println!(
+                "algorithm {} via {:?}{} — {:.2} ms, {:.2} GFlop/s (CPU wallclock)",
+                r.algorithm,
+                r.path,
+                r.bucket.map(|b| format!(" [{b}]")).unwrap_or_default(),
+                r.latency_s * 1e3,
+                gf
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("spmm failed: {e}");
+            1
+        }
+    }
+}
+
+fn build_engine(args: &[String]) -> anyhow::Result<SpmmEngine> {
+    if flag(args, "--cpu-only") {
+        return Ok(SpmmEngine::cpu_only(merge_spmm::spmm::DEFAULT_THRESHOLD, 0));
+    }
+    let dir: PathBuf = opt(args, "--artifacts")
+        .unwrap_or_else(|| "artifacts".into())
+        .into();
+    SpmmEngine::new(EngineConfig {
+        artifacts_dir: Some(dir),
+        ..Default::default()
+    })
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let requests: usize = opt(args, "--requests").and_then(|s| s.parse().ok()).unwrap_or(200);
+    let workers: usize = opt(args, "--workers").and_then(|s| s.parse().ok()).unwrap_or(2);
+    let engine_cfg = if flag(args, "--cpu-only") {
+        EngineConfig {
+            artifacts_dir: None,
+            ..Default::default()
+        }
+    } else {
+        EngineConfig {
+            artifacts_dir: Some(
+                opt(args, "--artifacts").unwrap_or_else(|| "artifacts".into()).into(),
+            ),
+            ..Default::default()
+        }
+    };
+    let server = match Server::start(
+        engine_cfg,
+        ServerConfig {
+            workers,
+            ..Default::default()
+        },
+    ) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("server start failed: {e}");
+            return 1;
+        }
+    };
+    // mixed workload: short-row (merge) and long-row (row-split) matrices
+    let mut rng = XorShift::new(1);
+    let mats: Vec<Arc<Csr>> = (0..8)
+        .map(|i| {
+            Arc::new(if i % 2 == 0 {
+                Csr::random(1000, 1000, 4.0, 100 + i)
+            } else {
+                gen::uniform_rows(1000, 24, Some(1000), 100 + i)
+            })
+        })
+        .collect();
+    let b = Arc::new(gen::dense_matrix(1000, 64, 9));
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..requests)
+        .map(|_| {
+            let a = Arc::clone(&mats[rng.below(mats.len())]);
+            server.submit(a, Arc::clone(&b), 64)
+        })
+        .collect();
+    let mut ok = 0usize;
+    for h in handles {
+        if h.recv().map(|r| r.is_ok()).unwrap_or(false) {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = server.shutdown();
+    println!("served {ok}/{requests} in {wall:.2}s — {:.1} req/s", ok as f64 / wall);
+    println!("{snap}");
+    0
+}
+
+fn cmd_suite(args: &[String]) -> i32 {
+    let seed: u64 = opt(args, "--seed").and_then(|s| s.parse().ok()).unwrap_or(42);
+    let suite = gen::suite_157(seed);
+    println!("{} datasets (seed {seed})", suite.len());
+    println!(
+        "{:<24} {:>10} {:>12} {:>8} {:>8} {:>10}",
+        "name", "rows", "nnz", "d", "cv", "topology"
+    );
+    for ds in suite {
+        println!(
+            "{:<24} {:>10} {:>12} {:>8.2} {:>8.2} {:>10?}",
+            ds.name,
+            ds.csr.m,
+            ds.csr.nnz(),
+            ds.d(),
+            ds.csr.row_length_cv(),
+            ds.topology
+        );
+    }
+    0
+}
+
+fn cmd_info(args: &[String]) -> i32 {
+    let dir: PathBuf = opt(args, "--artifacts")
+        .unwrap_or_else(|| "artifacts".into())
+        .into();
+    match Runtime::load(&dir) {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            println!("artifacts ({}):", rt.manifest().artifacts.len());
+            for a in &rt.manifest().artifacts {
+                println!(
+                    "  {:<44} entry {:<14} out {:?}",
+                    a.name, a.entry, a.out_shape
+                );
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("runtime load failed: {e}\n(run `make artifacts` first?)");
+            1
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! PJRT client wrapper: compile each HLO artifact once, execute many times.
+//!
+//! Follows the /opt/xla-example/load_hlo pattern:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+//! Outputs are 1-tuples (lowered with `return_tuple=True`), unwrapped with
+//! `to_tuple1`.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{Artifact, Manifest};
+
+/// A compiled-and-loaded artifact registry backed by the PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Load every artifact in `dir` (compiles each once — takes a moment).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir).map_err(|e| anyhow!(e))?;
+        Self::load_with(manifest)
+    }
+
+    /// Load only artifacts whose name passes `filter` (faster startup for
+    /// examples that need one kernel).
+    pub fn load_filtered(dir: &Path, filter: impl Fn(&Artifact) -> bool) -> Result<Self> {
+        let mut manifest = Manifest::load(dir).map_err(|e| anyhow!(e))?;
+        manifest.artifacts.retain(|a| filter(a));
+        Self::load_with(manifest)
+    }
+
+    fn load_with(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        let mut executables = HashMap::new();
+        for art in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(&art.file)
+                .with_context(|| format!("parsing {}", art.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", art.name))?;
+            executables.insert(art.name.clone(), exe);
+        }
+        Ok(Self {
+            client,
+            manifest,
+            executables,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&Artifact> {
+        self.manifest.by_name(name)
+    }
+
+    /// Execute artifact `name` with the given literals; returns the f32
+    /// output buffer (row-major, the artifact's `out.shape`).
+    pub fn execute(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<f32>> {
+        let art = self
+            .manifest
+            .by_name(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        if args.len() != art.args.len() {
+            return Err(anyhow!(
+                "{name}: expected {} args, got {}",
+                art.args.len(),
+                args.len()
+            ));
+        }
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not loaded"))?;
+        let result = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?; // lowered with return_tuple=True
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Build an i32 literal of the given shape (single copy — §Perf: the
+    /// vec1+reshape path copies twice, measurable at serve rates).
+    pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+        let bytes = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S32,
+            shape,
+            bytes,
+        )?)
+    }
+
+    /// Build an f32 literal of the given shape (single copy).
+    pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+        let bytes = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            shape,
+            bytes,
+        )?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime execution is covered by rust/tests/runtime_integration.rs
+    // (requires `make artifacts`); unit-testable pieces live in
+    // manifest.rs and pad.rs.
+}

@@ -1,0 +1,219 @@
+//! `artifacts/manifest.json` parsing — the ABI between the Python AOT
+//! pipeline and the Rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One argument of an artifact's entry computation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ArgSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    /// path to the `.hlo.txt` file (absolute, resolved against the dir)
+    pub file: PathBuf,
+    pub sha256: String,
+    pub args: Vec<ArgSpec>,
+    pub out_shape: Vec<usize>,
+    /// entry kind: spmm_rowsplit | spmm_merge | spmv_* | gemm | gcn_fwd
+    pub entry: String,
+    /// bucket metadata (m, k, n, ell / nnz_pad, …)
+    pub meta: BTreeMap<String, usize>,
+}
+
+impl Artifact {
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).copied()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: Vec<Artifact>,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("{}: {e} (run `make artifacts` first)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text; artifact files resolve against `dir`.
+    pub fn parse(text: &str, dir: &Path) -> Result<Self, String> {
+        let v = Json::parse(text)?;
+        let format = v
+            .get("format")
+            .and_then(Json::as_str)
+            .ok_or("manifest missing format")?;
+        if format != "hlo-text-v1" {
+            return Err(format!("unsupported manifest format {format}"));
+        }
+        let arts = v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or("manifest missing artifacts")?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or("artifact missing name")?
+                .to_string();
+            let file = dir.join(
+                a.get("file")
+                    .and_then(Json::as_str)
+                    .ok_or("artifact missing file")?,
+            );
+            let sha256 = a
+                .get("sha256")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string();
+            let mut args = Vec::new();
+            for arg in a.get("args").and_then(Json::as_arr).ok_or("missing args")? {
+                args.push(ArgSpec {
+                    name: arg
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or("arg missing name")?
+                        .to_string(),
+                    shape: arg
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .ok_or("arg missing shape")?
+                        .iter()
+                        .map(|d| d.as_usize().ok_or("bad dim"))
+                        .collect::<Result<_, _>>()?,
+                    dtype: arg
+                        .get("dtype")
+                        .and_then(Json::as_str)
+                        .ok_or("arg missing dtype")?
+                        .to_string(),
+                });
+            }
+            let out_shape = a
+                .get("out")
+                .and_then(|o| o.get("shape"))
+                .and_then(Json::as_arr)
+                .ok_or("missing out.shape")?
+                .iter()
+                .map(|d| d.as_usize().ok_or("bad out dim"))
+                .collect::<Result<_, _>>()?;
+            let meta_obj = a.get("meta").ok_or("missing meta")?;
+            let entry = meta_obj
+                .get("entry")
+                .and_then(Json::as_str)
+                .ok_or("meta missing entry")?
+                .to_string();
+            let mut meta = BTreeMap::new();
+            if let Json::Obj(m) = meta_obj {
+                for (k, v) in m {
+                    if let Some(u) = v.as_usize() {
+                        meta.insert(k.clone(), u);
+                    }
+                }
+            }
+            artifacts.push(Artifact {
+                name,
+                file,
+                sha256,
+                args,
+                out_shape,
+                entry,
+                meta,
+            });
+        }
+        Ok(Self { artifacts })
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// All artifacts of a given entry kind.
+    pub fn by_entry<'a>(&'a self, entry: &'a str) -> impl Iterator<Item = &'a Artifact> {
+        self.artifacts.iter().filter(move |a| a.entry == entry)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text-v1",
+      "artifacts": [
+        {"name": "spmm_rowsplit_m1024_k1024_l32_n64",
+         "file": "spmm_rowsplit_m1024_k1024_l32_n64.hlo.txt",
+         "sha256": "ab",
+         "args": [
+           {"name": "col_idx", "shape": [1024, 32], "dtype": "int32"},
+           {"name": "vals", "shape": [1024, 32], "dtype": "float32"},
+           {"name": "b", "shape": [1024, 64], "dtype": "float32"}
+         ],
+         "out": {"shape": [1024, 64], "dtype": "float32"},
+         "meta": {"entry": "spmm_rowsplit", "m": 1024, "k": 1024, "ell": 32, "n": 64}}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/arts")).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.by_name("spmm_rowsplit_m1024_k1024_l32_n64").unwrap();
+        assert_eq!(a.entry, "spmm_rowsplit");
+        assert_eq!(a.args.len(), 3);
+        assert_eq!(a.args[0].shape, vec![1024, 32]);
+        assert_eq!(a.args[0].elements(), 1024 * 32);
+        assert_eq!(a.meta_usize("ell"), Some(32));
+        assert_eq!(a.out_shape, vec![1024, 64]);
+        assert!(a.file.starts_with("/tmp/arts"));
+        assert_eq!(m.by_entry("spmm_rowsplit").count(), 1);
+        assert_eq!(m.by_entry("gemm").count(), 0);
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let bad = SAMPLE.replace("hlo-text-v1", "hlo-proto");
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let bad = SAMPLE.replace("\"args\"", "\"nargs\"");
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // integration: parse the actual artifacts dir when it exists
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.by_entry("spmm_rowsplit").count() >= 1);
+            assert!(m.by_entry("spmm_merge").count() >= 1);
+            assert!(m.by_entry("gcn_fwd").count() >= 1);
+            for a in &m.artifacts {
+                assert!(a.file.exists(), "missing {}", a.file.display());
+            }
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! PJRT runtime: load + execute the AOT HLO artifacts from the serve path.
+//!
+//! Python runs once at build time (`make artifacts`); this module is the
+//! only consumer of its output.  Interchange is **HLO text** — the image's
+//! xla_extension 0.5.1 rejects jax ≥ 0.5 serialized protos (64-bit ids),
+//! while `HloModuleProto::from_text_file` reassigns ids and round-trips
+//! cleanly (see /opt/xla-example/README.md).
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (arg shapes/dtypes +
+//!   bucket metadata) with the in-crate JSON parser.
+//! * [`client`] — wraps `xla::PjRtClient`: compile each artifact once,
+//!   execute many times.
+//! * [`pad`] — selects the smallest AOT bucket a CSR matrix fits and
+//!   builds the padded ELL/COO literals the kernels expect.
+
+pub mod client;
+pub mod manifest;
+pub mod pad;
+
+pub use client::Runtime;
+pub use manifest::{ArgSpec, Artifact, Manifest};
+pub use pad::{pick_merge_bucket, pick_rowsplit_bucket, PaddedCoo, PaddedEll};

@@ -1,0 +1,259 @@
+//! Bucket selection + static-shape padding for the AOT artifacts.
+//!
+//! Executables have fixed shapes, so the engine pads each CSR matrix into
+//! the smallest bucket it fits:
+//!
+//! * row-split buckets are keyed by `(m, k, ell, n)` — the matrix fits if
+//!   `m ≤ bucket.m`, `k ≤ bucket.k`, `max_row_len ≤ bucket.ell`;
+//! * merge buckets are keyed by `(m, k, nnz_pad, n)` — fits if
+//!   `m ≤ bucket.m`, `k ≤ bucket.k`, `nnz ≤ bucket.nnz_pad`.
+//!
+//! Padding is value-neutral (dummy column 0 with value 0, dump row m) and
+//! bit-identical to the Python `formats.csr_to_ell` / `csr_to_coo`
+//! construction the kernels were validated against.
+
+use crate::formats::{Coo, Csr, Ell};
+
+use super::manifest::{Artifact, Manifest};
+
+/// ELL operands padded into a row-split bucket.
+#[derive(Debug)]
+pub struct PaddedEll {
+    /// bucket dims
+    pub m: usize,
+    pub k: usize,
+    pub ell: usize,
+    pub n: usize,
+    /// row-major `[m, ell]` i32
+    pub col_idx: Vec<i32>,
+    /// row-major `[m, ell]` f32
+    pub vals: Vec<f32>,
+    /// true rows of the original matrix (unpad slice)
+    pub true_m: usize,
+}
+
+/// Flat COO operands padded into a merge bucket.
+#[derive(Debug)]
+pub struct PaddedCoo {
+    pub m: usize,
+    pub k: usize,
+    pub nnz_pad: usize,
+    pub n: usize,
+    pub row_idx: Vec<i32>,
+    pub col_idx: Vec<i32>,
+    pub vals: Vec<f32>,
+    pub true_m: usize,
+}
+
+/// Smallest row-split bucket fitting `a` (by padded element count).
+pub fn pick_rowsplit_bucket<'m>(manifest: &'m Manifest, a: &Csr) -> Option<&'m Artifact> {
+    let max_len = a.max_row_length();
+    manifest
+        .by_entry("spmm_rowsplit")
+        .filter(|art| {
+            art.meta_usize("m").is_some_and(|m| a.m <= m)
+                && art.meta_usize("k").is_some_and(|k| a.k <= k)
+                && art.meta_usize("ell").is_some_and(|l| max_len <= l)
+        })
+        .min_by_key(|art| {
+            art.meta_usize("m").unwrap_or(usize::MAX) * art.meta_usize("ell").unwrap_or(usize::MAX)
+        })
+}
+
+/// Smallest merge bucket fitting `a`.
+pub fn pick_merge_bucket<'m>(manifest: &'m Manifest, a: &Csr) -> Option<&'m Artifact> {
+    manifest
+        .by_entry("spmm_merge")
+        .filter(|art| {
+            art.meta_usize("m").is_some_and(|m| a.m <= m)
+                && art.meta_usize("k").is_some_and(|k| a.k <= k)
+                && art.meta_usize("nnz_pad").is_some_and(|z| a.nnz() <= z)
+        })
+        .min_by_key(|art| {
+            art.meta_usize("m").unwrap_or(usize::MAX)
+                + art.meta_usize("nnz_pad").unwrap_or(usize::MAX)
+        })
+}
+
+/// Pad `a` into a row-split bucket's ELL operands.
+pub fn pad_ell(a: &Csr, art: &Artifact) -> Result<PaddedEll, String> {
+    let (bm, bk, bell, bn) = (
+        art.meta_usize("m").ok_or("bucket missing m")?,
+        art.meta_usize("k").ok_or("bucket missing k")?,
+        art.meta_usize("ell").ok_or("bucket missing ell")?,
+        art.meta_usize("n").ok_or("bucket missing n")?,
+    );
+    if a.m > bm || a.k > bk {
+        return Err(format!("matrix {}×{} exceeds bucket {bm}×{bk}", a.m, a.k));
+    }
+    let ell = Ell::from_csr_padded(a, bell)?;
+    // rows beyond a.m are all-padding
+    let mut col_idx = vec![0i32; bm * bell];
+    let mut vals = vec![0.0f32; bm * bell];
+    for (dst, src) in col_idx
+        .chunks_mut(bell)
+        .zip(ell.col_idx.chunks(ell.width))
+    {
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = s as i32;
+        }
+    }
+    vals[..a.m * bell].copy_from_slice(&ell.vals);
+    Ok(PaddedEll {
+        m: bm,
+        k: bk,
+        ell: bell,
+        n: bn,
+        col_idx,
+        vals,
+        true_m: a.m,
+    })
+}
+
+/// Pad `a` into a merge bucket's flat-COO operands.
+pub fn pad_coo(a: &Csr, art: &Artifact) -> Result<PaddedCoo, String> {
+    let (bm, bk, bz, bn) = (
+        art.meta_usize("m").ok_or("bucket missing m")?,
+        art.meta_usize("k").ok_or("bucket missing k")?,
+        art.meta_usize("nnz_pad").ok_or("bucket missing nnz_pad")?,
+        art.meta_usize("n").ok_or("bucket missing n")?,
+    );
+    if a.m > bm || a.k > bk {
+        return Err(format!("matrix {}×{} exceeds bucket {bm}×{bk}", a.m, a.k));
+    }
+    let flat = Coo::flatten_padded(a, bz)?;
+    // padding rows must point at the bucket's dump row (bm), not a.m
+    let row_idx: Vec<i32> = flat
+        .row_idx
+        .iter()
+        .map(|&r| if r as usize == a.m { bm as i32 } else { r as i32 })
+        .collect();
+    Ok(PaddedCoo {
+        m: bm,
+        k: bk,
+        nnz_pad: bz,
+        n: bn,
+        row_idx,
+        col_idx: flat.col_idx.iter().map(|&c| c as i32).collect(),
+        vals: flat.vals,
+        true_m: a.m,
+    })
+}
+
+/// Pad a row-major dense `k×n` matrix into the bucket's `bk×bn`.
+pub fn pad_dense(b: &[f32], k: usize, n: usize, bk: usize, bn: usize) -> Result<Vec<f32>, String> {
+    if k > bk || n > bn {
+        return Err(format!("dense {k}×{n} exceeds bucket {bk}×{bn}"));
+    }
+    let mut out = vec![0.0f32; bk * bn];
+    for i in 0..k {
+        out[i * bn..i * bn + n].copy_from_slice(&b[i * n..(i + 1) * n]);
+    }
+    Ok(out)
+}
+
+/// Extract the true `m×n` result from the bucket's `bm×bn` output.
+pub fn unpad_output(out: &[f32], bm: usize, bn: usize, m: usize, n: usize) -> Vec<f32> {
+    debug_assert!(out.len() >= bm * bn);
+    let mut res = vec![0.0f32; m * n];
+    for i in 0..m {
+        res[i * n..(i + 1) * n].copy_from_slice(&out[i * bn..i * bn + n]);
+    }
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+    use std::path::Path;
+
+    fn manifest() -> Manifest {
+        let text = r#"{
+          "format": "hlo-text-v1",
+          "artifacts": [
+            {"name": "rs_small", "file": "a.hlo.txt", "sha256": "",
+             "args": [], "out": {"shape": [1024, 64], "dtype": "float32"},
+             "meta": {"entry": "spmm_rowsplit", "m": 1024, "k": 1024, "ell": 32, "n": 64}},
+            {"name": "rs_wide", "file": "b.hlo.txt", "sha256": "",
+             "args": [], "out": {"shape": [1024, 64], "dtype": "float32"},
+             "meta": {"entry": "spmm_rowsplit", "m": 1024, "k": 1024, "ell": 128, "n": 64}},
+            {"name": "rs_big", "file": "c.hlo.txt", "sha256": "",
+             "args": [], "out": {"shape": [4096, 64], "dtype": "float32"},
+             "meta": {"entry": "spmm_rowsplit", "m": 4096, "k": 4096, "ell": 32, "n": 64}},
+            {"name": "mg_small", "file": "d.hlo.txt", "sha256": "",
+             "args": [], "out": {"shape": [1024, 64], "dtype": "float32"},
+             "meta": {"entry": "spmm_merge", "m": 1024, "k": 1024, "nnz_pad": 16384, "n": 64}}
+          ]
+        }"#;
+        Manifest::parse(text, Path::new("/tmp")).unwrap()
+    }
+
+    #[test]
+    fn picks_smallest_fitting_rowsplit_bucket() {
+        let m = manifest();
+        let a = Csr::random(800, 900, 5.0, 1001); // max len likely < 32
+        if a.max_row_length() <= 32 {
+            assert_eq!(pick_rowsplit_bucket(&m, &a).unwrap().name, "rs_small");
+        }
+        // long rows → wide bucket
+        let long = crate::gen::uniform_rows(512, 100, Some(1000), 1002);
+        assert_eq!(pick_rowsplit_bucket(&m, &long).unwrap().name, "rs_wide");
+        // big matrix → big bucket
+        let big = Csr::random(3000, 3000, 4.0, 1003);
+        if big.max_row_length() <= 32 {
+            assert_eq!(pick_rowsplit_bucket(&m, &big).unwrap().name, "rs_big");
+        }
+    }
+
+    #[test]
+    fn no_bucket_fits() {
+        let m = manifest();
+        let huge = Csr::random(10_000, 10_000, 2.0, 1004);
+        assert!(pick_rowsplit_bucket(&m, &huge).is_none());
+        assert!(pick_merge_bucket(&m, &huge).is_none());
+    }
+
+    #[test]
+    fn pad_ell_layout() {
+        let m = manifest();
+        let a = Csr::new(2, 4, vec![0, 1, 3], vec![2, 0, 3], vec![5.0, 1.0, 2.0]).unwrap();
+        let art = pick_rowsplit_bucket(&m, &a).unwrap();
+        let p = pad_ell(&a, art).unwrap();
+        assert_eq!(p.m, 1024);
+        assert_eq!(p.ell, 32);
+        assert_eq!(p.true_m, 2);
+        assert_eq!(p.col_idx[0], 2);
+        assert_eq!(p.vals[0], 5.0);
+        assert_eq!(p.col_idx[32], 0);
+        assert_eq!(p.vals[32], 1.0);
+        assert_eq!(p.vals[33], 2.0);
+        // padding all zero
+        assert!(p.vals[2 * 32..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn pad_coo_dump_row_remapped() {
+        let m = manifest();
+        let a = Csr::new(2, 4, vec![0, 1, 3], vec![2, 0, 3], vec![5.0, 1.0, 2.0]).unwrap();
+        let art = pick_merge_bucket(&m, &a).unwrap();
+        let p = pad_coo(&a, art).unwrap();
+        assert_eq!(p.nnz_pad, 16384);
+        assert_eq!(&p.row_idx[..3], &[0, 1, 1]);
+        // padding rows point at the *bucket* dump row
+        assert!(p.row_idx[3..].iter().all(|&r| r == 1024));
+    }
+
+    #[test]
+    fn dense_pad_unpad_roundtrip() {
+        let b = crate::gen::dense_matrix(10, 8, 1005);
+        let padded = pad_dense(&b, 10, 8, 16, 12).unwrap();
+        assert_eq!(padded.len(), 16 * 12);
+        // embedded correctly
+        for i in 0..10 {
+            assert_eq!(&padded[i * 12..i * 12 + 8], &b[i * 8..(i + 1) * 8]);
+        }
+        let out = unpad_output(&padded, 16, 12, 10, 8);
+        assert_eq!(out, b);
+    }
+}

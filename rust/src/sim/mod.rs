@@ -1,0 +1,30 @@
+//! K40c cost-model simulator (DESIGN.md §Substitutions).
+//!
+//! We have no Tesla K40c, so the paper's *measured* figures are
+//! regenerated from a first-principles GPU cost model with K40c
+//! parameters.  The model combines:
+//!
+//! * **structural terms computed from the actual matrix** — warp counts,
+//!   per-warp work, Type-1 imbalance (work variance across SM slots),
+//!   Type-2 warp efficiency (lane utilization under divergence/short
+//!   rows), occupancy limits from register pressure, latency-hiding from
+//!   TLP×ILP (Little's-law concurrency), memory transactions at batch
+//!   granularity — these generate the *shape* of every figure; and
+//! * **per-kernel achieved-bandwidth efficiency constants** — the fraction
+//!   of peak DRAM bandwidth each access pattern can sustain (coalesced
+//!   row-major streaming vs. column-major strides vs. texture gathers).
+//!   These are calibration constants in lieu of microbenchmarks we cannot
+//!   run, documented per kernel in [`models`]; they set relative *levels*
+//!   (who wins by roughly what factor), never shapes.
+//!
+//! Everything downstream (Fig. 1, 4, 5, 6, 7 harnesses) consumes
+//! [`KernelReport`]s from this module.
+
+pub mod gpu;
+pub mod models;
+
+pub use gpu::{GpuSpec, KernelReport, WorkEstimate};
+pub use models::{
+    csrmm2_model, csrmm_model, cusparse_spmv_model, gemm_model, merge_model, rowsplit_model,
+    rowsplit_spmv_model, sellp_model, SpmmModel,
+};

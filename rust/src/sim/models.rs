@@ -1,0 +1,553 @@
+//! Per-kernel workload models.
+//!
+//! Each model maps (matrix, n) → [`WorkEstimate`] from the kernel's actual
+//! access pattern and decomposition, using the real matrix structure
+//! (row-length distribution, empty rows, slice padding).
+//!
+//! ### Calibrated achieved-bandwidth constants
+//!
+//! | kernel | `mem_efficiency` | rationale |
+//! |---|---|---|
+//! | row-split (ours)  | 0.85 | fully coalesced row-major streaming of A, B, C |
+//! | merge-based (ours)| 0.85 | same access pattern + flat nonzero stream |
+//! | csrmm             | 0.25 | column-major B: 32-lane strided gathers waste most of each transaction |
+//! | csrmm2            | 0.62 | row-major B coalesced, but column-major C + smem staging |
+//! | SELL-P            | 0.70 | slice-local gathers via texture path |
+//! | sgemm             | 0.90 | dense streaming, near-ideal |
+//!
+//! These stand in for microbenchmarks we cannot run on real hardware; all
+//! *shape* (who degrades where) comes from the structural terms.
+
+use crate::formats::{Csr, SellP};
+use crate::loadbalance::{Partitioner, RowSplit};
+
+use super::gpu::{simulate, GpuSpec, KernelReport, WorkEstimate};
+
+/// B-row L2 reuse factor: when many nonzeros share B rows (dense-ish
+/// matrices), gathered rows hit L2.  `nnz/k` is the mean reuse per B row;
+/// the cap reflects K40c L2 capacity (calibrated against the Fig. 7
+/// crossover).
+fn b_reuse(a: &Csr) -> f64 {
+    if a.k == 0 {
+        return 1.0;
+    }
+    ((a.nnz() as f64 / a.k as f64) / 32.0).clamp(1.0, 2.0)
+}
+
+/// Issue cost of one gathered B element, in FMA-lane-instruction
+/// equivalents.  Kepler has 32 LD/ST units per SM against 192 FMA lanes
+/// (6×), plus address setup — gather-heavy kernels are issue-bound on
+/// short rows, which is the physical mechanism behind the paper's
+/// d = 9.35 row-split/merge crossover (calibrated to land there).
+const GATHER_ISSUE: f64 = 12.0;
+
+/// Issue cost of the merge kernel's per-element segmented machinery
+/// (CSR→COO flatten lookup, head-flag computation, smem segmented scan,
+/// multi-CTA row writes), in FMA-lane equivalents per element-column.
+/// Row-split amortizes all of this across a register-resident row; merge
+/// pays it per nonzero — the paper's "merge path has more overhead than
+/// row split" (§5.3), calibrated to its Fig. 6a merge-vs-csrmm2 levels
+/// (merge's long-row asymptote sits below csrmm2, as the paper measures).
+/// Side effect: the Fig. 7 SpMM/GEMM crossover lands near 3–4 % instead
+/// of the paper's 9 % — recorded in EXPERIMENTS.md.
+const SCAN_ISSUE: f64 = 35.0;
+
+/// Type-1 cap: real kernels bound the damage of one pathological slot
+/// (tail CTAs finish and the SM picks up queued work; the cyclic-slot
+/// model over-serializes beyond this).  Calibrated so peak suite speedups
+/// land near the paper's 4.1× rather than unbounded.
+const TYPE1_CAP: f64 = 3.0;
+
+/// Type-1 imbalance of a row-granular decomposition: assign work quanta
+/// cyclically to SM warp slots and compare max vs mean *active*-slot work.
+/// (Starvation from having fewer units than slots is occupancy's job in
+/// [`super::gpu::simulate`]; this measures work-variance only.)
+fn type1_over_slots(work_per_unit: impl Iterator<Item = usize>, slots: usize) -> f64 {
+    let work: Vec<usize> = work_per_unit.collect();
+    let slots = slots.clamp(1, work.len().max(1));
+    let mut slot_work = vec![0u64; slots];
+    let mut total = 0u64;
+    for (i, &w) in work.iter().enumerate() {
+        slot_work[i % slots] += w as u64;
+        total += w as u64;
+    }
+    if total == 0 {
+        return 1.0;
+    }
+    let mean = total as f64 / slots as f64;
+    let max = *slot_work.iter().max().unwrap() as f64;
+    (max / mean).clamp(1.0, TYPE1_CAP)
+}
+
+/// A simulated SpMM kernel: name + model function.
+pub struct SpmmModel {
+    pub name: &'static str,
+    model: fn(&Csr, usize, &GpuSpec) -> WorkEstimate,
+}
+
+impl SpmmModel {
+    pub fn simulate(&self, a: &Csr, n: usize, gpu: &GpuSpec) -> KernelReport {
+        simulate(self.name, &(self.model)(a, n, gpu), gpu)
+    }
+}
+
+// ---------------------------------------------------------------- row-split
+
+fn rowsplit_estimate(a: &Csr, n: usize, gpu: &GpuSpec) -> WorkEstimate {
+    let nnz = a.nnz() as f64;
+    let bs = 32.0; // warp batch over the row
+    // batches per row: ceil(len/32), min 1 for non-empty rows
+    let mut batches = 0.0f64;
+    let mut useful = 0.0f64;
+    for i in 0..a.m {
+        let len = a.row_len(i) as f64;
+        if len > 0.0 {
+            batches += (len / bs).ceil();
+            useful += len;
+        }
+    }
+    let warp_eff = if batches > 0.0 {
+        (useful / (batches * bs)).clamp(0.01, 1.0)
+    } else {
+        1.0
+    };
+    let rf = b_reuse(a);
+    // Memory: A stream + one n-wide B-row gather per true nonzero + C once.
+    // Dummy lanes (rows shorter than the 32 batch) broadcast-load B row 0,
+    // which coalesces to a single cached transaction — nearly free on the
+    // memory side.  Their cost is *issue slots*: gathers are charged at
+    // batch granularity below.
+    let bytes = nnz * 8.0 + nnz * n as f64 * 4.0 / rf + (a.m * n) as f64 * 4.0;
+    // ILP: each warp issues min(len,32) independent B-row gathers per batch.
+    let d = a.mean_row_length();
+    let ilp = d.min(32.0).max(1.0);
+    // Type-1: warps (rows) land on SM warp slots cyclically; slot work =
+    // row batches.
+    let slots = gpu.sms * (gpu.max_warps_per_sm / 2); // 64-reg kernel → half residency
+    let type1 = type1_over_slots(
+        (0..a.m).map(|i| a.row_len(i).div_ceil(32).max(1)),
+        slots,
+    );
+    WorkEstimate {
+        flops: 2.0 * nnz * n as f64,
+        // FMA per useful element + gather issue at *batch* granularity
+        // (padded lanes occupy LD/ST slots — the Type-2 cost).
+        lane_instrs: nnz * n as f64 * 1.1 + batches * bs * n as f64 * GATHER_ISSUE,
+        bytes,
+        warps: a.m as f64 * (n as f64 / 32.0).max(1.0),
+        warp_efficiency: warp_eff,
+        ilp,
+        regs_per_thread: 64, // Table 1
+        type1,
+        launches: 1,
+        mem_efficiency: 0.85,
+    }
+}
+
+pub fn rowsplit_model() -> SpmmModel {
+    SpmmModel {
+        name: "rowsplit",
+        model: rowsplit_estimate,
+    }
+}
+
+// --------------------------------------------------------------- merge-based
+
+fn merge_estimate(a: &Csr, n: usize, _gpu: &GpuSpec) -> WorkEstimate {
+    let nnz = a.nnz() as f64;
+    let cta = 128.0; // paper's B
+    let t = 1.0; // paper's T for SpMM
+    let ctas = (nnz / (cta * t)).ceil().max(1.0);
+    let rf = b_reuse(a);
+    // Phase-1 partition search + row_ptr staging, flat A stream, B gathers,
+    // C writes, carry-out write/read per CTA, plus the Table-1 memory
+    // access overhead ncols·nnz/(B·T) (4 B accesses) — the §4.2 cost that
+    // scales with B.ncols and forces T = 1.
+    let bytes = (a.m + 1) as f64 * 4.0            // row_ptr (partition + staging)
+        + nnz * 8.0                                // A col+val
+        + nnz * n as f64 * 4.0 / rf                // B gathers (coalesced)
+        + (a.m * n) as f64 * 4.0                   // C
+        + ctas * n as f64 * 4.0 * 2.0              // carry-out write + fix-up read
+        + n as f64 * nnz / (cta * t) * 4.0; // Table-1 overhead
+    WorkEstimate {
+        flops: 2.0 * nnz * n as f64,
+        // FMA + flat gather issue (no padding) + per-element segmented
+        // machinery (see SCAN_ISSUE)
+        lane_instrs: nnz * n as f64 * (1.1 + GATHER_ISSUE + SCAN_ISSUE),
+        bytes,
+        warps: ctas * (cta / 32.0) * (n as f64 / 32.0).max(1.0),
+        warp_efficiency: 1.0, // flat nonzero stream: no divergence
+        ilp: 32.0,
+        regs_per_thread: 64, // Table 1 (T=1)
+        type1: 1.0,          // equal-nnz by construction
+        launches: 3,         // partition, main, fix-up
+        mem_efficiency: 0.85,
+    }
+}
+
+pub fn merge_model() -> SpmmModel {
+    SpmmModel {
+        name: "merge",
+        model: merge_estimate,
+    }
+}
+
+// ------------------------------------------------------------------- csrmm
+
+/// Divergence of thread-per-row execution: warps of 32 consecutive rows
+/// run at the speed of their longest row.
+fn thread_per_row_eff(a: &Csr) -> (f64, f64) {
+    // returns (warp_efficiency, padded_work_factor)
+    let mut useful = 0.0f64;
+    let mut padded = 0.0f64;
+    for g in (0..a.m).step_by(32) {
+        let hi = (g + 32).min(a.m);
+        let maxlen = (g..hi).map(|i| a.row_len(i)).max().unwrap_or(0) as f64;
+        let sum: usize = (g..hi).map(|i| a.row_len(i)).sum();
+        useful += sum as f64;
+        padded += maxlen * 32.0;
+    }
+    if padded == 0.0 {
+        (1.0, 1.0)
+    } else {
+        ((useful / padded).clamp(0.01, 1.0), padded / useful.max(1.0))
+    }
+}
+
+fn csrmm_estimate(a: &Csr, n: usize, gpu: &GpuSpec) -> WorkEstimate {
+    let nnz = a.nnz() as f64;
+    let (warp_eff, pad) = thread_per_row_eff(a);
+    let rf = b_reuse(a);
+    // Column-major B: each lane's gather is strided by k → uncoalesced,
+    // captured by the 0.25 achieved-bandwidth constant (not double-counted
+    // in bytes).
+    let bytes = nnz * 8.0 + nnz * n as f64 * 4.0 / rf + (a.m * n) as f64 * 4.0;
+    let warps = (a.m as f64 / 32.0).ceil();
+    let slots = gpu.sms * gpu.max_warps_per_sm;
+    let type1 = type1_over_slots(
+        (0..a.m).step_by(32).map(|g| {
+            let hi = (g + 32).min(a.m);
+            (g..hi).map(|i| a.row_len(i)).max().unwrap_or(0)
+        }),
+        slots,
+    );
+    WorkEstimate {
+        flops: 2.0 * nnz * n as f64,
+        // thread-per-row: divergence pads every lane to the warp's longest
+        // row (the ×pad factor)
+        lane_instrs: nnz * n as f64 * (1.1 + GATHER_ISSUE) * pad.min(3.0),
+        bytes,
+        warps,
+        warp_efficiency: warp_eff,
+        ilp: (n as f64 / 8.0).clamp(1.0, 4.0), // serial row walk, some j-loop overlap
+        regs_per_thread: 32,
+        type1,
+        launches: 1,
+        mem_efficiency: 0.25,
+    }
+}
+
+pub fn csrmm_model() -> SpmmModel {
+    SpmmModel {
+        name: "csrmm",
+        model: csrmm_estimate,
+    }
+}
+
+// ------------------------------------------------------------------ csrmm2
+
+fn csrmm2_estimate(a: &Csr, n: usize, gpu: &GpuSpec) -> WorkEstimate {
+    let nnz = a.nnz() as f64;
+    let (warp_eff, pad) = thread_per_row_eff(a);
+    let rf = b_reuse(a);
+    // Row-major B (coalesced via smem staging); column-major C is
+    // csrmm2's *native* output layout, so its write is coalesced (it is
+    // OUR kernels that would pay to emit column-major — §5.2's 3-4 GFlops
+    // note).
+    let bytes = nnz * 8.0 + nnz * n as f64 * 4.0 / rf + (a.m * n) as f64 * 4.0;
+    // threads tile (row × 4-wide column tile)
+    let warps = (a.m as f64 / 32.0).ceil() * (n as f64 / 4.0).max(1.0);
+    let slots = gpu.sms * ((gpu.max_warps_per_sm as f64 * 0.67) as usize);
+    let type1 = type1_over_slots(
+        (0..a.m).step_by(32).map(|g| {
+            let hi = (g + 32).min(a.m);
+            (g..hi).map(|i| a.row_len(i)).max().unwrap_or(0)
+        }),
+        slots,
+    );
+    WorkEstimate {
+        flops: 2.0 * nnz * n as f64,
+        // smem staging adds instruction overhead; divergence pads lanes
+        lane_instrs: nnz * n as f64 * (1.4 + GATHER_ISSUE) * pad.min(3.0),
+        bytes,
+        warps,
+        warp_efficiency: warp_eff,
+        ilp: 4.0, // column tiling gives modest overlap
+        regs_per_thread: 48,
+        type1,
+        launches: 1,
+        mem_efficiency: 0.62,
+    }
+}
+
+pub fn csrmm2_model() -> SpmmModel {
+    SpmmModel {
+        name: "csrmm2",
+        model: csrmm2_estimate,
+    }
+}
+
+// ------------------------------------------------------------------ SELL-P
+
+fn sellp_estimate(a: &Csr, n: usize, gpu: &GpuSpec) -> WorkEstimate {
+    let nnz = a.nnz() as f64;
+    let s = SellP::from_csr(a, 8, 4);
+    let stored = *s.slice_ptr.last().unwrap_or(&0) as f64;
+    let pad_factor = if nnz > 0.0 { stored / nnz } else { 1.0 };
+    let rf = b_reuse(a);
+    // Padded entries are loaded and multiplied; lane gathers are
+    // slice-local (partially coalesced → 0.70 achieved bandwidth).
+    let bytes = stored * 8.0 + stored * n as f64 * 4.0 / rf + (a.m * n) as f64 * 4.0;
+    let warps = (s.num_slices() as f64) * (n as f64 / 32.0).max(1.0);
+    let slots = gpu.sms * gpu.max_warps_per_sm / 2;
+    let type1 = type1_over_slots(
+        (0..s.num_slices()).map(|i| s.slice_width[i] * s.slice_height),
+        slots,
+    );
+    WorkEstimate {
+        flops: 2.0 * nnz * n as f64,
+        // padded entries occupy full FMA + gather issue slots
+        lane_instrs: stored * n as f64 * (1.2 + GATHER_ISSUE),
+        bytes,
+        warps,
+        warp_efficiency: (1.0 / pad_factor).clamp(0.01, 1.0),
+        ilp: 8.0,
+        regs_per_thread: 48,
+        type1,
+        launches: 1,
+        mem_efficiency: 0.70,
+    }
+}
+
+pub fn sellp_model() -> SpmmModel {
+    SpmmModel {
+        name: "sellp",
+        model: sellp_estimate,
+    }
+}
+
+// ------------------------------------------------------------------- GEMM
+
+/// Dense `cuBLAS sgemm`-like baseline for Fig. 7: `C[m×n] = A[m×k]·B[k×n]`
+/// with A treated dense.
+pub fn gemm_model(m: usize, k: usize, n: usize, gpu: &GpuSpec) -> KernelReport {
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    // well-tiled dense kernel: each operand streamed ~1.2×
+    let bytes = ((m * k + k * n + m * n) as f64) * 4.0 * 1.2;
+    let w = WorkEstimate {
+        flops,
+        // cuBLAS achieves ~75 % of peak on K40 sgemm — model as extra
+        // issue slots
+        lane_instrs: flops / 2.0 * (1.0 / 0.75),
+        bytes,
+        warps: (m as f64 / 64.0).max(1.0) * (n as f64 / 64.0).max(1.0) * 8.0,
+        warp_efficiency: 1.0,
+        ilp: 8.0,
+        regs_per_thread: 64,
+        type1: 1.0,
+        launches: 1,
+        mem_efficiency: 0.90,
+    };
+    simulate("sgemm", &w, gpu)
+}
+
+// ------------------------------------------------------------------- SpMV
+
+/// cuSPARSE-csrmv-like (CSR-vector, warp per row) for the Fig. 1 SpMV
+/// curve.
+pub fn cusparse_spmv_model(a: &Csr, gpu: &GpuSpec) -> KernelReport {
+    let nnz = a.nnz() as f64;
+    let mut batches = 0.0f64;
+    let mut useful = 0.0f64;
+    for i in 0..a.m {
+        let len = a.row_len(i) as f64;
+        if len > 0.0 {
+            batches += (len / 32.0).ceil();
+            useful += len;
+        }
+    }
+    let warp_eff = if batches > 0.0 {
+        (useful / (batches * 32.0)).clamp(0.01, 1.0)
+    } else {
+        1.0
+    };
+    let slots = gpu.sms * gpu.max_warps_per_sm;
+    let type1 = type1_over_slots((0..a.m).map(|i| a.row_len(i).div_ceil(32).max(1)), slots);
+    let w = WorkEstimate {
+        flops: 2.0 * nnz,
+        lane_instrs: batches * 32.0 * (1.1 + GATHER_ISSUE),
+        bytes: nnz * 8.0 + nnz * 4.0 * 4.0 + a.m as f64 * 4.0, // x gathers ~sector waste
+        warps: a.m as f64,
+        warp_efficiency: warp_eff,
+        ilp: 1.0, // Table 1: SpMV row-split has 1 independent x-load
+        regs_per_thread: 24,
+        type1,
+        launches: 1,
+        mem_efficiency: 0.70,
+    };
+    simulate("cusparse_spmv", &w, gpu)
+}
+
+/// Our row-split SpMV (Fig. 1 companion; Table-1 SpMV column).
+pub fn rowsplit_spmv_model(a: &Csr, gpu: &GpuSpec) -> KernelReport {
+    let r = cusparse_spmv_model(a, gpu);
+    // identical structure — the paper's own SpMV is not a contribution;
+    // reuse with our streaming efficiency
+    KernelReport {
+        name: "rowsplit_spmv",
+        ..r
+    }
+}
+
+// Convenience: evaluate the default zoo used by the figure harnesses.
+/// All five SpMM models in Fig. 5's comparison order.
+pub fn all_spmm_models() -> Vec<SpmmModel> {
+    vec![
+        rowsplit_model(),
+        merge_model(),
+        csrmm_model(),
+        csrmm2_model(),
+        sellp_model(),
+    ]
+}
+
+/// Work decomposition sanity helper (used in tests): batches assigned to
+/// SM slots by the row-split model.
+pub fn rowsplit_type1(a: &Csr, gpu: &GpuSpec) -> f64 {
+    let segs = RowSplit::default().partition(a, gpu.sms * 32);
+    crate::loadbalance::rowsplit::type1_imbalance(&segs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+
+    fn k40c() -> GpuSpec {
+        GpuSpec::k40c()
+    }
+
+    #[test]
+    fn long_rows_rowsplit_beats_baselines() {
+        // Fig. 5(a) regime: d ≈ 62.5
+        let g = k40c();
+        let a = gen::uniform_rows(8192, 62, Some(4096), 901);
+        let rs = rowsplit_model().simulate(&a, 64, &g);
+        let mm2 = csrmm2_model().simulate(&a, 64, &g);
+        let mm = csrmm_model().simulate(&a, 64, &g);
+        let sp = sellp_model().simulate(&a, 64, &g);
+        assert!(rs.gflops > mm2.gflops, "rs {} vs mm2 {}", rs.gflops, mm2.gflops);
+        assert!(rs.gflops > mm.gflops);
+        assert!(rs.gflops > sp.gflops);
+        // csrmm (column-major B) clearly worst of the vendor pair
+        assert!(mm2.gflops > mm.gflops);
+    }
+
+    #[test]
+    fn short_irregular_merge_beats_all() {
+        // Fig. 5(b) regime: short, irregular rows
+        let g = k40c();
+        let a = gen::power_law(20_000, 1.1, 2000, 903);
+        assert!(a.mean_row_length() < 12.0, "d = {}", a.mean_row_length());
+        let mg = merge_model().simulate(&a, 64, &g);
+        let rs = rowsplit_model().simulate(&a, 64, &g);
+        let mm2 = csrmm2_model().simulate(&a, 64, &g);
+        assert!(mg.gflops > rs.gflops, "mg {} vs rs {}", mg.gflops, rs.gflops);
+        assert!(mg.gflops > mm2.gflops);
+    }
+
+    #[test]
+    fn merge_overhead_on_regular_long_rows() {
+        // §5.3: merge-path "tends to be lower than row split" when
+        // balance isn't needed
+        let g = k40c();
+        let a = gen::uniform_rows(8192, 64, Some(4096), 905);
+        let mg = merge_model().simulate(&a, 64, &g);
+        let rs = rowsplit_model().simulate(&a, 64, &g);
+        assert!(rs.gflops > mg.gflops, "rs {} vs mg {}", rs.gflops, mg.gflops);
+    }
+
+    #[test]
+    fn type2_divergence_reported() {
+        let g = k40c();
+        // short rows: row-split warp efficiency collapses (Fig. 1)
+        let short = gen::uniform_rows(100_000, 2, Some(1024), 907);
+        let r = rowsplit_model().simulate(&short, 64, &g);
+        assert!(r.warp_efficiency < 0.1, "eff = {}", r.warp_efficiency);
+        // merge stays at 1.0
+        let m = merge_model().simulate(&short, 64, &g);
+        assert!((m.warp_efficiency - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn occupancy_matches_table1_registers() {
+        let g = k40c();
+        let a = gen::uniform_rows(100_000, 16, Some(1024), 909);
+        let r = rowsplit_model().simulate(&a, 64, &g);
+        // 64 regs/thread → 32 of 64 warps → 0.5
+        assert!((r.occupancy - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn starvation_at_tiny_row_counts() {
+        // Fig. 1 left edge: 2 rows × 8.3M nnz → SpMM starves
+        let g = k40c();
+        let a = gen::uniform_rows(2, 100_000, Some(200_000), 911);
+        let few = rowsplit_model().simulate(&a, 64, &g);
+        let b = gen::uniform_rows(4096, 64, Some(8192), 912);
+        let many = rowsplit_model().simulate(&b, 64, &g);
+        assert!(many.gflops > 3.0 * few.gflops);
+        assert!(few.occupancy < 0.02);
+    }
+
+    #[test]
+    fn gemm_near_compute_roofline() {
+        let g = k40c();
+        let r = gemm_model(4096, 4096, 64, &g);
+        assert!(!r.memory_bound);
+        // ~75 % of 4.29 TF
+        assert!(r.gflops > 2000.0 && r.gflops < 4290.0, "gemm {}", r.gflops);
+    }
+
+    #[test]
+    fn fig7_crossover_between_2_and_20_percent() {
+        let g = k40c();
+        let (m, k, n) = (4096, 4096, 64);
+        let gemm_t = gemm_model(m, k, n, &g).time_s;
+        let mut crossover = None;
+        for pct in 1..=30 {
+            let density = pct as f64 / 100.0;
+            let a = gen::fixed_density(m, k, density, 913 + pct as u64);
+            let t = merge_model().simulate(&a, n, &g).time_s;
+            if t > gemm_t {
+                crossover = Some(pct);
+                break;
+            }
+        }
+        let c = crossover.expect("no crossover found below 30%");
+        assert!(
+            (2..=20).contains(&c),
+            "crossover at {c}% (paper: 9%)"
+        );
+    }
+
+    #[test]
+    fn scale_free_type1_visible_in_rowsplit() {
+        let g = k40c();
+        let a = gen::power_law(30_000, 1.05, 5000, 915);
+        let rs = rowsplit_model().simulate(&a, 64, &g);
+        let mg = merge_model().simulate(&a, 64, &g);
+        assert!(rs.type1_imbalance > 1.5, "t1 = {}", rs.type1_imbalance);
+        assert!((mg.type1_imbalance - 1.0).abs() < 1e-9);
+    }
+}

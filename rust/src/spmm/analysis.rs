@@ -1,0 +1,254 @@
+//! Table 1 — the paper's analytic ILP / register / overhead model.
+//!
+//! For each (operation × algorithm) cell, the number of *independent
+//! instructions per GPU thread*, the register usage, and the extra memory
+//! accesses relative to row-split.  The defaults in the paper (shown in
+//! brackets in Table 1) are `T = 7` for merge-SpMV, `T = 1` for
+//! merge-SpMM, CTA size `B = 128`; these are reproduced by
+//! [`Table1::paper_defaults`] and pinned by tests.
+
+/// Tuning parameters of the analytic model.
+#[derive(Debug, Clone, Copy)]
+pub struct IlpParams {
+    /// work items per thread (merge-based T)
+    pub t: usize,
+    /// CTA size (threads)
+    pub cta: usize,
+    /// dense-matrix columns (SpMM n); 1 for SpMV
+    pub ncols: usize,
+}
+
+/// One Table-1 column: the per-thread instruction counts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IlpAnalysis {
+    /// independent reads of A.col_ind/A.val per thread
+    pub read_a: usize,
+    /// independent reads of x (SpMV) or B (SpMM) per thread
+    pub read_b: usize,
+    /// independent writes of y / C per thread
+    pub write_c: usize,
+    /// registers per thread
+    pub registers: usize,
+    /// extra global memory accesses vs row-split, as a function of nnz
+    /// (returns the count for a given nnz)
+    pub overhead_num: f64,
+    pub overhead_den: f64,
+}
+
+impl IlpAnalysis {
+    /// Extra memory accesses for a matrix with `nnz` nonzeros.
+    pub fn overhead(&self, nnz: usize) -> f64 {
+        if self.overhead_den == 0.0 {
+            return 0.0;
+        }
+        self.overhead_num * nnz as f64 / self.overhead_den
+    }
+}
+
+/// SpMV row-split column: 1 independent instruction everywhere, 2 regs.
+pub fn spmv_rowsplit() -> IlpAnalysis {
+    IlpAnalysis {
+        read_a: 1,
+        read_b: 1,
+        write_c: 1,
+        registers: 2,
+        overhead_num: 0.0,
+        overhead_den: 0.0,
+    }
+}
+
+/// SpMV merge-based column: T of everything, 2T regs, partition overhead
+/// nnz/(B·T).
+pub fn spmv_merge(p: IlpParams) -> IlpAnalysis {
+    IlpAnalysis {
+        read_a: p.t,
+        read_b: p.t,
+        write_c: p.t,
+        registers: 2 * p.t,
+        overhead_num: 1.0,
+        overhead_den: (p.cta * p.t) as f64,
+    }
+}
+
+/// SpMM row-split column: reading A is 1; B reads are L (row length mod
+/// batch, up to 32) independent coalesced loads; 64 registers to hold the
+/// 32-wide accumulator pair.
+pub fn spmm_rowsplit(row_len_mod: usize) -> IlpAnalysis {
+    let l = if row_len_mod == 0 {
+        32
+    } else {
+        row_len_mod.min(32)
+    };
+    IlpAnalysis {
+        read_a: 1,
+        read_b: l,
+        write_c: 1,
+        registers: 64,
+        overhead_num: 0.0,
+        overhead_den: 0.0,
+    }
+}
+
+/// SpMM merge-based column: 32T B-reads/C-writes, 64T registers, overhead
+/// ncols·nnz/(B·T) — the carry-out traffic that scales with B.ncols (§4.2).
+pub fn spmm_merge(p: IlpParams) -> IlpAnalysis {
+    IlpAnalysis {
+        read_a: p.t,
+        read_b: 32 * p.t,
+        write_c: 32 * p.t,
+        registers: 64 * p.t,
+        overhead_num: p.ncols as f64,
+        overhead_den: (p.cta * p.t) as f64,
+    }
+}
+
+/// The four Table-1 columns with the paper's defaults.
+#[derive(Debug, Clone)]
+pub struct Table1 {
+    pub spmv_rowsplit: IlpAnalysis,
+    pub spmv_merge: IlpAnalysis,
+    pub spmm_rowsplit: IlpAnalysis,
+    pub spmm_merge: IlpAnalysis,
+}
+
+impl Table1 {
+    /// Paper defaults: T=7 (SpMV), T=1 (SpMM), B=128, ncols=64… the table
+    /// itself uses ncols generic; the bracketed overhead `2·A.nnz` comes
+    /// from ncols=64? No — from ncols·nnz/(B·T) with B=128, T=1, ncols=256?
+    /// The paper brackets `(2A.nnz)` for SpMM merge overhead, i.e.
+    /// ncols/(B·T) = 2 with B=128, T=1 ⇒ ncols = 256 columns… but its
+    /// bench uses n=64; we pin the *formula*, and the bracketed instance
+    /// with ncols=256 as printed.
+    pub fn paper_defaults() -> Self {
+        Self {
+            spmv_rowsplit: spmv_rowsplit(),
+            spmv_merge: spmv_merge(IlpParams {
+                t: 7,
+                cta: 128,
+                ncols: 1,
+            }),
+            spmm_rowsplit: spmm_rowsplit(32),
+            spmm_merge: spmm_merge(IlpParams {
+                t: 1,
+                cta: 128,
+                ncols: 256,
+            }),
+        }
+    }
+
+    /// Render the table as aligned text rows (the `table1` bench target).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(
+            "operation                 | SpMV row-split | SpMV merge | SpMM row-split | SpMM merge\n",
+        );
+        let rows = [
+            (
+                "read A.col_ind & A.val",
+                self.spmv_rowsplit.read_a,
+                self.spmv_merge.read_a,
+                self.spmm_rowsplit.read_a,
+                self.spmm_merge.read_a,
+            ),
+            (
+                "read x / read B",
+                self.spmv_rowsplit.read_b,
+                self.spmv_merge.read_b,
+                self.spmm_rowsplit.read_b,
+                self.spmm_merge.read_b,
+            ),
+            (
+                "write y / write C",
+                self.spmv_rowsplit.write_c,
+                self.spmv_merge.write_c,
+                self.spmm_rowsplit.write_c,
+                self.spmm_merge.write_c,
+            ),
+            (
+                "register usage",
+                self.spmv_rowsplit.registers,
+                self.spmv_merge.registers,
+                self.spmm_rowsplit.registers,
+                self.spmm_merge.registers,
+            ),
+        ];
+        for (name, a, b, c, d) in rows {
+            s.push_str(&format!("{name:<26}| {a:<15}| {b:<11}| {c:<15}| {d}\n"));
+        }
+        s.push_str(&format!(
+            "mem overhead (nnz=896)    | {:<15}| {:<11.0}| {:<15}| {:.0}\n",
+            0,
+            self.spmv_merge.overhead(896),
+            0,
+            self.spmm_merge.overhead(896),
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults_match_table1() {
+        let t = Table1::paper_defaults();
+        // SpMV row-split: 1/1/1, 2 regs, 0 overhead
+        assert_eq!(t.spmv_rowsplit.read_a, 1);
+        assert_eq!(t.spmv_rowsplit.registers, 2);
+        assert_eq!(t.spmv_rowsplit.overhead(896), 0.0);
+        // SpMV merge T=7: 7/7/7, 14 regs, nnz/896 overhead
+        assert_eq!(t.spmv_merge.read_a, 7);
+        assert_eq!(t.spmv_merge.registers, 14);
+        assert!((t.spmv_merge.overhead(896) - 1.0).abs() < 1e-12);
+        // SpMM row-split: 1 A-read, 32 B-reads (default L), 64 regs
+        assert_eq!(t.spmm_rowsplit.read_a, 1);
+        assert_eq!(t.spmm_rowsplit.read_b, 32);
+        assert_eq!(t.spmm_rowsplit.write_c, 1);
+        assert_eq!(t.spmm_rowsplit.registers, 64);
+        // SpMM merge T=1: 1/32/32, 64 regs, 2·nnz overhead (bracketed)
+        assert_eq!(t.spmm_merge.read_a, 1);
+        assert_eq!(t.spmm_merge.read_b, 32);
+        assert_eq!(t.spmm_merge.write_c, 32);
+        assert_eq!(t.spmm_merge.registers, 64);
+        assert!((t.spmm_merge.overhead(896) - 2.0 * 896.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn row_length_sensitivity() {
+        // L = 33 → effective reads 1 (33 mod 32), the Type-2 penalty case
+        assert_eq!(spmm_rowsplit(33 % 32).read_b, 1);
+        // L divides 32 → full 32 independent loads
+        assert_eq!(spmm_rowsplit(64 % 32).read_b, 32);
+    }
+
+    #[test]
+    fn render_contains_all_rows() {
+        let s = Table1::paper_defaults().render();
+        for needle in [
+            "read A.col_ind",
+            "read x / read B",
+            "write y / write C",
+            "register usage",
+            "mem overhead",
+        ] {
+            assert!(s.contains(needle), "missing {needle}");
+        }
+    }
+
+    #[test]
+    fn overhead_scales_with_ncols() {
+        let small = spmm_merge(IlpParams {
+            t: 1,
+            cta: 128,
+            ncols: 4,
+        });
+        let large = spmm_merge(IlpParams {
+            t: 1,
+            cta: 128,
+            ncols: 32,
+        });
+        // §4.2: carry-out traffic scales with B.ncols
+        assert!(large.overhead(1000) > small.overhead(1000) * 7.9);
+    }
+}

@@ -1,0 +1,209 @@
+//! Baseline SpMM implementations the paper compares against (§5, Fig. 5–7).
+//!
+//! * [`csrmm`] — models cuSPARSE `csrmm`: **column-major** B and C, one
+//!   scalar "thread" per row.  Accesses into B are strided (the
+//!   uncoalesced pattern the paper's Fig. 3 analysis identifies as the
+//!   baseline's weakness).
+//! * [`csrmm2`] — models cuSPARSE `csrmm2`: row-major B, column-major C
+//!   output.
+//! * [`sellp_spmm`] — the MAGMA SELL-P kernel shape: slice-wise ELL walks.
+//!
+//! On the CPU these differ from the paper's kernels in loop order and
+//! stride (reuse and vectorization), mirroring — at cache-line rather than
+//! transaction granularity — the coalescing differences the [`crate::sim`]
+//! cost model charges for explicitly.
+
+use crate::formats::{Csr, SellP};
+
+use super::rowsplit::effective_workers;
+
+/// cuSPARSE-csrmm-like: B is `k×n` **column-major**, returns C `m×n`
+/// **column-major**.  Per row, per nonzero, B is walked with stride k —
+/// the unfriendly access pattern.
+pub fn csrmm(a: &Csr, b_colmajor: &[f32], n: usize, p: usize) -> Vec<f32> {
+    assert_eq!(b_colmajor.len(), a.k * n);
+    let p = effective_workers(p, a.m);
+    let mut c = vec![0.0f32; a.m * n]; // column-major: c[j*m + i]
+    if a.m == 0 || n == 0 {
+        return c;
+    }
+    let rows_per = a.m.div_ceil(p);
+    // Column-major C cannot be split into contiguous per-worker row chunks;
+    // hand out column panels instead and have every worker walk all rows —
+    // the "n independent SpMVs" structure of csrmm.
+    std::thread::scope(|scope| {
+        let mut rest: &mut [f32] = &mut c;
+        let _ = rows_per;
+        let cols_per = n.div_ceil(p).max(1);
+        let mut j0 = 0usize;
+        while j0 < n {
+            let j1 = (j0 + cols_per).min(n);
+            let (chunk, tail) = rest.split_at_mut((j1 - j0) * a.m);
+            rest = tail;
+            scope.spawn(move || {
+                for (jj, j) in (j0..j1).enumerate() {
+                    let bcol = &b_colmajor[j * a.k..(j + 1) * a.k];
+                    let ccol = &mut chunk[jj * a.m..(jj + 1) * a.m];
+                    for i in 0..a.m {
+                        let (cols, vals) = a.row(i);
+                        let mut acc = 0.0f32;
+                        for (&cidx, &v) in cols.iter().zip(vals) {
+                            acc += v * bcol[cidx as usize];
+                        }
+                        ccol[i] = acc;
+                    }
+                }
+            });
+            j0 = j1;
+        }
+    });
+    c
+}
+
+/// cuSPARSE-csrmm2-like: B is `k×n` **row-major**, returns C `m×n`
+/// **column-major** (the transpose-on-write the paper measured as a
+/// 3–4 GFlops loss for its own kernels).
+pub fn csrmm2(a: &Csr, b_rowmajor: &[f32], n: usize, p: usize) -> Vec<f32> {
+    assert_eq!(b_rowmajor.len(), a.k * n);
+    let p = effective_workers(p, a.m);
+    let mut c = vec![0.0f32; a.m * n]; // column-major
+    if a.m == 0 || n == 0 {
+        return c;
+    }
+    // Row-parallel compute into a row-major scratch, then transpose on
+    // write — mirrors csrmm2's internal tiling + transposed output.
+    let scratch = super::rowsplit::rowsplit_spmm(a, b_rowmajor, n, p);
+    for i in 0..a.m {
+        for j in 0..n {
+            c[j * a.m + i] = scratch[i * n + j];
+        }
+    }
+    c
+}
+
+/// MAGMA-SELL-P-like SpMM: B row-major, C row-major.  Walks each slice
+/// position-major (the GPU lane order), so short slices skip padding work
+/// only at slice granularity.
+pub fn sellp_spmm(s: &SellP, b: &[f32], n: usize, p: usize) -> Vec<f32> {
+    assert_eq!(b.len(), s.k * n);
+    let mut c = vec![0.0f32; s.m * n];
+    if s.m == 0 || n == 0 {
+        return c;
+    }
+    let num_slices = s.num_slices();
+    let p = effective_workers(p, num_slices);
+    let slices_per = num_slices.div_ceil(p).max(1);
+    std::thread::scope(|scope| {
+        let mut rest: &mut [f32] = &mut c;
+        let mut sl0 = 0usize;
+        while sl0 < num_slices {
+            let sl1 = (sl0 + slices_per).min(num_slices);
+            let r0 = sl0 * s.slice_height;
+            let r1 = (sl1 * s.slice_height).min(s.m);
+            let (chunk, tail) = rest.split_at_mut((r1 - r0) * n);
+            rest = tail;
+            scope.spawn(move || {
+                for sl in sl0..sl1 {
+                    let rs = sl * s.slice_height;
+                    let re = (rs + s.slice_height).min(s.m);
+                    let height = re - rs;
+                    let base = s.slice_ptr[sl];
+                    for pos in 0..s.slice_width[sl] {
+                        for r in rs..re {
+                            if (pos as u32) >= s.row_len[r] {
+                                continue;
+                            }
+                            let off = base + pos * height + (r - rs);
+                            let col = s.col_idx[off] as usize;
+                            let v = s.vals[off];
+                            let out = &mut chunk[(r - r0) * n..(r - r0 + 1) * n];
+                            let brow = &b[col * n..col * n + n];
+                            for (o, &bv) in out.iter_mut().zip(brow) {
+                                *o += v * bv;
+                            }
+                        }
+                    }
+                }
+            });
+            sl0 = sl1;
+        }
+    });
+    c
+}
+
+/// Transpose helpers for layout conversions in tests/benches.
+pub fn to_col_major(row_major: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * cols];
+    for i in 0..rows {
+        for j in 0..cols {
+            out[j * rows + i] = row_major[i * cols + j];
+        }
+    }
+    out
+}
+
+pub fn to_row_major(col_major: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * cols];
+    for i in 0..rows {
+        for j in 0..cols {
+            out[i * cols + j] = col_major[j * rows + i];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spmm::spmm_reference;
+
+    fn assert_close(a: &[f32], b: &[f32]) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()), "idx {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn csrmm_matches_reference() {
+        let a = Csr::random(120, 90, 6.0, 601);
+        let b = crate::gen::dense_matrix(90, 12, 602);
+        let want = spmm_reference(&a, &b, 12);
+        let b_cm = to_col_major(&b, 90, 12);
+        let got_cm = csrmm(&a, &b_cm, 12, 4);
+        assert_close(&to_row_major(&got_cm, 120, 12), &want);
+    }
+
+    #[test]
+    fn csrmm2_matches_reference() {
+        let a = Csr::random(120, 90, 6.0, 603);
+        let b = crate::gen::dense_matrix(90, 12, 604);
+        let want = spmm_reference(&a, &b, 12);
+        let got_cm = csrmm2(&a, &b, 12, 4);
+        assert_close(&to_row_major(&got_cm, 120, 12), &want);
+    }
+
+    #[test]
+    fn sellp_matches_reference() {
+        let a = Csr::random(200, 150, 7.0, 605);
+        let b = crate::gen::dense_matrix(150, 8, 606);
+        let want = spmm_reference(&a, &b, 8);
+        let s = SellP::from_csr(&a, 32, 4);
+        assert_close(&sellp_spmm(&s, &b, 8, 4), &want);
+    }
+
+    #[test]
+    fn sellp_irregular_rows() {
+        let a = crate::gen::power_law(500, 1.2, 100, 607);
+        let b = crate::gen::dense_matrix(500, 8, 608);
+        let want = spmm_reference(&a, &b, 8);
+        let s = SellP::from_csr(&a, 8, 1);
+        assert_close(&sellp_spmm(&s, &b, 8, 4), &want);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let x = crate::gen::dense_matrix(7, 5, 609);
+        assert_eq!(to_row_major(&to_col_major(&x, 7, 5), 7, 5), x);
+    }
+}

@@ -1,0 +1,113 @@
+//! Dense GEMM baseline — the Fig. 7 `cuBLAS sgemm` stand-in.
+//!
+//! Blocked, multi-threaded f32 GEMM.  Not trying to be OpenBLAS; trying to
+//! be a *fair* dense baseline whose arithmetic throughput is in the same
+//! league as the sparse executors so the Fig. 7 crossover is meaningful.
+
+use super::rowsplit::effective_workers;
+
+/// Cache-blocking tile sizes (L1-friendly for f32).
+const MC: usize = 64;
+const KC: usize = 128;
+
+/// Dense `C[m×n] = A[m×k]·B[k×n]`, all row-major, `p` workers (0 = auto).
+pub fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, p: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let p = effective_workers(p, m.div_ceil(MC));
+    let mut c = vec![0.0f32; m * n];
+    if m == 0 || n == 0 || k == 0 {
+        return c;
+    }
+    // row-panel parallelism: each worker owns full row blocks of C
+    let panels: Vec<(usize, usize)> = (0..m.div_ceil(MC))
+        .map(|bi| (bi * MC, ((bi + 1) * MC).min(m)))
+        .collect();
+    let chunks_per = panels.len().div_ceil(p);
+
+    std::thread::scope(|scope| {
+        let mut rest: &mut [f32] = &mut c;
+        let mut row = 0usize;
+        for group in panels.chunks(chunks_per) {
+            let r0 = group[0].0;
+            let r1 = group.last().unwrap().1;
+            debug_assert_eq!(r0, row);
+            let (chunk, tail) = rest.split_at_mut((r1 - r0) * n);
+            rest = tail;
+            row = r1;
+            scope.spawn(move || {
+                for &(p0, p1) in group {
+                    for kb in (0..k).step_by(KC) {
+                        let k1 = (kb + KC).min(k);
+                        for i in p0..p1 {
+                            let arow = &a[i * k..(i + 1) * k];
+                            let crow = &mut chunk[(i - r0) * n..(i - r0 + 1) * n];
+                            for kk in kb..k1 {
+                                let av = arow[kk];
+                                if av == 0.0 {
+                                    continue;
+                                }
+                                let brow = &b[kk * n..kk * n + n];
+                                for (o, &bv) in crow.iter_mut().zip(brow) {
+                                    *o += av * bv;
+                                }
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                for j in 0..n {
+                    c[i * n + j] += a[i * k + kk] * b[kk * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matches_naive() {
+        let (m, k, n) = (130, 70, 20);
+        let a = crate::gen::dense_matrix(m, k, 501);
+        let b = crate::gen::dense_matrix(k, n, 502);
+        let want = naive(&a, &b, m, k, n);
+        for p in [1, 2, 4] {
+            let got = gemm(&a, &b, m, k, n, p);
+            for (x, y) in got.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-2 * (1.0 + y.abs()));
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_dims() {
+        assert!(gemm(&[], &[], 0, 0, 0, 2).is_empty());
+        let a = vec![1.0, 2.0];
+        let b = vec![3.0, 4.0];
+        // 1×2 · 2×1
+        assert_eq!(gemm(&a, &b, 1, 2, 1, 1), vec![11.0]);
+    }
+
+    #[test]
+    fn identity() {
+        let m = 16;
+        let mut eye = vec![0.0f32; m * m];
+        for i in 0..m {
+            eye[i * m + i] = 1.0;
+        }
+        let b = crate::gen::dense_matrix(m, 8, 503);
+        assert_eq!(gemm(&eye, &b, m, m, 8, 2), b);
+    }
+}

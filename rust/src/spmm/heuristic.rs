@@ -1,0 +1,164 @@
+//! The paper's O(1) algorithm-selection heuristic (§5.4).
+//!
+//! `d = nnz / m` (mean row length): merge-based when `d < 9.35`, row-split
+//! otherwise.  The paper reports 99.3 % binary-classification accuracy
+//! against an oracle that always picks the faster kernel, and a combined
+//! 31.7 % geomean speedup over cuSPARSE csrmm2.
+
+use crate::formats::Csr;
+
+/// The published threshold.
+pub const DEFAULT_THRESHOLD: f64 = 9.35;
+
+/// Which SpMM algorithm to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    RowSplit,
+    MergeBased,
+}
+
+impl std::fmt::Display for Algorithm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Algorithm::RowSplit => write!(f, "row-split"),
+            Algorithm::MergeBased => write!(f, "merge-based"),
+        }
+    }
+}
+
+/// The mean-row-length selector.
+#[derive(Debug, Clone, Copy)]
+pub struct Heuristic {
+    pub threshold: f64,
+}
+
+impl Default for Heuristic {
+    fn default() -> Self {
+        Self {
+            threshold: DEFAULT_THRESHOLD,
+        }
+    }
+}
+
+impl Heuristic {
+    pub fn new(threshold: f64) -> Self {
+        Self { threshold }
+    }
+
+    /// O(1): one division on already-stored quantities.
+    pub fn select(&self, a: &Csr) -> Algorithm {
+        if a.mean_row_length() < self.threshold {
+            Algorithm::MergeBased
+        } else {
+            Algorithm::RowSplit
+        }
+    }
+
+    /// Run the selected executor.
+    pub fn spmm(&self, a: &Csr, b: &[f32], n: usize, p: usize) -> Vec<f32> {
+        match self.select(a) {
+            Algorithm::RowSplit => super::rowsplit_spmm(a, b, n, p),
+            Algorithm::MergeBased => super::merge_spmm(a, b, n, p),
+        }
+    }
+}
+
+/// Outcome of comparing the heuristic against a timing oracle on one
+/// dataset (used by the §5.4 accuracy experiment).
+#[derive(Debug, Clone)]
+pub struct OracleRecord {
+    pub name: String,
+    pub d: f64,
+    pub t_rowsplit: f64,
+    pub t_merge: f64,
+    pub picked: Algorithm,
+}
+
+impl OracleRecord {
+    pub fn oracle(&self) -> Algorithm {
+        if self.t_merge < self.t_rowsplit {
+            Algorithm::MergeBased
+        } else {
+            Algorithm::RowSplit
+        }
+    }
+
+    pub fn heuristic_correct(&self) -> bool {
+        self.picked == self.oracle()
+    }
+
+    /// Time of the heuristic's pick.
+    pub fn t_picked(&self) -> f64 {
+        match self.picked {
+            Algorithm::RowSplit => self.t_rowsplit,
+            Algorithm::MergeBased => self.t_merge,
+        }
+    }
+
+    /// Time of the oracle's pick.
+    pub fn t_oracle(&self) -> f64 {
+        self.t_rowsplit.min(self.t_merge)
+    }
+}
+
+/// Classification accuracy over a set of records (paper: 99.3 %).
+pub fn oracle_accuracy(records: &[OracleRecord]) -> f64 {
+    if records.is_empty() {
+        return 1.0;
+    }
+    records.iter().filter(|r| r.heuristic_correct()).count() as f64 / records.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selects_by_mean_row_length() {
+        let h = Heuristic::default();
+        let short = Csr::random(1000, 1000, 4.0, 701);
+        let long = crate::gen::uniform_rows(256, 64, Some(512), 702);
+        assert_eq!(h.select(&short), Algorithm::MergeBased);
+        assert_eq!(h.select(&long), Algorithm::RowSplit);
+    }
+
+    #[test]
+    fn threshold_boundary() {
+        let a = crate::gen::uniform_rows(100, 9, Some(64), 703); // d = 9 < 9.35
+        let b = crate::gen::uniform_rows(100, 10, Some(64), 704); // d = 10 > 9.35
+        let h = Heuristic::default();
+        assert_eq!(h.select(&a), Algorithm::MergeBased);
+        assert_eq!(h.select(&b), Algorithm::RowSplit);
+    }
+
+    #[test]
+    fn spmm_dispatch_correct() {
+        let a = Csr::random(200, 200, 5.0, 705);
+        let b = crate::gen::dense_matrix(200, 8, 706);
+        let got = Heuristic::default().spmm(&a, &b, 8, 4);
+        let want = crate::spmm::spmm_reference(&a, &b, 8);
+        for (x, y) in got.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()));
+        }
+    }
+
+    #[test]
+    fn oracle_record_logic() {
+        let r = OracleRecord {
+            name: "x".into(),
+            d: 5.0,
+            t_rowsplit: 2.0,
+            t_merge: 1.0,
+            picked: Algorithm::MergeBased,
+        };
+        assert_eq!(r.oracle(), Algorithm::MergeBased);
+        assert!(r.heuristic_correct());
+        assert_eq!(r.t_picked(), 1.0);
+        let wrong = OracleRecord {
+            picked: Algorithm::RowSplit,
+            ..r.clone()
+        };
+        assert!(!wrong.heuristic_correct());
+        assert_eq!(oracle_accuracy(&[r, wrong]), 0.5);
+    }
+}

@@ -1,0 +1,260 @@
+//! Algorithm II — merge-based SpMM executor (paper §4.2, Algorithm 1).
+//!
+//! Literal two-phase structure with threads as CTAs:
+//!
+//! * **Phase 1** (`PartitionSpmm`): an equal-nonzero decomposition from
+//!   [`crate::loadbalance`] (1-D [`NonzeroSplit`] by default — the paper's
+//!   choice — or 2-D [`MergePath`] for the ablation bench).
+//! * **Phase 2**: each worker streams its nonzeros, accumulating row
+//!   partials.  Rows *fully started* inside the segment are written
+//!   directly to C (no other worker touches them); the worker's **first
+//!   touched row** may be shared with the previous worker, so its partial
+//!   goes to a carry-out buffer instead (Algorithm 1, line 22).
+//! * **Fix-up** (`FixCarryOut`, line 24): a sequential pass adds each
+//!   carry-out into C — "the only way the user can pass information from
+//!   one CTA to another".
+//!
+//! The carry-out traffic is the §4.2 trade-off: it scales with `B.ncols`,
+//! which is why the paper keeps T = 1 for SpMM.
+
+use crate::formats::Csr;
+use crate::loadbalance::{MergePath, NonzeroSplit, Partitioner, Segment};
+
+use super::rowsplit::effective_workers;
+
+/// Carry-out record: a partial sum for the worker's first touched row.
+#[derive(Debug, Clone)]
+pub struct CarryOut {
+    pub row: usize,
+    pub partial: Vec<f32>,
+}
+
+/// Which phase-1 decomposition to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MergeKind {
+    /// 1-D binary search on row_ptr (Baxter / this paper's SpMM)
+    NonzeroSplit,
+    /// 2-D diagonal search (Merrill & Garland)
+    MergePath,
+}
+
+/// Merge-based SpMM: `C = A·B` with `p` parallel workers (0 = auto).
+pub fn merge_spmm(a: &Csr, b: &[f32], n: usize, p: usize) -> Vec<f32> {
+    merge_spmm_with(a, b, n, p, MergeKind::NonzeroSplit)
+}
+
+/// Merge-based SpMM with an explicit phase-1 decomposition.
+pub fn merge_spmm_with(a: &Csr, b: &[f32], n: usize, p: usize, kind: MergeKind) -> Vec<f32> {
+    assert_eq!(b.len(), a.k * n, "B must be k×n row-major");
+    let p = effective_workers(p, a.nnz());
+    let mut c = vec![0.0f32; a.m * n];
+    if a.m == 0 || n == 0 || a.nnz() == 0 {
+        return c;
+    }
+    let segs: Vec<Segment> = match kind {
+        MergeKind::NonzeroSplit => NonzeroSplit.partition(a, p),
+        MergeKind::MergePath => MergePath.partition(a, p),
+    };
+
+    // Phase 2: direct-write rows of worker w are (row_start, row_end) —
+    // exclusive of the first touched row — which are pairwise disjoint and
+    // ascending across workers, so C can be handed out with split_at_mut.
+    let mut carryouts: Vec<Option<CarryOut>> = vec![None; segs.len()];
+    std::thread::scope(|scope| {
+        let mut rest: &mut [f32] = &mut c;
+        let mut covered = 0usize; // rows already handed out
+        for (seg, carry_slot) in segs.iter().zip(carryouts.iter_mut()) {
+            let own_start = (seg.row_start + 1).max(covered);
+            let own_end = seg.row_end.max(own_start);
+            // skip gap rows (not owned by anyone → stay zero, fixed by carry)
+            let skip = (own_start - covered) * n;
+            let take = (own_end - own_start) * n;
+            let (_, tail) = rest.split_at_mut(skip);
+            let (chunk, tail) = tail.split_at_mut(take);
+            rest = tail;
+            covered = own_end;
+            let seg = *seg;
+            scope.spawn(move || {
+                *carry_slot = worker(a, b, n, seg, own_start, chunk);
+            });
+        }
+    });
+
+    // FixCarryOut: sequential accumulation of shared-row partials.
+    for co in carryouts.into_iter().flatten() {
+        let out = &mut c[co.row * n..(co.row + 1) * n];
+        for (o, v) in out.iter_mut().zip(&co.partial) {
+            *o += v;
+        }
+    }
+    c
+}
+
+/// One CTA's phase-2 work: stream nonzeros `seg.nz_start..seg.nz_end`,
+/// write rows `own_start..` into `chunk`, return the first-row carry-out.
+fn worker(
+    a: &Csr,
+    b: &[f32],
+    n: usize,
+    seg: Segment,
+    own_start: usize,
+    chunk: &mut [f32],
+) -> Option<CarryOut> {
+    let mut carry: Option<CarryOut> = None;
+    let mut row = seg.row_start;
+    let mut nz = seg.nz_start;
+    while nz < seg.nz_end {
+        // advance to the row containing nz (skips empty rows)
+        while row + 1 <= a.m && a.row_ptr[row + 1] <= nz {
+            row += 1;
+        }
+        let row_end_nz = a.row_ptr[row + 1].min(seg.nz_end);
+        if row < own_start {
+            // first touched row (shared) → accumulate into carry-out
+            let partial = &mut carry
+                .get_or_insert_with(|| CarryOut {
+                    row,
+                    partial: vec![0.0; n],
+                })
+                .partial;
+            accumulate(a, b, n, nz, row_end_nz, partial);
+        } else {
+            let off = (row - own_start) * n;
+            accumulate(a, b, n, nz, row_end_nz, &mut chunk[off..off + n]);
+        }
+        nz = row_end_nz;
+    }
+    carry
+}
+
+/// Flat product loop: out += Σ vals[e]·B[col[e], :] for e in [nz0, nz1).
+///
+/// §Perf: for n ≤ 64 the partial sum lives in a fixed stack tile (the
+/// Table-1 register accumulator) and lands in `out` once — +17 % measured
+/// on the single-core testbed (EXPERIMENTS.md §Perf).
+#[inline]
+fn accumulate(a: &Csr, b: &[f32], n: usize, nz0: usize, nz1: usize, out: &mut [f32]) {
+    // tile only pays off when the row segment amortizes its init+writeback
+    if n <= 64 && nz1 - nz0 >= 8 {
+        let mut acc = [0.0f32; 64];
+        for e in nz0..nz1 {
+            let col = a.col_idx[e] as usize;
+            let v = a.vals[e];
+            let brow = &b[col * n..col * n + n];
+            for (o, &bv) in acc[..n].iter_mut().zip(brow) {
+                *o += v * bv;
+            }
+        }
+        for (o, &av) in out.iter_mut().zip(&acc[..n]) {
+            *o += av;
+        }
+        return;
+    }
+    for e in nz0..nz1 {
+        let col = a.col_idx[e] as usize;
+        let v = a.vals[e];
+        let brow = &b[col * n..col * n + n];
+        for (o, &bv) in out.iter_mut().zip(brow) {
+            *o += v * bv;
+        }
+    }
+}
+
+/// Merge-based SpMV (n = 1 specialization).
+pub fn merge_spmv(a: &Csr, x: &[f32], p: usize) -> Vec<f32> {
+    merge_spmm(a, x, 1, p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spmm::spmm_reference;
+
+    fn assert_close(a: &[f32], b: &[f32]) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()), "idx {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matches_reference_both_kinds() {
+        let a = Csr::random(200, 150, 8.0, 401);
+        let b = crate::gen::dense_matrix(150, 16, 402);
+        let want = spmm_reference(&a, &b, 16);
+        for p in [1, 2, 4, 8, 32] {
+            for kind in [MergeKind::NonzeroSplit, MergeKind::MergePath] {
+                assert_close(&merge_spmm_with(&a, &b, 16, p, kind), &want);
+            }
+        }
+    }
+
+    #[test]
+    fn one_giant_row_spanning_all_workers() {
+        // the carry-out stress case: one row split across every CTA
+        let cols: Vec<u32> = (0..4096).collect();
+        let a = Csr::new(1, 4096, vec![0, 4096], cols, vec![1.0; 4096]).unwrap();
+        let b = crate::gen::dense_matrix(4096, 8, 403);
+        let want = spmm_reference(&a, &b, 8);
+        assert_close(&merge_spmm(&a, &b, 8, 16), &want);
+    }
+
+    #[test]
+    fn many_empty_rows() {
+        // the merge-path pathology
+        let mut row_ptr = vec![0usize; 5001];
+        row_ptr[5000] = 64;
+        for v in row_ptr.iter_mut().take(5000).skip(4999) {
+            *v = 0;
+        }
+        // all nonzeros in the last row
+        for (i, v) in row_ptr.iter_mut().enumerate() {
+            *v = if i == 5000 { 64 } else { 0 };
+        }
+        let a = Csr::new(5000, 64, row_ptr, (0..64).collect(), vec![1.0; 64]).unwrap();
+        let b = crate::gen::dense_matrix(64, 4, 404);
+        let want = spmm_reference(&a, &b, 4);
+        for kind in [MergeKind::NonzeroSplit, MergeKind::MergePath] {
+            assert_close(&merge_spmm_with(&a, &b, 4, 8, kind), &want);
+        }
+    }
+
+    #[test]
+    fn rows_exactly_on_boundaries() {
+        // uniform rows that divide the worker count evenly: no sharing
+        let a = crate::gen::uniform_rows(64, 16, Some(128), 405);
+        let b = crate::gen::dense_matrix(128, 8, 406);
+        assert_close(&merge_spmm(&a, &b, 8, 8), &spmm_reference(&a, &b, 8));
+    }
+
+    #[test]
+    fn short_row_regime() {
+        let a = Csr::random(500, 500, 4.0, 407);
+        let b = crate::gen::dense_matrix(500, 32, 408);
+        assert_close(&merge_spmm(&a, &b, 32, 8), &spmm_reference(&a, &b, 32));
+    }
+
+    #[test]
+    fn agrees_with_rowsplit() {
+        let a = Csr::random(300, 300, 10.0, 409);
+        let b = crate::gen::dense_matrix(300, 16, 410);
+        assert_close(
+            &merge_spmm(&a, &b, 16, 8),
+            &crate::spmm::rowsplit_spmm(&a, &b, 16, 8),
+        );
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let a = Csr::empty(10, 10);
+        let b = crate::gen::dense_matrix(10, 4, 411);
+        assert_eq!(merge_spmm(&a, &b, 4, 4), vec![0.0; 40]);
+    }
+
+    #[test]
+    fn spmv() {
+        let a = Csr::random(300, 200, 5.0, 412);
+        let x = crate::gen::dense_matrix(200, 1, 413);
+        assert_close(&merge_spmv(&a, &x, 4), &crate::spmm::spmv_reference(&a, &x));
+    }
+}

@@ -1,0 +1,89 @@
+//! SpMM executors, the heuristic selector, baselines, and the Table-1
+//! analytic model.
+//!
+//! These are the *CPU reference implementations* of the paper's two
+//! algorithms: they consume the same [`crate::loadbalance`] decompositions
+//! a GPU kernel would, run them across real threads (one thread = one
+//! "CTA"), and implement the carry-out fix-up of Algorithm 1 literally.
+//! They serve three roles:
+//!
+//! 1. correctness oracles for the PJRT artifacts (integration tests),
+//! 2. the measured substrate for the figure harnesses (real wallclock,
+//!    complementing the [`crate::sim`] cost model),
+//! 3. the engine's fallback path when a matrix fits no AOT bucket.
+
+pub mod analysis;
+pub mod baselines;
+pub mod dense;
+pub mod heuristic;
+pub mod merge;
+pub mod rowsplit;
+
+pub use analysis::{IlpAnalysis, Table1};
+pub use heuristic::{Algorithm, Heuristic, DEFAULT_THRESHOLD};
+pub use merge::merge_spmm;
+pub use rowsplit::rowsplit_spmm;
+
+use crate::formats::Csr;
+
+/// Reference (serial, textbook) SpMM used as the ground truth in tests:
+/// `C[m×n] = A·B`, B and C dense row-major.
+pub fn spmm_reference(a: &Csr, b: &[f32], n: usize) -> Vec<f32> {
+    assert_eq!(b.len(), a.k * n, "B must be k×n row-major");
+    let mut c = vec![0.0f32; a.m * n];
+    for i in 0..a.m {
+        let (cols, vals) = a.row(i);
+        let out = &mut c[i * n..(i + 1) * n];
+        for (&col, &v) in cols.iter().zip(vals) {
+            let brow = &b[col as usize * n..col as usize * n + n];
+            for (o, &bv) in out.iter_mut().zip(brow) {
+                *o += v * bv;
+            }
+        }
+    }
+    c
+}
+
+/// Reference SpMV.
+pub fn spmv_reference(a: &Csr, x: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), a.k);
+    (0..a.m)
+        .map(|i| {
+            let (cols, vals) = a.row(i);
+            cols.iter()
+                .zip(vals)
+                .map(|(&c, &v)| v * x[c as usize])
+                .sum()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_small() {
+        // [[1,0,2],[0,0,0],[3,4,0]] · [[1,1],[2,2],[3,3]]
+        let a = Csr::new(
+            3,
+            3,
+            vec![0, 2, 2, 4],
+            vec![0, 2, 0, 1],
+            vec![1.0, 2.0, 3.0, 4.0],
+        )
+        .unwrap();
+        let b = vec![1.0, 1.0, 2.0, 2.0, 3.0, 3.0];
+        let c = spmm_reference(&a, &b, 2);
+        assert_eq!(c, vec![7.0, 7.0, 0.0, 0.0, 11.0, 11.0]);
+    }
+
+    #[test]
+    fn spmv_matches_spmm_column() {
+        let a = Csr::random(50, 40, 5.0, 201);
+        let b: Vec<f32> = (0..40).map(|i| i as f32 * 0.1).collect();
+        let y = spmv_reference(&a, &b);
+        let c = spmm_reference(&a, &b, 1);
+        assert_eq!(y, c);
+    }
+}

@@ -1,0 +1,228 @@
+//! Algorithm I — row-split SpMM executor (paper §4.1).
+//!
+//! One thread plays one "warp": it owns a contiguous block of rows (the
+//! [`RowSplit`] decomposition) and streams each row's nonzeros in
+//! `WARP_BATCH`-wide chunks, exactly the paper's "batches of 32"
+//! structure.  The per-chunk inner loop over the dense width `n` is the
+//! lane dimension — each iteration is the independent, coalesced B-row
+//! load that thread `j` of the warp performs — and is written stride-1
+//! over both `B` and `C` rows so the compiler vectorizes it (the CPU
+//! analogue of coalescing; see DESIGN.md §Hardware-Adaptation).
+
+use crate::formats::Csr;
+use crate::loadbalance::{Partitioner, RowSplit};
+
+/// The paper's warp width: nonzeros are processed in batches of 32.
+pub const WARP_BATCH: usize = 32;
+
+/// Row-granularity choice (paper §4.1 design decision 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Granularity {
+    /// one thread per row — wins on very short rows (Fig. 4 left)
+    ThreadPerRow,
+    /// one warp per row — the paper's default
+    WarpPerRow,
+}
+
+/// Row-split SpMM: `C = A·B` with `p` parallel workers.
+///
+/// * `b` is `k×n` row-major, result is `m×n` row-major.
+/// * `p = 0` → use available parallelism.
+pub fn rowsplit_spmm(a: &Csr, b: &[f32], n: usize, p: usize) -> Vec<f32> {
+    rowsplit_spmm_granular(a, b, n, p, Granularity::WarpPerRow)
+}
+
+/// Row-split with an explicit granularity (exposed for the Fig. 4 bench).
+pub fn rowsplit_spmm_granular(
+    a: &Csr,
+    b: &[f32],
+    n: usize,
+    p: usize,
+    gran: Granularity,
+) -> Vec<f32> {
+    assert_eq!(b.len(), a.k * n, "B must be k×n row-major");
+    let p = effective_workers(p, a.m);
+    let mut c = vec![0.0f32; a.m * n];
+    if a.m == 0 || n == 0 {
+        return c;
+    }
+    let segs = RowSplit::default().partition(a, p);
+
+    std::thread::scope(|scope| {
+        let mut rest: &mut [f32] = &mut c;
+        let mut offset = 0usize;
+        for seg in &segs {
+            let rows = seg.row_end - seg.row_start;
+            debug_assert_eq!(seg.row_start * n, offset);
+            let (chunk, tail) = rest.split_at_mut(rows * n);
+            rest = tail;
+            offset += rows * n;
+            let seg = *seg;
+            scope.spawn(move || {
+                for i in seg.row_start..seg.row_end {
+                    let out = &mut chunk[(i - seg.row_start) * n..(i - seg.row_start + 1) * n];
+                    match gran {
+                        Granularity::WarpPerRow => row_kernel_warp(a, b, n, i, out),
+                        Granularity::ThreadPerRow => row_kernel_thread(a, b, n, i, out),
+                    }
+                }
+            });
+        }
+    });
+    c
+}
+
+/// Warp-per-row inner kernel: nonzeros in WARP_BATCH chunks; within a
+/// chunk the B-row loads are independent (the ILP Table 1 counts) and the
+/// n-wide FMA is the coalesced lane dimension.
+///
+/// §Perf: for n ≤ 64 the accumulator lives in a fixed-size stack tile (the
+/// CPU analogue of the paper's 64-register accumulator, Table 1) so the
+/// compiler keeps it in vector registers across the whole row instead of
+/// re-touching the C row per nonzero.
+#[inline]
+fn row_kernel_warp(a: &Csr, b: &[f32], n: usize, i: usize, out: &mut [f32]) {
+    let (cols, vals) = a.row(i);
+    if n <= 64 {
+        let mut acc = [0.0f32; 64];
+        for (&col, &v) in cols.iter().zip(vals) {
+            let brow = &b[col as usize * n..col as usize * n + n];
+            for (o, &bv) in acc[..n].iter_mut().zip(brow) {
+                *o += v * bv;
+            }
+        }
+        out.copy_from_slice(&acc[..n]);
+        return;
+    }
+    let mut pos = 0usize;
+    while pos < cols.len() {
+        let end = (pos + WARP_BATCH).min(cols.len());
+        // One "warp batch": up to 32 independent B-row gathers.
+        for t in pos..end {
+            let col = cols[t] as usize;
+            let v = vals[t];
+            let brow = &b[col * n..col * n + n];
+            // lane dimension: stride-1 over n → vectorized FMA
+            for (o, &bv) in out.iter_mut().zip(brow) {
+                *o += v * bv;
+            }
+        }
+        pos = end;
+    }
+}
+
+/// Thread-per-row kernel: a single serial walk (no batching) — models the
+/// alternative granularity that wins for very short rows.
+#[inline]
+fn row_kernel_thread(a: &Csr, b: &[f32], n: usize, i: usize, out: &mut [f32]) {
+    let (cols, vals) = a.row(i);
+    for (&col, &v) in cols.iter().zip(vals) {
+        let brow = &b[col as usize * n..col as usize * n + n];
+        for (o, &bv) in out.iter_mut().zip(brow) {
+            *o += v * bv;
+        }
+    }
+}
+
+/// Row-split SpMV (n = 1 specialization used by the Fig. 1 harness).
+pub fn rowsplit_spmv(a: &Csr, x: &[f32], p: usize) -> Vec<f32> {
+    assert_eq!(x.len(), a.k);
+    let p = effective_workers(p, a.m);
+    let mut y = vec![0.0f32; a.m];
+    if a.m == 0 {
+        return y;
+    }
+    let segs = RowSplit::default().partition(a, p);
+    std::thread::scope(|scope| {
+        let mut rest: &mut [f32] = &mut y;
+        for seg in &segs {
+            let rows = seg.row_end - seg.row_start;
+            let (chunk, tail) = rest.split_at_mut(rows);
+            rest = tail;
+            let seg = *seg;
+            scope.spawn(move || {
+                for i in seg.row_start..seg.row_end {
+                    let (cols, vals) = a.row(i);
+                    chunk[i - seg.row_start] = cols
+                        .iter()
+                        .zip(vals)
+                        .map(|(&c, &v)| v * x[c as usize])
+                        .sum();
+                }
+            });
+        }
+    });
+    y
+}
+
+pub(crate) fn effective_workers(p: usize, work_items: usize) -> usize {
+    let avail = std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(4);
+    let p = if p == 0 { avail } else { p };
+    p.min(work_items.max(1)).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spmm::spmm_reference;
+
+    fn assert_close(a: &[f32], b: &[f32]) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()), "idx {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matches_reference() {
+        let a = Csr::random(200, 150, 8.0, 301);
+        let b = crate::gen::dense_matrix(150, 16, 302);
+        for p in [1, 2, 4, 8] {
+            assert_close(&rowsplit_spmm(&a, &b, 16, p), &spmm_reference(&a, &b, 16));
+        }
+    }
+
+    #[test]
+    fn both_granularities_agree() {
+        let a = Csr::random(100, 100, 3.0, 303);
+        let b = crate::gen::dense_matrix(100, 8, 304);
+        let w = rowsplit_spmm_granular(&a, &b, 8, 4, Granularity::WarpPerRow);
+        let t = rowsplit_spmm_granular(&a, &b, 8, 4, Granularity::ThreadPerRow);
+        assert_close(&w, &t);
+    }
+
+    #[test]
+    fn row_length_33_batch_boundary() {
+        // the paper's L-sensitivity case: one extra batch per row
+        let a = crate::gen::uniform_rows(64, 33, Some(256), 305);
+        let b = crate::gen::dense_matrix(256, 8, 306);
+        assert_close(&rowsplit_spmm(&a, &b, 8, 4), &spmm_reference(&a, &b, 8));
+    }
+
+    #[test]
+    fn empty_and_degenerate() {
+        let a = Csr::empty(10, 10);
+        let b = crate::gen::dense_matrix(10, 4, 307);
+        assert_eq!(rowsplit_spmm(&a, &b, 4, 2), vec![0.0; 40]);
+        let a0 = Csr::empty(0, 10);
+        assert!(rowsplit_spmm(&a0, &b, 4, 2).is_empty());
+    }
+
+    #[test]
+    fn spmv_matches() {
+        let a = Csr::random(300, 200, 5.0, 308);
+        let x = crate::gen::dense_matrix(200, 1, 309);
+        let y = rowsplit_spmv(&a, &x, 4);
+        let want = crate::spmm::spmv_reference(&a, &x);
+        assert_close(&y, &want);
+    }
+
+    #[test]
+    fn more_workers_than_rows() {
+        let a = Csr::random(3, 10, 2.0, 310);
+        let b = crate::gen::dense_matrix(10, 4, 311);
+        assert_close(&rowsplit_spmm(&a, &b, 4, 64), &spmm_reference(&a, &b, 4));
+    }
+}

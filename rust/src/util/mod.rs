@@ -1,0 +1,10 @@
+//! Small shared utilities: deterministic RNG, statistics, timing.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::XorShift;
+pub use stats::{geomean, gflops, mean, percentile};
+pub use timer::Timer;

@@ -1,0 +1,147 @@
+//! Deterministic xorshift* RNG.
+//!
+//! Every generator in [`crate::gen`] is seeded, so the 157-matrix suite and
+//! all synthetic workloads are bit-reproducible across runs and machines —
+//! a requirement for regenerating the paper's tables — without pulling in a
+//! heavier dependency.
+
+/// xorshift64* — fast, full-period (2^64−1), passes BigCrush on high bits.
+#[derive(Debug, Clone)]
+pub struct XorShift {
+    state: u64,
+}
+
+impl XorShift {
+    /// Create a generator; `seed` may be any value (0 is remapped).
+    pub fn new(seed: u64) -> Self {
+        Self {
+            state: if seed == 0 { 0x9E3779B97F4A7C15 } else { seed },
+        }
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in `[0, n)`. `n` must be > 0.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Multiply-shift bounded sampling (Lemire); bias < 2^-32 for n < 2^32.
+        ((self.next_u64() >> 32).wrapping_mul(n as u64) >> 32) as usize
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Standard-normal-ish f32 via sum of 4 uniforms (Irwin–Hall, cheap and
+    /// deterministic; exact normality is irrelevant to the workloads).
+    #[inline]
+    pub fn normal(&mut self) -> f32 {
+        (self.f32() + self.f32() + self.f32() + self.f32() - 2.0) * 1.732_050_8
+    }
+
+    /// Pareto-distributed row length with shape `alpha`, min 1, capped.
+    pub fn pareto(&mut self, alpha: f64, cap: usize) -> usize {
+        let u = (self.f32() as f64).max(1e-9);
+        let v = (1.0 / u.powf(1.0 / alpha)) as usize;
+        v.clamp(1, cap.max(1))
+    }
+
+    /// Sample `count` distinct values in `[0, n)`, ascending (Floyd's).
+    pub fn distinct_sorted(&mut self, count: usize, n: usize) -> Vec<u32> {
+        let count = count.min(n);
+        if count == 0 {
+            return Vec::new();
+        }
+        // For dense draws, a partial Fisher–Yates over a bitmap beats Floyd.
+        if count * 4 >= n {
+            let mut all: Vec<u32> = (0..n as u32).collect();
+            for i in 0..count {
+                let j = i + self.below(n - i);
+                all.swap(i, j);
+            }
+            let mut out = all[..count].to_vec();
+            out.sort_unstable();
+            out
+        } else {
+            let mut set = std::collections::BTreeSet::new();
+            for j in (n - count)..n {
+                let t = self.below(j + 1);
+                if !set.insert(t as u32) {
+                    set.insert(j as u32);
+                }
+            }
+            set.into_iter().collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = XorShift::new(42);
+        let mut b = XorShift::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = XorShift::new(7);
+        for _ in 0..10_000 {
+            assert!(r.below(13) < 13);
+        }
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = XorShift::new(9);
+        for _ in 0..10_000 {
+            let v = r.f32();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn distinct_sorted_is_distinct_and_sorted() {
+        let mut r = XorShift::new(11);
+        for &(c, n) in &[(5usize, 100usize), (50, 60), (0, 10), (10, 10), (99, 100)] {
+            let v = r.distinct_sorted(c, n);
+            assert_eq!(v.len(), c.min(n));
+            for w in v.windows(2) {
+                assert!(w[0] < w[1], "not strictly ascending: {v:?}");
+            }
+            assert!(v.iter().all(|&x| (x as usize) < n));
+        }
+    }
+
+    #[test]
+    fn pareto_bounds() {
+        let mut r = XorShift::new(13);
+        for _ in 0..1000 {
+            let v = r.pareto(1.5, 40);
+            assert!((1..=40).contains(&v));
+        }
+    }
+
+    #[test]
+    fn zero_seed_remapped() {
+        let mut r = XorShift::new(0);
+        assert_ne!(r.next_u64(), 0);
+    }
+}

@@ -1,0 +1,79 @@
+//! Statistics used throughout the benchmark harness.
+//!
+//! The paper reports *geomean* speedups (31.7 % over csrmm2) and *peak*
+//! speedups (4.1×); these helpers compute them the same way.
+
+/// Geometric mean of positive values. Returns 1.0 for an empty slice.
+pub fn geomean(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return 1.0;
+    }
+    let log_sum: f64 = values
+        .iter()
+        .map(|&v| {
+            debug_assert!(v > 0.0, "geomean needs positive values, got {v}");
+            v.max(f64::MIN_POSITIVE).ln()
+        })
+        .sum();
+    (log_sum / values.len() as f64).exp()
+}
+
+/// Arithmetic mean. Returns 0.0 for an empty slice.
+pub fn mean(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    values.iter().sum::<f64>() / values.len() as f64
+}
+
+/// p-th percentile (0–100) by nearest-rank on a copy.
+pub fn percentile(values: &[f64], p: f64) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let mut v = values.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// GFlop/s for an SpMM-style op: 2·nnz·n flops in `seconds`.
+pub fn gflops(nnz: usize, n: usize, seconds: f64) -> f64 {
+    if seconds <= 0.0 {
+        return 0.0;
+    }
+    (2.0 * nnz as f64 * n as f64) / seconds / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 1.0);
+    }
+
+    #[test]
+    fn mean_basics() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentile_basics() {
+        let v = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 50.0), 3.0);
+        assert_eq!(percentile(&v, 100.0), 5.0);
+    }
+
+    #[test]
+    fn gflops_basics() {
+        // 2 * 1e9 * 1 flops in 2 s = 1 GFlop/s
+        assert!((gflops(1_000_000_000, 1, 2.0) - 1.0).abs() < 1e-9);
+        assert_eq!(gflops(10, 10, 0.0), 0.0);
+    }
+}

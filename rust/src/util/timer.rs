@@ -1,0 +1,59 @@
+//! Wall-clock timing helper with warmup + repetition, used by the bench
+//! harness (criterion handles the statistical benches; this is for the
+//! figure-regeneration binaries where we want one number per cell).
+
+use std::time::Instant;
+
+/// Run `f` `warmup` times untimed, then `reps` times timed; report the
+/// *minimum* wall-clock seconds (the standard noise-robust estimator).
+pub struct Timer {
+    pub warmup: usize,
+    pub reps: usize,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self { warmup: 1, reps: 3 }
+    }
+}
+
+impl Timer {
+    pub fn new(warmup: usize, reps: usize) -> Self {
+        Self {
+            warmup,
+            reps: reps.max(1),
+        }
+    }
+
+    /// Time `f`, returning min seconds across reps.
+    pub fn time<F: FnMut()>(&self, mut f: F) -> f64 {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut best = f64::INFINITY;
+        for _ in 0..self.reps {
+            let t0 = Instant::now();
+            f();
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_returns_positive() {
+        let t = Timer::default();
+        let mut acc = 0u64;
+        let secs = t.time(|| {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i);
+            }
+        });
+        assert!(secs >= 0.0);
+        assert!(secs.is_finite());
+    }
+}

@@ -1,0 +1,112 @@
+//! Coordinator integration: server under concurrent load, batching
+//! invariants, metrics consistency.  CPU-only (no artifacts needed) so it
+//! runs on a fresh checkout.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use merge_spmm::coordinator::{EngineConfig, Server, ServerConfig};
+use merge_spmm::formats::Csr;
+use merge_spmm::gen;
+use merge_spmm::spmm;
+use merge_spmm::util::XorShift;
+
+fn cpu_cfg() -> EngineConfig {
+    EngineConfig {
+        artifacts_dir: None,
+        threshold: 9.35,
+        cpu_workers: 2,
+    }
+}
+
+#[test]
+fn concurrent_load_no_drops() {
+    let server = Server::start(
+        cpu_cfg(),
+        ServerConfig {
+            workers: 4,
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            queue_capacity: 64,
+        },
+    )
+    .unwrap();
+    let mut rng = XorShift::new(0xD41);
+    let mats: Vec<Arc<Csr>> = (0..6)
+        .map(|i| Arc::new(Csr::random(200 + i * 50, 300, 2.0 + i as f64 * 4.0, 3000 + i as u64)))
+        .collect();
+    let bs: Vec<Arc<Vec<f32>>> = (0..1).map(|_| Arc::new(gen::dense_matrix(300, 8, 3100))).collect();
+
+    let total = 300usize;
+    let mut handles = Vec::new();
+    let mut expect = Vec::new();
+    for _ in 0..total {
+        let mi = rng.below(mats.len());
+        let a = Arc::clone(&mats[mi]);
+        let b = Arc::clone(&bs[0]);
+        expect.push(mi);
+        handles.push(server.submit(a, b, 8));
+    }
+    let mut ok = 0;
+    for (h, &mi) in handles.iter().zip(&expect) {
+        let r = h.recv().unwrap().unwrap();
+        let want = spmm::spmm_reference(&mats[mi], &bs[0], 8);
+        for (x, y) in r.c.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()));
+        }
+        ok += 1;
+    }
+    assert_eq!(ok, total);
+    let snap = server.shutdown();
+    assert_eq!(snap.completed as usize, total);
+    assert_eq!(snap.errors, 0);
+    assert_eq!(snap.rowsplit + snap.merge, total as u64);
+    assert!(snap.p50_s > 0.0);
+}
+
+#[test]
+fn submissions_during_shutdown_dont_hang() {
+    let server = Server::start(cpu_cfg(), ServerConfig::default()).unwrap();
+    let a = Arc::new(Csr::random(50, 50, 3.0, 3200));
+    let b = Arc::new(gen::dense_matrix(50, 4, 3201));
+    let h = server.submit(Arc::clone(&a), Arc::clone(&b), 4);
+    let _ = h.recv();
+    let snap = server.shutdown();
+    assert!(snap.completed >= 1);
+}
+
+#[test]
+fn throughput_scales_with_workers() {
+    // Not a strict perf assertion (CI noise); just checks more workers
+    // don't serialize: 4 workers must not be slower than 1 by 2×.
+    let run = |workers: usize| -> f64 {
+        let server = Server::start(
+            cpu_cfg(),
+            ServerConfig {
+                workers,
+                max_batch: 1,
+                max_wait: Duration::from_micros(100),
+                queue_capacity: 512,
+            },
+        )
+        .unwrap();
+        let a = Arc::new(gen::uniform_rows(600, 24, Some(600), 3300));
+        let b = Arc::new(gen::dense_matrix(600, 32, 3301));
+        let t0 = std::time::Instant::now();
+        let handles: Vec<_> = (0..60)
+            .map(|_| server.submit(Arc::clone(&a), Arc::clone(&b), 32))
+            .collect();
+        for h in handles {
+            let _ = h.recv().unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        server.shutdown();
+        dt
+    };
+    let t1 = run(1);
+    let t4 = run(4);
+    assert!(
+        t4 < t1 * 2.0,
+        "4 workers ({t4:.3}s) must not be 2x slower than 1 ({t1:.3}s)"
+    );
+}

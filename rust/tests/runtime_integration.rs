@@ -1,0 +1,234 @@
+//! End-to-end integration: PJRT artifacts vs CPU executors.
+//!
+//! Requires `make artifacts` (skips gracefully when absent so `cargo test`
+//! stays green on a fresh checkout).  This is the contract test for the
+//! whole three-layer stack: the numbers produced by the AOT-compiled
+//! Pallas kernels running under PJRT must match the Rust CPU executors,
+//! which in turn are tested against the textbook reference.
+
+use std::path::PathBuf;
+
+use merge_spmm::coordinator::{EngineConfig, ExecutionPath, SpmmEngine};
+use merge_spmm::formats::Csr;
+use merge_spmm::gen;
+use merge_spmm::spmm::{self, Algorithm};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn engine() -> Option<SpmmEngine> {
+    let dir = artifacts_dir()?;
+    Some(
+        SpmmEngine::new(EngineConfig {
+            artifacts_dir: Some(dir),
+            ..Default::default()
+        })
+        .expect("engine must load when artifacts exist"),
+    )
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32) {
+    assert_eq!(got.len(), want.len());
+    for (i, (x, y)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (x - y).abs() < tol * (1.0 + y.abs()),
+            "idx {i}: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn rowsplit_artifact_matches_cpu() {
+    let Some(eng) = engine() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    // long rows → heuristic picks row-split → rowsplit bucket
+    let a = gen::uniform_rows(500, 20, Some(800), 2001);
+    let b = gen::dense_matrix(800, 64, 2002);
+    let r = eng.spmm(&a, &b, 64).unwrap();
+    assert_eq!(r.algorithm, Algorithm::RowSplit);
+    assert_eq!(r.path, ExecutionPath::Pjrt, "bucket should fit");
+    assert!(r.bucket.as_deref().unwrap_or("").contains("rowsplit"));
+    let want = spmm::spmm_reference(&a, &b, 64);
+    assert_close(&r.c, &want, 1e-3);
+}
+
+#[test]
+fn merge_artifact_matches_cpu() {
+    let Some(eng) = engine() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    // short rows → merge-based → merge bucket
+    let a = Csr::random(900, 900, 4.0, 2003);
+    let b = gen::dense_matrix(900, 64, 2004);
+    let r = eng.spmm(&a, &b, 64).unwrap();
+    assert_eq!(r.algorithm, Algorithm::MergeBased);
+    assert_eq!(r.path, ExecutionPath::Pjrt);
+    assert!(r.bucket.as_deref().unwrap_or("").contains("merge"));
+    let want = spmm::spmm_reference(&a, &b, 64);
+    assert_close(&r.c, &want, 1e-3);
+}
+
+#[test]
+fn oversize_matrix_falls_back_to_cpu() {
+    let Some(eng) = engine() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    // larger than any bucket → CPU fallback, still correct
+    let a = Csr::random(6000, 6000, 3.0, 2005);
+    let b = gen::dense_matrix(6000, 16, 2006);
+    let r = eng.spmm(&a, &b, 16).unwrap();
+    assert_eq!(r.path, ExecutionPath::CpuFallback);
+    let want = spmm::spmm_reference(&a, &b, 16);
+    assert_close(&r.c, &want, 1e-3);
+}
+
+#[test]
+fn empty_rows_and_boundary_rows_through_pjrt() {
+    let Some(eng) = engine() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    // adversarial: empty rows + a row of exactly 32 (ELL width boundary)
+    let mut row_ptr = vec![0usize];
+    let mut col_idx: Vec<u32> = Vec::new();
+    for i in 0..200 {
+        let len = match i % 4 {
+            0 => 0,
+            1 => 32,
+            2 => 1,
+            _ => 7,
+        };
+        for j in 0..len {
+            col_idx.push(((i * 13 + j * 29) % 600) as u32);
+        }
+        row_ptr.push(col_idx.len());
+    }
+    // sort each row's columns
+    let mut sorted = col_idx.clone();
+    for w in 0..200 {
+        sorted[row_ptr[w]..row_ptr[w + 1]].sort_unstable();
+    }
+    let vals: Vec<f32> = (0..sorted.len()).map(|i| (i % 17) as f32 * 0.25 - 2.0).collect();
+    let a = Csr::new(200, 600, row_ptr, sorted, vals).unwrap();
+    let b = gen::dense_matrix(600, 64, 2007);
+    let r = eng.spmm(&a, &b, 64).unwrap();
+    assert_eq!(r.path, ExecutionPath::Pjrt);
+    let want = spmm::spmm_reference(&a, &b, 64);
+    assert_close(&r.c, &want, 1e-3);
+}
+
+#[test]
+fn gcn_artifact_runs_end_to_end() {
+    use merge_spmm::runtime::Runtime;
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let rt = Runtime::load_filtered(&dir, |a| a.entry == "gcn_fwd").unwrap();
+    let art = rt
+        .manifest()
+        .by_entry("gcn_fwd")
+        .next()
+        .expect("gcn artifact missing")
+        .clone();
+    let name = art.name.clone();
+    let (m, ell, f, h, o) = (
+        art.meta_usize("m").unwrap(),
+        art.meta_usize("ell").unwrap(),
+        art.meta_usize("f").unwrap(),
+        art.meta_usize("h").unwrap(),
+        art.meta_usize("o").unwrap(),
+    );
+    // adjacency: banded graph padded into the bucket
+    let g = gen::banded(m, 4, 10, 2008);
+    let ellv = merge_spmm::formats::Ell::from_csr_padded(&g, ell).unwrap();
+    let cols: Vec<i32> = ellv.col_idx.iter().map(|&c| c as i32).collect();
+    let x = gen::dense_matrix(m, f, 2009);
+    let w1 = gen::dense_matrix(f, h, 2010);
+    let w2 = gen::dense_matrix(h, o, 2011);
+    let args = vec![
+        Runtime::literal_i32(&cols, &[m, ell]).unwrap(),
+        Runtime::literal_f32(&ellv.vals, &[m, ell]).unwrap(),
+        Runtime::literal_f32(&x, &[m, f]).unwrap(),
+        Runtime::literal_f32(&w1, &[f, h]).unwrap(),
+        Runtime::literal_f32(&w2, &[h, o]).unwrap(),
+    ];
+    let out = rt.execute(&name, &args).unwrap();
+    assert_eq!(out.len(), m * o);
+    // CPU oracle: ReLU((A·X)·W1)·W2
+    let ax = spmm::spmm_reference(&g, &x, f);
+    let mut hmat = merge_spmm::spmm::dense::gemm(&ax, &w1, m, f, h, 0);
+    for v in hmat.iter_mut() {
+        *v = v.max(0.0);
+    }
+    let want = merge_spmm::spmm::dense::gemm(&hmat, &w2, m, h, o, 0);
+    assert_close(&out, &want, 5e-3);
+}
+
+#[test]
+fn spmv_artifacts_match_cpu() {
+    use merge_spmm::runtime::Runtime;
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let rt = Runtime::load_filtered(&dir, |a| a.entry.starts_with("spmv")).unwrap();
+    // row-split SpMV
+    let art = rt.manifest().by_entry("spmv_rowsplit").next().cloned();
+    if let Some(art) = art {
+        let name = art.name.clone();
+        let (m, k, ell) = (
+            art.meta_usize("m").unwrap(),
+            art.meta_usize("k").unwrap(),
+            art.meta_usize("ell").unwrap(),
+        );
+        let a = merge_spmm::gen::uniform_rows(m, 8, Some(k), 2012);
+        let ellv = merge_spmm::formats::Ell::from_csr_padded(&a, ell).unwrap();
+        let cols: Vec<i32> = ellv.col_idx.iter().map(|&c| c as i32).collect();
+        let x = gen::dense_matrix(k, 1, 2013);
+        let out = rt
+            .execute(
+                &name,
+                &[
+                    Runtime::literal_i32(&cols, &[m, ell]).unwrap(),
+                    Runtime::literal_f32(&ellv.vals, &[m, ell]).unwrap(),
+                    Runtime::literal_f32(&x, &[k]).unwrap(),
+                ],
+            )
+            .unwrap();
+        assert_close(&out, &spmm::spmv_reference(&a, &x), 1e-3);
+    }
+    // merge SpMV
+    let art = rt.manifest().by_entry("spmv_merge").next().cloned();
+    if let Some(art) = art {
+        let name = art.name.clone();
+        let (m, k, z) = (
+            art.meta_usize("m").unwrap(),
+            art.meta_usize("k").unwrap(),
+            art.meta_usize("nnz_pad").unwrap(),
+        );
+        let a = Csr::random(m, k, 5.0, 2014);
+        let flat = merge_spmm::formats::Coo::flatten_padded(&a, z).unwrap();
+        let ri: Vec<i32> = flat.row_idx.iter().map(|&r| r as i32).collect();
+        let ci: Vec<i32> = flat.col_idx.iter().map(|&c| c as i32).collect();
+        let x = gen::dense_matrix(k, 1, 2015);
+        let out = rt
+            .execute(
+                &name,
+                &[
+                    Runtime::literal_i32(&ri, &[z]).unwrap(),
+                    Runtime::literal_i32(&ci, &[z]).unwrap(),
+                    Runtime::literal_f32(&flat.vals, &[z]).unwrap(),
+                    Runtime::literal_f32(&x, &[k]).unwrap(),
+                ],
+            )
+            .unwrap();
+        assert_close(&out, &spmm::spmv_reference(&a, &x), 1e-3);
+    }
+}

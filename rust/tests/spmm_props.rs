@@ -1,0 +1,120 @@
+//! Property tests for the SpMM executors: all algorithms agree with the
+//! textbook reference on arbitrary matrices, worker counts, and widths.
+
+use merge_spmm::formats::{Csr, SellP};
+use merge_spmm::spmm::{
+    baselines, dense,
+    merge::{merge_spmm_with, MergeKind},
+    merge_spmm, rowsplit_spmm, spmm_reference,
+};
+use merge_spmm::util::XorShift;
+
+fn arb_csr(rng: &mut XorShift) -> Csr {
+    let m = 1 + rng.below(80);
+    let k = 1 + rng.below(80);
+    let mut row_ptr = vec![0usize];
+    let mut col_idx = Vec::new();
+    for _ in 0..m {
+        let len = match rng.below(4) {
+            0 => 0,
+            1 => rng.below(4),
+            2 => rng.below(k.min(50)),
+            _ => k.min(rng.below(k + 1)),
+        };
+        col_idx.extend(rng.distinct_sorted(len, k));
+        row_ptr.push(col_idx.len());
+    }
+    let vals = (0..col_idx.len()).map(|_| rng.normal()).collect();
+    Csr::new(m, k, row_ptr, col_idx, vals).unwrap()
+}
+
+fn assert_close(got: &[f32], want: &[f32], case: usize, what: &str) {
+    assert_eq!(got.len(), want.len());
+    for (i, (x, y)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (x - y).abs() < 2e-3 * (1.0 + y.abs()),
+            "case {case} {what} idx {i}: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn prop_executors_match_reference() {
+    let mut rng = XorShift::new(0xB21);
+    for case in 0..120 {
+        let a = arb_csr(&mut rng);
+        let n = [1, 3, 8, 17, 32][rng.below(5)];
+        let p = 1 + rng.below(9);
+        let b: Vec<f32> = (0..a.k * n).map(|_| rng.normal()).collect();
+        let want = spmm_reference(&a, &b, n);
+        assert_close(&rowsplit_spmm(&a, &b, n, p), &want, case, "rowsplit");
+        assert_close(&merge_spmm(&a, &b, n, p), &want, case, "merge-nz");
+        assert_close(
+            &merge_spmm_with(&a, &b, n, p, MergeKind::MergePath),
+            &want,
+            case,
+            "merge-mp",
+        );
+    }
+}
+
+#[test]
+fn prop_baselines_match_reference() {
+    let mut rng = XorShift::new(0xB22);
+    for case in 0..60 {
+        let a = arb_csr(&mut rng);
+        let n = [2, 8, 16][rng.below(3)];
+        let p = 1 + rng.below(5);
+        let b: Vec<f32> = (0..a.k * n).map(|_| rng.normal()).collect();
+        let want = spmm_reference(&a, &b, n);
+        // csrmm (column-major in/out)
+        let b_cm = baselines::to_col_major(&b, a.k, n);
+        let got = baselines::to_row_major(&baselines::csrmm(&a, &b_cm, n, p), a.m, n);
+        assert_close(&got, &want, case, "csrmm");
+        // csrmm2 (row-major in, column-major out)
+        let got2 = baselines::to_row_major(&baselines::csrmm2(&a, &b, n, p), a.m, n);
+        assert_close(&got2, &want, case, "csrmm2");
+        // SELL-P
+        let s = SellP::from_csr(&a, 1 + rng.below(16), 1 + rng.below(8));
+        assert_close(&baselines::sellp_spmm(&s, &b, n, p), &want, case, "sellp");
+    }
+}
+
+#[test]
+fn prop_gemm_equals_spmm_on_dense_matrix() {
+    let mut rng = XorShift::new(0xB23);
+    for case in 0..30 {
+        let m = 1 + rng.below(30);
+        let k = 1 + rng.below(30);
+        let n = 1 + rng.below(20);
+        // fully dense CSR
+        let mut row_ptr = vec![0usize];
+        let mut col_idx = Vec::new();
+        for _ in 0..m {
+            col_idx.extend(0..k as u32);
+            row_ptr.push(col_idx.len());
+        }
+        let vals: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let a_csr = Csr::new(m, k, row_ptr, col_idx, vals.clone()).unwrap();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let via_spmm = merge_spmm(&a_csr, &b, n, 4);
+        let via_gemm = dense::gemm(&vals, &b, m, k, n, 4);
+        assert_close(&via_spmm, &via_gemm, case, "dense-equivalence");
+    }
+}
+
+#[test]
+fn prop_linearity() {
+    // SpMM is linear: A·(αB) = α(A·B)
+    let mut rng = XorShift::new(0xB24);
+    for case in 0..40 {
+        let a = arb_csr(&mut rng);
+        let n = 4;
+        let b: Vec<f32> = (0..a.k * n).map(|_| rng.normal()).collect();
+        let alpha = 2.5f32;
+        let b_scaled: Vec<f32> = b.iter().map(|v| v * alpha).collect();
+        let c1 = rowsplit_spmm(&a, &b_scaled, n, 2);
+        let c2: Vec<f32> = rowsplit_spmm(&a, &b, n, 2).iter().map(|v| v * alpha).collect();
+        assert_close(&c1, &c2, case, "linearity");
+    }
+}
