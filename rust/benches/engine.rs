@@ -1,14 +1,19 @@
 //! Serving-engine benchmark: request throughput across batching policies
 //! and worker counts (the coordinator's §Perf target), CPU-only so it runs
 //! without artifacts and measures the coordination overhead itself.
+//!
+//! Also measures the adaptive-planning delta — cold (every request is a
+//! plan miss) vs warm (plan-cache hits) — and writes the snapshot to
+//! `BENCH_plan.json` at the repo root (the perf-trajectory record).
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use merge_spmm::bench::Bencher;
 use merge_spmm::coordinator::{EngineConfig, Server, ServerConfig};
 use merge_spmm::formats::Csr;
 use merge_spmm::gen;
+use merge_spmm::plan::Planner;
 
 fn run_server(workers: usize, max_batch: usize, requests: usize) {
     let server = Server::start(
@@ -16,6 +21,7 @@ fn run_server(workers: usize, max_batch: usize, requests: usize) {
             artifacts_dir: None,
             threshold: 9.35,
             cpu_workers: 1,
+            ..Default::default()
         },
         ServerConfig {
             workers,
@@ -60,4 +66,109 @@ fn main() {
     bench.bench("direct_engine_call", Some(1.0), || {
         std::hint::black_box(engine.spmm(&a, &b, 32).unwrap());
     });
+
+    plan_cold_vs_warm(requests);
+}
+
+/// Cold-vs-warm plan-cache benchmark → BENCH_plan.json (repo root).
+fn plan_cold_vs_warm(requests: usize) {
+    println!("\n-- adaptive planning: cold vs warm cache --");
+    // distinct working set so every matrix owns a fingerprint
+    let mats: Vec<Arc<Csr>> = (0..32)
+        .map(|i| {
+            let m = 1000 + (i % 8) * 200;
+            Arc::new(if i % 2 == 0 {
+                Csr::random(m, 2000, 4.0 + (i % 5) as f64, 900 + i as u64)
+            } else {
+                gen::uniform_rows(m, 16 + (i % 6) * 8, Some(2000), 900 + i as u64)
+            })
+        })
+        .collect();
+    let b = Arc::new(gen::dense_matrix(2000, 32, 901));
+
+    let server = Server::start(
+        EngineConfig {
+            artifacts_dir: None,
+            threshold: 9.35,
+            cpu_workers: 1,
+            ..Default::default()
+        },
+        ServerConfig {
+            workers: 2,
+            max_batch: 8,
+            max_wait: Duration::from_micros(500),
+            queue_capacity: 512,
+        },
+    )
+    .unwrap();
+    let pass = |label: &str| {
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..requests)
+            .map(|i| server.submit(Arc::clone(&mats[i % mats.len()]), Arc::clone(&b), 32))
+            .collect();
+        for h in handles {
+            let _ = h.recv().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "plan/{label:<12} {requests} requests in {wall:.3}s — {:.1} req/s",
+            requests as f64 / wall
+        );
+        wall
+    };
+    let cold_s = pass("cold");
+    let cold_snap = server.metrics();
+    let warm_s = pass("warm");
+    let warm_snap = server.metrics();
+    server.shutdown();
+
+    // pure planning overhead, execution excluded
+    let planner = Planner::new(9.35, 1024, 1);
+    let reps = 100usize;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        planner.cache().clear();
+        for a in &mats {
+            std::hint::black_box(planner.plan(a, None));
+        }
+    }
+    let plan_cold_ns = t0.elapsed().as_secs_f64() * 1e9 / (reps * mats.len()) as f64;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        for a in &mats {
+            std::hint::black_box(planner.plan(a, None));
+        }
+    }
+    let plan_warm_ns = t0.elapsed().as_secs_f64() * 1e9 / (reps * mats.len()) as f64;
+    println!(
+        "plan/overhead    cold {plan_cold_ns:.0} ns/plan, warm {plan_warm_ns:.0} ns/plan ({:.1}x)",
+        plan_cold_ns / plan_warm_ns.max(1e-9)
+    );
+
+    let out = format!(
+        "{{\n  \"format\": \"bench-plan-v1\",\n  \"status\": \"measured\",\n  \
+         \"command\": \"cargo bench --bench engine\",\n  \"requests_per_pass\": {requests},\n  \
+         \"distinct_matrices\": {},\n  \"cold\": {{\"wall_s\": {cold_s:.6}, \"req_per_s\": {:.2}, \
+         \"plan_misses\": {}, \"plan_hits\": {}}},\n  \
+         \"warm\": {{\"wall_s\": {warm_s:.6}, \"req_per_s\": {:.2}, \
+         \"plan_misses\": {}, \"plan_hits\": {}}},\n  \
+         \"plan_overhead_ns\": {{\"cold\": {plan_cold_ns:.1}, \"warm\": {plan_warm_ns:.1}}},\n  \
+         \"tuner_threshold\": {:.4}\n}}\n",
+        mats.len(),
+        requests as f64 / cold_s,
+        cold_snap.plan_misses,
+        cold_snap.plan_hits,
+        requests as f64 / warm_s,
+        warm_snap.plan_misses - cold_snap.plan_misses,
+        warm_snap.plan_hits - cold_snap.plan_hits,
+        warm_snap.tuner_threshold,
+    );
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_plan.json"))
+        .unwrap_or_else(|| "BENCH_plan.json".into());
+    match std::fs::write(&path, out) {
+        Ok(()) => println!("-> {}", path.display()),
+        Err(e) => eprintln!("(BENCH_plan.json write failed: {e})"),
+    }
 }

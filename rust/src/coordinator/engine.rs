@@ -1,4 +1,4 @@
-//! The synchronous engine core: heuristic → bucket → execute.
+//! The synchronous engine core: plan (cache → tuned heuristic) → execute.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -7,8 +7,9 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::formats::Csr;
-use crate::runtime::{pad, Runtime};
-use crate::spmm::{self, Algorithm, Heuristic};
+use crate::plan::{ExecutionPlan, PlanOutcome, Planner};
+use crate::runtime::{pad, Manifest, Runtime};
+use crate::spmm::{self, Algorithm};
 
 use super::metrics::Metrics;
 
@@ -26,10 +27,17 @@ pub enum ExecutionPath {
 pub struct EngineConfig {
     /// artifacts directory; `None` disables PJRT (CPU executors only)
     pub artifacts_dir: Option<std::path::PathBuf>,
-    /// heuristic threshold (paper: 9.35)
+    /// initial heuristic threshold — the tuner's prior (paper: 9.35)
     pub threshold: f64,
     /// CPU executor worker threads (0 = auto)
     pub cpu_workers: usize,
+    /// plan-cache capacity (entries)
+    pub plan_cache_capacity: usize,
+    /// warm-start file: learned plans + threshold loaded at construction
+    /// when present, written back by `Server::shutdown`
+    pub plan_file: Option<std::path::PathBuf>,
+    /// A/B-probe requests near the decision boundary (CPU path only)
+    pub probe: bool,
 }
 
 impl Default for EngineConfig {
@@ -38,7 +46,26 @@ impl Default for EngineConfig {
             artifacts_dir: Some(std::path::PathBuf::from("artifacts")),
             threshold: spmm::DEFAULT_THRESHOLD,
             cpu_workers: 0,
+            plan_cache_capacity: 1024,
+            plan_file: None,
+            probe: true,
         }
+    }
+}
+
+impl EngineConfig {
+    /// Build the planner this config describes (warm-started from
+    /// `plan_file` when it exists and parses).
+    pub fn build_planner(&self) -> Planner {
+        if let Some(path) = &self.plan_file {
+            if path.exists() {
+                match Planner::load(path, self.plan_cache_capacity, self.cpu_workers) {
+                    Ok(p) => return p,
+                    Err(e) => eprintln!("(plan file {} ignored: {e})", path.display()),
+                }
+            }
+        }
+        Planner::new(self.threshold, self.plan_cache_capacity, self.cpu_workers)
     }
 }
 
@@ -51,21 +78,32 @@ pub struct SpmmResult {
     pub path: ExecutionPath,
     /// artifact used, when `path == Pjrt`
     pub bucket: Option<String>,
+    /// true when the plan came from the cache rather than fresh analysis
+    pub cache_hit: bool,
     pub latency_s: f64,
 }
 
-/// The SpMM serving engine (paper's full pipeline: heuristic + both
-/// algorithms + CSR-native input).
+/// The SpMM serving engine (paper's full pipeline: plan cache + tuned
+/// heuristic + both algorithms + CSR-native input).
 pub struct SpmmEngine {
     runtime: Option<Runtime>,
-    heuristic: Heuristic,
-    cpu_workers: usize,
+    /// plan cache + tuner; CPU worker counts travel inside each plan
+    planner: Arc<Planner>,
+    probe: bool,
     pub metrics: Arc<Metrics>,
 }
 
 impl SpmmEngine {
     /// Build an engine; loads + compiles artifacts if configured.
     pub fn new(cfg: EngineConfig) -> Result<Self> {
+        let planner = Arc::new(cfg.build_planner());
+        Self::new_with_planner(cfg, planner)
+    }
+
+    /// Build an engine around an existing (shared) planner — the server's
+    /// worker threads use this so the plan file is read once, not once per
+    /// worker.
+    pub fn new_with_planner(cfg: EngineConfig, planner: Arc<Planner>) -> Result<Self> {
         let runtime = match &cfg.artifacts_dir {
             Some(dir) if dir.join("manifest.json").exists() => Some(Runtime::load(dir)?),
             Some(dir) => {
@@ -76,42 +114,88 @@ impl SpmmEngine {
             }
             None => None,
         };
-        Ok(Self {
+        let engine = Self {
             runtime,
-            heuristic: Heuristic::new(cfg.threshold),
-            cpu_workers: cfg.cpu_workers,
+            planner,
+            probe: cfg.probe,
             metrics: Arc::new(Metrics::new()),
-        })
+        };
+        engine.sync_gauges();
+        Ok(engine)
     }
 
     /// CPU-only engine (no artifacts needed) — used by tests and benches.
     pub fn cpu_only(threshold: f64, workers: usize) -> Self {
-        Self {
+        let engine = Self {
             runtime: None,
-            heuristic: Heuristic::new(threshold),
-            cpu_workers: workers,
+            planner: Arc::new(Planner::new(threshold, 1024, workers)),
+            probe: true,
             metrics: Arc::new(Metrics::new()),
-        }
+        };
+        engine.sync_gauges();
+        engine
+    }
+
+    /// Mirror planner state into the metrics gauges so snapshots report
+    /// the real threshold/cache state even before the first request.
+    fn sync_gauges(&self) {
+        self.metrics
+            .sync_plan_gauges(&self.planner.cache().stats(), self.threshold());
     }
 
     pub fn has_runtime(&self) -> bool {
         self.runtime.is_some()
     }
 
-    pub fn heuristic(&self) -> &Heuristic {
-        &self.heuristic
+    /// The shared adaptive planner (cache + tuner).
+    pub fn planner(&self) -> &Arc<Planner> {
+        &self.planner
     }
 
-    /// Execute `C = A·B`; `b` is `k×n` row-major.
+    /// The tuner's current threshold (starts at the configured prior).
+    pub fn threshold(&self) -> f64 {
+        self.planner.tuner().threshold()
+    }
+
+    fn manifest(&self) -> Option<&Manifest> {
+        self.runtime.as_ref().map(|rt| rt.manifest())
+    }
+
+    /// Execute `C = A·B`; `b` is `k×n` row-major.  Consults the plan cache
+    /// before any per-request analysis.
     pub fn spmm(&self, a: &Csr, b: &[f32], n: usize) -> Result<SpmmResult> {
+        let outcome = self.planner.plan(a, self.manifest());
+        let plan_counter = if outcome.cache_hit {
+            &self.metrics.plan_hits
+        } else {
+            &self.metrics.plan_misses
+        };
+        plan_counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.metrics
+            .sync_plan_gauges(&self.planner.cache().stats(), self.threshold());
+        self.execute(a, b, n, &outcome)
+    }
+
+    /// Execute a request that was already planned (the router plans once
+    /// per request; workers must not re-plan or re-count cache traffic).
+    pub fn spmm_planned(
+        &self,
+        a: &Csr,
+        b: &[f32],
+        n: usize,
+        outcome: &PlanOutcome,
+    ) -> Result<SpmmResult> {
+        self.execute(a, b, n, outcome)
+    }
+
+    fn execute(&self, a: &Csr, b: &[f32], n: usize, outcome: &PlanOutcome) -> Result<SpmmResult> {
         let t0 = Instant::now();
         self.metrics
             .requests
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let algorithm = self.heuristic.select(a);
-        let result = self.dispatch(a, b, n, algorithm);
+        let result = self.dispatch(a, b, n, &outcome.plan);
         match &result {
-            Ok(_) => {
+            Ok((_, _, _, algorithm)) => {
                 self.metrics
                     .completed
                     .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
@@ -129,7 +213,7 @@ impl SpmmEngine {
         }
         let latency = t0.elapsed().as_secs_f64();
         self.metrics.record_latency(latency);
-        result.map(|(c, path, bucket)| {
+        result.map(|(c, path, bucket, algorithm)| {
             match path {
                 ExecutionPath::Pjrt => &self.metrics.pjrt,
                 ExecutionPath::CpuFallback => &self.metrics.cpu_fallback,
@@ -140,45 +224,59 @@ impl SpmmEngine {
                 algorithm,
                 path,
                 bucket,
+                cache_hit: outcome.cache_hit,
                 latency_s: latency,
             }
         })
     }
 
+    /// Run the plan.  Returns the algorithm actually executed — an A/B
+    /// probe may return the other algorithm's (faster) result.
     fn dispatch(
         &self,
         a: &Csr,
         b: &[f32],
         n: usize,
-        algorithm: Algorithm,
-    ) -> Result<(Vec<f32>, ExecutionPath, Option<String>)> {
+        plan: &ExecutionPlan,
+    ) -> Result<(Vec<f32>, ExecutionPath, Option<String>, Algorithm)> {
         if b.len() != a.k * n {
             return Err(anyhow!("B must be k×n row-major ({}×{n})", a.k));
         }
-        if let Some(rt) = &self.runtime {
-            match algorithm {
-                Algorithm::RowSplit => {
-                    if let Some(art) = pad::pick_rowsplit_bucket(rt.manifest(), a) {
-                        let name = art.name.clone();
-                        let c = self.run_rowsplit_artifact(rt, a, b, n, &name)?;
-                        return Ok((c, ExecutionPath::Pjrt, Some(name)));
-                    }
-                }
-                Algorithm::MergeBased => {
-                    if let Some(art) = pad::pick_merge_bucket(rt.manifest(), a) {
-                        let name = art.name.clone();
-                        let c = self.run_merge_artifact(rt, a, b, n, &name)?;
-                        return Ok((c, ExecutionPath::Pjrt, Some(name)));
-                    }
-                }
-            }
+        if let (Some(rt), Some(name)) = (&self.runtime, &plan.bucket) {
+            let c = match plan.algorithm {
+                Algorithm::RowSplit => self.run_rowsplit_artifact(rt, a, b, n, name)?,
+                Algorithm::MergeBased => self.run_merge_artifact(rt, a, b, n, name)?,
+            };
+            return Ok((c, ExecutionPath::Pjrt, Some(name.clone()), plan.algorithm));
         }
-        // CPU fallback — same algorithms, in-process executors.
-        let c = match algorithm {
-            Algorithm::RowSplit => spmm::rowsplit_spmm(a, b, n, self.cpu_workers),
-            Algorithm::MergeBased => spmm::merge_spmm(a, b, n, self.cpu_workers),
+        // CPU fallback — same algorithms, in-process executors.  This is
+        // also where boundary A/B probes run: both executors on the same
+        // request, the measurement feeds the tuner, the faster result is
+        // returned (the probe costs one extra executor pass).
+        let p = plan.cpu_parallelism(a);
+        if self.probe && self.planner.should_probe(a) {
+            let t0 = Instant::now();
+            let c_rs = spmm::rowsplit_spmm(a, b, n, p);
+            let t_rs = t0.elapsed().as_secs_f64();
+            let t1 = Instant::now();
+            let c_mg = spmm::merge_spmm(a, b, n, p);
+            let t_mg = t1.elapsed().as_secs_f64();
+            self.planner.record_probe(a, t_rs, t_mg, self.manifest());
+            self.metrics
+                .probes
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let (c, algorithm) = if t_mg < t_rs {
+                (c_mg, Algorithm::MergeBased)
+            } else {
+                (c_rs, Algorithm::RowSplit)
+            };
+            return Ok((c, ExecutionPath::CpuFallback, None, algorithm));
+        }
+        let c = match plan.algorithm {
+            Algorithm::RowSplit => spmm::rowsplit_spmm(a, b, n, p),
+            Algorithm::MergeBased => spmm::merge_spmm(a, b, n, p),
         };
-        Ok((c, ExecutionPath::CpuFallback, None))
+        Ok((c, ExecutionPath::CpuFallback, None, plan.algorithm))
     }
 
     fn run_rowsplit_artifact(
@@ -237,6 +335,16 @@ impl SpmmEngine {
     /// `Metrics` across all worker-owned engines).
     pub fn with_shared_metrics(mut self, metrics: Arc<Metrics>) -> Self {
         self.metrics = metrics;
+        self.sync_gauges();
+        self
+    }
+
+    /// Replace the planner with a shared one (the server shares one
+    /// `Planner` across the router and all worker-owned engines, so plans,
+    /// cache state, and the learned threshold are global).
+    pub fn with_shared_planner(mut self, planner: Arc<Planner>) -> Self {
+        self.planner = planner;
+        self.sync_gauges();
         self
     }
 }
@@ -254,6 +362,7 @@ mod tests {
         let r = eng.spmm(&short, &b, 8).unwrap();
         assert_eq!(r.algorithm, Algorithm::MergeBased);
         assert_eq!(r.path, ExecutionPath::CpuFallback);
+        assert!(!r.cache_hit);
         let want = spmm::spmm_reference(&short, &b, 8);
         for (x, y) in r.c.iter().zip(&want) {
             assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()));
@@ -268,6 +377,25 @@ mod tests {
         assert_eq!(snap.rowsplit, 1);
         assert_eq!(snap.merge, 1);
         assert_eq!(snap.cpu_fallback, 2);
+        assert_eq!(snap.plan_misses, 2);
+        assert_eq!(snap.plan_hits, 0);
+    }
+
+    #[test]
+    fn repeated_matrix_hits_plan_cache() {
+        let eng = SpmmEngine::cpu_only(9.35, 2);
+        let a = Csr::random(200, 200, 4.0, 1107);
+        let b = crate::gen::dense_matrix(200, 8, 1108);
+        assert!(!eng.spmm(&a, &b, 8).unwrap().cache_hit);
+        for _ in 0..3 {
+            let r = eng.spmm(&a, &b, 8).unwrap();
+            assert!(r.cache_hit);
+        }
+        let snap = eng.metrics.snapshot();
+        assert_eq!(snap.plan_misses, 1);
+        assert_eq!(snap.plan_hits, 3);
+        assert_eq!(snap.plan_len, 1);
+        assert_eq!(snap.tuner_threshold, 9.35);
     }
 
     #[test]
@@ -280,6 +408,37 @@ mod tests {
         for (x, y) in r.c.iter().zip(&want) {
             assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()));
         }
+    }
+
+    #[test]
+    fn probe_result_still_matches_reference() {
+        // d ≈ 9 sits inside the probe band; with probe_every = 8 the first
+        // boundary request A/B-runs both executors — the returned result
+        // must still be correct and a probe must be recorded.
+        let eng = SpmmEngine::cpu_only(9.35, 2);
+        let a = crate::gen::uniform_rows(400, 9, Some(400), 1109);
+        let b = crate::gen::dense_matrix(400, 8, 1110);
+        let r = eng.spmm(&a, &b, 8).unwrap();
+        let want = spmm::spmm_reference(&a, &b, 8);
+        for (x, y) in r.c.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()));
+        }
+        assert_eq!(eng.metrics.snapshot().probes, 1);
+        assert_eq!(eng.planner().tuner().stats().probes, 1);
+    }
+
+    #[test]
+    fn spmm_planned_skips_plan_counters() {
+        let eng = SpmmEngine::cpu_only(9.35, 2);
+        let a = Csr::random(100, 100, 4.0, 1111);
+        let b = crate::gen::dense_matrix(100, 4, 1112);
+        let outcome = eng.planner().plan(&a, None);
+        let r = eng.spmm_planned(&a, &b, 4, &outcome).unwrap();
+        assert_eq!(r.algorithm, Algorithm::MergeBased);
+        let snap = eng.metrics.snapshot();
+        assert_eq!(snap.completed, 1);
+        // plan counters belong to whoever planned (router) — not here
+        assert_eq!(snap.plan_hits + snap.plan_misses, 0);
     }
 
     #[test]

@@ -18,13 +18,40 @@ pub struct Metrics {
     pub merge: AtomicU64,
     pub pjrt: AtomicU64,
     pub cpu_fallback: AtomicU64,
+    /// plan-cache hits/misses (counted where planning happens: router or
+    /// direct engine calls — never double-counted by workers)
+    pub plan_hits: AtomicU64,
+    pub plan_misses: AtomicU64,
+    /// A/B probes executed (both algorithms run on one request)
+    pub probes: AtomicU64,
+    /// gauge: lifetime plan-cache evictions (mirrored from `PlanCache`)
+    plan_evictions: AtomicU64,
+    /// gauge: current plan-cache size
+    plan_len: AtomicU64,
+    /// gauge: the tuner's current threshold, stored as f64 bits
+    tuner_threshold_bits: AtomicU64,
     hist: Mutex<[u64; BUCKETS.len() + 1]>,
     latency_sum_us: AtomicU64,
 }
 
 impl Metrics {
     pub fn new() -> Self {
-        Self::default()
+        let m = Self::default();
+        // threshold gauge starts at the paper's prior, not 0.0
+        m.tuner_threshold_bits.store(
+            crate::spmm::DEFAULT_THRESHOLD.to_bits(),
+            Ordering::Relaxed,
+        );
+        m
+    }
+
+    /// Mirror planner state into the exported gauges (called by whoever
+    /// just planned — engine or router).
+    pub fn sync_plan_gauges(&self, cache: &crate::plan::CacheStats, threshold: f64) {
+        self.plan_evictions.store(cache.evictions, Ordering::Relaxed);
+        self.plan_len.store(cache.len as u64, Ordering::Relaxed);
+        self.tuner_threshold_bits
+            .store(threshold.to_bits(), Ordering::Relaxed);
     }
 
     pub fn record_latency(&self, secs: f64) {
@@ -65,6 +92,12 @@ impl Metrics {
             merge: self.merge.load(Ordering::Relaxed),
             pjrt: self.pjrt.load(Ordering::Relaxed),
             cpu_fallback: self.cpu_fallback.load(Ordering::Relaxed),
+            plan_hits: self.plan_hits.load(Ordering::Relaxed),
+            plan_misses: self.plan_misses.load(Ordering::Relaxed),
+            plan_evictions: self.plan_evictions.load(Ordering::Relaxed),
+            plan_len: self.plan_len.load(Ordering::Relaxed),
+            probes: self.probes.load(Ordering::Relaxed),
+            tuner_threshold: f64::from_bits(self.tuner_threshold_bits.load(Ordering::Relaxed)),
             p50_s: self.latency_percentile(50.0),
             p99_s: self.latency_percentile(99.0),
             mean_latency_s: if completed > 0 {
@@ -86,16 +119,35 @@ pub struct MetricsSnapshot {
     pub merge: u64,
     pub pjrt: u64,
     pub cpu_fallback: u64,
+    pub plan_hits: u64,
+    pub plan_misses: u64,
+    pub plan_evictions: u64,
+    pub plan_len: u64,
+    pub probes: u64,
+    pub tuner_threshold: f64,
     pub p50_s: f64,
     pub p99_s: f64,
     pub mean_latency_s: f64,
+}
+
+impl MetricsSnapshot {
+    /// Plan-cache hit rate over all planned requests (0 when none yet).
+    pub fn plan_hit_rate(&self) -> f64 {
+        let total = self.plan_hits + self.plan_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.plan_hits as f64 / total as f64
+        }
+    }
 }
 
 impl std::fmt::Display for MetricsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "req={} ok={} err={} rowsplit={} merge={} pjrt={} cpu={} p50={:.1}ms p99={:.1}ms",
+            "req={} ok={} err={} rowsplit={} merge={} pjrt={} cpu={} \
+             plan_hit={} plan_miss={} evict={} probes={} thr={:.2} p50={:.1}ms p99={:.1}ms",
             self.requests,
             self.completed,
             self.errors,
@@ -103,6 +155,11 @@ impl std::fmt::Display for MetricsSnapshot {
             self.merge,
             self.pjrt,
             self.cpu_fallback,
+            self.plan_hits,
+            self.plan_misses,
+            self.plan_evictions,
+            self.probes,
+            self.tuner_threshold,
             self.p50_s * 1e3,
             self.p99_s * 1e3
         )
@@ -138,5 +195,32 @@ mod tests {
         let m = Metrics::new();
         assert_eq!(m.latency_percentile(99.0), 0.0);
         assert_eq!(m.snapshot().mean_latency_s, 0.0);
+    }
+
+    #[test]
+    fn plan_gauges_and_hit_rate() {
+        let m = Metrics::new();
+        // threshold gauge starts at the paper's prior
+        assert_eq!(m.snapshot().tuner_threshold, crate::spmm::DEFAULT_THRESHOLD);
+        m.plan_hits.store(3, Ordering::Relaxed);
+        m.plan_misses.store(1, Ordering::Relaxed);
+        m.sync_plan_gauges(
+            &crate::plan::CacheStats {
+                hits: 3,
+                misses: 1,
+                evictions: 2,
+                len: 1,
+            },
+            7.5,
+        );
+        let snap = m.snapshot();
+        assert_eq!(snap.plan_hits, 3);
+        assert_eq!(snap.plan_misses, 1);
+        assert_eq!(snap.plan_evictions, 2);
+        assert_eq!(snap.plan_len, 1);
+        assert_eq!(snap.tuner_threshold, 7.5);
+        assert!((snap.plan_hit_rate() - 0.75).abs() < 1e-12);
+        let text = format!("{snap}");
+        assert!(text.contains("plan_hit=3") && text.contains("thr=7.50"), "{text}");
     }
 }

@@ -4,15 +4,19 @@
 //! carry a CSR matrix (or a handle to a cached one) and a dense tall-skinny
 //! B; the engine
 //!
-//! 1. **selects the algorithm** with the paper's O(1) heuristic
-//!    (`d = nnz/m` vs 9.35 — [`crate::spmm::Heuristic`]),
-//! 2. **routes** the request to the smallest AOT shape bucket that fits
-//!    ([`crate::runtime::pad`]), falling back to the in-process CPU
-//!    executors when nothing fits,
+//! 1. **plans** the request through [`crate::plan`]: a fingerprint lookup
+//!    in the LRU plan cache, falling back to the online-tuned heuristic
+//!    (`d = nnz/m` vs a learned threshold seeded at the paper's 9.35) plus
+//!    AOT bucket search ([`crate::runtime::pad`]) on a miss — planned once
+//!    per request, never per hop,
+//! 2. **executes** the plan against the bucket's compiled artifact, or the
+//!    in-process CPU executors when nothing fits (A/B-probing boundary
+//!    requests there to keep the tuner calibrated),
 //! 3. **batches** same-bucket requests ([`batcher`]) so one worker runs
 //!    them back-to-back against the compiled executable,
-//! 4. records **metrics** (per-algorithm counts, latency percentiles,
-//!    fallback rate — [`metrics`]).
+//! 4. records **metrics** (per-algorithm counts, plan-cache hit/miss/
+//!    eviction counters, tuner threshold, latency percentiles, fallback
+//!    rate — [`metrics`]).
 //!
 //! [`engine`] is the synchronous core; [`router`] puts a threaded
 //! request-queue front-end on top (std threads + channels; the offline

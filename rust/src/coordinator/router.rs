@@ -1,5 +1,5 @@
 //! Threaded request front-end: bounded queue (backpressure) → router
-//! thread (bucket batching) → worker pool → reply channels.
+//! thread (plan once + bucket batching) → worker pool → reply channels.
 //!
 //! std threads + channels rather than an async runtime: the serve path is
 //! CPU-bound PJRT execution, one OS thread per worker is the right shape,
@@ -9,8 +9,11 @@
 //! runtime cannot be shared across threads: **each worker owns a full
 //! engine** (its own client + compiled executables), built inside the
 //! worker thread from a shared [`EngineConfig`].  Metrics are shared
-//! through one `Arc<Metrics>`.  The router thread does bucket routing from
-//! the (plain-data) manifest alone.
+//! through one `Arc<Metrics>`, and *plans* through one `Arc<Planner>`:
+//! the router thread plans each request exactly once (plan-cache lookup,
+//! falling back to the tuned heuristic + bucket search) and the chosen
+//! [`PlanOutcome`] rides with the request to the worker — no hop ever
+//! re-derives the decision.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -21,8 +24,8 @@ use std::time::Duration;
 use anyhow::Result;
 
 use crate::formats::Csr;
-use crate::runtime::{pad, Manifest};
-use crate::spmm::{Algorithm, Heuristic};
+use crate::plan::{PlanOutcome, Planner};
+use crate::runtime::Manifest;
 
 use super::batcher::BatchQueue;
 use super::engine::{EngineConfig, SpmmEngine, SpmmResult};
@@ -57,6 +60,8 @@ struct Request {
     csr: Arc<Csr>,
     b: Arc<Vec<f32>>,
     n: usize,
+    /// filled by the router thread — planned exactly once per request
+    outcome: Option<PlanOutcome>,
     reply: Sender<Result<SpmmResult>>,
 }
 
@@ -71,6 +76,9 @@ pub struct Server {
     router: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     metrics: Arc<Metrics>,
+    planner: Arc<Planner>,
+    /// learned plans are written back here on shutdown
+    plan_file: Option<std::path::PathBuf>,
     next_id: AtomicU64,
 }
 
@@ -80,14 +88,19 @@ impl Server {
     /// affected requests' reply channels.
     pub fn start(engine_cfg: EngineConfig, cfg: ServerConfig) -> Result<Self> {
         let metrics = Arc::new(Metrics::new());
-        // Router needs the manifest for bucket keys (plain data, Send).
+        // One planner for the whole server: the router plans, the workers
+        // execute and feed probe measurements back into the same tuner.
+        let planner = Arc::new(engine_cfg.build_planner());
+        // gauges report the real (possibly warm-loaded) planner state from
+        // the first snapshot on, not the paper prior
+        metrics.sync_plan_gauges(&planner.cache().stats(), planner.tuner().threshold());
+        // Router needs the manifest for bucket planning (plain data, Send).
         let manifest: Option<Manifest> = match &engine_cfg.artifacts_dir {
             Some(dir) if dir.join("manifest.json").exists() => {
                 Some(Manifest::load(dir).map_err(anyhow::Error::msg)?)
             }
             _ => None,
         };
-        let heuristic = Heuristic::new(engine_cfg.threshold);
 
         let (ingress_tx, ingress_rx) = sync_channel::<RouterMsg>(cfg.queue_capacity);
         let (work_tx, work_rx) = sync_channel::<Vec<Request>>(cfg.queue_capacity);
@@ -98,9 +111,10 @@ impl Server {
         for _ in 0..cfg.workers.max(1) {
             let work_rx = Arc::clone(&work_rx);
             let metrics = Arc::clone(&metrics);
+            let planner = Arc::clone(&planner);
             let engine_cfg = engine_cfg.clone();
             workers.push(std::thread::spawn(move || {
-                let engine = match SpmmEngine::new(engine_cfg) {
+                let engine = match SpmmEngine::new_with_planner(engine_cfg, planner) {
                     Ok(e) => e.with_shared_metrics(metrics),
                     Err(e) => {
                         // Engine failed to build: fail every batch we get.
@@ -127,7 +141,10 @@ impl Server {
                             // same-bucket requests run back-to-back against
                             // one compiled executable
                             for r in reqs {
-                                let res = engine.spmm(&r.csr, &r.b, r.n);
+                                let res = match &r.outcome {
+                                    Some(o) => engine.spmm_planned(&r.csr, &r.b, r.n, o),
+                                    None => engine.spmm(&r.csr, &r.b, r.n),
+                                };
                                 let _ = r.reply.send(res);
                             }
                         }
@@ -137,55 +154,81 @@ impl Server {
             }));
         }
 
-        // router thread: bucket batching with deadline flushes
-        let router = std::thread::spawn(move || {
-            let mut bq = BatchQueue::new(cfg.max_batch, cfg.max_wait);
-            let mut pending: HashMap<u64, Request> = HashMap::new();
-            let send_batch = |ids: Vec<u64>, pending: &mut HashMap<u64, Request>| {
-                let reqs: Vec<Request> =
-                    ids.into_iter().filter_map(|id| pending.remove(&id)).collect();
-                if !reqs.is_empty() {
-                    let _ = work_tx.send(reqs);
+        // router thread: plan once per request, then bucket batching with
+        // deadline flushes
+        let router = {
+            let metrics = Arc::clone(&metrics);
+            let planner = Arc::clone(&planner);
+            std::thread::spawn(move || {
+                let mut bq = BatchQueue::new(cfg.max_batch, cfg.max_wait);
+                let mut pending: HashMap<u64, Request> = HashMap::new();
+                let send_batch = |ids: Vec<u64>, pending: &mut HashMap<u64, Request>| {
+                    let reqs: Vec<Request> =
+                        ids.into_iter().filter_map(|id| pending.remove(&id)).collect();
+                    if !reqs.is_empty() {
+                        let _ = work_tx.send(reqs);
+                    }
+                };
+                loop {
+                    let timeout = bq.next_deadline().unwrap_or(Duration::from_millis(50));
+                    match ingress_rx.recv_timeout(timeout) {
+                        Ok(RouterMsg::Req(mut req)) => {
+                            let outcome = planner.plan(&req.csr, manifest.as_ref());
+                            let plan_counter = if outcome.cache_hit {
+                                &metrics.plan_hits
+                            } else {
+                                &metrics.plan_misses
+                            };
+                            plan_counter.fetch_add(1, Ordering::Relaxed);
+                            metrics.sync_plan_gauges(
+                                &planner.cache().stats(),
+                                planner.tuner().threshold(),
+                            );
+                            // routing key: the planned AOT bucket, or the
+                            // algorithm for CPU-fallback requests (still
+                            // groups similar work)
+                            let key = outcome
+                                .plan
+                                .bucket
+                                .clone()
+                                .unwrap_or_else(|| format!("cpu:{}", outcome.plan.algorithm));
+                            req.outcome = Some(outcome);
+                            let id = req.id;
+                            pending.insert(id, req);
+                            if let Some(batch) = bq.push(&key, id) {
+                                send_batch(batch.requests, &mut pending);
+                            }
+                        }
+                        Ok(RouterMsg::Shutdown) => {
+                            for batch in bq.flush_all() {
+                                send_batch(batch.requests, &mut pending);
+                            }
+                            break;
+                        }
+                        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                            for batch in bq.flush_expired() {
+                                send_batch(batch.requests, &mut pending);
+                            }
+                        }
+                        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                            for batch in bq.flush_all() {
+                                send_batch(batch.requests, &mut pending);
+                            }
+                            break;
+                        }
+                    }
                 }
-            };
-            loop {
-                let timeout = bq.next_deadline().unwrap_or(Duration::from_millis(50));
-                match ingress_rx.recv_timeout(timeout) {
-                    Ok(RouterMsg::Req(req)) => {
-                        let key = bucket_key(manifest.as_ref(), &heuristic, &req.csr);
-                        let id = req.id;
-                        pending.insert(id, req);
-                        if let Some(batch) = bq.push(&key, id) {
-                            send_batch(batch.requests, &mut pending);
-                        }
-                    }
-                    Ok(RouterMsg::Shutdown) => {
-                        for batch in bq.flush_all() {
-                            send_batch(batch.requests, &mut pending);
-                        }
-                        break;
-                    }
-                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
-                        for batch in bq.flush_expired() {
-                            send_batch(batch.requests, &mut pending);
-                        }
-                    }
-                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                        for batch in bq.flush_all() {
-                            send_batch(batch.requests, &mut pending);
-                        }
-                        break;
-                    }
-                }
-            }
-            // dropping work_tx closes the worker pool
-        });
+                // dropping work_tx closes the worker pool
+            })
+        };
 
         Ok(Self {
             ingress: ingress_tx,
             router: Some(router),
             workers,
             metrics,
+            planner,
+            plan_file: engine_cfg.plan_file,
             next_id: AtomicU64::new(0),
         })
     }
@@ -204,6 +247,7 @@ impl Server {
             csr,
             b,
             n,
+            outcome: None,
             reply: tx,
         };
         let _ = self.ingress.send(RouterMsg::Req(req));
@@ -226,7 +270,13 @@ impl Server {
         self.metrics.snapshot()
     }
 
-    /// Drain queues and stop all threads.
+    /// The server-wide adaptive planner (cache + tuner).
+    pub fn planner(&self) -> &Arc<Planner> {
+        &self.planner
+    }
+
+    /// Drain queues and stop all threads; persists learned plans when a
+    /// plan file is configured.
     pub fn shutdown(mut self) -> MetricsSnapshot {
         let _ = self.ingress.send(RouterMsg::Shutdown);
         if let Some(h) = self.router.take() {
@@ -235,35 +285,26 @@ impl Server {
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
+        if let Some(path) = &self.plan_file {
+            if let Err(e) = self.planner.save(path) {
+                eprintln!("(plan save to {} failed: {e})", path.display());
+            }
+        }
         self.metrics.snapshot()
     }
-}
-
-/// Routing key: the AOT bucket this request would use, or the algorithm
-/// name for CPU-fallback requests (still groups similar work).
-fn bucket_key(manifest: Option<&Manifest>, heuristic: &Heuristic, csr: &Csr) -> String {
-    let alg = heuristic.select(csr);
-    if let Some(m) = manifest {
-        let pick = match alg {
-            Algorithm::RowSplit => pad::pick_rowsplit_bucket(m, csr),
-            Algorithm::MergeBased => pad::pick_merge_bucket(m, csr),
-        };
-        if let Some(art) = pick {
-            return art.name.clone();
-        }
-    }
-    format!("cpu:{alg}")
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::spmm::Algorithm;
 
     fn cpu_cfg() -> EngineConfig {
         EngineConfig {
             artifacts_dir: None,
             threshold: 9.35,
             cpu_workers: 2,
+            ..Default::default()
         }
     }
 
@@ -286,6 +327,9 @@ mod tests {
         let snap = server.shutdown();
         assert_eq!(snap.completed, 20);
         assert_eq!(snap.errors, 0);
+        // one matrix, 20 requests: planned once, 19 cache hits
+        assert_eq!(snap.plan_misses, 1);
+        assert_eq!(snap.plan_hits, 19);
     }
 
     #[test]
@@ -346,5 +390,33 @@ mod tests {
         let r = server.submit_blocking(a, b, 4);
         assert!(r.is_ok());
         server.shutdown();
+    }
+
+    #[test]
+    fn plans_survive_restart_via_plan_file() {
+        let dir = std::env::temp_dir().join("merge_spmm_router_plans");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plans.json");
+        let _ = std::fs::remove_file(&path);
+        let cfg = EngineConfig {
+            plan_file: Some(path.clone()),
+            ..cpu_cfg()
+        };
+
+        let server = Server::start(cfg.clone(), ServerConfig::default()).unwrap();
+        let a = Arc::new(Csr::random(120, 120, 4.0, 1210));
+        let b = Arc::new(crate::gen::dense_matrix(120, 4, 1211));
+        server.submit_blocking(Arc::clone(&a), Arc::clone(&b), 4).unwrap();
+        let snap = server.shutdown(); // writes the plan file
+        assert_eq!(snap.plan_misses, 1);
+        assert!(path.exists());
+
+        // a fresh server warm-starts from the file: first request is a hit
+        let server = Server::start(cfg, ServerConfig::default()).unwrap();
+        server.submit_blocking(a, b, 4).unwrap();
+        let snap = server.shutdown();
+        assert_eq!(snap.plan_hits, 1);
+        assert_eq!(snap.plan_misses, 0);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -25,9 +25,33 @@
 //!     figures (we have no K40c; see DESIGN.md §Substitutions),
 //!   - [`gen`] — matrix generators incl. the 157-matrix synthetic suite,
 //!   - [`runtime`] — PJRT CPU client running the AOT artifacts,
+//!   - [`plan`] — the adaptive planning subsystem (see below),
 //!   - [`coordinator`] — the serving engine: router, bucket batcher,
-//!     heuristic kernel selection, metrics,
+//!     plan-cache-backed kernel selection, metrics,
 //!   - [`bench`] — harnesses that print every paper table/figure.
+//!
+//! ## plan
+//!
+//! The paper's third contribution is an O(1) heuristic (`d = nnz/m` vs a
+//! 9.35 threshold) that picks the right algorithm 99.3 % of the time.  The
+//! [`plan`] subsystem turns that constant into a *learned, cached*
+//! decision:
+//!
+//! * [`plan::Fingerprint`] — a cheap, stable key over a CSR matrix's shape
+//!   and quantized row-length statistics (one O(m) pass over `row_ptr`);
+//! * [`plan::PlanCache`] — a concurrent LRU from fingerprints to full
+//!   [`plan::ExecutionPlan`]s (algorithm, decomposition granularity, AOT
+//!   bucket, worker count) with hit/miss/eviction counters, consulted by
+//!   [`coordinator::engine`] before any per-request analysis;
+//! * [`plan::OnlineTuner`] — A/B-probes both algorithms on a thin sample
+//!   of requests near the decision boundary and nudges the threshold from
+//!   measured latencies (the published 9.35 is the prior, not a constant);
+//! * [`plan::persist`] — JSON save/load so the warm cache and calibrated
+//!   threshold survive restarts.
+//!
+//! [`coordinator::router`] plans once per request (not once per hop) and
+//! shares one [`plan::Planner`] across every worker engine; cache and
+//! tuner state surface through [`coordinator::metrics`].
 
 // bench wired in after sim/runtime/coordinator land
 pub mod bench;
@@ -35,6 +59,7 @@ pub mod coordinator;
 pub mod formats;
 pub mod gen;
 pub mod loadbalance;
+pub mod plan;
 pub mod runtime;
 pub mod sim;
 pub mod spmm;

@@ -47,7 +47,7 @@ merge-spmm — CSR SpMM with row-split + merge-based kernels and the d=nnz/m heu
 USAGE:
   merge-spmm bench <id|all> [--measured] [--seed N] [--out DIR]
   merge-spmm run --mtx FILE [--n N] [--artifacts DIR] [--cpu-only]
-  merge-spmm serve [--requests N] [--workers W] [--cpu-only] [--artifacts DIR]
+  merge-spmm serve [--requests N] [--workers W] [--cpu-only] [--artifacts DIR] [--plans FILE]
   merge-spmm suite [--seed N]
   merge-spmm info [--artifacts DIR]
 
@@ -73,7 +73,7 @@ fn positional(args: &[String]) -> Option<&str> {
             continue;
         }
         if a == "--seed" || a == "--out" || a == "--n" || a == "--mtx" || a == "--artifacts"
-            || a == "--requests" || a == "--workers"
+            || a == "--requests" || a == "--workers" || a == "--plans"
         {
             skip = true;
             continue;
@@ -195,7 +195,7 @@ fn build_engine(args: &[String]) -> anyhow::Result<SpmmEngine> {
 fn cmd_serve(args: &[String]) -> i32 {
     let requests: usize = opt(args, "--requests").and_then(|s| s.parse().ok()).unwrap_or(200);
     let workers: usize = opt(args, "--workers").and_then(|s| s.parse().ok()).unwrap_or(2);
-    let engine_cfg = if flag(args, "--cpu-only") {
+    let mut engine_cfg = if flag(args, "--cpu-only") {
         EngineConfig {
             artifacts_dir: None,
             ..Default::default()
@@ -208,6 +208,8 @@ fn cmd_serve(args: &[String]) -> i32 {
             ..Default::default()
         }
     };
+    // learned plans survive restarts when a plan file is given
+    engine_cfg.plan_file = opt(args, "--plans").map(Into::into);
     let server = match Server::start(
         engine_cfg,
         ServerConfig {

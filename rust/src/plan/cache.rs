@@ -1,0 +1,262 @@
+//! Concurrent LRU cache: [`Fingerprint`] → [`ExecutionPlan`].
+//!
+//! Repeated matrices are the common case under serving traffic (the same
+//! graph multiplied against fresh feature blocks), so the engine consults
+//! this cache before any analysis: a hit skips the heuristic, bucket
+//! search, and granularity computation entirely.  The map and recency
+//! index live behind one `Mutex` (the critical section is a couple of map
+//! operations — far below the cost of even a fingerprint pass), while
+//! hit/miss/eviction counters are lock-free atomics so the metrics
+//! exporter never contends with the serve path.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::fingerprint::Fingerprint;
+use super::ExecutionPlan;
+
+/// Point-in-time cache counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub len: usize,
+}
+
+struct CachedPlan {
+    plan: ExecutionPlan,
+    /// recency stamp; also the key into `Inner::lru`
+    tick: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    map: HashMap<Fingerprint, CachedPlan>,
+    /// tick → fingerprint, ascending = least recently used first
+    lru: BTreeMap<u64, Fingerprint>,
+    tick: u64,
+}
+
+/// Thread-safe LRU plan cache.
+pub struct PlanCache {
+    capacity: usize,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl PlanCache {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity: capacity.max(1),
+            inner: Mutex::new(Inner::default()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Look up a plan, refreshing its recency on hit.
+    pub fn get(&self, fp: &Fingerprint) -> Option<ExecutionPlan> {
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard; // split borrows across map/lru fields
+        let tick = inner.tick + 1;
+        inner.tick = tick;
+        let found = match inner.map.get_mut(fp) {
+            Some(entry) => {
+                let old = std::mem::replace(&mut entry.tick, tick);
+                let plan = entry.plan.clone();
+                inner.lru.remove(&old);
+                inner.lru.insert(tick, *fp);
+                Some(plan)
+            }
+            None => None,
+        };
+        drop(guard);
+        if found.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        found
+    }
+
+    /// Insert or overwrite a plan, evicting the least recently used entry
+    /// when full.
+    pub fn insert(&self, fp: Fingerprint, plan: ExecutionPlan) {
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        let tick = inner.tick + 1;
+        inner.tick = tick;
+        if let Some(entry) = inner.map.get_mut(&fp) {
+            let old = std::mem::replace(&mut entry.tick, tick);
+            entry.plan = plan;
+            inner.lru.remove(&old);
+            inner.lru.insert(tick, fp);
+            return;
+        }
+        if inner.map.len() >= self.capacity {
+            if let Some((_, victim)) = inner.lru.pop_first() {
+                inner.map.remove(&victim);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        inner.map.insert(fp, CachedPlan { plan, tick });
+        inner.lru.insert(tick, fp);
+    }
+
+    /// Entries in LRU order (least recently used first) — persistence walks
+    /// this so a reloaded cache preserves recency.
+    pub fn entries(&self) -> Vec<(Fingerprint, ExecutionPlan)> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .lru
+            .values()
+            .map(|fp| (*fp, inner.map[fp].plan.clone()))
+            .collect()
+    }
+
+    /// Drop every entry (counters are preserved — they are lifetime totals).
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.map.clear();
+        inner.lru.clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            len: self.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spmm::Algorithm;
+
+    fn fp(m: usize) -> Fingerprint {
+        Fingerprint {
+            m,
+            k: 100,
+            nnz: m * 5,
+            d_centi: 500,
+            cv_centi: 0,
+            max_row_len: 3,
+            aspect: super::super::AspectClass::Square,
+        }
+    }
+
+    fn plan(workers: usize) -> ExecutionPlan {
+        ExecutionPlan {
+            algorithm: Algorithm::MergeBased,
+            granularity: 64,
+            bucket: None,
+            workers,
+        }
+    }
+
+    #[test]
+    fn hit_miss_counters() {
+        let c = PlanCache::new(8);
+        assert!(c.get(&fp(1)).is_none());
+        c.insert(fp(1), plan(2));
+        assert_eq!(c.get(&fp(1)).unwrap().workers, 2);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.evictions, s.len), (1, 1, 0, 1));
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let c = PlanCache::new(3);
+        c.insert(fp(1), plan(1));
+        c.insert(fp(2), plan(2));
+        c.insert(fp(3), plan(3));
+        // touch 1 so 2 becomes the LRU victim
+        assert!(c.get(&fp(1)).is_some());
+        c.insert(fp(4), plan(4));
+        assert!(c.get(&fp(2)).is_none(), "LRU entry 2 should be evicted");
+        assert!(c.get(&fp(1)).is_some());
+        assert!(c.get(&fp(3)).is_some());
+        assert!(c.get(&fp(4)).is_some());
+        assert_eq!(c.stats().evictions, 1);
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn overwrite_does_not_evict() {
+        let c = PlanCache::new(2);
+        c.insert(fp(1), plan(1));
+        c.insert(fp(2), plan(2));
+        c.insert(fp(1), plan(9)); // overwrite at capacity
+        assert_eq!(c.stats().evictions, 0);
+        assert_eq!(c.get(&fp(1)).unwrap().workers, 9);
+        assert!(c.get(&fp(2)).is_some());
+    }
+
+    #[test]
+    fn entries_in_lru_order() {
+        let c = PlanCache::new(4);
+        c.insert(fp(1), plan(1));
+        c.insert(fp(2), plan(2));
+        c.insert(fp(3), plan(3));
+        let _ = c.get(&fp(1)); // 1 becomes most recent
+        let order: Vec<usize> = c.entries().iter().map(|(f, _)| f.m).collect();
+        assert_eq!(order, vec![2, 3, 1]);
+    }
+
+    #[test]
+    fn clear_keeps_lifetime_counters() {
+        let c = PlanCache::new(4);
+        c.insert(fp(1), plan(1));
+        let _ = c.get(&fp(1));
+        c.clear();
+        assert!(c.is_empty());
+        assert!(c.get(&fp(1)).is_none());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+    }
+
+    #[test]
+    fn concurrent_access_is_consistent() {
+        use std::sync::Arc;
+        let c = Arc::new(PlanCache::new(16));
+        let handles: Vec<_> = (0..4usize)
+            .map(|t| {
+                let c = Arc::clone(&c);
+                std::thread::spawn(move || {
+                    for i in 0..200usize {
+                        let key = fp((t * 37 + i) % 24);
+                        if c.get(&key).is_none() {
+                            c.insert(key, plan(t));
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = c.stats();
+        assert_eq!(s.hits + s.misses, 800);
+        assert!(s.len <= 16);
+    }
+}

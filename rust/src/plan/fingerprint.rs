@@ -1,0 +1,199 @@
+//! Cheap, stable CSR fingerprints — the plan-cache key.
+//!
+//! A fingerprint captures exactly the quantities the planner's decisions
+//! depend on: the shape (`m`, `k`, `nnz` — bucket fit), the row-length
+//! distribution (`d` mean, CV, exact max row — algorithm choice and ELL
+//! width), and the aspect class.  Two matrices with equal fingerprints get
+//! the same [`ExecutionPlan`](super::ExecutionPlan), so the float
+//! statistics are quantized to centi-unit integers: quantization makes the
+//! key hashable *and* lets near-identical matrices (e.g. the same graph
+//! re-uploaded with new edge weights) share one cached plan.  Quantities
+//! that gate *hard* constraints (`m`, `k`, `nnz`, `max_row_len` — bucket
+//! fit) stay exact, so a cached plan is never reused where it can't run.
+//!
+//! Cost: one O(m) pass over `row_ptr` — no touch of `col_idx`/`vals`, so
+//! fingerprinting stays negligible next to the O(nnz·n) multiply itself.
+
+use crate::formats::Csr;
+
+/// Shape class of the matrix (planning treats tall/wide extremes apart:
+/// they stress decomposition granularity differently, §Fig. 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AspectClass {
+    /// `m ≥ 4k`
+    Tall,
+    /// within 4× of square
+    Square,
+    /// `k ≥ 4m`
+    Wide,
+}
+
+impl AspectClass {
+    /// Classify an `m × k` shape.
+    pub fn of(m: usize, k: usize) -> Self {
+        if m >= 4 * k.max(1) {
+            AspectClass::Tall
+        } else if k >= 4 * m.max(1) {
+            AspectClass::Wide
+        } else {
+            AspectClass::Square
+        }
+    }
+
+    /// Stable string form (persistence).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AspectClass::Tall => "tall",
+            AspectClass::Square => "square",
+            AspectClass::Wide => "wide",
+        }
+    }
+
+    /// Inverse of [`as_str`](Self::as_str).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "tall" => Some(AspectClass::Tall),
+            "square" => Some(AspectClass::Square),
+            "wide" => Some(AspectClass::Wide),
+            _ => None,
+        }
+    }
+}
+
+/// The plan-cache key: quantized CSR statistics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Fingerprint {
+    pub m: usize,
+    pub k: usize,
+    pub nnz: usize,
+    /// mean row length `d = nnz/m`, in centi-units (`round(100·d)`)
+    pub d_centi: u64,
+    /// row-length coefficient of variation, in centi-units
+    pub cv_centi: u64,
+    /// longest row, exact — AOT bucket fit (`max_row_len ≤ bucket.ell`)
+    /// is a hard constraint, so this field must not be quantized: a
+    /// cached row-split plan's bucket is only reusable when the exact
+    /// fit criterion still holds
+    pub max_row_len: usize,
+    pub aspect: AspectClass,
+}
+
+impl Fingerprint {
+    /// Fingerprint a CSR matrix in one pass over `row_ptr`.
+    pub fn of(a: &Csr) -> Self {
+        let m = a.m;
+        let nnz = a.nnz();
+        let mean = a.mean_row_length();
+        let mut max_len = 0usize;
+        let mut sq_dev = 0.0f64;
+        for i in 0..m {
+            let len = a.row_len(i);
+            max_len = max_len.max(len);
+            let dev = len as f64 - mean;
+            sq_dev += dev * dev;
+        }
+        let cv = if m == 0 || mean == 0.0 {
+            0.0
+        } else {
+            (sq_dev / m as f64).sqrt() / mean
+        };
+        Self {
+            m,
+            k: a.k,
+            nnz,
+            d_centi: (mean * 100.0).round() as u64,
+            cv_centi: (cv * 100.0).round() as u64,
+            max_row_len: max_len,
+            aspect: AspectClass::of(m, a.k),
+        }
+    }
+
+    /// The heuristic feature recovered from the quantized mean.
+    pub fn d(&self) -> f64 {
+        self.d_centi as f64 / 100.0
+    }
+}
+
+impl std::fmt::Display for Fingerprint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}x{} nnz={} d={:.2} cv={:.2} maxrow={} {}",
+            self.m,
+            self.k,
+            self.nnz,
+            self.d(),
+            self.cv_centi as f64 / 100.0,
+            self.max_row_len,
+            self.aspect.as_str()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stable_across_clones_and_rebuilds() {
+        let a = Csr::random(500, 400, 6.0, 31);
+        let fp = Fingerprint::of(&a);
+        assert_eq!(fp, Fingerprint::of(&a.clone()));
+        // rebuilding from parts gives the identical key
+        let rebuilt = Csr::new(
+            a.m,
+            a.k,
+            a.row_ptr.clone(),
+            a.col_idx.clone(),
+            a.vals.clone(),
+        )
+        .unwrap();
+        assert_eq!(fp, Fingerprint::of(&rebuilt));
+    }
+
+    #[test]
+    fn values_are_ignored_structure_is_not() {
+        let a = Csr::random(300, 300, 5.0, 32);
+        let mut reweighted = a.clone();
+        for v in &mut reweighted.vals {
+            *v *= 2.0;
+        }
+        // same sparsity pattern, new weights → same plan key
+        assert_eq!(Fingerprint::of(&a), Fingerprint::of(&reweighted));
+        let b = Csr::random(300, 300, 12.0, 33);
+        assert_ne!(Fingerprint::of(&a), Fingerprint::of(&b));
+    }
+
+    #[test]
+    fn captures_the_paper_statistics() {
+        // 100 rows of exactly 9 nonzeros: d = 9, cv = 0
+        let a = crate::gen::uniform_rows(100, 9, Some(64), 34);
+        let fp = Fingerprint::of(&a);
+        assert_eq!(fp.d_centi, 900);
+        assert_eq!(fp.cv_centi, 0);
+        assert_eq!(fp.max_row_len, 9);
+        assert_eq!(fp.aspect, AspectClass::Square);
+    }
+
+    #[test]
+    fn aspect_classes() {
+        assert_eq!(AspectClass::of(4096, 64), AspectClass::Tall);
+        assert_eq!(AspectClass::of(64, 4096), AspectClass::Wide);
+        assert_eq!(AspectClass::of(1000, 1000), AspectClass::Square);
+        assert_eq!(AspectClass::of(1000, 300), AspectClass::Square);
+        for s in ["tall", "square", "wide"] {
+            assert_eq!(AspectClass::parse(s).unwrap().as_str(), s);
+        }
+        assert!(AspectClass::parse("diagonal").is_none());
+    }
+
+    #[test]
+    fn empty_matrix_fingerprint() {
+        let a = Csr::empty(10, 10);
+        let fp = Fingerprint::of(&a);
+        assert_eq!(fp.nnz, 0);
+        assert_eq!(fp.d_centi, 0);
+        assert_eq!(fp.cv_centi, 0);
+        assert_eq!(fp.max_row_len, 0);
+    }
+}

@@ -1,0 +1,299 @@
+//! Adaptive planning: fingerprint → cached plan → online-tuned heuristic.
+//!
+//! The paper's serving decision — *which algorithm, at what decomposition
+//! granularity, against which AOT bucket, with how many workers* — is
+//! O(1)-cheap per ingredient but was re-derived on every request.  This
+//! subsystem closes the loop from measurement back into decision-making:
+//!
+//! * [`fingerprint`] — a cheap, stable CSR fingerprint (shape, quantized
+//!   row-length statistics, aspect class) used as the cache key;
+//! * [`cache`] — a concurrent LRU [`PlanCache`] mapping fingerprints to a
+//!   full [`ExecutionPlan`], with hit/miss/eviction counters exported by
+//!   [`crate::coordinator::metrics`];
+//! * [`tuner`] — an [`OnlineTuner`] that A/B-probes both algorithms on a
+//!   thin sample of requests near the decision boundary and nudges the
+//!   threshold from the measured latencies (the paper's 9.35 becomes the
+//!   *prior*, not a constant);
+//! * [`persist`] — JSON save/load of the learned state so a warm cache and
+//!   calibrated threshold survive restarts.
+//!
+//! [`Planner`] ties the pieces together and is shared (`Arc`) between the
+//! router — which plans once per request instead of once per hop — and the
+//! worker engines, which execute the plan and feed probe measurements
+//! back.
+
+pub mod cache;
+pub mod fingerprint;
+pub mod persist;
+pub mod tuner;
+
+pub use cache::{CacheStats, PlanCache};
+pub use fingerprint::{AspectClass, Fingerprint};
+pub use persist::{PlanFile, FORMAT};
+pub use tuner::{OnlineTuner, TunerStats, THRESHOLD_MAX, THRESHOLD_MIN};
+
+use std::path::Path;
+
+use crate::formats::Csr;
+use crate::runtime::{pad, Manifest};
+use crate::spmm::Algorithm;
+
+/// Everything the engine needs to execute one request — the unit the
+/// cache stores and persistence round-trips.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecutionPlan {
+    pub algorithm: Algorithm,
+    /// decomposition granularity: work items per worker chunk (rows for
+    /// row-split, rows+nonzeros for merge — the §4 balancing quantity);
+    /// the engine derives its CPU parallelism from this via
+    /// [`cpu_parallelism`](Self::cpu_parallelism)
+    pub granularity: usize,
+    /// smallest AOT bucket that fits, when a manifest is present
+    pub bucket: Option<String>,
+    /// CPU worker threads the plan was built for (0 = auto; recorded for
+    /// persistence/reporting — execution uses `cpu_parallelism`)
+    pub workers: usize,
+}
+
+impl ExecutionPlan {
+    /// CPU worker count implied by the planned granularity for `a`: the
+    /// §4 balancing quantity (rows, or rows + nonzeros) divided into
+    /// `granularity`-sized chunks, one worker per chunk.
+    pub fn cpu_parallelism(&self, a: &Csr) -> usize {
+        let items = match self.algorithm {
+            Algorithm::RowSplit => a.m,
+            Algorithm::MergeBased => a.m + a.nnz(),
+        };
+        items.div_ceil(self.granularity.max(1)).max(1)
+    }
+}
+
+/// One planning decision: the plan plus where it came from.
+#[derive(Debug, Clone)]
+pub struct PlanOutcome {
+    pub plan: ExecutionPlan,
+    pub fingerprint: Fingerprint,
+    pub cache_hit: bool,
+}
+
+/// The adaptive planner: consulted on the serve hot path before any
+/// per-request analysis.
+pub struct Planner {
+    cache: PlanCache,
+    tuner: OnlineTuner,
+    default_workers: usize,
+}
+
+impl Planner {
+    /// Planner with a fresh cache and a tuner seeded at `threshold`.
+    pub fn new(threshold: f64, capacity: usize, default_workers: usize) -> Self {
+        Self {
+            cache: PlanCache::new(capacity),
+            tuner: OnlineTuner::new(threshold),
+            default_workers,
+        }
+    }
+
+    /// Restore a planner from a [`persist`] file: learned threshold plus
+    /// every saved plan, inserted oldest-first so recency is preserved.
+    pub fn load(path: &Path, capacity: usize, default_workers: usize) -> Result<Self, String> {
+        let file = persist::load_file(path)?;
+        let planner = Self::new(file.threshold, capacity, default_workers);
+        for (fp, plan) in file.plans {
+            planner.cache.insert(fp, plan);
+        }
+        Ok(planner)
+    }
+
+    /// Persist the learned threshold and cached plans.
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        persist::save_file(path, self.tuner.threshold(), &self.cache.entries())
+    }
+
+    /// Plan a request: cache hit short-circuits everything; a miss runs
+    /// the tuned heuristic + bucket search + granularity computation and
+    /// caches the result.
+    pub fn plan(&self, a: &Csr, manifest: Option<&Manifest>) -> PlanOutcome {
+        let fingerprint = Fingerprint::of(a);
+        if let Some(plan) = self.cache.get(&fingerprint) {
+            return PlanOutcome {
+                plan,
+                fingerprint,
+                cache_hit: true,
+            };
+        }
+        let algorithm = self.tuner.decide(a.mean_row_length());
+        let plan = self.build_plan(a, algorithm, manifest);
+        self.cache.insert(fingerprint, plan.clone());
+        PlanOutcome {
+            plan,
+            fingerprint,
+            cache_hit: false,
+        }
+    }
+
+    /// Should this request be A/B-probed? (delegates to the tuner)
+    pub fn should_probe(&self, a: &Csr) -> bool {
+        self.tuner.should_probe(a.mean_row_length())
+    }
+
+    /// Feed back an A/B probe (both algorithms timed on one request):
+    /// nudges the threshold and refreshes the cached plan so it tracks the
+    /// tuner's current decision.
+    pub fn record_probe(
+        &self,
+        a: &Csr,
+        t_rowsplit: f64,
+        t_merge: f64,
+        manifest: Option<&Manifest>,
+    ) {
+        let d = a.mean_row_length();
+        self.tuner.observe(d, t_rowsplit, t_merge);
+        let algorithm = self.tuner.decide(d);
+        let plan = self.build_plan(a, algorithm, manifest);
+        self.cache.insert(Fingerprint::of(a), plan);
+    }
+
+    fn build_plan(
+        &self,
+        a: &Csr,
+        algorithm: Algorithm,
+        manifest: Option<&Manifest>,
+    ) -> ExecutionPlan {
+        let bucket = manifest
+            .and_then(|m| match algorithm {
+                Algorithm::RowSplit => pad::pick_rowsplit_bucket(m, a),
+                Algorithm::MergeBased => pad::pick_merge_bucket(m, a),
+            })
+            .map(|art| art.name.clone());
+        let p = if self.default_workers == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        } else {
+            self.default_workers
+        };
+        // §4 balancing quantity per worker: rows for row-split, rows +
+        // nonzeros (the merge-path diagonal) for merge-based.
+        let items = match algorithm {
+            Algorithm::RowSplit => a.m,
+            Algorithm::MergeBased => a.m + a.nnz(),
+        };
+        ExecutionPlan {
+            algorithm,
+            granularity: items.div_ceil(p).max(1),
+            bucket,
+            workers: self.default_workers,
+        }
+    }
+
+    pub fn cache(&self) -> &PlanCache {
+        &self.cache
+    }
+
+    pub fn tuner(&self) -> &OnlineTuner {
+        &self.tuner
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_miss_then_hit() {
+        let p = Planner::new(9.35, 16, 2);
+        let a = Csr::random(400, 400, 4.0, 61);
+        let first = p.plan(&a, None);
+        assert!(!first.cache_hit);
+        assert_eq!(first.plan.algorithm, Algorithm::MergeBased);
+        assert_eq!(first.plan.workers, 2);
+        assert!(first.plan.bucket.is_none());
+        let second = p.plan(&a, None);
+        assert!(second.cache_hit);
+        assert_eq!(second.plan, first.plan);
+        assert_eq!(second.fingerprint, first.fingerprint);
+        let s = p.cache().stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+    }
+
+    #[test]
+    fn granularity_tracks_balancing_quantity() {
+        let p = Planner::new(9.35, 16, 4);
+        let long = crate::gen::uniform_rows(1000, 20, Some(1000), 62);
+        let out = p.plan(&long, None);
+        assert_eq!(out.plan.algorithm, Algorithm::RowSplit);
+        assert_eq!(out.plan.granularity, 250); // 1000 rows / 4 workers
+        assert_eq!(out.plan.cpu_parallelism(&long), 4); // and back again
+        let short = Csr::random(1000, 1000, 4.0, 63);
+        let out = p.plan(&short, None);
+        assert_eq!(out.plan.algorithm, Algorithm::MergeBased);
+        let want = (1000 + short.nnz()).div_ceil(4);
+        assert_eq!(out.plan.granularity, want);
+    }
+
+    #[test]
+    fn bucket_is_planned_from_manifest() {
+        let manifest = Manifest::parse(
+            r#"{
+              "format": "hlo-text-v1",
+              "artifacts": [
+                {"name": "spmm_rowsplit_m1024_k1024_l64_n64",
+                 "file": "rs.hlo.txt", "args": [],
+                 "out": {"shape": [1024, 64]},
+                 "meta": {"entry": "spmm_rowsplit", "m": 1024, "k": 1024,
+                          "ell": 64, "n": 64}}
+              ]
+            }"#,
+            Path::new("/tmp"),
+        )
+        .unwrap();
+        let p = Planner::new(9.35, 16, 2);
+        let long = crate::gen::uniform_rows(512, 20, Some(512), 64);
+        let out = p.plan(&long, Some(&manifest));
+        assert_eq!(
+            out.plan.bucket.as_deref(),
+            Some("spmm_rowsplit_m1024_k1024_l64_n64")
+        );
+        // too big for the bucket → CPU plan
+        let huge = crate::gen::uniform_rows(4096, 20, Some(512), 65);
+        let out = p.plan(&huge, Some(&manifest));
+        assert!(out.plan.bucket.is_none());
+    }
+
+    #[test]
+    fn record_probe_retargets_cached_plan() {
+        let p = Planner::new(9.35, 16, 1);
+        // d = 8 < 9.35 → merge planned initially
+        let a = crate::gen::uniform_rows(2000, 8, Some(256), 66);
+        assert_eq!(p.plan(&a, None).plan.algorithm, Algorithm::MergeBased);
+        // repeated probes say row-split is decisively faster at d = 8: the
+        // threshold crosses below 8 and the cached plan is retargeted
+        for _ in 0..10 {
+            p.record_probe(&a, 1.0, 3.0, None);
+        }
+        assert!(p.tuner().threshold() < 8.0, "thr = {}", p.tuner().threshold());
+        let out = p.plan(&a, None);
+        assert!(out.cache_hit);
+        assert_eq!(out.plan.algorithm, Algorithm::RowSplit);
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let dir = std::env::temp_dir().join("merge_spmm_planner_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plans.json");
+        let p = Planner::new(9.35, 16, 2);
+        for seed in 0..5u64 {
+            let a = Csr::random(100 + seed as usize * 50, 200, 3.0 + seed as f64, 70 + seed);
+            p.plan(&a, None);
+        }
+        p.tuner().set_threshold(7.0);
+        p.save(&path).unwrap();
+
+        let q = Planner::load(&path, 16, 2).unwrap();
+        assert_eq!(q.tuner().threshold(), 7.0);
+        assert_eq!(q.cache().entries(), p.cache().entries());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,251 @@
+//! JSON save/load of learned plans — a warm cache survives restarts.
+//!
+//! The file carries the tuner's learned threshold plus every cached
+//! `(fingerprint, plan)` pair in LRU order, so a restarted server resumes
+//! with both the calibrated decision boundary and the working set of
+//! plans.  Uses the in-crate JSON parser ([`crate::util::json`]) — the
+//! offline vendor set has no serde — and a hand-rolled writer for the one
+//! fixed schema (`plan-cache-v1`).
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::spmm::Algorithm;
+use crate::util::json::Json;
+
+use super::fingerprint::{AspectClass, Fingerprint};
+use super::ExecutionPlan;
+
+/// Schema tag of the persisted plan file.
+pub const FORMAT: &str = "plan-cache-v1";
+
+/// Parsed contents of a plan file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanFile {
+    pub threshold: f64,
+    /// LRU order, least recently used first (matches `PlanCache::entries`)
+    pub plans: Vec<(Fingerprint, ExecutionPlan)>,
+}
+
+/// Serialize to the `plan-cache-v1` JSON text.
+pub fn to_json(threshold: f64, plans: &[(Fingerprint, ExecutionPlan)]) -> String {
+    let mut s = String::new();
+    let _ = write!(
+        s,
+        "{{\n  \"format\": \"{FORMAT}\",\n  \"threshold\": {threshold},\n  \"plans\": ["
+    );
+    for (i, (fp, plan)) in plans.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(
+            s,
+            "\n    {{\"m\": {}, \"k\": {}, \"nnz\": {}, \"d_centi\": {}, \"cv_centi\": {}, \
+             \"max_row_len\": {}, \"aspect\": \"{}\", \"algorithm\": \"{}\", \
+             \"granularity\": {}, \"workers\": {}, \"bucket\": {}}}",
+            fp.m,
+            fp.k,
+            fp.nnz,
+            fp.d_centi,
+            fp.cv_centi,
+            fp.max_row_len,
+            fp.aspect.as_str(),
+            plan.algorithm,
+            plan.granularity,
+            plan.workers,
+            match &plan.bucket {
+                Some(b) => format!("\"{}\"", escape(b)),
+                None => "null".to_string(),
+            }
+        );
+    }
+    s.push_str("\n  ]\n}\n");
+    s
+}
+
+/// Parse `plan-cache-v1` JSON text.
+pub fn parse(text: &str) -> Result<PlanFile, String> {
+    let v = Json::parse(text)?;
+    let format = v
+        .get("format")
+        .and_then(Json::as_str)
+        .ok_or("plan file missing format")?;
+    if format != FORMAT {
+        return Err(format!("unsupported plan file format {format}"));
+    }
+    let threshold = v
+        .get("threshold")
+        .and_then(Json::as_f64)
+        .ok_or("plan file missing threshold")?;
+    let mut plans = Vec::new();
+    for p in v
+        .get("plans")
+        .and_then(Json::as_arr)
+        .ok_or("plan file missing plans")?
+    {
+        let num = |key: &str| {
+            p.get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| format!("plan missing {key}"))
+        };
+        let fp = Fingerprint {
+            m: num("m")?,
+            k: num("k")?,
+            nnz: num("nnz")?,
+            d_centi: num("d_centi")? as u64,
+            cv_centi: num("cv_centi")? as u64,
+            max_row_len: num("max_row_len")?,
+            aspect: p
+                .get("aspect")
+                .and_then(Json::as_str)
+                .and_then(AspectClass::parse)
+                .ok_or("plan missing aspect")?,
+        };
+        let algorithm = match p.get("algorithm").and_then(Json::as_str) {
+            Some("row-split") => Algorithm::RowSplit,
+            Some("merge-based") => Algorithm::MergeBased,
+            other => return Err(format!("bad algorithm {other:?}")),
+        };
+        let bucket = match p.get("bucket") {
+            None | Some(Json::Null) => None,
+            Some(Json::Str(b)) => Some(b.clone()),
+            other => return Err(format!("bad bucket {other:?}")),
+        };
+        plans.push((
+            fp,
+            ExecutionPlan {
+                algorithm,
+                granularity: num("granularity")?,
+                bucket,
+                workers: num("workers")?,
+            },
+        ));
+    }
+    Ok(PlanFile { threshold, plans })
+}
+
+/// Write a plan file (atomically: temp file + rename, so a crashed save
+/// never leaves a truncated cache behind).
+pub fn save_file(
+    path: &Path,
+    threshold: f64,
+    plans: &[(Fingerprint, ExecutionPlan)],
+) -> Result<(), String> {
+    let text = to_json(threshold, plans);
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, &text).map_err(|e| format!("{}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Read and parse a plan file.
+pub fn load_file(path: &Path) -> Result<PlanFile, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    parse(&text)
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<(Fingerprint, ExecutionPlan)> {
+        vec![
+            (
+                Fingerprint {
+                    m: 1000,
+                    k: 1000,
+                    nnz: 4000,
+                    d_centi: 400,
+                    cv_centi: 52,
+                    max_row_len: 4,
+                    aspect: AspectClass::Square,
+                },
+                ExecutionPlan {
+                    algorithm: Algorithm::MergeBased,
+                    granularity: 1250,
+                    bucket: None,
+                    workers: 2,
+                },
+            ),
+            (
+                Fingerprint {
+                    m: 16384,
+                    k: 256,
+                    nnz: 1_015_808,
+                    d_centi: 6200,
+                    cv_centi: 0,
+                    max_row_len: 7,
+                    aspect: AspectClass::Tall,
+                },
+                ExecutionPlan {
+                    algorithm: Algorithm::RowSplit,
+                    granularity: 4096,
+                    bucket: Some("spmm_rowsplit_m16384_k256_l64_n64".into()),
+                    workers: 4,
+                },
+            ),
+        ]
+    }
+
+    #[test]
+    fn round_trip_is_identical() {
+        let plans = sample();
+        let text = to_json(9.35, &plans);
+        let file = parse(&text).unwrap();
+        assert_eq!(file.threshold, 9.35);
+        assert_eq!(file.plans, plans);
+        // a second round trip is byte-stable
+        assert_eq!(to_json(file.threshold, &file.plans), text);
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let dir = std::env::temp_dir().join("merge_spmm_persist_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plans.json");
+        let plans = sample();
+        save_file(&path, 7.5, &plans).unwrap();
+        let file = load_file(&path).unwrap();
+        assert_eq!(file.threshold, 7.5);
+        assert_eq!(file.plans, plans);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("{}").is_err());
+        assert!(parse("{\"format\": \"plan-cache-v2\", \"threshold\": 1, \"plans\": []}").is_err());
+        let text = to_json(9.35, &sample()).replace("row-split", "column-split");
+        assert!(parse(&text).is_err());
+        assert!(load_file(Path::new("/nonexistent/plans.json")).is_err());
+    }
+
+    #[test]
+    fn empty_cache_round_trips() {
+        let file = parse(&to_json(2.0, &[])).unwrap();
+        assert_eq!(file.threshold, 2.0);
+        assert!(file.plans.is_empty());
+    }
+
+    #[test]
+    fn escape_handles_specials() {
+        assert_eq!(escape("plain_name"), "plain_name");
+        assert_eq!(escape("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(escape("x\ny"), "x\\u000ay");
+    }
+}

@@ -1,0 +1,91 @@
+//! Stub PJRT client used when the `pjrt` feature is off (the `xla` crate is
+//! not in the offline vendor set).
+//!
+//! Mirrors the public API of [`client`](super::client) exactly so the rest
+//! of the crate — engine, router, examples — compiles unchanged.  Both
+//! loaders return an error, which the engine surfaces at construction time;
+//! nothing downstream can ever hold a stub `Runtime`, so `execute` is
+//! unreachable in practice but still returns a clear error.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use super::manifest::{Artifact, Manifest};
+
+const UNAVAILABLE: &str =
+    "PJRT runtime unavailable: built without the `pjrt` feature (the xla crate \
+     is not in the offline vendor set) — use the CPU executors (artifacts_dir: None)";
+
+/// Placeholder for `xla::Literal` so literal-building call sites type-check.
+pub struct Literal;
+
+/// Stub artifact registry; never successfully constructed.
+pub struct Runtime {
+    manifest: Manifest,
+}
+
+impl Runtime {
+    /// Always fails: PJRT execution requires the `pjrt` feature.
+    pub fn load(dir: &Path) -> Result<Self> {
+        // Validate the manifest anyway so a malformed artifacts dir is
+        // reported before the missing-feature error confuses the trail.
+        Manifest::load(dir).map_err(|e| anyhow!(e))?;
+        Err(anyhow!(UNAVAILABLE))
+    }
+
+    /// Always fails: PJRT execution requires the `pjrt` feature.
+    pub fn load_filtered(dir: &Path, _filter: impl Fn(&Artifact) -> bool) -> Result<Self> {
+        Manifest::load(dir).map_err(|e| anyhow!(e))?;
+        Err(anyhow!(UNAVAILABLE))
+    }
+
+    pub fn platform(&self) -> String {
+        "stub (no pjrt feature)".to_string()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&Artifact> {
+        self.manifest.by_name(name)
+    }
+
+    pub fn execute(&self, _name: &str, _args: &[Literal]) -> Result<Vec<f32>> {
+        Err(anyhow!(UNAVAILABLE))
+    }
+
+    pub fn literal_i32(_data: &[i32], _shape: &[usize]) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    pub fn literal_f32(_data: &[f32], _shape: &[usize]) -> Result<Literal> {
+        Ok(Literal)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loaders_report_unavailable() {
+        let dir = std::env::temp_dir().join("merge_spmm_stub_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format": "hlo-text-v1", "artifacts": []}"#,
+        )
+        .unwrap();
+        let err = Runtime::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "unexpected error: {err}");
+        let err = Runtime::load_filtered(&dir, |_| true).unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "unexpected error: {err}");
+        // malformed manifest is reported as such, not as a feature problem
+        std::fs::write(dir.join("manifest.json"), "{").unwrap();
+        let err = Runtime::load(&dir).unwrap_err().to_string();
+        assert!(!err.contains("feature"), "unexpected error: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -16,6 +16,7 @@ fn cpu_cfg() -> EngineConfig {
         artifacts_dir: None,
         threshold: 9.35,
         cpu_workers: 2,
+        ..Default::default()
     }
 }
 

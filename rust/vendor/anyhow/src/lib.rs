@@ -1,0 +1,173 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The container this repo builds in has no crates.io access, so this
+//! vendored shim provides the (small) API subset the crate actually uses:
+//! [`Error`], [`Result`], the [`anyhow!`] / [`bail!`] / [`ensure!`] macros,
+//! [`Error::msg`], and the [`Context`] extension trait.  Errors are plain
+//! message strings with an optional chain of context lines — no backtraces,
+//! no downcasting.  Swap the path dependency for the real crate if a
+//! registry ever becomes available; call sites need no changes.
+
+use std::fmt::{self, Debug, Display};
+
+/// A string-backed error type mirroring `anyhow::Error`'s surface.
+pub struct Error {
+    msg: String,
+    /// context lines, outermost first (like anyhow's error chain)
+    chain: Vec<String>,
+}
+
+/// `Result<T, anyhow::Error>`, with the error type defaultable like anyhow's.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: Display>(message: M) -> Self {
+        Self {
+            msg: message.to_string(),
+            chain: Vec::new(),
+        }
+    }
+
+    /// Wrap this error with an outer context line.
+    pub fn context<C: Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for c in &self.chain {
+            write!(f, "{c}: ")?;
+        }
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `fn main() -> anyhow::Result<()>` prints the Debug form on exit;
+        // keep it readable like anyhow does.
+        write!(f, "{self}")
+    }
+}
+
+// `?` conversion from any std error (mirrors anyhow's blanket impl; sound
+// because `Error` itself does not implement `std::error::Error`).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results.
+pub trait Context<T, E> {
+    fn context<C: Display>(self, context: C) -> Result<T>;
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Display> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(context))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, format string, or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if the condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_context_chain() {
+        let e = Error::msg("root").context("inner").context("outer");
+        assert_eq!(e.to_string(), "outer: inner: root");
+        assert_eq!(format!("{e:?}"), "outer: inner: root");
+    }
+
+    #[test]
+    fn macro_forms() {
+        let lit = anyhow!("plain");
+        assert_eq!(lit.to_string(), "plain");
+        let owned = anyhow!(String::from("owned"));
+        assert_eq!(owned.to_string(), "owned");
+        let n = 7;
+        let fmt = anyhow!("n = {}", n);
+        assert_eq!(fmt.to_string(), "n = 7");
+        let inline = anyhow!("n = {n}");
+        assert_eq!(inline.to_string(), "n = 7");
+    }
+
+    #[test]
+    fn question_mark_on_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("3").unwrap(), 3);
+        assert!(parse("x").is_err());
+    }
+
+    #[test]
+    fn result_context_helpers() {
+        let r: std::result::Result<(), String> = Err("boom".into());
+        let e = r.clone().context("ctx").unwrap_err();
+        assert_eq!(e.to_string(), "ctx: boom");
+        let e = r.with_context(|| format!("try {}", 2)).unwrap_err();
+        assert_eq!(e.to_string(), "try 2: boom");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            if x > 100 {
+                bail!("too big");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert!(f(-1).is_err());
+        assert_eq!(f(101).unwrap_err().to_string(), "too big");
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}
