@@ -3,17 +3,22 @@
 //! without artifacts and measures the coordination overhead itself.
 //!
 //! Also measures the adaptive-planning delta — cold (every request is a
-//! plan miss) vs warm (plan-cache hits) — and writes the snapshot to
-//! `BENCH_plan.json` at the repo root (the perf-trajectory record).
+//! plan miss) vs warm (plan-cache hits) — writing `BENCH_plan.json`, and
+//! the executor-pool delta — spawn-per-call scoped threads vs the warm
+//! pool + reused buffers — writing `BENCH_exec.json` (both at the repo
+//! root; same pending-toolchain schema convention).
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use merge_spmm::bench::Bencher;
 use merge_spmm::coordinator::{EngineConfig, Server, ServerConfig};
+use merge_spmm::exec::{partition, Executor};
 use merge_spmm::formats::Csr;
 use merge_spmm::gen;
+use merge_spmm::loadbalance::{Partitioner, RowSplit};
 use merge_spmm::plan::Planner;
+use merge_spmm::spmm::{merge_spmm_into, rowsplit_spmm_into, Algorithm};
 
 fn run_server(workers: usize, max_batch: usize, requests: usize) {
     let server = Server::start(
@@ -47,7 +52,11 @@ fn run_server(workers: usize, max_batch: usize, requests: usize) {
 }
 
 fn main() {
-    let requests = if std::env::var("BENCH_QUICK").is_ok() { 40 } else { 160 };
+    let requests = if std::env::var("BENCH_QUICK").is_ok() {
+        40
+    } else {
+        160
+    };
     let mut bench = Bencher::new("engine").with_reps(1, 5);
     for workers in [1usize, 2, 4] {
         for max_batch in [1usize, 8, 32] {
@@ -68,6 +77,112 @@ fn main() {
     });
 
     plan_cold_vs_warm(requests);
+    exec_spawn_vs_pooled();
+}
+
+/// The legacy per-call execution shape: spawn + join scoped threads and
+/// allocate the output and decomposition on every request (what
+/// `rowsplit_spmm` did before the executor pool landed).  Kept here as
+/// the baseline the pool is measured against.
+fn spawn_per_call_rowsplit(a: &Csr, b: &[f32], n: usize, p: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; a.m * n];
+    let segs = RowSplit::default().partition(a, p);
+    std::thread::scope(|scope| {
+        let mut rest: &mut [f32] = &mut c;
+        for seg in &segs {
+            let rows = seg.row_end - seg.row_start;
+            let (chunk, tail) = rest.split_at_mut(rows * n);
+            rest = tail;
+            let seg = *seg;
+            scope.spawn(move || {
+                for i in seg.row_start..seg.row_end {
+                    let out = &mut chunk[(i - seg.row_start) * n..(i - seg.row_start + 1) * n];
+                    let (cols, vals) = a.row(i);
+                    for (&col, &v) in cols.iter().zip(vals) {
+                        let brow = &b[col as usize * n..col as usize * n + n];
+                        for (o, &bv) in out.iter_mut().zip(brow) {
+                            *o += v * bv;
+                        }
+                    }
+                }
+            });
+        }
+    });
+    c
+}
+
+/// Spawn-per-call vs pooled executor → BENCH_exec.json (repo root).
+fn exec_spawn_vs_pooled() {
+    println!("\n-- executor: spawn-per-call vs pooled zero-alloc path --");
+    let reps = if std::env::var("BENCH_QUICK").is_ok() {
+        30
+    } else {
+        200
+    };
+    let p = 4usize;
+    let exec = Executor::new(p);
+    let mut ctx = exec.make_ctx();
+    let mut rows = Vec::new();
+    // small → large: the spawn/alloc overhead dominates small shapes
+    for (m, d, n) in [(256usize, 8.0, 16usize), (2000, 6.0, 32), (8000, 4.0, 64)] {
+        let a = Csr::random(m, m, d, 31);
+        let b = gen::dense_matrix(m, n, 32);
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(spawn_per_call_rowsplit(&a, &b, n, p));
+        }
+        let spawn_us = t0.elapsed().as_secs_f64() * 1e6 / reps as f64;
+
+        let segs_rs = RowSplit::default().partition(&a, p);
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let mut c = exec.acquire(m * n);
+            rowsplit_spmm_into(&a, &b, n, &segs_rs, &mut ctx, &mut c);
+            std::hint::black_box(&c[0]);
+        }
+        let pooled_us = t0.elapsed().as_secs_f64() * 1e6 / reps as f64;
+
+        let segs_mg = partition(&a, Algorithm::MergeBased, p);
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let mut c = exec.acquire(m * n);
+            merge_spmm_into(&a, &b, n, &segs_mg, &mut ctx, &mut c);
+            std::hint::black_box(&c[0]);
+        }
+        let merge_us = t0.elapsed().as_secs_f64() * 1e6 / reps as f64;
+
+        println!(
+            "exec/m{m}_n{n}   spawn {spawn_us:.1} µs, pooled {pooled_us:.1} µs \
+             ({:.2}x), merge-pooled {merge_us:.1} µs",
+            spawn_us / pooled_us.max(1e-9)
+        );
+        rows.push(format!(
+            "    {{\"m\": {m}, \"n\": {n}, \"spawn_us\": {spawn_us:.2}, \
+             \"pooled_us\": {pooled_us:.2}, \"merge_pooled_us\": {merge_us:.2}, \
+             \"speedup\": {:.3}}}",
+            spawn_us / pooled_us.max(1e-9)
+        ));
+    }
+    let bufs = exec.buffers().stats();
+    let out = format!(
+        "{{\n  \"format\": \"bench-exec-v1\",\n  \"status\": \"measured\",\n  \
+         \"command\": \"cargo bench --bench engine\",\n  \"reps\": {reps},\n  \
+         \"workers\": {p},\n  \"shapes\": [\n{}\n  ],\n  \
+         \"buffers\": {{\"allocated\": {}, \"reused\": {}}},\n  \
+         \"pool_jobs\": {}\n}}\n",
+        rows.join(",\n"),
+        bufs.allocated,
+        bufs.reused,
+        exec.pool().jobs(),
+    );
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_exec.json"))
+        .unwrap_or_else(|| "BENCH_exec.json".into());
+    match std::fs::write(&path, out) {
+        Ok(()) => println!("-> {}", path.display()),
+        Err(e) => eprintln!("(BENCH_exec.json write failed: {e})"),
+    }
 }
 
 /// Cold-vs-warm plan-cache benchmark → BENCH_plan.json (repo root).

@@ -34,8 +34,14 @@ impl BatchQueue {
     }
 
     /// Enqueue a request; returns a batch if the bucket just became full.
+    /// The bucket key is only cloned when the bucket is first seen — the
+    /// steady state (existing bucket) allocates nothing.
     pub fn push(&mut self, bucket: &str, request: u64) -> Option<Batch> {
-        let q = self.queues.entry(bucket.to_string()).or_default();
+        // double lookup on the miss path beats a to_string() per push
+        if !self.queues.contains_key(bucket) {
+            self.queues.insert(bucket.to_string(), VecDeque::new());
+        }
+        let q = self.queues.get_mut(bucket).expect("just ensured");
         q.push_back((request, Instant::now()));
         if q.len() >= self.max_batch {
             return self.flush(bucket);
@@ -68,10 +74,7 @@ impl BatchQueue {
             })
             .map(|(k, _)| k.clone())
             .collect();
-        expired
-            .iter()
-            .filter_map(|k| self.flush(k))
-            .collect()
+        expired.iter().filter_map(|k| self.flush(k)).collect()
     }
 
     /// Flush everything (shutdown).
@@ -91,10 +94,7 @@ impl BatchQueue {
         self.queues
             .values()
             .filter_map(|q| q.front())
-            .map(|(_, t)| {
-                self.max_wait
-                    .saturating_sub(now.duration_since(*t))
-            })
+            .map(|(_, t)| self.max_wait.saturating_sub(now.duration_since(*t)))
             .min()
     }
 }

@@ -1,13 +1,14 @@
 //! The synchronous engine core: plan (cache → tuned heuristic) → execute.
 
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::exec::{self, ExecCtx, Executor, OutputBuf};
 use crate::formats::Csr;
-use crate::plan::{ExecutionPlan, PlanOutcome, Planner};
+use crate::plan::{PlanOutcome, Planner};
 use crate::runtime::{pad, Manifest, Runtime};
 use crate::spmm::{self, Algorithm};
 
@@ -72,8 +73,10 @@ impl EngineConfig {
 /// Result of one SpMM execution.
 #[derive(Debug)]
 pub struct SpmmResult {
-    /// `m×n` row-major
-    pub c: Vec<f32>,
+    /// `m×n` row-major.  Leased from the engine's buffer pool: dropping
+    /// the result returns the allocation for the next same-shape request
+    /// (use [`OutputBuf::into_vec`] to keep it).
+    pub c: OutputBuf,
     pub algorithm: Algorithm,
     pub path: ExecutionPath,
     /// artifact used, when `path == Pjrt`
@@ -85,10 +88,19 @@ pub struct SpmmResult {
 
 /// The SpMM serving engine (paper's full pipeline: plan cache + tuned
 /// heuristic + both algorithms + CSR-native input).
+///
+/// An engine serializes its CPU executions (one scratch context, one pool
+/// job at a time), so use one engine per serving thread for parallelism —
+/// the [`super::Server`] does exactly that.
 pub struct SpmmEngine {
     runtime: Option<Runtime>,
     /// plan cache + tuner; CPU worker counts travel inside each plan
     planner: Arc<Planner>,
+    /// persistent worker pool + output-buffer free-list (threads spawn at
+    /// engine construction, never per request); shareable across engines
+    exec: Arc<Executor>,
+    /// reusable scratch (carry-out arenas) bound to `exec`'s pool
+    ctx: Mutex<ExecCtx>,
     probe: bool,
     pub metrics: Arc<Metrics>,
 }
@@ -104,6 +116,20 @@ impl SpmmEngine {
     /// worker threads use this so the plan file is read once, not once per
     /// worker.
     pub fn new_with_planner(cfg: EngineConfig, planner: Arc<Planner>) -> Result<Self> {
+        let exec = Arc::new(Executor::new(cfg.cpu_workers));
+        Self::new_shared(cfg, planner, exec)
+    }
+
+    /// Build an engine around a shared planner *and* caller-provided
+    /// execution resources.  The server uses this to give each worker
+    /// engine its own warm pool (pools run one job at a time, so
+    /// per-worker pools keep concurrent batches parallel) over one shared
+    /// buffer free-list — see [`Executor::with_buffers`].
+    pub fn new_shared(
+        cfg: EngineConfig,
+        planner: Arc<Planner>,
+        exec: Arc<Executor>,
+    ) -> Result<Self> {
         let runtime = match &cfg.artifacts_dir {
             Some(dir) if dir.join("manifest.json").exists() => Some(Runtime::load(dir)?),
             Some(dir) => {
@@ -117,6 +143,8 @@ impl SpmmEngine {
         let engine = Self {
             runtime,
             planner,
+            ctx: Mutex::new(exec.make_ctx()),
+            exec,
             probe: cfg.probe,
             metrics: Arc::new(Metrics::new()),
         };
@@ -126,9 +154,12 @@ impl SpmmEngine {
 
     /// CPU-only engine (no artifacts needed) — used by tests and benches.
     pub fn cpu_only(threshold: f64, workers: usize) -> Self {
+        let exec = Arc::new(Executor::new(workers));
         let engine = Self {
             runtime: None,
             planner: Arc::new(Planner::new(threshold, 1024, workers)),
+            ctx: Mutex::new(exec.make_ctx()),
+            exec,
             probe: true,
             metrics: Arc::new(Metrics::new()),
         };
@@ -136,11 +167,19 @@ impl SpmmEngine {
         engine
     }
 
-    /// Mirror planner state into the metrics gauges so snapshots report
-    /// the real threshold/cache state even before the first request.
+    /// Mirror planner + executor state into the metrics gauges so
+    /// snapshots report the real threshold/cache/pool state even before
+    /// the first request.
     fn sync_gauges(&self) {
         self.metrics
             .sync_plan_gauges(&self.planner.cache().stats(), self.threshold());
+        self.metrics
+            .sync_exec_gauges(&self.exec.stats(), &self.planner.partition_stats());
+    }
+
+    /// The engine's execution resources (pool + buffer free-list).
+    pub fn exec(&self) -> &Arc<Executor> {
+        &self.exec
     }
 
     pub fn has_runtime(&self) -> bool {
@@ -171,8 +210,8 @@ impl SpmmEngine {
             &self.metrics.plan_misses
         };
         plan_counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        self.metrics
-            .sync_plan_gauges(&self.planner.cache().stats(), self.threshold());
+        // gauges are mirrored once per request by execute(); no extra
+        // plan-cache lock here
         self.execute(a, b, n, &outcome)
     }
 
@@ -193,7 +232,7 @@ impl SpmmEngine {
         self.metrics
             .requests
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let result = self.dispatch(a, b, n, &outcome.plan);
+        let result = self.dispatch(a, b, n, outcome);
         match &result {
             Ok((_, _, _, algorithm)) => {
                 self.metrics
@@ -213,6 +252,7 @@ impl SpmmEngine {
         }
         let latency = t0.elapsed().as_secs_f64();
         self.metrics.record_latency(latency);
+        self.sync_gauges();
         result.map(|(c, path, bucket, algorithm)| {
             match path {
                 ExecutionPath::Pjrt => &self.metrics.pjrt,
@@ -237,8 +277,9 @@ impl SpmmEngine {
         a: &Csr,
         b: &[f32],
         n: usize,
-        plan: &ExecutionPlan,
-    ) -> Result<(Vec<f32>, ExecutionPath, Option<String>, Algorithm)> {
+        outcome: &PlanOutcome,
+    ) -> Result<(OutputBuf, ExecutionPath, Option<String>, Algorithm)> {
+        let plan = &outcome.plan;
         if b.len() != a.k * n {
             return Err(anyhow!("B must be k×n row-major ({}×{n})", a.k));
         }
@@ -247,19 +288,30 @@ impl SpmmEngine {
                 Algorithm::RowSplit => self.run_rowsplit_artifact(rt, a, b, n, name)?,
                 Algorithm::MergeBased => self.run_merge_artifact(rt, a, b, n, name)?,
             };
-            return Ok((c, ExecutionPath::Pjrt, Some(name.clone()), plan.algorithm));
+            return Ok((
+                OutputBuf::detached(c),
+                ExecutionPath::Pjrt,
+                Some(name.clone()),
+                plan.algorithm,
+            ));
         }
-        // CPU fallback — same algorithms, in-process executors.  This is
-        // also where boundary A/B probes run: both executors on the same
-        // request, the measurement feeds the tuner, the faster result is
-        // returned (the probe costs one extra executor pass).
+        // CPU fallback — same algorithms, pooled in-process executors.
+        // This is also where boundary A/B probes run: both executors on
+        // the same request, the measurement feeds the tuner, the faster
+        // result is returned (the probe costs one extra executor pass and
+        // one extra pooled buffer).
         let p = plan.cpu_parallelism(a);
         if self.probe && self.planner.should_probe(a) {
+            let mut ctx = self.ctx.lock().unwrap();
+            let segs_rs = exec::partition(a, Algorithm::RowSplit, p);
+            let segs_mg = exec::partition(a, Algorithm::MergeBased, p);
+            let mut c_rs = self.exec.acquire(a.m * n);
             let t0 = Instant::now();
-            let c_rs = spmm::rowsplit_spmm(a, b, n, p);
+            spmm::rowsplit_spmm_into(a, b, n, &segs_rs, &mut ctx, &mut c_rs);
             let t_rs = t0.elapsed().as_secs_f64();
+            let mut c_mg = self.exec.acquire(a.m * n);
             let t1 = Instant::now();
-            let c_mg = spmm::merge_spmm(a, b, n, p);
+            spmm::merge_spmm_into(a, b, n, &segs_mg, &mut ctx, &mut c_mg);
             let t_mg = t1.elapsed().as_secs_f64();
             self.planner.record_probe(a, t_rs, t_mg, self.manifest());
             self.metrics
@@ -272,10 +324,16 @@ impl SpmmEngine {
             };
             return Ok((c, ExecutionPath::CpuFallback, None, algorithm));
         }
-        let c = match plan.algorithm {
-            Algorithm::RowSplit => spmm::rowsplit_spmm(a, b, n, p),
-            Algorithm::MergeBased => spmm::merge_spmm(a, b, n, p),
-        };
+        // Steady state: replay the cached partition (phase 1 once per
+        // fingerprint), lease a pooled output, run on the warm pool —
+        // zero allocation, zero thread creation per request.
+        let segs = self.planner.partition_for(a, outcome);
+        let mut ctx = self.ctx.lock().unwrap();
+        let mut c = self.exec.acquire(a.m * n);
+        match plan.algorithm {
+            Algorithm::RowSplit => spmm::rowsplit_spmm_into(a, b, n, &segs, &mut ctx, &mut c),
+            Algorithm::MergeBased => spmm::merge_spmm_into(a, b, n, &segs, &mut ctx, &mut c),
+        }
         Ok((c, ExecutionPath::CpuFallback, None, plan.algorithm))
     }
 
@@ -344,6 +402,17 @@ impl SpmmEngine {
     /// cache state, and the learned threshold are global).
     pub fn with_shared_planner(mut self, planner: Arc<Planner>) -> Self {
         self.planner = planner;
+        self.sync_gauges();
+        self
+    }
+
+    /// Replace the execution resources after construction (tests and
+    /// custom topologies; the server injects its resources up front via
+    /// [`Self::new_shared`]).  The scratch context is rebound to the new
+    /// pool.
+    pub fn with_shared_exec(mut self, exec: Arc<Executor>) -> Self {
+        self.ctx = Mutex::new(exec.make_ctx());
+        self.exec = exec;
         self.sync_gauges();
         self
     }
@@ -439,6 +508,41 @@ mod tests {
         assert_eq!(snap.completed, 1);
         // plan counters belong to whoever planned (router) — not here
         assert_eq!(snap.plan_hits + snap.plan_misses, 0);
+    }
+
+    #[test]
+    fn steady_state_reuses_buffers_partitions_and_threads() {
+        let eng = SpmmEngine::cpu_only(9.35, 2);
+        let a = Csr::random(300, 300, 4.0, 1113); // d ≈ 4: outside the probe band
+        let b = crate::gen::dense_matrix(300, 8, 1114);
+        let want = spmm::spmm_reference(&a, &b, 8);
+
+        let first = eng.spmm(&a, &b, 8).unwrap();
+        let ptr = first.c.as_ptr();
+        for (x, y) in first.c.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()));
+        }
+        drop(first); // returns the lease to the free-list
+        let workers_before = eng.exec().pool().workers();
+        let jobs_before = eng.exec().pool().jobs();
+        for _ in 0..10 {
+            let r = eng.spmm(&a, &b, 8).unwrap();
+            assert!(r.cache_hit);
+            assert_eq!(r.c.as_ptr(), ptr, "steady state must reuse the same allocation");
+        }
+        let bufs = eng.exec().buffers().stats();
+        assert_eq!(bufs.allocated, 1, "exactly one output allocation ever");
+        assert_eq!(bufs.reused, 10);
+        // phase 1 ran once; every later call replayed the stored partition
+        let ps = eng.planner().partition_stats();
+        assert_eq!((ps.misses, ps.hits), (1, 10));
+        // all work ran on the persistent pool — same threads, one job/call
+        assert_eq!(eng.exec().pool().workers(), workers_before);
+        assert_eq!(eng.exec().pool().jobs(), jobs_before + 10);
+        let snap = eng.metrics.snapshot();
+        assert_eq!(snap.partition_hits, 10);
+        assert_eq!(snap.buffers_allocated, 1);
+        assert_eq!(snap.pool_workers, 2);
     }
 
     #[test]

@@ -30,6 +30,17 @@ pub struct Metrics {
     plan_len: AtomicU64,
     /// gauge: the tuner's current threshold, stored as f64 bits
     tuner_threshold_bits: AtomicU64,
+    /// gauges mirrored from the executor pool (`crate::exec`)
+    pool_workers: AtomicU64,
+    workers_parked: AtomicU64,
+    pool_jobs: AtomicU64,
+    /// gauges mirrored from the output-buffer free-list
+    buffers_pooled: AtomicU64,
+    buffers_allocated: AtomicU64,
+    buffer_reuses: AtomicU64,
+    /// gauges mirrored from the planner's partition-replay counters
+    partition_hits: AtomicU64,
+    partition_misses: AtomicU64,
     hist: Mutex<[u64; BUCKETS.len() + 1]>,
     latency_sum_us: AtomicU64,
 }
@@ -38,10 +49,8 @@ impl Metrics {
     pub fn new() -> Self {
         let m = Self::default();
         // threshold gauge starts at the paper's prior, not 0.0
-        m.tuner_threshold_bits.store(
-            crate::spmm::DEFAULT_THRESHOLD.to_bits(),
-            Ordering::Relaxed,
-        );
+        m.tuner_threshold_bits
+            .store(crate::spmm::DEFAULT_THRESHOLD.to_bits(), Ordering::Relaxed);
         m
     }
 
@@ -50,8 +59,24 @@ impl Metrics {
     pub fn sync_plan_gauges(&self, cache: &crate::plan::CacheStats, threshold: f64) {
         self.plan_evictions.store(cache.evictions, Ordering::Relaxed);
         self.plan_len.store(cache.len as u64, Ordering::Relaxed);
-        self.tuner_threshold_bits
-            .store(threshold.to_bits(), Ordering::Relaxed);
+        self.tuner_threshold_bits.store(threshold.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Mirror executor pool / buffer free-list / partition-replay state
+    /// into the exported gauges (called by the engine after execution).
+    pub fn sync_exec_gauges(
+        &self,
+        exec: &crate::exec::ExecStats,
+        partition: &crate::plan::PartitionStats,
+    ) {
+        self.pool_workers.store(exec.workers as u64, Ordering::Relaxed);
+        self.workers_parked.store(exec.parked as u64, Ordering::Relaxed);
+        self.pool_jobs.store(exec.jobs, Ordering::Relaxed);
+        self.buffers_pooled.store(exec.buffers.pooled, Ordering::Relaxed);
+        self.buffers_allocated.store(exec.buffers.allocated, Ordering::Relaxed);
+        self.buffer_reuses.store(exec.buffers.reused, Ordering::Relaxed);
+        self.partition_hits.store(partition.hits, Ordering::Relaxed);
+        self.partition_misses.store(partition.misses, Ordering::Relaxed);
     }
 
     pub fn record_latency(&self, secs: f64) {
@@ -59,8 +84,7 @@ impl Metrics {
         let idx = BUCKETS.partition_point(|&b| b < secs);
         h[idx] += 1;
         drop(h);
-        self.latency_sum_us
-            .fetch_add((secs * 1e6) as u64, Ordering::Relaxed);
+        self.latency_sum_us.fetch_add((secs * 1e6) as u64, Ordering::Relaxed);
     }
 
     /// Approximate p-th latency percentile from the histogram (upper bound
@@ -97,6 +121,14 @@ impl Metrics {
             plan_evictions: self.plan_evictions.load(Ordering::Relaxed),
             plan_len: self.plan_len.load(Ordering::Relaxed),
             probes: self.probes.load(Ordering::Relaxed),
+            pool_workers: self.pool_workers.load(Ordering::Relaxed),
+            workers_parked: self.workers_parked.load(Ordering::Relaxed),
+            pool_jobs: self.pool_jobs.load(Ordering::Relaxed),
+            buffers_pooled: self.buffers_pooled.load(Ordering::Relaxed),
+            buffers_allocated: self.buffers_allocated.load(Ordering::Relaxed),
+            buffer_reuses: self.buffer_reuses.load(Ordering::Relaxed),
+            partition_hits: self.partition_hits.load(Ordering::Relaxed),
+            partition_misses: self.partition_misses.load(Ordering::Relaxed),
             tuner_threshold: f64::from_bits(self.tuner_threshold_bits.load(Ordering::Relaxed)),
             p50_s: self.latency_percentile(50.0),
             p99_s: self.latency_percentile(99.0),
@@ -124,6 +156,17 @@ pub struct MetricsSnapshot {
     pub plan_evictions: u64,
     pub plan_len: u64,
     pub probes: u64,
+    /// executor-pool gauges: thread count, currently parked, jobs run
+    pub pool_workers: u64,
+    pub workers_parked: u64,
+    pub pool_jobs: u64,
+    /// output-buffer free-list gauges
+    pub buffers_pooled: u64,
+    pub buffers_allocated: u64,
+    pub buffer_reuses: u64,
+    /// partition replay: phase-1 splits reused vs recomputed
+    pub partition_hits: u64,
+    pub partition_misses: u64,
     pub tuner_threshold: f64,
     pub p50_s: f64,
     pub p99_s: f64,
@@ -147,7 +190,8 @@ impl std::fmt::Display for MetricsSnapshot {
         write!(
             f,
             "req={} ok={} err={} rowsplit={} merge={} pjrt={} cpu={} \
-             plan_hit={} plan_miss={} evict={} probes={} thr={:.2} p50={:.1}ms p99={:.1}ms",
+             plan_hit={} plan_miss={} evict={} probes={} \
+             pool={}/{} buf={}r/{}a part={}h/{}m thr={:.2} p50={:.1}ms p99={:.1}ms",
             self.requests,
             self.completed,
             self.errors,
@@ -159,6 +203,12 @@ impl std::fmt::Display for MetricsSnapshot {
             self.plan_misses,
             self.plan_evictions,
             self.probes,
+            self.workers_parked,
+            self.pool_workers,
+            self.buffer_reuses,
+            self.buffers_allocated,
+            self.partition_hits,
+            self.partition_misses,
             self.tuner_threshold,
             self.p50_s * 1e3,
             self.p99_s * 1e3
@@ -222,5 +272,35 @@ mod tests {
         assert!((snap.plan_hit_rate() - 0.75).abs() < 1e-12);
         let text = format!("{snap}");
         assert!(text.contains("plan_hit=3") && text.contains("thr=7.50"), "{text}");
+    }
+
+    #[test]
+    fn exec_gauges_roundtrip_into_snapshot() {
+        let m = Metrics::new();
+        m.sync_exec_gauges(
+            &crate::exec::ExecStats {
+                workers: 4,
+                parked: 3,
+                jobs: 17,
+                buffers: crate::exec::BufferStats {
+                    allocated: 2,
+                    reused: 9,
+                    pooled: 1,
+                },
+            },
+            &crate::plan::PartitionStats { hits: 8, misses: 2 },
+        );
+        let snap = m.snapshot();
+        assert_eq!(snap.pool_workers, 4);
+        assert_eq!(snap.workers_parked, 3);
+        assert_eq!(snap.pool_jobs, 17);
+        assert_eq!(snap.buffers_pooled, 1);
+        assert_eq!(snap.buffers_allocated, 2);
+        assert_eq!(snap.buffer_reuses, 9);
+        assert_eq!(snap.partition_hits, 8);
+        assert_eq!(snap.partition_misses, 2);
+        let text = format!("{snap}");
+        assert!(text.contains("pool=3/4") && text.contains("buf=9r/2a"), "{text}");
+        assert!(text.contains("part=8h/2m"), "{text}");
     }
 }

@@ -21,6 +21,13 @@
 //! [`engine`] is the synchronous core; [`router`] puts a threaded
 //! request-queue front-end on top (std threads + channels; the offline
 //! vendor set has no tokio, and the serve path is CPU-bound anyway).
+//!
+//! Execution runs on [`crate::exec`]'s persistent resources: every worker
+//! engine owns a warm [`crate::exec::WorkerPool`] (spawned at server
+//! start, so concurrent batches stay parallel) and all of them share one
+//! output-buffer free-list, so the steady-state request path spawns no
+//! threads and allocates nothing (see DESIGN.md §Executor pool & memory
+//! reuse).
 
 pub mod batcher;
 pub mod engine;

@@ -23,6 +23,7 @@ use std::time::Duration;
 
 use anyhow::Result;
 
+use crate::exec::{BufferPool, Executor};
 use crate::formats::Csr;
 use crate::plan::{PlanOutcome, Planner};
 use crate::runtime::Manifest;
@@ -91,6 +92,14 @@ impl Server {
         // One planner for the whole server: the router plans, the workers
         // execute and feed probe measurements back into the same tuner.
         let planner = Arc::new(engine_cfg.build_planner());
+        // One output-buffer free-list for the whole server (leases migrate
+        // freely between workers), but one warm pool *per worker engine*:
+        // a pool runs one broadcast at a time, so per-worker pools keep
+        // concurrent batches parallel (workers × cpu_workers threads, the
+        // same concurrency the scoped-thread executors had) while each
+        // worker still drains its batches back-to-back on warm threads.
+        // All pool threads spawn at server start, never per request.
+        let buffers = Arc::new(BufferPool::new());
         // gauges report the real (possibly warm-loaded) planner state from
         // the first snapshot on, not the paper prior
         metrics.sync_plan_gauges(&planner.cache().stats(), planner.tuner().threshold());
@@ -112,9 +121,11 @@ impl Server {
             let work_rx = Arc::clone(&work_rx);
             let metrics = Arc::clone(&metrics);
             let planner = Arc::clone(&planner);
+            let buffers = Arc::clone(&buffers);
             let engine_cfg = engine_cfg.clone();
             workers.push(std::thread::spawn(move || {
-                let engine = match SpmmEngine::new_with_planner(engine_cfg, planner) {
+                let exec = Arc::new(Executor::with_buffers(engine_cfg.cpu_workers, buffers));
+                let engine = match SpmmEngine::new_shared(engine_cfg, planner, exec) {
                     Ok(e) => e.with_shared_metrics(metrics),
                     Err(e) => {
                         // Engine failed to build: fail every batch we get.
@@ -330,6 +341,30 @@ mod tests {
         // one matrix, 20 requests: planned once, 19 cache hits
         assert_eq!(snap.plan_misses, 1);
         assert_eq!(snap.plan_hits, 19);
+    }
+
+    #[test]
+    fn server_steady_state_reuses_buffers_and_partitions() {
+        let server = Server::start(cpu_cfg(), ServerConfig::default()).unwrap();
+        let a = Arc::new(Csr::random(200, 200, 4.0, 1212));
+        let b = Arc::new(crate::gen::dense_matrix(200, 8, 1213));
+        for _ in 0..30 {
+            // drop each result before the next request: its buffer lease
+            // returns to the shared free-list
+            let r = server
+                .submit_blocking(Arc::clone(&a), Arc::clone(&b), 8)
+                .unwrap();
+            drop(r);
+        }
+        let snap = server.shutdown();
+        assert_eq!(snap.completed, 30);
+        // one shared free-list across all worker engines: sequential
+        // requests reuse one allocation
+        assert!(snap.buffers_allocated <= 2, "allocated {}", snap.buffers_allocated);
+        assert!(snap.buffer_reuses >= 28, "reused {}", snap.buffer_reuses);
+        // phase 1 computed once, replayed thereafter
+        assert!(snap.partition_hits >= 28, "hits {}", snap.partition_hits);
+        assert_eq!(snap.pool_workers, 2);
     }
 
     #[test]

@@ -1,0 +1,227 @@
+//! Pooled output buffers: a free-list keyed by buffer length so
+//! steady-state requests reuse prior `m×n` allocations instead of paying
+//! `vec![0.0; m * n]` on every call.
+//!
+//! A leased [`OutputBuf`] returns its allocation to the pool when dropped,
+//! so the natural `SpmmResult` lifecycle (engine hands the result to the
+//! caller, caller reads it, drops it) keeps a working set of warm buffers
+//! per output shape.  Retention is capped per shape and across shapes so
+//! adversarial shape churn cannot grow the pool without bound.
+
+use std::collections::HashMap;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Per-length cap on retained buffers.
+const MAX_PER_SHELF: usize = 8;
+/// Cap on distinct lengths retained; beyond it, returned buffers of new
+/// lengths are simply freed.
+const MAX_SHELVES: usize = 64;
+
+/// Point-in-time buffer-pool counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct BufferStats {
+    /// fresh heap allocations performed by `acquire`
+    pub allocated: u64,
+    /// acquisitions served from the free-list (zero-allocation requests)
+    pub reused: u64,
+    /// buffers currently parked in the free-list
+    pub pooled: u64,
+}
+
+/// Thread-safe free-list of `Vec<f32>` buffers keyed by exact length.
+#[derive(Default)]
+pub struct BufferPool {
+    shelves: Mutex<HashMap<usize, Vec<Vec<f32>>>>,
+    allocated: AtomicU64,
+    reused: AtomicU64,
+    pooled: AtomicU64,
+}
+
+impl BufferPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Lease a buffer of exactly `len` elements from `pool`.  Contents are
+    /// unspecified — the `_into` executors overwrite every element, so no
+    /// zeroing pass is paid here.  (Associated fn rather than a method:
+    /// the lease must hold an `Arc` back to the pool for its `Drop`.)
+    pub fn acquire(pool: &Arc<BufferPool>, len: usize) -> OutputBuf {
+        let hit = pool.shelves.lock().unwrap().get_mut(&len).and_then(|shelf| shelf.pop());
+        let data = match hit {
+            Some(buf) => {
+                pool.reused.fetch_add(1, Ordering::Relaxed);
+                pool.pooled.fetch_sub(1, Ordering::Relaxed);
+                buf
+            }
+            None => {
+                pool.allocated.fetch_add(1, Ordering::Relaxed);
+                vec![0.0; len]
+            }
+        };
+        OutputBuf {
+            data,
+            pool: Some(Arc::clone(pool)),
+        }
+    }
+
+    fn release(&self, data: Vec<f32>) {
+        let len = data.len();
+        let mut shelves = self.shelves.lock().unwrap();
+        if let Some(shelf) = shelves.get_mut(&len) {
+            if shelf.len() < MAX_PER_SHELF {
+                shelf.push(data);
+                self.pooled.fetch_add(1, Ordering::Relaxed);
+            }
+            return;
+        }
+        if shelves.len() >= MAX_SHELVES {
+            // Recycle a drained shelf so old shapes that no longer recur
+            // can't permanently lock new shapes out of the free-list.
+            let drained = shelves.iter().find(|(_, v)| v.is_empty()).map(|(k, _)| *k);
+            match drained {
+                Some(key) => {
+                    shelves.remove(&key);
+                }
+                None => return, // budget genuinely full of live buffers
+            }
+        }
+        shelves.insert(len, vec![data]);
+        self.pooled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn stats(&self) -> BufferStats {
+        BufferStats {
+            allocated: self.allocated.load(Ordering::Relaxed),
+            reused: self.reused.load(Ordering::Relaxed),
+            pooled: self.pooled.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// An output buffer leased from a [`BufferPool`]; dereferences to `[f32]`
+/// and returns its allocation to the pool on drop.
+pub struct OutputBuf {
+    data: Vec<f32>,
+    pool: Option<Arc<BufferPool>>,
+}
+
+impl OutputBuf {
+    /// Wrap an owned vector without pooling (PJRT results, tests).
+    pub fn detached(data: Vec<f32>) -> Self {
+        Self { data, pool: None }
+    }
+
+    /// Take the data out; the allocation permanently leaves the pool.
+    pub fn into_vec(mut self) -> Vec<f32> {
+        self.pool = None;
+        std::mem::take(&mut self.data)
+    }
+}
+
+impl From<Vec<f32>> for OutputBuf {
+    fn from(data: Vec<f32>) -> Self {
+        Self::detached(data)
+    }
+}
+
+impl Deref for OutputBuf {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+impl DerefMut for OutputBuf {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+}
+
+impl AsRef<[f32]> for OutputBuf {
+    fn as_ref(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+impl std::fmt::Debug for OutputBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        std::fmt::Debug::fmt(&self.data, f)
+    }
+}
+
+impl Drop for OutputBuf {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.take() {
+            pool.release(std::mem::take(&mut self.data));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drop_returns_buffer_and_acquire_reuses_it() {
+        let pool = Arc::new(BufferPool::new());
+        let first = BufferPool::acquire(&pool, 64);
+        let ptr = first.as_ptr();
+        drop(first);
+        let again = BufferPool::acquire(&pool, 64);
+        assert_eq!(again.as_ptr(), ptr, "free-list must hand back the same allocation");
+        let s = pool.stats();
+        assert_eq!((s.allocated, s.reused), (1, 1));
+    }
+
+    #[test]
+    fn distinct_lengths_use_distinct_shelves() {
+        let pool = Arc::new(BufferPool::new());
+        drop(BufferPool::acquire(&pool, 16));
+        let b = BufferPool::acquire(&pool, 32); // different length: fresh allocation
+        assert_eq!(b.len(), 32);
+        let s = pool.stats();
+        assert_eq!((s.allocated, s.reused, s.pooled), (2, 0, 1));
+    }
+
+    #[test]
+    fn shelf_capacity_is_bounded() {
+        let pool = Arc::new(BufferPool::new());
+        let bufs: Vec<_> = (0..20).map(|_| BufferPool::acquire(&pool, 8)).collect();
+        drop(bufs);
+        assert!(pool.stats().pooled <= MAX_PER_SHELF as u64);
+    }
+
+    #[test]
+    fn new_lengths_still_pool_after_old_shelves_drain() {
+        let pool = Arc::new(BufferPool::new());
+        // create MAX_SHELVES shelves and drain them all to empty
+        for len in 1..=MAX_SHELVES {
+            drop(BufferPool::acquire(&pool, len)); // shelf created, 1 buffer
+            let taken = BufferPool::acquire(&pool, len); // shelf now empty
+            let _ = taken.into_vec(); // never returned
+        }
+        // a brand-new length must recycle a drained shelf, not fall through
+        drop(BufferPool::acquire(&pool, 100_000));
+        let again = BufferPool::acquire(&pool, 100_000);
+        assert_eq!(again.len(), 100_000);
+        assert_eq!(pool.stats().reused, MAX_SHELVES as u64 + 1);
+    }
+
+    #[test]
+    fn into_vec_detaches_from_pool() {
+        let pool = Arc::new(BufferPool::new());
+        let v = BufferPool::acquire(&pool, 8).into_vec();
+        assert_eq!(v.len(), 8);
+        assert_eq!(pool.stats().pooled, 0, "into_vec must not return to pool");
+    }
+
+    #[test]
+    fn detached_buffers_never_touch_a_pool() {
+        let b = OutputBuf::detached(vec![1.0, 2.0]);
+        assert_eq!(&b[..], &[1.0, 2.0]);
+        drop(b); // no pool: plain free
+    }
+}

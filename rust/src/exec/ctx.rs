@@ -1,0 +1,119 @@
+//! Per-execution scratch that persists across requests — the worker-side
+//! "arena" half of the zero-allocation hot path.
+//!
+//! The merge executor's carry-out partials used to be `vec![0.0; n]`
+//! allocations made inside every worker on every call.  [`ExecCtx`] keeps
+//! one [`CarrySlot`] per task whose backing `Vec` is cleared but never
+//! shrunk between requests, so after the first request at a given dense
+//! width the steady state allocates nothing.
+
+use std::sync::Arc;
+
+use super::pool::{global_pool, WorkerPool};
+
+/// Sentinel for "this slot carried nothing this round".
+pub const NO_CARRY: usize = usize::MAX;
+
+/// One worker's carry-out: the partial sum for its first touched row,
+/// which may be shared with the previous worker (paper Algorithm 1,
+/// line 22).
+#[derive(Debug)]
+pub struct CarrySlot {
+    /// row index the partial belongs to, or [`NO_CARRY`] when unused
+    pub row: usize,
+    /// `n`-wide partial; capacity persists across requests
+    pub buf: Vec<f32>,
+}
+
+impl Default for CarrySlot {
+    fn default() -> Self {
+        Self {
+            row: NO_CARRY,
+            buf: Vec::new(),
+        }
+    }
+}
+
+impl CarrySlot {
+    /// Claim the slot for `row` at dense width `n`, zeroing the partial.
+    /// Allocation-free once the buffer's capacity has reached `n`.
+    pub fn start(&mut self, row: usize, n: usize) {
+        self.row = row;
+        self.buf.clear();
+        self.buf.resize(n, 0.0);
+    }
+}
+
+/// Reusable execution context: the worker pool plus per-task scratch.
+/// One `ExecCtx` serves one executor call at a time (`&mut`); engines keep
+/// one per serving thread and reuse it for every request.
+pub struct ExecCtx {
+    pool: Arc<WorkerPool>,
+    carries: Vec<CarrySlot>,
+}
+
+impl ExecCtx {
+    pub fn new(pool: Arc<WorkerPool>) -> Self {
+        Self {
+            pool,
+            carries: Vec::new(),
+        }
+    }
+
+    /// Context over the process-wide pool — what the free-function SpMM
+    /// wrappers use.
+    pub fn with_global_pool() -> Self {
+        Self::new(global_pool())
+    }
+
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
+    }
+
+    /// Reset and hand out `tasks` carry slots together with the pool
+    /// (split borrows so an executor can capture both at once).  Slot
+    /// buffers keep their capacity; only the `row` markers are reset.
+    pub fn prepare(&mut self, tasks: usize) -> (&WorkerPool, &mut [CarrySlot]) {
+        if self.carries.len() < tasks {
+            self.carries.resize_with(tasks, CarrySlot::default);
+        }
+        let Self { pool, carries } = self;
+        let carries = &mut carries[..tasks];
+        for slot in carries.iter_mut() {
+            slot.row = NO_CARRY;
+        }
+        (pool, carries)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prepare_grows_then_reuses_slots() {
+        let mut ctx = ExecCtx::with_global_pool();
+        {
+            let (_, slots) = ctx.prepare(4);
+            assert_eq!(slots.len(), 4);
+            slots[2].start(7, 16);
+            assert_eq!(slots[2].row, 7);
+            assert_eq!(slots[2].buf, vec![0.0; 16]);
+        }
+        // a smaller round resets markers but keeps capacity
+        let (_, slots) = ctx.prepare(3);
+        assert_eq!(slots.len(), 3);
+        assert!(slots.iter().all(|s| s.row == NO_CARRY));
+        assert!(slots[2].buf.capacity() >= 16, "scratch capacity must persist");
+    }
+
+    #[test]
+    fn start_zeroes_stale_contents() {
+        let mut slot = CarrySlot::default();
+        slot.start(1, 4);
+        slot.buf[3] = 9.0;
+        slot.start(2, 4);
+        assert_eq!(slot.row, 2);
+        assert_eq!(slot.buf, vec![0.0; 4]);
+    }
+}

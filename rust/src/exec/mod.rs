@@ -1,0 +1,222 @@
+//! Persistent execution resources for the serve path (the tentpole of the
+//! zero-allocation hot path).
+//!
+//! The paper's two executors are *algorithms*; this module is the *system*
+//! around them: a [`WorkerPool`] that spawns threads once per engine and
+//! parks them between requests (the CPU analogue of the GPU's persistent
+//! CTAs), a [`BufferPool`] free-list of `m×n` output buffers, and an
+//! [`ExecCtx`] of per-worker scratch arenas for carry-out partials.
+//! Together they make the steady-state request path perform **zero thread
+//! creation and zero heap allocation**: `rowsplit_spmm_into` /
+//! `merge_spmm_into` ([`crate::spmm`]) consume a precomputed partition and
+//! write into a caller-provided buffer, and [`crate::plan`] caches each
+//! fingerprint's partition so phase 1 runs once per matrix, not once per
+//! call.
+
+pub mod buffers;
+pub mod ctx;
+pub mod pool;
+
+pub use buffers::{BufferPool, BufferStats, OutputBuf};
+pub use ctx::{CarrySlot, ExecCtx, NO_CARRY};
+pub use pool::{global_pool, WorkerPool};
+
+pub(crate) use pool::SendPtr;
+
+use std::sync::Arc;
+
+use crate::formats::Csr;
+use crate::loadbalance::{nzsplit::row_of, NonzeroSplit, Partitioner, RowSplit, Segment};
+use crate::spmm::Algorithm;
+
+/// Execution resources: one warm worker pool plus an output-buffer
+/// free-list.  An engine owns one.  A pool runs one broadcast at a time
+/// (dispatch-serialized), so concurrency across serving threads comes from
+/// one `Executor` per thread — the [`crate::coordinator::Server`] gives
+/// each worker engine its own pool but shares a single [`BufferPool`]
+/// ([`Executor::with_buffers`]) so output leases flow between workers.
+pub struct Executor {
+    pool: Arc<WorkerPool>,
+    buffers: Arc<BufferPool>,
+}
+
+/// Point-in-time executor gauges (exported by
+/// [`crate::coordinator::metrics`]).
+#[derive(Debug, Clone, Copy)]
+pub struct ExecStats {
+    pub workers: usize,
+    pub parked: usize,
+    pub jobs: u64,
+    pub buffers: BufferStats,
+}
+
+impl Executor {
+    /// Spawn the pool (0 = available parallelism) and an empty buffer
+    /// free-list.  The only thread creation in the executor's lifetime
+    /// happens here.
+    pub fn new(workers: usize) -> Self {
+        Self::with_buffers(workers, Arc::new(BufferPool::new()))
+    }
+
+    /// Executor over an existing (shared) buffer free-list — its own warm
+    /// pool, but leases drawn from and returned to the shared list.
+    pub fn with_buffers(workers: usize, buffers: Arc<BufferPool>) -> Self {
+        Self {
+            pool: Arc::new(WorkerPool::new(workers)),
+            buffers,
+        }
+    }
+
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
+    }
+
+    pub fn buffers(&self) -> &Arc<BufferPool> {
+        &self.buffers
+    }
+
+    /// A fresh scratch context bound to this executor's pool.
+    pub fn make_ctx(&self) -> ExecCtx {
+        ExecCtx::new(Arc::clone(&self.pool))
+    }
+
+    /// Lease an output buffer from this executor's free-list.
+    pub fn acquire(&self, len: usize) -> OutputBuf {
+        BufferPool::acquire(&self.buffers, len)
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        ExecStats {
+            workers: self.pool.workers(),
+            parked: self.pool.parked(),
+            jobs: self.pool.jobs(),
+            buffers: self.buffers.stats(),
+        }
+    }
+}
+
+/// Phase-1 decomposition for `algorithm` at parallelism `p` — the engine's
+/// defaults: equal rows for row-split, equal nonzeros (the paper's SpMM
+/// choice) for merge-based.
+pub fn partition(a: &Csr, algorithm: Algorithm, p: usize) -> Vec<Segment> {
+    match algorithm {
+        Algorithm::RowSplit => RowSplit::default().partition(a, p.max(1)),
+        Algorithm::MergeBased => NonzeroSplit.partition(a, p.max(1)),
+    }
+}
+
+/// Exact check that a stored partition is *the* phase-1 decomposition of
+/// `a` for `algorithm`.  Plan-cache keys are fingerprints (quantized
+/// statistics), so two structurally different matrices can collide; a
+/// replayed partition is only safe if it still tiles this matrix.  The
+/// check is O(p log m) — the same order as recomputing a nonzero split —
+/// but touches `row_ptr` at segment boundaries only, not per row.
+pub fn partition_matches(a: &Csr, algorithm: Algorithm, segs: &[Segment]) -> bool {
+    let nnz = a.nnz();
+    if nnz == 0 || a.m == 0 || segs.is_empty() {
+        // degenerate partitions are cheap; always recompute
+        return false;
+    }
+    let mut expect_nz = 0usize;
+    let mut prev_row_end = 0usize;
+    for (i, s) in segs.iter().enumerate() {
+        if s.nz_start != expect_nz || s.nz_end < s.nz_start || s.row_end > a.m {
+            return false;
+        }
+        match algorithm {
+            Algorithm::RowSplit => {
+                // contiguous rows whose nonzero ranges are the row_ptr spans
+                let expect_row = if i == 0 { 0 } else { prev_row_end };
+                if s.row_start != expect_row
+                    || a.row_ptr[s.row_start] != s.nz_start
+                    || a.row_ptr[s.row_end] != s.nz_end
+                {
+                    return false;
+                }
+            }
+            Algorithm::MergeBased => {
+                // first/last touched rows must match the binary search the
+                // partitioner would run, and own-ranges must not rewind
+                if i > 0 && s.row_start + 1 < prev_row_end {
+                    return false;
+                }
+                if s.nz_end > s.nz_start
+                    && (row_of(a, s.nz_start) != s.row_start
+                        || row_of(a, s.nz_end - 1) + 1 != s.row_end)
+                {
+                    return false;
+                }
+            }
+        }
+        expect_nz = s.nz_end;
+        prev_row_end = s.row_end;
+    }
+    expect_nz == nnz
+        && match algorithm {
+            Algorithm::RowSplit => prev_row_end == a.m,
+            Algorithm::MergeBased => true,
+        }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_round_trips_through_matcher() {
+        let a = Csr::random(300, 300, 5.0, 91);
+        for alg in [Algorithm::RowSplit, Algorithm::MergeBased] {
+            for p in [1, 3, 8] {
+                let segs = partition(&a, alg, p);
+                assert!(partition_matches(&a, alg, &segs), "{alg} p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn matcher_rejects_partition_of_a_different_matrix() {
+        // same shape and nnz budget, different row structure
+        let a = crate::gen::uniform_rows(120, 6, Some(120), 92);
+        let b = Csr::random(120, 120, 6.0, 93);
+        for alg in [Algorithm::RowSplit, Algorithm::MergeBased] {
+            let segs = partition(&a, alg, 4);
+            // the safety contract: a partition may only replay on `b` if it
+            // still tiles `b` exactly
+            if partition_matches(&b, alg, &segs) {
+                assert!(crate::loadbalance::validate_segments(&b, &segs).is_ok(), "{alg}");
+            }
+        }
+        // deterministic rejection: same nnz, shifted row boundaries
+        let x = Csr::new(2, 4, vec![0, 2, 4], vec![0, 1, 0, 1], vec![1.0; 4]).unwrap();
+        let y = Csr::new(2, 4, vec![0, 1, 4], vec![0, 0, 1, 2], vec![1.0; 4]).unwrap();
+        for alg in [Algorithm::RowSplit, Algorithm::MergeBased] {
+            let segs = partition(&x, alg, 2);
+            assert!(partition_matches(&x, alg, &segs), "{alg}");
+            assert!(!partition_matches(&y, alg, &segs), "{alg}");
+        }
+        let segs = partition(&b, Algorithm::MergeBased, 4);
+        assert!(partition_matches(&b, Algorithm::MergeBased, &segs));
+    }
+
+    #[test]
+    fn matcher_rejects_wrong_algorithm_and_degenerate() {
+        let a = Csr::random(100, 100, 12.0, 94);
+        let rs = partition(&a, Algorithm::RowSplit, 4);
+        // a row partition is generally not a valid nonzero split
+        let empty = Csr::empty(10, 10);
+        assert!(!partition_matches(&empty, Algorithm::RowSplit, &rs));
+        assert!(!partition_matches(&a, Algorithm::RowSplit, &[]));
+    }
+
+    #[test]
+    fn executor_stats_reflect_pool_and_buffers() {
+        let exec = Executor::new(2);
+        let buf = exec.acquire(32);
+        drop(buf);
+        let _again = exec.acquire(32);
+        let s = exec.stats();
+        assert_eq!(s.workers, 2);
+        assert_eq!(s.buffers.allocated, 1);
+        assert_eq!(s.buffers.reused, 1);
+    }
+}

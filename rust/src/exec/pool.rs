@@ -1,0 +1,393 @@
+//! Persistent worker pool — the CPU analogue of the paper's
+//! persistent-CTA execution model.
+//!
+//! The original executors ran every call inside `std::thread::scope`,
+//! spawning and joining fresh OS threads per request.  Under serving
+//! traffic that setup cost dominates latency for small and medium
+//! matrices, exactly the overhead the paper's merge-based design works to
+//! amortize on the GPU.  [`WorkerPool`] spawns its workers once;
+//! afterwards each request is one condvar broadcast: the caller publishes
+//! a type-erased job, parked workers wake, run their strided share of the
+//! tasks, and the last one out signals completion.  The steady-state
+//! request path performs **zero thread creation** — the pool's threads
+//! stay warm across requests the way persistent CTAs stay resident across
+//! invocations.
+//!
+//! Safety model: [`WorkerPool::broadcast`] blocks until every worker has
+//! finished the job, so borrowing the job closure (and everything it
+//! captures) from the caller's stack is sound — the same scoping argument
+//! `std::thread::scope` makes, without the per-call spawn/join.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Raw-pointer wrapper that lets disjoint-index writes cross the closure
+/// boundary into pool workers.  Each task must touch only its own region;
+/// the executors derive per-task windows from validated partitions.
+pub(crate) struct SendPtr<T>(pub *mut T);
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+// Safety: disjointness of the regions reached through the pointer is the
+// caller's contract (documented on every use site).
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+thread_local! {
+    /// True on pool worker threads: a nested broadcast runs inline instead
+    /// of waiting on the dispatch lock its own pool already holds.
+    static IN_POOL: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Type-erased job: `call(data, task)` invokes the caller's closure.
+#[derive(Clone, Copy)]
+struct Job {
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+}
+
+// Safety: the pointer is only dereferenced while `broadcast` blocks on
+// completion, so the closure it points at is always alive.
+unsafe impl Send for Job {}
+
+struct Slot {
+    job: Option<Job>,
+    tasks: usize,
+    /// bumped once per published job; workers run each epoch exactly once
+    epoch: u64,
+    /// participating workers that have not yet finished the current epoch
+    active: usize,
+    /// first panic payload caught from a worker this epoch — re-raised on
+    /// the dispatching thread so a panicking job behaves like
+    /// `std::thread::scope` (propagates) instead of wedging the pool
+    panic: Option<Box<dyn std::any::Any + Send>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    /// workers wait here for a new epoch (or shutdown)
+    work: Condvar,
+    /// the dispatcher waits here for `active == 0`
+    done: Condvar,
+    parked: AtomicUsize,
+}
+
+/// A fixed-size pool of parked worker threads executing broadcast jobs.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: usize,
+    /// serializes broadcasts: one job owns the workers at a time
+    dispatch: Mutex<()>,
+    jobs: AtomicU64,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` threads (0 = available parallelism).  This is the
+    /// only place the pool creates threads; every subsequent job reuses
+    /// them.
+    pub fn new(workers: usize) -> Self {
+        let workers = if workers == 0 {
+            std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4)
+        } else {
+            workers
+        };
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(Slot {
+                job: None,
+                tasks: 0,
+                epoch: 0,
+                active: 0,
+                panic: None,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            parked: AtomicUsize::new(0),
+        });
+        let handles = (0..workers)
+            .map(|w| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("spmm-exec-{w}"))
+                    .spawn(move || worker_loop(shared, workers, w))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self {
+            shared,
+            workers,
+            dispatch: Mutex::new(()),
+            jobs: AtomicU64::new(0),
+            handles,
+        }
+    }
+
+    /// Thread count, fixed at construction.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Workers currently parked on the condvar (gauge; racy by nature).
+    pub fn parked(&self) -> usize {
+        self.shared.parked.load(Ordering::Relaxed)
+    }
+
+    /// Jobs dispatched to the pool over its lifetime (inline-run jobs —
+    /// single-task or nested — are not counted).
+    pub fn jobs(&self) -> u64 {
+        self.jobs.load(Ordering::Relaxed)
+    }
+
+    /// Run `f(task)` for every `task` in `0..tasks`, distributing tasks
+    /// across the pool's workers (worker `w` runs tasks `w, w + workers,
+    /// …`) and blocking until all complete.  Single-task jobs and nested
+    /// broadcasts (a pool worker calling back into a pool) run inline on
+    /// the calling thread.
+    pub fn broadcast<F>(&self, tasks: usize, f: &F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if tasks == 0 {
+            return;
+        }
+        if tasks == 1 || IN_POOL.with(|c| c.get()) {
+            for t in 0..tasks {
+                f(t);
+            }
+            return;
+        }
+        unsafe fn call<F: Fn(usize)>(data: *const (), task: usize) {
+            (*(data as *const F))(task);
+        }
+        let job = Job {
+            data: f as *const F as *const (),
+            call: call::<F>,
+        };
+        let own = self.dispatch.lock().unwrap();
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+        let mut slot = self.shared.slot.lock().unwrap();
+        slot.job = Some(job);
+        slot.tasks = tasks;
+        slot.epoch += 1;
+        slot.active = self.workers.min(tasks);
+        self.shared.work.notify_all();
+        while slot.active > 0 {
+            slot = self.shared.done.wait(slot).unwrap();
+        }
+        slot.job = None;
+        let payload = slot.panic.take();
+        // release both locks before re-raising so a job panic never
+        // poisons the pool's mutexes
+        drop(slot);
+        drop(own);
+        if let Some(payload) = payload {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            slot.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, workers: usize, index: usize) {
+    IN_POOL.with(|c| c.set(true));
+    let mut seen = 0u64;
+    loop {
+        let (job, tasks) = {
+            let mut slot = shared.slot.lock().unwrap();
+            loop {
+                if slot.shutdown {
+                    return;
+                }
+                if slot.epoch != seen && slot.job.is_some() {
+                    seen = slot.epoch;
+                    break;
+                }
+                shared.parked.fetch_add(1, Ordering::Relaxed);
+                slot = shared.work.wait(slot).unwrap();
+                shared.parked.fetch_sub(1, Ordering::Relaxed);
+            }
+            (slot.job.unwrap(), slot.tasks)
+        };
+        // Workers beyond the task count sit this epoch out (they are not
+        // counted in `active`).
+        if index < workers.min(tasks) {
+            // A panicking job must not kill the worker or strand `active`
+            // above zero (that would wedge every future broadcast): catch
+            // it here, hand it to the dispatcher, keep the thread alive.
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let mut t = index;
+                while t < tasks {
+                    // Safety: the dispatcher blocks until `active == 0`, so
+                    // the closure behind `data` outlives every call.
+                    unsafe { (job.call)(job.data, t) };
+                    t += workers;
+                }
+            }));
+            let mut slot = shared.slot.lock().unwrap();
+            if let Err(payload) = result {
+                if slot.panic.is_none() {
+                    slot.panic = Some(payload);
+                }
+            }
+            slot.active -= 1;
+            if slot.active == 0 {
+                shared.done.notify_all();
+            }
+        }
+    }
+}
+
+static GLOBAL_POOL: OnceLock<Arc<WorkerPool>> = OnceLock::new();
+
+/// Process-wide shared pool (sized to available parallelism), used by the
+/// free-function SpMM wrappers so even ad-hoc calls never spawn per-call
+/// threads.  Engines create their own [`WorkerPool`] via
+/// [`super::Executor`] instead.
+pub fn global_pool() -> Arc<WorkerPool> {
+    Arc::clone(GLOBAL_POOL.get_or_init(|| Arc::new(WorkerPool::new(0))))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn broadcast_runs_every_task_once() {
+        let pool = WorkerPool::new(4);
+        let counts: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
+        pool.broadcast(100, &|t| {
+            counts[t].fetch_add(1, Ordering::Relaxed);
+        });
+        for (t, c) in counts.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 1, "task {t}");
+        }
+    }
+
+    #[test]
+    fn tasks_fewer_than_workers() {
+        let pool = WorkerPool::new(8);
+        let hits = AtomicUsize::new(0);
+        pool.broadcast(3, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn reuse_across_many_jobs_no_respawn() {
+        let pool = WorkerPool::new(2);
+        let total = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.broadcast(8, &|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 400);
+        assert_eq!(pool.workers(), 2);
+        assert_eq!(pool.jobs(), 50);
+    }
+
+    #[test]
+    fn single_task_runs_inline() {
+        let pool = WorkerPool::new(2);
+        let caller = std::thread::current().id();
+        let ran_on = std::sync::Mutex::new(None);
+        pool.broadcast(1, &|_| {
+            *ran_on.lock().unwrap() = Some(std::thread::current().id());
+        });
+        assert_eq!(*ran_on.lock().unwrap(), Some(caller));
+        assert_eq!(pool.jobs(), 0, "inline jobs bypass dispatch");
+    }
+
+    #[test]
+    fn nested_broadcast_does_not_deadlock() {
+        let pool = WorkerPool::new(2);
+        let inner_runs = AtomicUsize::new(0);
+        pool.broadcast(4, &|_| {
+            // a worker calling back into its own pool must run inline
+            global_pool().broadcast(3, &|_| {
+                inner_runs.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(inner_runs.load(Ordering::Relaxed), 12);
+    }
+
+    #[test]
+    fn concurrent_broadcasts_serialize_correctly() {
+        let pool = Arc::new(WorkerPool::new(3));
+        let total = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let pool = Arc::clone(&pool);
+                let total = Arc::clone(&total);
+                std::thread::spawn(move || {
+                    for _ in 0..20 {
+                        pool.broadcast(5, &|_| {
+                            total.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 20 * 5);
+    }
+
+    #[test]
+    fn panic_in_job_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.broadcast(4, &|t| {
+                if t == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "job panic must reach the dispatcher");
+        // the pool must stay fully operational afterwards
+        let hits = AtomicUsize::new(0);
+        pool.broadcast(4, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn workers_park_when_idle() {
+        let pool = WorkerPool::new(3);
+        pool.broadcast(6, &|_| {});
+        // workers re-park after the job; poll briefly (parking is async)
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(2);
+        while pool.parked() < 3 && std::time::Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        assert_eq!(pool.parked(), 3);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = WorkerPool::new(2);
+        pool.broadcast(4, &|_| {});
+        drop(pool); // must not hang
+    }
+}

@@ -21,6 +21,9 @@
 //!     future-work section calls for (row split, nonzero split, merge path),
 //!   - [`spmm`] — multi-threaded CPU executors for both algorithms, the
 //!     heuristic selector, baselines, and the Table-1 analytic model,
+//!   - [`exec`] — the persistent executor pool, output-buffer free-list,
+//!     and scratch arenas behind the zero-allocation serve path (see
+//!     below),
 //!   - [`sim`] — a K40c cost-model simulator that regenerates the paper's
 //!     figures (we have no K40c; see DESIGN.md §Substitutions),
 //!   - [`gen`] — matrix generators incl. the 157-matrix synthetic suite,
@@ -52,10 +55,44 @@
 //! [`coordinator::router`] plans once per request (not once per hop) and
 //! shares one [`plan::Planner`] across every worker engine; cache and
 //! tuner state surface through [`coordinator::metrics`].
+//!
+//! ## exec — the zero-allocation hot path
+//!
+//! The paper's speedups come from amortizing setup (phase-1 decomposition,
+//! persistent CTAs); [`exec`] applies the same principle at the system
+//! level so the steady-state request path performs **no thread creation
+//! and no heap allocation**:
+//!
+//! * [`exec::WorkerPool`] — spawned once per engine; workers park between
+//!   requests and wake for one condvar broadcast per job (the CPU analogue
+//!   of the persistent-CTA model),
+//! * [`exec::BufferPool`] / [`exec::OutputBuf`] — an `m×n` output
+//!   free-list keyed by length; results are *leases* that return their
+//!   allocation on drop,
+//! * [`exec::ExecCtx`] — per-worker carry-out arenas whose capacity
+//!   persists across requests,
+//! * [`plan::Planner::partition_for`] — phase 1 runs once per fingerprint;
+//!   the partition is stored with the cached plan and replayed after an
+//!   exact [`exec::partition_matches`] revalidation.
+//!
+//! ### The `_into` API contract
+//!
+//! [`spmm::rowsplit_spmm_into`] and [`spmm::merge_spmm_into`] are the
+//! pooled executors.  The caller supplies **(1)** a partition `segs` that
+//! tiles `a` (from [`loadbalance`], [`exec::partition`], or a cache replay
+//! guarded by [`exec::partition_matches`]), **(2)** an [`exec::ExecCtx`]
+//! whose pool runs the work, and **(3)** an output `c` with `c.len() ==
+//! a.m * n` — stale contents are fully overwritten, so pooled buffers need
+//! no zeroing between requests.  The functions never allocate, never spawn
+//! threads, and never return borrowed data; `ExecCtx` is `&mut` because
+//! its scratch slots are reused in place.  The classic allocating entry
+//! points ([`spmm::rowsplit_spmm`], [`spmm::merge_spmm`]) remain as thin
+//! wrappers that run on a process-wide shared pool.
 
 // bench wired in after sim/runtime/coordinator land
 pub mod bench;
 pub mod coordinator;
+pub mod exec;
 pub mod formats;
 pub mod gen;
 pub mod loadbalance;

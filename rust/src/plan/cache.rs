@@ -84,6 +84,39 @@ impl PlanCache {
         found
     }
 
+    /// Counter- and recency-neutral lookup, for bookkeeping off the serve
+    /// path (e.g. carrying a stored partition across a probe refresh).
+    pub fn peek(&self, fp: &Fingerprint) -> Option<ExecutionPlan> {
+        self.inner.lock().unwrap().map.get(fp).map(|e| e.plan.clone())
+    }
+
+    /// Attach a phase-1 partition to the entry for `fp` — but only if the
+    /// cached decision still equals `plan`.  A concurrent probe may have
+    /// retargeted this fingerprint between planning and execution; a blind
+    /// insert here would silently revert it (lost update), so the check
+    /// and the write happen under one lock.  Inserts `plan` (with the
+    /// partition) when the entry has been evicted meanwhile.
+    pub fn attach_partition(
+        &self,
+        fp: Fingerprint,
+        plan: &ExecutionPlan,
+        segs: std::sync::Arc<Vec<crate::loadbalance::Segment>>,
+    ) {
+        {
+            let mut guard = self.inner.lock().unwrap();
+            if let Some(entry) = guard.map.get_mut(&fp) {
+                // PartialEq compares decision fields only (not partition)
+                if entry.plan == *plan {
+                    entry.plan.partition = Some(segs);
+                }
+                return;
+            }
+        }
+        let mut plan = plan.clone();
+        plan.partition = Some(segs);
+        self.insert(fp, plan);
+    }
+
     /// Insert or overwrite a plan, evicting the least recently used entry
     /// when full.
     pub fn insert(&self, fp: Fingerprint, plan: ExecutionPlan) {
@@ -171,6 +204,7 @@ mod tests {
             granularity: 64,
             bucket: None,
             workers,
+            partition: None,
         }
     }
 

@@ -33,14 +33,17 @@ pub use persist::{PlanFile, FORMAT};
 pub use tuner::{OnlineTuner, TunerStats, THRESHOLD_MAX, THRESHOLD_MIN};
 
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use crate::formats::Csr;
+use crate::loadbalance::Segment;
 use crate::runtime::{pad, Manifest};
 use crate::spmm::Algorithm;
 
 /// Everything the engine needs to execute one request — the unit the
 /// cache stores and persistence round-trips.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone)]
 pub struct ExecutionPlan {
     pub algorithm: Algorithm,
     /// decomposition granularity: work items per worker chunk (rows for
@@ -53,6 +56,23 @@ pub struct ExecutionPlan {
     /// CPU worker threads the plan was built for (0 = auto; recorded for
     /// persistence/reporting — execution uses `cpu_parallelism`)
     pub workers: usize,
+    /// the phase-1 decomposition, filled in by the first execution
+    /// ([`Planner::partition_for`]) so repeated requests replay it instead
+    /// of re-running the split searches.  Derived state: excluded from
+    /// equality and never persisted (it is validated against the concrete
+    /// matrix before reuse — see [`crate::exec::partition_matches`]).
+    pub partition: Option<Arc<Vec<Segment>>>,
+}
+
+// `partition` is a replayable artifact of the other fields plus a concrete
+// matrix; plans are equal when their *decisions* are equal.
+impl PartialEq for ExecutionPlan {
+    fn eq(&self, other: &Self) -> bool {
+        self.algorithm == other.algorithm
+            && self.granularity == other.granularity
+            && self.bucket == other.bucket
+            && self.workers == other.workers
+    }
 }
 
 impl ExecutionPlan {
@@ -76,12 +96,22 @@ pub struct PlanOutcome {
     pub cache_hit: bool,
 }
 
+/// Partition-replay counters: how often a cached plan's stored phase-1
+/// decomposition was reused vs recomputed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PartitionStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
 /// The adaptive planner: consulted on the serve hot path before any
 /// per-request analysis.
 pub struct Planner {
     cache: PlanCache,
     tuner: OnlineTuner,
     default_workers: usize,
+    partition_hits: AtomicU64,
+    partition_misses: AtomicU64,
 }
 
 impl Planner {
@@ -91,6 +121,8 @@ impl Planner {
             cache: PlanCache::new(capacity),
             tuner: OnlineTuner::new(threshold),
             default_workers,
+            partition_hits: AtomicU64::new(0),
+            partition_misses: AtomicU64::new(0),
         }
     }
 
@@ -150,8 +182,18 @@ impl Planner {
         let d = a.mean_row_length();
         self.tuner.observe(d, t_rowsplit, t_merge);
         let algorithm = self.tuner.decide(d);
-        let plan = self.build_plan(a, algorithm, manifest);
-        self.cache.insert(Fingerprint::of(a), plan);
+        let fingerprint = Fingerprint::of(a);
+        let mut plan = self.build_plan(a, algorithm, manifest);
+        // Carry the stored phase-1 partition forward when the decision is
+        // unchanged — probe-band fingerprints are probed repeatedly, and
+        // wiping the partition on each probe would defeat replay exactly
+        // where requests are most expensive.
+        if let Some(old) = self.cache.peek(&fingerprint) {
+            if old.algorithm == plan.algorithm && old.granularity == plan.granularity {
+                plan.partition = old.partition;
+            }
+        }
+        self.cache.insert(fingerprint, plan);
     }
 
     fn build_plan(
@@ -184,6 +226,45 @@ impl Planner {
             granularity: items.div_ceil(p).max(1),
             bucket,
             workers: self.default_workers,
+            partition: None,
+        }
+    }
+
+    /// The phase-1 decomposition for an already-planned request.  Replays
+    /// the partition stored with the cached plan when it still tiles `a`
+    /// exactly (fingerprints are quantized, so collisions are possible and
+    /// must be caught); otherwise computes it once and stores it back so
+    /// every later request with this fingerprint skips phase 1.
+    pub fn partition_for(&self, a: &Csr, outcome: &PlanOutcome) -> Arc<Vec<Segment>> {
+        if let Some(segs) = &outcome.plan.partition {
+            if crate::exec::partition_matches(a, outcome.plan.algorithm, segs) {
+                self.partition_hits.fetch_add(1, Ordering::Relaxed);
+                return Arc::clone(segs);
+            }
+        }
+        let p = outcome.plan.cpu_parallelism(a);
+        if a.nnz() == 0 || a.m == 0 {
+            // Degenerate matrices: the partition is trivial and can never
+            // be replayed (partition_matches rejects it) — don't churn the
+            // cache or the miss counter on requests that are otherwise
+            // near-free.
+            return Arc::new(crate::exec::partition(a, outcome.plan.algorithm, p));
+        }
+        self.partition_misses.fetch_add(1, Ordering::Relaxed);
+        let segs = Arc::new(crate::exec::partition(a, outcome.plan.algorithm, p));
+        // Store back only if the cached decision is still the one we just
+        // executed — a concurrent probe may have retargeted this
+        // fingerprint (see PlanCache::attach_partition).
+        self.cache
+            .attach_partition(outcome.fingerprint, &outcome.plan, Arc::clone(&segs));
+        segs
+    }
+
+    /// Partition replay counters (reused vs recomputed phase-1 splits).
+    pub fn partition_stats(&self) -> PartitionStats {
+        PartitionStats {
+            hits: self.partition_hits.load(Ordering::Relaxed),
+            misses: self.partition_misses.load(Ordering::Relaxed),
         }
     }
 
@@ -276,6 +357,73 @@ mod tests {
         let out = p.plan(&a, None);
         assert!(out.cache_hit);
         assert_eq!(out.plan.algorithm, Algorithm::RowSplit);
+    }
+
+    #[test]
+    fn partition_is_computed_once_then_replayed() {
+        let p = Planner::new(9.35, 16, 4);
+        let a = Csr::random(500, 500, 5.0, 67);
+        let first = p.plan(&a, None);
+        assert!(first.plan.partition.is_none(), "planning must not pay phase 1");
+        let segs = p.partition_for(&a, &first);
+        assert_eq!(p.partition_stats(), PartitionStats { hits: 0, misses: 1 });
+        // the partition rides with the cached plan from now on
+        let second = p.plan(&a, None);
+        assert!(second.cache_hit);
+        let replayed = second.plan.partition.as_ref().expect("stored partition");
+        assert!(Arc::ptr_eq(replayed, &segs), "same Arc, no recompute");
+        let again = p.partition_for(&a, &second);
+        assert!(Arc::ptr_eq(&again, &segs));
+        assert_eq!(p.partition_stats(), PartitionStats { hits: 1, misses: 1 });
+    }
+
+    #[test]
+    fn record_probe_preserves_partition_when_decision_unchanged() {
+        let p = Planner::new(9.35, 16, 2);
+        // d = 8: probe band, heuristic (correctly) picks merge
+        let a = crate::gen::uniform_rows(2000, 8, Some(256), 68);
+        let out = p.plan(&a, None);
+        assert_eq!(out.plan.algorithm, Algorithm::MergeBased);
+        let segs = p.partition_for(&a, &out);
+        // merge measured faster → decision unchanged by the probe
+        p.record_probe(&a, 3.0, 1.0, None);
+        let out2 = p.plan(&a, None);
+        assert!(out2.cache_hit);
+        assert_eq!(out2.plan.algorithm, Algorithm::MergeBased);
+        let kept = out2.plan.partition.as_ref().expect("partition must survive the probe");
+        assert!(Arc::ptr_eq(kept, &segs), "probe refresh must not wipe the stored partition");
+    }
+
+    #[test]
+    fn colliding_fingerprint_does_not_replay_foreign_partition() {
+        // same m/k/nnz and row-length statistics (same multiset of row
+        // lengths), different row_ptr → same fingerprint, different split
+        let a = Csr::new(
+            4,
+            4,
+            vec![0, 2, 4, 5, 6],
+            vec![0, 1, 2, 3, 0, 1],
+            vec![1.0; 6],
+        )
+        .unwrap();
+        let b = Csr::new(
+            4,
+            4,
+            vec![0, 1, 2, 4, 6],
+            vec![0, 1, 2, 3, 0, 1],
+            vec![1.0; 6],
+        )
+        .unwrap();
+        assert_eq!(Fingerprint::of(&a), Fingerprint::of(&b));
+        let p = Planner::new(9.35, 16, 2);
+        let out_a = p.plan(&a, None);
+        let segs_a = p.partition_for(&a, &out_a);
+        let out_b = p.plan(&b, None);
+        assert!(out_b.cache_hit, "collision by construction");
+        let segs_b = p.partition_for(&b, &out_b);
+        assert!(!Arc::ptr_eq(&segs_a, &segs_b), "foreign partition must not replay");
+        assert!(crate::loadbalance::validate_segments(&b, &segs_b).is_ok());
+        assert_eq!(p.partition_stats().misses, 2);
     }
 
     #[test]

@@ -118,6 +118,7 @@ pub fn parse(text: &str) -> Result<PlanFile, String> {
                 granularity: num("granularity")?,
                 bucket,
                 workers: num("workers")?,
+                partition: None,
             },
         ));
     }
@@ -139,8 +140,7 @@ pub fn save_file(
 
 /// Read and parse a plan file.
 pub fn load_file(path: &Path) -> Result<PlanFile, String> {
-    let text =
-        std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
     parse(&text)
 }
 
@@ -180,6 +180,7 @@ mod tests {
                     granularity: 1250,
                     bucket: None,
                     workers: 2,
+                    partition: None,
                 },
             ),
             (
@@ -197,6 +198,7 @@ mod tests {
                     granularity: 4096,
                     bucket: Some("spmm_rowsplit_m16384_k256_l64_n64".into()),
                     workers: 4,
+                    partition: None,
                 },
             ),
         ]

@@ -1,33 +1,33 @@
 //! Algorithm II — merge-based SpMM executor (paper §4.2, Algorithm 1).
 //!
-//! Literal two-phase structure with threads as CTAs:
+//! Literal two-phase structure with pool workers as CTAs:
 //!
 //! * **Phase 1** (`PartitionSpmm`): an equal-nonzero decomposition from
 //!   [`crate::loadbalance`] (1-D [`NonzeroSplit`] by default — the paper's
-//!   choice — or 2-D [`MergePath`] for the ablation bench).
+//!   choice — or 2-D [`MergePath`] for the ablation bench).  On the serve
+//!   path this phase is computed once per fingerprint and replayed from
+//!   the plan cache ([`crate::plan::Planner::partition_for`]).
 //! * **Phase 2**: each worker streams its nonzeros, accumulating row
 //!   partials.  Rows *fully started* inside the segment are written
 //!   directly to C (no other worker touches them); the worker's **first
 //!   touched row** may be shared with the previous worker, so its partial
-//!   goes to a carry-out buffer instead (Algorithm 1, line 22).
+//!   goes to a reusable carry-out slot instead (Algorithm 1, line 22).
 //! * **Fix-up** (`FixCarryOut`, line 24): a sequential pass adds each
 //!   carry-out into C — "the only way the user can pass information from
 //!   one CTA to another".
 //!
 //! The carry-out traffic is the §4.2 trade-off: it scales with `B.ncols`,
 //! which is why the paper keeps T = 1 for SpMM.
+//!
+//! [`merge_spmm_into`] is the zero-allocation serve path (precomputed
+//! partition, pooled threads, reused carry arenas, caller-provided
+//! output); [`merge_spmm`] is the classic allocating wrapper over it.
 
+use crate::exec::{CarrySlot, ExecCtx, SendPtr, NO_CARRY};
 use crate::formats::Csr;
 use crate::loadbalance::{MergePath, NonzeroSplit, Partitioner, Segment};
 
 use super::rowsplit::effective_workers;
-
-/// Carry-out record: a partial sum for the worker's first touched row.
-#[derive(Debug, Clone)]
-pub struct CarryOut {
-    pub row: usize,
-    pub partial: Vec<f32>,
-}
 
 /// Which phase-1 decomposition to use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -55,43 +55,86 @@ pub fn merge_spmm_with(a: &Csr, b: &[f32], n: usize, p: usize, kind: MergeKind) 
         MergeKind::NonzeroSplit => NonzeroSplit.partition(a, p),
         MergeKind::MergePath => MergePath.partition(a, p),
     };
-
-    // Phase 2: direct-write rows of worker w are (row_start, row_end) —
-    // exclusive of the first touched row — which are pairwise disjoint and
-    // ascending across workers, so C can be handed out with split_at_mut.
-    let mut carryouts: Vec<Option<CarryOut>> = vec![None; segs.len()];
-    std::thread::scope(|scope| {
-        let mut rest: &mut [f32] = &mut c;
-        let mut covered = 0usize; // rows already handed out
-        for (seg, carry_slot) in segs.iter().zip(carryouts.iter_mut()) {
-            let own_start = (seg.row_start + 1).max(covered);
-            let own_end = seg.row_end.max(own_start);
-            // skip gap rows (not owned by anyone → stay zero, fixed by carry)
-            let skip = (own_start - covered) * n;
-            let take = (own_end - own_start) * n;
-            let (_, tail) = rest.split_at_mut(skip);
-            let (chunk, tail) = tail.split_at_mut(take);
-            rest = tail;
-            covered = own_end;
-            let seg = *seg;
-            scope.spawn(move || {
-                *carry_slot = worker(a, b, n, seg, own_start, chunk);
-            });
-        }
-    });
-
-    // FixCarryOut: sequential accumulation of shared-row partials.
-    for co in carryouts.into_iter().flatten() {
-        let out = &mut c[co.row * n..(co.row + 1) * n];
-        for (o, v) in out.iter_mut().zip(&co.partial) {
-            *o += v;
-        }
-    }
+    let mut ctx = ExecCtx::with_global_pool();
+    merge_spmm_into(a, b, n, &segs, &mut ctx, &mut c);
     c
 }
 
+/// Merge-based SpMM into a caller-provided buffer — the zero-allocation
+/// hot path.
+///
+/// Contract (`debug_assert`ed): `segs` is a nonzero-ordered partition of
+/// `a` satisfying [`crate::loadbalance::validate_segments`] (from
+/// [`NonzeroSplit`] or [`MergePath`], or replayed through
+/// [`crate::exec::partition_matches`]).  `b.len() == a.k * n` and
+/// `c.len() == a.m * n`.  `c` is fully overwritten (zeroed, then
+/// accumulated).  Steady state performs no heap allocation and no thread
+/// creation: carry-out partials live in `ctx`'s reusable slots.
+pub fn merge_spmm_into(
+    a: &Csr,
+    b: &[f32],
+    n: usize,
+    segs: &[Segment],
+    ctx: &mut ExecCtx,
+    c: &mut [f32],
+) {
+    assert_eq!(b.len(), a.k * n, "B must be k×n row-major");
+    assert_eq!(c.len(), a.m * n, "C must be m×n row-major");
+    c.fill(0.0);
+    if a.m == 0 || n == 0 || a.nnz() == 0 {
+        return;
+    }
+    // Hard assert, not debug: workers write through raw pointers whose
+    // disjointness rests on the validate_segments invariants (nz tiling +
+    // non-rewind rows ⇒ disjoint own ranges); an invalid partition in
+    // release would be UB instead of a panic.  O(p) — noise next to the
+    // multiply.
+    if let Err(e) = crate::loadbalance::validate_segments(a, segs) {
+        panic!("merge_spmm_into: invalid partition: {e}");
+    }
+    let (pool, carries) = ctx.prepare(segs.len());
+
+    // Phase 2: worker w direct-writes rows (row_start+1, row_end) — its
+    // first touched row may be shared with the previous worker and goes to
+    // the carry slot.  The validate_segments non-rewind invariant
+    // (row_start_i + 1 ≥ row_end_{i-1}) makes the direct-write ranges
+    // pairwise disjoint, so C and the carry slots can be handed out as
+    // disjoint windows of shared base pointers.
+    let c_base = SendPtr(c.as_mut_ptr());
+    let carry_base = SendPtr(carries.as_mut_ptr());
+    pool.broadcast(segs.len(), &|s| {
+        let seg = segs[s];
+        let own_start = seg.row_start + 1;
+        let own_end = seg.row_end.max(own_start);
+        // Safety: own ranges are disjoint across tasks (see above) and
+        // in-bounds; carry slot `s` is touched by task `s` only.
+        // (own_start can be m+1 only for a degenerate tail segment whose
+        // own range is empty — clamp the pointer offset, length is 0)
+        let chunk = unsafe {
+            std::slice::from_raw_parts_mut(
+                c_base.0.add(own_start.min(a.m) * n),
+                (own_end - own_start) * n,
+            )
+        };
+        let slot = unsafe { &mut *carry_base.0.add(s) };
+        worker(a, b, n, seg, own_start, chunk, slot);
+    });
+
+    // FixCarryOut: sequential accumulation of shared-row partials.
+    for slot in carries.iter() {
+        if slot.row == NO_CARRY {
+            continue;
+        }
+        let out = &mut c[slot.row * n..(slot.row + 1) * n];
+        for (o, v) in out.iter_mut().zip(&slot.buf) {
+            *o += v;
+        }
+    }
+}
+
 /// One CTA's phase-2 work: stream nonzeros `seg.nz_start..seg.nz_end`,
-/// write rows `own_start..` into `chunk`, return the first-row carry-out.
+/// write rows `own_start..` into `chunk`, record the first-row partial in
+/// the carry slot.
 fn worker(
     a: &Csr,
     b: &[f32],
@@ -99,8 +142,8 @@ fn worker(
     seg: Segment,
     own_start: usize,
     chunk: &mut [f32],
-) -> Option<CarryOut> {
-    let mut carry: Option<CarryOut> = None;
+    slot: &mut CarrySlot,
+) {
     let mut row = seg.row_start;
     let mut nz = seg.nz_start;
     while nz < seg.nz_end {
@@ -110,21 +153,17 @@ fn worker(
         }
         let row_end_nz = a.row_ptr[row + 1].min(seg.nz_end);
         if row < own_start {
-            // first touched row (shared) → accumulate into carry-out
-            let partial = &mut carry
-                .get_or_insert_with(|| CarryOut {
-                    row,
-                    partial: vec![0.0; n],
-                })
-                .partial;
-            accumulate(a, b, n, nz, row_end_nz, partial);
+            // first touched row (shared) → accumulate into the carry slot
+            if slot.row == NO_CARRY {
+                slot.start(row, n);
+            }
+            accumulate(a, b, n, nz, row_end_nz, &mut slot.buf);
         } else {
             let off = (row - own_start) * n;
             accumulate(a, b, n, nz, row_end_nz, &mut chunk[off..off + n]);
         }
         nz = row_end_nz;
     }
-    carry
 }
 
 /// Flat product loop: out += Σ vals[e]·B[col[e], :] for e in [nz0, nz1).
@@ -249,6 +288,20 @@ mod tests {
         let a = Csr::empty(10, 10);
         let b = crate::gen::dense_matrix(10, 4, 411);
         assert_eq!(merge_spmm(&a, &b, 4, 4), vec![0.0; 40]);
+    }
+
+    #[test]
+    fn into_reuses_ctx_and_overwrites_stale_data() {
+        let a = Csr::random(150, 150, 6.0, 414);
+        let b = crate::gen::dense_matrix(150, 12, 415);
+        let want = spmm_reference(&a, &b, 12);
+        let segs = NonzeroSplit.partition(&a, 6);
+        let mut ctx = ExecCtx::with_global_pool();
+        let mut c = vec![f32::NAN; 150 * 12];
+        for _ in 0..3 {
+            merge_spmm_into(&a, &b, 12, &segs, &mut ctx, &mut c);
+            assert_close(&c, &want);
+        }
     }
 
     #[test]

@@ -1,19 +1,33 @@
 //! Algorithm I — row-split SpMM executor (paper §4.1).
 //!
-//! One thread plays one "warp": it owns a contiguous block of rows (the
-//! [`RowSplit`] decomposition) and streams each row's nonzeros in
+//! One pool worker plays one "warp": it owns a contiguous block of rows
+//! (the [`RowSplit`] decomposition) and streams each row's nonzeros in
 //! `WARP_BATCH`-wide chunks, exactly the paper's "batches of 32"
 //! structure.  The per-chunk inner loop over the dense width `n` is the
 //! lane dimension — each iteration is the independent, coalesced B-row
 //! load that thread `j` of the warp performs — and is written stride-1
 //! over both `B` and `C` rows so the compiler vectorizes it (the CPU
 //! analogue of coalescing; see DESIGN.md §Hardware-Adaptation).
+//!
+//! Two entry layers:
+//!
+//! * [`rowsplit_spmm_into`] — the zero-allocation serve path: precomputed
+//!   partition, caller-provided output, persistent [`ExecCtx`] pool.
+//! * [`rowsplit_spmm`] — the classic allocating wrapper (tests, benches,
+//!   ad-hoc callers), now a thin shell over `_into` on the process-wide
+//!   pool: no per-call thread spawn anywhere.
 
+use crate::exec::{ExecCtx, SendPtr};
 use crate::formats::Csr;
-use crate::loadbalance::{Partitioner, RowSplit};
+use crate::loadbalance::{Partitioner, RowSplit, Segment};
 
 /// The paper's warp width: nonzeros are processed in batches of 32.
 pub const WARP_BATCH: usize = 32;
+
+/// Stack-tile width: the register-blocked accumulator covers the dense
+/// width in tiles of this many columns (the CPU analogue of the paper's
+/// 64-register accumulator, Table 1).
+pub const TILE_WIDTH: usize = 64;
 
 /// Row-granularity choice (paper §4.1 design decision 1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -47,75 +61,128 @@ pub fn rowsplit_spmm_granular(
         return c;
     }
     let segs = RowSplit::default().partition(a, p);
+    let mut ctx = ExecCtx::with_global_pool();
+    rowsplit_spmm_into_granular(a, b, n, &segs, gran, &mut ctx, &mut c);
+    c
+}
 
-    std::thread::scope(|scope| {
-        let mut rest: &mut [f32] = &mut c;
-        let mut offset = 0usize;
-        for seg in &segs {
-            let rows = seg.row_end - seg.row_start;
-            debug_assert_eq!(seg.row_start * n, offset);
-            let (chunk, tail) = rest.split_at_mut(rows * n);
-            rest = tail;
-            offset += rows * n;
-            let seg = *seg;
-            scope.spawn(move || {
-                for i in seg.row_start..seg.row_end {
-                    let out = &mut chunk[(i - seg.row_start) * n..(i - seg.row_start + 1) * n];
-                    match gran {
-                        Granularity::WarpPerRow => row_kernel_warp(a, b, n, i, out),
-                        Granularity::ThreadPerRow => row_kernel_thread(a, b, n, i, out),
-                    }
-                }
-            });
+/// Row-split SpMM into a caller-provided buffer — the zero-allocation hot
+/// path.
+///
+/// Contract (`debug_assert`ed): `segs` is a row partition of `a` (from
+/// [`RowSplit`], or replayed through
+/// [`crate::exec::partition_matches`]): contiguous row ranges covering
+/// `0..a.m` whose nonzero bounds equal the `row_ptr` spans.  `b.len() ==
+/// a.k * n` and `c.len() == a.m * n`.  Every element of `c` is
+/// overwritten; no heap allocation and no thread creation occur.
+pub fn rowsplit_spmm_into(
+    a: &Csr,
+    b: &[f32],
+    n: usize,
+    segs: &[Segment],
+    ctx: &mut ExecCtx,
+    c: &mut [f32],
+) {
+    rowsplit_spmm_into_granular(a, b, n, segs, Granularity::WarpPerRow, ctx, c)
+}
+
+/// [`rowsplit_spmm_into`] with an explicit granularity.
+pub fn rowsplit_spmm_into_granular(
+    a: &Csr,
+    b: &[f32],
+    n: usize,
+    segs: &[Segment],
+    gran: Granularity,
+    ctx: &mut ExecCtx,
+    c: &mut [f32],
+) {
+    assert_eq!(b.len(), a.k * n, "B must be k×n row-major");
+    assert_eq!(c.len(), a.m * n, "C must be m×n row-major");
+    if a.m == 0 || n == 0 {
+        c.fill(0.0);
+        return;
+    }
+    // Hard asserts, not debug: workers write through raw pointers derived
+    // from `segs`, so an invalid partition in release would be UB instead
+    // of a panic.  Both checks are O(p) — noise next to the multiply.
+    if let Err(e) = crate::loadbalance::validate_segments(a, segs) {
+        panic!("rowsplit_spmm_into: invalid partition: {e}");
+    }
+    let mut next_row = 0usize;
+    for s in segs {
+        assert_eq!(s.row_start, next_row, "segs must be a contiguous row partition");
+        next_row = s.row_end;
+    }
+    assert_eq!(next_row, a.m, "segs must cover all rows");
+    // Segments own disjoint row ranges, so workers write through disjoint
+    // windows of one shared base pointer (the split_at_mut argument, made
+    // per-task).
+    let base = SendPtr(c.as_mut_ptr());
+    ctx.pool().broadcast(segs.len(), &|s| {
+        let seg = segs[s];
+        // Safety: row ranges are disjoint across segments and in-bounds
+        // (validated above), so this window aliases no other task's.
+        let chunk = unsafe {
+            std::slice::from_raw_parts_mut(
+                base.0.add(seg.row_start * n),
+                (seg.row_end - seg.row_start) * n,
+            )
+        };
+        for i in seg.row_start..seg.row_end {
+            let off = (i - seg.row_start) * n;
+            let out = &mut chunk[off..off + n];
+            match gran {
+                Granularity::WarpPerRow => row_kernel_warp(a, b, n, i, out),
+                Granularity::ThreadPerRow => row_kernel_thread(a, b, n, i, out),
+            }
         }
     });
-    c
 }
 
 /// Warp-per-row inner kernel: nonzeros in WARP_BATCH chunks; within a
 /// chunk the B-row loads are independent (the ILP Table 1 counts) and the
 /// n-wide FMA is the coalesced lane dimension.
 ///
-/// §Perf: for n ≤ 64 the accumulator lives in a fixed-size stack tile (the
-/// CPU analogue of the paper's 64-register accumulator, Table 1) so the
-/// compiler keeps it in vector registers across the whole row instead of
-/// re-touching the C row per nonzero.
+/// §Perf: the accumulator lives in a fixed-size stack tile (the CPU
+/// analogue of the paper's 64-register accumulator, Table 1) so the
+/// compiler keeps it in vector registers across the whole row.  For
+/// `n > 64` the dense width is walked in [`TILE_WIDTH`]-column tiles —
+/// each tile re-streams the row's nonzeros, trading redundant A reads for
+/// register-resident accumulation at every width, not just `n ≤ 64`.
 #[inline]
 fn row_kernel_warp(a: &Csr, b: &[f32], n: usize, i: usize, out: &mut [f32]) {
     let (cols, vals) = a.row(i);
-    if n <= 64 {
-        let mut acc = [0.0f32; 64];
-        for (&col, &v) in cols.iter().zip(vals) {
-            let brow = &b[col as usize * n..col as usize * n + n];
-            for (o, &bv) in acc[..n].iter_mut().zip(brow) {
-                *o += v * bv;
+    let mut j = 0usize;
+    while j < n {
+        let w = (n - j).min(TILE_WIDTH);
+        let mut acc = [0.0f32; TILE_WIDTH];
+        let mut pos = 0usize;
+        while pos < cols.len() {
+            let end = (pos + WARP_BATCH).min(cols.len());
+            // One "warp batch": up to 32 independent B-row gathers.
+            for t in pos..end {
+                let col = cols[t] as usize;
+                let v = vals[t];
+                let brow = &b[col * n + j..col * n + j + w];
+                // lane dimension: stride-1 over the tile → vectorized FMA
+                for (o, &bv) in acc[..w].iter_mut().zip(brow) {
+                    *o += v * bv;
+                }
             }
+            pos = end;
         }
-        out.copy_from_slice(&acc[..n]);
-        return;
-    }
-    let mut pos = 0usize;
-    while pos < cols.len() {
-        let end = (pos + WARP_BATCH).min(cols.len());
-        // One "warp batch": up to 32 independent B-row gathers.
-        for t in pos..end {
-            let col = cols[t] as usize;
-            let v = vals[t];
-            let brow = &b[col * n..col * n + n];
-            // lane dimension: stride-1 over n → vectorized FMA
-            for (o, &bv) in out.iter_mut().zip(brow) {
-                *o += v * bv;
-            }
-        }
-        pos = end;
+        out[j..j + w].copy_from_slice(&acc[..w]);
+        j += w;
     }
 }
 
 /// Thread-per-row kernel: a single serial walk (no batching) — models the
-/// alternative granularity that wins for very short rows.
+/// alternative granularity that wins for very short rows.  Overwrites
+/// `out` (zeroes first) so it composes with reused output buffers.
 #[inline]
 fn row_kernel_thread(a: &Csr, b: &[f32], n: usize, i: usize, out: &mut [f32]) {
     let (cols, vals) = a.row(i);
+    out.fill(0.0);
     for (&col, &v) in cols.iter().zip(vals) {
         let brow = &b[col as usize * n..col as usize * n + n];
         for (o, &bv) in out.iter_mut().zip(brow) {
@@ -133,23 +200,19 @@ pub fn rowsplit_spmv(a: &Csr, x: &[f32], p: usize) -> Vec<f32> {
         return y;
     }
     let segs = RowSplit::default().partition(a, p);
-    std::thread::scope(|scope| {
-        let mut rest: &mut [f32] = &mut y;
-        for seg in &segs {
-            let rows = seg.row_end - seg.row_start;
-            let (chunk, tail) = rest.split_at_mut(rows);
-            rest = tail;
-            let seg = *seg;
-            scope.spawn(move || {
-                for i in seg.row_start..seg.row_end {
-                    let (cols, vals) = a.row(i);
-                    chunk[i - seg.row_start] = cols
-                        .iter()
-                        .zip(vals)
-                        .map(|(&c, &v)| v * x[c as usize])
-                        .sum();
-                }
-            });
+    let base = SendPtr(y.as_mut_ptr());
+    crate::exec::global_pool().broadcast(segs.len(), &|s| {
+        let seg = segs[s];
+        // Safety: disjoint row ranges (see rowsplit_spmm_into_granular).
+        let chunk =
+            unsafe { std::slice::from_raw_parts_mut(base.0.add(seg.row_start), seg.rows()) };
+        for i in seg.row_start..seg.row_end {
+            let (cols, vals) = a.row(i);
+            chunk[i - seg.row_start] = cols
+                .iter()
+                .zip(vals)
+                .map(|(&c, &v)| v * x[c as usize])
+                .sum();
         }
     });
     y
@@ -199,6 +262,34 @@ mod tests {
         let a = crate::gen::uniform_rows(64, 33, Some(256), 305);
         let b = crate::gen::dense_matrix(256, 8, 306);
         assert_close(&rowsplit_spmm(&a, &b, 8, 4), &spmm_reference(&a, &b, 8));
+    }
+
+    #[test]
+    fn wide_dense_widths_cross_tile_boundaries() {
+        // n > 64 exercises the column-tiled path: exact multiple, off-by-one
+        // around TILE_WIDTH, and a ragged final tile
+        let a = Csr::random(80, 90, 7.0, 312);
+        for n in [63, 64, 65, 100, 128, 200] {
+            let b = crate::gen::dense_matrix(90, n, 313 + n as u64);
+            let want = spmm_reference(&a, &b, n);
+            assert_close(&rowsplit_spmm(&a, &b, n, 4), &want);
+            let t = rowsplit_spmm_granular(&a, &b, n, 4, Granularity::ThreadPerRow);
+            assert_close(&t, &want);
+        }
+    }
+
+    #[test]
+    fn into_reuses_buffer_and_overwrites_stale_data() {
+        let a = Csr::random(60, 60, 5.0, 314);
+        let b = crate::gen::dense_matrix(60, 8, 315);
+        let want = spmm_reference(&a, &b, 8);
+        let segs = RowSplit::default().partition(&a, 4);
+        let mut ctx = ExecCtx::with_global_pool();
+        let mut c = vec![f32::NAN; 60 * 8]; // stale garbage must vanish
+        for _ in 0..3 {
+            rowsplit_spmm_into(&a, &b, 8, &segs, &mut ctx, &mut c);
+            assert_close(&c, &want);
+        }
     }
 
     #[test]

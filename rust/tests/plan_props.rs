@@ -67,6 +67,7 @@ fn fingerprint_survives_persist_round_trip() {
                     granularity: 1 + rng.below(10_000),
                     bucket: (i % 3 == 0).then(|| format!("bucket_{i}")),
                     workers: rng.below(8),
+                    partition: None,
                 },
             )
         })
@@ -88,6 +89,7 @@ fn lru_eviction_respects_recency_under_load() {
         granularity: 1,
         bucket: None,
         workers: 0,
+        partition: None,
     };
     // fill to capacity with the first 32 distinct keys
     let mut inserted = Vec::new();

@@ -58,6 +58,74 @@ fn prop_executors_match_reference() {
     }
 }
 
+/// Adversarial carry-out shapes for the merge executor (locks phase-2
+/// correctness for both phase-1 decompositions): runs of empty rows
+/// straddling segment boundaries, a single dense row shared by every
+/// worker, and far more workers than nonzeros.
+#[test]
+fn prop_merge_adversarial_carry_out_shapes() {
+    let mut rng = XorShift::new(0xB25);
+    // (1) runs of empty rows placed to straddle equal-nonzero boundaries:
+    // alternating blocks of empty rows and short dense runs, so nearly
+    // every worker starts inside or next to an empty run
+    for case in 0..40 {
+        let m = 20 + rng.below(120);
+        let k = 1 + rng.below(60);
+        let mut row_ptr = vec![0usize];
+        let mut col_idx: Vec<u32> = Vec::new();
+        let mut in_empty_run = rng.below(2) == 0;
+        let mut r = 0usize;
+        while r < m {
+            let run = 1 + rng.below(9);
+            for _ in 0..run.min(m - r) {
+                if !in_empty_run {
+                    let len = 1 + rng.below(4);
+                    col_idx.extend(rng.distinct_sorted(len, k));
+                }
+                row_ptr.push(col_idx.len());
+                r += 1;
+            }
+            in_empty_run = !in_empty_run;
+        }
+        let vals: Vec<f32> = (0..col_idx.len()).map(|_| rng.normal()).collect();
+        let a = Csr::new(m, k, row_ptr, col_idx, vals).unwrap();
+        let n = [1, 4, 16][rng.below(3)];
+        let p = 2 + rng.below(12);
+        let b: Vec<f32> = (0..a.k * n).map(|_| rng.normal()).collect();
+        let want = spmm_reference(&a, &b, n);
+        for kind in [MergeKind::NonzeroSplit, MergeKind::MergePath] {
+            assert_close(&merge_spmm_with(&a, &b, n, p, kind), &want, case, "empty-runs");
+        }
+    }
+    // (2) single dense row: every worker's segment lands inside row 0, so
+    // the whole result is assembled from carry-outs
+    for case in 0..10 {
+        let k = 64 + rng.below(1000);
+        let cols: Vec<u32> = (0..k as u32).collect();
+        let vals: Vec<f32> = (0..k).map(|_| rng.normal()).collect();
+        let a = Csr::new(1, k, vec![0, k], cols, vals).unwrap();
+        let n = [1, 8, 32][rng.below(3)];
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let want = spmm_reference(&a, &b, n);
+        for p in [2, 7, 16, 64] {
+            for kind in [MergeKind::NonzeroSplit, MergeKind::MergePath] {
+                assert_close(&merge_spmm_with(&a, &b, n, p, kind), &want, case, "dense-row");
+            }
+        }
+    }
+    // (3) p > nnz: more workers than work items (degenerate segments)
+    for case in 0..20 {
+        let a = arb_csr(&mut rng);
+        let n = 1 + rng.below(8);
+        let b: Vec<f32> = (0..a.k * n).map(|_| rng.normal()).collect();
+        let want = spmm_reference(&a, &b, n);
+        let p = a.nnz() + 1 + rng.below(50);
+        for kind in [MergeKind::NonzeroSplit, MergeKind::MergePath] {
+            assert_close(&merge_spmm_with(&a, &b, n, p, kind), &want, case, "p>nnz");
+        }
+    }
+}
+
 #[test]
 fn prop_baselines_match_reference() {
     let mut rng = XorShift::new(0xB22);
