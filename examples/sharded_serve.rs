@@ -1,0 +1,105 @@
+//! One request across many engines: 1 vs N shards on a skewed matrix.
+//!
+//! Builds a large power-law (scale-free) matrix — the paper's worst case
+//! for row-level load balance — and serves the same request through the
+//! unsharded path and through `ShardedEngine`s of increasing width,
+//! printing the per-request latency, the shard layout (count + max/mean
+//! nnz imbalance), and the per-engine shard/job counters that prove the
+//! request really ran across multiple engines.  Writes `BENCH_shard.json`
+//! at the repo root (same schema convention as `BENCH_plan.json` /
+//! `BENCH_exec.json`: the committed file is a `pending-toolchain`
+//! placeholder; running this example overwrites it with measurements).
+//!
+//! Run: `cargo run --release --example sharded_serve`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use merge_spmm::gen;
+use merge_spmm::shard::{imbalance, ShardPolicy, ShardedEngine};
+use merge_spmm::spmm::spmm_reference;
+
+fn main() -> anyhow::Result<()> {
+    let n = 32usize;
+    // Scale-free matrix: heavy-tailed row lengths (alpha 1.1, max degree
+    // 16k) — exactly the skew the isolation rule exists for.
+    let a = Arc::new(gen::power_law(60_000, 1.1, 16_384, 7));
+    let b = Arc::new(gen::dense_matrix(a.k, n, 8));
+    println!(
+        "matrix: {}x{}, nnz {}, d = {:.2}, cv {:.2}, max row {}",
+        a.m,
+        a.k,
+        a.nnz(),
+        a.mean_row_length(),
+        a.row_length_cv(),
+        a.max_row_length()
+    );
+    let reps = if std::env::var("BENCH_QUICK").is_ok() { 5 } else { 20 };
+    let cpu_workers = 2usize;
+
+    // correctness anchor (computed once; every config must match it)
+    let want = spmm_reference(&a, &b, n);
+
+    let mut rows = Vec::new();
+    for engines in [1usize, 2, 4] {
+        let policy = if engines == 1 {
+            // one engine, one shard: the unsharded baseline through the
+            // same code path
+            ShardPolicy::fixed(1)
+        } else {
+            ShardPolicy::fixed(engines)
+        };
+        let eng = ShardedEngine::cpu_only(policy, engines, cpu_workers);
+        // warm: plan + layout caches fill, buffers allocate
+        let r = eng.spmm(&a, &b, n)?;
+        let shards = r.shards;
+        for (x, y) in r.c.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-2 * (1.0 + y.abs()), "result mismatch");
+        }
+        drop(r);
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let r = eng.spmm(&a, &b, n)?;
+            std::hint::black_box(&r.c[0]);
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        // re-read the executed layout: same requested count + policy knobs
+        // as the engine's scatter → cache hit on the same key, no new entry
+        let want = eng.policy().shard_count(&a, engines);
+        let cuts = eng.planner().shard_cuts(&a, want, true, 1.25);
+        let imb = imbalance(&a, &cuts);
+        println!(
+            "engines {engines}: {shards} shard(s), imbalance {imb:.3}, \
+             {ms:>8.2} ms/request, shards/engine {:?}, pool jobs {:?}",
+            eng.shards_per_engine(),
+            eng.engine_jobs()
+        );
+        rows.push(format!(
+            "    {{\"engines\": {engines}, \"shards\": {shards}, \
+             \"imbalance\": {imb:.4}, \"ms_per_request\": {ms:.3}}}"
+        ));
+    }
+
+    let out = format!(
+        "{{\n  \"format\": \"bench-shard-v1\",\n  \"status\": \"measured\",\n  \
+         \"command\": \"cargo run --release --example sharded_serve\",\n  \
+         \"reps\": {reps},\n  \"cpu_workers\": {cpu_workers},\n  \
+         \"matrix\": {{\"m\": {}, \"k\": {}, \"nnz\": {}, \"cv\": {:.3}, \
+         \"max_row\": {}}},\n  \"configs\": [\n{}\n  ]\n}}\n",
+        a.m,
+        a.k,
+        a.nnz(),
+        a.row_length_cv(),
+        a.max_row_length(),
+        rows.join(",\n")
+    );
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_shard.json"))
+        .unwrap_or_else(|| "BENCH_shard.json".into());
+    match std::fs::write(&path, out) {
+        Ok(()) => println!("-> {}", path.display()),
+        Err(e) => eprintln!("(BENCH_shard.json write failed: {e})"),
+    }
+    Ok(())
+}

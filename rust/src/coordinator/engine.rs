@@ -39,6 +39,10 @@ pub struct EngineConfig {
     pub plan_file: Option<std::path::PathBuf>,
     /// A/B-probe requests near the decision boundary (CPU path only)
     pub probe: bool,
+    /// sharding policy: when enabled, the server scatter-gathers large
+    /// requests across its worker engines ([`crate::shard`]); direct
+    /// engine calls ignore it (an engine is one executor by definition)
+    pub shard: crate::shard::ShardPolicy,
 }
 
 impl Default for EngineConfig {
@@ -50,6 +54,7 @@ impl Default for EngineConfig {
             plan_cache_capacity: 1024,
             plan_file: None,
             probe: true,
+            shard: crate::shard::ShardPolicy::default(),
         }
     }
 }
@@ -82,8 +87,11 @@ pub struct SpmmResult {
     /// artifact used, when `path == Pjrt`
     pub bucket: Option<String>,
     /// true when the plan came from the cache rather than fresh analysis
+    /// (for sharded results: every shard's plan was cached)
     pub cache_hit: bool,
     pub latency_s: f64,
+    /// shards this request was executed as (1 = unsharded path)
+    pub shards: usize,
 }
 
 /// The SpMM serving engine (paper's full pipeline: plan cache + tuned
@@ -266,6 +274,7 @@ impl SpmmEngine {
                 bucket,
                 cache_hit: outcome.cache_hit,
                 latency_s: latency,
+                shards: 1,
             }
         })
     }

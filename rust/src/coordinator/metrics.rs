@@ -24,13 +24,21 @@ pub struct Metrics {
     pub plan_misses: AtomicU64,
     /// A/B probes executed (both algorithms run on one request)
     pub probes: AtomicU64,
+    /// requests that took the sharded scatter-gather path
+    pub sharded: AtomicU64,
+    /// total shards executed across all sharded requests
+    pub shards_executed: AtomicU64,
     /// gauge: lifetime plan-cache evictions (mirrored from `PlanCache`)
     plan_evictions: AtomicU64,
     /// gauge: current plan-cache size
     plan_len: AtomicU64,
     /// gauge: the tuner's current threshold, stored as f64 bits
     tuner_threshold_bits: AtomicU64,
-    /// gauges mirrored from the executor pool (`crate::exec`)
+    /// gauges mirrored from the executor pool (`crate::exec`).
+    /// Last-writer-wins: an unsharded engine syncs its *one* pool, the
+    /// sharded scatter syncs the *sum* over its engine pools — under
+    /// mixed traffic the value reflects whichever path ran last (the
+    /// counters above, not these gauges, are the stable signals)
     pool_workers: AtomicU64,
     workers_parked: AtomicU64,
     pool_jobs: AtomicU64,
@@ -41,6 +49,11 @@ pub struct Metrics {
     /// gauges mirrored from the planner's partition-replay counters
     partition_hits: AtomicU64,
     partition_misses: AtomicU64,
+    /// gauge: shard count of the most recent sharded request
+    shard_count_last: AtomicU64,
+    /// gauge: max/mean nnz imbalance of the most recent shard layout,
+    /// stored as f64 bits (1.0 = perfectly balanced)
+    shard_imbalance_bits: AtomicU64,
     hist: Mutex<[u64; BUCKETS.len() + 1]>,
     latency_sum_us: AtomicU64,
 }
@@ -51,7 +64,16 @@ impl Metrics {
         // threshold gauge starts at the paper's prior, not 0.0
         m.tuner_threshold_bits
             .store(crate::spmm::DEFAULT_THRESHOLD.to_bits(), Ordering::Relaxed);
+        // imbalance gauge starts at the perfectly-balanced value
+        m.shard_imbalance_bits.store(1.0f64.to_bits(), Ordering::Relaxed);
         m
+    }
+
+    /// Mirror the most recent shard layout into the exported gauges
+    /// (called by the sharded path at scatter time).
+    pub fn sync_shard_gauges(&self, shards: usize, imbalance: f64) {
+        self.shard_count_last.store(shards as u64, Ordering::Relaxed);
+        self.shard_imbalance_bits.store(imbalance.to_bits(), Ordering::Relaxed);
     }
 
     /// Mirror planner state into the exported gauges (called by whoever
@@ -121,6 +143,12 @@ impl Metrics {
             plan_evictions: self.plan_evictions.load(Ordering::Relaxed),
             plan_len: self.plan_len.load(Ordering::Relaxed),
             probes: self.probes.load(Ordering::Relaxed),
+            sharded: self.sharded.load(Ordering::Relaxed),
+            shards_executed: self.shards_executed.load(Ordering::Relaxed),
+            shard_count_last: self.shard_count_last.load(Ordering::Relaxed),
+            shard_imbalance_last: f64::from_bits(
+                self.shard_imbalance_bits.load(Ordering::Relaxed),
+            ),
             pool_workers: self.pool_workers.load(Ordering::Relaxed),
             workers_parked: self.workers_parked.load(Ordering::Relaxed),
             pool_jobs: self.pool_jobs.load(Ordering::Relaxed),
@@ -156,6 +184,13 @@ pub struct MetricsSnapshot {
     pub plan_evictions: u64,
     pub plan_len: u64,
     pub probes: u64,
+    /// sharded scatter-gather requests and the shards they became
+    pub sharded: u64,
+    pub shards_executed: u64,
+    /// gauge: shard count of the most recent sharded request
+    pub shard_count_last: u64,
+    /// gauge: max/mean nnz imbalance of the most recent shard layout
+    pub shard_imbalance_last: f64,
     /// executor-pool gauges: thread count, currently parked, jobs run
     pub pool_workers: u64,
     pub workers_parked: u64,
@@ -191,7 +226,8 @@ impl std::fmt::Display for MetricsSnapshot {
             f,
             "req={} ok={} err={} rowsplit={} merge={} pjrt={} cpu={} \
              plan_hit={} plan_miss={} evict={} probes={} \
-             pool={}/{} buf={}r/{}a part={}h/{}m thr={:.2} p50={:.1}ms p99={:.1}ms",
+             shard={}x{} imb={:.2} pool={}/{} buf={}r/{}a part={}h/{}m \
+             thr={:.2} p50={:.1}ms p99={:.1}ms",
             self.requests,
             self.completed,
             self.errors,
@@ -203,6 +239,9 @@ impl std::fmt::Display for MetricsSnapshot {
             self.plan_misses,
             self.plan_evictions,
             self.probes,
+            self.sharded,
+            self.shard_count_last,
+            self.shard_imbalance_last,
             self.workers_parked,
             self.pool_workers,
             self.buffer_reuses,
@@ -272,6 +311,25 @@ mod tests {
         assert!((snap.plan_hit_rate() - 0.75).abs() < 1e-12);
         let text = format!("{snap}");
         assert!(text.contains("plan_hit=3") && text.contains("thr=7.50"), "{text}");
+    }
+
+    #[test]
+    fn shard_gauges_roundtrip_into_snapshot() {
+        let m = Metrics::new();
+        // gauges start sane: no shards yet, balanced by convention
+        let snap = m.snapshot();
+        assert_eq!(snap.shard_count_last, 0);
+        assert_eq!(snap.shard_imbalance_last, 1.0);
+        m.sharded.store(2, Ordering::Relaxed);
+        m.shards_executed.store(7, Ordering::Relaxed);
+        m.sync_shard_gauges(4, 1.18);
+        let snap = m.snapshot();
+        assert_eq!(snap.sharded, 2);
+        assert_eq!(snap.shards_executed, 7);
+        assert_eq!(snap.shard_count_last, 4);
+        assert!((snap.shard_imbalance_last - 1.18).abs() < 1e-12);
+        let text = format!("{snap}");
+        assert!(text.contains("shard=2x4") && text.contains("imb=1.18"), "{text}");
     }
 
     #[test]

@@ -22,6 +22,12 @@
 //! request-queue front-end on top (std threads + channels; the offline
 //! vendor set has no tokio, and the serve path is CPU-bound anyway).
 //!
+//! When [`EngineConfig::shard`] enables sharding, the router cuts large
+//! requests into nnz-balanced row-range shards ([`crate::shard`]) and
+//! scatters them across a pool of engine threads instead of handing the
+//! whole request to one worker — the one path by which a single request
+//! can use more than one engine.
+//!
 //! Execution runs on [`crate::exec`]'s persistent resources: every worker
 //! engine owns a warm [`crate::exec::WorkerPool`] (spawned at server
 //! start, so concurrent batches stay parallel) and all of them share one

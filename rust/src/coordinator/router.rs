@@ -27,6 +27,7 @@ use crate::exec::{BufferPool, Executor};
 use crate::formats::Csr;
 use crate::plan::{PlanOutcome, Planner};
 use crate::runtime::Manifest;
+use crate::shard::ShardedEngine;
 
 use super::batcher::BatchQueue;
 use super::engine::{EngineConfig, SpmmEngine, SpmmResult};
@@ -78,6 +79,10 @@ pub struct Server {
     workers: Vec<std::thread::JoinHandle<()>>,
     metrics: Arc<Metrics>,
     planner: Arc<Planner>,
+    /// scatter-gather engine pool for sharded requests (when the shard
+    /// policy is enabled); the router dispatches the shards of one large
+    /// request here instead of handing the whole request to one worker
+    sharded: Option<Arc<ShardedEngine>>,
     /// learned plans are written back here on shutdown
     plan_file: Option<std::path::PathBuf>,
     next_id: AtomicU64,
@@ -103,6 +108,22 @@ impl Server {
         // gauges report the real (possibly warm-loaded) planner state from
         // the first snapshot on, not the paper prior
         metrics.sync_plan_gauges(&planner.cache().stats(), planner.tuner().threshold());
+        // Sharded scatter-gather pool: one engine thread per worker (at
+        // least two — a single engine cannot scatter), sharing the
+        // server's planner, buffer free-list, and metrics, so per-shard
+        // plans, output leases, and gauges are all global.
+        let sharded = if engine_cfg.shard.enabled() {
+            Some(Arc::new(ShardedEngine::new(
+                cfg.workers.max(2),
+                engine_cfg.cpu_workers,
+                engine_cfg.shard.clone(),
+                Arc::clone(&planner),
+                Arc::clone(&buffers),
+                Arc::clone(&metrics),
+            )))
+        } else {
+            None
+        };
         // Router needs the manifest for bucket planning (plain data, Send).
         let manifest: Option<Manifest> = match &engine_cfg.artifacts_dir {
             Some(dir) if dir.join("manifest.json").exists() => {
@@ -166,10 +187,12 @@ impl Server {
         }
 
         // router thread: plan once per request, then bucket batching with
-        // deadline flushes
+        // deadline flushes; shardable requests bypass batching entirely
+        // and scatter across the sharded engine pool
         let router = {
             let metrics = Arc::clone(&metrics);
             let planner = Arc::clone(&planner);
+            let sharded = sharded.clone();
             std::thread::spawn(move || {
                 let mut bq = BatchQueue::new(cfg.max_batch, cfg.max_wait);
                 let mut pending: HashMap<u64, Request> = HashMap::new();
@@ -184,6 +207,20 @@ impl Server {
                     let timeout = bq.next_deadline().unwrap_or(Duration::from_millis(50));
                     match ingress_rx.recv_timeout(timeout) {
                         Ok(RouterMsg::Req(mut req)) => {
+                            // Sharded dispatch: when the policy cuts this
+                            // request into ≥ 2 shards, scatter it across
+                            // the engine pool (idle engines pick shards
+                            // up) instead of whole-request-per-worker.
+                            // Per-shard planning happens in the scatter,
+                            // so the request is still planned exactly once
+                            // per shard, on this thread.
+                            if let Some(se) = &sharded {
+                                if se.policy().shard_count(&req.csr, se.engines()) >= 2 {
+                                    let Request { csr, b, n, reply, .. } = req;
+                                    se.submit_to(&csr, &b, n, reply);
+                                    continue;
+                                }
+                            }
                             let outcome = planner.plan(&req.csr, manifest.as_ref());
                             let plan_counter = if outcome.cache_hit {
                                 &metrics.plan_hits
@@ -239,6 +276,7 @@ impl Server {
             workers,
             metrics,
             planner,
+            sharded,
             plan_file: engine_cfg.plan_file,
             next_id: AtomicU64::new(0),
         })
@@ -286,6 +324,12 @@ impl Server {
         &self.planner
     }
 
+    /// The sharded scatter-gather engine pool, when the shard policy is
+    /// enabled (per-engine shard/job counters live here).
+    pub fn sharded(&self) -> Option<&Arc<ShardedEngine>> {
+        self.sharded.as_ref()
+    }
+
     /// Drain queues and stop all threads; persists learned plans when a
     /// plan file is configured.
     pub fn shutdown(mut self) -> MetricsSnapshot {
@@ -296,6 +340,10 @@ impl Server {
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
+        // The router (the only other holder) has exited, so dropping our
+        // Arc tears down the sharded engine pool: its threads drain any
+        // queued shards, reply, and join — the snapshot below is final.
+        drop(self.sharded.take());
         if let Some(path) = &self.plan_file {
             if let Err(e) = self.planner.save(path) {
                 eprintln!("(plan save to {} failed: {e})", path.display());
@@ -425,6 +473,110 @@ mod tests {
         let r = server.submit_blocking(a, b, 4);
         assert!(r.is_ok());
         server.shutdown();
+    }
+
+    /// A skewed long-row matrix: uniform 24-nonzero rows (d = 24 →
+    /// row-split everywhere) plus one 4096-nonzero row.  Row-split output
+    /// is bitwise-deterministic per row regardless of partitioning, so the
+    /// sharded and unsharded paths must agree exactly.
+    fn skewed_rowsplit_matrix() -> Csr {
+        let m = 4000usize;
+        let mut row_ptr = vec![0usize];
+        let mut cols: Vec<u32> = Vec::new();
+        for i in 0..m {
+            let len = if i == 1234 { 4096 } else { 24 };
+            cols.extend((0..len as u32).map(|c| (c * 31 + i as u32 * 7) % 4096));
+            row_ptr.push(cols.len());
+        }
+        let vals: Vec<f32> = (0..cols.len()).map(|e| ((e * 37) % 101) as f32 * 0.013 - 0.65).collect();
+        Csr::new(m, 4096, row_ptr, cols, vals).unwrap()
+    }
+
+    #[test]
+    fn sharded_auto_matches_unsharded_bitwise_and_reuses_buffers() {
+        let a = Arc::new(skewed_rowsplit_matrix());
+        let b = Arc::new(crate::gen::dense_matrix(4096, 16, 1301));
+
+        // unsharded baseline
+        let server = Server::start(cpu_cfg(), ServerConfig::default()).unwrap();
+        let base = server
+            .submit_blocking(Arc::clone(&a), Arc::clone(&b), 16)
+            .unwrap();
+        assert_eq!(base.shards, 1);
+        let base_c = base.c.into_vec();
+        server.shutdown();
+
+        // sharded: --shards auto equivalent
+        let cfg = EngineConfig {
+            shard: crate::shard::ShardPolicy::auto(),
+            ..cpu_cfg()
+        };
+        let server = Server::start(
+            cfg,
+            ServerConfig {
+                workers: 3,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let first = server
+            .submit_blocking(Arc::clone(&a), Arc::clone(&b), 16)
+            .unwrap();
+        assert!(first.shards >= 2, "large request must shard: {}", first.shards);
+        assert_eq!(first.c.len(), base_c.len());
+        assert_eq!(&first.c[..], &base_c[..], "sharded output must be bitwise-identical");
+        let ptr = first.c.as_ptr();
+        drop(first); // lease returns to the server-wide free-list
+
+        // steady state over the sharded path: pooled buffer + cached
+        // per-shard plans and layouts
+        for _ in 0..5 {
+            let r = server
+                .submit_blocking(Arc::clone(&a), Arc::clone(&b), 16)
+                .unwrap();
+            assert!(r.cache_hit, "every shard plan must replay");
+            assert_eq!(r.c.as_ptr(), ptr, "steady state must reuse the one allocation");
+            assert_eq!(&r.c[..], &base_c[..]);
+            drop(r);
+        }
+
+        // one request ran across ≥ 2 engines concurrently: the per-engine
+        // shard counters and pool job counters prove multi-engine spread
+        let se = server.sharded().expect("shard policy enabled").clone();
+        let per_engine = se.shards_per_engine();
+        let busy = per_engine.iter().filter(|&&c| c > 0).count();
+        assert!(busy >= 2, "shards must spread across engines: {per_engine:?}");
+        let jobs = se.engine_jobs();
+        assert!(
+            jobs.iter().filter(|&&j| j > 0).count() >= 2,
+            "≥ 2 engine pools must have run jobs: {jobs:?}"
+        );
+        let layouts = server.planner().shard_layout_stats();
+        assert_eq!(layouts.misses, 1, "cut search runs once per parent fingerprint");
+        assert!(layouts.hits >= 5);
+
+        let snap = server.shutdown();
+        assert_eq!(snap.errors, 0);
+        assert_eq!(snap.sharded, 6);
+        assert_eq!(snap.shard_count_last as usize, per_engine.iter().sum::<u64>() as usize / 6);
+        assert!(snap.buffers_allocated <= 2, "allocated {}", snap.buffers_allocated);
+        assert!(snap.buffer_reuses >= 5, "reused {}", snap.buffer_reuses);
+    }
+
+    #[test]
+    fn small_requests_bypass_the_sharded_path() {
+        let cfg = EngineConfig {
+            shard: crate::shard::ShardPolicy::auto(),
+            ..cpu_cfg()
+        };
+        let server = Server::start(cfg, ServerConfig::default()).unwrap();
+        let a = Arc::new(Csr::random(100, 100, 4.0, 1302)); // far below min_shard_work
+        let b = Arc::new(crate::gen::dense_matrix(100, 8, 1303));
+        let r = server.submit_blocking(a, b, 8).unwrap();
+        assert_eq!(r.shards, 1, "small request must take the single-engine path");
+        let snap = server.shutdown();
+        assert_eq!(snap.sharded, 0);
+        assert_eq!(snap.completed, 1);
     }
 
     #[test]

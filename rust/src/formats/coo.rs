@@ -29,8 +29,8 @@ impl Coo {
             m: csr.m,
             k: csr.k,
             row_idx,
-            col_idx: csr.col_idx.clone(),
-            vals: csr.vals.clone(),
+            col_idx: csr.col_idx.to_vec(),
+            vals: csr.vals.to_vec(),
         }
     }
 

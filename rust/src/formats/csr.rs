@@ -1,8 +1,13 @@
 //! Compressed Sparse Row — the paper's canonical input format.
 //!
 //! Storage is `m + 2·nnz` words (§2.2): a `row_ptr` array of `m+1` offsets
-//! plus per-nonzero column indices and values.
+//! plus per-nonzero column indices and values.  The nonzero arrays live in
+//! [`SharedSlice`] windows so a row-range [`Csr::shard_view`] shares its
+//! parent's `col_idx`/`vals` memory instead of copying it — the shard
+//! subsystem ([`crate::shard`]) extracts views that are real `Csr`s and
+//! runs the unchanged plan/exec stack on them.
 
+use super::storage::SharedSlice;
 use crate::util::XorShift;
 
 /// A CSR sparse matrix: `m × k`, f32 values, u32 column indices.
@@ -11,14 +16,17 @@ pub struct Csr {
     pub m: usize,
     pub k: usize,
     /// `m + 1` offsets into `col_idx`/`vals`; `row_ptr[0] == 0`,
-    /// `row_ptr[m] == nnz`, non-decreasing.
+    /// `row_ptr[m] == nnz`, non-decreasing.  Always rebased: a shard view
+    /// carries its own `row_ptr` starting at 0 over a shared data window.
     pub row_ptr: Vec<usize>,
-    pub col_idx: Vec<u32>,
-    pub vals: Vec<f32>,
+    pub col_idx: SharedSlice<u32>,
+    pub vals: SharedSlice<f32>,
 }
 
 impl Csr {
-    /// Build from parts, validating the CSR invariants.
+    /// Build from parts, validating the CSR invariants.  (Takes owned
+    /// vectors — the allocations move into [`SharedSlice`] storage with
+    /// no copy; use [`Self::shard_view`] to window an existing matrix.)
     pub fn new(
         m: usize,
         k: usize,
@@ -50,8 +58,8 @@ impl Csr {
             m,
             k,
             row_ptr,
-            col_idx,
-            vals,
+            col_idx: col_idx.into(),
+            vals: vals.into(),
         })
     }
 
@@ -61,8 +69,51 @@ impl Csr {
             m,
             k,
             row_ptr: vec![0; m + 1],
-            col_idx: Vec::new(),
-            vals: Vec::new(),
+            col_idx: SharedSlice::default(),
+            vals: SharedSlice::default(),
+        }
+    }
+
+    /// A zero-copy view of rows `[row_start, row_end)` that is itself a
+    /// real `Csr`, so the whole plan/exec stack applies unchanged.  The
+    /// `row_ptr` window is rebased to start at 0 (an `O(rows)` copy of the
+    /// small offsets array); `col_idx`/`vals` share the parent's
+    /// allocation through [`SharedSlice`] windows — no nonzero data moves.
+    ///
+    /// Handles every empty-row layout explicitly: leading/trailing runs of
+    /// empty rows inside the range rebase to repeated equal offsets, and a
+    /// shard that is *entirely* empty rows yields a valid all-zero
+    /// `row_ptr` over empty data windows.  The CSR invariants of the view
+    /// are re-checked (assert-backed) rather than assumed.
+    pub fn shard_view(&self, row_start: usize, row_end: usize) -> Csr {
+        assert!(
+            row_start <= row_end && row_end <= self.m,
+            "shard_view rows [{row_start}, {row_end}) out of 0..{}",
+            self.m
+        );
+        let nz_start = self.row_ptr[row_start];
+        let nz_end = self.row_ptr[row_end];
+        let row_ptr: Vec<usize> = self.row_ptr[row_start..=row_end]
+            .iter()
+            .map(|&off| off - nz_start)
+            .collect();
+        // Invariant check for the rebased view (cheap: offsets only).
+        assert_eq!(row_ptr[0], 0, "rebased row_ptr must start at 0");
+        assert_eq!(
+            *row_ptr.last().unwrap(),
+            nz_end - nz_start,
+            "rebased row_ptr must end at the shard nnz"
+        );
+        debug_assert!(
+            row_ptr.windows(2).all(|w| w[0] <= w[1]),
+            "rebased row_ptr must stay non-decreasing"
+        );
+        Csr {
+            m: row_end - row_start,
+            k: self.k,
+            row_ptr,
+            col_idx: self.col_idx.slice(nz_start, nz_end),
+            vals: self.vals.slice(nz_start, nz_end),
         }
     }
 
@@ -170,8 +221,8 @@ impl Csr {
             m,
             k,
             row_ptr,
-            col_idx,
-            vals,
+            col_idx: col_idx.into(),
+            vals: vals.into(),
         }
     }
 
@@ -259,5 +310,82 @@ mod tests {
     fn cv_zero_for_uniform_rows() {
         let a = Csr::random(64, 4096, 0.0, 1); // all empty
         assert_eq!(a.row_length_cv(), 0.0);
+    }
+
+    #[test]
+    fn shard_view_is_zero_copy_and_rebased() {
+        let a = Csr::random(200, 100, 5.0, 7);
+        let v = a.shard_view(50, 120);
+        assert_eq!(v.m, 70);
+        assert_eq!(v.k, a.k);
+        assert_eq!(v.nnz(), a.row_ptr[120] - a.row_ptr[50]);
+        assert_eq!(v.row_ptr[0], 0);
+        // the view's rows are the parent's rows, element for element
+        for i in 0..v.m {
+            assert_eq!(v.row(i), a.row(50 + i), "row {i}");
+        }
+        // no data copy: the windows alias the parent's allocation
+        assert!(v.col_idx.shares_buffer(&a.col_idx));
+        assert!(v.vals.shares_buffer(&a.vals));
+        assert_eq!(v.col_idx.offset(), a.row_ptr[50]);
+        assert_eq!(v.vals.as_ptr(), unsafe { a.vals.as_ptr().add(a.row_ptr[50]) });
+    }
+
+    #[test]
+    fn shard_view_handles_empty_row_runs() {
+        // rows: [2 nz][empty][empty][1 nz][empty][empty]
+        let a = Csr::new(
+            6,
+            4,
+            vec![0, 2, 2, 2, 3, 3, 3],
+            vec![0, 1, 2],
+            vec![1.0, 2.0, 3.0],
+        )
+        .unwrap();
+        // leading empty run
+        let v = a.shard_view(1, 4);
+        assert_eq!(v.row_ptr, vec![0, 0, 0, 1]);
+        assert_eq!(&v.col_idx[..], &[2]);
+        // trailing empty run
+        let v = a.shard_view(3, 6);
+        assert_eq!(v.row_ptr, vec![0, 1, 1, 1]);
+        assert_eq!(v.empty_rows(), 2);
+        // entirely empty shard (offsets sit mid-buffer, window is empty)
+        let v = a.shard_view(1, 3);
+        assert_eq!(v.m, 2);
+        assert_eq!(v.nnz(), 0);
+        assert_eq!(v.row_ptr, vec![0, 0, 0]);
+        assert!(v.col_idx.is_empty() && v.vals.is_empty());
+        assert_eq!(v.col_idx.offset(), 2, "empty window keeps its rebase origin");
+        // zero-row shard at a boundary
+        let v = a.shard_view(6, 6);
+        assert_eq!(v.m, 0);
+        assert_eq!(v.row_ptr, vec![0]);
+    }
+
+    #[test]
+    fn shard_view_full_range_equals_parent() {
+        let a = Csr::random(80, 60, 4.0, 8);
+        let v = a.shard_view(0, a.m);
+        assert_eq!(v, a);
+        assert_eq!(v.to_dense(), a.to_dense());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of 0..")]
+    fn shard_view_rejects_out_of_range() {
+        let a = Csr::random(10, 10, 2.0, 9);
+        let _ = a.shard_view(4, 11);
+    }
+
+    #[test]
+    fn shard_views_compose_with_dense_oracle() {
+        let a = Csr::random(120, 50, 3.0, 10);
+        let cuts = [0usize, 17, 17 + 40, 120];
+        let mut dense = Vec::new();
+        for w in cuts.windows(2) {
+            dense.extend(a.shard_view(w[0], w[1]).to_dense());
+        }
+        assert_eq!(dense, a.to_dense(), "concatenated shard rows = parent");
     }
 }

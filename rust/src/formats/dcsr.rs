@@ -93,8 +93,8 @@ impl Dcsr {
             light_ptr[i + 1] = light_cols.len();
         }
         light.row_ptr = light_ptr;
-        light.col_idx = light_cols;
-        light.vals = light_vals;
+        light.col_idx = light_cols.into();
+        light.vals = light_vals.into();
         let heavy = Csr::new(csr.m, csr.k, heavy_ptr, heavy_cols, heavy_vals)
             .expect("valid by construction");
         (heavy, Dcsr::from_csr(&light))

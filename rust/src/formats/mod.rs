@@ -22,6 +22,7 @@ pub mod dcsr;
 pub mod ell;
 pub mod mm;
 pub mod sellp;
+pub mod storage;
 
 pub use coo::Coo;
 pub use csc::Csc;
@@ -29,3 +30,4 @@ pub use csr::Csr;
 pub use dcsr::Dcsr;
 pub use ell::Ell;
 pub use sellp::SellP;
+pub use storage::SharedSlice;

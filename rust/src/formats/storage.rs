@@ -1,0 +1,251 @@
+//! Shared, window-offset nonzero storage — the zero-copy substrate behind
+//! [`Csr::shard_view`](super::Csr::shard_view).
+//!
+//! A [`SharedSlice`] is an `Arc`'d buffer plus a `[start, start+len)`
+//! window.  Cloning or re-windowing shares the allocation, so a row-range
+//! shard view of a CSR matrix carries the *same* `col_idx`/`vals` memory
+//! as its parent — only the (small) `row_ptr` is rebased.  Reads go
+//! through `Deref<Target = [T]>`, so every existing consumer of the old
+//! `Vec` fields (indexing, slicing, iteration, `len`) works unchanged.
+//!
+//! Mutation is copy-on-write: `DerefMut` first makes the storage unique
+//! (full-window and unshared), cloning the window into a fresh buffer when
+//! it is not.  The serve path never mutates matrices, so this cost is paid
+//! only by explicit editors (tests, format builders).
+
+use std::ops::{Deref, DerefMut};
+use std::sync::Arc;
+
+/// An `Arc`-shared buffer window that dereferences to `[T]`.
+pub struct SharedSlice<T> {
+    buf: Arc<Vec<T>>,
+    start: usize,
+    len: usize,
+}
+
+impl<T> SharedSlice<T> {
+    /// Take ownership of a vector (no copy — the allocation moves in).
+    pub fn from_vec(data: Vec<T>) -> Self {
+        let len = data.len();
+        Self {
+            buf: Arc::new(data),
+            start: 0,
+            len,
+        }
+    }
+
+    /// Re-window: `[start, end)` *relative to this window*, sharing the
+    /// same backing buffer (no data copy).
+    pub fn slice(&self, start: usize, end: usize) -> Self {
+        assert!(
+            start <= end && end <= self.len,
+            "slice [{start}, {end}) out of window of length {}",
+            self.len
+        );
+        Self {
+            buf: Arc::clone(&self.buf),
+            start: self.start + start,
+            len: end - start,
+        }
+    }
+
+    /// Offset of this window inside the backing buffer (0 for owned
+    /// vectors; the shard's nonzero offset for shard views).
+    pub fn offset(&self) -> usize {
+        self.start
+    }
+
+    /// Do two slices share one backing allocation? (zero-copy assertions)
+    pub fn shares_buffer(&self, other: &Self) -> bool {
+        Arc::ptr_eq(&self.buf, &other.buf)
+    }
+}
+
+impl<T: Clone> SharedSlice<T> {
+    /// Make the storage unique and full-window so `&mut [T]` is safe to
+    /// hand out.  No-op when already unshared and unwindowed.
+    fn make_unique(&mut self) {
+        if self.start != 0 || self.len != self.buf.len() || Arc::strong_count(&self.buf) != 1 {
+            let owned: Vec<T> = self[..].to_vec();
+            self.start = 0;
+            self.len = owned.len();
+            self.buf = Arc::new(owned);
+        }
+    }
+}
+
+impl<T> Deref for SharedSlice<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        &self.buf[self.start..self.start + self.len]
+    }
+}
+
+impl<T: Clone> DerefMut for SharedSlice<T> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        self.make_unique();
+        let len = self.len;
+        &mut Arc::get_mut(&mut self.buf).expect("unique after make_unique")[..len]
+    }
+}
+
+impl<T> Clone for SharedSlice<T> {
+    fn clone(&self) -> Self {
+        Self {
+            buf: Arc::clone(&self.buf),
+            start: self.start,
+            len: self.len,
+        }
+    }
+}
+
+impl<T> Default for SharedSlice<T> {
+    fn default() -> Self {
+        Self::from_vec(Vec::new())
+    }
+}
+
+impl<T> From<Vec<T>> for SharedSlice<T> {
+    fn from(data: Vec<T>) -> Self {
+        Self::from_vec(data)
+    }
+}
+
+impl<T> FromIterator<T> for SharedSlice<T> {
+    fn from_iter<I: IntoIterator<Item = T>>(iter: I) -> Self {
+        Self::from_vec(iter.into_iter().collect())
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for SharedSlice<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        std::fmt::Debug::fmt(&self[..], f)
+    }
+}
+
+// Content equality: two windows are equal when their visible elements are,
+// regardless of sharing or offsets.
+impl<T: PartialEq> PartialEq for SharedSlice<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl<T: PartialEq> PartialEq<Vec<T>> for SharedSlice<T> {
+    fn eq(&self, other: &Vec<T>) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl<T: PartialEq> PartialEq<[T]> for SharedSlice<T> {
+    fn eq(&self, other: &[T]) -> bool {
+        &self[..] == other
+    }
+}
+
+impl<'a, T> IntoIterator for &'a SharedSlice<T> {
+    type Item = &'a T;
+    type IntoIter = std::slice::Iter<'a, T>;
+    fn into_iter(self) -> Self::IntoIter {
+        self[..].iter()
+    }
+}
+
+impl<'a, T: Clone> IntoIterator for &'a mut SharedSlice<T> {
+    type Item = &'a mut T;
+    type IntoIter = std::slice::IterMut<'a, T>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.deref_mut().iter_mut()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_vec_and_deref() {
+        let s: SharedSlice<u32> = vec![1, 2, 3, 4].into();
+        assert_eq!(s.len(), 4);
+        assert_eq!(s[2], 3);
+        assert_eq!(&s[1..3], &[2, 3]);
+        assert_eq!(s.iter().sum::<u32>(), 10);
+        assert_eq!(s.offset(), 0);
+    }
+
+    #[test]
+    fn slice_shares_the_buffer() {
+        let s: SharedSlice<u32> = vec![10, 20, 30, 40, 50].into();
+        let w = s.slice(1, 4);
+        assert_eq!(&w[..], &[20, 30, 40]);
+        assert_eq!(w.offset(), 1);
+        assert!(w.shares_buffer(&s), "re-windowing must not copy");
+        assert_eq!(w.as_ptr(), unsafe { s.as_ptr().add(1) });
+        // window of a window composes offsets
+        let w2 = w.slice(1, 2);
+        assert_eq!(&w2[..], &[30]);
+        assert_eq!(w2.offset(), 2);
+        assert!(w2.shares_buffer(&s));
+    }
+
+    #[test]
+    fn empty_window_anywhere() {
+        let s: SharedSlice<f32> = vec![1.0, 2.0].into();
+        let e = s.slice(2, 2);
+        assert!(e.is_empty());
+        assert_eq!(e.offset(), 2);
+        let e0 = s.slice(0, 0);
+        assert!(e0.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of window")]
+    fn slice_out_of_range_panics() {
+        let s: SharedSlice<u32> = vec![1, 2].into();
+        let _ = s.slice(1, 3);
+    }
+
+    #[test]
+    fn mutation_is_copy_on_write() {
+        let s: SharedSlice<u32> = vec![1, 2, 3].into();
+        let mut w = s.slice(1, 3);
+        w[0] = 99; // must not write through to the shared parent
+        assert_eq!(&w[..], &[99, 3]);
+        assert_eq!(&s[..], &[1, 2, 3]);
+        assert!(!w.shares_buffer(&s), "write forks the storage");
+        // unshared full-window mutation is in place (no new allocation)
+        let mut owned: SharedSlice<u32> = vec![7, 8].into();
+        let p = owned.as_ptr();
+        owned[1] = 9;
+        assert_eq!(owned.as_ptr(), p);
+        assert_eq!(&owned[..], &[7, 9]);
+    }
+
+    #[test]
+    fn equality_ignores_sharing() {
+        let a: SharedSlice<u32> = vec![0, 5, 6, 0].into();
+        let b = a.slice(1, 3);
+        let c: SharedSlice<u32> = vec![5, 6].into();
+        assert_eq!(b, c);
+        assert_eq!(c, vec![5, 6]);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn iteration_forms() {
+        let s: SharedSlice<u32> = vec![1, 2, 3].into();
+        let mut sum = 0;
+        for &v in &s {
+            sum += v;
+        }
+        assert_eq!(sum, 6);
+        let mut m = s.clone();
+        for v in &mut m {
+            *v *= 2;
+        }
+        assert_eq!(&m[..], &[2, 4, 6]);
+        assert_eq!(&s[..], &[1, 2, 3], "COW protects the original");
+        let collected: SharedSlice<u32> = (0..3).collect();
+        assert_eq!(&collected[..], &[0, 1, 2]);
+    }
+}

@@ -24,6 +24,8 @@
 //!   - [`exec`] — the persistent executor pool, output-buffer free-list,
 //!     and scratch arenas behind the zero-allocation serve path (see
 //!     below),
+//!   - [`shard`] — nnz-balanced matrix sharding and scatter-gather
+//!     execution across engines (see below),
 //!   - [`sim`] — a K40c cost-model simulator that regenerates the paper's
 //!     figures (we have no K40c; see DESIGN.md §Substitutions),
 //!   - [`gen`] — matrix generators incl. the 157-matrix synthetic suite,
@@ -75,6 +77,40 @@
 //!   the partition is stored with the cached plan and replayed after an
 //!   exact [`exec::partition_matches`] revalidation.
 //!
+//! ## shard — one request across many engines
+//!
+//! The paper's merge-path decomposition balances work *inside* one
+//! executor; [`shard`] applies the identical idea one level up so a
+//! single huge (or pathologically skewed) request scales past one
+//! engine's pool:
+//!
+//! * **cuts from merge-path coordinates** — shard boundaries are the row
+//!   boundaries nearest equally-spaced merge diagonals
+//!   ([`loadbalance::mergepath::nearest_row_cut`]), giving each shard
+//!   ~equal `rows + nnz`; a skew-aware mode isolates ultra-heavy rows
+//!   into singleton shards and cuts the gaps with the range-restricted
+//!   search ([`loadbalance::mergepath::row_cut_in_range`]);
+//! * **zero-copy shard views** — [`formats::Csr::shard_view`] rebases
+//!   `row_ptr` over shared [`formats::SharedSlice`] windows of
+//!   `col_idx`/`vals`, so a shard is a real [`formats::Csr`] and the
+//!   whole plan/exec stack applies unchanged;
+//! * **per-shard planning** — each view fingerprints independently
+//!   through the shared [`plan::Planner`] (dense shards can run
+//!   row-split while sparse shards run merge), and the cut vectors
+//!   themselves are cached by *parent* fingerprint
+//!   ([`plan::ShardLayoutCache`]);
+//! * **scatter-gather execution** — [`shard::ShardedEngine`] dispatches
+//!   shards round-robin across engine threads (each a warm
+//!   [`exec::WorkerPool`]) writing disjoint row ranges of **one**
+//!   [`exec::OutputBuf`] lease; the last shard assembles the reply, so
+//!   gathering is free.
+//!
+//! Because cuts sit on row boundaries, the gathered result is
+//! bitwise-identical to the unsharded executor run over the concatenated
+//! partition ([`shard::concat_partitions`]).  The serve path exposes the
+//! policy as [`coordinator::EngineConfig::shard`] and
+//! `merge-spmm serve --shards N|auto`.
+//!
 //! ### The `_into` API contract
 //!
 //! [`spmm::rowsplit_spmm_into`] and [`spmm::merge_spmm_into`] are the
@@ -98,6 +134,7 @@ pub mod gen;
 pub mod loadbalance;
 pub mod plan;
 pub mod runtime;
+pub mod shard;
 pub mod sim;
 pub mod spmm;
 pub mod util;

@@ -41,6 +41,56 @@ pub fn merge_coord(csr: &Csr, diagonal: usize) -> (usize, usize) {
     (lo, diagonal - lo)
 }
 
+/// Whole-row cut nearest to `diagonal` in merge-path space: the row
+/// boundary `r` minimizing `|r + row_ptr[r] - diagonal|`.  This is the
+/// shard-level reuse of the coordinate search: [`crate::shard`] places its
+/// nnz-balanced shard cuts at the row boundaries closest to equally-spaced
+/// diagonals, so shards inherit merge-path's equal-(rows+nonzeros)
+/// balancing while staying row-aligned (a shard must own whole rows to
+/// write a disjoint output range).
+pub fn nearest_row_cut(csr: &Csr, diagonal: usize) -> usize {
+    let total = csr.m + csr.nnz();
+    let (i, _) = merge_coord(csr, diagonal.min(total));
+    if i >= csr.m {
+        return csr.m;
+    }
+    // merge_coord guarantees row_ptr[i] <= j, so `below <= diagonal`; the
+    // next boundary is strictly past the diagonal (row-end i unconsumed).
+    let below = i + csr.row_ptr[i];
+    let above = (i + 1) + csr.row_ptr[i + 1];
+    debug_assert!(below <= diagonal && above > diagonal);
+    if diagonal - below <= above - diagonal {
+        i
+    } else {
+        i + 1
+    }
+}
+
+/// [`nearest_row_cut`] restricted to rows `[row_lo, row_hi]`, measuring
+/// the diagonal relative to `row_lo` — used by the skew-aware sharder to
+/// split the gap *between* isolated heavy rows.  `cost(r) = (r - row_lo) +
+/// (row_ptr[r] - row_ptr[row_lo])` is strictly increasing in `r`, so the
+/// same binary search applies.
+pub fn row_cut_in_range(csr: &Csr, row_lo: usize, row_hi: usize, diagonal: usize) -> usize {
+    debug_assert!(row_lo <= row_hi && row_hi <= csr.m);
+    let cost = |r: usize| (r - row_lo) + (csr.row_ptr[r] - csr.row_ptr[row_lo]);
+    // largest r with cost(r) <= diagonal (cost(row_lo) = 0 always holds)
+    let (mut lo, mut hi) = (row_lo, row_hi);
+    while lo < hi {
+        let mid = (lo + hi + 1) / 2;
+        if cost(mid) <= diagonal {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    if lo < row_hi && diagonal - cost(lo) > cost(lo + 1) - diagonal {
+        lo + 1
+    } else {
+        lo
+    }
+}
+
 impl Partitioner for MergePath {
     fn partition(&self, csr: &Csr, p: usize) -> Vec<Segment> {
         let p = p.max(1);
@@ -176,6 +226,65 @@ mod tests {
     fn empty_matrix() {
         let csr = Csr::empty(0, 10);
         assert!(MergePath.partition(&csr, 4).is_empty());
+    }
+
+    /// Linear-scan oracle: the true nearest row boundary in merge space.
+    fn nearest_row_cut_oracle(csr: &Csr, d: usize) -> usize {
+        (0..=csr.m)
+            .min_by_key(|&r| {
+                let cost = r + csr.row_ptr[r];
+                (cost.abs_diff(d), r) // ties break to the smaller row
+            })
+            .unwrap()
+    }
+
+    #[test]
+    fn nearest_row_cut_matches_oracle() {
+        for (m, k, d_avg, seed) in [(60usize, 50usize, 4.0, 86), (40, 30, 0.5, 87)] {
+            let csr = Csr::random(m, k, d_avg, seed);
+            let total = csr.m + csr.nnz();
+            for d in 0..=total {
+                let got = nearest_row_cut(&csr, d);
+                let want = nearest_row_cut_oracle(&csr, d);
+                let (gc, wc) = (got + csr.row_ptr[got], want + csr.row_ptr[want]);
+                assert_eq!(
+                    gc.abs_diff(d),
+                    wc.abs_diff(d),
+                    "diagonal {d}: cut {got} (cost {gc}) vs oracle {want} (cost {wc})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nearest_row_cut_with_empty_rows_and_extremes() {
+        let csr = Csr::new(5, 4, vec![0, 0, 2, 2, 2, 3], vec![1, 2, 0], vec![1.0; 3]).unwrap();
+        assert_eq!(nearest_row_cut(&csr, 0), 0);
+        let total = csr.m + csr.nnz();
+        assert_eq!(nearest_row_cut(&csr, total), csr.m);
+        assert_eq!(nearest_row_cut(&csr, total + 100), csr.m);
+    }
+
+    #[test]
+    fn row_cut_in_range_agrees_with_full_search() {
+        let csr = Csr::random(80, 60, 5.0, 88);
+        let total = csr.m + csr.nnz();
+        // over the full range the restricted search is the global one
+        for d in (0..=total).step_by(7) {
+            let full = nearest_row_cut(&csr, d);
+            let ranged = row_cut_in_range(&csr, 0, csr.m, d);
+            let (fc, rc) = (full + csr.row_ptr[full], ranged + csr.row_ptr[ranged]);
+            assert_eq!(fc.abs_diff(d), rc.abs_diff(d), "diagonal {d}");
+        }
+        // restricted: cuts stay inside the range and track relative work
+        let (lo, hi) = (20usize, 60usize);
+        let span = (hi - lo) + (csr.row_ptr[hi] - csr.row_ptr[lo]);
+        for frac in 1..4 {
+            let r = row_cut_in_range(&csr, lo, hi, span * frac / 4);
+            assert!((lo..=hi).contains(&r));
+        }
+        assert_eq!(row_cut_in_range(&csr, lo, hi, 0), lo);
+        assert_eq!(row_cut_in_range(&csr, lo, hi, span), hi);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //!            [--measured] [--seed N] [--out DIR]     regenerate paper figures
 //! merge-spmm run --mtx FILE [--n N] [--artifacts DIR]  SpMM one matrix
 //! merge-spmm serve [--requests N] [--workers W] [--cpu-only]
-//!                                                    demo serving workload
+//!                  [--shards N|auto]                 demo serving workload
 //! merge-spmm suite [--seed N]                        dataset inventory
 //! merge-spmm info [--artifacts DIR]                  platform + artifacts
 //! ```
@@ -48,6 +48,10 @@ USAGE:
   merge-spmm bench <id|all> [--measured] [--seed N] [--out DIR]
   merge-spmm run --mtx FILE [--n N] [--artifacts DIR] [--cpu-only]
   merge-spmm serve [--requests N] [--workers W] [--cpu-only] [--artifacts DIR] [--plans FILE]
+                   [--shards N|auto]   N: scatter EVERY request across N engines;
+                                       auto: shard only large requests (CPU executors
+                                       serve sharded requests; small ones keep the
+                                       batcher/PJRT path)
   merge-spmm suite [--seed N]
   merge-spmm info [--artifacts DIR]
 
@@ -73,7 +77,7 @@ fn positional(args: &[String]) -> Option<&str> {
             continue;
         }
         if a == "--seed" || a == "--out" || a == "--n" || a == "--mtx" || a == "--artifacts"
-            || a == "--requests" || a == "--workers" || a == "--plans"
+            || a == "--requests" || a == "--workers" || a == "--plans" || a == "--shards"
         {
             skip = true;
             continue;
@@ -210,6 +214,24 @@ fn cmd_serve(args: &[String]) -> i32 {
     };
     // learned plans survive restarts when a plan file is given
     engine_cfg.plan_file = opt(args, "--plans").map(Into::into);
+    // sharding: scatter-gather large requests across the worker engines
+    if let Some(mode) = opt(args, "--shards") {
+        engine_cfg.shard.mode = if mode == "auto" {
+            merge_spmm::shard::ShardMode::Auto
+        } else {
+            match mode.parse::<usize>() {
+                Ok(n) if n >= 2 => merge_spmm::shard::ShardMode::Fixed(n),
+                Ok(n) => {
+                    eprintln!("(serve: --shards {n} < 2 — sharding disabled)");
+                    merge_spmm::shard::ShardMode::Off
+                }
+                Err(_) => {
+                    eprintln!("serve: --shards expects a number or `auto`, got `{mode}`");
+                    return 2;
+                }
+            }
+        };
+    }
     let server = match Server::start(
         engine_cfg,
         ServerConfig {
@@ -249,6 +271,14 @@ fn cmd_serve(args: &[String]) -> i32 {
         }
     }
     let wall = t0.elapsed().as_secs_f64();
+    if let Some(se) = server.sharded() {
+        println!(
+            "sharded engines: {} — shards/engine {:?}, pool jobs {:?}",
+            se.engines(),
+            se.shards_per_engine(),
+            se.engine_jobs()
+        );
+    }
     let snap = server.shutdown();
     println!("served {ok}/{requests} in {wall:.2}s — {:.1} req/s", ok as f64 / wall);
     println!("{snap}");

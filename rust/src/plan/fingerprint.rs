@@ -144,8 +144,8 @@ mod tests {
             a.m,
             a.k,
             a.row_ptr.clone(),
-            a.col_idx.clone(),
-            a.vals.clone(),
+            a.col_idx.to_vec(),
+            a.vals.to_vec(),
         )
         .unwrap();
         assert_eq!(fp, Fingerprint::of(&rebuilt));

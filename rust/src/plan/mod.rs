@@ -25,11 +25,13 @@
 pub mod cache;
 pub mod fingerprint;
 pub mod persist;
+pub mod shardlayout;
 pub mod tuner;
 
 pub use cache::{CacheStats, PlanCache};
 pub use fingerprint::{AspectClass, Fingerprint};
 pub use persist::{PlanFile, FORMAT};
+pub use shardlayout::{ShardLayoutCache, ShardLayoutKey, ShardLayoutStats};
 pub use tuner::{OnlineTuner, TunerStats, THRESHOLD_MAX, THRESHOLD_MIN};
 
 use std::path::Path;
@@ -109,6 +111,9 @@ pub struct PartitionStats {
 pub struct Planner {
     cache: PlanCache,
     tuner: OnlineTuner,
+    /// parent-fingerprint → shard cuts (the layout layer above the
+    /// per-shard plans that live in `cache`)
+    shard_layouts: ShardLayoutCache,
     default_workers: usize,
     partition_hits: AtomicU64,
     partition_misses: AtomicU64,
@@ -120,6 +125,7 @@ impl Planner {
         Self {
             cache: PlanCache::new(capacity),
             tuner: OnlineTuner::new(threshold),
+            shard_layouts: ShardLayoutCache::new(capacity),
             default_workers,
             partition_hits: AtomicU64::new(0),
             partition_misses: AtomicU64::new(0),
@@ -258,6 +264,35 @@ impl Planner {
         self.cache
             .attach_partition(outcome.fingerprint, &outcome.plan, Arc::clone(&segs));
         segs
+    }
+
+    /// Shard cuts for `a` under the given policy inputs, cached by the
+    /// *parent* fingerprint ([`ShardLayoutCache`]) — repeated large
+    /// matrices skip the cut search entirely.  Replayed cuts are
+    /// revalidated with [`crate::shard::cuts_valid`] (quantized
+    /// fingerprints can collide); a stale vector is recomputed and stored
+    /// back.
+    pub fn shard_cuts(
+        &self,
+        a: &Csr,
+        shards: usize,
+        skew_aware: bool,
+        max_imbalance: f64,
+    ) -> Arc<Vec<usize>> {
+        let key = ShardLayoutKey::new(Fingerprint::of(a), shards, skew_aware, max_imbalance);
+        if let Some(cuts) = self.shard_layouts.get(&key) {
+            if crate::shard::cuts_valid(a, &cuts) {
+                return cuts;
+            }
+        }
+        let cuts = Arc::new(crate::shard::shard_cuts(a, shards, skew_aware, max_imbalance));
+        self.shard_layouts.insert(key, Arc::clone(&cuts));
+        cuts
+    }
+
+    /// Shard-layout cache counters.
+    pub fn shard_layout_stats(&self) -> ShardLayoutStats {
+        self.shard_layouts.stats()
     }
 
     /// Partition replay counters (reused vs recomputed phase-1 splits).
@@ -424,6 +459,37 @@ mod tests {
         assert!(!Arc::ptr_eq(&segs_a, &segs_b), "foreign partition must not replay");
         assert!(crate::loadbalance::validate_segments(&b, &segs_b).is_ok());
         assert_eq!(p.partition_stats().misses, 2);
+    }
+
+    #[test]
+    fn shard_cuts_cached_by_parent_fingerprint() {
+        let p = Planner::new(9.35, 16, 2);
+        let a = Csr::random(3000, 500, 5.0, 77);
+        let first = p.shard_cuts(&a, 4, true, 1.25);
+        assert!(crate::shard::cuts_valid(&a, &first));
+        let again = p.shard_cuts(&a, 4, true, 1.25);
+        assert!(Arc::ptr_eq(&first, &again), "layout replays from the cache");
+        let s = p.shard_layout_stats();
+        assert_eq!((s.hits, s.misses, s.len), (1, 1, 1));
+        // a different shard count is a different layout
+        let other = p.shard_cuts(&a, 2, true, 1.25);
+        assert!(!Arc::ptr_eq(&first, &other));
+        assert_eq!(other.len(), 3);
+    }
+
+    #[test]
+    fn colliding_fingerprint_cuts_are_revalidated_not_misapplied() {
+        // same row-length multiset, different order → same fingerprint
+        let a = Csr::new(4, 4, vec![0, 2, 4, 5, 6], vec![0, 1, 2, 3, 0, 1], vec![1.0; 6]).unwrap();
+        let b = Csr::new(4, 4, vec![0, 1, 2, 4, 6], vec![0, 1, 2, 3, 0, 1], vec![1.0; 6]).unwrap();
+        assert_eq!(Fingerprint::of(&a), Fingerprint::of(&b));
+        let p = Planner::new(9.35, 16, 2);
+        let cuts_a = p.shard_cuts(&a, 2, false, 1.25);
+        // same m → a's cuts are row-boundary-valid for b too (benign
+        // collision: balance may differ, correctness cannot)
+        let cuts_b = p.shard_cuts(&b, 2, false, 1.25);
+        assert!(crate::shard::cuts_valid(&b, &cuts_b));
+        assert!(Arc::ptr_eq(&cuts_a, &cuts_b), "valid replay is allowed");
     }
 
     #[test]

@@ -1,0 +1,197 @@
+//! Shard-layout cache: parent [`Fingerprint`] → cached shard cuts.
+//!
+//! The cut search ([`crate::shard::cut::shard_cuts`]) costs `O(S log m)`
+//! binary searches plus an `O(m)` heavy-row scan in skew mode — cheap,
+//! but pure overhead when the same large matrix arrives repeatedly (the
+//! sharded-serving common case).  This cache keys the finished cut vector
+//! by the *parent* matrix's fingerprint plus the policy inputs, mirroring
+//! how [`super::PlanCache`] keys per-shard plans by the shard fingerprints
+//! one level down.
+//!
+//! Fingerprints are quantized, so two different matrices can collide; the
+//! consumer revalidates replayed cuts with
+//! [`crate::shard::cut::cuts_valid`].  Collisions are *benign* here: any
+//! strictly-increasing row-boundary vector ending at `m` shards any
+//! `m`-row matrix correctly — a collision can only cost balance, never
+//! correctness.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::fingerprint::Fingerprint;
+
+/// Cache key: the parent matrix plus every policy input that shapes cuts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ShardLayoutKey {
+    pub fingerprint: Fingerprint,
+    pub shards: usize,
+    pub skew_aware: bool,
+    /// imbalance bound in milli-units (`round(1000·bound)`): part of the
+    /// key because it moves the heavy-row threshold
+    pub max_imbalance_milli: u64,
+}
+
+impl ShardLayoutKey {
+    pub fn new(fingerprint: Fingerprint, shards: usize, skew_aware: bool, max_imbalance: f64) -> Self {
+        Self {
+            fingerprint,
+            shards,
+            skew_aware,
+            max_imbalance_milli: (max_imbalance * 1000.0).round() as u64,
+        }
+    }
+}
+
+/// Point-in-time layout-cache counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ShardLayoutStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub len: usize,
+}
+
+struct CachedLayout {
+    cuts: Arc<Vec<usize>>,
+    tick: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    map: HashMap<ShardLayoutKey, CachedLayout>,
+    /// tick → key, ascending = least recently used first
+    lru: BTreeMap<u64, ShardLayoutKey>,
+    tick: u64,
+}
+
+/// Thread-safe LRU cache of shard cut vectors.
+pub struct ShardLayoutCache {
+    capacity: usize,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ShardLayoutCache {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity: capacity.max(1),
+            inner: Mutex::new(Inner::default()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Look up a layout, refreshing recency on hit.
+    pub fn get(&self, key: &ShardLayoutKey) -> Option<Arc<Vec<usize>>> {
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        let tick = inner.tick + 1;
+        inner.tick = tick;
+        let found = match inner.map.get_mut(key) {
+            Some(entry) => {
+                let old = std::mem::replace(&mut entry.tick, tick);
+                let cuts = Arc::clone(&entry.cuts);
+                inner.lru.remove(&old);
+                inner.lru.insert(tick, *key);
+                Some(cuts)
+            }
+            None => None,
+        };
+        drop(guard);
+        if found.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        found
+    }
+
+    /// Insert or overwrite, evicting the least recently used when full.
+    pub fn insert(&self, key: ShardLayoutKey, cuts: Arc<Vec<usize>>) {
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        let tick = inner.tick + 1;
+        inner.tick = tick;
+        if let Some(entry) = inner.map.get_mut(&key) {
+            let old = std::mem::replace(&mut entry.tick, tick);
+            entry.cuts = cuts;
+            inner.lru.remove(&old);
+            inner.lru.insert(tick, key);
+            return;
+        }
+        if inner.map.len() >= self.capacity {
+            if let Some((_, victim)) = inner.lru.pop_first() {
+                inner.map.remove(&victim);
+            }
+        }
+        inner.map.insert(key, CachedLayout { cuts, tick });
+        inner.lru.insert(tick, key);
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> ShardLayoutStats {
+        ShardLayoutStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            len: self.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Csr;
+
+    fn key(seed: usize, shards: usize) -> ShardLayoutKey {
+        let a = Csr::random(100 + seed * 10, 100, 4.0, seed as u64 + 900);
+        ShardLayoutKey::new(Fingerprint::of(&a), shards, true, 1.25)
+    }
+
+    #[test]
+    fn hit_miss_and_arc_sharing() {
+        let c = ShardLayoutCache::new(8);
+        let k = key(1, 4);
+        assert!(c.get(&k).is_none());
+        let cuts = Arc::new(vec![0usize, 50, 110]);
+        c.insert(k, Arc::clone(&cuts));
+        let got = c.get(&k).unwrap();
+        assert!(Arc::ptr_eq(&got, &cuts), "cache must hand back the same Arc");
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.len), (1, 1, 1));
+    }
+
+    #[test]
+    fn policy_inputs_are_part_of_the_key() {
+        let a = Csr::random(200, 100, 4.0, 901);
+        let fp = Fingerprint::of(&a);
+        let c = ShardLayoutCache::new(8);
+        c.insert(ShardLayoutKey::new(fp, 4, true, 1.25), Arc::new(vec![0, 200]));
+        assert!(c.get(&ShardLayoutKey::new(fp, 8, true, 1.25)).is_none());
+        assert!(c.get(&ShardLayoutKey::new(fp, 4, false, 1.25)).is_none());
+        assert!(c.get(&ShardLayoutKey::new(fp, 4, true, 1.5)).is_none());
+        assert!(c.get(&ShardLayoutKey::new(fp, 4, true, 1.25)).is_some());
+    }
+
+    #[test]
+    fn lru_eviction() {
+        let c = ShardLayoutCache::new(2);
+        let (k1, k2, k3) = (key(1, 2), key(2, 2), key(3, 2));
+        c.insert(k1, Arc::new(vec![0, 110]));
+        c.insert(k2, Arc::new(vec![0, 120]));
+        let _ = c.get(&k1); // k2 becomes the victim
+        c.insert(k3, Arc::new(vec![0, 130]));
+        assert!(c.get(&k2).is_none());
+        assert!(c.get(&k1).is_some());
+        assert!(c.get(&k3).is_some());
+        assert_eq!(c.len(), 2);
+    }
+}

@@ -1,0 +1,353 @@
+//! Shard cut search: whole-row boundaries from merge-path coordinates.
+//!
+//! The paper balances *within* an executor by splitting the CSR merge path
+//! at equally-spaced diagonals (Fig. 2c).  Sharding applies the identical
+//! decomposition one level up: shard boundaries are the **row boundaries
+//! nearest those same diagonals** ([`nearest_row_cut`]), so every shard
+//! carries ~equal `rows + nnz` work while still owning whole rows (a shard
+//! must own whole rows so its output is a disjoint row range of `C`).
+//!
+//! The skew-aware mode applies the adaptive row-grouping observation
+//! (Oberhuber et al., arXiv:1203.5737; Shi et al., arXiv:2005.14469):
+//! rows too heavy for any balanced shard are isolated into singleton
+//! shards, and the gaps between them are cut with the same coordinate
+//! search restricted to the gap ([`row_cut_in_range`]).
+
+use crate::formats::Csr;
+use crate::loadbalance::mergepath::{nearest_row_cut, row_cut_in_range};
+use crate::loadbalance::Segment;
+
+/// Compute shard cuts: row boundaries `0 = c_0 < c_1 < … < c_S = m` with
+/// `S <= shards` (duplicate cuts collapse, so a matrix can yield fewer
+/// shards than requested — e.g. `shards > m`).  `max_imbalance` is the
+/// skew threshold: a row whose nonzeros alone exceed `max_imbalance ×
+/// nnz/shards` can never fit a balanced shard and is isolated when
+/// `skew_aware` is set.
+pub fn shard_cuts(a: &Csr, shards: usize, skew_aware: bool, max_imbalance: f64) -> Vec<usize> {
+    let p = shards.max(1);
+    if a.m == 0 {
+        return vec![0, 0];
+    }
+    if p == 1 {
+        return vec![0, a.m];
+    }
+    let heavy = if skew_aware {
+        heavy_rows(a, p, max_imbalance)
+    } else {
+        Vec::new()
+    };
+    if heavy.is_empty() {
+        balanced_cuts(a, p)
+    } else {
+        skewed_cuts(a, p, heavy)
+    }
+}
+
+/// Rows whose nonzeros alone blow the per-shard imbalance budget.
+pub fn heavy_rows(a: &Csr, shards: usize, max_imbalance: f64) -> Vec<usize> {
+    let nnz = a.nnz();
+    if nnz == 0 || shards <= 1 {
+        return Vec::new();
+    }
+    let cap = (nnz as f64 / shards as f64) * max_imbalance.max(1.0);
+    (0..a.m).filter(|&i| a.row_len(i) as f64 > cap).collect()
+}
+
+/// Equally-spaced merge-path diagonals, rounded to row boundaries.
+fn balanced_cuts(a: &Csr, p: usize) -> Vec<usize> {
+    let total = a.m + a.nnz();
+    let mut cuts = Vec::with_capacity(p + 1);
+    cuts.push(0usize);
+    for s in 1..p {
+        let r = nearest_row_cut(a, total * s / p);
+        if r > *cuts.last().unwrap() && r < a.m {
+            cuts.push(r);
+        }
+    }
+    cuts.push(a.m);
+    cuts
+}
+
+/// The maximal non-heavy row ranges between (and around) the heavy
+/// singletons.
+fn gaps_of(a: &Csr, heavy: &[usize]) -> Vec<(usize, usize)> {
+    let mut gaps: Vec<(usize, usize)> = Vec::with_capacity(heavy.len() + 1);
+    let mut pos = 0usize;
+    for &h in heavy {
+        if h > pos {
+            gaps.push((pos, h));
+        }
+        pos = h + 1;
+    }
+    if pos < a.m {
+        gaps.push((pos, a.m));
+    }
+    gaps
+}
+
+/// Skew-aware cuts: heavy rows become singleton shards; the remaining
+/// shard quota is spread over the gaps between them in proportion to each
+/// gap's `rows + nnz` work, each gap cut by the range-restricted
+/// coordinate search.  Isolating `H` rows costs `H` singleton shards plus
+/// at least one shard per non-empty gap, so when that minimum exceeds the
+/// budget `p` the *lightest* heavy rows lose their isolation first
+/// (falling back to fully balanced cuts if none fit) — the `S ≤ shards`
+/// contract holds unconditionally.
+fn skewed_cuts(a: &Csr, p: usize, mut heavy: Vec<usize>) -> Vec<usize> {
+    let gaps = loop {
+        if heavy.is_empty() {
+            return balanced_cuts(a, p);
+        }
+        let gaps = gaps_of(a, &heavy);
+        if heavy.len() + gaps.len() <= p {
+            break gaps;
+        }
+        let lightest = heavy
+            .iter()
+            .enumerate()
+            .min_by_key(|&(_, &h)| (a.row_len(h), h))
+            .map(|(i, _)| i)
+            .expect("heavy is non-empty");
+        heavy.remove(lightest);
+    };
+    let gap_work = |&(lo, hi): &(usize, usize)| (hi - lo) + (a.row_ptr[hi] - a.row_ptr[lo]);
+    let total_work: usize = gaps.iter().map(gap_work).sum();
+    // Work-proportional gap quotas, clamped so every gap gets ≥ 1 and the
+    // total never exceeds `p - heavy` (rounding alone could overshoot).
+    let quota = p - heavy.len(); // ≥ gaps.len() by the trimming loop
+    let mut remaining = quota;
+    let mut parts_per_gap = Vec::with_capacity(gaps.len());
+    for (idx, g) in gaps.iter().enumerate() {
+        let gaps_left = gaps.len() - idx - 1;
+        let prop = if total_work == 0 {
+            1
+        } else {
+            (quota * gap_work(g) + total_work / 2) / total_work
+        };
+        let parts = prop.clamp(1, remaining - gaps_left);
+        remaining -= parts;
+        parts_per_gap.push(parts);
+    }
+
+    let mut cuts = vec![0usize];
+    let mut gi = 0usize;
+    let push = |r: usize, cuts: &mut Vec<usize>| {
+        if r > *cuts.last().unwrap() {
+            cuts.push(r);
+        }
+    };
+    let mut pos = 0usize;
+    for &h in &heavy {
+        if h > pos {
+            cut_gap(a, pos, h, parts_per_gap[gi], &mut cuts);
+            gi += 1;
+        }
+        push(h, &mut cuts); // heavy row starts its own shard…
+        push(h + 1, &mut cuts); // …and ends it
+        pos = h + 1;
+    }
+    if pos < a.m {
+        cut_gap(a, pos, a.m, parts_per_gap[gi], &mut cuts);
+    }
+    push(a.m, &mut cuts);
+    debug_assert!(cuts.len() - 1 <= p, "skewed cuts exceeded the budget");
+    cuts
+}
+
+/// Cut rows `[lo, hi)` into up to `parts` shards with the range-restricted
+/// merge-coordinate search; appends the interior cuts and the end `hi`.
+fn cut_gap(a: &Csr, lo: usize, hi: usize, parts: usize, cuts: &mut Vec<usize>) {
+    let span = (hi - lo) + (a.row_ptr[hi] - a.row_ptr[lo]);
+    for s in 1..parts {
+        let r = row_cut_in_range(a, lo, hi, span * s / parts);
+        if r > *cuts.last().unwrap() && r < hi {
+            cuts.push(r);
+        }
+    }
+    if hi > *cuts.last().unwrap() {
+        cuts.push(hi);
+    }
+}
+
+/// Max/mean nonzero imbalance across the shards described by `cuts`
+/// (1.0 = perfectly balanced; 1.0 for empty matrices by convention).
+pub fn imbalance(a: &Csr, cuts: &[usize]) -> f64 {
+    let shards = cuts.len().saturating_sub(1);
+    let nnz = a.nnz();
+    if shards == 0 || nnz == 0 {
+        return 1.0;
+    }
+    let max = cuts
+        .windows(2)
+        .map(|w| a.row_ptr[w[1]] - a.row_ptr[w[0]])
+        .max()
+        .unwrap_or(0);
+    max as f64 / (nnz as f64 / shards as f64)
+}
+
+/// Validate a (possibly cache-replayed) cut vector against a concrete
+/// matrix: strictly increasing row boundaries from 0 to `m`.  Any vector
+/// passing this check yields a *correct* sharding of any `m`-row matrix —
+/// fingerprint collisions can only degrade balance, never correctness.
+pub fn cuts_valid(a: &Csr, cuts: &[usize]) -> bool {
+    cuts.len() >= 2
+        && cuts[0] == 0
+        && *cuts.last().unwrap() == a.m
+        && cuts.windows(2).all(|w| w[0] < w[1] || (a.m == 0 && w[0] == w[1]))
+}
+
+/// Rebase per-shard partitions into one partition of the parent matrix:
+/// shard `i`'s segments shift by its row offset `cuts[i]` and nonzero
+/// offset `row_ptr[cuts[i]]`.  Because shard cuts sit on row boundaries,
+/// the concatenation satisfies [`crate::loadbalance::validate_segments`]
+/// for the parent — and running the unsharded executor over it reproduces
+/// the gathered shard outputs **bitwise** (each row sees the identical
+/// nonzero spans in the identical order), which is how the property tests
+/// pin the scatter-gather path to the unsharded executor exactly.
+pub fn concat_partitions(a: &Csr, cuts: &[usize], shard_segs: &[Vec<Segment>]) -> Vec<Segment> {
+    assert_eq!(cuts.len(), shard_segs.len() + 1, "one segment list per shard");
+    let mut out = Vec::with_capacity(shard_segs.iter().map(Vec::len).sum());
+    for (i, segs) in shard_segs.iter().enumerate() {
+        let (r0, z0) = (cuts[i], a.row_ptr[cuts[i]]);
+        for s in segs {
+            out.push(Segment {
+                row_start: s.row_start + r0,
+                row_end: s.row_end + r0,
+                nz_start: s.nz_start + z0,
+                nz_end: s.nz_end + z0,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loadbalance::validate_segments;
+
+    #[test]
+    fn balanced_cuts_tile_and_balance() {
+        let a = Csr::random(600, 400, 6.0, 121);
+        for p in [2usize, 3, 5, 8] {
+            let cuts = shard_cuts(&a, p, false, 1.25);
+            assert!(cuts_valid(&a, &cuts), "p={p}: {cuts:?}");
+            assert!(cuts.len() - 1 <= p);
+            // diagonal-space deviation per shard is bounded by one row's
+            // work (the rounding to a row boundary) around total/p
+            let total = a.m + a.nnz();
+            let per = total as f64 / p as f64;
+            let slack = (a.max_row_length() + 1) as f64;
+            for w in cuts.windows(2) {
+                let work = (w[1] - w[0]) + (a.row_ptr[w[1]] - a.row_ptr[w[0]]);
+                assert!(
+                    (work as f64) <= per + 2.0 * slack,
+                    "p={p}: shard work {work} vs per {per}"
+                );
+            }
+            assert!(imbalance(&a, &cuts) <= 1.25, "p={p}: {}", imbalance(&a, &cuts));
+        }
+    }
+
+    #[test]
+    fn more_shards_than_rows_collapses() {
+        let a = Csr::random(5, 20, 3.0, 122);
+        let cuts = shard_cuts(&a, 64, false, 1.25);
+        assert!(cuts_valid(&a, &cuts));
+        assert!(cuts.len() - 1 <= 5, "at most one shard per row");
+    }
+
+    #[test]
+    fn single_shard_and_empty_matrix() {
+        let a = Csr::random(50, 50, 4.0, 123);
+        assert_eq!(shard_cuts(&a, 1, true, 1.25), vec![0, 50]);
+        let e = Csr::empty(0, 10);
+        assert_eq!(shard_cuts(&e, 4, true, 1.25), vec![0, 0]);
+        assert_eq!(imbalance(&e, &[0, 0]), 1.0);
+    }
+
+    #[test]
+    fn skew_mode_isolates_the_heavy_row() {
+        // one 4096-nonzero row inside 1k light rows (d ≈ 4): any balanced
+        // 4-shard split blows the bound, so the heavy row must stand alone
+        let m = 1000usize;
+        let mut row_ptr = vec![0usize];
+        let mut cols: Vec<u32> = Vec::new();
+        for i in 0..m {
+            if i == 500 {
+                cols.extend(0..4096u32);
+            } else {
+                cols.extend([0u32, 1, 2, 3]);
+            }
+            row_ptr.push(cols.len());
+        }
+        let vals = vec![1.0f32; cols.len()];
+        let a = Csr::new(m, 4096, row_ptr, cols, vals).unwrap();
+
+        let heavy = heavy_rows(&a, 4, 1.25);
+        assert_eq!(heavy, vec![500]);
+        let cuts = shard_cuts(&a, 4, true, 1.25);
+        assert!(cuts_valid(&a, &cuts));
+        assert!(
+            cuts.contains(&500) && cuts.contains(&501),
+            "heavy row must be a singleton shard: {cuts:?}"
+        );
+        // without skew awareness the bound is unreachable here
+        let flat = shard_cuts(&a, 4, false, 1.25);
+        assert!(imbalance(&a, &flat) > 1.25);
+    }
+
+    #[test]
+    fn skew_mode_heavy_rows_at_edges() {
+        // heavy first and last rows: gaps shrink to the middle only
+        let mut row_ptr = vec![0usize];
+        let mut cols: Vec<u32> = Vec::new();
+        for i in 0..10usize {
+            let len = if i == 0 || i == 9 { 512 } else { 2 };
+            cols.extend((0..len as u32).map(|c| c % 600));
+            row_ptr.push(cols.len());
+        }
+        // distinct sorted not required by Csr::new beyond range checks
+        let a = Csr::new(10, 600, row_ptr, cols.clone(), vec![1.0; cols.len()]).unwrap();
+        let cuts = shard_cuts(&a, 4, true, 1.25);
+        assert!(cuts_valid(&a, &cuts));
+        assert_eq!(cuts[1], 1, "leading heavy row isolated");
+        assert_eq!(cuts[cuts.len() - 2], 9, "trailing heavy row isolated");
+    }
+
+    #[test]
+    fn all_empty_rows_still_cut() {
+        let a = Csr::empty(1000, 8);
+        let cuts = shard_cuts(&a, 4, true, 1.25);
+        assert!(cuts_valid(&a, &cuts));
+        assert!(cuts.len() - 1 >= 2, "empty-row work still spreads: {cuts:?}");
+        assert_eq!(imbalance(&a, &cuts), 1.0);
+    }
+
+    #[test]
+    fn concat_partitions_validates_on_parent() {
+        let a = Csr::random(300, 200, 5.0, 124);
+        let cuts = shard_cuts(&a, 3, true, 1.25);
+        let shard_segs: Vec<Vec<Segment>> = cuts
+            .windows(2)
+            .map(|w| {
+                let v = a.shard_view(w[0], w[1]);
+                crate::exec::partition(&v, crate::spmm::Algorithm::MergeBased, 4)
+            })
+            .collect();
+        let merged = concat_partitions(&a, &cuts, &shard_segs);
+        validate_segments(&a, &merged).unwrap();
+        assert_eq!(merged.last().unwrap().nz_end, a.nnz());
+    }
+
+    #[test]
+    fn cuts_valid_rejects_malformed() {
+        let a = Csr::random(10, 10, 2.0, 125);
+        assert!(!cuts_valid(&a, &[0]));
+        assert!(!cuts_valid(&a, &[0, 5, 5, 10]));
+        assert!(!cuts_valid(&a, &[0, 11]));
+        assert!(!cuts_valid(&a, &[1, 10]));
+        assert!(cuts_valid(&a, &[0, 10]));
+        assert!(cuts_valid(&a, &[0, 3, 10]));
+    }
+}

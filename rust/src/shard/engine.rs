@@ -1,0 +1,555 @@
+//! Scatter-gather execution of one request across multiple engines.
+//!
+//! A [`ShardedEngine`] owns `E` long-lived *engine threads*, each with its
+//! own warm [`WorkerPool`] (via [`Executor`]) and reusable
+//! [`ExecCtx`] — the same per-engine resources
+//! [`crate::coordinator::Server`] gives its workers — all drawing output
+//! leases from one shared [`BufferPool`] and planning through one shared
+//! [`Planner`].  One request flows as:
+//!
+//! 1. **Scatter** (caller thread): cut the matrix ([`Planner::shard_cuts`]
+//!    — cached by parent fingerprint), take zero-copy
+//!    [`Csr::shard_view`]s, plan each shard independently (per-shard
+//!    fingerprints), lease **one** `m×n` [`OutputBuf`], and send each
+//!    shard round-robin to a distinct engine thread.
+//! 2. **Execute** (engine threads, concurrently): replay or compute the
+//!    shard's phase-1 partition and run the planned executor *into the
+//!    shard's disjoint row range* of the shared output.  Disjointness is
+//!    structural: cuts are strictly increasing row boundaries, so the
+//!    windows `[cuts[i]·n, cuts[i+1]·n)` never overlap.
+//! 3. **Gather**: the last shard to finish (atomic countdown) assembles
+//!    the [`SpmmResult`] around the one buffer lease and replies.  No
+//!    copy, no reduction — row ranges compose by construction.
+//!
+//! The sharded path is CPU-only (shards carry no AOT bucket) and never
+//! A/B-probes; the tuner keeps learning from unsharded traffic.
+
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::engine::{ExecutionPath, SpmmResult};
+use crate::coordinator::Metrics;
+use crate::exec::{BufferPool, ExecCtx, Executor, OutputBuf, SendPtr};
+use crate::formats::Csr;
+use crate::plan::{PlanOutcome, Planner};
+use crate::spmm::{self, Algorithm};
+
+use super::{cut, ShardPolicy};
+
+/// Shared per-request gather state: the single output lease, the raw base
+/// pointer shards write through, and the completion countdown.
+struct GatherState {
+    /// the one `m×n` lease; taken by the finishing shard (or dropped back
+    /// to the pool on error)
+    out: Mutex<Option<OutputBuf>>,
+    /// base pointer into `out`'s allocation.  Safety contract: each shard
+    /// writes only `[row_start·n, row_end·n)`, ranges are pairwise
+    /// disjoint (strictly increasing cuts), and the lease lives in `out`
+    /// until `remaining` hits zero.
+    base: SendPtr<f32>,
+    n: usize,
+    shards: usize,
+    remaining: AtomicUsize,
+    cache_hits: AtomicUsize,
+    rowsplit_shards: AtomicUsize,
+    /// first per-shard failure (a panicking executor is caught, not
+    /// propagated, so the gather always completes)
+    error: Mutex<Option<String>>,
+    reply: Mutex<Option<Sender<Result<SpmmResult>>>>,
+    t0: Instant,
+    metrics: Arc<Metrics>,
+}
+
+/// One shard's work order.
+struct ShardTask {
+    /// zero-copy row-range view — a real [`Csr`]
+    shard: Csr,
+    /// parent row offset (start of this shard's output window)
+    row_start: usize,
+    b: Arc<Vec<f32>>,
+    outcome: PlanOutcome,
+    gather: Arc<GatherState>,
+}
+
+/// Multi-engine scatter-gather executor for sharded requests.
+pub struct ShardedEngine {
+    planner: Arc<Planner>,
+    buffers: Arc<BufferPool>,
+    metrics: Arc<Metrics>,
+    policy: ShardPolicy,
+    /// per-engine executors (kept for pool/job gauges; the engine threads
+    /// hold clones)
+    execs: Vec<Arc<Executor>>,
+    senders: Vec<Sender<ShardTask>>,
+    /// shards executed per engine (the "ran across ≥ N engines" evidence)
+    shard_counts: Vec<Arc<AtomicU64>>,
+    /// rotates the round-robin origin so consecutive requests spread
+    next_engine: AtomicUsize,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ShardedEngine {
+    /// Spawn `engines` engine threads (each a warm pool of `cpu_workers`
+    /// threads) over shared planning/buffer/metrics state.  All thread
+    /// creation happens here, never per request.
+    pub fn new(
+        engines: usize,
+        cpu_workers: usize,
+        policy: ShardPolicy,
+        planner: Arc<Planner>,
+        buffers: Arc<BufferPool>,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        let engines = engines.max(1);
+        let mut execs = Vec::with_capacity(engines);
+        let mut senders = Vec::with_capacity(engines);
+        let mut shard_counts = Vec::with_capacity(engines);
+        let mut handles = Vec::with_capacity(engines);
+        for e in 0..engines {
+            let (tx, rx) = channel::<ShardTask>();
+            let exec = Arc::new(Executor::with_buffers(cpu_workers, Arc::clone(&buffers)));
+            let count = Arc::new(AtomicU64::new(0));
+            let (worker_exec, worker_count) = (Arc::clone(&exec), Arc::clone(&count));
+            let worker_planner = Arc::clone(&planner);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("spmm-shard-{e}"))
+                    .spawn(move || engine_loop(rx, worker_planner, worker_exec, worker_count))
+                    .expect("spawn shard engine"),
+            );
+            execs.push(exec);
+            senders.push(tx);
+            shard_counts.push(count);
+        }
+        Self {
+            planner,
+            buffers,
+            metrics,
+            policy,
+            execs,
+            senders,
+            shard_counts,
+            next_engine: AtomicUsize::new(0),
+            handles,
+        }
+    }
+
+    /// Self-contained CPU-only engine (tests, examples): fresh planner,
+    /// buffer pool, and metrics.
+    pub fn cpu_only(policy: ShardPolicy, engines: usize, cpu_workers: usize) -> Self {
+        Self::new(
+            engines,
+            cpu_workers,
+            policy,
+            Arc::new(Planner::new(spmm::DEFAULT_THRESHOLD, 1024, cpu_workers)),
+            Arc::new(BufferPool::new()),
+            Arc::new(Metrics::new()),
+        )
+    }
+
+    pub fn engines(&self) -> usize {
+        self.execs.len()
+    }
+
+    pub fn planner(&self) -> &Arc<Planner> {
+        &self.planner
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    pub fn policy(&self) -> &ShardPolicy {
+        &self.policy
+    }
+
+    /// Shards executed by each engine thread since construction.
+    pub fn shards_per_engine(&self) -> Vec<u64> {
+        self.shard_counts.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Pool jobs dispatched by each engine's executor (broadcast jobs
+    /// only; single-segment shards run inline and are not counted).
+    pub fn engine_jobs(&self) -> Vec<u64> {
+        self.execs.iter().map(|e| e.pool().jobs()).collect()
+    }
+
+    /// Aggregate executor stats across every engine thread (exported as
+    /// the pool/buffer gauges while the sharded path is active).
+    fn exec_stats(&self) -> crate::exec::ExecStats {
+        let (mut workers, mut parked, mut jobs) = (0usize, 0usize, 0u64);
+        for e in &self.execs {
+            let s = e.stats();
+            workers += s.workers;
+            parked += s.parked;
+            jobs += s.jobs;
+        }
+        crate::exec::ExecStats {
+            workers,
+            parked,
+            jobs,
+            buffers: self.buffers.stats(),
+        }
+    }
+
+    /// Submit a request whose reply goes to an existing channel — the
+    /// router hands its per-request reply sender straight in, so the
+    /// sharded path plugs into [`crate::coordinator::Server`] without an
+    /// extra hop.  Scatter (cut + views + per-shard planning) runs on the
+    /// calling thread and is cheap; execution is concurrent.
+    pub fn submit_to(
+        &self,
+        a: &Arc<Csr>,
+        b: &Arc<Vec<f32>>,
+        n: usize,
+        reply: Sender<Result<SpmmResult>>,
+    ) {
+        if let Err(e) = self.scatter(a, b, n, reply.clone()) {
+            self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+            let _ = reply.send(Err(e));
+        }
+    }
+
+    /// Submit a request; the reply arrives on the returned receiver when
+    /// the last shard lands.
+    pub fn submit(&self, a: &Arc<Csr>, b: &Arc<Vec<f32>>, n: usize) -> Receiver<Result<SpmmResult>> {
+        let (tx, rx) = channel();
+        self.submit_to(a, b, n, tx);
+        rx
+    }
+
+    /// Submit and wait.
+    pub fn spmm(&self, a: &Arc<Csr>, b: &Arc<Vec<f32>>, n: usize) -> Result<SpmmResult> {
+        self.submit(a, b, n)
+            .recv()
+            .map_err(|e| anyhow!("sharded engine shut down: {e}"))?
+    }
+
+    fn scatter(
+        &self,
+        a: &Arc<Csr>,
+        b: &Arc<Vec<f32>>,
+        n: usize,
+        reply: Sender<Result<SpmmResult>>,
+    ) -> Result<()> {
+        // count the request before validation so `requests ≥ completed +
+        // errors` holds on the sharded path exactly as on the unsharded one
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        if b.len() != a.k * n {
+            return Err(anyhow!("B must be k×n row-major ({}×{n})", a.k));
+        }
+        let engines = self.execs.len();
+        let want = self.policy.shard_count(a, engines);
+        let cuts = self.planner.shard_cuts(
+            a,
+            want,
+            self.policy.skew_aware,
+            self.policy.max_imbalance,
+        );
+        let shards = cuts.len() - 1;
+        self.metrics.sharded.fetch_add(1, Ordering::Relaxed);
+        self.metrics.shards_executed.fetch_add(shards as u64, Ordering::Relaxed);
+        self.metrics.sync_shard_gauges(shards, cut::imbalance(a, &cuts));
+
+        let mut out = BufferPool::acquire(&self.buffers, a.m * n);
+        self.metrics
+            .sync_exec_gauges(&self.exec_stats(), &self.planner.partition_stats());
+        let base = SendPtr(out.as_mut_ptr());
+        let gather = Arc::new(GatherState {
+            out: Mutex::new(Some(out)),
+            base,
+            n,
+            shards,
+            remaining: AtomicUsize::new(shards),
+            cache_hits: AtomicUsize::new(0),
+            rowsplit_shards: AtomicUsize::new(0),
+            error: Mutex::new(None),
+            reply: Mutex::new(Some(reply)),
+            t0: Instant::now(),
+            metrics: Arc::clone(&self.metrics),
+        });
+
+        // Per-shard planning on the shared planner: each zero-copy view
+        // fingerprints independently, so a mixed matrix runs row-split on
+        // dense shards and merge on sparse ones, and repeats replay both
+        // the plan and the stored phase-1 partition.
+        let origin = self.next_engine.fetch_add(1, Ordering::Relaxed);
+        for s in 0..shards {
+            let shard = a.shard_view(cuts[s], cuts[s + 1]);
+            let outcome = self.planner.plan(&shard, None);
+            let counter = if outcome.cache_hit {
+                &self.metrics.plan_hits
+            } else {
+                &self.metrics.plan_misses
+            };
+            counter.fetch_add(1, Ordering::Relaxed);
+            let task = ShardTask {
+                shard,
+                row_start: cuts[s],
+                b: Arc::clone(b),
+                outcome,
+                gather: Arc::clone(&gather),
+            };
+            // Round-robin over engine threads: the shards of one request
+            // land on distinct (idle) engines whenever shards ≤ engines.
+            self.senders[(origin + s) % engines]
+                .send(task)
+                .map_err(|_| anyhow!("shard engine thread terminated"))?;
+        }
+        self.metrics
+            .sync_plan_gauges(&self.planner.cache().stats(), self.planner.tuner().threshold());
+        Ok(())
+    }
+}
+
+impl Drop for ShardedEngine {
+    fn drop(&mut self) {
+        self.senders.clear(); // closes the channels; engine threads exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One engine thread: execute shard tasks until the channel closes.
+fn engine_loop(
+    rx: Receiver<ShardTask>,
+    planner: Arc<Planner>,
+    exec: Arc<Executor>,
+    count: Arc<AtomicU64>,
+) {
+    let mut ctx = exec.make_ctx();
+    while let Ok(task) = rx.recv() {
+        count.fetch_add(1, Ordering::Relaxed);
+        run_shard(&planner, &mut ctx, task);
+    }
+}
+
+/// Execute one shard into its disjoint window of the gathered output.
+fn run_shard(planner: &Planner, ctx: &mut ExecCtx, task: ShardTask) {
+    let gather = Arc::clone(&task.gather);
+    let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+        let n = gather.n;
+        let len = task.shard.m * n;
+        // Safety: the cuts are strictly increasing row boundaries, so the
+        // window [row_start·n, row_start·n + len) is in-bounds and
+        // pairwise disjoint from every other shard's; the allocation
+        // outlives this write because `gather.out` holds the lease until
+        // `remaining` reaches zero (below), and the countdown's AcqRel
+        // ordering publishes the writes to the finishing thread.
+        let c = unsafe { std::slice::from_raw_parts_mut(gather.base.0.add(task.row_start * n), len) };
+        if task.shard.nnz() == 0 {
+            // all-empty shard: nothing to plan or partition, just zero the
+            // rows (both executors' overwrite contract, degenerate case)
+            c.fill(0.0);
+        } else {
+            let segs = planner.partition_for(&task.shard, &task.outcome);
+            match task.outcome.plan.algorithm {
+                Algorithm::RowSplit => {
+                    spmm::rowsplit_spmm_into(&task.shard, &task.b, n, &segs, ctx, c)
+                }
+                Algorithm::MergeBased => {
+                    spmm::merge_spmm_into(&task.shard, &task.b, n, &segs, ctx, c)
+                }
+            }
+        }
+        task.outcome.plan.algorithm
+    }));
+    match result {
+        Ok(algorithm) => {
+            if algorithm == Algorithm::RowSplit {
+                gather.rowsplit_shards.fetch_add(1, Ordering::Relaxed);
+            }
+            if task.outcome.cache_hit {
+                gather.cache_hits.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        Err(payload) => {
+            // keep the actual panic message so the client error names the
+            // cause, not just the location
+            let cause = payload
+                .downcast_ref::<&str>()
+                .map(|s| (*s).to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".into());
+            let mut err = gather.error.lock().unwrap();
+            if err.is_none() {
+                *err = Some(format!(
+                    "shard at row {} ({} rows) panicked during execution: {cause}",
+                    task.row_start, task.shard.m
+                ));
+            }
+        }
+    }
+    if gather.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+        finish(&gather);
+    }
+}
+
+/// Last shard out: assemble the reply around the single buffer lease.
+fn finish(gather: &GatherState) {
+    let out = gather.out.lock().unwrap().take().expect("gather buffer present");
+    let reply = gather.reply.lock().unwrap().take().expect("reply slot present");
+    let error = gather.error.lock().unwrap().take();
+    let latency = gather.t0.elapsed().as_secs_f64();
+    let metrics = &gather.metrics;
+    metrics.record_latency(latency);
+    match error {
+        Some(e) => {
+            metrics.errors.fetch_add(1, Ordering::Relaxed);
+            drop(out); // lease returns to the pool
+            let _ = reply.send(Err(anyhow!(e)));
+        }
+        None => {
+            metrics.completed.fetch_add(1, Ordering::Relaxed);
+            metrics.cpu_fallback.fetch_add(1, Ordering::Relaxed);
+            // report the algorithm that carried the majority of shards
+            let rowsplit = gather.rowsplit_shards.load(Ordering::Relaxed);
+            let algorithm = if 2 * rowsplit >= gather.shards {
+                Algorithm::RowSplit
+            } else {
+                Algorithm::MergeBased
+            };
+            match algorithm {
+                Algorithm::RowSplit => &metrics.rowsplit,
+                Algorithm::MergeBased => &metrics.merge,
+            }
+            .fetch_add(1, Ordering::Relaxed);
+            let cache_hit = gather.cache_hits.load(Ordering::Relaxed) == gather.shards;
+            let _ = reply.send(Ok(SpmmResult {
+                c: out,
+                algorithm,
+                path: ExecutionPath::CpuFallback,
+                bucket: None,
+                cache_hit,
+                latency_s: latency,
+                shards: gather.shards,
+            }));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::spmm::spmm_reference;
+
+    fn assert_close(a: &[f32], b: &[f32]) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()), "idx {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn sharded_matches_reference() {
+        let eng = ShardedEngine::cpu_only(ShardPolicy::fixed(4), 4, 2);
+        let a = Arc::new(Csr::random(800, 600, 6.0, 141));
+        let b = Arc::new(gen::dense_matrix(600, 16, 142));
+        let r = eng.spmm(&a, &b, 16).unwrap();
+        assert_eq!(r.path, ExecutionPath::CpuFallback);
+        assert!(r.shards >= 2, "shards = {}", r.shards);
+        assert_close(&r.c, &spmm_reference(&a, &b, 16));
+        let snap = eng.metrics().snapshot();
+        assert_eq!(snap.completed, 1);
+        assert_eq!(snap.sharded, 1);
+        assert_eq!(snap.shards_executed, r.shards as u64);
+        assert_eq!(snap.shard_count_last, r.shards as u64);
+    }
+
+    #[test]
+    fn shards_spread_across_engines() {
+        let eng = ShardedEngine::cpu_only(ShardPolicy::fixed(4), 4, 1);
+        let a = Arc::new(Csr::random(2000, 500, 5.0, 143));
+        let b = Arc::new(gen::dense_matrix(500, 8, 144));
+        let r = eng.spmm(&a, &b, 8).unwrap();
+        assert_eq!(r.shards, 4);
+        let per_engine = eng.shards_per_engine();
+        let busy = per_engine.iter().filter(|&&c| c > 0).count();
+        assert!(busy >= 2, "one request must engage ≥ 2 engines: {per_engine:?}");
+        // round-robin over 4 engines with 4 shards touches all of them
+        assert_eq!(busy, 4, "{per_engine:?}");
+    }
+
+    #[test]
+    fn steady_state_reuses_the_one_output_lease() {
+        let eng = ShardedEngine::cpu_only(ShardPolicy::fixed(3), 3, 1);
+        let a = Arc::new(Csr::random(900, 300, 4.0, 145));
+        let b = Arc::new(gen::dense_matrix(300, 8, 146));
+        let want = spmm_reference(&a, &b, 8);
+        let first = eng.spmm(&a, &b, 8).unwrap();
+        let ptr = first.c.as_ptr();
+        assert_close(&first.c, &want);
+        drop(first);
+        for _ in 0..5 {
+            let r = eng.spmm(&a, &b, 8).unwrap();
+            assert!(r.cache_hit, "per-shard plans must replay");
+            assert_eq!(r.c.as_ptr(), ptr, "one allocation, reused every request");
+            assert_close(&r.c, &want);
+            drop(r);
+        }
+        let snap = eng.metrics().snapshot();
+        assert_eq!(snap.buffers_allocated, 1);
+        assert!(snap.buffer_reuses >= 5);
+    }
+
+    #[test]
+    fn mixed_matrix_plans_shards_independently() {
+        // top half dense rows (d = 24 → row-split), bottom half sparse
+        // (d = 2 → merge): per-shard fingerprints must split the decision
+        let m = 1200usize;
+        let mut row_ptr = vec![0usize];
+        let mut cols: Vec<u32> = Vec::new();
+        for i in 0..m {
+            let len = if i < m / 2 { 24 } else { 2 };
+            cols.extend((0..len as u32).map(|c| (c * 7 + i as u32) % 800));
+            row_ptr.push(cols.len());
+        }
+        let vals = vec![1.0f32; cols.len()];
+        let a = Arc::new(Csr::new(m, 800, row_ptr, cols, vals).unwrap());
+        let b = Arc::new(gen::dense_matrix(800, 8, 147));
+
+        let eng = ShardedEngine::cpu_only(ShardPolicy::fixed(2), 2, 2);
+        let cuts = eng.planner().shard_cuts(&a, 2, true, 1.25);
+        let top = eng.planner().plan(&a.shard_view(cuts[0], cuts[1]), None);
+        let bottom = eng.planner().plan(&a.shard_view(cuts[1], cuts[2]), None);
+        assert_eq!(top.plan.algorithm, Algorithm::RowSplit);
+        assert_eq!(bottom.plan.algorithm, Algorithm::MergeBased);
+        let r = eng.spmm(&a, &b, 8).unwrap();
+        assert_close(&r.c, &spmm_reference(&a, &b, 8));
+    }
+
+    #[test]
+    fn bad_b_is_an_error_and_counted() {
+        let eng = ShardedEngine::cpu_only(ShardPolicy::fixed(2), 2, 1);
+        let a = Arc::new(Csr::random(100, 100, 3.0, 148));
+        let b = Arc::new(vec![0.0f32; 7]);
+        assert!(eng.spmm(&a, &b, 8).is_err());
+        assert_eq!(eng.metrics().snapshot().errors, 1);
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        let eng = ShardedEngine::cpu_only(ShardPolicy::fixed(3), 3, 1);
+        // empty matrix
+        let a = Arc::new(Csr::empty(60, 40));
+        let b = Arc::new(gen::dense_matrix(40, 4, 149));
+        let r = eng.spmm(&a, &b, 4).unwrap();
+        assert_eq!(r.c.len(), 240);
+        assert!(r.c.iter().all(|&x| x == 0.0));
+        // n = 0
+        let a2 = Arc::new(Csr::random(50, 40, 3.0, 150));
+        let r2 = eng.spmm(&a2, &Arc::new(Vec::new()), 0).unwrap();
+        assert!(r2.c.is_empty());
+        // zero rows
+        let a3 = Arc::new(Csr::empty(0, 40));
+        let r3 = eng.spmm(&a3, &b, 4).unwrap();
+        assert!(r3.c.is_empty());
+    }
+}

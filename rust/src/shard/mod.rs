@@ -1,0 +1,154 @@
+//! Sharded SpMM: nnz-balanced matrix sharding, per-shard planning, and
+//! scatter-gather execution across engines.
+//!
+//! The paper's merge-based load balancing equalizes `rows + nnz` work
+//! *inside* one executor; nothing in the stack below this module lets one
+//! request engage more than one engine's pool.  This subsystem extends the
+//! same decomposition one level up:
+//!
+//! 1. **Cut** ([`cut`]) — the matrix is split into row-range shards at the
+//!    row boundaries nearest equally-spaced merge-path diagonals
+//!    ([`crate::loadbalance::mergepath::nearest_row_cut`]), so shards
+//!    carry ~equal `rows + nnz`.  A skew-aware mode isolates rows too
+//!    heavy for any balanced shard into singleton shards (the adaptive
+//!    row-grouping idea) and cuts the gaps between them with the same
+//!    search restricted to the gap.
+//! 2. **View** — each shard is a zero-copy [`Csr::shard_view`]: a rebased
+//!    `row_ptr` over shared `col_idx`/`vals` windows.  Because a view is a
+//!    real [`Csr`], the whole plan/exec stack applies unchanged.
+//! 3. **Plan** — every shard is planned independently through the shared
+//!    [`crate::plan::Planner`] (per-shard [`crate::plan::Fingerprint`]s),
+//!    so a mixed matrix runs row-split on its dense shards and merge on
+//!    its sparse ones.  Shard layouts themselves are cached by *parent*
+//!    fingerprint ([`crate::plan::ShardLayoutCache`]).
+//! 4. **Execute** ([`engine`]) — a [`ShardedEngine`] dispatches the
+//!    shards of one request round-robin across its engine threads (each
+//!    with its own warm [`crate::exec::WorkerPool`]) and scatter-gathers
+//!    into **one** [`crate::exec::OutputBuf`] lease through disjoint
+//!    row-range writes; the last shard to finish assembles the reply.
+//!
+//! Exactness: shard cuts sit on row boundaries, so each output row is
+//! produced by exactly one shard from exactly the nonzero spans the
+//! unsharded executor would read — gathering per-shard results is
+//! bitwise-identical to running the unsharded executor over the
+//! concatenated partition ([`cut::concat_partitions`]; property-tested in
+//! `rust/tests/shard_props.rs`).
+
+pub mod cut;
+pub mod engine;
+
+pub use cut::{concat_partitions, cuts_valid, imbalance, shard_cuts};
+pub use engine::ShardedEngine;
+
+use crate::formats::Csr;
+
+/// How many shards a request should become.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShardMode {
+    /// never shard (every request runs on one engine) — the default
+    #[default]
+    Off,
+    /// always cut into (up to) this many shards
+    Fixed(usize),
+    /// shard large requests across idle engines: `min(engines, work /
+    /// min_shard_work)` shards, so small matrices keep the single-engine
+    /// fast path
+    Auto,
+}
+
+/// Sharding policy knobs ([`crate::coordinator::EngineConfig::shard`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardPolicy {
+    pub mode: ShardMode,
+    /// isolate ultra-heavy rows into singleton shards
+    pub skew_aware: bool,
+    /// target bound on per-shard max/mean nnz in balanced mode; also the
+    /// skew threshold — a row heavier than `max_imbalance × nnz/shards`
+    /// can never fit a balanced shard and gets isolated
+    pub max_imbalance: f64,
+    /// minimum `rows + nnz` work per shard in [`ShardMode::Auto`]
+    pub min_shard_work: usize,
+}
+
+impl Default for ShardPolicy {
+    fn default() -> Self {
+        Self {
+            mode: ShardMode::Off,
+            skew_aware: true,
+            max_imbalance: 1.25,
+            min_shard_work: 8192,
+        }
+    }
+}
+
+impl ShardPolicy {
+    /// An always-on policy cutting into `n` shards.
+    pub fn fixed(n: usize) -> Self {
+        Self {
+            mode: ShardMode::Fixed(n),
+            ..Default::default()
+        }
+    }
+
+    /// The auto policy (shard large requests across idle engines).
+    pub fn auto() -> Self {
+        Self {
+            mode: ShardMode::Auto,
+            ..Default::default()
+        }
+    }
+
+    /// Is sharding enabled at all?
+    pub fn enabled(&self) -> bool {
+        self.mode != ShardMode::Off
+    }
+
+    /// Shards this request should be cut into, given `engines` available
+    /// executors (≥ 1 always; the cut search may still collapse to fewer).
+    pub fn shard_count(&self, a: &Csr, engines: usize) -> usize {
+        match self.mode {
+            ShardMode::Off => 1,
+            ShardMode::Fixed(n) => n.max(1),
+            ShardMode::Auto => {
+                let work = a.m + a.nnz();
+                (work / self.min_shard_work.max(1)).min(engines.max(1)).max(1)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_policy_is_off() {
+        let p = ShardPolicy::default();
+        assert!(!p.enabled());
+        let a = Csr::random(1000, 1000, 8.0, 131);
+        assert_eq!(p.shard_count(&a, 8), 1);
+    }
+
+    #[test]
+    fn fixed_policy_requests_exactly_n() {
+        let p = ShardPolicy::fixed(6);
+        assert!(p.enabled());
+        let a = Csr::random(100, 100, 2.0, 132);
+        assert_eq!(p.shard_count(&a, 2), 6, "fixed ignores engine count");
+        assert_eq!(ShardPolicy::fixed(0).shard_count(&a, 2), 1);
+    }
+
+    #[test]
+    fn auto_policy_scales_with_work_and_caps_at_engines() {
+        let p = ShardPolicy::auto();
+        // tiny request: below min_shard_work → single shard
+        let small = Csr::random(50, 50, 3.0, 133);
+        assert_eq!(p.shard_count(&small, 8), 1);
+        // big request: work / min_shard_work shards, capped at engines
+        let big = Csr::random(20_000, 2_000, 8.0, 134);
+        let work = big.m + big.nnz();
+        let want = (work / p.min_shard_work).min(4);
+        assert_eq!(p.shard_count(&big, 4), want);
+        assert!(p.shard_count(&big, 4) >= 2, "large matrices must shard");
+    }
+}

@@ -173,13 +173,16 @@ fn worker(
 /// on the single-core testbed (EXPERIMENTS.md §Perf).
 #[inline]
 fn accumulate(a: &Csr, b: &[f32], n: usize, nz0: usize, nz1: usize, out: &mut [f32]) {
+    // Hoist the span slices once: `col_idx`/`vals` live behind a
+    // `SharedSlice` window (shard views), so per-element indexing would
+    // re-derive the window every nonzero in the innermost loop.
+    let cols = &a.col_idx[nz0..nz1];
+    let vals = &a.vals[nz0..nz1];
     // tile only pays off when the row segment amortizes its init+writeback
     if n <= 64 && nz1 - nz0 >= 8 {
         let mut acc = [0.0f32; 64];
-        for e in nz0..nz1 {
-            let col = a.col_idx[e] as usize;
-            let v = a.vals[e];
-            let brow = &b[col * n..col * n + n];
+        for (&col, &v) in cols.iter().zip(vals) {
+            let brow = &b[col as usize * n..col as usize * n + n];
             for (o, &bv) in acc[..n].iter_mut().zip(brow) {
                 *o += v * bv;
             }
@@ -189,10 +192,8 @@ fn accumulate(a: &Csr, b: &[f32], n: usize, nz0: usize, nz1: usize, out: &mut [f
         }
         return;
     }
-    for e in nz0..nz1 {
-        let col = a.col_idx[e] as usize;
-        let v = a.vals[e];
-        let brow = &b[col * n..col * n + n];
+    for (&col, &v) in cols.iter().zip(vals) {
+        let brow = &b[col as usize * n..col as usize * n + n];
         for (o, &bv) in out.iter_mut().zip(brow) {
             *o += v * bv;
         }

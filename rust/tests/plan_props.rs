@@ -42,8 +42,8 @@ fn fingerprint_stable_across_clone_and_rebuild() {
             a.m,
             a.k,
             a.row_ptr.clone(),
-            a.col_idx.clone(),
-            a.vals.clone(),
+            a.col_idx.to_vec(),
+            a.vals.to_vec(),
         )
         .unwrap();
         assert_eq!(fp, Fingerprint::of(&rebuilt));

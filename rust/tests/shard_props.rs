@@ -1,0 +1,290 @@
+//! Property tests for the sharding subsystem: gathering per-shard results
+//! must reproduce the reference exactly, shard cuts must come from the
+//! merge-path coordinates with bounded imbalance, and the scatter-gather
+//! composition must be **bitwise**-identical to the unsharded executor run
+//! over the concatenated partition.
+
+use std::sync::Arc;
+
+use merge_spmm::exec::{partition, Executor};
+use merge_spmm::formats::Csr;
+use merge_spmm::gen;
+use merge_spmm::loadbalance::validate_segments;
+use merge_spmm::shard::{
+    concat_partitions, cuts_valid, imbalance, shard_cuts, ShardPolicy, ShardedEngine,
+};
+use merge_spmm::spmm::{
+    merge_spmm_into, rowsplit_spmm_into, spmm_reference, Algorithm,
+};
+use merge_spmm::util::XorShift;
+
+fn arb_csr(rng: &mut XorShift) -> Csr {
+    let m = 1 + rng.below(120);
+    let k = 1 + rng.below(80);
+    let mut row_ptr = vec![0usize];
+    let mut col_idx = Vec::new();
+    for _ in 0..m {
+        let len = match rng.below(4) {
+            0 => 0,
+            1 => rng.below(4),
+            2 => rng.below(k.min(50)),
+            _ => k.min(rng.below(k + 1)),
+        };
+        col_idx.extend(rng.distinct_sorted(len, k));
+        row_ptr.push(col_idx.len());
+    }
+    let vals = (0..col_idx.len()).map(|_| rng.normal()).collect();
+    Csr::new(m, k, row_ptr, col_idx, vals).unwrap()
+}
+
+fn assert_close(got: &[f32], want: &[f32], case: usize, what: &str) {
+    assert_eq!(got.len(), want.len(), "case {case} {what}");
+    for (i, (x, y)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (x - y).abs() < 2e-3 * (1.0 + y.abs()),
+            "case {case} {what} idx {i}: {x} vs {y}"
+        );
+    }
+}
+
+/// Execute every shard with its own partition into its row range of one
+/// output (the scatter-gather composition, synchronously), returning the
+/// gathered output and the per-shard partitions used.
+fn gather_shards(
+    a: &Csr,
+    cuts: &[usize],
+    b: &[f32],
+    n: usize,
+    alg: Algorithm,
+    p: usize,
+) -> (Vec<f32>, Vec<Vec<merge_spmm::loadbalance::Segment>>) {
+    let exec = Executor::new(2);
+    let mut ctx = exec.make_ctx();
+    let mut c = vec![f32::NAN; a.m * n]; // poison: every element must be written
+    let mut parts = Vec::new();
+    for w in cuts.windows(2) {
+        let shard = a.shard_view(w[0], w[1]);
+        let segs = partition(&shard, alg, p);
+        let out = &mut c[w[0] * n..w[1] * n];
+        if shard.nnz() == 0 {
+            out.fill(0.0);
+        } else {
+            match alg {
+                Algorithm::RowSplit => rowsplit_spmm_into(&shard, b, n, &segs, &mut ctx, out),
+                Algorithm::MergeBased => merge_spmm_into(&shard, b, n, &segs, &mut ctx, out),
+            }
+        }
+        parts.push(segs);
+    }
+    (c, parts)
+}
+
+/// Gather(shard results) == reference, and the gathered output is
+/// bitwise-identical to the unsharded executor run over the concatenation
+/// of the per-shard partitions — for random matrices, both algorithms,
+/// assorted shard counts.
+#[test]
+fn prop_gather_matches_reference_and_unsharded_bitwise() {
+    let mut rng = XorShift::new(0xC31);
+    for case in 0..100 {
+        let a = arb_csr(&mut rng);
+        let n = [1, 4, 9, 16][rng.below(4)];
+        let shards = 1 + rng.below(6);
+        let skew = rng.below(2) == 1;
+        let b: Vec<f32> = (0..a.k * n).map(|_| rng.normal()).collect();
+        let cuts = shard_cuts(&a, shards, skew, 1.25);
+        assert!(cuts_valid(&a, &cuts), "case {case}: {cuts:?}");
+        let want = spmm_reference(&a, &b, n);
+        for alg in [Algorithm::RowSplit, Algorithm::MergeBased] {
+            let p = 1 + rng.below(4);
+            let (gathered, parts) = gather_shards(&a, &cuts, &b, n, alg, p);
+            assert_close(&gathered, &want, case, "gathered");
+            // bitwise: unsharded executor over the concatenated partition
+            if a.nnz() > 0 {
+                let merged = concat_partitions(&a, &cuts, &parts);
+                validate_segments(&a, &merged).unwrap();
+                let exec = Executor::new(2);
+                let mut ctx = exec.make_ctx();
+                let mut unsharded = vec![f32::NAN; a.m * n];
+                match alg {
+                    Algorithm::RowSplit => {
+                        rowsplit_spmm_into(&a, &b, n, &merged, &mut ctx, &mut unsharded)
+                    }
+                    Algorithm::MergeBased => {
+                        merge_spmm_into(&a, &b, n, &merged, &mut ctx, &mut unsharded)
+                    }
+                }
+                assert!(
+                    gathered.iter().zip(&unsharded).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "case {case} {alg}: sharded result must be bitwise-identical"
+                );
+            }
+        }
+    }
+}
+
+/// Adversarial shapes: a single dense row, power-law rows, all-empty
+/// shard ranges, shards = 1, and shards > rows — through the full
+/// concurrent [`ShardedEngine`].
+#[test]
+fn prop_adversarial_shapes_through_the_engine() {
+    let cases: Vec<(&str, Csr)> = vec![
+        ("single-dense-row", {
+            let cols: Vec<u32> = (0..3000).collect();
+            Csr::new(1, 3000, vec![0, 3000], cols, vec![0.5; 3000]).unwrap()
+        }),
+        ("power-law", gen::power_law(2500, 1.2, 700, 0xC35)),
+        ("empty-runs", {
+            // dense blocks separated by long all-empty runs, so some
+            // shards are entirely empty rows
+            let m = 1200usize;
+            let mut row_ptr = vec![0usize];
+            let mut cols: Vec<u32> = Vec::new();
+            for i in 0..m {
+                if (i / 100) % 3 == 0 {
+                    cols.extend((0..8u32).map(|c| (c + i as u32) % 64));
+                }
+                row_ptr.push(cols.len());
+            }
+            let vals = vec![1.0f32; cols.len()];
+            Csr::new(m, 64, row_ptr, cols, vals).unwrap()
+        }),
+        ("all-empty", Csr::empty(900, 40)),
+        ("tiny", Csr::random(3, 10, 2.0, 0xC36)),
+    ];
+    for (name, a) in cases {
+        let a = Arc::new(a);
+        let n = 8;
+        let b = Arc::new(gen::dense_matrix(a.k, n, 0xC37));
+        let want = spmm_reference(&a, &b, n);
+        for shards in [1usize, 2, 5, 16] {
+            let eng = ShardedEngine::cpu_only(ShardPolicy::fixed(shards), 4, 2);
+            let r = eng.spmm(&a, &b, n).unwrap();
+            assert_close(&r.c, &want, shards, name);
+            assert!(r.shards <= shards.max(1) && r.shards >= 1);
+            if shards == 16 {
+                assert!(r.shards <= a.m.max(1), "{name}: at most one shard per row");
+            }
+        }
+    }
+}
+
+/// Balanced-mode imbalance bound: on matrices whose rows are small
+/// relative to the per-shard budget (the regime balanced mode is for),
+/// max/mean nnz stays within the policy bound of 1.25.
+#[test]
+fn prop_balanced_imbalance_within_policy_bound() {
+    let mut rng = XorShift::new(0xC32);
+    for case in 0..60 {
+        // uniform-ish rows: max row length stays far below nnz/shards
+        let m = 400 + rng.below(800);
+        let k = 200 + rng.below(200);
+        let avg = 4.0 + rng.below(8) as f64;
+        let a = Csr::random(m, k, avg, 0xC33 + case as u64);
+        if a.nnz() == 0 {
+            continue;
+        }
+        for shards in [2usize, 3, 4, 6] {
+            // precondition of the bound: no single row dominates a shard
+            if (a.max_row_length() + 1) * shards * 8 > a.nnz() {
+                continue;
+            }
+            let cuts = shard_cuts(&a, shards, false, 1.25);
+            assert!(cuts_valid(&a, &cuts));
+            let imb = imbalance(&a, &cuts);
+            assert!(
+                imb <= 1.25,
+                "case {case} shards {shards}: imbalance {imb:.3} (cuts {cuts:?})"
+            );
+        }
+    }
+}
+
+/// Skew-aware mode isolates every ultra-heavy row into a singleton shard
+/// whenever the shard budget allows it (isolating H rows needs H
+/// singletons plus one shard per gap; at most 2H+1 ≤ shards here), even
+/// with several heavy rows scattered through the matrix — and never
+/// produces more shards than requested.
+#[test]
+fn prop_skew_isolation() {
+    let mut rng = XorShift::new(0xC34);
+    for case in 0..30 {
+        let m = 300 + rng.below(500);
+        let k = 4096;
+        let heavy_at: Vec<usize> = (0..1 + rng.below(3)).map(|_| rng.below(m)).collect();
+        let mut row_ptr = vec![0usize];
+        let mut cols: Vec<u32> = Vec::new();
+        for i in 0..m {
+            let len = if heavy_at.contains(&i) { 2048 } else { rng.below(4) };
+            cols.extend((0..len as u32).map(|c| c % k as u32));
+            row_ptr.push(cols.len());
+        }
+        let vals = vec![1.0f32; cols.len()];
+        let a = Csr::new(m, k, row_ptr, cols, vals).unwrap();
+        // budget 8: up to 3 heavy rows cost ≤ 3 + 4 = 7 shards, so every
+        // heavy row is guaranteed its singleton
+        let shards = 8;
+        let cap = 1.25 * a.nnz() as f64 / shards as f64;
+        let cuts = shard_cuts(&a, shards, true, 1.25);
+        assert!(cuts_valid(&a, &cuts), "case {case}: {cuts:?}");
+        assert!(cuts.len() - 1 <= shards, "case {case}: budget exceeded {cuts:?}");
+        for i in 0..m {
+            if (a.row_len(i) as f64) > cap {
+                assert!(
+                    cuts.contains(&i) && cuts.contains(&(i + 1)),
+                    "case {case}: heavy row {i} not isolated in {cuts:?}"
+                );
+            }
+        }
+    }
+    // tight budget: a dominant interior row wants isolation, but with
+    // shards = 2 the singleton + its two flanking gaps would need 3 —
+    // isolation degrades gracefully and the shard-count contract holds
+    let m = 101usize;
+    let mut row_ptr = vec![0usize];
+    let mut cols: Vec<u32> = Vec::new();
+    for i in 0..m {
+        let len = if i == 50 { 700 } else { 3 };
+        cols.extend((0..len as u32).map(|c| c % 64));
+        row_ptr.push(cols.len());
+    }
+    let vals = vec![1.0f32; cols.len()];
+    let a = Csr::new(m, 64, row_ptr, cols, vals).unwrap();
+    for shards in [2usize, 3, 4] {
+        let cuts = shard_cuts(&a, shards, true, 1.25);
+        assert!(cuts_valid(&a, &cuts));
+        assert!(cuts.len() - 1 <= shards, "shards {shards}: {cuts:?}");
+    }
+}
+
+/// Shard cuts really are merge-path coordinates: in balanced mode every
+/// interior cut is a row boundary whose merge-space position is as close
+/// to its equally-spaced diagonal as any row boundary can be.
+#[test]
+fn prop_cuts_are_nearest_merge_coordinates() {
+    let mut rng = XorShift::new(0xC38);
+    for case in 0..40 {
+        let a = arb_csr(&mut rng);
+        let shards = 2 + rng.below(5);
+        let cuts = shard_cuts(&a, shards, false, 1.25);
+        let total = a.m + a.nnz();
+        // every interior cut must be optimal for its diagonal
+        let mut interior = cuts[1..cuts.len() - 1].iter().peekable();
+        for s in 1..shards {
+            let d = total * s / shards;
+            let best = (0..=a.m)
+                .map(|r| (r + a.row_ptr[r]).abs_diff(d))
+                .min()
+                .unwrap();
+            if let Some(&&c) = interior.peek() {
+                if (c + a.row_ptr[c]).abs_diff(d) == best {
+                    interior.next();
+                }
+            }
+        }
+        assert!(
+            interior.peek().is_none(),
+            "case {case}: cuts {cuts:?} contain a non-merge-coordinate cut"
+        );
+    }
+}
