@@ -1,12 +1,19 @@
-//! One request across many engines: 1 vs N shards on a skewed matrix.
+//! One request across many workers: 1 vs N shards on a skewed matrix,
+//! plus a mixed-traffic measurement of the unified worker runtime.
 //!
 //! Builds a large power-law (scale-free) matrix — the paper's worst case
 //! for row-level load balance — and serves the same request through the
-//! unsharded path and through `ShardedEngine`s of increasing width,
+//! unsharded path and through `ShardedEngine`s of increasing width (all
+//! thread-less scatter/gather layers over a unified worker pool),
 //! printing the per-request latency, the shard layout (count + max/mean
-//! nnz imbalance), and the per-engine shard/job counters that prove the
-//! request really ran across multiple engines.  Writes `BENCH_shard.json`
-//! at the repo root (same schema convention as `BENCH_plan.json` /
+//! nnz imbalance), and the per-worker shard counters that prove the
+//! request really ran across multiple workers.  A second section drives
+//! **mixed traffic** (batched small requests + sharded large requests)
+//! through one `Server` with sharding on and off, reporting throughput
+//! and the resident thread count — identical in both configurations,
+//! because shard tasks are first-class jobs on the batcher workers' warm
+//! pools, not a second engine pool.  Writes `BENCH_shard.json` at the
+//! repo root (same schema convention as `BENCH_plan.json` /
 //! `BENCH_exec.json`: the committed file is a `pending-toolchain`
 //! placeholder; running this example overwrites it with measurements).
 //!
@@ -15,6 +22,8 @@
 use std::sync::Arc;
 use std::time::Instant;
 
+use merge_spmm::coordinator::{EngineConfig, Server, ServerConfig};
+use merge_spmm::formats::Csr;
 use merge_spmm::gen;
 use merge_spmm::shard::{imbalance, ShardPolicy, ShardedEngine};
 use merge_spmm::spmm::spmm_reference;
@@ -41,15 +50,15 @@ fn main() -> anyhow::Result<()> {
     let want = spmm_reference(&a, &b, n);
 
     let mut rows = Vec::new();
-    for engines in [1usize, 2, 4] {
-        let policy = if engines == 1 {
-            // one engine, one shard: the unsharded baseline through the
+    for workers in [1usize, 2, 4] {
+        let policy = if workers == 1 {
+            // one worker, one shard: the unsharded baseline through the
             // same code path
             ShardPolicy::fixed(1)
         } else {
-            ShardPolicy::fixed(engines)
+            ShardPolicy::fixed(workers)
         };
-        let eng = ShardedEngine::cpu_only(policy, engines, cpu_workers);
+        let eng = ShardedEngine::cpu_only(policy, workers, cpu_workers);
         // warm: plan + layout caches fill, buffers allocate
         let r = eng.spmm(&a, &b, n)?;
         let shards = r.shards;
@@ -65,33 +74,94 @@ fn main() -> anyhow::Result<()> {
         let ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
         // re-read the executed layout: same requested count + policy knobs
         // as the engine's scatter → cache hit on the same key, no new entry
-        let want = eng.policy().shard_count(&a, engines);
-        let cuts = eng.planner().shard_cuts(&a, want, true, 1.25);
+        let want_shards = eng.policy().shard_count(&a, workers);
+        let cuts = eng.planner().shard_cuts(&a, want_shards, true, 1.25);
         let imb = imbalance(&a, &cuts);
         println!(
-            "engines {engines}: {shards} shard(s), imbalance {imb:.3}, \
-             {ms:>8.2} ms/request, shards/engine {:?}, pool jobs {:?}",
-            eng.shards_per_engine(),
-            eng.engine_jobs()
+            "workers {workers}: {shards} shard(s), imbalance {imb:.3}, \
+             {ms:>8.2} ms/request, shard tasks/worker {:?}",
+            eng.shards_per_worker()
         );
         rows.push(format!(
-            "    {{\"engines\": {engines}, \"shards\": {shards}, \
+            "    {{\"workers\": {workers}, \"shards\": {shards}, \
              \"imbalance\": {imb:.4}, \"ms_per_request\": {ms:.3}}}"
         ));
     }
 
+    // Unified-pool section: mixed traffic (sharded large + batched small)
+    // through one Server, sharding off vs auto — same resident threads,
+    // because both paths execute on the one worker pool set.
+    let small = Arc::new(Csr::random(1000, a.k, 4.0, 11));
+    let small_b = Arc::new(gen::dense_matrix(a.k, n, 12));
+    let server_workers = 4usize;
+    let mixed_reps = if std::env::var("BENCH_QUICK").is_ok() { 10 } else { 40 };
+    let mut mixed = Vec::new();
+    for shard_auto in [false, true] {
+        let cfg = EngineConfig {
+            artifacts_dir: None,
+            cpu_workers,
+            shard: if shard_auto {
+                ShardPolicy::auto()
+            } else {
+                ShardPolicy::default()
+            },
+            ..Default::default()
+        };
+        let server = Server::start(
+            cfg,
+            ServerConfig {
+                workers: server_workers,
+                ..Default::default()
+            },
+        )?;
+        let resident = server.resident_threads();
+        // warm both shapes
+        drop(server.submit_blocking(Arc::clone(&a), Arc::clone(&b), n)?);
+        drop(server.submit_blocking(Arc::clone(&small), Arc::clone(&small_b), n)?);
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..mixed_reps)
+            .map(|i| {
+                if i % 4 == 0 {
+                    server.submit(Arc::clone(&a), Arc::clone(&b), n)
+                } else {
+                    server.submit(Arc::clone(&small), Arc::clone(&small_b), n)
+                }
+            })
+            .collect();
+        for h in handles {
+            h.recv()??;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let req_s = mixed_reps as f64 / wall;
+        println!(
+            "unified pool (shards {}): {server_workers} workers, {resident} resident \
+             threads, {req_s:.1} mixed req/s",
+            if shard_auto { "auto" } else { "off" }
+        );
+        let snap = server.shutdown();
+        mixed.push(format!(
+            "    {{\"shards\": \"{}\", \"workers\": {server_workers}, \
+             \"cpu_workers\": {cpu_workers}, \"resident_threads\": {resident}, \
+             \"mixed_req_per_s\": {req_s:.2}, \"sharded_requests\": {}}}",
+            if shard_auto { "auto" } else { "off" },
+            snap.sharded
+        ));
+    }
+
     let out = format!(
-        "{{\n  \"format\": \"bench-shard-v1\",\n  \"status\": \"measured\",\n  \
+        "{{\n  \"format\": \"bench-shard-v2\",\n  \"status\": \"measured\",\n  \
          \"command\": \"cargo run --release --example sharded_serve\",\n  \
          \"reps\": {reps},\n  \"cpu_workers\": {cpu_workers},\n  \
          \"matrix\": {{\"m\": {}, \"k\": {}, \"nnz\": {}, \"cv\": {:.3}, \
-         \"max_row\": {}}},\n  \"configs\": [\n{}\n  ]\n}}\n",
+         \"max_row\": {}}},\n  \"configs\": [\n{}\n  ],\n  \
+         \"unified_pool\": [\n{}\n  ]\n}}\n",
         a.m,
         a.k,
         a.nnz(),
         a.row_length_cv(),
         a.max_row_length(),
-        rows.join(",\n")
+        rows.join(",\n"),
+        mixed.join(",\n")
     );
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()

@@ -92,6 +92,10 @@ pub struct SpmmResult {
     pub latency_s: f64,
     /// shards this request was executed as (1 = unsharded path)
     pub shards: usize,
+    /// distinct unified-pool workers that executed this request's shards,
+    /// sorted (empty on the unsharded path) — the per-request spread
+    /// evidence for the scatter-gather path
+    pub shard_workers: Vec<usize>,
 }
 
 /// The SpMM serving engine (paper's full pipeline: plan cache + tuned
@@ -110,6 +114,11 @@ pub struct SpmmEngine {
     /// reusable scratch (carry-out arenas) bound to `exec`'s pool
     ctx: Mutex<ExecCtx>,
     probe: bool,
+    /// mirror this engine's own pool into the `pool_*` gauges.  True for
+    /// standalone engines (their pool IS the pool set); the unified worker
+    /// runtime turns it off so the server-wide aggregate is the one writer
+    /// of those gauges.
+    exec_gauge_sync: bool,
     pub metrics: Arc<Metrics>,
 }
 
@@ -154,6 +163,7 @@ impl SpmmEngine {
             ctx: Mutex::new(exec.make_ctx()),
             exec,
             probe: cfg.probe,
+            exec_gauge_sync: true,
             metrics: Arc::new(Metrics::new()),
         };
         engine.sync_gauges();
@@ -169,6 +179,7 @@ impl SpmmEngine {
             ctx: Mutex::new(exec.make_ctx()),
             exec,
             probe: true,
+            exec_gauge_sync: true,
             metrics: Arc::new(Metrics::new()),
         };
         engine.sync_gauges();
@@ -177,12 +188,15 @@ impl SpmmEngine {
 
     /// Mirror planner + executor state into the metrics gauges so
     /// snapshots report the real threshold/cache/pool state even before
-    /// the first request.
+    /// the first request.  Exec gauges are skipped when this engine is one
+    /// worker of a unified runtime (the runtime aggregate owns them).
     fn sync_gauges(&self) {
         self.metrics
             .sync_plan_gauges(&self.planner.cache().stats(), self.threshold());
-        self.metrics
-            .sync_exec_gauges(&self.exec.stats(), &self.planner.partition_stats());
+        if self.exec_gauge_sync {
+            self.metrics
+                .sync_exec_gauges(&self.exec.stats(), &self.planner.partition_stats());
+        }
     }
 
     /// The engine's execution resources (pool + buffer free-list).
@@ -275,6 +289,7 @@ impl SpmmEngine {
                 cache_hit: outcome.cache_hit,
                 latency_s: latency,
                 shards: 1,
+                shard_workers: Vec::new(),
             }
         })
     }
@@ -403,6 +418,16 @@ impl SpmmEngine {
     pub fn with_shared_metrics(mut self, metrics: Arc<Metrics>) -> Self {
         self.metrics = metrics;
         self.sync_gauges();
+        self
+    }
+
+    /// Enable or disable mirroring this engine's own pool into the
+    /// `pool_*` gauges.  The unified worker runtime disables it on its
+    /// worker engines: with one pool set serving every path, the runtime's
+    /// aggregate is the single writer of those gauges, so per-engine
+    /// mirrors would just clobber it with one worker's slice.
+    pub fn with_exec_gauge_sync(mut self, enabled: bool) -> Self {
+        self.exec_gauge_sync = enabled;
         self
     }
 

@@ -34,14 +34,20 @@ pub struct Metrics {
     plan_len: AtomicU64,
     /// gauge: the tuner's current threshold, stored as f64 bits
     tuner_threshold_bits: AtomicU64,
-    /// gauges mirrored from the executor pool (`crate::exec`).
-    /// Last-writer-wins: an unsharded engine syncs its *one* pool, the
-    /// sharded scatter syncs the *sum* over its engine pools — under
-    /// mixed traffic the value reflects whichever path ran last (the
-    /// counters above, not these gauges, are the stable signals)
+    /// gauges mirrored from **the** unified worker pool set
+    /// (`crate::coordinator::workers::WorkerRuntime`).  One pool set
+    /// serves both the batcher and shard paths, so these are well-defined
+    /// aggregates: `pool_workers` = workers × cpu_workers, the full
+    /// resident pool-thread count.  The server syncs them at snapshot
+    /// time; standalone engines (their single pool IS the set) sync their
+    /// own.  There is no second pool behind these numbers.
     pool_workers: AtomicU64,
     workers_parked: AtomicU64,
     pool_jobs: AtomicU64,
+    /// gauges mirrored from the two-lane work queue: tasks waiting in the
+    /// shard lane / batches waiting in the batch lane
+    queue_shard_depth: AtomicU64,
+    queue_batch_depth: AtomicU64,
     /// gauges mirrored from the output-buffer free-list
     buffers_pooled: AtomicU64,
     buffers_allocated: AtomicU64,
@@ -84,8 +90,16 @@ impl Metrics {
         self.tuner_threshold_bits.store(threshold.to_bits(), Ordering::Relaxed);
     }
 
+    /// Mirror the two-lane work queue's depths into the exported gauges
+    /// (called by the server at snapshot time).
+    pub fn sync_queue_gauges(&self, shard_depth: usize, batch_depth: usize) {
+        self.queue_shard_depth.store(shard_depth as u64, Ordering::Relaxed);
+        self.queue_batch_depth.store(batch_depth as u64, Ordering::Relaxed);
+    }
+
     /// Mirror executor pool / buffer free-list / partition-replay state
-    /// into the exported gauges (called by the engine after execution).
+    /// into the exported gauges (called with the unified runtime's
+    /// aggregate on the serve path, or an engine's own stats standalone).
     pub fn sync_exec_gauges(
         &self,
         exec: &crate::exec::ExecStats,
@@ -152,6 +166,8 @@ impl Metrics {
             pool_workers: self.pool_workers.load(Ordering::Relaxed),
             workers_parked: self.workers_parked.load(Ordering::Relaxed),
             pool_jobs: self.pool_jobs.load(Ordering::Relaxed),
+            queue_shard_depth: self.queue_shard_depth.load(Ordering::Relaxed),
+            queue_batch_depth: self.queue_batch_depth.load(Ordering::Relaxed),
             buffers_pooled: self.buffers_pooled.load(Ordering::Relaxed),
             buffers_allocated: self.buffers_allocated.load(Ordering::Relaxed),
             buffer_reuses: self.buffer_reuses.load(Ordering::Relaxed),
@@ -191,10 +207,15 @@ pub struct MetricsSnapshot {
     pub shard_count_last: u64,
     /// gauge: max/mean nnz imbalance of the most recent shard layout
     pub shard_imbalance_last: f64,
-    /// executor-pool gauges: thread count, currently parked, jobs run
+    /// unified-pool gauges: resident pool threads (workers × cpu_workers
+    /// on a server — one pool set serves every path), currently parked,
+    /// broadcast jobs run
     pub pool_workers: u64,
     pub workers_parked: u64,
     pub pool_jobs: u64,
+    /// two-lane work-queue depths at snapshot time
+    pub queue_shard_depth: u64,
+    pub queue_batch_depth: u64,
     /// output-buffer free-list gauges
     pub buffers_pooled: u64,
     pub buffers_allocated: u64,
@@ -226,7 +247,7 @@ impl std::fmt::Display for MetricsSnapshot {
             f,
             "req={} ok={} err={} rowsplit={} merge={} pjrt={} cpu={} \
              plan_hit={} plan_miss={} evict={} probes={} \
-             shard={}x{} imb={:.2} pool={}/{} buf={}r/{}a part={}h/{}m \
+             shard={}x{} imb={:.2} pool={}/{} q={}s/{}b buf={}r/{}a part={}h/{}m \
              thr={:.2} p50={:.1}ms p99={:.1}ms",
             self.requests,
             self.completed,
@@ -244,6 +265,8 @@ impl std::fmt::Display for MetricsSnapshot {
             self.shard_imbalance_last,
             self.workers_parked,
             self.pool_workers,
+            self.queue_shard_depth,
+            self.queue_batch_depth,
             self.buffer_reuses,
             self.buffers_allocated,
             self.partition_hits,
@@ -360,5 +383,17 @@ mod tests {
         let text = format!("{snap}");
         assert!(text.contains("pool=3/4") && text.contains("buf=9r/2a"), "{text}");
         assert!(text.contains("part=8h/2m"), "{text}");
+    }
+
+    #[test]
+    fn queue_gauges_roundtrip_into_snapshot() {
+        let m = Metrics::new();
+        let snap = m.snapshot();
+        assert_eq!((snap.queue_shard_depth, snap.queue_batch_depth), (0, 0));
+        m.sync_queue_gauges(5, 2);
+        let snap = m.snapshot();
+        assert_eq!(snap.queue_shard_depth, 5);
+        assert_eq!(snap.queue_batch_depth, 2);
+        assert!(format!("{snap}").contains("q=5s/2b"), "{snap}");
     }
 }

@@ -22,25 +22,32 @@
 //! request-queue front-end on top (std threads + channels; the offline
 //! vendor set has no tokio, and the serve path is CPU-bound anyway).
 //!
-//! When [`EngineConfig::shard`] enables sharding, the router cuts large
-//! requests into nnz-balanced row-range shards ([`crate::shard`]) and
-//! scatters them across a pool of engine threads instead of handing the
-//! whole request to one worker — the one path by which a single request
-//! can use more than one engine.
+//! Execution capacity is **one unified pool set** ([`workers`]): the
+//! batcher workers' warm pools, spawned once at server start, serve both
+//! whole-request batches and — when [`EngineConfig::shard`] enables
+//! sharding — the shard fragments the router scatters through
+//! [`crate::shard`].  Shard tasks ride the high-priority lane of the
+//! two-lane work queue (batches cannot starve them, and a bounded bypass
+//! keeps shards from starving batches), dispatch is idleness-aware (only
+//! idle workers pop work), and enabling sharding adds zero resident
+//! threads — the one path by which a single request can use more than one
+//! worker, at no standing cost.
 //!
 //! Execution runs on [`crate::exec`]'s persistent resources: every worker
 //! engine owns a warm [`crate::exec::WorkerPool`] (spawned at server
 //! start, so concurrent batches stay parallel) and all of them share one
 //! output-buffer free-list, so the steady-state request path spawns no
 //! threads and allocates nothing (see DESIGN.md §Executor pool & memory
-//! reuse).
+//! reuse and §Unified worker runtime).
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod router;
+pub mod workers;
 
 pub use batcher::{Batch, BatchQueue};
 pub use engine::{EngineConfig, ExecutionPath, SpmmEngine, SpmmResult};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use router::{Server, ServerConfig};
+pub use workers::{WorkQueue, WorkerRuntime};

@@ -1,5 +1,6 @@
 //! Threaded request front-end: bounded queue (backpressure) → router
-//! thread (plan once + bucket batching) → worker pool → reply channels.
+//! thread (plan once + bucket batching + shard scatter) → **unified worker
+//! runtime** → reply channels.
 //!
 //! std threads + channels rather than an async runtime: the serve path is
 //! CPU-bound PJRT execution, one OS thread per worker is the right shape,
@@ -14,24 +15,33 @@
 //! falling back to the tuned heuristic + bucket search) and the chosen
 //! [`PlanOutcome`] rides with the request to the worker — no hop ever
 //! re-derives the decision.
+//!
+//! Execution capacity is **one pool set** — the
+//! [`super::workers::WorkerRuntime`] — serving both paths: whole-request
+//! batches ride the batch lane of the two-lane work queue, and when the
+//! shard policy cuts a large request into ≥ 2 shards the router scatters
+//! it through the thread-less [`ShardedEngine`] onto the *same* workers'
+//! shard lane.  There is no second engine pool: resident threads are
+//! `1 (router) + workers + workers × cpu_workers`, sharded or not.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::exec::{BufferPool, Executor};
+use crate::exec::BufferPool;
 use crate::formats::Csr;
-use crate::plan::{PlanOutcome, Planner};
+use crate::plan::Planner;
 use crate::runtime::Manifest;
-use crate::shard::ShardedEngine;
+use crate::shard::{ShardedEngine, WorkSink};
 
 use super::batcher::BatchQueue;
-use super::engine::{EngineConfig, SpmmEngine, SpmmResult};
+use super::engine::{EngineConfig, SpmmResult};
 use super::metrics::{Metrics, MetricsSnapshot};
+use super::workers::{Request, WorkerRuntime};
 
 /// Server tuning knobs.
 #[derive(Debug, Clone)]
@@ -42,7 +52,8 @@ pub struct ServerConfig {
     pub max_batch: usize,
     /// …or when its oldest request has waited this long
     pub max_wait: Duration,
-    /// bounded ingress queue (backpressure: submit blocks when full)
+    /// bounded ingress queue (backpressure: submit blocks when full);
+    /// also bounds the work queue's batch lane
     pub queue_capacity: usize,
 }
 
@@ -57,16 +68,6 @@ impl Default for ServerConfig {
     }
 }
 
-struct Request {
-    id: u64,
-    csr: Arc<Csr>,
-    b: Arc<Vec<f32>>,
-    n: usize,
-    /// filled by the router thread — planned exactly once per request
-    outcome: Option<PlanOutcome>,
-    reply: Sender<Result<SpmmResult>>,
-}
-
 enum RouterMsg {
     Req(Request),
     Shutdown,
@@ -76,12 +77,13 @@ enum RouterMsg {
 pub struct Server {
     ingress: SyncSender<RouterMsg>,
     router: Option<std::thread::JoinHandle<()>>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    /// the one pool set: batcher workers whose warm pools also execute
+    /// shard tasks
+    runtime: Arc<WorkerRuntime>,
     metrics: Arc<Metrics>,
     planner: Arc<Planner>,
-    /// scatter-gather engine pool for sharded requests (when the shard
-    /// policy is enabled); the router dispatches the shards of one large
-    /// request here instead of handing the whole request to one worker
+    /// scatter/gather layer for sharded requests (when the shard policy is
+    /// enabled); thread-less — it submits shard tasks to `runtime`
     sharded: Option<Arc<ShardedEngine>>,
     /// learned plans are written back here on shutdown
     plan_file: Option<std::path::PathBuf>,
@@ -89,34 +91,40 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start the router + worker threads.  Worker engines are constructed
-    /// inside their threads from `engine_cfg`; errors there surface on the
-    /// affected requests' reply channels.
+    /// Start the router thread and the unified worker runtime.  Worker
+    /// engines are constructed inside their threads from `engine_cfg`;
+    /// errors there surface on the affected requests' reply channels.
     pub fn start(engine_cfg: EngineConfig, cfg: ServerConfig) -> Result<Self> {
         let metrics = Arc::new(Metrics::new());
         // One planner for the whole server: the router plans, the workers
         // execute and feed probe measurements back into the same tuner.
         let planner = Arc::new(engine_cfg.build_planner());
         // One output-buffer free-list for the whole server (leases migrate
-        // freely between workers), but one warm pool *per worker engine*:
-        // a pool runs one broadcast at a time, so per-worker pools keep
-        // concurrent batches parallel (workers × cpu_workers threads, the
-        // same concurrency the scoped-thread executors had) while each
-        // worker still drains its batches back-to-back on warm threads.
-        // All pool threads spawn at server start, never per request.
+        // freely between workers and shard tasks).
         let buffers = Arc::new(BufferPool::new());
         // gauges report the real (possibly warm-loaded) planner state from
         // the first snapshot on, not the paper prior
         metrics.sync_plan_gauges(&planner.cache().stats(), planner.tuner().threshold());
-        // Sharded scatter-gather pool: one engine thread per worker (at
-        // least two — a single engine cannot scatter), sharing the
-        // server's planner, buffer free-list, and metrics, so per-shard
-        // plans, output leases, and gauges are all global.
+        // The one pool set.  Each worker owns a full engine plus a warm
+        // pool (one broadcast at a time per pool, so per-worker pools keep
+        // concurrent work parallel: workers × cpu_workers threads); all
+        // pool threads spawn here, never per request.
+        let runtime = WorkerRuntime::spawn(
+            cfg.workers.max(1),
+            cfg.queue_capacity,
+            engine_cfg.clone(),
+            Arc::clone(&planner),
+            Arc::clone(&buffers),
+            Arc::clone(&metrics),
+        );
+        // Sharded scatter/gather layer over the SAME workers: shard tasks
+        // are first-class jobs on the runtime's shard lane, so enabling
+        // sharding adds zero resident threads.
         let sharded = if engine_cfg.shard.enabled() {
+            let sink: Arc<dyn WorkSink> = Arc::clone(&runtime) as Arc<dyn WorkSink>;
             Some(Arc::new(ShardedEngine::new(
-                cfg.workers.max(2),
-                engine_cfg.cpu_workers,
                 engine_cfg.shard.clone(),
+                sink,
                 Arc::clone(&planner),
                 Arc::clone(&buffers),
                 Arc::clone(&metrics),
@@ -133,65 +141,14 @@ impl Server {
         };
 
         let (ingress_tx, ingress_rx) = sync_channel::<RouterMsg>(cfg.queue_capacity);
-        let (work_tx, work_rx) = sync_channel::<Vec<Request>>(cfg.queue_capacity);
-        let work_rx = Arc::new(std::sync::Mutex::new(work_rx));
-
-        // worker pool: each thread owns a full engine
-        let mut workers = Vec::with_capacity(cfg.workers.max(1));
-        for _ in 0..cfg.workers.max(1) {
-            let work_rx = Arc::clone(&work_rx);
-            let metrics = Arc::clone(&metrics);
-            let planner = Arc::clone(&planner);
-            let buffers = Arc::clone(&buffers);
-            let engine_cfg = engine_cfg.clone();
-            workers.push(std::thread::spawn(move || {
-                let exec = Arc::new(Executor::with_buffers(engine_cfg.cpu_workers, buffers));
-                let engine = match SpmmEngine::new_shared(engine_cfg, planner, exec) {
-                    Ok(e) => e.with_shared_metrics(metrics),
-                    Err(e) => {
-                        // Engine failed to build: fail every batch we get.
-                        let err = e.to_string();
-                        loop {
-                            let batch = { work_rx.lock().unwrap().recv() };
-                            match batch {
-                                Ok(reqs) => {
-                                    for r in reqs {
-                                        let _ = r
-                                            .reply
-                                            .send(Err(anyhow::anyhow!("engine init: {err}")));
-                                    }
-                                }
-                                Err(_) => return,
-                            }
-                        }
-                    }
-                };
-                loop {
-                    let batch = { work_rx.lock().unwrap().recv() };
-                    match batch {
-                        Ok(reqs) => {
-                            // same-bucket requests run back-to-back against
-                            // one compiled executable
-                            for r in reqs {
-                                let res = match &r.outcome {
-                                    Some(o) => engine.spmm_planned(&r.csr, &r.b, r.n, o),
-                                    None => engine.spmm(&r.csr, &r.b, r.n),
-                                };
-                                let _ = r.reply.send(res);
-                            }
-                        }
-                        Err(_) => break, // channel closed: shutdown
-                    }
-                }
-            }));
-        }
 
         // router thread: plan once per request, then bucket batching with
         // deadline flushes; shardable requests bypass batching entirely
-        // and scatter across the sharded engine pool
+        // and scatter onto the workers' shard lane
         let router = {
             let metrics = Arc::clone(&metrics);
             let planner = Arc::clone(&planner);
+            let runtime = Arc::clone(&runtime);
             let sharded = sharded.clone();
             std::thread::spawn(move || {
                 let mut bq = BatchQueue::new(cfg.max_batch, cfg.max_wait);
@@ -200,7 +157,7 @@ impl Server {
                     let reqs: Vec<Request> =
                         ids.into_iter().filter_map(|id| pending.remove(&id)).collect();
                     if !reqs.is_empty() {
-                        let _ = work_tx.send(reqs);
+                        runtime.submit_batch(reqs);
                     }
                 };
                 loop {
@@ -208,14 +165,13 @@ impl Server {
                     match ingress_rx.recv_timeout(timeout) {
                         Ok(RouterMsg::Req(mut req)) => {
                             // Sharded dispatch: when the policy cuts this
-                            // request into ≥ 2 shards, scatter it across
-                            // the engine pool (idle engines pick shards
-                            // up) instead of whole-request-per-worker.
-                            // Per-shard planning happens in the scatter,
-                            // so the request is still planned exactly once
-                            // per shard, on this thread.
+                            // request into ≥ 2 shards, scatter it onto the
+                            // workers' shard lane (idle workers pick the
+                            // shards up) instead of whole-request-per-
+                            // worker.  `--shards auto` sizes against the
+                            // shared pool: at most `workers` shards.
                             if let Some(se) = &sharded {
-                                if se.policy().shard_count(&req.csr, se.engines()) >= 2 {
+                                if se.policy().shard_count(&req.csr, se.workers()) >= 2 {
                                     let Request { csr, b, n, reply, .. } = req;
                                     se.submit_to(&csr, &b, n, reply);
                                     continue;
@@ -266,14 +222,13 @@ impl Server {
                         }
                     }
                 }
-                // dropping work_tx closes the worker pool
             })
         };
 
         Ok(Self {
             ingress: ingress_tx,
             router: Some(router),
-            workers,
+            runtime,
             metrics,
             planner,
             sharded,
@@ -315,8 +270,19 @@ impl Server {
             .map_err(|e| anyhow::anyhow!("server shut down: {e}"))?
     }
 
+    /// Snapshot the serving metrics.  The unified `pool_*` and `queue_*`
+    /// gauges are synced from the runtime aggregate here, so the snapshot
+    /// always reflects the one pool set regardless of which path ran last.
     pub fn metrics(&self) -> MetricsSnapshot {
+        self.sync_runtime_gauges();
         self.metrics.snapshot()
+    }
+
+    fn sync_runtime_gauges(&self) {
+        self.metrics
+            .sync_exec_gauges(&self.runtime.exec_stats(), &self.planner.partition_stats());
+        let (shard_depth, batch_depth) = self.runtime.queue().depths();
+        self.metrics.sync_queue_gauges(shard_depth, batch_depth);
     }
 
     /// The server-wide adaptive planner (cache + tuner).
@@ -324,8 +290,35 @@ impl Server {
         &self.planner
     }
 
-    /// The sharded scatter-gather engine pool, when the shard policy is
-    /// enabled (per-engine shard/job counters live here).
+    /// The unified worker runtime (one pool set for both paths).
+    pub fn runtime(&self) -> &Arc<WorkerRuntime> {
+        &self.runtime
+    }
+
+    /// Worker threads in the unified pool set.
+    pub fn workers(&self) -> usize {
+        self.runtime.worker_count()
+    }
+
+    /// OS threads the server currently owns: router + workers + pool
+    /// threads.  One pool set serves both the batcher and shard paths, so
+    /// this equals `1 + workers + workers × cpu_workers` whether or not
+    /// sharding is enabled.
+    pub fn resident_threads(&self) -> usize {
+        self.runtime.resident_threads() + usize::from(self.router.is_some())
+    }
+
+    /// Shard tasks executed per unified-pool worker.
+    pub fn shards_per_worker(&self) -> Vec<u64> {
+        self.runtime.shard_tasks_per_worker()
+    }
+
+    /// Pool broadcast jobs dispatched per unified-pool worker.
+    pub fn pool_jobs_per_worker(&self) -> Vec<u64> {
+        self.runtime.pool_jobs_per_worker()
+    }
+
+    /// The sharded scatter/gather layer, when the shard policy is enabled.
     pub fn sharded(&self) -> Option<&Arc<ShardedEngine>> {
         self.sharded.as_ref()
     }
@@ -337,18 +330,17 @@ impl Server {
         if let Some(h) = self.router.take() {
             let _ = h.join();
         }
-        for h in self.workers.drain(..) {
-            let _ = h.join();
-        }
-        // The router (the only other holder) has exited, so dropping our
-        // Arc tears down the sharded engine pool: its threads drain any
-        // queued shards, reply, and join — the snapshot below is final.
+        // The router (the only submitter) has exited: close the work
+        // queue.  Workers drain every admitted batch and shard task —
+        // in-flight gathers complete and reply — then join.
         drop(self.sharded.take());
+        self.runtime.shutdown();
         if let Some(path) = &self.plan_file {
             if let Err(e) = self.planner.save(path) {
                 eprintln!("(plan save to {} failed: {e})", path.display());
             }
         }
+        self.sync_runtime_gauges();
         self.metrics.snapshot()
     }
 }
@@ -412,7 +404,8 @@ mod tests {
         assert!(snap.buffer_reuses >= 28, "reused {}", snap.buffer_reuses);
         // phase 1 computed once, replayed thereafter
         assert!(snap.partition_hits >= 28, "hits {}", snap.partition_hits);
-        assert_eq!(snap.pool_workers, 2);
+        // unified gauge: the whole pool set (workers × cpu_workers)
+        assert_eq!(snap.pool_workers, 4);
     }
 
     #[test]
@@ -475,6 +468,57 @@ mod tests {
         server.shutdown();
     }
 
+    /// A worker panic must degrade to an error on the poisoned request's
+    /// reply channel — not a dead worker thread, not a poisoned work
+    /// queue, not a dead server.  Uses the test-only fault-injection
+    /// sentinel (`workers::PANIC_N`): the worker loop panics before
+    /// executing that request.
+    #[test]
+    fn worker_panic_degrades_to_error_not_dead_server() {
+        use super::super::workers::PANIC_N;
+        let server = Server::start(cpu_cfg(), ServerConfig::default()).unwrap();
+        let a = Arc::new(Csr::random(80, 80, 4.0, 1401));
+        let b = Arc::new(crate::gen::dense_matrix(80, 4, 1402));
+        let poisoned = server.submit(Arc::clone(&a), Arc::clone(&b), PANIC_N);
+        let err = poisoned.recv().expect("reply channel must stay connected");
+        let err = err.expect_err("injected panic must surface as an error");
+        assert!(err.to_string().contains("panicked"), "{err}");
+        // the same workers keep serving; siblings are unaffected
+        let want = crate::spmm::spmm_reference(&a, &b, 4);
+        for _ in 0..10 {
+            let r = server
+                .submit_blocking(Arc::clone(&a), Arc::clone(&b), 4)
+                .unwrap();
+            for (x, y) in r.c.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()));
+            }
+        }
+        let snap = server.shutdown();
+        assert_eq!(snap.completed, 10);
+        assert_eq!(snap.errors, 1);
+    }
+
+    /// Enabling sharding must not add resident threads: one pool set
+    /// serves both paths (the old design ran a second engine-thread set
+    /// beside the batcher workers — 2× threads under mixed traffic).
+    #[test]
+    fn sharding_adds_no_resident_threads() {
+        let plain = Server::start(cpu_cfg(), ServerConfig::default()).unwrap();
+        let with_shards = Server::start(
+            EngineConfig {
+                shard: crate::shard::ShardPolicy::auto(),
+                ..cpu_cfg()
+            },
+            ServerConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(plain.resident_threads(), with_shards.resident_threads());
+        // router + workers + workers × cpu_workers, nothing else
+        assert_eq!(plain.resident_threads(), 1 + 2 + 2 * 2);
+        plain.shutdown();
+        with_shards.shutdown();
+    }
+
     /// A skewed long-row matrix: uniform 24-nonzero rows (d = 24 →
     /// row-split everywhere) plus one 4096-nonzero row.  Row-split output
     /// is bitwise-deterministic per row regardless of partitioning, so the
@@ -503,6 +547,7 @@ mod tests {
             .submit_blocking(Arc::clone(&a), Arc::clone(&b), 16)
             .unwrap();
         assert_eq!(base.shards, 1);
+        assert!(base.shard_workers.is_empty());
         let base_c = base.c.into_vec();
         server.shutdown();
 
@@ -540,16 +585,16 @@ mod tests {
             drop(r);
         }
 
-        // one request ran across ≥ 2 engines concurrently: the per-engine
-        // shard counters and pool job counters prove multi-engine spread
-        let se = server.sharded().expect("shard policy enabled").clone();
-        let per_engine = se.shards_per_engine();
-        let busy = per_engine.iter().filter(|&&c| c > 0).count();
-        assert!(busy >= 2, "shards must spread across engines: {per_engine:?}");
-        let jobs = se.engine_jobs();
+        // shard tasks ran on the batcher workers themselves: the
+        // per-worker shard counters and pool job counters prove
+        // multi-worker spread on the one pool set
+        let per_worker = server.shards_per_worker();
+        let busy = per_worker.iter().filter(|&&c| c > 0).count();
+        assert!(busy >= 2, "shards must spread across workers: {per_worker:?}");
+        let jobs = server.pool_jobs_per_worker();
         assert!(
             jobs.iter().filter(|&&j| j > 0).count() >= 2,
-            "≥ 2 engine pools must have run jobs: {jobs:?}"
+            "≥ 2 workers' pools must have run jobs: {jobs:?}"
         );
         let layouts = server.planner().shard_layout_stats();
         assert_eq!(layouts.misses, 1, "cut search runs once per parent fingerprint");
@@ -558,7 +603,7 @@ mod tests {
         let snap = server.shutdown();
         assert_eq!(snap.errors, 0);
         assert_eq!(snap.sharded, 6);
-        assert_eq!(snap.shard_count_last as usize, per_engine.iter().sum::<u64>() as usize / 6);
+        assert_eq!(snap.shard_count_last as usize, per_worker.iter().sum::<u64>() as usize / 6);
         assert!(snap.buffers_allocated <= 2, "allocated {}", snap.buffers_allocated);
         assert!(snap.buffer_reuses >= 5, "reused {}", snap.buffer_reuses);
     }
@@ -573,7 +618,7 @@ mod tests {
         let a = Arc::new(Csr::random(100, 100, 4.0, 1302)); // far below min_shard_work
         let b = Arc::new(crate::gen::dense_matrix(100, 8, 1303));
         let r = server.submit_blocking(a, b, 8).unwrap();
-        assert_eq!(r.shards, 1, "small request must take the single-engine path");
+        assert_eq!(r.shards, 1, "small request must take the batcher path");
         let snap = server.shutdown();
         assert_eq!(snap.sharded, 0);
         assert_eq!(snap.completed, 1);

@@ -1,0 +1,622 @@
+//! The unified worker runtime: **one pool set serves every execution
+//! path**.
+//!
+//! Before this module existed the server ran two resident thread sets —
+//! the batcher workers (whole-request batches) and, beside them, the
+//! sharded engine threads (PR 3) with their own warm pools.  Under
+//! concurrent mixed traffic that doubled resident threads and
+//! oversubscribed CPUs — exactly the anti-pattern the paper's
+//! load-balancing argument warns against: throughput comes from balancing
+//! work across the execution resources you have, not from adding more of
+//! them.  [`WorkerRuntime`] folds both paths into one set of workers
+//! spawned once at server start, every worker owning a full engine plus a
+//! warm [`Executor`] pool over the server-wide [`BufferPool`].
+//!
+//! ## The two-lane queue
+//!
+//! Workers pull from a [`WorkQueue`] with two lanes:
+//!
+//! * **shard lane** (high priority) — [`ShardTask`] fragments of an
+//!   already-admitted request.  Finishing them releases a gather (and its
+//!   output lease), so they go first.
+//! * **batch lane** — whole-request batches from the router's bucket
+//!   batcher.
+//!
+//! Both lanes are bounded at the server's queue capacity and their
+//! pushes block, so backpressure reaches the ingress queue no matter
+//! which path a flood takes (a queued scatter pins a full `m×n` output
+//! lease — the shard lane is the more important one to bound).
+//!
+//! **No-starvation argument, both directions.**  Shard tasks cannot
+//! starve: they are head-of-line on every idle worker.  Batches cannot
+//! starve either: a worker that has served [`SHARD_BURST`] consecutive
+//! shard tasks services one waiting batch before taking another shard, so
+//! a batch waits at most `workers × SHARD_BURST` shard executions — a
+//! bounded bypass, not a priority inversion.
+//!
+//! **Idleness-aware dispatch.**  There is no per-worker mailbox and no
+//! round-robin: tasks wait in the shared queue and only workers with
+//! nothing to do pop them.  Work stacks up behind a busy worker only when
+//! *every* worker is busy, which fixes the old sharded path's blind
+//! rotation (two concurrent scatters could pile shards on one busy engine
+//! while others sat parked).
+//!
+//! ## Fault isolation
+//!
+//! The queue's locks recover from mutex poisoning (a panicking thread
+//! cannot take the queue down with it), and the worker loop catches
+//! panics per request: a panicking execution becomes an error on that
+//! request's reply channel — never a dead worker, never a cascade of
+//! `lock().unwrap()` panics across siblings.  Shard-task panics were
+//! already confined by the gather (`shard::engine::execute_shard`).
+
+use std::collections::VecDeque;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+
+use anyhow::Result;
+
+use crate::exec::{BufferPool, ExecStats, Executor};
+use crate::formats::Csr;
+use crate::plan::{PlanOutcome, Planner};
+use crate::shard::engine::{execute_shard, ShardTask, WorkSink};
+
+use super::engine::{EngineConfig, SpmmEngine, SpmmResult};
+use super::metrics::Metrics;
+
+/// Consecutive shard tasks a worker serves before it must service a
+/// waiting batch (the batch lane's starvation bound).
+pub const SHARD_BURST: u32 = 4;
+
+/// Test-only fault injection: the worker loop panics on a request with
+/// this (otherwise absurd) dense width, exercising the panic-isolation
+/// path end to end.
+#[cfg(test)]
+pub(crate) const PANIC_N: usize = 424_242;
+
+/// One queued request (planned by the router; executed by a worker).
+pub(crate) struct Request {
+    pub id: u64,
+    pub csr: Arc<Csr>,
+    pub b: Arc<Vec<f32>>,
+    pub n: usize,
+    /// filled by the router thread — planned exactly once per request
+    pub outcome: Option<PlanOutcome>,
+    pub reply: Sender<Result<SpmmResult>>,
+}
+
+/// One unit of worker work.
+pub(crate) enum WorkItem {
+    /// same-bucket requests, run back-to-back against one engine
+    Batch(Vec<Request>),
+    /// one shard of a scattered request
+    Shard(ShardTask),
+}
+
+struct Lanes {
+    shard: VecDeque<ShardTask>,
+    batch: VecDeque<Vec<Request>>,
+    closed: bool,
+}
+
+/// Lock that shrugs off poisoning: a panicking holder leaves the data in
+/// a consistent state here (every critical section is a queue push/pop),
+/// so recovery is safe — and it turns "one worker panicked" into "one
+/// request failed" instead of "every sibling's `lock()` now panics".
+fn recover<T>(lock: &Mutex<T>) -> MutexGuard<'_, T> {
+    lock.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn recover_wait<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// The two-lane work queue shared by every worker.
+pub struct WorkQueue {
+    lanes: Mutex<Lanes>,
+    /// workers wait here for work (or shutdown)
+    available: Condvar,
+    /// producers (batch and shard alike) wait here when their lane is at
+    /// capacity; pops notify_all so each waiter rechecks its own lane
+    space: Condvar,
+    capacity: usize,
+}
+
+impl WorkQueue {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            lanes: Mutex::new(Lanes {
+                shard: VecDeque::new(),
+                batch: VecDeque::new(),
+                closed: false,
+            }),
+            available: Condvar::new(),
+            space: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Enqueue one shard task, blocking while the shard lane is at
+    /// capacity — both lanes carry the same backpressure contract, so a
+    /// flood of scatters (e.g. `Fixed(n)` shards *every* request and each
+    /// queued scatter pins a full `m×n` output lease) throttles at the
+    /// queue instead of growing it without bound.  Blocking here is
+    /// deadlock-free: only producers (router / scatter callers) push, and
+    /// workers always drain the shard lane first.  Tasks pushed after
+    /// `close` are dropped; dropping the task's gather state disconnects
+    /// the request's reply channel, which surfaces as a shutdown error.
+    pub(crate) fn push_shard(&self, task: ShardTask) {
+        let mut lanes = recover(&self.lanes);
+        while lanes.shard.len() >= self.capacity && !lanes.closed {
+            lanes = recover_wait(&self.space, lanes);
+        }
+        if lanes.closed {
+            return; // drop: reply channel disconnects
+        }
+        lanes.shard.push_back(task);
+        self.available.notify_one();
+    }
+
+    /// Enqueue one batch, blocking while the batch lane is at capacity —
+    /// the router thread stalls here, which backs pressure up into the
+    /// bounded ingress queue exactly as the old bounded work channel did.
+    pub(crate) fn push_batch(&self, reqs: Vec<Request>) {
+        let mut lanes = recover(&self.lanes);
+        while lanes.batch.len() >= self.capacity && !lanes.closed {
+            lanes = recover_wait(&self.space, lanes);
+        }
+        if lanes.closed {
+            for r in reqs {
+                let _ = r.reply.send(Err(anyhow::anyhow!("server shutting down")));
+            }
+            return;
+        }
+        lanes.batch.push_back(reqs);
+        self.available.notify_one();
+    }
+
+    /// Pop the next work item for one worker.  `streak` is the worker's
+    /// consecutive-shard counter (the anti-starvation state); returns
+    /// `None` only when the queue is closed **and** drained, so shutdown
+    /// never abandons admitted work.
+    pub(crate) fn pop(&self, streak: &mut u32) -> Option<WorkItem> {
+        let mut lanes = recover(&self.lanes);
+        loop {
+            // Pops notify_all on `space`: it hosts both batch and shard
+            // producers, and a notify_one could land on the wrong producer
+            // type and strand the other at a non-full lane.
+            //
+            // Bounded bypass: after SHARD_BURST shard tasks in a row,
+            // service one waiting batch before the next shard.
+            if *streak >= SHARD_BURST {
+                if let Some(reqs) = lanes.batch.pop_front() {
+                    *streak = 0;
+                    self.space.notify_all();
+                    return Some(WorkItem::Batch(reqs));
+                }
+            }
+            if let Some(task) = lanes.shard.pop_front() {
+                *streak = streak.saturating_add(1);
+                self.space.notify_all();
+                return Some(WorkItem::Shard(task));
+            }
+            if let Some(reqs) = lanes.batch.pop_front() {
+                *streak = 0;
+                self.space.notify_all();
+                return Some(WorkItem::Batch(reqs));
+            }
+            if lanes.closed {
+                return None;
+            }
+            // going idle: the burst bypass exists to bound starvation
+            // during *continuous* shard service, so the streak must not
+            // survive a park — a freshly woken worker serves the shard
+            // lane head-of-line again
+            *streak = 0;
+            lanes = recover_wait(&self.available, lanes);
+        }
+    }
+
+    /// Close the queue: workers drain what is already queued, then exit.
+    pub fn close(&self) {
+        let mut lanes = recover(&self.lanes);
+        lanes.closed = true;
+        self.available.notify_all();
+        self.space.notify_all();
+    }
+
+    /// Current (shard, batch) lane depths — mirrored into the
+    /// `queue_shard_depth` / `queue_batch_depth` gauges.
+    pub fn depths(&self) -> (usize, usize) {
+        let lanes = recover(&self.lanes);
+        (lanes.shard.len(), lanes.batch.len())
+    }
+}
+
+/// Human-readable panic payload (the `&str` / `String` carried by
+/// `panic!`), so a caught panic names its cause in the request error.
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<&str>()
+        .map(|s| (*s).to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".into())
+}
+
+/// The server's one pool set: `workers` threads, each owning a full
+/// [`SpmmEngine`] and a warm [`Executor`] pool over the shared
+/// [`BufferPool`], all pulling from one two-lane [`WorkQueue`].  All
+/// thread creation happens in [`WorkerRuntime::spawn`], never per
+/// request; the runtime is also the [`WorkSink`] the sharded scatter path
+/// submits to.
+pub struct WorkerRuntime {
+    queue: Arc<WorkQueue>,
+    /// per-worker executors, created on the spawning thread so gauge
+    /// aggregation does not reach into worker-owned state
+    execs: Vec<Arc<Executor>>,
+    buffers: Arc<BufferPool>,
+    shard_counts: Vec<Arc<AtomicU64>>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    workers: usize,
+}
+
+impl WorkerRuntime {
+    /// Spawn the unified pool set.  Each worker builds its engine inside
+    /// its own thread (the PJRT client is not `Send`) from a clone of
+    /// `engine_cfg`; planner, buffer free-list, and metrics are shared
+    /// server-wide.
+    pub fn spawn(
+        workers: usize,
+        queue_capacity: usize,
+        engine_cfg: EngineConfig,
+        planner: Arc<Planner>,
+        buffers: Arc<BufferPool>,
+        metrics: Arc<Metrics>,
+    ) -> Arc<Self> {
+        let workers = workers.max(1);
+        let queue = Arc::new(WorkQueue::new(queue_capacity));
+        let mut execs = Vec::with_capacity(workers);
+        let mut shard_counts = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let exec = Arc::new(Executor::with_buffers(
+                engine_cfg.cpu_workers,
+                Arc::clone(&buffers),
+            ));
+            let count = Arc::new(AtomicU64::new(0));
+            let (t_queue, t_exec, t_count) = (Arc::clone(&queue), Arc::clone(&exec), Arc::clone(&count));
+            let (t_planner, t_metrics, t_cfg) =
+                (Arc::clone(&planner), Arc::clone(&metrics), engine_cfg.clone());
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("spmm-worker-{w}"))
+                    .spawn(move || worker_loop(w, t_queue, t_cfg, t_planner, t_metrics, t_exec, t_count))
+                    .expect("spawn unified worker"),
+            );
+            execs.push(exec);
+            shard_counts.push(count);
+        }
+        Arc::new(Self {
+            queue,
+            execs,
+            buffers,
+            shard_counts,
+            handles: Mutex::new(handles),
+            workers,
+        })
+    }
+
+    /// Worker-loop threads (excluding their pool threads), fixed at spawn.
+    pub fn worker_count(&self) -> usize {
+        self.workers
+    }
+
+    /// Submit one batch of planned requests (blocks on lane capacity).
+    pub(crate) fn submit_batch(&self, reqs: Vec<Request>) {
+        self.queue.push_batch(reqs);
+    }
+
+    /// The shared two-lane queue (depth gauges, tests).
+    pub fn queue(&self) -> &Arc<WorkQueue> {
+        &self.queue
+    }
+
+    /// Pool broadcast jobs dispatched per worker (inline single-task jobs
+    /// are not counted — see [`crate::exec::WorkerPool::jobs`]).
+    pub fn pool_jobs_per_worker(&self) -> Vec<u64> {
+        self.execs.iter().map(|e| e.pool().jobs()).collect()
+    }
+
+    /// OS threads this runtime currently owns: worker-loop threads plus
+    /// every worker's pool threads.  This is THE resident-thread figure —
+    /// there is no second pool set behind it.
+    pub fn resident_threads(&self) -> usize {
+        recover(&self.handles).len() + self.execs.iter().map(|e| e.pool().workers()).sum::<usize>()
+    }
+
+    /// Close the queue, drain admitted work, and join every worker.
+    /// Idempotent; also runs on drop.
+    pub fn shutdown(&self) {
+        self.queue.close();
+        let handles: Vec<_> = recover(&self.handles).drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl WorkSink for WorkerRuntime {
+    fn submit_shard(&self, task: ShardTask) {
+        self.queue.push_shard(task);
+    }
+
+    fn workers(&self) -> usize {
+        self.workers
+    }
+
+    fn shard_tasks_per_worker(&self) -> Vec<u64> {
+        self.shard_counts.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    fn exec_stats(&self) -> ExecStats {
+        let (mut workers, mut parked, mut jobs) = (0usize, 0usize, 0u64);
+        for e in &self.execs {
+            let s = e.stats();
+            workers += s.workers;
+            parked += s.parked;
+            jobs += s.jobs;
+        }
+        ExecStats {
+            workers,
+            parked,
+            jobs,
+            // the free-list is shared: count it once, not once per worker
+            buffers: self.buffers.stats(),
+        }
+    }
+}
+
+impl Drop for WorkerRuntime {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// One unified worker: build the engine in-thread, then serve the queue
+/// until it closes.  Shard tasks need only the planner + a scratch
+/// context, so they keep executing even when the engine failed to build
+/// (e.g. a missing artifacts manifest) — only batches depend on the
+/// engine.
+fn worker_loop(
+    index: usize,
+    queue: Arc<WorkQueue>,
+    engine_cfg: EngineConfig,
+    planner: Arc<Planner>,
+    metrics: Arc<Metrics>,
+    exec: Arc<Executor>,
+    shard_count: Arc<AtomicU64>,
+) {
+    let mut shard_ctx = exec.make_ctx();
+    let engine = SpmmEngine::new_shared(engine_cfg, Arc::clone(&planner), exec).map(|e| {
+        // pool gauges are unified: the runtime aggregate is the one
+        // writer, so the sync must be off BEFORE the shared metrics are
+        // attached (with_shared_metrics re-syncs) or this worker's slice
+        // clobbers the aggregate once at startup
+        e.with_exec_gauge_sync(false)
+            .with_shared_metrics(Arc::clone(&metrics))
+    });
+    let mut streak = 0u32;
+    while let Some(item) = queue.pop(&mut streak) {
+        match item {
+            WorkItem::Batch(reqs) => match &engine {
+                Ok(engine) => run_batch(engine, &metrics, reqs),
+                Err(e) => {
+                    // engine failed to build: fail the batch, keep serving
+                    // (shard tasks still run on this worker).  Count the
+                    // failures — monitoring must not see a healthy idle
+                    // server while every client errors.
+                    for r in reqs {
+                        metrics.requests.fetch_add(1, Ordering::Relaxed);
+                        metrics.errors.fetch_add(1, Ordering::Relaxed);
+                        let _ = r.reply.send(Err(anyhow::anyhow!("engine init: {e}")));
+                    }
+                }
+            },
+            WorkItem::Shard(task) => {
+                shard_count.fetch_add(1, Ordering::Relaxed);
+                execute_shard(&planner, &mut shard_ctx, task, index);
+            }
+        }
+    }
+}
+
+/// Run one batch back-to-back against the worker's engine, catching
+/// panics per request: a poisoned request degrades to an error on its own
+/// reply channel — the worker, its siblings, and the queue all survive.
+fn run_batch(engine: &SpmmEngine, metrics: &Metrics, reqs: Vec<Request>) {
+    for r in reqs {
+        let executed = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            #[cfg(test)]
+            if r.n == PANIC_N {
+                panic!("injected worker panic (test hook: n == PANIC_N)");
+            }
+            match &r.outcome {
+                Some(o) => engine.spmm_planned(&r.csr, &r.b, r.n, o),
+                None => engine.spmm(&r.csr, &r.b, r.n),
+            }
+        }));
+        let res = executed.unwrap_or_else(|payload| {
+            metrics.errors.fetch_add(1, Ordering::Relaxed);
+            Err(anyhow::anyhow!(
+                "request {} panicked during execution: {}",
+                r.id,
+                panic_message(payload.as_ref())
+            ))
+        });
+        let _ = r.reply.send(res);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn dummy_request(id: u64) -> Request {
+        Request {
+            id,
+            csr: Arc::new(Csr::random(20, 20, 2.0, 7000 + id)),
+            b: Arc::new(crate::gen::dense_matrix(20, 4, 7100 + id)),
+            n: 4,
+            outcome: None,
+            reply: channel().0,
+        }
+    }
+
+    #[test]
+    fn shard_lane_preempts_queued_batches() {
+        let q = WorkQueue::new(8);
+        q.push_batch(vec![dummy_request(1)]);
+        q.push_shard(ShardTask::dummy());
+        let mut streak = 0u32;
+        assert!(matches!(q.pop(&mut streak), Some(WorkItem::Shard(_))));
+        assert!(matches!(q.pop(&mut streak), Some(WorkItem::Batch(_))));
+    }
+
+    #[test]
+    fn batches_are_not_starved_past_the_burst_bound() {
+        let q = WorkQueue::new(8);
+        for _ in 0..SHARD_BURST + 2 {
+            q.push_shard(ShardTask::dummy());
+        }
+        q.push_batch(vec![dummy_request(2)]);
+        let mut streak = 0u32;
+        let mut shard_runs_before_batch = 0u32;
+        loop {
+            match q.pop(&mut streak) {
+                Some(WorkItem::Shard(_)) => shard_runs_before_batch += 1,
+                Some(WorkItem::Batch(_)) => break,
+                None => panic!("queue closed unexpectedly"),
+            }
+        }
+        assert_eq!(
+            shard_runs_before_batch, SHARD_BURST,
+            "a waiting batch is served after at most SHARD_BURST shard tasks"
+        );
+    }
+
+    #[test]
+    fn close_drains_queued_work_before_ending() {
+        let q = WorkQueue::new(8);
+        q.push_shard(ShardTask::dummy());
+        q.push_batch(vec![dummy_request(3)]);
+        q.close();
+        let mut streak = 0u32;
+        assert!(matches!(q.pop(&mut streak), Some(WorkItem::Shard(_))));
+        assert!(matches!(q.pop(&mut streak), Some(WorkItem::Batch(_))));
+        assert!(q.pop(&mut streak).is_none());
+        // pushes after close are dropped / refused, not queued
+        q.push_shard(ShardTask::dummy());
+        assert!(q.pop(&mut streak).is_none());
+    }
+
+    #[test]
+    fn poisoned_queue_mutex_recovers() {
+        let q = Arc::new(WorkQueue::new(8));
+        // poison the lanes mutex the hard way: panic while holding it
+        let qc = Arc::clone(&q);
+        let _ = std::thread::spawn(move || {
+            let _guard = qc.lanes.lock().unwrap();
+            panic!("poison the lanes mutex");
+        })
+        .join();
+        assert!(q.lanes.is_poisoned());
+        // every operation keeps working through the recovery guard
+        q.push_shard(ShardTask::dummy());
+        q.push_batch(vec![dummy_request(4)]);
+        assert_eq!(q.depths(), (1, 1));
+        let mut streak = 0u32;
+        assert!(matches!(q.pop(&mut streak), Some(WorkItem::Shard(_))));
+        assert!(matches!(q.pop(&mut streak), Some(WorkItem::Batch(_))));
+        q.close();
+        assert!(q.pop(&mut streak).is_none());
+    }
+
+    #[test]
+    fn runtime_executes_batches_and_replies() {
+        let planner = Arc::new(Planner::new(9.35, 64, 2));
+        let buffers = Arc::new(BufferPool::new());
+        let metrics = Arc::new(Metrics::new());
+        let rt = WorkerRuntime::spawn(
+            2,
+            16,
+            EngineConfig {
+                artifacts_dir: None,
+                cpu_workers: 2,
+                ..Default::default()
+            },
+            planner,
+            buffers,
+            Arc::clone(&metrics),
+        );
+        assert_eq!(rt.worker_count(), 2);
+        assert_eq!(rt.resident_threads(), 2 + 2 * 2);
+        let a = Arc::new(Csr::random(60, 60, 4.0, 7201));
+        let b = Arc::new(crate::gen::dense_matrix(60, 4, 7202));
+        let want = crate::spmm::spmm_reference(&a, &b, 4);
+        let mut receivers = Vec::new();
+        for id in 0..6u64 {
+            let (tx, rx) = channel();
+            rt.submit_batch(vec![Request {
+                id,
+                csr: Arc::clone(&a),
+                b: Arc::clone(&b),
+                n: 4,
+                outcome: None,
+                reply: tx,
+            }]);
+            receivers.push(rx);
+        }
+        for rx in receivers {
+            let r = rx.recv().unwrap().unwrap();
+            for (x, y) in r.c.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()));
+            }
+        }
+        rt.shutdown();
+        assert_eq!(rt.resident_threads(), 2 * 2, "worker loops joined; pools live until drop");
+        assert_eq!(metrics.snapshot().completed, 6);
+    }
+
+    #[test]
+    fn engine_init_failure_fails_batches_not_the_worker() {
+        let planner = Arc::new(Planner::new(9.35, 64, 1));
+        let buffers = Arc::new(BufferPool::new());
+        let metrics = Arc::new(Metrics::new());
+        let rt = WorkerRuntime::spawn(
+            1,
+            4,
+            EngineConfig {
+                artifacts_dir: Some("/nonexistent/artifacts".into()),
+                cpu_workers: 1,
+                ..Default::default()
+            },
+            planner,
+            buffers,
+            metrics,
+        );
+        let (tx, rx) = channel();
+        rt.submit_batch(vec![Request {
+            id: 0,
+            csr: Arc::new(Csr::random(10, 10, 2.0, 7301)),
+            b: Arc::new(crate::gen::dense_matrix(10, 2, 7302)),
+            n: 2,
+            outcome: None,
+            reply: tx,
+        }]);
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(err.to_string().contains("engine init"), "{err}");
+    }
+}

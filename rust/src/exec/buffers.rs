@@ -13,6 +13,8 @@ use std::ops::{Deref, DerefMut};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use super::pool::SendPtr;
+
 /// Per-length cap on retained buffers.
 const MAX_PER_SHELF: usize = 8;
 /// Cap on distinct lengths retained; beyond it, returned buffers of new
@@ -119,6 +121,80 @@ impl OutputBuf {
         self.pool = None;
         std::mem::take(&mut self.data)
     }
+
+    /// Split this buffer into per-shard **output-range leases**: window
+    /// `i` covers rows `[cuts[i], cuts[i+1])` of an `m×n` row-major
+    /// output, i.e. elements `[cuts[i]·n, cuts[i+1]·n)`.  This is how a
+    /// scatter hands disjoint writable windows of ONE allocation to shard
+    /// jobs that execute on arbitrary pool workers.
+    ///
+    /// Checked here so every range is structurally safe: `cuts` must be
+    /// non-decreasing, start at 0, and end exactly at `len / n` — which
+    /// makes the windows pairwise disjoint and in-bounds by construction.
+    ///
+    /// Contract (crate-internal): the caller must keep this `OutputBuf`
+    /// alive (not dropped, `into_vec` not called) until every returned
+    /// range is done being written — the sharded gather holds the lease
+    /// until its completion countdown reaches zero — and must not read the
+    /// buffer or call `split_rows` again while ranges are live.
+    pub(crate) fn split_rows(&mut self, cuts: &[usize], n: usize) -> Vec<OutputRange> {
+        assert!(cuts.len() >= 2 && cuts[0] == 0, "cuts must start at 0: {cuts:?}");
+        assert!(
+            cuts.windows(2).all(|w| w[0] <= w[1]),
+            "cuts must be non-decreasing: {cuts:?}"
+        );
+        assert_eq!(
+            cuts.last().unwrap() * n,
+            self.data.len(),
+            "cuts must tile the whole buffer (last cut × n == len)"
+        );
+        let base = self.data.as_mut_ptr();
+        cuts.windows(2)
+            .map(|w| OutputRange {
+                // Safety: w[0]·n ≤ len by the checks above, so the offset
+                // stays inside (or one past) the allocation.
+                ptr: SendPtr(unsafe { base.add(w[0] * n) }),
+                len: (w[1] - w[0]) * n,
+            })
+            .collect()
+    }
+}
+
+/// A disjoint writable window of one [`OutputBuf`] allocation, created by
+/// [`OutputBuf::split_rows`].  Shard jobs carry one of these across
+/// threads instead of a raw base pointer + offset: the window is sized and
+/// placed at construction (checked), so the executing worker can only ever
+/// touch its own rows.
+///
+/// The allocation behind the pointer is owned by the `OutputBuf` the range
+/// was split from; `split_rows` documents the liveness contract.
+pub struct OutputRange {
+    ptr: SendPtr<f32>,
+    len: usize,
+}
+
+impl OutputRange {
+    /// Elements in the window (`rows × n`).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The writable window.  Safety rests on `split_rows`' construction
+    /// (in-bounds, pairwise disjoint) and liveness contract (the backing
+    /// `OutputBuf` outlives every range).
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.0, self.len) }
+    }
+}
+
+impl std::fmt::Debug for OutputRange {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "OutputRange({} elems)", self.len)
+    }
 }
 
 impl From<Vec<f32>> for OutputBuf {
@@ -223,5 +299,44 @@ mod tests {
         let b = OutputBuf::detached(vec![1.0, 2.0]);
         assert_eq!(&b[..], &[1.0, 2.0]);
         drop(b); // no pool: plain free
+    }
+
+    #[test]
+    fn split_rows_yields_disjoint_covering_windows() {
+        let mut buf = OutputBuf::detached(vec![0.0; 5 * 3]); // 5 rows × n=3
+        let mut ranges = buf.split_rows(&[0, 2, 2, 5], 3);
+        assert_eq!(ranges.len(), 3);
+        assert_eq!(ranges[0].len(), 6);
+        assert_eq!(ranges[1].len(), 0, "empty shard gets an empty window");
+        assert_eq!(ranges[2].len(), 9);
+        // writes through the ranges land in the parent's rows, disjointly
+        ranges[0].as_mut_slice().fill(1.0);
+        ranges[2].as_mut_slice().fill(2.0);
+        drop(ranges);
+        assert_eq!(&buf[..6], &[1.0; 6]);
+        assert_eq!(&buf[6..], &[2.0; 9]);
+    }
+
+    #[test]
+    fn split_rows_handles_zero_width_output() {
+        let mut buf = OutputBuf::detached(Vec::new());
+        let ranges = buf.split_rows(&[0, 10, 40], 0); // n = 0: every window empty
+        assert!(ranges.iter().all(|r| r.is_empty()));
+        let mut empty = OutputBuf::detached(Vec::new());
+        assert_eq!(empty.split_rows(&[0, 0], 4).len(), 1); // m = 0
+    }
+
+    #[test]
+    #[should_panic(expected = "tile the whole buffer")]
+    fn split_rows_rejects_short_cuts() {
+        let mut buf = OutputBuf::detached(vec![0.0; 12]);
+        let _ = buf.split_rows(&[0, 2], 3); // 2×3 != 12
+    }
+
+    #[test]
+    #[should_panic(expected = "non-decreasing")]
+    fn split_rows_rejects_rewinding_cuts() {
+        let mut buf = OutputBuf::detached(vec![0.0; 12]);
+        let _ = buf.split_rows(&[0, 3, 2, 4], 3);
     }
 }

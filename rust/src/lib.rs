@@ -99,11 +99,15 @@
 //!   row-split while sparse shards run merge), and the cut vectors
 //!   themselves are cached by *parent* fingerprint
 //!   ([`plan::ShardLayoutCache`]);
-//! * **scatter-gather execution** — [`shard::ShardedEngine`] dispatches
-//!   shards round-robin across engine threads (each a warm
-//!   [`exec::WorkerPool`]) writing disjoint row ranges of **one**
-//!   [`exec::OutputBuf`] lease; the last shard assembles the reply, so
-//!   gathering is free.
+//! * **scatter-gather execution** — the thread-less
+//!   [`shard::ShardedEngine`] submits shards as first-class jobs to a
+//!   [`shard::WorkSink`] (in production the server's unified
+//!   [`coordinator::WorkerRuntime`] — the *same* warm pools that serve
+//!   batches, so sharding adds zero resident threads), each writing a
+//!   disjoint [`exec::OutputRange`] lease of **one** [`exec::OutputBuf`];
+//!   the last shard assembles the reply, so gathering is free.  Dispatch
+//!   is idleness-aware: shards wait on the high-priority lane of the
+//!   shared two-lane queue and only idle workers pop them.
 //!
 //! Because cuts sit on row boundaries, the gathered result is
 //! bitwise-identical to the unsharded executor run over the concatenated

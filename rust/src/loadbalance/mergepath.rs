@@ -48,11 +48,25 @@ pub fn merge_coord(csr: &Csr, diagonal: usize) -> (usize, usize) {
 /// diagonals, so shards inherit merge-path's equal-(rows+nonzeros)
 /// balancing while staying row-aligned (a shard must own whole rows to
 /// write a disjoint output range).
-pub fn nearest_row_cut(csr: &Csr, diagonal: usize) -> usize {
+///
+/// The merge space of an `m`-row, `nnz`-nonzero matrix ends at
+/// `m + nnz`; a diagonal beyond it is a caller error (e.g. a hand-built
+/// shard layout sized for a different matrix) and returns `Err` rather
+/// than silently clamping to the last row, which would fold distinct
+/// out-of-range diagonals onto one boundary and mask the bug.
+pub fn nearest_row_cut(csr: &Csr, diagonal: usize) -> Result<usize, String> {
     let total = csr.m + csr.nnz();
-    let (i, _) = merge_coord(csr, diagonal.min(total));
+    if diagonal > total {
+        return Err(format!(
+            "diagonal {diagonal} out of range: the merge space of a {}-row matrix \
+             with {} nonzeros ends at {total}",
+            csr.m,
+            csr.nnz()
+        ));
+    }
+    let (i, _) = merge_coord(csr, diagonal);
     if i >= csr.m {
-        return csr.m;
+        return Ok(csr.m);
     }
     // merge_coord guarantees row_ptr[i] <= j, so `below <= diagonal`; the
     // next boundary is strictly past the diagonal (row-end i unconsumed).
@@ -60,9 +74,9 @@ pub fn nearest_row_cut(csr: &Csr, diagonal: usize) -> usize {
     let above = (i + 1) + csr.row_ptr[i + 1];
     debug_assert!(below <= diagonal && above > diagonal);
     if diagonal - below <= above - diagonal {
-        i
+        Ok(i)
     } else {
-        i + 1
+        Ok(i + 1)
     }
 }
 
@@ -70,10 +84,23 @@ pub fn nearest_row_cut(csr: &Csr, diagonal: usize) -> usize {
 /// the diagonal relative to `row_lo` — used by the skew-aware sharder to
 /// split the gap *between* isolated heavy rows.  `cost(r) = (r - row_lo) +
 /// (row_ptr[r] - row_ptr[row_lo])` is strictly increasing in `r`, so the
-/// same binary search applies.
-pub fn row_cut_in_range(csr: &Csr, row_lo: usize, row_hi: usize, diagonal: usize) -> usize {
+/// same binary search applies.  As with [`nearest_row_cut`], a diagonal
+/// past the range's total work is an error, not a clamp.
+pub fn row_cut_in_range(
+    csr: &Csr,
+    row_lo: usize,
+    row_hi: usize,
+    diagonal: usize,
+) -> Result<usize, String> {
     debug_assert!(row_lo <= row_hi && row_hi <= csr.m);
     let cost = |r: usize| (r - row_lo) + (csr.row_ptr[r] - csr.row_ptr[row_lo]);
+    let span = cost(row_hi);
+    if diagonal > span {
+        return Err(format!(
+            "diagonal {diagonal} out of range: rows [{row_lo}, {row_hi}] carry \
+             {span} units of rows+nnz work"
+        ));
+    }
     // largest r with cost(r) <= diagonal (cost(row_lo) = 0 always holds)
     let (mut lo, mut hi) = (row_lo, row_hi);
     while lo < hi {
@@ -85,9 +112,9 @@ pub fn row_cut_in_range(csr: &Csr, row_lo: usize, row_hi: usize, diagonal: usize
         }
     }
     if lo < row_hi && diagonal - cost(lo) > cost(lo + 1) - diagonal {
-        lo + 1
+        Ok(lo + 1)
     } else {
-        lo
+        Ok(lo)
     }
 }
 
@@ -244,7 +271,7 @@ mod tests {
             let csr = Csr::random(m, k, d_avg, seed);
             let total = csr.m + csr.nnz();
             for d in 0..=total {
-                let got = nearest_row_cut(&csr, d);
+                let got = nearest_row_cut(&csr, d).unwrap();
                 let want = nearest_row_cut_oracle(&csr, d);
                 let (gc, wc) = (got + csr.row_ptr[got], want + csr.row_ptr[want]);
                 assert_eq!(
@@ -259,10 +286,25 @@ mod tests {
     #[test]
     fn nearest_row_cut_with_empty_rows_and_extremes() {
         let csr = Csr::new(5, 4, vec![0, 0, 2, 2, 2, 3], vec![1, 2, 0], vec![1.0; 3]).unwrap();
-        assert_eq!(nearest_row_cut(&csr, 0), 0);
+        assert_eq!(nearest_row_cut(&csr, 0), Ok(0));
         let total = csr.m + csr.nnz();
-        assert_eq!(nearest_row_cut(&csr, total), csr.m);
-        assert_eq!(nearest_row_cut(&csr, total + 100), csr.m);
+        assert_eq!(nearest_row_cut(&csr, total), Ok(csr.m));
+    }
+
+    #[test]
+    fn out_of_range_diagonal_is_an_error_not_a_clamp() {
+        // regression: a diagonal past m + nnz (e.g. a hand-built shard
+        // layout sized for a different matrix) used to silently return the
+        // last row; it must surface as an error instead
+        let csr = Csr::new(5, 4, vec![0, 0, 2, 2, 2, 3], vec![1, 2, 0], vec![1.0; 3]).unwrap();
+        let total = csr.m + csr.nnz();
+        let err = nearest_row_cut(&csr, total + 1).unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+        assert!(nearest_row_cut(&csr, total + 100).is_err());
+        // the range-restricted search validates against the range's work
+        let span = (csr.m - 1) + (csr.row_ptr[csr.m - 1] - csr.row_ptr[0]);
+        assert!(row_cut_in_range(&csr, 0, csr.m - 1, span).is_ok());
+        assert!(row_cut_in_range(&csr, 0, csr.m - 1, span + 1).is_err());
     }
 
     #[test]
@@ -271,8 +313,8 @@ mod tests {
         let total = csr.m + csr.nnz();
         // over the full range the restricted search is the global one
         for d in (0..=total).step_by(7) {
-            let full = nearest_row_cut(&csr, d);
-            let ranged = row_cut_in_range(&csr, 0, csr.m, d);
+            let full = nearest_row_cut(&csr, d).unwrap();
+            let ranged = row_cut_in_range(&csr, 0, csr.m, d).unwrap();
             let (fc, rc) = (full + csr.row_ptr[full], ranged + csr.row_ptr[ranged]);
             assert_eq!(fc.abs_diff(d), rc.abs_diff(d), "diagonal {d}");
         }
@@ -280,11 +322,11 @@ mod tests {
         let (lo, hi) = (20usize, 60usize);
         let span = (hi - lo) + (csr.row_ptr[hi] - csr.row_ptr[lo]);
         for frac in 1..4 {
-            let r = row_cut_in_range(&csr, lo, hi, span * frac / 4);
+            let r = row_cut_in_range(&csr, lo, hi, span * frac / 4).unwrap();
             assert!((lo..=hi).contains(&r));
         }
-        assert_eq!(row_cut_in_range(&csr, lo, hi, 0), lo);
-        assert_eq!(row_cut_in_range(&csr, lo, hi, span), hi);
+        assert_eq!(row_cut_in_range(&csr, lo, hi, 0), Ok(lo));
+        assert_eq!(row_cut_in_range(&csr, lo, hi, span), Ok(hi));
     }
 
     #[test]

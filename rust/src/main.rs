@@ -48,10 +48,12 @@ USAGE:
   merge-spmm bench <id|all> [--measured] [--seed N] [--out DIR]
   merge-spmm run --mtx FILE [--n N] [--artifacts DIR] [--cpu-only]
   merge-spmm serve [--requests N] [--workers W] [--cpu-only] [--artifacts DIR] [--plans FILE]
-                   [--shards N|auto]   N: scatter EVERY request across N engines;
-                                       auto: shard only large requests (CPU executors
-                                       serve sharded requests; small ones keep the
-                                       batcher/PJRT path)
+                   [--shards N|auto]   N: scatter EVERY request into N shards;
+                                       auto: shard only large requests.  Shards run
+                                       as first-class jobs on the same W workers that
+                                       serve batches (one pool set, CPU executors;
+                                       small requests keep the batcher/PJRT path).
+                                       --engines is a deprecated alias for --workers.
   merge-spmm suite [--seed N]
   merge-spmm info [--artifacts DIR]
 
@@ -77,7 +79,8 @@ fn positional(args: &[String]) -> Option<&str> {
             continue;
         }
         if a == "--seed" || a == "--out" || a == "--n" || a == "--mtx" || a == "--artifacts"
-            || a == "--requests" || a == "--workers" || a == "--plans" || a == "--shards"
+            || a == "--requests" || a == "--workers" || a == "--engines" || a == "--plans"
+            || a == "--shards"
         {
             skip = true;
             continue;
@@ -198,7 +201,20 @@ fn build_engine(args: &[String]) -> anyhow::Result<SpmmEngine> {
 
 fn cmd_serve(args: &[String]) -> i32 {
     let requests: usize = opt(args, "--requests").and_then(|s| s.parse().ok()).unwrap_or(200);
-    let workers: usize = opt(args, "--workers").and_then(|s| s.parse().ok()).unwrap_or(2);
+    // `--engines` predates the unified worker runtime (the sharded path
+    // had its own engine-thread pool); shard tasks now run on the batcher
+    // workers, so the flag survives only as a deprecated alias.
+    let workers: usize = match (opt(args, "--workers"), opt(args, "--engines")) {
+        (Some(w), _) => w.parse().ok().unwrap_or(2),
+        (None, Some(e)) => {
+            eprintln!(
+                "(serve: --engines is deprecated — shard tasks run on the unified \
+                 worker pool; treating it as --workers {e})"
+            );
+            e.parse().ok().unwrap_or(2)
+        }
+        (None, None) => 2,
+    };
     let mut engine_cfg = if flag(args, "--cpu-only") {
         EngineConfig {
             artifacts_dir: None,
@@ -271,12 +287,14 @@ fn cmd_serve(args: &[String]) -> i32 {
         }
     }
     let wall = t0.elapsed().as_secs_f64();
-    if let Some(se) = server.sharded() {
+    if server.sharded().is_some() {
         println!(
-            "sharded engines: {} — shards/engine {:?}, pool jobs {:?}",
-            se.engines(),
-            se.shards_per_engine(),
-            se.engine_jobs()
+            "unified pool: {} workers, {} resident threads — shard tasks/worker {:?}, \
+             pool jobs/worker {:?}",
+            server.workers(),
+            server.resident_threads(),
+            server.shards_per_worker(),
+            server.pool_jobs_per_worker()
         );
     }
     let snap = server.shutdown();

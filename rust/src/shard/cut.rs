@@ -59,7 +59,8 @@ fn balanced_cuts(a: &Csr, p: usize) -> Vec<usize> {
     let mut cuts = Vec::with_capacity(p + 1);
     cuts.push(0usize);
     for s in 1..p {
-        let r = nearest_row_cut(a, total * s / p);
+        // s < p, so total·s/p < total: always inside the merge space
+        let r = nearest_row_cut(a, total * s / p).expect("equally-spaced diagonal in range");
         if r > *cuts.last().unwrap() && r < a.m {
             cuts.push(r);
         }
@@ -159,7 +160,9 @@ fn skewed_cuts(a: &Csr, p: usize, mut heavy: Vec<usize>) -> Vec<usize> {
 fn cut_gap(a: &Csr, lo: usize, hi: usize, parts: usize, cuts: &mut Vec<usize>) {
     let span = (hi - lo) + (a.row_ptr[hi] - a.row_ptr[lo]);
     for s in 1..parts {
-        let r = row_cut_in_range(a, lo, hi, span * s / parts);
+        // s < parts, so span·s/parts < span: always inside the gap's work
+        let r = row_cut_in_range(a, lo, hi, span * s / parts)
+            .expect("equally-spaced gap diagonal in range");
         if r > *cuts.last().unwrap() && r < hi {
             cuts.push(r);
         }

@@ -1,22 +1,31 @@
-//! Scatter-gather execution of one request across multiple engines.
+//! Scatter-gather of one request across the **unified worker runtime**.
 //!
-//! A [`ShardedEngine`] owns `E` long-lived *engine threads*, each with its
-//! own warm [`WorkerPool`] (via [`Executor`]) and reusable
-//! [`ExecCtx`] — the same per-engine resources
-//! [`crate::coordinator::Server`] gives its workers — all drawing output
-//! leases from one shared [`BufferPool`] and planning through one shared
-//! [`Planner`].  One request flows as:
+//! A [`ShardedEngine`] owns no threads.  It is a thin scatter/gather layer
+//! over a [`WorkSink`] — in production the server's
+//! [`crate::coordinator::workers::WorkerRuntime`], the *same* warm pool
+//! set that serves the batcher path.  Shard tasks are first-class jobs on
+//! those workers (the high-priority lane of the two-lane
+//! [`crate::coordinator::workers::WorkQueue`]), so the sharded path adds
+//! **zero resident threads**: one pool set, spawned at server start,
+//! serves whole-request batches and shard fragments alike.  One request
+//! flows as:
 //!
 //! 1. **Scatter** (caller thread): cut the matrix ([`Planner::shard_cuts`]
 //!    — cached by parent fingerprint), take zero-copy
 //!    [`Csr::shard_view`]s, plan each shard independently (per-shard
-//!    fingerprints), lease **one** `m×n` [`OutputBuf`], and send each
-//!    shard round-robin to a distinct engine thread.
-//! 2. **Execute** (engine threads, concurrently): replay or compute the
+//!    fingerprints), lease **one** `m×n` [`crate::exec::OutputBuf`] and
+//!    split it into checked per-shard [`OutputRange`] leases
+//!    ([`crate::exec::OutputBuf::split_rows`]), then submit each
+//!    [`ShardTask`] to the sink.  Dispatch is **idleness-aware** by
+//!    construction: tasks sit in the shared queue and only idle workers
+//!    pop them, so concurrent scatters spread across disjoint workers
+//!    whenever capacity allows — there is no blind round-robin that could
+//!    stack shards on a busy worker while others sit parked.
+//! 2. **Execute** (pool workers, concurrently): replay or compute the
 //!    shard's phase-1 partition and run the planned executor *into the
-//!    shard's disjoint row range* of the shared output.  Disjointness is
-//!    structural: cuts are strictly increasing row boundaries, so the
-//!    windows `[cuts[i]·n, cuts[i+1]·n)` never overlap.
+//!    shard's disjoint output-range lease*.  Disjointness is structural:
+//!    cuts are strictly increasing row boundaries, so `split_rows`'
+//!    windows never overlap.
 //! 3. **Gather**: the last shard to finish (atomic countdown) assembles
 //!    the [`SpmmResult`] around the one buffer lease and replies.  No
 //!    copy, no reduction — row ranges compose by construction.
@@ -25,38 +34,58 @@
 //! A/B-probes; the tuner keeps learning from unsharded traffic.
 
 use std::panic::AssertUnwindSafe;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::engine::{ExecutionPath, SpmmResult};
+use crate::coordinator::engine::{EngineConfig, ExecutionPath, SpmmResult};
+use crate::coordinator::workers::{panic_message, WorkerRuntime};
 use crate::coordinator::Metrics;
-use crate::exec::{BufferPool, ExecCtx, Executor, OutputBuf, SendPtr};
+use crate::exec::{BufferPool, ExecCtx, OutputBuf, OutputRange};
 use crate::formats::Csr;
 use crate::plan::{PlanOutcome, Planner};
 use crate::spmm::{self, Algorithm};
 
 use super::{cut, ShardPolicy};
 
-/// Shared per-request gather state: the single output lease, the raw base
-/// pointer shards write through, and the completion countdown.
+/// Where shard tasks execute.  The production sink is the server's
+/// [`WorkerRuntime`] — the batcher workers' warm pools — so implementing
+/// this trait is how an execution substrate opts into the sharded path.
+pub trait WorkSink: Send + Sync {
+    /// Enqueue one shard task; some idle worker will execute it.  A sink
+    /// that has shut down may drop the task — the gather state it carries
+    /// is dropped with it, which disconnects the request's reply channel.
+    fn submit_shard(&self, task: ShardTask);
+
+    /// Workers serving the sink.  Sizes `--shards auto` (a request is cut
+    /// into at most this many shards) and caps useful scatter width.
+    fn workers(&self) -> usize;
+
+    /// Shard tasks executed per worker since start (observability and the
+    /// multi-worker-spread assertions in tests).
+    fn shard_tasks_per_worker(&self) -> Vec<u64>;
+
+    /// Aggregate executor-pool stats across the sink's workers (mirrored
+    /// into the unified `pool_*` gauges).
+    fn exec_stats(&self) -> crate::exec::ExecStats;
+}
+
+/// Shared per-request gather state: the single output lease and the
+/// completion countdown.
 struct GatherState {
-    /// the one `m×n` lease; taken by the finishing shard (or dropped back
-    /// to the pool on error)
+    /// the one `m×n` lease; its allocation backs every shard's
+    /// [`OutputRange`], so it must live here until `remaining` hits zero —
+    /// taken by the finishing shard (or dropped back to the pool on error)
     out: Mutex<Option<OutputBuf>>,
-    /// base pointer into `out`'s allocation.  Safety contract: each shard
-    /// writes only `[row_start·n, row_end·n)`, ranges are pairwise
-    /// disjoint (strictly increasing cuts), and the lease lives in `out`
-    /// until `remaining` hits zero.
-    base: SendPtr<f32>,
-    n: usize,
     shards: usize,
     remaining: AtomicUsize,
     cache_hits: AtomicUsize,
     rowsplit_shards: AtomicUsize,
+    /// distinct pool workers that executed this request's shards
+    workers: Mutex<Vec<usize>>,
     /// first per-shard failure (a panicking executor is caught, not
     /// propagated, so the gather always completes)
     error: Mutex<Option<String>>,
@@ -65,95 +94,117 @@ struct GatherState {
     metrics: Arc<Metrics>,
 }
 
-/// One shard's work order.
-struct ShardTask {
+/// One shard's work order: everything a pool worker needs to execute the
+/// shard and write its disjoint slice of the request's output.  Carried
+/// across threads by value; the output window is a checked
+/// [`OutputRange`] lease, not a raw pointer + offset.
+pub struct ShardTask {
     /// zero-copy row-range view — a real [`Csr`]
     shard: Csr,
-    /// parent row offset (start of this shard's output window)
+    /// parent row offset (diagnostics: names the shard in error messages)
     row_start: usize,
+    /// this shard's disjoint window of the request's single output lease
+    out: OutputRange,
     b: Arc<Vec<f32>>,
     outcome: PlanOutcome,
     gather: Arc<GatherState>,
 }
 
-/// Multi-engine scatter-gather executor for sharded requests.
+impl ShardTask {
+    /// Degenerate task for queue-level tests (never executed): an empty
+    /// shard over an empty window, with its own throwaway gather state.
+    #[cfg(test)]
+    pub(crate) fn dummy() -> Self {
+        let planner = Planner::new(spmm::DEFAULT_THRESHOLD, 4, 1);
+        let shard = Csr::empty(0, 1);
+        let outcome = planner.plan(&shard, None);
+        let mut out = OutputBuf::detached(Vec::new());
+        let ranges = out.split_rows(&[0, 0], 0);
+        Self {
+            shard,
+            row_start: 0,
+            out: ranges.into_iter().next().expect("one range"),
+            b: Arc::new(Vec::new()),
+            outcome,
+            gather: Arc::new(GatherState {
+                out: Mutex::new(Some(out)),
+                shards: 1,
+                remaining: AtomicUsize::new(1),
+                cache_hits: AtomicUsize::new(0),
+                rowsplit_shards: AtomicUsize::new(0),
+                workers: Mutex::new(Vec::new()),
+                error: Mutex::new(None),
+                reply: Mutex::new(Some(channel().0)),
+                t0: Instant::now(),
+                metrics: Arc::new(Metrics::new()),
+            }),
+        }
+    }
+}
+
+/// Scatter-gather front-end for sharded requests over a shared
+/// [`WorkSink`].  Thread-less: execution capacity belongs to the sink.
 pub struct ShardedEngine {
     planner: Arc<Planner>,
     buffers: Arc<BufferPool>,
     metrics: Arc<Metrics>,
     policy: ShardPolicy,
-    /// per-engine executors (kept for pool/job gauges; the engine threads
-    /// hold clones)
-    execs: Vec<Arc<Executor>>,
-    senders: Vec<Sender<ShardTask>>,
-    /// shards executed per engine (the "ran across ≥ N engines" evidence)
-    shard_counts: Vec<Arc<AtomicU64>>,
-    /// rotates the round-robin origin so consecutive requests spread
-    next_engine: AtomicUsize,
-    handles: Vec<std::thread::JoinHandle<()>>,
+    sink: Arc<dyn WorkSink>,
 }
 
 impl ShardedEngine {
-    /// Spawn `engines` engine threads (each a warm pool of `cpu_workers`
-    /// threads) over shared planning/buffer/metrics state.  All thread
-    /// creation happens here, never per request.
+    /// Scatter/gather layer over an existing worker substrate.  No thread
+    /// is created here — the sink's workers execute the shards.
     pub fn new(
-        engines: usize,
-        cpu_workers: usize,
         policy: ShardPolicy,
+        sink: Arc<dyn WorkSink>,
         planner: Arc<Planner>,
         buffers: Arc<BufferPool>,
         metrics: Arc<Metrics>,
     ) -> Self {
-        let engines = engines.max(1);
-        let mut execs = Vec::with_capacity(engines);
-        let mut senders = Vec::with_capacity(engines);
-        let mut shard_counts = Vec::with_capacity(engines);
-        let mut handles = Vec::with_capacity(engines);
-        for e in 0..engines {
-            let (tx, rx) = channel::<ShardTask>();
-            let exec = Arc::new(Executor::with_buffers(cpu_workers, Arc::clone(&buffers)));
-            let count = Arc::new(AtomicU64::new(0));
-            let (worker_exec, worker_count) = (Arc::clone(&exec), Arc::clone(&count));
-            let worker_planner = Arc::clone(&planner);
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("spmm-shard-{e}"))
-                    .spawn(move || engine_loop(rx, worker_planner, worker_exec, worker_count))
-                    .expect("spawn shard engine"),
-            );
-            execs.push(exec);
-            senders.push(tx);
-            shard_counts.push(count);
-        }
         Self {
             planner,
             buffers,
             metrics,
             policy,
-            execs,
-            senders,
-            shard_counts,
-            next_engine: AtomicUsize::new(0),
-            handles,
+            sink,
         }
     }
 
-    /// Self-contained CPU-only engine (tests, examples): fresh planner,
-    /// buffer pool, and metrics.
-    pub fn cpu_only(policy: ShardPolicy, engines: usize, cpu_workers: usize) -> Self {
-        Self::new(
-            engines,
-            cpu_workers,
-            policy,
-            Arc::new(Planner::new(spmm::DEFAULT_THRESHOLD, 1024, cpu_workers)),
-            Arc::new(BufferPool::new()),
-            Arc::new(Metrics::new()),
-        )
+    /// Self-contained CPU-only engine (tests, examples): spawns its own
+    /// [`WorkerRuntime`] of `workers` workers (each a warm pool of
+    /// `cpu_workers` threads) plus fresh planner, buffer pool, and
+    /// metrics.  The runtime is dropped — queued shards drained, workers
+    /// joined — when the engine drops.
+    pub fn cpu_only(policy: ShardPolicy, workers: usize, cpu_workers: usize) -> Self {
+        let planner = Arc::new(Planner::new(spmm::DEFAULT_THRESHOLD, 1024, cpu_workers));
+        let buffers = Arc::new(BufferPool::new());
+        let metrics = Arc::new(Metrics::new());
+        let runtime = WorkerRuntime::spawn(
+            workers.max(1),
+            256,
+            EngineConfig {
+                artifacts_dir: None,
+                cpu_workers,
+                ..Default::default()
+            },
+            Arc::clone(&planner),
+            Arc::clone(&buffers),
+            Arc::clone(&metrics),
+        );
+        Self::new(policy, runtime, planner, buffers, metrics)
     }
 
-    pub fn engines(&self) -> usize {
-        self.execs.len()
+    /// Workers in the underlying sink (the shared pool `--shards auto`
+    /// sizes against).
+    pub fn workers(&self) -> usize {
+        self.sink.workers()
+    }
+
+    /// Shard tasks executed by each sink worker since start (the "ran
+    /// across ≥ N workers" evidence).
+    pub fn shards_per_worker(&self) -> Vec<u64> {
+        self.sink.shard_tasks_per_worker()
     }
 
     pub fn planner(&self) -> &Arc<Planner> {
@@ -166,35 +217,6 @@ impl ShardedEngine {
 
     pub fn policy(&self) -> &ShardPolicy {
         &self.policy
-    }
-
-    /// Shards executed by each engine thread since construction.
-    pub fn shards_per_engine(&self) -> Vec<u64> {
-        self.shard_counts.iter().map(|c| c.load(Ordering::Relaxed)).collect()
-    }
-
-    /// Pool jobs dispatched by each engine's executor (broadcast jobs
-    /// only; single-segment shards run inline and are not counted).
-    pub fn engine_jobs(&self) -> Vec<u64> {
-        self.execs.iter().map(|e| e.pool().jobs()).collect()
-    }
-
-    /// Aggregate executor stats across every engine thread (exported as
-    /// the pool/buffer gauges while the sharded path is active).
-    fn exec_stats(&self) -> crate::exec::ExecStats {
-        let (mut workers, mut parked, mut jobs) = (0usize, 0usize, 0u64);
-        for e in &self.execs {
-            let s = e.stats();
-            workers += s.workers;
-            parked += s.parked;
-            jobs += s.jobs;
-        }
-        crate::exec::ExecStats {
-            workers,
-            parked,
-            jobs,
-            buffers: self.buffers.stats(),
-        }
     }
 
     /// Submit a request whose reply goes to an existing channel — the
@@ -243,8 +265,7 @@ impl ShardedEngine {
         if b.len() != a.k * n {
             return Err(anyhow!("B must be k×n row-major ({}×{n})", a.k));
         }
-        let engines = self.execs.len();
-        let want = self.policy.shard_count(a, engines);
+        let want = self.policy.shard_count(a, self.sink.workers());
         let cuts = self.planner.shard_cuts(
             a,
             want,
@@ -258,16 +279,17 @@ impl ShardedEngine {
 
         let mut out = BufferPool::acquire(&self.buffers, a.m * n);
         self.metrics
-            .sync_exec_gauges(&self.exec_stats(), &self.planner.partition_stats());
-        let base = SendPtr(out.as_mut_ptr());
+            .sync_exec_gauges(&self.sink.exec_stats(), &self.planner.partition_stats());
+        // One allocation, `shards` checked disjoint windows: the leases
+        // ride inside the tasks; the buffer itself waits in the gather.
+        let ranges = out.split_rows(&cuts, n);
         let gather = Arc::new(GatherState {
             out: Mutex::new(Some(out)),
-            base,
-            n,
             shards,
             remaining: AtomicUsize::new(shards),
             cache_hits: AtomicUsize::new(0),
             rowsplit_shards: AtomicUsize::new(0),
+            workers: Mutex::new(Vec::with_capacity(shards)),
             error: Mutex::new(None),
             reply: Mutex::new(Some(reply)),
             t0: Instant::now(),
@@ -278,8 +300,7 @@ impl ShardedEngine {
         // fingerprints independently, so a mixed matrix runs row-split on
         // dense shards and merge on sparse ones, and repeats replay both
         // the plan and the stored phase-1 partition.
-        let origin = self.next_engine.fetch_add(1, Ordering::Relaxed);
-        for s in 0..shards {
+        for (s, range) in ranges.into_iter().enumerate() {
             let shard = a.shard_view(cuts[s], cuts[s + 1]);
             let outcome = self.planner.plan(&shard, None);
             let counter = if outcome.cache_hit {
@@ -288,18 +309,14 @@ impl ShardedEngine {
                 &self.metrics.plan_misses
             };
             counter.fetch_add(1, Ordering::Relaxed);
-            let task = ShardTask {
+            self.sink.submit_shard(ShardTask {
                 shard,
                 row_start: cuts[s],
+                out: range,
                 b: Arc::clone(b),
                 outcome,
                 gather: Arc::clone(&gather),
-            };
-            // Round-robin over engine threads: the shards of one request
-            // land on distinct (idle) engines whenever shards ≤ engines.
-            self.senders[(origin + s) % engines]
-                .send(task)
-                .map_err(|_| anyhow!("shard engine thread terminated"))?;
+            });
         }
         self.metrics
             .sync_plan_gauges(&self.planner.cache().stats(), self.planner.tuner().threshold());
@@ -307,85 +324,56 @@ impl ShardedEngine {
     }
 }
 
-impl Drop for ShardedEngine {
-    fn drop(&mut self) {
-        self.senders.clear(); // closes the channels; engine threads exit
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
-    }
-}
-
-/// One engine thread: execute shard tasks until the channel closes.
-fn engine_loop(
-    rx: Receiver<ShardTask>,
-    planner: Arc<Planner>,
-    exec: Arc<Executor>,
-    count: Arc<AtomicU64>,
-) {
-    let mut ctx = exec.make_ctx();
-    while let Ok(task) = rx.recv() {
-        count.fetch_add(1, Ordering::Relaxed);
-        run_shard(&planner, &mut ctx, task);
-    }
-}
-
-/// Execute one shard into its disjoint window of the gathered output.
-fn run_shard(planner: &Planner, ctx: &mut ExecCtx, task: ShardTask) {
-    let gather = Arc::clone(&task.gather);
+/// Execute one shard into its output-range lease — called by the unified
+/// worker loop with the worker's own scratch context.  `worker` is the
+/// executing worker's index, recorded for the per-request spread report
+/// ([`SpmmResult::shard_workers`]).
+pub(crate) fn execute_shard(planner: &Planner, ctx: &mut ExecCtx, task: ShardTask, worker: usize) {
+    let ShardTask {
+        shard,
+        row_start,
+        mut out,
+        b,
+        outcome,
+        gather,
+    } = task;
     let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
-        let n = gather.n;
-        let len = task.shard.m * n;
-        // Safety: the cuts are strictly increasing row boundaries, so the
-        // window [row_start·n, row_start·n + len) is in-bounds and
-        // pairwise disjoint from every other shard's; the allocation
-        // outlives this write because `gather.out` holds the lease until
-        // `remaining` reaches zero (below), and the countdown's AcqRel
-        // ordering publishes the writes to the finishing thread.
-        let c = unsafe { std::slice::from_raw_parts_mut(gather.base.0.add(task.row_start * n), len) };
-        if task.shard.nnz() == 0 {
+        let n = if shard.m == 0 { 0 } else { out.len() / shard.m };
+        let c = out.as_mut_slice();
+        if shard.nnz() == 0 {
             // all-empty shard: nothing to plan or partition, just zero the
             // rows (both executors' overwrite contract, degenerate case)
             c.fill(0.0);
         } else {
-            let segs = planner.partition_for(&task.shard, &task.outcome);
-            match task.outcome.plan.algorithm {
-                Algorithm::RowSplit => {
-                    spmm::rowsplit_spmm_into(&task.shard, &task.b, n, &segs, ctx, c)
-                }
-                Algorithm::MergeBased => {
-                    spmm::merge_spmm_into(&task.shard, &task.b, n, &segs, ctx, c)
-                }
+            let segs = planner.partition_for(&shard, &outcome);
+            match outcome.plan.algorithm {
+                Algorithm::RowSplit => spmm::rowsplit_spmm_into(&shard, &b, n, &segs, ctx, c),
+                Algorithm::MergeBased => spmm::merge_spmm_into(&shard, &b, n, &segs, ctx, c),
             }
         }
-        task.outcome.plan.algorithm
+        outcome.plan.algorithm
     }));
     match result {
         Ok(algorithm) => {
             if algorithm == Algorithm::RowSplit {
                 gather.rowsplit_shards.fetch_add(1, Ordering::Relaxed);
             }
-            if task.outcome.cache_hit {
+            if outcome.cache_hit {
                 gather.cache_hits.fetch_add(1, Ordering::Relaxed);
             }
         }
         Err(payload) => {
-            // keep the actual panic message so the client error names the
-            // cause, not just the location
-            let cause = payload
-                .downcast_ref::<&str>()
-                .map(|s| (*s).to_string())
-                .or_else(|| payload.downcast_ref::<String>().cloned())
-                .unwrap_or_else(|| "non-string panic payload".into());
             let mut err = gather.error.lock().unwrap();
             if err.is_none() {
                 *err = Some(format!(
-                    "shard at row {} ({} rows) panicked during execution: {cause}",
-                    task.row_start, task.shard.m
+                    "shard at row {row_start} ({} rows) panicked during execution: {}",
+                    shard.m,
+                    panic_message(payload.as_ref())
                 ));
             }
         }
     }
+    gather.workers.lock().unwrap().push(worker);
     if gather.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
         finish(&gather);
     }
@@ -396,6 +384,9 @@ fn finish(gather: &GatherState) {
     let out = gather.out.lock().unwrap().take().expect("gather buffer present");
     let reply = gather.reply.lock().unwrap().take().expect("reply slot present");
     let error = gather.error.lock().unwrap().take();
+    let mut shard_workers = std::mem::take(&mut *gather.workers.lock().unwrap());
+    shard_workers.sort_unstable();
+    shard_workers.dedup();
     let latency = gather.t0.elapsed().as_secs_f64();
     let metrics = &gather.metrics;
     metrics.record_latency(latency);
@@ -429,6 +420,7 @@ fn finish(gather: &GatherState) {
                 cache_hit,
                 latency_s: latency,
                 shards: gather.shards,
+                shard_workers,
             }));
         }
     }
@@ -455,6 +447,9 @@ mod tests {
         let r = eng.spmm(&a, &b, 16).unwrap();
         assert_eq!(r.path, ExecutionPath::CpuFallback);
         assert!(r.shards >= 2, "shards = {}", r.shards);
+        // shard_workers is the sorted, deduplicated spread report
+        assert!(r.shard_workers.windows(2).all(|w| w[0] < w[1]));
+        assert!(!r.shard_workers.is_empty());
         assert_close(&r.c, &spmm_reference(&a, &b, 16));
         let snap = eng.metrics().snapshot();
         assert_eq!(snap.completed, 1);
@@ -464,17 +459,62 @@ mod tests {
     }
 
     #[test]
-    fn shards_spread_across_engines() {
+    fn shards_spread_across_workers() {
+        // chunky shards (≫ worker wake-up latency) so idle workers pick
+        // them up before any single worker can drain the queue alone
         let eng = ShardedEngine::cpu_only(ShardPolicy::fixed(4), 4, 1);
-        let a = Arc::new(Csr::random(2000, 500, 5.0, 143));
-        let b = Arc::new(gen::dense_matrix(500, 8, 144));
-        let r = eng.spmm(&a, &b, 8).unwrap();
+        let a = Arc::new(gen::uniform_rows(8000, 12, Some(1000), 143));
+        let b = Arc::new(gen::dense_matrix(1000, 32, 144));
+        let r = eng.spmm(&a, &b, 32).unwrap();
         assert_eq!(r.shards, 4);
-        let per_engine = eng.shards_per_engine();
-        let busy = per_engine.iter().filter(|&&c| c > 0).count();
-        assert!(busy >= 2, "one request must engage ≥ 2 engines: {per_engine:?}");
-        // round-robin over 4 engines with 4 shards touches all of them
-        assert_eq!(busy, 4, "{per_engine:?}");
+        let per_worker = eng.shards_per_worker();
+        let busy = per_worker.iter().filter(|&&c| c > 0).count();
+        assert!(busy >= 2, "one request must engage ≥ 2 workers: {per_worker:?}");
+        assert_eq!(per_worker.iter().sum::<u64>(), 4);
+        assert_eq!(r.shard_workers.len(), busy);
+    }
+
+    /// Regression for the old blind round-robin dispatch: two concurrent
+    /// scatters land on disjoint worker sets when there is capacity for
+    /// both, instead of stacking shards on a busy worker while others sit
+    /// parked.  Shards are milliseconds of FMA work each — orders of
+    /// magnitude above worker wake-up latency — so with 4 idle workers and
+    /// 4 queued tasks every task normally gets its own worker; a few
+    /// attempts are allowed because a loaded CI host can deschedule a
+    /// notified worker long enough for a sibling to steal its task (the
+    /// steal is legal idleness-aware behavior, not the bug under test).
+    /// The old round-robin failed this *deterministically* whenever the
+    /// rotation origins collided — no number of retries would pass.
+    #[test]
+    fn concurrent_scatters_use_disjoint_worker_sets() {
+        let eng = ShardedEngine::cpu_only(ShardPolicy::fixed(2), 4, 1);
+        let a1 = Arc::new(gen::uniform_rows(6000, 16, Some(2000), 161));
+        let a2 = Arc::new(gen::uniform_rows(6000, 16, Some(2000), 162));
+        let b = Arc::new(gen::dense_matrix(2000, 64, 163));
+        // warm both plans + layouts so the two scatters below enqueue all
+        // four tasks back-to-back, microseconds apart
+        drop(eng.spmm(&a1, &b, 64).unwrap());
+        drop(eng.spmm(&a2, &b, 64).unwrap());
+        let mut last = (Vec::new(), Vec::new());
+        for _ in 0..3 {
+            let rx1 = eng.submit(&a1, &b, 64);
+            let rx2 = eng.submit(&a2, &b, 64);
+            let r1 = rx1.recv().unwrap().unwrap();
+            let r2 = rx2.recv().unwrap().unwrap();
+            assert_eq!((r1.shards, r2.shards), (2, 2));
+            let disjoint = r1.shard_workers.len() == 2
+                && r2.shard_workers.len() == 2
+                && r1.shard_workers.iter().all(|w| !r2.shard_workers.contains(w));
+            if disjoint {
+                return;
+            }
+            last = (r1.shard_workers, r2.shard_workers);
+        }
+        panic!(
+            "concurrent scatters never used disjoint worker sets despite \
+             idle capacity: {:?} vs {:?}",
+            last.0, last.1
+        );
     }
 
     #[test]
@@ -551,5 +591,18 @@ mod tests {
         let a3 = Arc::new(Csr::empty(0, 40));
         let r3 = eng.spmm(&a3, &b, 4).unwrap();
         assert!(r3.c.is_empty());
+    }
+
+    #[test]
+    fn single_worker_sink_still_completes_scatters() {
+        // the unified runtime has no "need ≥ 2 engines" floor: a 1-worker
+        // sink executes a Fixed(3) scatter serially and gathers correctly
+        let eng = ShardedEngine::cpu_only(ShardPolicy::fixed(3), 1, 2);
+        let a = Arc::new(Csr::random(600, 300, 5.0, 151));
+        let b = Arc::new(gen::dense_matrix(300, 8, 152));
+        let r = eng.spmm(&a, &b, 8).unwrap();
+        assert!(r.shards >= 2);
+        assert_eq!(r.shard_workers, vec![0]);
+        assert_close(&r.c, &spmm_reference(&a, &b, 8));
     }
 }

@@ -21,11 +21,15 @@
 //!    so a mixed matrix runs row-split on its dense shards and merge on
 //!    its sparse ones.  Shard layouts themselves are cached by *parent*
 //!    fingerprint ([`crate::plan::ShardLayoutCache`]).
-//! 4. **Execute** ([`engine`]) — a [`ShardedEngine`] dispatches the
-//!    shards of one request round-robin across its engine threads (each
-//!    with its own warm [`crate::exec::WorkerPool`]) and scatter-gathers
-//!    into **one** [`crate::exec::OutputBuf`] lease through disjoint
-//!    row-range writes; the last shard to finish assembles the reply.
+//! 4. **Execute** ([`engine`]) — a thread-less [`ShardedEngine`] submits
+//!    the shards of one request to a [`WorkSink`] — in production the
+//!    server's unified worker runtime
+//!    ([`crate::coordinator::workers::WorkerRuntime`]), the same warm
+//!    pools that serve the batcher path — and scatter-gathers into
+//!    **one** [`crate::exec::OutputBuf`] lease through disjoint
+//!    [`crate::exec::OutputRange`] windows; the last shard to finish
+//!    assembles the reply.  Dispatch is idleness-aware: shards wait in
+//!    the shared two-lane queue and only idle workers pop them.
 //!
 //! Exactness: shard cuts sit on row boundaries, so each output row is
 //! produced by exactly one shard from exactly the nonzero spans the
@@ -38,7 +42,7 @@ pub mod cut;
 pub mod engine;
 
 pub use cut::{concat_partitions, cuts_valid, imbalance, shard_cuts};
-pub use engine::ShardedEngine;
+pub use engine::{ShardTask, ShardedEngine, WorkSink};
 
 use crate::formats::Csr;
 

@@ -6,6 +6,7 @@
 
 use std::sync::Arc;
 
+use merge_spmm::coordinator::{EngineConfig, Server, ServerConfig};
 use merge_spmm::exec::{partition, Executor};
 use merge_spmm::formats::Csr;
 use merge_spmm::gen;
@@ -287,4 +288,126 @@ fn prop_cuts_are_nearest_merge_coordinates() {
             "case {case}: cuts {cuts:?} contain a non-merge-coordinate cut"
         );
     }
+}
+
+/// Mixed traffic through ONE server on ONE pool set: batched small
+/// requests and sharded large requests run concurrently, results stay
+/// bitwise-exact (large, row-split) / reference-close (small), the
+/// resident thread count equals the batcher-only configuration (the old
+/// design ran a second engine-thread set — 2× threads), and the
+/// steady-state path keeps reusing pooled buffers.
+#[test]
+fn prop_mixed_traffic_unified_pool() {
+    const WORKERS: usize = 3;
+    const CPU_WORKERS: usize = 2;
+    let cpu = EngineConfig {
+        artifacts_dir: None,
+        cpu_workers: CPU_WORKERS,
+        ..Default::default()
+    };
+    let server_cfg = ServerConfig {
+        workers: WORKERS,
+        ..Default::default()
+    };
+
+    // Large request: uniform 24-nonzero rows (d = 24 → row-split on every
+    // shard, and row-split is bitwise-stable under any partitioning, so
+    // sharded output must equal the unsharded baseline bit for bit).
+    let big = Arc::new(gen::uniform_rows(4000, 24, Some(2048), 0xD01));
+    let big_b = Arc::new(gen::dense_matrix(2048, 16, 0xD02));
+    // Small request: d = 4 (merge path, far from the probe band), far
+    // below min_shard_work — always rides the batcher lane.
+    let small = Arc::new(Csr::random(300, 300, 4.0, 0xD03));
+    let small_b = Arc::new(gen::dense_matrix(300, 8, 0xD04));
+    let small_want = spmm_reference(&small, &small_b, 8);
+
+    // Baseline: sharding disabled.  Captures the bitwise reference for
+    // the big matrix and the resident-thread budget of one pool set.
+    let baseline = Server::start(cpu.clone(), server_cfg.clone()).unwrap();
+    let resident_budget = baseline.resident_threads();
+    let big_want = baseline
+        .submit_blocking(Arc::clone(&big), Arc::clone(&big_b), 16)
+        .unwrap()
+        .c
+        .into_vec();
+    baseline.shutdown();
+
+    let server = Server::start(
+        EngineConfig {
+            shard: ShardPolicy::auto(),
+            ..cpu
+        },
+        server_cfg,
+    )
+    .unwrap();
+    // one pool set serves both paths: enabling sharding adds no threads
+    assert_eq!(
+        server.resident_threads(),
+        resident_budget,
+        "sharding must not add resident threads (workers + workers×cpu_workers + router)"
+    );
+    assert_eq!(resident_budget, 1 + WORKERS + WORKERS * CPU_WORKERS);
+
+    // Concurrent mixed phase: 2 clients hammer the sharded path while 2
+    // clients hammer the batcher path, through one ingress.
+    std::thread::scope(|s| {
+        for _ in 0..2 {
+            s.spawn(|| {
+                for _ in 0..10 {
+                    let r = server
+                        .submit_blocking(Arc::clone(&big), Arc::clone(&big_b), 16)
+                        .unwrap();
+                    assert!(r.shards >= 2, "large request must shard: {}", r.shards);
+                    assert!(
+                        r.c.iter().zip(&big_want).all(|(x, y)| x.to_bits() == y.to_bits()),
+                        "sharded result must stay bitwise-identical under mixed traffic"
+                    );
+                }
+            });
+        }
+        for _ in 0..2 {
+            s.spawn(|| {
+                for _ in 0..20 {
+                    let r = server
+                        .submit_blocking(Arc::clone(&small), Arc::clone(&small_b), 8)
+                        .unwrap();
+                    assert_eq!(r.shards, 1, "small request must ride the batcher lane");
+                    for (i, (x, y)) in r.c.iter().zip(&small_want).enumerate() {
+                        assert!(
+                            (x - y).abs() < 1e-3 * (1.0 + y.abs()),
+                            "idx {i}: {x} vs {y}"
+                        );
+                    }
+                }
+            });
+        }
+    });
+
+    // Steady state after the burst: both shapes are warm in the shared
+    // free-list, so sequential rounds allocate nothing new.
+    let _ = server.submit_blocking(Arc::clone(&big), Arc::clone(&big_b), 16).unwrap();
+    let allocated_before = server.metrics().buffers_allocated;
+    let reuses_before = server.metrics().buffer_reuses;
+    for _ in 0..6 {
+        drop(server.submit_blocking(Arc::clone(&big), Arc::clone(&big_b), 16).unwrap());
+        drop(server.submit_blocking(Arc::clone(&small), Arc::clone(&small_b), 8).unwrap());
+    }
+    let snap = server.metrics();
+    assert_eq!(
+        snap.buffers_allocated, allocated_before,
+        "steady-state mixed traffic must reuse pooled buffers"
+    );
+    assert!(snap.buffer_reuses >= reuses_before + 12, "reused {}", snap.buffer_reuses);
+    // the unified gauge reports the one pool set
+    assert_eq!(snap.pool_workers as usize, WORKERS * CPU_WORKERS);
+
+    let per_worker = server.shards_per_worker();
+    assert!(
+        per_worker.iter().filter(|&&c| c > 0).count() >= 2,
+        "shard tasks must spread across the unified pool: {per_worker:?}"
+    );
+    let snap = server.shutdown();
+    assert_eq!(snap.errors, 0);
+    assert_eq!(snap.completed, 20 + 40 + 13);
+    assert_eq!(snap.sharded, 20 + 7);
 }
