@@ -1,0 +1,119 @@
+//! Fused wide-SpMM batches: sweep the co-batch size k at a fixed
+//! per-request width and measure how much one traversal of A buys.
+//!
+//! Every round submits k concurrent requests that share one `Arc<Csr>`;
+//! the router's fingerprint bucket collects them and the worker executes
+//! ONE `m × (k·n)` wide pass instead of k narrow ones, so A's
+//! `row_ptr/col_idx/vals` (and the phase-1 partition walk) are paid once
+//! per batch.  The sweep reports requests/s per k plus the fused
+//! counters — `fused_requests / fused_batches` is the measured
+//! request-level amortization of each A traversal (mean batch size), and
+//! the `fused_width` gauge the column-level one.  Writes
+//! `BENCH_fuse.json` at the repo root (same schema convention as
+//! `BENCH_plan.json` / `BENCH_exec.json` / `BENCH_shard.json`: the
+//! committed file is a `pending-toolchain` placeholder; running this
+//! example overwrites it with measurements).
+//!
+//! Run: `cargo run --release --example fused_throughput`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use merge_spmm::coordinator::{EngineConfig, Server, ServerConfig};
+use merge_spmm::formats::Csr;
+use merge_spmm::gen;
+use merge_spmm::spmm::spmm_reference;
+
+fn main() -> anyhow::Result<()> {
+    let n = 16usize; // fixed per-request dense width
+    let a = Arc::new(Csr::random(20_000, 4096, 8.0, 21));
+    let b = Arc::new(gen::dense_matrix(a.k, n, 22));
+    println!(
+        "matrix: {}x{}, nnz {}, d = {:.2}; per-request width n = {n}",
+        a.m,
+        a.k,
+        a.nnz(),
+        a.mean_row_length()
+    );
+    let rounds = if std::env::var("BENCH_QUICK").is_ok() { 10 } else { 40 };
+    let cpu_workers = 2usize;
+
+    // correctness anchor: every fused composition must reproduce this
+    let want = spmm_reference(&a, &b, n);
+
+    let mut rows = Vec::new();
+    for k in [1usize, 2, 4, 8] {
+        let server = Server::start(
+            EngineConfig {
+                artifacts_dir: None,
+                cpu_workers,
+                ..Default::default()
+            },
+            ServerConfig {
+                workers: 2,
+                max_batch: k,
+                max_wait: Duration::from_millis(2),
+                ..Default::default()
+            },
+        )?;
+        // warm: plan + partition cached, staging/output shelves filled
+        let r = server.submit_blocking(Arc::clone(&a), Arc::clone(&b), n)?;
+        for (x, y) in r.c.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-2 * (1.0 + y.abs()), "result mismatch");
+        }
+        drop(r);
+        let t0 = Instant::now();
+        for _ in 0..rounds {
+            let handles: Vec<_> = (0..k)
+                .map(|_| server.submit(Arc::clone(&a), Arc::clone(&b), n))
+                .collect();
+            for h in handles {
+                let r = h.recv()??;
+                std::hint::black_box(&r.c[0]);
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let req_s = (rounds * k) as f64 / wall;
+        let snap = server.shutdown();
+        let amortization = if snap.fused_batches > 0 {
+            snap.fused_requests as f64 / snap.fused_batches as f64
+        } else {
+            1.0
+        };
+        println!(
+            "k = {k}: {req_s:>8.1} req/s, fused {} reqs / {} batches \
+             (A-traversal amortization {amortization:.2}x, mean width {:.0})",
+            snap.fused_requests, snap.fused_batches, snap.fused_width_mean
+        );
+        rows.push(format!(
+            "    {{\"k\": {k}, \"req_per_s\": {req_s:.2}, \
+             \"fused_requests\": {}, \"fused_batches\": {}, \
+             \"a_traversal_amortization\": {amortization:.3}, \
+             \"mean_fused_width\": {:.1}}}",
+            snap.fused_requests, snap.fused_batches, snap.fused_width_mean
+        ));
+    }
+
+    let out = format!(
+        "{{\n  \"format\": \"bench-fuse-v1\",\n  \"status\": \"measured\",\n  \
+         \"command\": \"cargo run --release --example fused_throughput\",\n  \
+         \"rounds\": {rounds},\n  \"cpu_workers\": {cpu_workers},\n  \
+         \"per_request_width\": {n},\n  \
+         \"matrix\": {{\"m\": {}, \"k\": {}, \"nnz\": {}, \"d\": {:.2}}},\n  \
+         \"sweep\": [\n{}\n  ]\n}}\n",
+        a.m,
+        a.k,
+        a.nnz(),
+        a.mean_row_length(),
+        rows.join(",\n")
+    );
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_fuse.json"))
+        .unwrap_or_else(|| "BENCH_fuse.json".into());
+    match std::fs::write(&path, out) {
+        Ok(()) => println!("-> {}", path.display()),
+        Err(e) => eprintln!("(BENCH_fuse.json write failed: {e})"),
+    }
+    Ok(())
+}

@@ -1,30 +1,69 @@
 //! Bucket batcher: groups same-bucket requests so a worker executes them
-//! back-to-back against one compiled executable.
+//! back-to-back against one compiled executable — or, on the CPU path,
+//! **fuses** them into one wide SpMM pass (`workers::fuse_batch`).
 //!
 //! Batching policy: flush a bucket's queue when it reaches `max_batch`
 //! requests or when its oldest request has waited `max_wait`.  Same
 //! trade-off as any dynamic batcher (throughput vs latency); the engine
 //! bench sweeps both knobs.
+//!
+//! Hot-path contract: `push` is a single map lookup (the key is interned
+//! into the bucket map the first time it is seen and never re-cloned), the
+//! caller supplies `Instant::now()` once per router poll instead of once
+//! per push, and the tick-driven flushes drain queues **in place** — an
+//! idle server's deadline sweep allocates nothing.
 
+use std::collections::hash_map::Entry;
 use std::collections::{HashMap, VecDeque};
+use std::hash::Hash;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+use crate::plan::Fingerprint;
+
+/// Distinct buckets tracked before the deadline sweep prunes drained
+/// ones.  Fingerprint keys are open-ended (one per matrix shape ever
+/// served), so without a cap the map — and its retained empty deques —
+/// would grow for the server's lifetime.
+const MAX_TRACKED_BUCKETS: usize = 128;
+
+/// Routing key for one request: which bucket it batches under.
+///
+/// CPU-path requests key on their plan-cache [`Fingerprint`] — not a
+/// shape string — because the fingerprint captures everything the fused
+/// wide pass depends on (same `m`/`k`, same row structure statistics), so
+/// a bucket holds exactly the requests that *can* share one A.
+/// Fingerprints are quantized and may collide across structurally
+/// different matrices, so fusion additionally confirms `Arc` identity per
+/// group (`workers::fuse_batch`); the fingerprint key's job is to keep
+/// everything that cannot possibly fuse out of the bucket in the first
+/// place.  Artifact-path requests key on the interned AOT bucket name:
+/// they run back-to-back against one compiled executable and never fuse
+/// (the artifact's dense width is baked in).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum RouteKey {
+    /// interned AOT artifact name (PJRT path, batched but never fused)
+    Artifact(Arc<str>),
+    /// plan-cache fingerprint (CPU path, fusable)
+    Fingerprint(Fingerprint),
+}
 
 /// A batch of request ids that share a bucket key.
 #[derive(Debug, Clone, PartialEq, Eq)]
-pub struct Batch {
-    pub bucket: String,
+pub struct Batch<K = RouteKey> {
+    pub bucket: K,
     pub requests: Vec<u64>,
 }
 
 /// Accumulates request ids per bucket and emits flush-ready batches.
 #[derive(Debug)]
-pub struct BatchQueue {
+pub struct BatchQueue<K: Eq + Hash + Clone = RouteKey> {
     max_batch: usize,
     max_wait: Duration,
-    queues: HashMap<String, VecDeque<(u64, Instant)>>,
+    queues: HashMap<K, VecDeque<(u64, Instant)>>,
 }
 
-impl BatchQueue {
+impl<K: Eq + Hash + Clone> BatchQueue<K> {
     pub fn new(max_batch: usize, max_wait: Duration) -> Self {
         Self {
             max_batch: max_batch.max(1),
@@ -34,53 +73,97 @@ impl BatchQueue {
     }
 
     /// Enqueue a request; returns a batch if the bucket just became full.
-    /// The bucket key is only cloned when the bucket is first seen — the
-    /// steady state (existing bucket) allocates nothing.
-    pub fn push(&mut self, bucket: &str, request: u64) -> Option<Batch> {
-        // double lookup on the miss path beats a to_string() per push
-        if !self.queues.contains_key(bucket) {
-            self.queues.insert(bucket.to_string(), VecDeque::new());
+    /// One `entry` lookup: the key is interned into the map on first
+    /// sighting and the steady state (existing bucket) neither clones it
+    /// nor re-hashes twice.  `now` comes from the caller — the router
+    /// takes one timestamp per poll loop, not one syscall per push.
+    pub fn push(&mut self, bucket: K, request: u64, now: Instant) -> Option<Batch<K>> {
+        // Bound the bucket map on the intern path: fingerprint keys are
+        // open-ended, and a server busy enough never to hit the idle-tick
+        // sweep would otherwise retain one drained deque per matrix shape
+        // forever.  The containment probe costs a second lookup only when
+        // a NEW bucket arrives at the cap — never in the steady state.
+        if self.queues.len() >= MAX_TRACKED_BUCKETS && !self.queues.contains_key(&bucket) {
+            self.queues.retain(|_, q| !q.is_empty());
         }
-        let q = self.queues.get_mut(bucket).expect("just ensured");
-        q.push_back((request, Instant::now()));
-        if q.len() >= self.max_batch {
-            return self.flush(bucket);
+        match self.queues.entry(bucket) {
+            Entry::Occupied(mut e) => {
+                e.get_mut().push_back((request, now));
+                if e.get().len() >= self.max_batch {
+                    // drain in place: the deque stays interned with its
+                    // capacity, so the next burst re-fills it allocation-free
+                    let requests = e.get_mut().drain(..).map(|(r, _)| r).collect();
+                    return Some(Batch {
+                        bucket: e.key().clone(),
+                        requests,
+                    });
+                }
+                None
+            }
+            Entry::Vacant(v) => {
+                if self.max_batch == 1 {
+                    // degenerate no-batching config: flush without interning
+                    return Some(Batch {
+                        bucket: v.into_key(),
+                        requests: vec![request],
+                    });
+                }
+                v.insert(VecDeque::new()).push_back((request, now));
+                None
+            }
         }
-        None
     }
 
     /// Flush one bucket unconditionally.
-    pub fn flush(&mut self, bucket: &str) -> Option<Batch> {
+    pub fn flush(&mut self, bucket: &K) -> Option<Batch<K>> {
         let q = self.queues.get_mut(bucket)?;
         if q.is_empty() {
             return None;
         }
         let requests = q.drain(..).map(|(r, _)| r).collect();
         Some(Batch {
-            bucket: bucket.to_string(),
+            bucket: bucket.clone(),
             requests,
         })
     }
 
-    /// Flush every bucket whose oldest request exceeded `max_wait`.
-    pub fn flush_expired(&mut self) -> Vec<Batch> {
-        let now = Instant::now();
-        let expired: Vec<String> = self
-            .queues
-            .iter()
-            .filter(|(_, q)| {
-                q.front()
-                    .is_some_and(|(_, t)| now.duration_since(*t) >= self.max_wait)
-            })
-            .map(|(k, _)| k.clone())
-            .collect();
-        expired.iter().filter_map(|k| self.flush(k)).collect()
+    /// Flush every bucket whose oldest request exceeded `max_wait`,
+    /// draining in place — no key clones, no intermediate key vector, and
+    /// zero allocation when nothing expired (the idle-tick case).
+    pub fn flush_expired(&mut self, now: Instant) -> Vec<Batch<K>> {
+        let mut out = Vec::new();
+        for (bucket, q) in self.queues.iter_mut() {
+            if q.front()
+                .is_some_and(|&(_, t)| now.duration_since(t) >= self.max_wait)
+            {
+                out.push(Batch {
+                    bucket: bucket.clone(),
+                    requests: q.drain(..).map(|(r, _)| r).collect(),
+                });
+            }
+        }
+        // Bound the bucket map: fingerprint keys are unbounded over a
+        // server's lifetime, so once the map outgrows the cap, drop the
+        // drained buckets (live ones are never touched).  Under the cap
+        // the deques stay put and keep their capacity.
+        if self.queues.len() > MAX_TRACKED_BUCKETS {
+            self.queues.retain(|_, q| !q.is_empty());
+        }
+        out
     }
 
-    /// Flush everything (shutdown).
-    pub fn flush_all(&mut self) -> Vec<Batch> {
-        let keys: Vec<String> = self.queues.keys().cloned().collect();
-        keys.iter().filter_map(|k| self.flush(k)).collect()
+    /// Flush everything (shutdown), draining in place.
+    pub fn flush_all(&mut self) -> Vec<Batch<K>> {
+        let mut out = Vec::new();
+        for (bucket, q) in self.queues.iter_mut() {
+            if !q.is_empty() {
+                out.push(Batch {
+                    bucket: bucket.clone(),
+                    requests: q.drain(..).map(|(r, _)| r).collect(),
+                });
+            }
+        }
+        out
     }
 
     /// Total queued requests.
@@ -88,13 +171,17 @@ impl BatchQueue {
         self.queues.values().map(|q| q.len()).sum()
     }
 
+    /// Buckets currently interned (live + drained-but-retained).
+    pub fn tracked_buckets(&self) -> usize {
+        self.queues.len()
+    }
+
     /// Time until the next deadline flush (None if empty).
-    pub fn next_deadline(&self) -> Option<Duration> {
-        let now = Instant::now();
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
         self.queues
             .values()
             .filter_map(|q| q.front())
-            .map(|(_, t)| self.max_wait.saturating_sub(now.duration_since(*t)))
+            .map(|&(_, t)| self.max_wait.saturating_sub(now.duration_since(t)))
             .min()
     }
 }
@@ -102,23 +189,26 @@ impl BatchQueue {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::formats::Csr;
 
     #[test]
     fn fills_to_max_batch() {
+        let now = Instant::now();
         let mut bq = BatchQueue::new(3, Duration::from_secs(10));
-        assert!(bq.push("a", 1).is_none());
-        assert!(bq.push("a", 2).is_none());
-        let batch = bq.push("a", 3).unwrap();
+        assert!(bq.push("a", 1, now).is_none());
+        assert!(bq.push("a", 2, now).is_none());
+        let batch = bq.push("a", 3, now).unwrap();
         assert_eq!(batch.requests, vec![1, 2, 3]);
         assert_eq!(bq.pending(), 0);
     }
 
     #[test]
     fn buckets_are_independent() {
+        let now = Instant::now();
         let mut bq = BatchQueue::new(2, Duration::from_secs(10));
-        assert!(bq.push("a", 1).is_none());
-        assert!(bq.push("b", 2).is_none());
-        let batch = bq.push("a", 3).unwrap();
+        assert!(bq.push("a", 1, now).is_none());
+        assert!(bq.push("b", 2, now).is_none());
+        let batch = bq.push("a", 3, now).unwrap();
         assert_eq!(batch.bucket, "a");
         assert_eq!(bq.pending(), 1); // b still queued
     }
@@ -126,26 +216,28 @@ mod tests {
     #[test]
     fn deadline_flush() {
         let mut bq = BatchQueue::new(100, Duration::from_millis(1));
-        bq.push("a", 1);
+        bq.push("a", 1, Instant::now());
         std::thread::sleep(Duration::from_millis(5));
-        let batches = bq.flush_expired();
+        let batches = bq.flush_expired(Instant::now());
         assert_eq!(batches.len(), 1);
         assert_eq!(batches[0].requests, vec![1]);
     }
 
     #[test]
     fn no_premature_deadline_flush() {
+        let now = Instant::now();
         let mut bq = BatchQueue::new(100, Duration::from_secs(60));
-        bq.push("a", 1);
-        assert!(bq.flush_expired().is_empty());
+        bq.push("a", 1, now);
+        assert!(bq.flush_expired(Instant::now()).is_empty());
         assert_eq!(bq.pending(), 1);
     }
 
     #[test]
     fn flush_all_drains_everything() {
+        let now = Instant::now();
         let mut bq = BatchQueue::new(100, Duration::from_secs(60));
         for i in 0..10 {
-            bq.push(if i % 2 == 0 { "a" } else { "b" }, i);
+            bq.push(if i % 2 == 0 { "a" } else { "b" }, i, now);
         }
         let batches = bq.flush_all();
         let total: usize = batches.iter().map(|b| b.requests.len()).sum();
@@ -163,7 +255,7 @@ mod tests {
         for i in 0..1000u64 {
             let bucket = ["a", "b", "c"][rng.below(3)];
             sent.push(i);
-            if let Some(b) = bq.push(bucket, i) {
+            if let Some(b) = bq.push(bucket, i, Instant::now()) {
                 seen.extend(b.requests);
             }
             if rng.below(10) == 0 {
@@ -182,9 +274,67 @@ mod tests {
     #[test]
     fn next_deadline_ordering() {
         let mut bq = BatchQueue::new(100, Duration::from_millis(50));
-        assert!(bq.next_deadline().is_none());
-        bq.push("a", 1);
-        let d = bq.next_deadline().unwrap();
+        assert!(bq.next_deadline(Instant::now()).is_none());
+        bq.push("a", 1, Instant::now());
+        let d = bq.next_deadline(Instant::now()).unwrap();
         assert!(d <= Duration::from_millis(50));
+    }
+
+    #[test]
+    fn drained_buckets_are_pruned_past_the_cap() {
+        // An unbounded stream of distinct (fingerprint-like) keys must not
+        // grow the bucket map forever — and the bound must hold on the
+        // PUSH path alone, because a server busy enough to always have a
+        // message waiting never reaches the idle-tick sweep.
+        let mut bq: BatchQueue<usize> = BatchQueue::new(2, Duration::from_secs(60));
+        bq.push(usize::MAX, 0, Instant::now()); // one live bucket throughout
+        for key in 0..4 * MAX_TRACKED_BUCKETS {
+            // fill each bucket to max_batch: interned, flushed, drained
+            assert!(bq.push(key, 2 * key as u64, Instant::now()).is_none());
+            assert!(bq.push(key, 2 * key as u64 + 1, Instant::now()).is_some());
+            assert!(
+                bq.tracked_buckets() <= MAX_TRACKED_BUCKETS + 1,
+                "map must stay bounded without any deadline tick: {}",
+                bq.tracked_buckets()
+            );
+        }
+        // the live bucket is never pruned, drained ones are
+        assert_eq!(bq.pending(), 1);
+        assert!(bq.flush(&usize::MAX).is_some());
+        // the idle-tick sweep also prunes: grow past the cap with LIVE
+        // buckets (the push-path prune drops none of those), drain them
+        // all, then tick
+        let mut bq2: BatchQueue<usize> = BatchQueue::new(8, Duration::from_secs(60));
+        for key in 0..MAX_TRACKED_BUCKETS + 8 {
+            bq2.push(key, key as u64, Instant::now());
+        }
+        assert!(bq2.tracked_buckets() > MAX_TRACKED_BUCKETS, "live buckets are never pruned");
+        for key in 0..MAX_TRACKED_BUCKETS + 8 {
+            assert!(bq2.flush(&key).is_some()); // drain in place, deques retained
+        }
+        assert!(bq2.tracked_buckets() > MAX_TRACKED_BUCKETS);
+        assert!(bq2.flush_expired(Instant::now()).is_empty());
+        assert_eq!(bq2.tracked_buckets(), 0, "sweep prunes drained buckets");
+    }
+
+    #[test]
+    fn route_keys_hash_and_compare() {
+        let a = Csr::random(100, 100, 4.0, 9001);
+        let fp = Fingerprint::of(&a);
+        let k1 = RouteKey::Fingerprint(fp);
+        let k2 = RouteKey::Fingerprint(Fingerprint::of(&a));
+        assert_eq!(k1, k2);
+        let art: Arc<str> = Arc::from("spmm_rowsplit_m1024");
+        assert_ne!(k1, RouteKey::Artifact(Arc::clone(&art)));
+        assert_eq!(RouteKey::Artifact(Arc::clone(&art)), RouteKey::Artifact(art));
+        // fingerprint keys and artifact keys batch independently
+        let mut bq: BatchQueue = BatchQueue::new(2, Duration::from_secs(60));
+        let now = Instant::now();
+        assert!(bq.push(k1.clone(), 1, now).is_none());
+        assert!(bq
+            .push(RouteKey::Artifact(Arc::from("x")), 2, now)
+            .is_none());
+        let b = bq.push(k2, 3, now).unwrap();
+        assert_eq!(b.requests, vec![1, 3]);
     }
 }

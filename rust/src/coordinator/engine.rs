@@ -96,6 +96,10 @@ pub struct SpmmResult {
     /// sorted (empty on the unsharded path) — the per-request spread
     /// evidence for the scatter-gather path
     pub shard_workers: Vec<usize>,
+    /// total dense width (`Σ n_j`) of the fused wide pass this request
+    /// rode in, or 0 when it executed alone — the per-request evidence
+    /// that A was traversed once for the whole co-batch
+    pub fused_width: usize,
 }
 
 /// The SpMM serving engine (paper's full pipeline: plan cache + tuned
@@ -290,6 +294,7 @@ impl SpmmEngine {
                 latency_s: latency,
                 shards: 1,
                 shard_workers: Vec::new(),
+                fused_width: 0,
             }
         })
     }

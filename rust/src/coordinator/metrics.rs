@@ -28,6 +28,13 @@ pub struct Metrics {
     pub sharded: AtomicU64,
     /// total shards executed across all sharded requests
     pub shards_executed: AtomicU64,
+    /// fused wide passes executed (one pass = one traversal of A for the
+    /// whole co-batch) and the requests that rode in them
+    pub fused_batches: AtomicU64,
+    pub fused_requests: AtomicU64,
+    /// running total of fused widths (Σ n_total) behind the mean-width
+    /// gauge exported as `fused_width_mean`
+    fused_width_total: AtomicU64,
     /// gauge: lifetime plan-cache evictions (mirrored from `PlanCache`)
     plan_evictions: AtomicU64,
     /// gauge: current plan-cache size
@@ -73,6 +80,14 @@ impl Metrics {
         // imbalance gauge starts at the perfectly-balanced value
         m.shard_imbalance_bits.store(1.0f64.to_bits(), Ordering::Relaxed);
         m
+    }
+
+    /// Record one fused wide pass: `k` requests executed as a single
+    /// `m × n_total` SpMM (called by the worker that ran the pass).
+    pub fn record_fused(&self, k: u64, n_total: u64) {
+        self.fused_batches.fetch_add(1, Ordering::Relaxed);
+        self.fused_requests.fetch_add(k, Ordering::Relaxed);
+        self.fused_width_total.fetch_add(n_total, Ordering::Relaxed);
     }
 
     /// Mirror the most recent shard layout into the exported gauges
@@ -159,6 +174,16 @@ impl Metrics {
             probes: self.probes.load(Ordering::Relaxed),
             sharded: self.sharded.load(Ordering::Relaxed),
             shards_executed: self.shards_executed.load(Ordering::Relaxed),
+            fused_batches: self.fused_batches.load(Ordering::Relaxed),
+            fused_requests: self.fused_requests.load(Ordering::Relaxed),
+            fused_width_mean: {
+                let batches = self.fused_batches.load(Ordering::Relaxed);
+                if batches == 0 {
+                    0.0
+                } else {
+                    self.fused_width_total.load(Ordering::Relaxed) as f64 / batches as f64
+                }
+            },
             shard_count_last: self.shard_count_last.load(Ordering::Relaxed),
             shard_imbalance_last: f64::from_bits(
                 self.shard_imbalance_bits.load(Ordering::Relaxed),
@@ -203,6 +228,12 @@ pub struct MetricsSnapshot {
     /// sharded scatter-gather requests and the shards they became
     pub sharded: u64,
     pub shards_executed: u64,
+    /// fused wide passes and the co-batched requests that rode in them
+    pub fused_batches: u64,
+    pub fused_requests: u64,
+    /// gauge: mean fused width (Σ n_total / fused_batches; 0 before any
+    /// fuse) — the mean request-level amortization of each A traversal
+    pub fused_width_mean: f64,
     /// gauge: shard count of the most recent sharded request
     pub shard_count_last: u64,
     /// gauge: max/mean nnz imbalance of the most recent shard layout
@@ -247,7 +278,7 @@ impl std::fmt::Display for MetricsSnapshot {
             f,
             "req={} ok={} err={} rowsplit={} merge={} pjrt={} cpu={} \
              plan_hit={} plan_miss={} evict={} probes={} \
-             shard={}x{} imb={:.2} pool={}/{} q={}s/{}b buf={}r/{}a part={}h/{}m \
+             shard={}x{} imb={:.2} fuse={}x{:.0} pool={}/{} q={}s/{}b buf={}r/{}a part={}h/{}m \
              thr={:.2} p50={:.1}ms p99={:.1}ms",
             self.requests,
             self.completed,
@@ -263,6 +294,8 @@ impl std::fmt::Display for MetricsSnapshot {
             self.sharded,
             self.shard_count_last,
             self.shard_imbalance_last,
+            self.fused_batches,
+            self.fused_width_mean,
             self.workers_parked,
             self.pool_workers,
             self.queue_shard_depth,
@@ -353,6 +386,22 @@ mod tests {
         assert!((snap.shard_imbalance_last - 1.18).abs() < 1e-12);
         let text = format!("{snap}");
         assert!(text.contains("shard=2x4") && text.contains("imb=1.18"), "{text}");
+    }
+
+    #[test]
+    fn fused_gauges_roundtrip_into_snapshot() {
+        let m = Metrics::new();
+        let snap = m.snapshot();
+        assert_eq!((snap.fused_batches, snap.fused_requests), (0, 0));
+        assert_eq!(snap.fused_width_mean, 0.0);
+        assert!(format!("{snap}").contains("fuse=0x0"), "{snap}");
+        m.record_fused(4, 32); // 4 requests fused into one 32-wide pass
+        m.record_fused(2, 16);
+        let snap = m.snapshot();
+        assert_eq!(snap.fused_batches, 2);
+        assert_eq!(snap.fused_requests, 6);
+        assert_eq!(snap.fused_width_mean, 24.0);
+        assert!(format!("{snap}").contains("fuse=2x24"), "{snap}");
     }
 
     #[test]

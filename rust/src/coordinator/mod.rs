@@ -13,7 +13,10 @@
 //!    in-process CPU executors when nothing fits (A/B-probing boundary
 //!    requests there to keep the tuner calibrated),
 //! 3. **batches** same-bucket requests ([`batcher`]) so one worker runs
-//!    them back-to-back against the compiled executable,
+//!    them back-to-back against the compiled executable — and on the CPU
+//!    path **fuses** co-batched requests over the same matrix into one
+//!    wide pass (`C_wide = A · [B_1 | … | B_k]`, [`workers::fuse_batch`]),
+//!    traversing A once per batch instead of once per request,
 //! 4. records **metrics** (per-algorithm counts, plan-cache hit/miss/
 //!    eviction counters, tuner threshold, latency percentiles, fallback
 //!    rate — [`metrics`]).
@@ -46,7 +49,7 @@ pub mod metrics;
 pub mod router;
 pub mod workers;
 
-pub use batcher::{Batch, BatchQueue};
+pub use batcher::{Batch, BatchQueue, RouteKey};
 pub use engine::{EngineConfig, ExecutionPath, SpmmEngine, SpmmResult};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use router::{Server, ServerConfig};

@@ -23,12 +23,20 @@
 //! it through the thread-less [`ShardedEngine`] onto the *same* workers'
 //! shard lane.  There is no second engine pool: resident threads are
 //! `1 (router) + workers + workers × cpu_workers`, sharded or not.
+//!
+//! CPU-path requests bucket by their plan-cache **fingerprint**
+//! ([`RouteKey`]), so a flushed batch holds only requests that can share
+//! one A — the router then **fuses** runs of `Arc`-identical-A requests
+//! into a single wide pass (`C_wide = A · [B_1 | … | B_k]`,
+//! [`super::workers::fuse_batch`]): A's CSR arrays stream once per batch
+//! instead of once per request, the serving-level analogue of the paper's
+//! row-major-B coalescing argument.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -38,10 +46,10 @@ use crate::plan::Planner;
 use crate::runtime::Manifest;
 use crate::shard::{ShardedEngine, WorkSink};
 
-use super::batcher::BatchQueue;
+use super::batcher::{Batch, BatchQueue, RouteKey};
 use super::engine::{EngineConfig, SpmmResult};
 use super::metrics::{Metrics, MetricsSnapshot};
-use super::workers::{Request, WorkerRuntime};
+use super::workers::{fuse_batch, BatchWork, Request, WorkerRuntime, MAX_FUSED_WIDTH};
 
 /// Server tuning knobs.
 #[derive(Debug, Clone)]
@@ -151,19 +159,61 @@ impl Server {
             let runtime = Arc::clone(&runtime);
             let sharded = sharded.clone();
             std::thread::spawn(move || {
-                let mut bq = BatchQueue::new(cfg.max_batch, cfg.max_wait);
+                let mut bq: BatchQueue = BatchQueue::new(cfg.max_batch, cfg.max_wait);
                 let mut pending: HashMap<u64, Request> = HashMap::new();
-                let send_batch = |ids: Vec<u64>, pending: &mut HashMap<u64, Request>| {
-                    let reqs: Vec<Request> =
-                        ids.into_iter().filter_map(|id| pending.remove(&id)).collect();
-                    if !reqs.is_empty() {
-                        runtime.submit_batch(reqs);
+                // one-time intern of AOT bucket names: the manifest's
+                // artifact set is small and fixed, so each name is
+                // allocated once and every later request clones an `Arc`
+                // (`Arc<str>: Borrow<str>`, so the set needs no String key)
+                let mut interned: std::collections::HashSet<Arc<str>> =
+                    std::collections::HashSet::new();
+                // Flush one bucket batch to the workers.  Fingerprint
+                // buckets go through the fuser: runs of Arc-identical-A
+                // requests become wide fused passes, the rest run
+                // back-to-back as before.  Artifact buckets never fuse
+                // (the compiled executable's dense width is fixed).
+                let send_batch = |batch: Batch, pending: &mut HashMap<u64, Request>| {
+                    let reqs: Vec<Request> = batch
+                        .requests
+                        .into_iter()
+                        .filter_map(|id| pending.remove(&id))
+                        .collect();
+                    if reqs.is_empty() {
+                        return;
+                    }
+                    match batch.bucket {
+                        RouteKey::Artifact(_) => runtime.submit_batch(BatchWork::Run(reqs)),
+                        RouteKey::Fingerprint(_) => {
+                            for work in fuse_batch(reqs, MAX_FUSED_WIDTH) {
+                                runtime.submit_batch(work);
+                            }
+                        }
                     }
                 };
                 loop {
-                    let timeout = bq.next_deadline().unwrap_or(Duration::from_millis(50));
+                    let timeout = bq
+                        .next_deadline(Instant::now())
+                        .unwrap_or(Duration::from_millis(50));
                     match ingress_rx.recv_timeout(timeout) {
                         Ok(RouterMsg::Req(mut req)) => {
+                            // one timestamp per poll loop — shared by the
+                            // push below instead of a syscall per push
+                            let now = Instant::now();
+                            // Deadline flushes must not starve while
+                            // messages keep arriving: the recv-timeout arm
+                            // never fires under continuous ingress, and
+                            // fingerprint buckets (finer than the old
+                            // per-algorithm key) rely on the deadline to
+                            // dispatch singletons.  Checked at the top of
+                            // the arm so a stream of sharded requests
+                            // (which `continue` below) cannot skip it.
+                            // One comparison per message; drains only when
+                            // something actually expired.
+                            if bq.next_deadline(now).is_some_and(|d| d.is_zero()) {
+                                for batch in bq.flush_expired(now) {
+                                    send_batch(batch, &mut pending);
+                                }
+                            }
                             // Sharded dispatch: when the policy cuts this
                             // request into ≥ 2 shards, scatter it onto the
                             // workers' shard lane (idle workers pick the
@@ -188,35 +238,45 @@ impl Server {
                                 &planner.cache().stats(),
                                 planner.tuner().threshold(),
                             );
-                            // routing key: the planned AOT bucket, or the
-                            // algorithm for CPU-fallback requests (still
-                            // groups similar work)
-                            let key = outcome
-                                .plan
-                                .bucket
-                                .clone()
-                                .unwrap_or_else(|| format!("cpu:{}", outcome.plan.algorithm));
+                            // routing key: the planned AOT bucket name, or
+                            // the plan-cache fingerprint for CPU-fallback
+                            // requests — the fingerprint key is what makes
+                            // a bucket fusable (only requests that can
+                            // share one A ever co-reside)
+                            let key = match &outcome.plan.bucket {
+                                Some(name) => {
+                                    RouteKey::Artifact(match interned.get(name.as_str()) {
+                                        Some(arc) => Arc::clone(arc),
+                                        None => {
+                                            let arc: Arc<str> = Arc::from(name.as_str());
+                                            interned.insert(Arc::clone(&arc));
+                                            arc
+                                        }
+                                    })
+                                }
+                                None => RouteKey::Fingerprint(outcome.fingerprint),
+                            };
                             req.outcome = Some(outcome);
                             let id = req.id;
                             pending.insert(id, req);
-                            if let Some(batch) = bq.push(&key, id) {
-                                send_batch(batch.requests, &mut pending);
+                            if let Some(batch) = bq.push(key, id, now) {
+                                send_batch(batch, &mut pending);
                             }
                         }
                         Ok(RouterMsg::Shutdown) => {
                             for batch in bq.flush_all() {
-                                send_batch(batch.requests, &mut pending);
+                                send_batch(batch, &mut pending);
                             }
                             break;
                         }
                         Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
-                            for batch in bq.flush_expired() {
-                                send_batch(batch.requests, &mut pending);
+                            for batch in bq.flush_expired(Instant::now()) {
+                                send_batch(batch, &mut pending);
                             }
                         }
                         Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
                             for batch in bq.flush_all() {
-                                send_batch(batch.requests, &mut pending);
+                                send_batch(batch, &mut pending);
                             }
                             break;
                         }
@@ -622,6 +682,115 @@ mod tests {
         let snap = server.shutdown();
         assert_eq!(snap.sharded, 0);
         assert_eq!(snap.completed, 1);
+    }
+
+    /// Co-batched requests over the same `Arc<Csr>` must execute as one
+    /// fused wide pass, bitwise-identical to the plain per-request path.
+    /// `max_batch = 4` with a long deadline makes the fuse deterministic:
+    /// the bucket flushes exactly when the 4th rider arrives.
+    #[test]
+    fn co_batched_same_matrix_requests_fuse_bitwise() {
+        let server = Server::start(
+            cpu_cfg(),
+            ServerConfig {
+                max_batch: 4,
+                max_wait: Duration::from_secs(60),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // d ≈ 4: outside the probe band, so the plain baseline cannot
+        // A/B-probe (a probe would make the returned algorithm and buffer
+        // timing-dependent and the bitwise compare meaningless)
+        let a = Arc::new(Csr::random(250, 250, 4.0, 1501));
+        let b = Arc::new(crate::gen::dense_matrix(250, 8, 1502));
+        // plain baseline first: a single request (deadline never fires, so
+        // force it through with max_batch by... submitting it alone and
+        // draining via the full batch below would stall; instead use a
+        // second server with batching effectively off)
+        let baseline = Server::start(cpu_cfg(), ServerConfig { max_batch: 1, ..Default::default() }).unwrap();
+        let base = baseline.submit_blocking(Arc::clone(&a), Arc::clone(&b), 8).unwrap();
+        assert_eq!(base.fused_width, 0);
+        let want = base.c.into_vec();
+        baseline.shutdown();
+
+        let handles: Vec<_> = (0..4)
+            .map(|_| server.submit(Arc::clone(&a), Arc::clone(&b), 8))
+            .collect();
+        for h in handles {
+            let r = h.recv().unwrap().unwrap();
+            assert_eq!(r.fused_width, 32, "4 riders × n=8 fuse into one 32-wide pass");
+            assert_eq!(r.shards, 1);
+            assert!(
+                r.c.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "fused output must be bitwise-identical to per-request execution"
+            );
+        }
+        let snap = server.shutdown();
+        assert_eq!(snap.completed, 4);
+        assert_eq!(snap.errors, 0);
+        assert_eq!(snap.fused_batches, 1);
+        assert_eq!(snap.fused_requests, 4);
+        assert_eq!(snap.fused_width_mean, 32.0);
+        // the router planned each rider individually: 1 miss + 3 hits
+        assert_eq!(snap.plan_misses, 1);
+        assert_eq!(snap.plan_hits, 3);
+    }
+
+    /// Steady-state fused traffic must allocate nothing: staging + wide
+    /// output + per-request outputs all replay from the `BufferPool`, and
+    /// the phase-1 partition replays from the plan cache **once per
+    /// batch**, not once per request.
+    #[test]
+    fn fused_steady_state_is_allocation_free_with_one_partition_lookup_per_batch() {
+        let server = Server::start(
+            cpu_cfg(),
+            ServerConfig {
+                max_batch: 4,
+                max_wait: Duration::from_secs(60),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let a = Arc::new(Csr::random(300, 300, 4.0, 1511)); // d ≈ 4: no probe band
+        let b = Arc::new(crate::gen::dense_matrix(300, 8, 1512));
+        let round = |server: &Server| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| server.submit(Arc::clone(&a), Arc::clone(&b), 8))
+                .collect();
+            for h in handles {
+                let r = h.recv().unwrap().unwrap();
+                assert_eq!(r.fused_width, 32);
+                drop(r); // leases return to the shared free-list
+            }
+        };
+        round(&server); // warm: plan, partition, staging + output shelves
+        let warm = server.metrics();
+        assert_eq!(warm.fused_batches, 1);
+        let rounds = 6u64;
+        for _ in 0..rounds {
+            round(&server);
+        }
+        let snap = server.shutdown();
+        assert_eq!(snap.fused_batches, 1 + rounds);
+        assert_eq!(snap.fused_requests, 4 * (1 + rounds));
+        assert_eq!(
+            snap.buffers_allocated, warm.buffers_allocated,
+            "steady-state fused batches must allocate nothing"
+        );
+        // every steady round reuses: 1 staging + 1 wide output + 4 outputs
+        assert!(
+            snap.buffer_reuses >= warm.buffer_reuses + 6 * rounds,
+            "reused {} (warm {})",
+            snap.buffer_reuses,
+            warm.buffer_reuses
+        );
+        // phase 1 ran once ever; each later BATCH (not request) replayed it
+        assert_eq!(snap.partition_misses, 1);
+        assert_eq!(
+            snap.partition_hits, rounds,
+            "one partition lookup per fused batch, not per request"
+        );
     }
 
     #[test]

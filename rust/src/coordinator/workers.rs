@@ -55,20 +55,29 @@ use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::exec::{BufferPool, ExecStats, Executor};
+use crate::exec::{BufferPool, ExecCtx, ExecStats, Executor, FusedStaging, OutputBuf};
 use crate::formats::Csr;
 use crate::plan::{PlanOutcome, Planner};
 use crate::shard::engine::{execute_shard, ShardTask, WorkSink};
+use crate::spmm::{self, Algorithm};
 
-use super::engine::{EngineConfig, SpmmEngine, SpmmResult};
+use super::engine::{EngineConfig, ExecutionPath, SpmmEngine, SpmmResult};
 use super::metrics::Metrics;
 
 /// Consecutive shard tasks a worker serves before it must service a
 /// waiting batch (the batch lane's starvation bound).
 pub const SHARD_BURST: u32 = 4;
+
+/// Widest fused pass the staging buffers may reach (`Σ n_j` columns).
+/// A bucket group wider than this splits into consecutive fused chunks —
+/// the buffer-budget fallback: `B_wide`/`C_wide` leases scale with
+/// `n_total`, and an unbounded fuse would let one flush pin an
+/// arbitrarily large allocation.
+pub const MAX_FUSED_WIDTH: usize = 1024;
 
 /// Test-only fault injection: the worker loop panics on a request with
 /// this (otherwise absurd) dense width, exercising the panic-isolation
@@ -87,17 +96,96 @@ pub(crate) struct Request {
     pub reply: Sender<Result<SpmmResult>>,
 }
 
+/// Whole-request work on the batch lane.
+pub(crate) enum BatchWork {
+    /// same-bucket requests, run back-to-back against one engine
+    Run(Vec<Request>),
+    /// `Arc`-identical-A requests executed as ONE wide pass
+    /// (`C_wide = A · [B_1 | … | B_k]`), unpacked per request — always
+    /// ≥ 2 requests (`fuse_batch` never emits a fused singleton)
+    Fused(Vec<Request>),
+}
+
+impl BatchWork {
+    fn into_requests(self) -> Vec<Request> {
+        match self {
+            BatchWork::Run(reqs) | BatchWork::Fused(reqs) => reqs,
+        }
+    }
+}
+
+/// Split one flushed bucket batch into executable work: runs of requests
+/// over the **same `Arc<Csr>`** fuse into wide passes of at most
+/// `max_width` total columns; everything else — singletons, requests with
+/// a malformed B, zero-width requests — stays on the classic back-to-back
+/// path.  Pointer identity is the correctness gate: bucket keys are
+/// quantized fingerprints, and two structurally different matrices may
+/// share one ([`crate::plan::Fingerprint`] collisions), so "same bucket"
+/// alone must never put two requests into one wide pass.
+pub(crate) fn fuse_batch(reqs: Vec<Request>, max_width: usize) -> Vec<BatchWork> {
+    fn fusable(r: &Request) -> bool {
+        r.n >= 1 && r.b.len() == r.csr.k * r.n
+    }
+    let mut works: Vec<BatchWork> = Vec::new();
+    let mut plain: Vec<Request> = Vec::new();
+    let mut slots: Vec<Option<Request>> = reqs.into_iter().map(Some).collect();
+    for i in 0..slots.len() {
+        let Some(first) = slots[i].take() else { continue };
+        if !fusable(&first) {
+            plain.push(first);
+            continue;
+        }
+        // collect the rest of this request's Arc-identity group (bucket
+        // batches are small — max_batch requests — so a linear scan beats
+        // any hashing here)
+        let ptr = Arc::as_ptr(&first.csr);
+        let mut group = vec![first];
+        for slot in slots.iter_mut().skip(i + 1) {
+            if slot
+                .as_ref()
+                .is_some_and(|r| fusable(r) && Arc::as_ptr(&r.csr) == ptr)
+            {
+                group.push(slot.take().expect("just checked"));
+            }
+        }
+        // chunk the group by the width budget; chunks of one degrade to
+        // the plain path (a lone rider gains nothing from packing)
+        let mut chunk: Vec<Request> = Vec::new();
+        let mut width = 0usize;
+        let mut flush = |chunk: &mut Vec<Request>, plain: &mut Vec<Request>| {
+            match chunk.len() {
+                0 => {}
+                1 => plain.push(chunk.pop().expect("len 1")),
+                _ => works.push(BatchWork::Fused(std::mem::take(chunk))),
+            }
+        };
+        for r in group {
+            if !chunk.is_empty() && width + r.n > max_width {
+                flush(&mut chunk, &mut plain);
+                width = 0;
+            }
+            width += r.n;
+            chunk.push(r);
+        }
+        flush(&mut chunk, &mut plain);
+    }
+    if !plain.is_empty() {
+        works.push(BatchWork::Run(plain));
+    }
+    works
+}
+
 /// One unit of worker work.
 pub(crate) enum WorkItem {
-    /// same-bucket requests, run back-to-back against one engine
-    Batch(Vec<Request>),
+    /// whole-request work from the router's bucket batcher
+    Batch(BatchWork),
     /// one shard of a scattered request
     Shard(ShardTask),
 }
 
 struct Lanes {
     shard: VecDeque<ShardTask>,
-    batch: VecDeque<Vec<Request>>,
+    batch: VecDeque<BatchWork>,
     closed: bool,
 }
 
@@ -159,21 +247,22 @@ impl WorkQueue {
         self.available.notify_one();
     }
 
-    /// Enqueue one batch, blocking while the batch lane is at capacity —
-    /// the router thread stalls here, which backs pressure up into the
-    /// bounded ingress queue exactly as the old bounded work channel did.
-    pub(crate) fn push_batch(&self, reqs: Vec<Request>) {
+    /// Enqueue one batch (plain or fused), blocking while the batch lane
+    /// is at capacity — the router thread stalls here, which backs
+    /// pressure up into the bounded ingress queue exactly as the old
+    /// bounded work channel did.
+    pub(crate) fn push_batch(&self, work: BatchWork) {
         let mut lanes = recover(&self.lanes);
         while lanes.batch.len() >= self.capacity && !lanes.closed {
             lanes = recover_wait(&self.space, lanes);
         }
         if lanes.closed {
-            for r in reqs {
+            for r in work.into_requests() {
                 let _ = r.reply.send(Err(anyhow::anyhow!("server shutting down")));
             }
             return;
         }
-        lanes.batch.push_back(reqs);
+        lanes.batch.push_back(work);
         self.available.notify_one();
     }
 
@@ -191,10 +280,10 @@ impl WorkQueue {
             // Bounded bypass: after SHARD_BURST shard tasks in a row,
             // service one waiting batch before the next shard.
             if *streak >= SHARD_BURST {
-                if let Some(reqs) = lanes.batch.pop_front() {
+                if let Some(work) = lanes.batch.pop_front() {
                     *streak = 0;
                     self.space.notify_all();
-                    return Some(WorkItem::Batch(reqs));
+                    return Some(WorkItem::Batch(work));
                 }
             }
             if let Some(task) = lanes.shard.pop_front() {
@@ -202,10 +291,10 @@ impl WorkQueue {
                 self.space.notify_all();
                 return Some(WorkItem::Shard(task));
             }
-            if let Some(reqs) = lanes.batch.pop_front() {
+            if let Some(work) = lanes.batch.pop_front() {
                 *streak = 0;
                 self.space.notify_all();
-                return Some(WorkItem::Batch(reqs));
+                return Some(WorkItem::Batch(work));
             }
             if lanes.closed {
                 return None;
@@ -313,9 +402,9 @@ impl WorkerRuntime {
         self.workers
     }
 
-    /// Submit one batch of planned requests (blocks on lane capacity).
-    pub(crate) fn submit_batch(&self, reqs: Vec<Request>) {
-        self.queue.push_batch(reqs);
+    /// Submit one unit of batch-lane work (blocks on lane capacity).
+    pub(crate) fn submit_batch(&self, work: BatchWork) {
+        self.queue.push_batch(work);
     }
 
     /// The shared two-lane queue (depth gauges, tests).
@@ -398,38 +487,168 @@ fn worker_loop(
     exec: Arc<Executor>,
     shard_count: Arc<AtomicU64>,
 ) {
-    let mut shard_ctx = exec.make_ctx();
-    let engine = SpmmEngine::new_shared(engine_cfg, Arc::clone(&planner), exec).map(|e| {
-        // pool gauges are unified: the runtime aggregate is the one
-        // writer, so the sync must be off BEFORE the shared metrics are
-        // attached (with_shared_metrics re-syncs) or this worker's slice
-        // clobbers the aggregate once at startup
-        e.with_exec_gauge_sync(false)
-            .with_shared_metrics(Arc::clone(&metrics))
-    });
+    // scratch for the engine-less execution paths (shard tasks + fused
+    // wide passes); the engine keeps its own context for batch requests
+    let mut ctx = exec.make_ctx();
+    let engine = SpmmEngine::new_shared(engine_cfg, Arc::clone(&planner), Arc::clone(&exec))
+        .map(|e| {
+            // pool gauges are unified: the runtime aggregate is the one
+            // writer, so the sync must be off BEFORE the shared metrics are
+            // attached (with_shared_metrics re-syncs) or this worker's slice
+            // clobbers the aggregate once at startup
+            e.with_exec_gauge_sync(false)
+                .with_shared_metrics(Arc::clone(&metrics))
+        });
     let mut streak = 0u32;
     while let Some(item) = queue.pop(&mut streak) {
         match item {
-            WorkItem::Batch(reqs) => match &engine {
-                Ok(engine) => run_batch(engine, &metrics, reqs),
-                Err(e) => {
-                    // engine failed to build: fail the batch, keep serving
-                    // (shard tasks still run on this worker).  Count the
-                    // failures — monitoring must not see a healthy idle
-                    // server while every client errors.
-                    for r in reqs {
-                        metrics.requests.fetch_add(1, Ordering::Relaxed);
-                        metrics.errors.fetch_add(1, Ordering::Relaxed);
-                        let _ = r.reply.send(Err(anyhow::anyhow!("engine init: {e}")));
+            WorkItem::Batch(work) => {
+                let reqs = match work {
+                    // Fused wide pass first; a panic inside it hands the
+                    // riders back for classic per-request execution, where
+                    // a poisoned request fails alone.
+                    BatchWork::Fused(reqs) => {
+                        match run_fused(&planner, &exec, &mut ctx, &metrics, reqs) {
+                            None => continue,
+                            Some(reqs) => reqs,
+                        }
+                    }
+                    BatchWork::Run(reqs) => reqs,
+                };
+                match &engine {
+                    Ok(engine) => run_batch(engine, &metrics, reqs),
+                    Err(e) => {
+                        // engine failed to build: fail the batch, keep
+                        // serving (shard tasks still run on this worker).
+                        // Count the failures — monitoring must not see a
+                        // healthy idle server while every client errors.
+                        for r in reqs {
+                            metrics.requests.fetch_add(1, Ordering::Relaxed);
+                            metrics.errors.fetch_add(1, Ordering::Relaxed);
+                            let _ = r.reply.send(Err(anyhow::anyhow!("engine init: {e}")));
+                        }
                     }
                 }
-            },
+            }
             WorkItem::Shard(task) => {
                 shard_count.fetch_add(1, Ordering::Relaxed);
-                execute_shard(&planner, &mut shard_ctx, task, index);
+                execute_shard(&planner, &mut ctx, task, index);
             }
         }
     }
+}
+
+/// Execute one fused batch: pack `[B_1 | … | B_k]` into a pooled wide
+/// staging buffer, run ONE `m × n_total` pass over the shared A, unpack
+/// per-request column slices into pooled output leases, and complete
+/// every rider's handle.  The plan is re-decided at the fused width
+/// ([`Planner::plan_fused`]) but the phase-1 partition replays from the
+/// plan cache — one partition lookup per batch, not per request.
+///
+/// Fused execution is CPU-only and engine-less: it needs the planner, the
+/// worker's executor (pool + buffer free-list), and a scratch context —
+/// so it keeps working even on a worker whose engine failed to build.  It
+/// also never A/B-probes (same policy as the sharded path): the tuner
+/// keeps learning from singleton and unfused traffic.
+///
+/// Returns `None` when the batch was handled.  A panic anywhere in the
+/// wide pass returns `Some(reqs)` — nothing has been counted or replied
+/// yet — and the caller re-runs the riders on the classic per-request
+/// path (the same catch_unwind discipline as `run_batch`), so a poisoned
+/// request degrades to an error on its own reply channel only.
+fn run_fused(
+    planner: &Planner,
+    exec: &Executor,
+    ctx: &mut ExecCtx,
+    metrics: &Metrics,
+    reqs: Vec<Request>,
+) -> Option<Vec<Request>> {
+    if reqs.len() < 2 {
+        // fuse_batch never emits these; route stragglers to the plain path
+        return Some(reqs);
+    }
+    let t0 = Instant::now();
+    let a = Arc::clone(&reqs[0].csr);
+    let n_total: usize = reqs.iter().map(|r| r.n).sum();
+    let executed = std::panic::catch_unwind(AssertUnwindSafe(|| {
+        #[cfg(test)]
+        if reqs.iter().any(|r| r.n == PANIC_N) {
+            panic!("injected fused panic (test hook: n == PANIC_N)");
+        }
+        // the router fingerprinted every rider at planning time; reuse it
+        // rather than re-walking row_ptr once per batch
+        let outcome = match reqs[0].outcome.as_ref() {
+            Some(o) => planner.plan_fused_keyed(o.fingerprint, &a, n_total),
+            None => planner.plan_fused(&a, n_total),
+        };
+        // A cache hit means the cached (narrow) decision also holds at the
+        // fused width: replay its stored partition — one lookup per batch.
+        // Otherwise the width flipped the algorithm: compute the partition
+        // detached from the cache, so the wide decision can never be
+        // installed under the narrow traffic's cache entry.
+        let segs = if outcome.cache_hit {
+            planner.partition_for(&a, &outcome)
+        } else {
+            planner.partition_detached(&a, &outcome)
+        };
+        let staging = FusedStaging::pack(
+            exec.buffers(),
+            a.k,
+            n_total,
+            reqs.iter().map(|r| (r.b.as_slice(), r.n)),
+        );
+        let mut c_wide = exec.acquire(a.m * n_total);
+        match outcome.plan.algorithm {
+            Algorithm::RowSplit => {
+                spmm::rowsplit_spmm_into(&a, staging.b_wide(), n_total, &segs, ctx, &mut c_wide)
+            }
+            Algorithm::MergeBased => {
+                spmm::merge_spmm_into(&a, staging.b_wide(), n_total, &segs, ctx, &mut c_wide)
+            }
+        }
+        let mut outs: Vec<OutputBuf> = reqs.iter().map(|r| exec.acquire(a.m * r.n)).collect();
+        FusedStaging::unpack(
+            &c_wide,
+            a.m,
+            n_total,
+            outs.iter_mut().zip(&reqs).map(|(o, r)| (&mut o[..], r.n)),
+        );
+        // staging + c_wide leases return to the free-list here; the
+        // per-request leases ride out in the replies
+        (outcome, outs)
+    }));
+    let (outcome, outs) = match executed {
+        Ok(v) => v,
+        Err(_) => return Some(reqs), // degrade to per-request execution
+    };
+    let latency = t0.elapsed().as_secs_f64();
+    let k = reqs.len() as u64;
+    metrics.requests.fetch_add(k, Ordering::Relaxed);
+    metrics.completed.fetch_add(k, Ordering::Relaxed);
+    metrics.cpu_fallback.fetch_add(k, Ordering::Relaxed);
+    match outcome.plan.algorithm {
+        Algorithm::RowSplit => &metrics.rowsplit,
+        Algorithm::MergeBased => &metrics.merge,
+    }
+    .fetch_add(k, Ordering::Relaxed);
+    metrics.record_fused(k, n_total as u64);
+    for _ in 0..k {
+        metrics.record_latency(latency);
+    }
+    for (r, c) in reqs.into_iter().zip(outs) {
+        let _ = r.reply.send(Ok(SpmmResult {
+            c,
+            algorithm: outcome.plan.algorithm,
+            path: ExecutionPath::CpuFallback,
+            bucket: None,
+            cache_hit: outcome.cache_hit,
+            latency_s: latency,
+            shards: 1,
+            shard_workers: Vec::new(),
+            fused_width: n_total,
+        }));
+    }
+    None
 }
 
 /// Run one batch back-to-back against the worker's engine, catching
@@ -478,7 +697,7 @@ mod tests {
     #[test]
     fn shard_lane_preempts_queued_batches() {
         let q = WorkQueue::new(8);
-        q.push_batch(vec![dummy_request(1)]);
+        q.push_batch(BatchWork::Run(vec![dummy_request(1)]));
         q.push_shard(ShardTask::dummy());
         let mut streak = 0u32;
         assert!(matches!(q.pop(&mut streak), Some(WorkItem::Shard(_))));
@@ -491,7 +710,7 @@ mod tests {
         for _ in 0..SHARD_BURST + 2 {
             q.push_shard(ShardTask::dummy());
         }
-        q.push_batch(vec![dummy_request(2)]);
+        q.push_batch(BatchWork::Run(vec![dummy_request(2)]));
         let mut streak = 0u32;
         let mut shard_runs_before_batch = 0u32;
         loop {
@@ -511,7 +730,7 @@ mod tests {
     fn close_drains_queued_work_before_ending() {
         let q = WorkQueue::new(8);
         q.push_shard(ShardTask::dummy());
-        q.push_batch(vec![dummy_request(3)]);
+        q.push_batch(BatchWork::Run(vec![dummy_request(3)]));
         q.close();
         let mut streak = 0u32;
         assert!(matches!(q.pop(&mut streak), Some(WorkItem::Shard(_))));
@@ -535,7 +754,7 @@ mod tests {
         assert!(q.lanes.is_poisoned());
         // every operation keeps working through the recovery guard
         q.push_shard(ShardTask::dummy());
-        q.push_batch(vec![dummy_request(4)]);
+        q.push_batch(BatchWork::Run(vec![dummy_request(4)]));
         assert_eq!(q.depths(), (1, 1));
         let mut streak = 0u32;
         assert!(matches!(q.pop(&mut streak), Some(WorkItem::Shard(_))));
@@ -569,14 +788,14 @@ mod tests {
         let mut receivers = Vec::new();
         for id in 0..6u64 {
             let (tx, rx) = channel();
-            rt.submit_batch(vec![Request {
+            rt.submit_batch(BatchWork::Run(vec![Request {
                 id,
                 csr: Arc::clone(&a),
                 b: Arc::clone(&b),
                 n: 4,
                 outcome: None,
                 reply: tx,
-            }]);
+            }]));
             receivers.push(rx);
         }
         for rx in receivers {
@@ -608,15 +827,203 @@ mod tests {
             metrics,
         );
         let (tx, rx) = channel();
-        rt.submit_batch(vec![Request {
+        rt.submit_batch(BatchWork::Run(vec![Request {
             id: 0,
             csr: Arc::new(Csr::random(10, 10, 2.0, 7301)),
             b: Arc::new(crate::gen::dense_matrix(10, 2, 7302)),
             n: 2,
             outcome: None,
             reply: tx,
-        }]);
+        }]));
         let err = rx.recv().unwrap().unwrap_err();
         assert!(err.to_string().contains("engine init"), "{err}");
+    }
+
+    type Reply = std::sync::mpsc::Receiver<Result<SpmmResult>>;
+
+    fn req_for(a: &Arc<Csr>, b: &Arc<Vec<f32>>, n: usize, id: u64) -> (Request, Reply) {
+        let (tx, rx) = channel();
+        (
+            Request {
+                id,
+                csr: Arc::clone(a),
+                b: Arc::clone(b),
+                n,
+                outcome: None,
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn fuse_batch_groups_by_arc_identity_and_width() {
+        let a1 = Arc::new(Csr::random(30, 30, 3.0, 7401));
+        // same structure, different allocation: equal fingerprints cannot
+        // prove equal matrices, so these must NOT fuse with a1
+        let a2 = Arc::new((*a1).clone());
+        let b4 = Arc::new(crate::gen::dense_matrix(30, 4, 7402));
+        let b6 = Arc::new(crate::gen::dense_matrix(30, 6, 7403));
+        let reqs = vec![
+            req_for(&a1, &b4, 4, 0).0,
+            req_for(&a2, &b4, 4, 1).0,
+            req_for(&a1, &b6, 6, 2).0,
+            req_for(&a2, &b4, 4, 3).0,
+            req_for(&a1, &b4, 4, 4).0,
+        ];
+        let works = fuse_batch(reqs, MAX_FUSED_WIDTH);
+        let mut fused_groups: Vec<Vec<u64>> = Vec::new();
+        let mut plain_ids: Vec<u64> = Vec::new();
+        for w in works {
+            match w {
+                BatchWork::Fused(rs) => fused_groups.push(rs.iter().map(|r| r.id).collect()),
+                BatchWork::Run(rs) => plain_ids.extend(rs.iter().map(|r| r.id)),
+            }
+        }
+        fused_groups.sort();
+        assert_eq!(fused_groups, vec![vec![0, 2, 4], vec![1, 3]]);
+        assert!(plain_ids.is_empty());
+
+        // width budget: a group wider than the cap splits into chunks,
+        // and a leftover chunk of one rides the plain path
+        let reqs = vec![
+            req_for(&a1, &b6, 6, 10).0,
+            req_for(&a1, &b6, 6, 11).0,
+            req_for(&a1, &b6, 6, 12).0,
+        ];
+        let works = fuse_batch(reqs, 12);
+        let mut fused = 0usize;
+        let mut plain = 0usize;
+        for w in works {
+            match w {
+                BatchWork::Fused(rs) => {
+                    assert_eq!(rs.iter().map(|r| r.n).sum::<usize>(), 12);
+                    fused += rs.len();
+                }
+                BatchWork::Run(rs) => plain += rs.len(),
+            }
+        }
+        assert_eq!((fused, plain), (2, 1));
+
+        // malformed B (wrong length) and zero-width requests stay plain
+        let bad = Request {
+            id: 20,
+            csr: Arc::clone(&a1),
+            b: Arc::new(vec![0.0; 7]),
+            n: 4,
+            outcome: None,
+            reply: channel().0,
+        };
+        let zero = Request {
+            id: 21,
+            csr: Arc::clone(&a1),
+            b: Arc::new(Vec::new()),
+            n: 0,
+            outcome: None,
+            reply: channel().0,
+        };
+        let good = req_for(&a1, &b4, 4, 22).0;
+        let works = fuse_batch(vec![bad, zero, good], MAX_FUSED_WIDTH);
+        assert!(works.iter().all(|w| matches!(w, BatchWork::Run(_))));
+        let total: usize = works
+            .iter()
+            .map(|w| match w {
+                BatchWork::Run(rs) | BatchWork::Fused(rs) => rs.len(),
+            })
+            .sum();
+        assert_eq!(total, 3, "no request may be dropped");
+    }
+
+    #[test]
+    fn fused_work_is_bitwise_identical_to_the_plain_path() {
+        let planner = Arc::new(Planner::new(9.35, 64, 2));
+        let buffers = Arc::new(BufferPool::new());
+        let metrics = Arc::new(Metrics::new());
+        let rt = WorkerRuntime::spawn(
+            1,
+            16,
+            EngineConfig {
+                artifacts_dir: None,
+                cpu_workers: 2,
+                ..Default::default()
+            },
+            planner,
+            buffers,
+            Arc::clone(&metrics),
+        );
+        // d ≈ 4: outside the probe band — the plain baseline must not
+        // A/B-probe, or its returned algorithm/buffer would be
+        // timing-dependent and the bitwise compare meaningless
+        let a = Arc::new(Csr::random(120, 90, 4.0, 7501));
+        let b = Arc::new(crate::gen::dense_matrix(90, 8, 7502));
+        // plain baseline through the same runtime (plans + partition warm)
+        let (r0, rx0) = req_for(&a, &b, 8, 0);
+        rt.submit_batch(BatchWork::Run(vec![r0]));
+        let base = rx0.recv().unwrap().unwrap();
+        assert_eq!(base.fused_width, 0);
+        let want: Vec<f32> = base.c.to_vec();
+        drop(base);
+        // fused pair over the identical A
+        let (r1, rx1) = req_for(&a, &b, 8, 1);
+        let (r2, rx2) = req_for(&a, &b, 8, 2);
+        rt.submit_batch(BatchWork::Fused(vec![r1, r2]));
+        for rx in [rx1, rx2] {
+            let r = rx.recv().unwrap().unwrap();
+            assert_eq!(r.fused_width, 16, "result must report the fused width");
+            assert!(r.cache_hit, "fused plan must replay the cached entry");
+            assert!(
+                r.c.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "fused output must match the plain path bit for bit"
+            );
+        }
+        rt.shutdown();
+        let snap = metrics.snapshot();
+        assert_eq!(snap.completed, 3);
+        assert_eq!(snap.fused_batches, 1);
+        assert_eq!(snap.fused_requests, 2);
+        assert_eq!(snap.fused_width_mean, 16.0);
+    }
+
+    /// A panic inside the wide pass must degrade to per-request execution:
+    /// the poisoned rider fails alone, its batch-mates still succeed.
+    #[test]
+    fn fused_panic_degrades_to_per_request_execution() {
+        let planner = Arc::new(Planner::new(9.35, 64, 1));
+        let buffers = Arc::new(BufferPool::new());
+        let metrics = Arc::new(Metrics::new());
+        let rt = WorkerRuntime::spawn(
+            1,
+            8,
+            EngineConfig {
+                artifacts_dir: None,
+                cpu_workers: 1,
+                ..Default::default()
+            },
+            planner,
+            buffers,
+            Arc::clone(&metrics),
+        );
+        let a = Arc::new(Csr::random(40, 40, 3.0, 7601));
+        let b = Arc::new(crate::gen::dense_matrix(40, 4, 7602));
+        let want = crate::spmm::spmm_reference(&a, &b, 4);
+        let (good1, rx1) = req_for(&a, &b, 4, 0);
+        let (mut bad, rx_bad) = req_for(&a, &b, 4, 1);
+        bad.n = PANIC_N; // trips the injected panic inside run_fused AND run_batch
+        let (good2, rx2) = req_for(&a, &b, 4, 2);
+        rt.submit_batch(BatchWork::Fused(vec![good1, bad, good2]));
+        let err = rx_bad.recv().unwrap().unwrap_err();
+        assert!(err.to_string().contains("panicked"), "{err}");
+        for rx in [rx1, rx2] {
+            let r = rx.recv().unwrap().unwrap();
+            assert_eq!(r.fused_width, 0, "fallback runs per-request, not fused");
+            for (x, y) in r.c.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()));
+            }
+        }
+        rt.shutdown();
+        let snap = metrics.snapshot();
+        assert_eq!(snap.completed, 2);
+        assert_eq!(snap.errors, 1);
+        assert_eq!(snap.fused_batches, 0, "a failed fuse must not count as fused");
     }
 }

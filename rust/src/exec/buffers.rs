@@ -197,6 +197,93 @@ impl std::fmt::Debug for OutputRange {
     }
 }
 
+/// Staging for one **fused wide-SpMM batch**: `k` co-batched requests
+/// over the same `A` execute as ONE `m × n_total` pass
+/// (`C_wide = A · [B_1 | B_2 | … | B_k]`), so A's `row_ptr/col_idx/vals`
+/// stream once per *batch* instead of once per request — the
+/// serving-level analogue of the paper's coalescing argument: every load
+/// of an A-nonzero is amortized across the full fused dense width.
+///
+/// The wide B is a [`BufferPool`] lease, so steady-state fused batches
+/// allocate nothing.  Pack and unpack both move whole row slices with
+/// stride-1 `copy_from_slice` (one contiguous tile per request per row —
+/// the compiler lowers them to vector memcpy), and the lease returns to
+/// the free-list when the staging drops.
+pub struct FusedStaging {
+    b_wide: OutputBuf,
+    n_total: usize,
+    k_rows: usize,
+}
+
+impl FusedStaging {
+    /// Lease a `k_rows × n_total` wide-B buffer from `pool` and pack the
+    /// per-request `k_rows × n_j` row-major B's side by side: request
+    /// `j`'s columns occupy `[off_j, off_j + n_j)` of every wide row,
+    /// with `off_j = Σ_{i<j} n_i`.  The widths must sum to `n_total`.
+    pub fn pack<'a>(
+        pool: &Arc<BufferPool>,
+        k_rows: usize,
+        n_total: usize,
+        parts: impl Iterator<Item = (&'a [f32], usize)>,
+    ) -> Self {
+        let mut b_wide = BufferPool::acquire(pool, k_rows * n_total);
+        let mut off = 0usize;
+        for (b, n) in parts {
+            assert_eq!(b.len(), k_rows * n, "each B must be k×n row-major");
+            assert!(off + n <= n_total, "widths exceed n_total");
+            for r in 0..k_rows {
+                b_wide[r * n_total + off..r * n_total + off + n]
+                    .copy_from_slice(&b[r * n..(r + 1) * n]);
+            }
+            off += n;
+        }
+        assert_eq!(off, n_total, "widths must sum to n_total");
+        Self {
+            b_wide,
+            n_total,
+            k_rows,
+        }
+    }
+
+    /// The packed `k_rows × n_total` row-major wide B.
+    pub fn b_wide(&self) -> &[f32] {
+        &self.b_wide
+    }
+
+    /// Fused dense width (`Σ n_j`).
+    pub fn n_total(&self) -> usize {
+        self.n_total
+    }
+
+    /// Rows of B (the shared matrix's `k`).
+    pub fn k_rows(&self) -> usize {
+        self.k_rows
+    }
+
+    /// Scatter a computed `m × n_total` wide output back into per-request
+    /// `m × n_j` buffers — the exact inverse column slicing of
+    /// [`Self::pack`].  Each copy is a stride-1 row slice.
+    pub fn unpack<'a>(
+        c_wide: &[f32],
+        m: usize,
+        n_total: usize,
+        outs: impl Iterator<Item = (&'a mut [f32], usize)>,
+    ) {
+        assert_eq!(c_wide.len(), m * n_total, "C_wide must be m×n_total");
+        let mut off = 0usize;
+        for (c, n) in outs {
+            assert_eq!(c.len(), m * n, "each C must be m×n row-major");
+            assert!(off + n <= n_total, "widths exceed n_total");
+            for r in 0..m {
+                c[r * n..(r + 1) * n]
+                    .copy_from_slice(&c_wide[r * n_total + off..r * n_total + off + n]);
+            }
+            off += n;
+        }
+        assert_eq!(off, n_total, "widths must sum to n_total");
+    }
+}
+
 impl From<Vec<f32>> for OutputBuf {
     fn from(data: Vec<f32>) -> Self {
         Self::detached(data)
@@ -338,5 +425,81 @@ mod tests {
     fn split_rows_rejects_rewinding_cuts() {
         let mut buf = OutputBuf::detached(vec![0.0; 12]);
         let _ = buf.split_rows(&[0, 3, 2, 4], 3);
+    }
+
+    #[test]
+    fn fused_pack_interleaves_columns_and_unpack_inverts() {
+        // k_rows = 2, widths [1, 3, 2]: B rows pack side by side
+        let pool = Arc::new(BufferPool::new());
+        let b1 = vec![10.0, 11.0]; // 2×1
+        let b2 = vec![20.0, 21.0, 22.0, 23.0, 24.0, 25.0]; // 2×3
+        let b3 = vec![30.0, 31.0, 32.0, 33.0]; // 2×2
+        let parts = [(b1.as_slice(), 1), (b2.as_slice(), 3), (b3.as_slice(), 2)];
+        let staging = FusedStaging::pack(&pool, 2, 6, parts.iter().copied());
+        assert_eq!(staging.n_total(), 6);
+        assert_eq!(staging.k_rows(), 2);
+        assert_eq!(
+            staging.b_wide(),
+            &[10.0, 20.0, 21.0, 22.0, 30.0, 31.0, 11.0, 23.0, 24.0, 25.0, 32.0, 33.0]
+        );
+        // unpack is the exact inverse (use the packed matrix as a stand-in
+        // for a computed 2×6 wide output)
+        let mut o1 = vec![f32::NAN; 2];
+        let mut o2 = vec![f32::NAN; 6];
+        let mut o3 = vec![f32::NAN; 4];
+        {
+            let outs = [(o1.as_mut_slice(), 1), (o2.as_mut_slice(), 3), (o3.as_mut_slice(), 2)];
+            FusedStaging::unpack(staging.b_wide(), 2, 6, outs.into_iter());
+        }
+        assert_eq!(o1, b1);
+        assert_eq!(o2, b2);
+        assert_eq!(o3, b3);
+    }
+
+    #[test]
+    fn fused_staging_recycles_through_the_pool() {
+        let pool = Arc::new(BufferPool::new());
+        let b = vec![1.0f32; 4 * 3];
+        let s1 = FusedStaging::pack(&pool, 4, 3, [(b.as_slice(), 3)].into_iter());
+        let ptr = s1.b_wide().as_ptr();
+        drop(s1); // lease returns to the free-list
+        let s2 = FusedStaging::pack(&pool, 4, 3, [(b.as_slice(), 3)].into_iter());
+        assert_eq!(s2.b_wide().as_ptr(), ptr, "steady-state staging must reuse the lease");
+        let stats = pool.stats();
+        assert_eq!((stats.allocated, stats.reused), (1, 1));
+    }
+
+    #[test]
+    fn fused_pack_handles_degenerate_widths() {
+        let pool = Arc::new(BufferPool::new());
+        // zero-width rider contributes nothing but keeps its slot
+        let b0: Vec<f32> = Vec::new();
+        let b1 = vec![1.0, 2.0];
+        let parts = [(b0.as_slice(), 0), (b1.as_slice(), 1)];
+        let s = FusedStaging::pack(&pool, 2, 1, parts.into_iter());
+        assert_eq!(s.b_wide(), &[1.0, 2.0]);
+        // zero-row matrix (k = 0): every part is empty
+        let e1: Vec<f32> = Vec::new();
+        let e2: Vec<f32> = Vec::new();
+        let parts = [(e1.as_slice(), 1), (e2.as_slice(), 1)];
+        let s = FusedStaging::pack(&pool, 0, 2, parts.into_iter());
+        assert!(s.b_wide().is_empty());
+        // zero-row unpack (m = 0) is a no-op over empty windows
+        let (mut o1, mut o2): (Vec<f32>, Vec<f32>) = (Vec::new(), Vec::new());
+        let wide: Vec<f32> = Vec::new();
+        FusedStaging::unpack(
+            &wide,
+            0,
+            2,
+            [(o1.as_mut_slice(), 1), (o2.as_mut_slice(), 1)].into_iter(),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "widths must sum to n_total")]
+    fn fused_pack_rejects_short_widths() {
+        let pool = Arc::new(BufferPool::new());
+        let b = vec![0.0f32; 2];
+        let _ = FusedStaging::pack(&pool, 2, 4, [(b.as_slice(), 1)].into_iter());
     }
 }

@@ -17,7 +17,7 @@ pub mod buffers;
 pub mod ctx;
 pub mod pool;
 
-pub use buffers::{BufferPool, BufferStats, OutputBuf, OutputRange};
+pub use buffers::{BufferPool, BufferStats, FusedStaging, OutputBuf, OutputRange};
 pub use ctx::{CarrySlot, ExecCtx, NO_CARRY};
 pub use pool::{global_pool, WorkerPool};
 

@@ -115,6 +115,43 @@
 //! policy as [`coordinator::EngineConfig::shard`] and
 //! `merge-spmm serve --shards N|auto`.
 //!
+//! ## fuse — one pass over A for every co-batched request
+//!
+//! The paper's SpMM-beats-n-SpMVs argument is that every A-nonzero load
+//! amortizes across the full dense width of B.  The fusion layer applies
+//! the same argument *across requests*: co-batched requests over the same
+//! matrix execute as ONE wide pass, `C_wide = A · [B_1 | B_2 | … | B_k]`,
+//! so A's CSR arrays (and the replayed phase-1 partition) stream once per
+//! batch instead of once per request:
+//!
+//! * **bucketing by fingerprint** — the router keys its batch buckets by
+//!   the plan-cache [`plan::Fingerprint`] ([`coordinator::RouteKey`]), so
+//!   a bucket holds only requests that can share one A; the fuser then
+//!   confirms `Arc` identity per group (quantized fingerprints may
+//!   collide, and fusing two different matrices would be wrong);
+//! * **pooled staging** — [`exec::FusedStaging`] packs the per-request
+//!   B's side by side into a leased `k × n_total` wide buffer and unpacks
+//!   `C_wide` column slices back into per-request [`exec::OutputBuf`]
+//!   leases, all stride-1 row-slice copies recycled through the shared
+//!   [`exec::BufferPool`] — zero steady-state allocation;
+//! * **width-aware planning** — [`plan::Planner::plan_fused`] replays the
+//!   cached partition (it depends only on A) while re-deciding the
+//!   algorithm at the fused width: past [`spmm::TILE_WIDTH`] columns the
+//!   merge executor loses its register tile and its carry-out traffic
+//!   grows with n, so the crossover shifts toward row-split;
+//! * **per-request degradation** — a panic inside the wide pass hands the
+//!   riders back to the classic per-request path (the poisoned request
+//!   fails alone), and batches wider than the staging budget split into
+//!   consecutive fused chunks.
+//!
+//! With an unchanged algorithm the fused pass is **bitwise-identical** to
+//! per-request execution (both kernels accumulate each output element in
+//! nonzero order; packing only shifts column offsets) — property-tested
+//! in `tests/spmm_props.rs`.  Fused traffic surfaces as
+//! `fused_batches`/`fused_requests` counters and the `fused_width_mean`
+//! gauge (`fuse=…x…` in the metrics line), and per-request in
+//! [`coordinator::SpmmResult`]'s `fused_width`.
+//!
 //! ### The `_into` API contract
 //!
 //! [`spmm::rowsplit_spmm_into`] and [`spmm::merge_spmm_into`] are the

@@ -170,6 +170,82 @@ impl Planner {
         }
     }
 
+    /// Plan one **fused wide pass**: `k` co-batched requests over the
+    /// same matrix execute as a single `m × n_total` SpMM
+    /// ([`crate::coordinator`]'s fusion layer).  Two width-aware facts
+    /// shape this entry:
+    ///
+    /// * the phase-1 **partition depends only on A** (and the planned
+    ///   parallelism), never on the dense width — so the cached
+    ///   per-request plan's stored partition replays unchanged at the
+    ///   fused width (one cache lookup per *batch*, not per request);
+    /// * the **algorithm** is re-decided at `n_total`
+    ///   ([`OnlineTuner::decide_at_width`]): past the register-tile width
+    ///   the crossover shifts toward row-split, so a fused batch may run
+    ///   a different executor than its riders would individually.
+    ///
+    /// When the width flips the decision, a fresh plan is built (CPU-only
+    /// — fused widths fit no AOT bucket) and the cached per-request entry
+    /// is left untouched: narrow traffic for this fingerprint must keep
+    /// its own decision (execute flipped outcomes through
+    /// [`Self::partition_detached`], never [`Self::partition_for`], so the
+    /// flipped plan can't be inserted into the cache either).
+    /// Counter-neutral on the plan cache (the router already counted each
+    /// rider's hit/miss).
+    pub fn plan_fused(&self, a: &Csr, n_total: usize) -> PlanOutcome {
+        self.plan_fused_keyed(Fingerprint::of(a), a, n_total)
+    }
+
+    /// [`Self::plan_fused`] with the fingerprint supplied by the caller —
+    /// the serve path already fingerprinted every rider at routing time,
+    /// so the fused hot path must not repeat the O(m) `row_ptr` scan.
+    pub fn plan_fused_keyed(
+        &self,
+        fingerprint: Fingerprint,
+        a: &Csr,
+        n_total: usize,
+    ) -> PlanOutcome {
+        if let Some(plan) = self.cache.peek(&fingerprint) {
+            // At or below the register-tile width the width correction is
+            // the identity, so the fused decision IS the narrow decision:
+            // reuse the cached plan outright.  Re-deriving it from the
+            // quantized fingerprint mean would disagree with the exact
+            // `mean_row_length` the narrow planner used whenever the two
+            // straddle the threshold — running the fused pass on the
+            // other executor and rebuilding the plan every batch.
+            let agrees = n_total <= crate::spmm::TILE_WIDTH
+                || plan.algorithm == self.tuner.decide_at_width(fingerprint.d(), n_total);
+            if agrees {
+                return PlanOutcome {
+                    plan,
+                    fingerprint,
+                    cache_hit: true,
+                };
+            }
+        }
+        let algorithm = self.tuner.decide_at_width(fingerprint.d(), n_total);
+        PlanOutcome {
+            plan: self.build_plan(a, algorithm, None),
+            fingerprint,
+            cache_hit: false,
+        }
+    }
+
+    /// Phase-1 decomposition computed **without touching the plan cache**
+    /// — for outcomes that must not become the fingerprint's cached entry
+    /// (a width-flipped fused plan: routing it through
+    /// [`Self::partition_for`] could insert the wide decision under the
+    /// narrow traffic's key if that entry were concurrently evicted).
+    /// Counter-neutral on the replay gauges: this is a planned recompute,
+    /// not a cache miss.
+    pub fn partition_detached(&self, a: &Csr, outcome: &PlanOutcome) -> Arc<Vec<Segment>> {
+        Arc::new(crate::exec::partition(
+            a,
+            outcome.plan.algorithm,
+            outcome.plan.cpu_parallelism(a),
+        ))
+    }
+
     /// Should this request be A/B-probed? (delegates to the tuner)
     pub fn should_probe(&self, a: &Csr) -> bool {
         self.tuner.should_probe(a.mean_row_length())
@@ -459,6 +535,84 @@ mod tests {
         assert!(!Arc::ptr_eq(&segs_a, &segs_b), "foreign partition must not replay");
         assert!(crate::loadbalance::validate_segments(&b, &segs_b).is_ok());
         assert_eq!(p.partition_stats().misses, 2);
+    }
+
+    #[test]
+    fn plan_fused_replays_the_cached_partition_at_any_width() {
+        let p = Planner::new(9.35, 16, 4);
+        let a = Csr::random(500, 500, 5.0, 81); // d ≈ 5 → merge
+        let out = p.plan(&a, None);
+        let segs = p.partition_for(&a, &out);
+        // n_total = 32 ≤ TILE_WIDTH: same decision, cached plan + partition
+        let fused = p.plan_fused(&a, 32);
+        assert!(fused.cache_hit);
+        assert_eq!(fused.plan.algorithm, Algorithm::MergeBased);
+        let replayed = p.partition_for(&a, &fused);
+        assert!(Arc::ptr_eq(&replayed, &segs), "partition depends only on A");
+        assert_eq!(p.partition_stats(), PartitionStats { hits: 1, misses: 1 });
+    }
+
+    #[test]
+    fn plan_fused_agrees_with_narrow_decision_at_the_quantization_boundary() {
+        // exact d = 9.3459 (< 9.35 → the narrow planner picks merge) but
+        // the quantized fingerprint mean rounds UP to exactly 9.35 (→ the
+        // boundary decision is row-split): at or below the tile width the
+        // fused path must reuse the narrow decision, not re-derive it
+        // from the quantized mean — otherwise every fused batch runs the
+        // other executor and rebuilds the plan.
+        let m = 10_000usize;
+        let mut row_ptr = vec![0usize];
+        let mut cols: Vec<u32> = Vec::new();
+        for i in 0..m {
+            let len = if i < 3459 { 10u32 } else { 9 };
+            cols.extend(0..len);
+            row_ptr.push(cols.len());
+        }
+        let vals = vec![1.0f32; cols.len()];
+        let a = Csr::new(m, 16, row_ptr, cols, vals).unwrap();
+        assert!(a.mean_row_length() < 9.35);
+        assert_eq!(Fingerprint::of(&a).d(), 9.35);
+        let p = Planner::new(9.35, 16, 2);
+        let out = p.plan(&a, None);
+        assert_eq!(out.plan.algorithm, Algorithm::MergeBased);
+        let fused = p.plan_fused(&a, 32);
+        assert!(fused.cache_hit, "boundary fingerprints must still replay the cached plan");
+        assert_eq!(fused.plan.algorithm, Algorithm::MergeBased);
+        // wide widths still flip via the width rule
+        let wide = p.plan_fused(&a, 1024);
+        assert!(!wide.cache_hit);
+        assert_eq!(wide.plan.algorithm, Algorithm::RowSplit);
+    }
+
+    #[test]
+    fn plan_fused_flips_wide_batches_without_retargeting_narrow_traffic() {
+        let p = Planner::new(9.35, 16, 2);
+        let a = crate::gen::uniform_rows(2000, 6, Some(256), 82); // d = 6 → merge
+        let out = p.plan(&a, None);
+        assert_eq!(out.plan.algorithm, Algorithm::MergeBased);
+        let segs = p.partition_for(&a, &out);
+        // 4× the tile width: effective threshold 9.35/4 < 6 → row-split
+        let fused = p.plan_fused(&a, 4 * crate::spmm::TILE_WIDTH);
+        assert!(!fused.cache_hit, "flipped decision cannot reuse the cached plan");
+        assert_eq!(fused.plan.algorithm, Algorithm::RowSplit);
+        assert!(fused.plan.bucket.is_none(), "fused plans are CPU-only");
+        // the keyed entry (serve path) agrees without re-fingerprinting
+        let keyed = p.plan_fused_keyed(out.fingerprint, &a, 4 * crate::spmm::TILE_WIDTH);
+        assert_eq!(keyed.plan.algorithm, Algorithm::RowSplit);
+        // executing the flipped plan goes through the DETACHED partition
+        // path: a valid row partition, no cache write, no counter traffic
+        let stats_before = p.partition_stats();
+        let fused_segs = p.partition_detached(&a, &fused);
+        assert!(crate::loadbalance::validate_segments(&a, &fused_segs).is_ok());
+        assert!(crate::exec::partition_matches(&a, Algorithm::RowSplit, &fused_segs));
+        assert_eq!(p.partition_stats(), stats_before, "detached = no replay counters");
+        // ...and must NOT have disturbed the narrow entry's decision or
+        // stored partition
+        let narrow = p.plan(&a, None);
+        assert!(narrow.cache_hit);
+        assert_eq!(narrow.plan.algorithm, Algorithm::MergeBased);
+        let kept = narrow.plan.partition.as_ref().expect("stored partition survives");
+        assert!(Arc::ptr_eq(kept, &segs));
     }
 
     #[test]

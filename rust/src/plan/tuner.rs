@@ -103,6 +103,29 @@ impl OnlineTuner {
         }
     }
 
+    /// Width-aware variant of [`decide`](Self::decide), used when several
+    /// requests fuse into one wide pass (`n = Σ n_j`).  The executors'
+    /// width behavior is asymmetric: the row-split kernel walks *any*
+    /// dense width in register-resident [`crate::spmm::TILE_WIDTH`]-column
+    /// tiles, while the merge executor's register-tile accumulator only
+    /// applies up to that width — beyond it the carry partials accumulate
+    /// in memory, and the carry-out fix-up traffic itself scales with `n`
+    /// (the §4.2 trade-off; why the paper keeps T = 1 for SpMM).  So past
+    /// the tile width the latency crossover shifts toward row-split
+    /// roughly in proportion to the width: the effective threshold is
+    /// `t · TILE_WIDTH / n` for `n > TILE_WIDTH` and exactly `t` (i.e.
+    /// `decide`) otherwise.
+    pub fn decide_at_width(&self, d: f64, n: usize) -> Algorithm {
+        let tile = crate::spmm::TILE_WIDTH;
+        let t = self.threshold();
+        let eff = if n > tile { t * tile as f64 / n as f64 } else { t };
+        if d < eff {
+            Algorithm::MergeBased
+        } else {
+            Algorithm::RowSplit
+        }
+    }
+
     /// Is `d` inside the probe band around the threshold?
     pub fn near_boundary(&self, d: f64) -> bool {
         d > 0.0 && (d / self.threshold()).ln().abs() <= self.band
@@ -186,6 +209,24 @@ mod tests {
         assert_eq!(t.decide(4.0), Algorithm::MergeBased);
         assert_eq!(t.decide(20.0), Algorithm::RowSplit);
         assert_eq!(t.decide(9.35), Algorithm::RowSplit); // boundary = row-split
+    }
+
+    #[test]
+    fn decide_at_width_shifts_toward_rowsplit_past_the_tile() {
+        let t = OnlineTuner::new(9.35);
+        let tile = crate::spmm::TILE_WIDTH;
+        // at or below the register-tile width: exactly `decide`
+        for n in [1, 8, tile] {
+            assert_eq!(t.decide_at_width(4.0, n), Algorithm::MergeBased, "n = {n}");
+            assert_eq!(t.decide_at_width(20.0, n), Algorithm::RowSplit, "n = {n}");
+        }
+        // 2× the tile halves the effective threshold: d = 6 flips
+        assert_eq!(t.decide_at_width(6.0, tile), Algorithm::MergeBased);
+        assert_eq!(t.decide_at_width(6.0, 2 * tile), Algorithm::RowSplit);
+        // far wider: even short rows go row-split
+        assert_eq!(t.decide_at_width(2.0, 8 * tile), Algorithm::RowSplit);
+        // very sparse rows stay merge at any width the batcher can build
+        assert_eq!(t.decide_at_width(0.5, 16 * tile), Algorithm::MergeBased);
     }
 
     #[test]

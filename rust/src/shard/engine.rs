@@ -421,6 +421,7 @@ fn finish(gather: &GatherState) {
                 latency_s: latency,
                 shards: gather.shards,
                 shard_workers,
+                fused_width: 0,
             }));
         }
     }

@@ -22,7 +22,7 @@ pub mod rowsplit;
 pub use analysis::{IlpAnalysis, Table1};
 pub use heuristic::{Algorithm, Heuristic, DEFAULT_THRESHOLD};
 pub use merge::{merge_spmm, merge_spmm_into};
-pub use rowsplit::{rowsplit_spmm, rowsplit_spmm_into};
+pub use rowsplit::{rowsplit_spmm, rowsplit_spmm_into, TILE_WIDTH};
 
 use crate::formats::Csr;
 

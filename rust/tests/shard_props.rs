@@ -348,8 +348,11 @@ fn prop_mixed_traffic_unified_pool() {
     );
     assert_eq!(resident_budget, 1 + WORKERS + WORKERS * CPU_WORKERS);
 
-    // Concurrent mixed phase: 2 clients hammer the sharded path while 2
-    // clients hammer the batcher path, through one ingress.
+    // Concurrent mixed phase: 2 clients hammer the sharded path, 2
+    // clients hammer the batcher path, and 2 clients submit Arc-identical
+    // small requests in concurrent pairs — same fingerprint bucket, same
+    // A, so the router fuses them into wide passes while shard tasks and
+    // plain batches run on the same pool.
     std::thread::scope(|s| {
         for _ in 0..2 {
             s.spawn(|| {
@@ -381,6 +384,26 @@ fn prop_mixed_traffic_unified_pool() {
                 }
             });
         }
+        for _ in 0..2 {
+            s.spawn(|| {
+                for _ in 0..10 {
+                    // two in flight at once: the bucket holds both when the
+                    // deadline fires, so they fuse into one wide pass
+                    let h1 = server.submit(Arc::clone(&small), Arc::clone(&small_b), 8);
+                    let h2 = server.submit(Arc::clone(&small), Arc::clone(&small_b), 8);
+                    for h in [h1, h2] {
+                        let r = h.recv().unwrap().unwrap();
+                        assert_eq!(r.shards, 1);
+                        for (i, (x, y)) in r.c.iter().zip(&small_want).enumerate() {
+                            assert!(
+                                (x - y).abs() < 1e-3 * (1.0 + y.abs()),
+                                "fused idx {i}: {x} vs {y}"
+                            );
+                        }
+                    }
+                }
+            });
+        }
     });
 
     // Steady state after the burst: both shapes are warm in the shared
@@ -408,6 +431,12 @@ fn prop_mixed_traffic_unified_pool() {
     );
     let snap = server.shutdown();
     assert_eq!(snap.errors, 0);
-    assert_eq!(snap.completed, 20 + 40 + 13);
+    assert_eq!(snap.completed, 20 + 40 + 40 + 13);
     assert_eq!(snap.sharded, 20 + 7);
+    // the paired clients kept ≥ 2 same-A requests in flight, so at least
+    // some of their traffic must have executed as fused wide passes
+    // alongside the sharded scatters — the fused+sharded mixed case
+    assert!(snap.fused_requests >= 2, "fused {}", snap.fused_requests);
+    assert!(snap.fused_batches >= 1);
+    assert!(snap.fused_requests <= snap.completed);
 }

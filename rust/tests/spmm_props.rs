@@ -1,11 +1,15 @@
 //! Property tests for the SpMM executors: all algorithms agree with the
 //! textbook reference on arbitrary matrices, worker counts, and widths.
 
+use std::sync::Arc;
+
+use merge_spmm::exec::{partition, BufferPool, Executor, FusedStaging};
 use merge_spmm::formats::{Csr, SellP};
 use merge_spmm::spmm::{
     baselines, dense,
     merge::{merge_spmm_with, MergeKind},
-    merge_spmm, rowsplit_spmm, spmm_reference,
+    merge_spmm, merge_spmm_into, rowsplit_spmm, rowsplit_spmm_into, spmm_reference, Algorithm,
+    TILE_WIDTH,
 };
 use merge_spmm::util::XorShift;
 
@@ -122,6 +126,79 @@ fn prop_merge_adversarial_carry_out_shapes() {
         let p = a.nnz() + 1 + rng.below(50);
         for kind in [MergeKind::NonzeroSplit, MergeKind::MergePath] {
             assert_close(&merge_spmm_with(&a, &b, n, p, kind), &want, case, "p>nnz");
+        }
+    }
+}
+
+/// The fused wide pass (pack `[B_1|…|B_k]` → one `m × n_total` execution
+/// → unpack column slices) must be **bitwise-identical** to executing
+/// each request separately with the same algorithm and the same phase-1
+/// partition — for random matrices, random batch sizes k ∈ [2, 8], mixed
+/// widths including n = 1 and n > TILE_WIDTH, and both algorithms.  The
+/// partition depends only on A, so sharing it across widths is exactly
+/// what the serve path does (plan-cache partition replay).
+#[test]
+fn prop_fused_wide_pass_bitwise_identical_to_per_request() {
+    let mut rng = XorShift::new(0xB31);
+    let exec = Executor::new(2);
+    let pool = Arc::new(BufferPool::new());
+    for case in 0..60 {
+        let a = arb_csr(&mut rng);
+        let k = 2 + rng.below(7); // k ∈ [2, 8]
+        let widths: Vec<usize> = (0..k)
+            .map(|_| [1, 3, 8, 17, TILE_WIDTH + 1, 100][rng.below(6)])
+            .collect();
+        let n_total: usize = widths.iter().sum();
+        let bs: Vec<Vec<f32>> = widths
+            .iter()
+            .map(|&n| (0..a.k * n).map(|_| rng.normal()).collect())
+            .collect();
+        let p = 1 + rng.below(6);
+        for alg in [Algorithm::RowSplit, Algorithm::MergeBased] {
+            let segs = partition(&a, alg, p);
+            // fused: one wide pass over A
+            let staging = FusedStaging::pack(
+                &pool,
+                a.k,
+                n_total,
+                bs.iter().zip(&widths).map(|(b, &n)| (b.as_slice(), n)),
+            );
+            let mut ctx = exec.make_ctx();
+            let mut c_wide = vec![f32::NAN; a.m * n_total];
+            match alg {
+                Algorithm::RowSplit => {
+                    rowsplit_spmm_into(&a, staging.b_wide(), n_total, &segs, &mut ctx, &mut c_wide)
+                }
+                Algorithm::MergeBased => {
+                    merge_spmm_into(&a, staging.b_wide(), n_total, &segs, &mut ctx, &mut c_wide)
+                }
+            }
+            let mut outs: Vec<Vec<f32>> =
+                widths.iter().map(|&n| vec![f32::NAN; a.m * n]).collect();
+            FusedStaging::unpack(
+                &c_wide,
+                a.m,
+                n_total,
+                outs.iter_mut().zip(&widths).map(|(o, &n)| (o.as_mut_slice(), n)),
+            );
+            // per-request: same algorithm, same partition, one at a time
+            for ((b, &n), fused_c) in bs.iter().zip(&widths).zip(&outs) {
+                let mut solo = vec![f32::NAN; a.m * n];
+                match alg {
+                    Algorithm::RowSplit => {
+                        rowsplit_spmm_into(&a, b, n, &segs, &mut ctx, &mut solo)
+                    }
+                    Algorithm::MergeBased => {
+                        merge_spmm_into(&a, b, n, &segs, &mut ctx, &mut solo)
+                    }
+                }
+                assert!(
+                    fused_c.iter().zip(&solo).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "case {case} {alg:?} n={n}: fused slice must match solo run bit for bit"
+                );
+                // and both must be numerically right
+                assert_close(&solo, &spmm_reference(&a, b, n), case, "solo-vs-reference");
+            }
         }
     }
 }
