@@ -33,6 +33,7 @@ fn run_server(workers: usize, max_batch: usize, requests: usize) {
             max_batch,
             max_wait: Duration::from_micros(500),
             queue_capacity: 512,
+            ..Default::default()
         },
     )
     .unwrap();
@@ -213,6 +214,7 @@ fn plan_cold_vs_warm(requests: usize) {
             max_batch: 8,
             max_wait: Duration::from_micros(500),
             queue_capacity: 512,
+            ..Default::default()
         },
     )
     .unwrap();

@@ -13,6 +13,7 @@ use crate::runtime::{pad, Manifest, Runtime};
 use crate::spmm::{self, Algorithm};
 
 use super::metrics::Metrics;
+use super::trace::{RequestTrace, Stage, StageBreakdown, TracePath};
 
 /// How a request was executed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -100,6 +101,21 @@ pub struct SpmmResult {
     /// rode in, or 0 when it executed alone — the per-request evidence
     /// that A was traversed once for the whole co-batch
     pub fused_width: usize,
+    /// where this request's time went: the execution path taken plus one
+    /// duration per lifecycle stage (queue/plan/pack/exec/gather), stamped
+    /// inline as the request moved through the stack — present on every
+    /// result, all five paths
+    pub stages: StageBreakdown,
+}
+
+/// What `dispatch` produced: the output lease plus how it was made.
+struct Dispatched {
+    c: OutputBuf,
+    path: ExecutionPath,
+    bucket: Option<String>,
+    algorithm: Algorithm,
+    /// true when this dispatch A/B-probed both executors
+    probed: bool,
 }
 
 /// The SpMM serving engine (paper's full pipeline: plan cache + tuned
@@ -229,7 +245,21 @@ impl SpmmEngine {
     /// Execute `C = A·B`; `b` is `k×n` row-major.  Consults the plan cache
     /// before any per-request analysis.
     pub fn spmm(&self, a: &Csr, b: &[f32], n: usize) -> Result<SpmmResult> {
+        self.spmm_with_trace(a, b, n, RequestTrace::begin(0))
+    }
+
+    /// Plan-and-execute with a caller-admitted trace (the worker runtime
+    /// uses this for requests the router could not pre-plan).
+    pub(crate) fn spmm_with_trace(
+        &self,
+        a: &Csr,
+        b: &[f32],
+        n: usize,
+        mut trace: RequestTrace,
+    ) -> Result<SpmmResult> {
+        let p0 = Instant::now();
         let outcome = self.planner.plan(a, self.manifest());
+        trace.span(Stage::Plan, p0, Instant::now());
         let plan_counter = if outcome.cache_hit {
             &self.metrics.plan_hits
         } else {
@@ -238,7 +268,7 @@ impl SpmmEngine {
         plan_counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         // gauges are mirrored once per request by execute(); no extra
         // plan-cache lock here
-        self.execute(a, b, n, &outcome)
+        self.execute(a, b, n, &outcome, trace)
     }
 
     /// Execute a request that was already planned (the router plans once
@@ -250,21 +280,43 @@ impl SpmmEngine {
         n: usize,
         outcome: &PlanOutcome,
     ) -> Result<SpmmResult> {
-        self.execute(a, b, n, outcome)
+        self.execute(a, b, n, outcome, RequestTrace::begin(0))
     }
 
-    fn execute(&self, a: &Csr, b: &[f32], n: usize, outcome: &PlanOutcome) -> Result<SpmmResult> {
-        let t0 = Instant::now();
+    /// [`Self::spmm_planned`] with the request's admitted trace (the
+    /// router stamped the plan span; this stamps queue-end and exec).
+    pub(crate) fn spmm_traced(
+        &self,
+        a: &Csr,
+        b: &[f32],
+        n: usize,
+        outcome: &PlanOutcome,
+        trace: RequestTrace,
+    ) -> Result<SpmmResult> {
+        self.execute(a, b, n, outcome, trace)
+    }
+
+    fn execute(
+        &self,
+        a: &Csr,
+        b: &[f32],
+        n: usize,
+        outcome: &PlanOutcome,
+        mut trace: RequestTrace,
+    ) -> Result<SpmmResult> {
+        trace.queue_ended(Instant::now());
         self.metrics
             .requests
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let e0 = Instant::now();
         let result = self.dispatch(a, b, n, outcome);
+        trace.span(Stage::Exec, e0, Instant::now());
         match &result {
-            Ok((_, _, _, algorithm)) => {
+            Ok(d) => {
                 self.metrics
                     .completed
                     .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                match algorithm {
+                match d.algorithm {
                     Algorithm::RowSplit => &self.metrics.rowsplit,
                     Algorithm::MergeBased => &self.metrics.merge,
                 }
@@ -276,38 +328,39 @@ impl SpmmEngine {
                     .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             }
         }
-        let latency = t0.elapsed().as_secs_f64();
-        self.metrics.record_latency(latency);
+        // fold the trace: probe dispatches report as their own path, and a
+        // degraded-marked trace overrides solo/probe (see trace::finish)
+        let path = match &result {
+            Ok(d) if d.probed => TracePath::Probe,
+            _ => TracePath::Solo,
+        };
+        let stages = trace.finish(path, Instant::now());
+        self.metrics.record_trace(&stages);
         self.sync_gauges();
-        result.map(|(c, path, bucket, algorithm)| {
-            match path {
+        result.map(|d| {
+            match d.path {
                 ExecutionPath::Pjrt => &self.metrics.pjrt,
                 ExecutionPath::CpuFallback => &self.metrics.cpu_fallback,
             }
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             SpmmResult {
-                c,
-                algorithm,
-                path,
-                bucket,
+                c: d.c,
+                algorithm: d.algorithm,
+                path: d.path,
+                bucket: d.bucket,
                 cache_hit: outcome.cache_hit,
-                latency_s: latency,
+                latency_s: stages.total_s,
                 shards: 1,
                 shard_workers: Vec::new(),
                 fused_width: 0,
+                stages,
             }
         })
     }
 
     /// Run the plan.  Returns the algorithm actually executed — an A/B
     /// probe may return the other algorithm's (faster) result.
-    fn dispatch(
-        &self,
-        a: &Csr,
-        b: &[f32],
-        n: usize,
-        outcome: &PlanOutcome,
-    ) -> Result<(OutputBuf, ExecutionPath, Option<String>, Algorithm)> {
+    fn dispatch(&self, a: &Csr, b: &[f32], n: usize, outcome: &PlanOutcome) -> Result<Dispatched> {
         let plan = &outcome.plan;
         if b.len() != a.k * n {
             return Err(anyhow!("B must be k×n row-major ({}×{n})", a.k));
@@ -317,12 +370,13 @@ impl SpmmEngine {
                 Algorithm::RowSplit => self.run_rowsplit_artifact(rt, a, b, n, name)?,
                 Algorithm::MergeBased => self.run_merge_artifact(rt, a, b, n, name)?,
             };
-            return Ok((
-                OutputBuf::detached(c),
-                ExecutionPath::Pjrt,
-                Some(name.clone()),
-                plan.algorithm,
-            ));
+            return Ok(Dispatched {
+                c: OutputBuf::detached(c),
+                path: ExecutionPath::Pjrt,
+                bucket: Some(name.clone()),
+                algorithm: plan.algorithm,
+                probed: false,
+            });
         }
         // CPU fallback — same algorithms, pooled in-process executors.
         // This is also where boundary A/B probes run: both executors on
@@ -351,7 +405,13 @@ impl SpmmEngine {
             } else {
                 (c_rs, Algorithm::RowSplit)
             };
-            return Ok((c, ExecutionPath::CpuFallback, None, algorithm));
+            return Ok(Dispatched {
+                c,
+                path: ExecutionPath::CpuFallback,
+                bucket: None,
+                algorithm,
+                probed: true,
+            });
         }
         // Steady state: replay the cached partition (phase 1 once per
         // fingerprint), lease a pooled output, run on the warm pool —
@@ -363,7 +423,13 @@ impl SpmmEngine {
             Algorithm::RowSplit => spmm::rowsplit_spmm_into(a, b, n, &segs, &mut ctx, &mut c),
             Algorithm::MergeBased => spmm::merge_spmm_into(a, b, n, &segs, &mut ctx, &mut c),
         }
-        Ok((c, ExecutionPath::CpuFallback, None, plan.algorithm))
+        Ok(Dispatched {
+            c,
+            path: ExecutionPath::CpuFallback,
+            bucket: None,
+            algorithm: plan.algorithm,
+            probed: false,
+        })
     }
 
     fn run_rowsplit_artifact(
@@ -471,6 +537,12 @@ mod tests {
         assert_eq!(r.algorithm, Algorithm::MergeBased);
         assert_eq!(r.path, ExecutionPath::CpuFallback);
         assert!(!r.cache_hit);
+        // every result carries a coherent stage breakdown
+        assert_eq!(r.stages.path, TracePath::Solo);
+        assert!(r.stages.exec_s > 0.0);
+        assert!(r.stages.plan_s > 0.0);
+        assert!(r.stages.stage_sum_s() <= r.stages.total_s + 1e-9);
+        assert!((r.stages.total_s - r.latency_s).abs() < 1e-12);
         let want = spmm::spmm_reference(&short, &b, 8);
         for (x, y) in r.c.iter().zip(&want) {
             assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()));
@@ -531,7 +603,10 @@ mod tests {
         for (x, y) in r.c.iter().zip(&want) {
             assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()));
         }
-        assert_eq!(eng.metrics.snapshot().probes, 1);
+        assert_eq!(r.stages.path, TracePath::Probe);
+        let snap = eng.metrics.snapshot();
+        assert_eq!(snap.probes, 1);
+        assert_eq!(snap.per_path[TracePath::Probe.index()].count, 1);
         assert_eq!(eng.planner().tuner().stats().probes, 1);
     }
 

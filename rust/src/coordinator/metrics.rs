@@ -1,12 +1,218 @@
-//! Serving metrics: counters + latency histogram.
+//! Serving metrics: counters, lock-free per-path / per-stage latency
+//! histograms, a slow-request journal, and structured export.
+//!
+//! The latency signal is kept **per execution path** (solo / probe /
+//! sharded / fused / degraded end-to-end) and **per lifecycle stage**
+//! (queue / plan / pack / exec / gather), each in an [`AtomicHistogram`] —
+//! fixed log-spaced buckets bumped with relaxed `fetch_add`, no locks on
+//! the record path.  A snapshot copies each histogram exactly once and
+//! derives every statistic (mean, p50, p99, per-path and combined) from
+//! those copies, so the numbers inside one [`MetricsSnapshot`] are mutually
+//! consistent.  The histogram total is the single source of truth for both
+//! the mean and the percentiles — there is no separately-maintained
+//! denominator to drift out of sync.
+//!
+//! The slow-request journal keeps two fixed-capacity rings of
+//! [`JournalEntry`] (`Copy`, no heap): traces whose end-to-end time
+//! exceeded the configurable threshold, plus the last few traces
+//! regardless.  Export is [`MetricsSnapshot::to_json`] (via [`crate::util::json`])
+//! and [`MetricsSnapshot::to_prometheus`] (text exposition); the golden
+//! test in `tests/metrics_props.rs` pins both to [`MetricsSnapshot::FIELDS`]
+//! so a new metric cannot silently miss export.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-/// Log-spaced latency buckets (seconds).
-const BUCKETS: [f64; 12] = [
+use super::trace::{Stage, StageBreakdown, TracePath};
+use crate::util::json::Json;
+
+/// Log-spaced latency bucket upper bounds (seconds).  A 13th overflow
+/// bucket catches everything past the last bound.
+pub const BUCKETS: [f64; 12] = [
     1e-5, 3e-5, 1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 1e-1, 3e-1, 1.0, 3.0,
 ];
+
+/// Slow-ring capacity: the most recent traces over the threshold.
+pub const SLOW_JOURNAL_CAP: usize = 32;
+/// Recent-ring capacity: the last N traces regardless of duration.
+pub const RECENT_JOURNAL_CAP: usize = 8;
+
+/// Default slow-request threshold (seconds); `0` disables the slow ring.
+pub const DEFAULT_SLOW_THRESHOLD_S: f64 = 0.1;
+
+/// A lock-free latency histogram: fixed log-spaced buckets plus a running
+/// sum, all relaxed atomics.  Recording is two `fetch_add`s; reading is a
+/// plain copy into a [`HistSnapshot`].
+#[derive(Debug, Default)]
+pub struct AtomicHistogram {
+    buckets: [AtomicU64; BUCKETS.len() + 1],
+    sum_us: AtomicU64,
+}
+
+impl AtomicHistogram {
+    pub fn record(&self, secs: f64) {
+        let idx = BUCKETS.partition_point(|&b| b < secs);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add((secs * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    /// Copy the histogram out in one pass.  Individual bucket loads are
+    /// relaxed, so a snapshot taken mid-record may miss the in-flight
+    /// sample — but each sample lands in exactly one bucket, so totals are
+    /// conserved and only ever grow.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time copy of one [`AtomicHistogram`]; all derived statistics
+/// (total, mean, percentiles) come from this one copy, so they are
+/// consistent with each other.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct HistSnapshot {
+    pub buckets: [u64; BUCKETS.len() + 1],
+    pub sum_us: u64,
+}
+
+impl HistSnapshot {
+    pub fn total(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / 1e6 / total as f64
+        }
+    }
+
+    /// Element-wise sum with another snapshot (used to combine the
+    /// per-path histograms into the all-paths view).
+    pub fn merged(&self, other: &HistSnapshot) -> HistSnapshot {
+        HistSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i] + other.buckets[i]),
+            sum_us: self.sum_us + other.sum_us,
+        }
+    }
+
+    /// The p-th percentile, linearly interpolated inside the containing
+    /// bucket.
+    ///
+    /// **Error bound:** the true percentile lies in `[lo, hi]`, the
+    /// containing bucket's bounds.  Interpolation is exact when samples are
+    /// uniformly distributed inside the bucket and off by at most the
+    /// bucket width `hi − lo` otherwise — with these `√10`-spaced bounds, a
+    /// worst-case factor of ≈3.16 of the bucket's lower bound (the old
+    /// implementation always returned `hi`, pinning the answer to the
+    /// worst case).  The overflow bucket has no finite upper bound, so a
+    /// percentile landing there reports the last finite bound (a floor).
+    pub fn percentile(&self, p: f64) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((p / 100.0 * total as f64).ceil() as u64).clamp(1, total);
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            let before = acc;
+            acc += c;
+            if acc >= target {
+                let lo = if i == 0 { 0.0 } else { BUCKETS[i - 1] };
+                return match BUCKETS.get(i) {
+                    Some(&hi) => lo + (target - before) as f64 / c as f64 * (hi - lo),
+                    None => lo, // overflow bucket: floor at the last bound
+                };
+            }
+        }
+        *BUCKETS.last().unwrap() // unreachable: acc reaches total ≥ target
+    }
+}
+
+/// One journalled request trace: the stage breakdown plus a wall-clock
+/// stamp.  `Copy` — the journal rings are fixed arrays, no heap.
+#[derive(Debug, Clone, Copy)]
+pub struct JournalEntry {
+    pub id: u64,
+    pub path: TracePath,
+    pub queue_s: f64,
+    pub plan_s: f64,
+    pub pack_s: f64,
+    pub exec_s: f64,
+    pub gather_s: f64,
+    pub total_s: f64,
+    /// wall-clock microseconds since the UNIX epoch at record time
+    pub unix_us: u64,
+}
+
+impl JournalEntry {
+    fn from_breakdown(t: &StageBreakdown) -> Self {
+        JournalEntry {
+            id: t.id,
+            path: t.path,
+            queue_s: t.queue_s,
+            plan_s: t.plan_s,
+            pack_s: t.pack_s,
+            exec_s: t.exec_s,
+            gather_s: t.gather_s,
+            total_s: t.total_s,
+            unix_us: std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_micros() as u64)
+                .unwrap_or(0),
+        }
+    }
+
+    fn json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("id".into(), Json::Num(self.id as f64));
+        m.insert("path".into(), Json::Str(self.path.name().into()));
+        m.insert("queue_s".into(), Json::Num(self.queue_s));
+        m.insert("plan_s".into(), Json::Num(self.plan_s));
+        m.insert("pack_s".into(), Json::Num(self.pack_s));
+        m.insert("exec_s".into(), Json::Num(self.exec_s));
+        m.insert("gather_s".into(), Json::Num(self.gather_s));
+        m.insert("total_s".into(), Json::Num(self.total_s));
+        m.insert("unix_us".into(), Json::Num(self.unix_us as f64));
+        Json::Obj(m)
+    }
+}
+
+/// Fixed-capacity overwrite-oldest ring.  Entries are written whole under
+/// the journal mutex, so a reader can never observe a torn trace.
+#[derive(Debug)]
+struct Ring<const N: usize> {
+    entries: [Option<JournalEntry>; N],
+    next: usize,
+}
+
+impl<const N: usize> Default for Ring<N> {
+    fn default() -> Self {
+        Ring { entries: [None; N], next: 0 }
+    }
+}
+
+impl<const N: usize> Ring<N> {
+    fn push(&mut self, e: JournalEntry) {
+        self.entries[self.next % N] = Some(e);
+        self.next += 1;
+    }
+
+    /// Copy out, oldest → newest.
+    fn to_vec(&self) -> Vec<JournalEntry> {
+        (self.next..self.next + N).filter_map(|i| self.entries[i % N]).collect()
+    }
+}
+
+#[derive(Debug, Default)]
+struct Journal {
+    slow: Ring<SLOW_JOURNAL_CAP>,
+    recent: Ring<RECENT_JOURNAL_CAP>,
+}
 
 /// Thread-safe serving metrics.
 #[derive(Debug, Default)]
@@ -67,8 +273,13 @@ pub struct Metrics {
     /// gauge: max/mean nnz imbalance of the most recent shard layout,
     /// stored as f64 bits (1.0 = perfectly balanced)
     shard_imbalance_bits: AtomicU64,
-    hist: Mutex<[u64; BUCKETS.len() + 1]>,
-    latency_sum_us: AtomicU64,
+    /// end-to-end latency per execution path, indexed by `TracePath`
+    path_hist: [AtomicHistogram; TracePath::COUNT],
+    /// per-stage durations across all paths, indexed by `Stage`
+    stage_hist: [AtomicHistogram; Stage::COUNT],
+    /// slow-request threshold in µs (0 disables the slow ring)
+    slow_threshold_us: AtomicU64,
+    journal: Mutex<Journal>,
 }
 
 impl Metrics {
@@ -79,6 +290,8 @@ impl Metrics {
             .store(crate::spmm::DEFAULT_THRESHOLD.to_bits(), Ordering::Relaxed);
         // imbalance gauge starts at the perfectly-balanced value
         m.shard_imbalance_bits.store(1.0f64.to_bits(), Ordering::Relaxed);
+        m.slow_threshold_us
+            .store((DEFAULT_SLOW_THRESHOLD_S * 1e6) as u64, Ordering::Relaxed);
         m
     }
 
@@ -130,38 +343,82 @@ impl Metrics {
         self.partition_misses.store(partition.misses, Ordering::Relaxed);
     }
 
-    pub fn record_latency(&self, secs: f64) {
-        let mut h = self.hist.lock().unwrap();
-        let idx = BUCKETS.partition_point(|&b| b < secs);
-        h[idx] += 1;
-        drop(h);
-        self.latency_sum_us.fetch_add((secs * 1e6) as u64, Ordering::Relaxed);
+    /// Record a finished request's stage breakdown: end-to-end into its
+    /// path's histogram, each stamped stage into the stage histograms
+    /// (queue is always defined; unstamped stages are skipped rather than
+    /// recorded as zeros), and the journal rings.
+    pub fn record_trace(&self, t: &StageBreakdown) {
+        self.path_hist[t.path.index()].record(t.total_s);
+        self.stage_hist[Stage::Queue.index()].record(t.queue_s);
+        if t.plan_span.is_some() {
+            self.stage_hist[Stage::Plan.index()].record(t.plan_s);
+        }
+        if t.pack_span.is_some() {
+            self.stage_hist[Stage::Pack.index()].record(t.pack_s);
+        }
+        if t.exec_span.is_some() {
+            self.stage_hist[Stage::Exec.index()].record(t.exec_s);
+        }
+        if t.gather_span.is_some() {
+            self.stage_hist[Stage::Gather.index()].record(t.gather_s);
+        }
+        let entry = JournalEntry::from_breakdown(t);
+        let thr_us = self.slow_threshold_us.load(Ordering::Relaxed);
+        // The journal is the one mutex on the record path; entries are
+        // 80-byte memcpys, so the critical section is a few nanoseconds
+        // and a reader can never see a half-written trace.
+        let mut j = self.journal.lock().unwrap();
+        j.recent.push(entry);
+        if thr_us > 0 && (t.total_s * 1e6) as u64 >= thr_us {
+            j.slow.push(entry);
+        }
     }
 
-    /// Approximate p-th latency percentile from the histogram (upper bound
-    /// of the containing bucket).
+    /// Untraced fallback: record an end-to-end latency on the solo path
+    /// (no stage detail, no journal entry).  Prefer [`Self::record_trace`].
+    pub fn record_latency(&self, secs: f64) {
+        self.path_hist[TracePath::Solo.index()].record(secs);
+    }
+
+    /// Set the slow-request journal threshold (seconds; 0 disables).
+    pub fn set_slow_threshold_s(&self, secs: f64) {
+        self.slow_threshold_us.store((secs.max(0.0) * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    pub fn slow_threshold_s(&self) -> f64 {
+        self.slow_threshold_us.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// The p-th end-to-end latency percentile across all paths,
+    /// interpolated within the containing bucket (see
+    /// [`HistSnapshot::percentile`] for the error bound).
     pub fn latency_percentile(&self, p: f64) -> f64 {
-        let h = self.hist.lock().unwrap();
-        let total: u64 = h.iter().sum();
-        if total == 0 {
-            return 0.0;
-        }
-        let target = (p / 100.0 * total as f64).ceil() as u64;
-        let mut acc = 0u64;
-        for (i, &c) in h.iter().enumerate() {
-            acc += c;
-            if acc >= target {
-                return *BUCKETS.get(i).unwrap_or(&f64::INFINITY);
-            }
-        }
-        f64::INFINITY
+        self.combined_hist().percentile(p)
+    }
+
+    fn combined_hist(&self) -> HistSnapshot {
+        self.path_hist
+            .iter()
+            .fold(HistSnapshot::default(), |acc, h| acc.merged(&h.snapshot()))
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let completed = self.completed.load(Ordering::Relaxed);
+        // One copy of each histogram; all derived statistics (mean, p50,
+        // p99, per-path, per-stage, combined) come from these copies, so
+        // one snapshot's numbers are mutually consistent.
+        let path_snaps: [HistSnapshot; TracePath::COUNT] =
+            std::array::from_fn(|i| self.path_hist[i].snapshot());
+        let stage_snaps: [HistSnapshot; Stage::COUNT] =
+            std::array::from_fn(|i| self.stage_hist[i].snapshot());
+        let combined =
+            path_snaps.iter().fold(HistSnapshot::default(), |acc, h| acc.merged(h));
+        let (slow_requests, recent_requests) = {
+            let j = self.journal.lock().unwrap();
+            (j.slow.to_vec(), j.recent.to_vec())
+        };
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
-            completed,
+            completed: self.completed.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
             rowsplit: self.rowsplit.load(Ordering::Relaxed),
             merge: self.merge.load(Ordering::Relaxed),
@@ -199,14 +456,52 @@ impl Metrics {
             partition_hits: self.partition_hits.load(Ordering::Relaxed),
             partition_misses: self.partition_misses.load(Ordering::Relaxed),
             tuner_threshold: f64::from_bits(self.tuner_threshold_bits.load(Ordering::Relaxed)),
-            p50_s: self.latency_percentile(50.0),
-            p99_s: self.latency_percentile(99.0),
-            mean_latency_s: if completed > 0 {
-                self.latency_sum_us.load(Ordering::Relaxed) as f64 / 1e6 / completed as f64
-            } else {
-                0.0
-            },
+            p50_s: combined.percentile(50.0),
+            p99_s: combined.percentile(99.0),
+            mean_latency_s: combined.mean_s(),
+            per_path: std::array::from_fn(|i| LatencyStats::of(path_snaps[i])),
+            per_stage: std::array::from_fn(|i| LatencyStats::of(stage_snaps[i])),
+            slow_threshold_s: self.slow_threshold_s(),
+            slow_requests,
+            recent_requests,
         }
+    }
+}
+
+/// Count / mean / p50 / p99 digest of one histogram, plus the raw bucket
+/// copy it was derived from (the Prometheus exposition needs the buckets).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencyStats {
+    pub count: u64,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub hist: HistSnapshot,
+}
+
+impl LatencyStats {
+    fn of(hist: HistSnapshot) -> Self {
+        LatencyStats {
+            count: hist.total(),
+            mean_s: hist.mean_s(),
+            p50_s: hist.percentile(50.0),
+            p99_s: hist.percentile(99.0),
+            hist,
+        }
+    }
+
+    fn json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("count".into(), Json::Num(self.count as f64));
+        m.insert("mean_s".into(), Json::Num(self.mean_s));
+        m.insert("p50_s".into(), Json::Num(self.p50_s));
+        m.insert("p99_s".into(), Json::Num(self.p99_s));
+        m.insert(
+            "buckets".into(),
+            Json::Arr(self.hist.buckets.iter().map(|&c| Json::Num(c as f64)).collect()),
+        );
+        m.insert("sum_us".into(), Json::Num(self.hist.sum_us as f64));
+        Json::Obj(m)
     }
 }
 
@@ -255,12 +550,68 @@ pub struct MetricsSnapshot {
     pub partition_hits: u64,
     pub partition_misses: u64,
     pub tuner_threshold: f64,
+    /// end-to-end latency across all paths, from the combined histogram
     pub p50_s: f64,
     pub p99_s: f64,
+    /// mean over the combined histogram's total (its own denominator —
+    /// not `completed`, which counts different events)
     pub mean_latency_s: f64,
+    /// end-to-end latency digests indexed by [`TracePath`]
+    pub per_path: [LatencyStats; TracePath::COUNT],
+    /// stage-duration digests indexed by [`Stage`]
+    pub per_stage: [LatencyStats; Stage::COUNT],
+    pub slow_threshold_s: f64,
+    /// traces over the threshold, oldest → newest (≤ [`SLOW_JOURNAL_CAP`])
+    pub slow_requests: Vec<JournalEntry>,
+    /// the last traces regardless of duration (≤ [`RECENT_JOURNAL_CAP`])
+    pub recent_requests: Vec<JournalEntry>,
 }
 
 impl MetricsSnapshot {
+    /// Every field of this struct, by name.  The golden test pins
+    /// [`Self::to_json`] and [`Self::to_prometheus`] to this list so a new
+    /// metric cannot silently miss export.
+    pub const FIELDS: &'static [&'static str] = &[
+        "requests",
+        "completed",
+        "errors",
+        "rowsplit",
+        "merge",
+        "pjrt",
+        "cpu_fallback",
+        "plan_hits",
+        "plan_misses",
+        "plan_evictions",
+        "plan_len",
+        "probes",
+        "sharded",
+        "shards_executed",
+        "fused_batches",
+        "fused_requests",
+        "fused_width_mean",
+        "shard_count_last",
+        "shard_imbalance_last",
+        "pool_workers",
+        "workers_parked",
+        "pool_jobs",
+        "queue_shard_depth",
+        "queue_batch_depth",
+        "buffers_pooled",
+        "buffers_allocated",
+        "buffer_reuses",
+        "partition_hits",
+        "partition_misses",
+        "tuner_threshold",
+        "p50_s",
+        "p99_s",
+        "mean_latency_s",
+        "per_path",
+        "per_stage",
+        "slow_threshold_s",
+        "slow_requests",
+        "recent_requests",
+    ];
+
     /// Plan-cache hit rate over all planned requests (0 when none yet).
     pub fn plan_hit_rate(&self) -> f64 {
         let total = self.plan_hits + self.plan_misses;
@@ -270,6 +621,175 @@ impl MetricsSnapshot {
             self.plan_hits as f64 / total as f64
         }
     }
+
+    /// Serialize the full snapshot as a JSON object whose top-level key
+    /// set is exactly [`Self::FIELDS`].  Counters are exact up to 2⁵³
+    /// (JSON numbers are f64).
+    pub fn to_json(&self) -> String {
+        use std::collections::BTreeMap;
+        let mut m = BTreeMap::new();
+        let scalars: [(&str, f64); 33] = [
+            ("requests", self.requests as f64),
+            ("completed", self.completed as f64),
+            ("errors", self.errors as f64),
+            ("rowsplit", self.rowsplit as f64),
+            ("merge", self.merge as f64),
+            ("pjrt", self.pjrt as f64),
+            ("cpu_fallback", self.cpu_fallback as f64),
+            ("plan_hits", self.plan_hits as f64),
+            ("plan_misses", self.plan_misses as f64),
+            ("plan_evictions", self.plan_evictions as f64),
+            ("plan_len", self.plan_len as f64),
+            ("probes", self.probes as f64),
+            ("sharded", self.sharded as f64),
+            ("shards_executed", self.shards_executed as f64),
+            ("fused_batches", self.fused_batches as f64),
+            ("fused_requests", self.fused_requests as f64),
+            ("fused_width_mean", self.fused_width_mean),
+            ("shard_count_last", self.shard_count_last as f64),
+            ("shard_imbalance_last", self.shard_imbalance_last),
+            ("pool_workers", self.pool_workers as f64),
+            ("workers_parked", self.workers_parked as f64),
+            ("pool_jobs", self.pool_jobs as f64),
+            ("queue_shard_depth", self.queue_shard_depth as f64),
+            ("queue_batch_depth", self.queue_batch_depth as f64),
+            ("buffers_pooled", self.buffers_pooled as f64),
+            ("buffers_allocated", self.buffers_allocated as f64),
+            ("buffer_reuses", self.buffer_reuses as f64),
+            ("partition_hits", self.partition_hits as f64),
+            ("partition_misses", self.partition_misses as f64),
+            ("tuner_threshold", self.tuner_threshold),
+            ("p50_s", self.p50_s),
+            ("p99_s", self.p99_s),
+            ("mean_latency_s", self.mean_latency_s),
+        ];
+        for (k, v) in scalars {
+            m.insert(k.to_string(), Json::Num(v));
+        }
+        let mut per_path = BTreeMap::new();
+        for p in TracePath::ALL {
+            per_path.insert(p.name().to_string(), self.per_path[p.index()].json());
+        }
+        m.insert("per_path".into(), Json::Obj(per_path));
+        let mut per_stage = BTreeMap::new();
+        for s in Stage::ALL {
+            per_stage.insert(s.name().to_string(), self.per_stage[s.index()].json());
+        }
+        m.insert("per_stage".into(), Json::Obj(per_stage));
+        m.insert("slow_threshold_s".into(), Json::Num(self.slow_threshold_s));
+        m.insert(
+            "slow_requests".into(),
+            Json::Arr(self.slow_requests.iter().map(|e| e.json()).collect()),
+        );
+        m.insert(
+            "recent_requests".into(),
+            Json::Arr(self.recent_requests.iter().map(|e| e.json()).collect()),
+        );
+        Json::Obj(m).to_string()
+    }
+
+    /// Prometheus-style text exposition: one `spmm_*` family per counter
+    /// and gauge, `histogram`-typed families for the per-path and
+    /// per-stage latencies (cumulative `le` buckets), and the journal ring
+    /// depths.
+    pub fn to_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::with_capacity(8192);
+        let counters: [(&str, u64); 15] = [
+            ("spmm_requests", self.requests),
+            ("spmm_completed", self.completed),
+            ("spmm_errors", self.errors),
+            ("spmm_rowsplit", self.rowsplit),
+            ("spmm_merge", self.merge),
+            ("spmm_pjrt", self.pjrt),
+            ("spmm_cpu_fallback", self.cpu_fallback),
+            ("spmm_plan_hits", self.plan_hits),
+            ("spmm_plan_misses", self.plan_misses),
+            ("spmm_plan_evictions", self.plan_evictions),
+            ("spmm_probes", self.probes),
+            ("spmm_sharded", self.sharded),
+            ("spmm_shards_executed", self.shards_executed),
+            ("spmm_fused_batches", self.fused_batches),
+            ("spmm_fused_requests", self.fused_requests),
+        ];
+        for (name, v) in counters {
+            let _ = writeln!(out, "# TYPE {name} counter\n{name} {v}");
+        }
+        let gauges: [(&str, f64); 18] = [
+            ("spmm_plan_len", self.plan_len as f64),
+            ("spmm_fused_width_mean", self.fused_width_mean),
+            ("spmm_shard_count_last", self.shard_count_last as f64),
+            ("spmm_shard_imbalance_last", self.shard_imbalance_last),
+            ("spmm_pool_workers", self.pool_workers as f64),
+            ("spmm_workers_parked", self.workers_parked as f64),
+            ("spmm_pool_jobs", self.pool_jobs as f64),
+            ("spmm_queue_shard_depth", self.queue_shard_depth as f64),
+            ("spmm_queue_batch_depth", self.queue_batch_depth as f64),
+            ("spmm_buffers_pooled", self.buffers_pooled as f64),
+            ("spmm_buffers_allocated", self.buffers_allocated as f64),
+            ("spmm_buffer_reuses", self.buffer_reuses as f64),
+            ("spmm_partition_hits", self.partition_hits as f64),
+            ("spmm_partition_misses", self.partition_misses as f64),
+            ("spmm_tuner_threshold", self.tuner_threshold),
+            ("spmm_p50_seconds", self.p50_s),
+            ("spmm_p99_seconds", self.p99_s),
+            ("spmm_mean_latency_seconds", self.mean_latency_s),
+        ];
+        for (name, v) in gauges {
+            let _ = writeln!(out, "# TYPE {name} gauge\n{name} {v}");
+        }
+        let _ = writeln!(out, "# TYPE spmm_request_latency_seconds histogram");
+        for p in TracePath::ALL {
+            prom_hist(
+                &mut out,
+                "spmm_request_latency_seconds",
+                "path",
+                p.name(),
+                &self.per_path[p.index()].hist,
+            );
+        }
+        let _ = writeln!(out, "# TYPE spmm_stage_latency_seconds histogram");
+        for s in Stage::ALL {
+            prom_hist(
+                &mut out,
+                "spmm_stage_latency_seconds",
+                "stage",
+                s.name(),
+                &self.per_stage[s.index()].hist,
+            );
+        }
+        let _ = writeln!(
+            out,
+            "# TYPE spmm_slow_threshold_seconds gauge\nspmm_slow_threshold_seconds {}",
+            self.slow_threshold_s
+        );
+        let _ = writeln!(
+            out,
+            "# TYPE spmm_slow_journal_entries gauge\nspmm_slow_journal_entries {}",
+            self.slow_requests.len()
+        );
+        let _ = writeln!(
+            out,
+            "# TYPE spmm_recent_journal_entries gauge\nspmm_recent_journal_entries {}",
+            self.recent_requests.len()
+        );
+        out
+    }
+}
+
+/// Emit one labelled histogram series (cumulative buckets, `_sum`,
+/// `_count`).
+fn prom_hist(out: &mut String, name: &str, key: &str, val: &str, h: &HistSnapshot) {
+    use std::fmt::Write as _;
+    let mut cum = 0u64;
+    for (i, b) in BUCKETS.iter().enumerate() {
+        cum += h.buckets[i];
+        let _ = writeln!(out, "{name}_bucket{{{key}=\"{val}\",le=\"{b}\"}} {cum}");
+    }
+    cum += h.buckets[BUCKETS.len()];
+    let _ = writeln!(out, "{name}_bucket{{{key}=\"{val}\",le=\"+Inf\"}} {cum}");
+    let _ = writeln!(out, "{name}_sum{{{key}=\"{val}\"}} {}", h.sum_us as f64 / 1e6);
+    let _ = writeln!(out, "{name}_count{{{key}=\"{val}\"}} {cum}");
 }
 
 impl std::fmt::Display for MetricsSnapshot {
@@ -279,7 +799,7 @@ impl std::fmt::Display for MetricsSnapshot {
             "req={} ok={} err={} rowsplit={} merge={} pjrt={} cpu={} \
              plan_hit={} plan_miss={} evict={} probes={} \
              shard={}x{} imb={:.2} fuse={}x{:.0} pool={}/{} q={}s/{}b buf={}r/{}a part={}h/{}m \
-             thr={:.2} p50={:.1}ms p99={:.1}ms",
+             thr={:.2} p50={:.1}ms p99={:.1}ms |",
             self.requests,
             self.completed,
             self.errors,
@@ -307,6 +827,24 @@ impl std::fmt::Display for MetricsSnapshot {
             self.tuner_threshold,
             self.p50_s * 1e3,
             self.p99_s * 1e3
+        )?;
+        for p in TracePath::ALL {
+            let s = &self.per_path[p.index()];
+            write!(
+                f,
+                " {}={}@{:.1}/{:.1}ms",
+                p.name(),
+                s.count,
+                s.p50_s * 1e3,
+                s.p99_s * 1e3
+            )?;
+        }
+        write!(
+            f,
+            " slow={}(thr={:.0}ms) recent={}",
+            self.slow_requests.len(),
+            self.slow_threshold_s * 1e3,
+            self.recent_requests.len()
         )
     }
 }
@@ -314,21 +852,44 @@ impl std::fmt::Display for MetricsSnapshot {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Instant;
+
+    /// A synthetic breakdown with the given path and stage durations;
+    /// span presence mirrors which durations are nonzero (plus exec).
+    fn breakdown(id: u64, path: TracePath, stages: [f64; 5], total: f64) -> StageBreakdown {
+        let t = Instant::now();
+        let span = |d: f64| if d > 0.0 { Some((t, t)) } else { None };
+        StageBreakdown {
+            id,
+            path,
+            queue_s: stages[0],
+            plan_s: stages[1],
+            pack_s: stages[2],
+            exec_s: stages[3],
+            gather_s: stages[4],
+            total_s: total,
+            admitted: t,
+            plan_span: span(stages[1]),
+            pack_span: span(stages[2]),
+            exec_span: span(stages[3]),
+            gather_span: span(stages[4]),
+        }
+    }
 
     #[test]
     fn counters_and_percentiles() {
         let m = Metrics::new();
         for _ in 0..90 {
-            m.record_latency(5e-4); // bucket ≤ 1e-3
+            m.record_latency(5e-4); // bucket (3e-4, 1e-3]
         }
         for _ in 0..10 {
-            m.record_latency(0.2); // bucket ≤ 3e-1
+            m.record_latency(0.2); // bucket (1e-1, 3e-1]
         }
         m.completed.store(100, Ordering::Relaxed);
         let p50 = m.latency_percentile(50.0);
-        assert!(p50 <= 1e-3, "p50 = {p50}");
+        assert!(p50 > 3e-4 && p50 <= 1e-3, "p50 = {p50}");
         let p99 = m.latency_percentile(99.0);
-        assert!(p99 >= 0.1, "p99 = {p99}");
+        assert!(p99 >= 0.1 && p99 <= 0.3, "p99 = {p99}");
         let snap = m.snapshot();
         assert_eq!(snap.completed, 100);
         assert!(snap.mean_latency_s > 0.0);
@@ -336,10 +897,120 @@ mod tests {
     }
 
     #[test]
+    fn mean_comes_from_the_histogram_not_completed() {
+        let m = Metrics::new();
+        m.record_latency(0.1);
+        m.record_latency(0.3);
+        // `completed` deliberately out of sync with the histogram — the
+        // mean must use the histogram's own total as denominator
+        m.completed.store(1000, Ordering::Relaxed);
+        let snap = m.snapshot();
+        assert!((snap.mean_latency_s - 0.2).abs() < 1e-6, "{}", snap.mean_latency_s);
+    }
+
+    #[test]
+    fn percentile_interpolates_within_bucket() {
+        let mut h = HistSnapshot::default();
+        h.buckets[4] = 100; // all samples in (3e-4, 1e-3]
+        // p50 target = rank 50 → fraction 0.5 of the bucket
+        let p50 = h.percentile(50.0);
+        assert!((p50 - (3e-4 + 0.5 * 7e-4)).abs() < 1e-9, "{p50}");
+        // p100 → the bucket's upper bound
+        assert!((h.percentile(100.0) - 1e-3).abs() < 1e-12);
+        // the old behavior (bucket upper bound) is the p100 answer, not p50
+        assert!(p50 < 1e-3);
+    }
+
+    #[test]
+    fn percentile_overflow_bucket_floors_at_last_bound() {
+        let mut h = HistSnapshot::default();
+        h.buckets[BUCKETS.len()] = 5; // all past 3.0 s
+        assert_eq!(h.percentile(50.0), 3.0);
+        let empty = HistSnapshot::default();
+        assert_eq!(empty.percentile(99.0), 0.0);
+    }
+
+    #[test]
     fn empty_metrics() {
         let m = Metrics::new();
         assert_eq!(m.latency_percentile(99.0), 0.0);
         assert_eq!(m.snapshot().mean_latency_s, 0.0);
+    }
+
+    #[test]
+    fn record_trace_routes_paths_stages_and_journal() {
+        let m = Metrics::new();
+        m.set_slow_threshold_s(0.05);
+        m.record_trace(&breakdown(1, TracePath::Fused, [0.001, 0.002, 0.003, 0.01, 0.004], 0.02));
+        m.record_trace(&breakdown(2, TracePath::Solo, [0.001, 0.002, 0.0, 0.08, 0.0], 0.09));
+        let snap = m.snapshot();
+        assert_eq!(snap.per_path[TracePath::Fused.index()].count, 1);
+        assert_eq!(snap.per_path[TracePath::Solo.index()].count, 1);
+        assert_eq!(snap.per_path[TracePath::Sharded.index()].count, 0);
+        // queue recorded for both; pack/gather only for the fused one
+        assert_eq!(snap.per_stage[Stage::Queue.index()].count, 2);
+        assert_eq!(snap.per_stage[Stage::Pack.index()].count, 1);
+        assert_eq!(snap.per_stage[Stage::Gather.index()].count, 1);
+        assert_eq!(snap.per_stage[Stage::Exec.index()].count, 2);
+        // combined percentiles cover both records
+        assert_eq!(snap.per_path.iter().map(|p| p.count).sum::<u64>(), 2);
+        // only the 0.09 s trace crossed the 0.05 s threshold
+        assert_eq!(snap.slow_requests.len(), 1);
+        assert_eq!(snap.slow_requests[0].id, 2);
+        assert_eq!(snap.recent_requests.len(), 2);
+        assert_eq!(snap.recent_requests[0].id, 1); // oldest → newest
+        assert!(snap.recent_requests[0].unix_us > 0);
+    }
+
+    #[test]
+    fn journal_rings_overwrite_oldest() {
+        let m = Metrics::new();
+        m.set_slow_threshold_s(1e-9);
+        for i in 0..(SLOW_JOURNAL_CAP as u64 + 5) {
+            m.record_trace(&breakdown(i, TracePath::Solo, [0.001, 0.0, 0.0, 0.001, 0.0], 0.01));
+        }
+        let snap = m.snapshot();
+        assert_eq!(snap.slow_requests.len(), SLOW_JOURNAL_CAP);
+        assert_eq!(snap.slow_requests[0].id, 5); // 0..=4 overwritten
+        assert_eq!(snap.slow_requests.last().unwrap().id, SLOW_JOURNAL_CAP as u64 + 4);
+        assert_eq!(snap.recent_requests.len(), RECENT_JOURNAL_CAP);
+        // threshold 0 disables the slow ring
+        let m2 = Metrics::new();
+        m2.set_slow_threshold_s(0.0);
+        m2.record_trace(&breakdown(9, TracePath::Solo, [0.0; 5], 10.0));
+        assert!(m2.snapshot().slow_requests.is_empty());
+        assert_eq!(m2.snapshot().recent_requests.len(), 1);
+    }
+
+    #[test]
+    fn display_has_per_path_and_journal() {
+        let m = Metrics::new();
+        m.record_trace(&breakdown(1, TracePath::Sharded, [0.001, 0.0, 0.0, 0.01, 0.001], 0.2));
+        let text = format!("{}", m.snapshot());
+        assert!(text.contains("sharded=1@"), "{text}");
+        assert!(text.contains("solo=0@"), "{text}");
+        assert!(text.contains("slow=1(thr=100ms)"), "{text}");
+        assert!(text.contains("recent=1"), "{text}");
+    }
+
+    #[test]
+    fn json_and_prometheus_roundtrip_smoke() {
+        let m = Metrics::new();
+        m.record_trace(&breakdown(3, TracePath::Probe, [0.001, 0.002, 0.0, 0.05, 0.0], 0.06));
+        let snap = m.snapshot();
+        let parsed = Json::parse(&snap.to_json()).expect("to_json emits valid JSON");
+        assert_eq!(parsed.get("requests").unwrap().as_f64(), Some(0.0));
+        let probe = parsed.get("per_path").unwrap().get("probe").unwrap();
+        assert_eq!(probe.get("count").unwrap().as_f64(), Some(1.0));
+        assert_eq!(
+            parsed.get("recent_requests").unwrap().as_arr().unwrap().len(),
+            1
+        );
+        let prom = snap.to_prometheus();
+        assert!(prom.contains("spmm_requests 0"), "{prom}");
+        assert!(prom.contains("spmm_request_latency_seconds_bucket{path=\"probe\""), "{prom}");
+        assert!(prom.contains("spmm_stage_latency_seconds_bucket{stage=\"queue\""), "{prom}");
+        assert!(prom.contains("le=\"+Inf\""), "{prom}");
     }
 
     #[test]

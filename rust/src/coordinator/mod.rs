@@ -18,8 +18,13 @@
 //!    wide pass (`C_wide = A · [B_1 | … | B_k]`, [`workers::fuse_batch`]),
 //!    traversing A once per batch instead of once per request,
 //! 4. records **metrics** (per-algorithm counts, plan-cache hit/miss/
-//!    eviction counters, tuner threshold, latency percentiles, fallback
-//!    rate — [`metrics`]).
+//!    eviction counters, tuner threshold, fallback rate — [`metrics`]) and
+//!    **traces** every request's lifecycle ([`trace`]): per-stage spans
+//!    (queue / plan / pack / exec / gather) stamped inline as the request
+//!    moves through the stack, folded into lock-free per-path and
+//!    per-stage latency histograms, a slow-request journal, and a stage
+//!    breakdown on every [`SpmmResult`]; snapshots export as JSON and
+//!    Prometheus text.
 //!
 //! [`engine`] is the synchronous core; [`router`] puts a threaded
 //! request-queue front-end on top (std threads + channels; the offline
@@ -47,10 +52,12 @@ pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod router;
+pub mod trace;
 pub mod workers;
 
 pub use batcher::{Batch, BatchQueue, RouteKey};
 pub use engine::{EngineConfig, ExecutionPath, SpmmEngine, SpmmResult};
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use metrics::{JournalEntry, LatencyStats, Metrics, MetricsSnapshot};
 pub use router::{Server, ServerConfig};
+pub use trace::{RequestTrace, Stage, StageBreakdown, TracePath};
 pub use workers::{WorkQueue, WorkerRuntime};

@@ -48,7 +48,8 @@ use crate::shard::{ShardedEngine, WorkSink};
 
 use super::batcher::{Batch, BatchQueue, RouteKey};
 use super::engine::{EngineConfig, SpmmResult};
-use super::metrics::{Metrics, MetricsSnapshot};
+use super::metrics::{Metrics, MetricsSnapshot, DEFAULT_SLOW_THRESHOLD_S};
+use super::trace::{RequestTrace, Stage};
 use super::workers::{fuse_batch, BatchWork, Request, WorkerRuntime, MAX_FUSED_WIDTH};
 
 /// Server tuning knobs.
@@ -63,6 +64,16 @@ pub struct ServerConfig {
     /// bounded ingress queue (backpressure: submit blocks when full);
     /// also bounds the work queue's batch lane
     pub queue_capacity: usize,
+    /// when set, a background thread dumps `MetricsSnapshot::to_json()`
+    /// here every `metrics_interval`, and `shutdown` writes the final
+    /// snapshot (atomic tmp-file + rename, so readers never see a torn
+    /// dump)
+    pub metrics_file: Option<std::path::PathBuf>,
+    /// dump cadence for `metrics_file`
+    pub metrics_interval: Duration,
+    /// requests slower than this end-to-end land in the slow-request
+    /// journal (zero disables the slow ring; the recent ring always runs)
+    pub slow_threshold: Duration,
 }
 
 impl Default for ServerConfig {
@@ -72,6 +83,9 @@ impl Default for ServerConfig {
             max_batch: 8,
             max_wait: Duration::from_millis(2),
             queue_capacity: 256,
+            metrics_file: None,
+            metrics_interval: Duration::from_secs(10),
+            slow_threshold: Duration::from_secs_f64(DEFAULT_SLOW_THRESHOLD_S),
         }
     }
 }
@@ -95,7 +109,24 @@ pub struct Server {
     sharded: Option<Arc<ShardedEngine>>,
     /// learned plans are written back here on shutdown
     plan_file: Option<std::path::PathBuf>,
+    /// periodic JSON metrics dumps land here (and a final one on shutdown)
+    metrics_file: Option<std::path::PathBuf>,
+    /// dropping this sender stops the dump thread
+    dumper_stop: Option<SyncSender<()>>,
+    dumper: Option<std::thread::JoinHandle<()>>,
     next_id: AtomicU64,
+}
+
+/// Serialize a snapshot and write it atomically (tmp file + rename), so a
+/// concurrent reader of `path` never observes a partial dump.
+fn write_metrics_json(path: &std::path::Path, snap: &MetricsSnapshot) {
+    let tmp = path.with_extension("json.tmp");
+    let body = snap.to_json();
+    let ok = std::fs::write(&tmp, body.as_bytes())
+        .and_then(|_| std::fs::rename(&tmp, path));
+    if let Err(e) = ok {
+        eprintln!("(metrics dump to {} failed: {e})", path.display());
+    }
 }
 
 impl Server {
@@ -104,6 +135,7 @@ impl Server {
     /// errors there surface on the affected requests' reply channels.
     pub fn start(engine_cfg: EngineConfig, cfg: ServerConfig) -> Result<Self> {
         let metrics = Arc::new(Metrics::new());
+        metrics.set_slow_threshold_s(cfg.slow_threshold.as_secs_f64());
         // One planner for the whole server: the router plans, the workers
         // execute and feed probe measurements back into the same tuner.
         let planner = Arc::new(engine_cfg.build_planner());
@@ -222,12 +254,17 @@ impl Server {
                             // shared pool: at most `workers` shards.
                             if let Some(se) = &sharded {
                                 if se.policy().shard_count(&req.csr, se.workers()) >= 2 {
-                                    let Request { csr, b, n, reply, .. } = req;
-                                    se.submit_to(&csr, &b, n, reply);
+                                    let Request { csr, b, n, reply, trace, .. } = req;
+                                    se.submit_traced(&csr, &b, n, reply, trace);
                                     continue;
                                 }
                             }
+                            // the router plans exactly once; the span is
+                            // stamped here (before the queue-wait ends) so
+                            // trace::finish subtracts it from queue time
+                            let plan_start = Instant::now();
                             let outcome = planner.plan(&req.csr, manifest.as_ref());
+                            req.trace.span(Stage::Plan, plan_start, Instant::now());
                             let plan_counter = if outcome.cache_hit {
                                 &metrics.plan_hits
                             } else {
@@ -285,6 +322,37 @@ impl Server {
             })
         };
 
+        // Metrics dump thread: one snapshot + atomic file write per
+        // interval.  Stops when the server drops `dumper_stop` (the
+        // recv sees Disconnected); a zero-capacity channel keeps it
+        // allocation-free at steady state.
+        let (dumper_stop, dumper) = match &cfg.metrics_file {
+            Some(path) => {
+                let (stop_tx, stop_rx) = sync_channel::<()>(0);
+                let path = path.clone();
+                let interval = cfg.metrics_interval.max(Duration::from_millis(10));
+                let metrics = Arc::clone(&metrics);
+                let planner = Arc::clone(&planner);
+                let runtime = Arc::clone(&runtime);
+                let handle = std::thread::spawn(move || loop {
+                    match stop_rx.recv_timeout(interval) {
+                        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                            metrics.sync_exec_gauges(
+                                &runtime.exec_stats(),
+                                &planner.partition_stats(),
+                            );
+                            let (sd, bd) = runtime.queue().depths();
+                            metrics.sync_queue_gauges(sd, bd);
+                            write_metrics_json(&path, &metrics.snapshot());
+                        }
+                        _ => break, // explicit stop or server dropped
+                    }
+                });
+                (Some(stop_tx), Some(handle))
+            }
+            None => (None, None),
+        };
+
         Ok(Self {
             ingress: ingress_tx,
             router: Some(router),
@@ -293,6 +361,9 @@ impl Server {
             planner,
             sharded,
             plan_file: engine_cfg.plan_file,
+            metrics_file: cfg.metrics_file,
+            dumper_stop,
+            dumper,
             next_id: AtomicU64::new(0),
         })
     }
@@ -306,13 +377,16 @@ impl Server {
         n: usize,
     ) -> Receiver<Result<SpmmResult>> {
         let (tx, rx) = std::sync::mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let req = Request {
-            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            id,
             csr,
             b,
             n,
             outcome: None,
             reply: tx,
+            // admission stamp: every stage span measures from here
+            trace: RequestTrace::begin(id),
         };
         let _ = self.ingress.send(RouterMsg::Req(req));
         rx
@@ -361,11 +435,14 @@ impl Server {
     }
 
     /// OS threads the server currently owns: router + workers + pool
-    /// threads.  One pool set serves both the batcher and shard paths, so
-    /// this equals `1 + workers + workers × cpu_workers` whether or not
+    /// threads (+ the metrics dump thread when `metrics_file` is set).
+    /// One pool set serves both the batcher and shard paths, so this
+    /// equals `1 + workers + workers × cpu_workers` whether or not
     /// sharding is enabled.
     pub fn resident_threads(&self) -> usize {
-        self.runtime.resident_threads() + usize::from(self.router.is_some())
+        self.runtime.resident_threads()
+            + usize::from(self.router.is_some())
+            + usize::from(self.dumper.is_some())
     }
 
     /// Shard tasks executed per unified-pool worker.
@@ -395,13 +472,23 @@ impl Server {
         // in-flight gathers complete and reply — then join.
         drop(self.sharded.take());
         self.runtime.shutdown();
+        // stop the periodic dumper before taking the final snapshot, so
+        // the shutdown dump below is the file's last word
+        drop(self.dumper_stop.take());
+        if let Some(h) = self.dumper.take() {
+            let _ = h.join();
+        }
         if let Some(path) = &self.plan_file {
             if let Err(e) = self.planner.save(path) {
                 eprintln!("(plan save to {} failed: {e})", path.display());
             }
         }
         self.sync_runtime_gauges();
-        self.metrics.snapshot()
+        let snap = self.metrics.snapshot();
+        if let Some(path) = &self.metrics_file {
+            write_metrics_json(path, &snap);
+        }
+        snap
     }
 }
 
@@ -628,6 +715,13 @@ mod tests {
             .submit_blocking(Arc::clone(&a), Arc::clone(&b), 16)
             .unwrap();
         assert!(first.shards >= 2, "large request must shard: {}", first.shards);
+        {
+            use crate::coordinator::trace::TracePath;
+            let s = &first.stages;
+            assert_eq!(s.path, TracePath::Sharded);
+            assert!(s.exec_s > 0.0 && s.gather_s >= 0.0);
+            assert!(s.stage_sum_s() <= s.total_s + 1e-9);
+        }
         assert_eq!(first.c.len(), base_c.len());
         assert_eq!(&first.c[..], &base_c[..], "sharded output must be bitwise-identical");
         let ptr = first.c.as_ptr();
@@ -791,6 +885,47 @@ mod tests {
             snap.partition_hits, rounds,
             "one partition lookup per fused batch, not per request"
         );
+    }
+
+    /// Every reply on the server path carries a coherent stage breakdown,
+    /// and a configured `metrics_file` receives a parseable JSON dump on
+    /// shutdown with the per-path histograms in it.
+    #[test]
+    fn server_replies_carry_stages_and_metrics_file_is_written() {
+        use crate::util::json::Json;
+        let dir = std::env::temp_dir().join("merge_spmm_router_metrics");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("metrics.json");
+        let _ = std::fs::remove_file(&path);
+        let server = Server::start(
+            cpu_cfg(),
+            ServerConfig {
+                metrics_file: Some(path.clone()),
+                // long interval: the shutdown dump is the one we read back
+                metrics_interval: Duration::from_secs(3600),
+                slow_threshold: Duration::from_micros(1), // journal everything
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let a = Arc::new(Csr::random(100, 100, 4.0, 1601));
+        let b = Arc::new(crate::gen::dense_matrix(100, 8, 1602));
+        for _ in 0..3 {
+            let r = server.submit_blocking(Arc::clone(&a), Arc::clone(&b), 8).unwrap();
+            let s = &r.stages;
+            assert!(s.queue_s >= 0.0 && s.plan_s >= 0.0 && s.exec_s > 0.0);
+            assert!(s.stage_sum_s() <= s.total_s + 1e-9, "stages exceed wall time");
+            assert_eq!(s.total_s, r.latency_s);
+        }
+        let snap = server.shutdown();
+        assert_eq!(snap.completed, 3);
+        assert_eq!(snap.slow_requests.len(), 3, "1µs threshold journals everything");
+        let text = std::fs::read_to_string(&path).expect("shutdown must write the dump");
+        let parsed = Json::parse(&text).expect("dump must be valid JSON");
+        for key in ["requests", "per_path", "per_stage", "slow_requests"] {
+            assert!(parsed.get(key).is_some(), "dump missing {key}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

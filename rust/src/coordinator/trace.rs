@@ -1,0 +1,354 @@
+//! Request-lifecycle tracing: per-stage spans stamped inline as a request
+//! moves admit → queue → plan → pack → kernel-exec → unpack/gather → reply.
+//!
+//! A [`RequestTrace`] is a small `Copy` struct (a handful of `Instant`s) that
+//! rides inside `coordinator::workers::Request` and `shard`'s gather state —
+//! no per-request heap traffic, so the zero-allocation steady-state property
+//! holds with tracing always on.  Every layer that touches the request stamps
+//! the span it owns; at reply time the trace is folded into a
+//! [`StageBreakdown`] that (a) travels out on `SpmmResult::stages` for the
+//! client and (b) feeds the per-path / per-stage histograms and the
+//! slow-request journal in [`super::metrics::Metrics`].
+//!
+//! ## Stage semantics per execution path
+//!
+//! | path      | queue                   | plan               | pack            | exec                 | gather          |
+//! |-----------|-------------------------|--------------------|-----------------|----------------------|-----------------|
+//! | solo/probe| admit → worker pop (−plan) | router plan     | —               | dispatch (kernel)    | —               |
+//! | fused     | admit → batch start     | fused plan + part. | B pack + leases | one wide kernel pass | C_wide unpack   |
+//! | sharded   | admit → scatter start   | cuts + shard plans | lease + split   | scatter end → last shard | reply assembly |
+//! | degraded  | admit → fused attempt   | router plan        | —               | solo re-run          | —               |
+//!
+//! The router plans *before* the request queues, so on the solo path the plan
+//! span sits inside the admit→pop window; `finish` subtracts it from the
+//! queue stage exactly when the plan span is contained in that window, which
+//! keeps every stage non-negative and the stage sum ≤ the end-to-end wall
+//! time (spans past the queue window are disjoint and sequential by
+//! construction).  On the sharded path the exec span runs from scatter end to
+//! the *last* shard's completion, so it includes any shard-lane wait — that
+//! is intentional: it is the time the caller was waiting on kernels.
+
+use std::time::Instant;
+
+/// Which of the five serve-path shapes a request ultimately executed as.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TracePath {
+    /// classic per-request dispatch on a worker engine
+    #[default]
+    Solo,
+    /// solo dispatch that also ran the A/B tuner probe (both kernels)
+    Probe,
+    /// scatter-gather across nnz-balanced shards
+    Sharded,
+    /// rode a fused wide pass (`C_wide = A · [B_1 | … | B_k]`)
+    Fused,
+    /// fused pass panicked; re-ran on the classic per-request path
+    Degraded,
+}
+
+impl TracePath {
+    pub const COUNT: usize = 5;
+    pub const ALL: [TracePath; Self::COUNT] = [
+        TracePath::Solo,
+        TracePath::Probe,
+        TracePath::Sharded,
+        TracePath::Fused,
+        TracePath::Degraded,
+    ];
+
+    pub fn index(self) -> usize {
+        match self {
+            TracePath::Solo => 0,
+            TracePath::Probe => 1,
+            TracePath::Sharded => 2,
+            TracePath::Fused => 3,
+            TracePath::Degraded => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TracePath::Solo => "solo",
+            TracePath::Probe => "probe",
+            TracePath::Sharded => "sharded",
+            TracePath::Fused => "fused",
+            TracePath::Degraded => "degraded",
+        }
+    }
+}
+
+/// The five lifecycle stages every request is broken into.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// admit → leaving the queue (bucket wait + flush delay)
+    Queue,
+    /// planner work: fingerprint, cache lookup, shard cuts, fused re-plan
+    Plan,
+    /// staging: B packing, buffer leases, row splitting
+    Pack,
+    /// kernel execution (the `_into` executors / PJRT call)
+    Exec,
+    /// result assembly: C_wide unpack or sharded reply gather
+    Gather,
+}
+
+impl Stage {
+    pub const COUNT: usize = 5;
+    pub const ALL: [Stage; Self::COUNT] =
+        [Stage::Queue, Stage::Plan, Stage::Pack, Stage::Exec, Stage::Gather];
+
+    pub fn index(self) -> usize {
+        match self {
+            Stage::Queue => 0,
+            Stage::Plan => 1,
+            Stage::Pack => 2,
+            Stage::Exec => 3,
+            Stage::Gather => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Queue => "queue",
+            Stage::Plan => "plan",
+            Stage::Pack => "pack",
+            Stage::Exec => "exec",
+            Stage::Gather => "gather",
+        }
+    }
+}
+
+/// Inline per-request trace: the admit instant plus optional span endpoints
+/// for each post-queue stage.  `Copy` (5 × 16-byte `Instant` pairs at most)
+/// so threading it through channels and catch-unwind boundaries is free and
+/// allocation-less.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestTrace {
+    id: u64,
+    t0: Instant,
+    queue_end: Option<Instant>,
+    plan: Option<(Instant, Instant)>,
+    pack: Option<(Instant, Instant)>,
+    exec: Option<(Instant, Instant)>,
+    gather: Option<(Instant, Instant)>,
+    degraded: bool,
+}
+
+impl RequestTrace {
+    /// Stamp the admit instant.  Called exactly once, where the request
+    /// enters the system (`Server::submit`, or engine entry for direct
+    /// calls).
+    pub fn begin(id: u64) -> Self {
+        RequestTrace {
+            id,
+            t0: Instant::now(),
+            queue_end: None,
+            plan: None,
+            pack: None,
+            exec: None,
+            gather: None,
+            degraded: false,
+        }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn admitted(&self) -> Instant {
+        self.t0
+    }
+
+    /// Mark the instant the request left the queue (first caller wins: a
+    /// degraded rider keeps the fused-attempt start, not the solo re-run).
+    pub fn queue_ended(&mut self, at: Instant) {
+        if self.queue_end.is_none() {
+            self.queue_end = Some(at);
+        }
+    }
+
+    /// Record a stage span.  Later stamps overwrite earlier ones for the
+    /// same stage (the fused path replaces the router's per-rider plan span
+    /// with the shared batch plan span).
+    pub fn span(&mut self, stage: Stage, start: Instant, end: Instant) {
+        let s = Some((start, end));
+        match stage {
+            Stage::Queue => {} // queue is derived from t0/queue_end, never stamped
+            Stage::Plan => self.plan = s,
+            Stage::Pack => self.pack = s,
+            Stage::Exec => self.exec = s,
+            Stage::Gather => self.gather = s,
+        }
+    }
+
+    /// Mark that the fused pass failed and this request is being re-run on
+    /// the classic path; `finish` folds Solo/Probe into `Degraded`.
+    pub fn mark_degraded(&mut self) {
+        self.degraded = true;
+    }
+
+    pub fn is_degraded(&self) -> bool {
+        self.degraded
+    }
+
+    /// Fold the stamped spans into a [`StageBreakdown`] ending at `end`.
+    pub fn finish(&self, path: TracePath, end: Instant) -> StageBreakdown {
+        let dur = |s: Option<(Instant, Instant)>| {
+            s.map(|(a, b)| b.saturating_duration_since(a).as_secs_f64()).unwrap_or(0.0)
+        };
+        let queue_end = self.queue_end.unwrap_or(end);
+        let mut queue_s = queue_end.saturating_duration_since(self.t0).as_secs_f64();
+        // The router plans before enqueueing: when the plan span is contained
+        // in the admit→pop window, bill it to plan, not queue.  Spans stamped
+        // after the queue window (fused/sharded batch planning) stay where
+        // they are — disjoint from queue by construction.
+        if let Some((_, plan_end)) = self.plan {
+            if plan_end <= queue_end {
+                queue_s = (queue_s - dur(self.plan)).max(0.0);
+            }
+        }
+        let path = if self.degraded && matches!(path, TracePath::Solo | TracePath::Probe) {
+            TracePath::Degraded
+        } else {
+            path
+        };
+        StageBreakdown {
+            id: self.id,
+            path,
+            queue_s,
+            plan_s: dur(self.plan),
+            pack_s: dur(self.pack),
+            exec_s: dur(self.exec),
+            gather_s: dur(self.gather),
+            total_s: end.saturating_duration_since(self.t0).as_secs_f64(),
+            admitted: self.t0,
+            plan_span: self.plan,
+            pack_span: self.pack,
+            exec_span: self.exec,
+            gather_span: self.gather,
+        }
+    }
+}
+
+/// Where a finished request's time went: one duration per stage plus the
+/// raw span endpoints (monotonic `Instant`s) for coherence checks — fused
+/// riders in one batch share *identical* plan/exec spans while their queue
+/// waits differ.  Rides out on `SpmmResult::stages`; `Copy`, no heap.
+#[derive(Debug, Clone, Copy)]
+pub struct StageBreakdown {
+    pub id: u64,
+    pub path: TracePath,
+    pub queue_s: f64,
+    pub plan_s: f64,
+    pub pack_s: f64,
+    pub exec_s: f64,
+    pub gather_s: f64,
+    /// end-to-end wall time, admit → reply
+    pub total_s: f64,
+    /// the admit instant (distinct per request even inside one fused batch)
+    pub admitted: Instant,
+    pub plan_span: Option<(Instant, Instant)>,
+    pub pack_span: Option<(Instant, Instant)>,
+    pub exec_span: Option<(Instant, Instant)>,
+    pub gather_span: Option<(Instant, Instant)>,
+}
+
+impl StageBreakdown {
+    /// Sum of the five stage durations.  Always ≤ `total_s` (+ float
+    /// rounding): queue+plan cover at most the admit→pop window and the
+    /// remaining spans are sequential inside the pop→reply window.
+    pub fn stage_sum_s(&self) -> f64 {
+        self.queue_s + self.plan_s + self.pack_s + self.exec_s + self.gather_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn at(base: Instant, ms: u64) -> Instant {
+        base + Duration::from_millis(ms)
+    }
+
+    #[test]
+    fn solo_shape_bills_contained_plan_to_plan_not_queue() {
+        let mut tr = RequestTrace::begin(7);
+        let t0 = tr.admitted();
+        tr.span(Stage::Plan, at(t0, 1), at(t0, 3)); // router plans pre-queue
+        tr.queue_ended(at(t0, 10));
+        tr.span(Stage::Exec, at(t0, 10), at(t0, 25));
+        let b = tr.finish(TracePath::Solo, at(t0, 26));
+        assert_eq!(b.id, 7);
+        assert_eq!(b.path, TracePath::Solo);
+        assert!((b.plan_s - 0.002).abs() < 1e-9);
+        assert!((b.queue_s - 0.008).abs() < 1e-9, "queue={}", b.queue_s);
+        assert!((b.exec_s - 0.015).abs() < 1e-9);
+        assert_eq!(b.pack_s, 0.0);
+        assert_eq!(b.gather_s, 0.0);
+        assert!((b.total_s - 0.026).abs() < 1e-9);
+        assert!(b.stage_sum_s() <= b.total_s + 1e-9);
+    }
+
+    #[test]
+    fn post_queue_plan_span_is_not_subtracted() {
+        // fused/sharded shape: batch planning happens after the queue window
+        let mut tr = RequestTrace::begin(0);
+        let t0 = tr.admitted();
+        tr.queue_ended(at(t0, 5));
+        tr.span(Stage::Plan, at(t0, 5), at(t0, 7));
+        tr.span(Stage::Pack, at(t0, 7), at(t0, 8));
+        tr.span(Stage::Exec, at(t0, 8), at(t0, 18));
+        tr.span(Stage::Gather, at(t0, 18), at(t0, 19));
+        let b = tr.finish(TracePath::Fused, at(t0, 20));
+        assert!((b.queue_s - 0.005).abs() < 1e-9);
+        assert!((b.plan_s - 0.002).abs() < 1e-9);
+        assert!(b.stage_sum_s() <= b.total_s + 1e-9);
+    }
+
+    #[test]
+    fn degraded_flag_folds_solo_into_degraded() {
+        let mut tr = RequestTrace::begin(1);
+        tr.mark_degraded();
+        let b = tr.finish(TracePath::Solo, Instant::now());
+        assert_eq!(b.path, TracePath::Degraded);
+        // explicit paths are not overridden
+        let b = tr.finish(TracePath::Sharded, Instant::now());
+        assert_eq!(b.path, TracePath::Sharded);
+    }
+
+    #[test]
+    fn queue_end_first_write_wins() {
+        let mut tr = RequestTrace::begin(2);
+        let t0 = tr.admitted();
+        tr.queue_ended(at(t0, 4));
+        tr.queue_ended(at(t0, 9)); // degraded re-run must not move it
+        let b = tr.finish(TracePath::Solo, at(t0, 10));
+        assert!((b.queue_s - 0.004).abs() < 1e-9);
+    }
+
+    #[test]
+    fn span_overwrite_keeps_latest() {
+        let mut tr = RequestTrace::begin(3);
+        let t0 = tr.admitted();
+        tr.span(Stage::Plan, at(t0, 1), at(t0, 2));
+        tr.queue_ended(at(t0, 5));
+        tr.span(Stage::Plan, at(t0, 6), at(t0, 9)); // fused batch re-plan
+        let b = tr.finish(TracePath::Fused, at(t0, 12));
+        assert!((b.plan_s - 0.003).abs() < 1e-9);
+        // re-planned span sits past the queue window → queue keeps full wait
+        assert!((b.queue_s - 0.005).abs() < 1e-9);
+    }
+
+    #[test]
+    fn path_and_stage_tables_are_consistent() {
+        for (i, p) in TracePath::ALL.iter().enumerate() {
+            assert_eq!(p.index(), i);
+            assert!(!p.name().is_empty());
+        }
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            assert_eq!(s.index(), i);
+            assert!(!s.name().is_empty());
+        }
+    }
+}

@@ -67,6 +67,7 @@ use crate::spmm::{self, Algorithm};
 
 use super::engine::{EngineConfig, ExecutionPath, SpmmEngine, SpmmResult};
 use super::metrics::Metrics;
+use super::trace::{RequestTrace, Stage, TracePath};
 
 /// Consecutive shard tasks a worker serves before it must service a
 /// waiting batch (the batch lane's starvation bound).
@@ -94,6 +95,10 @@ pub(crate) struct Request {
     /// filled by the router thread — planned exactly once per request
     pub outcome: Option<PlanOutcome>,
     pub reply: Sender<Result<SpmmResult>>,
+    /// lifecycle trace, admitted at `Server::submit`; every layer the
+    /// request passes through stamps its span (inline `Copy` state — no
+    /// heap, rides through channels and catch_unwind for free)
+    pub trace: RequestTrace,
 }
 
 /// Whole-request work on the batch lane.
@@ -577,6 +582,7 @@ fn run_fused(
         }
         // the router fingerprinted every rider at planning time; reuse it
         // rather than re-walking row_ptr once per batch
+        let plan_start = Instant::now();
         let outcome = match reqs[0].outcome.as_ref() {
             Some(o) => planner.plan_fused_keyed(o.fingerprint, &a, n_total),
             None => planner.plan_fused(&a, n_total),
@@ -591,6 +597,7 @@ fn run_fused(
         } else {
             planner.partition_detached(&a, &outcome)
         };
+        let pack_start = Instant::now();
         let staging = FusedStaging::pack(
             exec.buffers(),
             a.k,
@@ -598,6 +605,7 @@ fn run_fused(
             reqs.iter().map(|r| (r.b.as_slice(), r.n)),
         );
         let mut c_wide = exec.acquire(a.m * n_total);
+        let exec_start = Instant::now();
         match outcome.plan.algorithm {
             Algorithm::RowSplit => {
                 spmm::rowsplit_spmm_into(&a, staging.b_wide(), n_total, &segs, ctx, &mut c_wide)
@@ -606,6 +614,7 @@ fn run_fused(
                 spmm::merge_spmm_into(&a, staging.b_wide(), n_total, &segs, ctx, &mut c_wide)
             }
         }
+        let gather_start = Instant::now();
         let mut outs: Vec<OutputBuf> = reqs.iter().map(|r| exec.acquire(a.m * r.n)).collect();
         FusedStaging::unpack(
             &c_wide,
@@ -613,15 +622,35 @@ fn run_fused(
             n_total,
             outs.iter_mut().zip(&reqs).map(|(o, r)| (&mut o[..], r.n)),
         );
+        let gather_end = Instant::now();
         // staging + c_wide leases return to the free-list here; the
-        // per-request leases ride out in the replies
-        (outcome, outs)
+        // per-request leases ride out in the replies.  Every rider shares
+        // these spans verbatim — the wide pass IS the batch's plan/pack/
+        // exec/gather work; only queue-wait differs per rider.
+        let spans = [
+            (plan_start, pack_start),
+            (pack_start, exec_start),
+            (exec_start, gather_start),
+            (gather_start, gather_end),
+        ];
+        (outcome, outs, spans)
     }));
-    let (outcome, outs) = match executed {
+    let (outcome, outs, spans) = match executed {
         Ok(v) => v,
-        Err(_) => return Some(reqs), // degrade to per-request execution
+        Err(_) => {
+            // degrade to per-request execution: mark every rider so the
+            // engine's trace finish folds its path to Degraded.  Queue
+            // ends at the fused attempt (first write wins), so the failed
+            // pass shows up as total − Σstages, not as inflated queue time.
+            let mut reqs = reqs;
+            for r in &mut reqs {
+                r.trace.queue_ended(t0);
+                r.trace.mark_degraded();
+            }
+            return Some(reqs);
+        }
     };
-    let latency = t0.elapsed().as_secs_f64();
+    let end = Instant::now();
     let k = reqs.len() as u64;
     metrics.requests.fetch_add(k, Ordering::Relaxed);
     metrics.completed.fetch_add(k, Ordering::Relaxed);
@@ -632,20 +661,28 @@ fn run_fused(
     }
     .fetch_add(k, Ordering::Relaxed);
     metrics.record_fused(k, n_total as u64);
-    for _ in 0..k {
-        metrics.record_latency(latency);
-    }
-    for (r, c) in reqs.into_iter().zip(outs) {
+    let [plan_sp, pack_sp, exec_sp, gather_sp] = spans;
+    for (mut r, c) in reqs.into_iter().zip(outs) {
+        // queue ends for every rider when the fused pass picked the batch
+        // up; riders admitted earlier simply show a longer queue wait
+        r.trace.queue_ended(t0);
+        r.trace.span(Stage::Plan, plan_sp.0, plan_sp.1);
+        r.trace.span(Stage::Pack, pack_sp.0, pack_sp.1);
+        r.trace.span(Stage::Exec, exec_sp.0, exec_sp.1);
+        r.trace.span(Stage::Gather, gather_sp.0, gather_sp.1);
+        let stages = r.trace.finish(TracePath::Fused, end);
+        metrics.record_trace(&stages);
         let _ = r.reply.send(Ok(SpmmResult {
             c,
             algorithm: outcome.plan.algorithm,
             path: ExecutionPath::CpuFallback,
             bucket: None,
             cache_hit: outcome.cache_hit,
-            latency_s: latency,
+            latency_s: stages.total_s,
             shards: 1,
             shard_workers: Vec::new(),
             fused_width: n_total,
+            stages,
         }));
     }
     None
@@ -662,8 +699,8 @@ fn run_batch(engine: &SpmmEngine, metrics: &Metrics, reqs: Vec<Request>) {
                 panic!("injected worker panic (test hook: n == PANIC_N)");
             }
             match &r.outcome {
-                Some(o) => engine.spmm_planned(&r.csr, &r.b, r.n, o),
-                None => engine.spmm(&r.csr, &r.b, r.n),
+                Some(o) => engine.spmm_traced(&r.csr, &r.b, r.n, o, r.trace),
+                None => engine.spmm_with_trace(&r.csr, &r.b, r.n, r.trace),
             }
         }));
         let res = executed.unwrap_or_else(|payload| {
@@ -691,6 +728,7 @@ mod tests {
             n: 4,
             outcome: None,
             reply: channel().0,
+            trace: RequestTrace::begin(id),
         }
     }
 
@@ -795,6 +833,7 @@ mod tests {
                 n: 4,
                 outcome: None,
                 reply: tx,
+                trace: RequestTrace::begin(id),
             }]));
             receivers.push(rx);
         }
@@ -834,6 +873,7 @@ mod tests {
             n: 2,
             outcome: None,
             reply: tx,
+            trace: RequestTrace::begin(0),
         }]));
         let err = rx.recv().unwrap().unwrap_err();
         assert!(err.to_string().contains("engine init"), "{err}");
@@ -851,6 +891,7 @@ mod tests {
                 n,
                 outcome: None,
                 reply: tx,
+                trace: RequestTrace::begin(id),
             },
             rx,
         )
@@ -913,6 +954,7 @@ mod tests {
             n: 4,
             outcome: None,
             reply: channel().0,
+            trace: RequestTrace::begin(20),
         };
         let zero = Request {
             id: 21,
@@ -921,6 +963,7 @@ mod tests {
             n: 0,
             outcome: None,
             reply: channel().0,
+            trace: RequestTrace::begin(21),
         };
         let good = req_for(&a1, &b4, 4, 22).0;
         let works = fuse_batch(vec![bad, zero, good], MAX_FUSED_WIDTH);
@@ -967,6 +1010,7 @@ mod tests {
         let (r1, rx1) = req_for(&a, &b, 8, 1);
         let (r2, rx2) = req_for(&a, &b, 8, 2);
         rt.submit_batch(BatchWork::Fused(vec![r1, r2]));
+        let mut rider_stages = Vec::new();
         for rx in [rx1, rx2] {
             let r = rx.recv().unwrap().unwrap();
             assert_eq!(r.fused_width, 16, "result must report the fused width");
@@ -975,13 +1019,20 @@ mod tests {
                 r.c.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()),
                 "fused output must match the plain path bit for bit"
             );
+            assert_eq!(r.stages.path, TracePath::Fused);
+            assert!(r.stages.stage_sum_s() <= r.stages.total_s + 1e-9);
+            rider_stages.push(r.stages);
         }
+        // riders share the wide pass: identical plan/exec span timestamps
+        assert_eq!(rider_stages[0].plan_span, rider_stages[1].plan_span);
+        assert_eq!(rider_stages[0].exec_span, rider_stages[1].exec_span);
         rt.shutdown();
         let snap = metrics.snapshot();
         assert_eq!(snap.completed, 3);
         assert_eq!(snap.fused_batches, 1);
         assert_eq!(snap.fused_requests, 2);
         assert_eq!(snap.fused_width_mean, 16.0);
+        assert_eq!(snap.per_path[TracePath::Fused.index()].count, 2);
     }
 
     /// A panic inside the wide pass must degrade to per-request execution:
@@ -1016,6 +1067,7 @@ mod tests {
         for rx in [rx1, rx2] {
             let r = rx.recv().unwrap().unwrap();
             assert_eq!(r.fused_width, 0, "fallback runs per-request, not fused");
+            assert_eq!(r.stages.path, TracePath::Degraded, "rerun riders must trace as degraded");
             for (x, y) in r.c.iter().zip(&want) {
                 assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()));
             }
@@ -1025,5 +1077,6 @@ mod tests {
         assert_eq!(snap.completed, 2);
         assert_eq!(snap.errors, 1);
         assert_eq!(snap.fused_batches, 0, "a failed fuse must not count as fused");
+        assert_eq!(snap.per_path[TracePath::Degraded.index()].count, 2);
     }
 }

@@ -152,6 +152,42 @@
 //! gauge (`fuse=…x…` in the metrics line), and per-request in
 //! [`coordinator::SpmmResult`]'s `fused_width`.
 //!
+//! ## trace — where every request's time went
+//!
+//! Every request carries an inline [`coordinator::RequestTrace`] from
+//! admission to reply: a `Copy` struct of monotonic `Instant` pairs,
+//! stamped in place as the request moves through the stack (no
+//! allocation, no locks, always on).  At reply time it folds into a
+//! [`coordinator::StageBreakdown`] — one duration per lifecycle stage —
+//! that rides out on [`coordinator::SpmmResult`]`::stages` for **all
+//! five** execution paths (solo / probe / sharded / fused / degraded):
+//!
+//! * **queue** — admit → leaving the batch bucket (minus any router
+//!   planning contained in that window),
+//! * **plan** — fingerprint + cache lookup, shard cuts, or fused
+//!   width re-decision,
+//! * **pack** — staging: wide-B packing, buffer leases, row splitting,
+//! * **exec** — kernel execution (the `_into` executors / PJRT call),
+//! * **gather** — result assembly: `C_wide` unpack or sharded reply
+//!   gather.
+//!
+//! Stage durations are non-negative and sum to ≤ the end-to-end total by
+//! construction; fused riders share the batch's plan/pack/exec/gather
+//! span endpoints while keeping their own admit instants.  On the
+//! metrics side ([`coordinator::Metrics`]) each finished trace lands in
+//! lock-free atomic-bucket histograms — end-to-end per *path*, duration
+//! per *stage* — plus a fixed-capacity slow-request journal (ring
+//! buffers of whole-`Copy` entries, written under a nanoseconds-scale
+//! mutex, so snapshots never see a torn trace).
+//! [`coordinator::MetricsSnapshot`] exports everything three ways:
+//! `Display` (the one-line serve log), `to_json()` (via [`util::json`];
+//! `serve --metrics-json FILE` dumps it atomically on an interval and at
+//! shutdown), and `to_prometheus()` (text exposition; `merge-spmm stats`
+//! prints any of the three).  A golden test pins both structured exports
+//! to `MetricsSnapshot::FIELDS`, so a new metric cannot silently skip an
+//! exporter.  Coherence and concurrency properties live in
+//! `tests/trace_props.rs` and `tests/metrics_props.rs`.
+//!
 //! ### The `_into` API contract
 //!
 //! [`spmm::rowsplit_spmm_into`] and [`spmm::merge_spmm_into`] are the

@@ -5,7 +5,10 @@
 //!            [--measured] [--seed N] [--out DIR]     regenerate paper figures
 //! merge-spmm run --mtx FILE [--n N] [--artifacts DIR]  SpMM one matrix
 //! merge-spmm serve [--requests N] [--workers W] [--cpu-only]
-//!                  [--shards N|auto]                 demo serving workload
+//!                  [--shards N|auto] [--metrics-json FILE] [--slow-ms MS]
+//!                                                    demo serving workload
+//! merge-spmm stats [--file FILE] [--format text|json|prom]
+//!                                                    one-shot metrics export
 //! merge-spmm suite [--seed N]                        dataset inventory
 //! merge-spmm info [--artifacts DIR]                  platform + artifacts
 //! ```
@@ -26,6 +29,7 @@ fn main() {
         Some("bench") => cmd_bench(&args[1..]),
         Some("run") => cmd_run(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
+        Some("stats") => cmd_stats(&args[1..]),
         Some("suite") => cmd_suite(&args[1..]),
         Some("info") => cmd_info(&args[1..]),
         Some("help") | Some("--help") | Some("-h") | None => {
@@ -54,6 +58,16 @@ USAGE:
                                        serve batches (one pool set, CPU executors;
                                        small requests keep the batcher/PJRT path).
                                        --engines is a deprecated alias for --workers.
+                   [--metrics-json FILE]  dump MetricsSnapshot JSON periodically and
+                                       on shutdown (atomic write; parse with any
+                                       JSON reader or `merge-spmm stats --file`)
+                   [--slow-ms MS]      journal requests slower than MS end-to-end
+                                       (default 100; 0 disables the slow journal)
+  merge-spmm stats [--file FILE] [--format text|json|prom]
+                                       one-shot metrics export: summarize a
+                                       --metrics-json dump (--file), or run a small
+                                       built-in workload and print the snapshot as
+                                       Display text, JSON, or Prometheus exposition
   merge-spmm suite [--seed N]
   merge-spmm info [--artifacts DIR]
 
@@ -80,7 +94,8 @@ fn positional(args: &[String]) -> Option<&str> {
         }
         if a == "--seed" || a == "--out" || a == "--n" || a == "--mtx" || a == "--artifacts"
             || a == "--requests" || a == "--workers" || a == "--engines" || a == "--plans"
-            || a == "--shards"
+            || a == "--shards" || a == "--metrics-json" || a == "--slow-ms"
+            || a == "--file" || a == "--format"
         {
             skip = true;
             continue;
@@ -248,10 +263,15 @@ fn cmd_serve(args: &[String]) -> i32 {
             }
         };
     }
+    // observability knobs: periodic JSON dumps + slow-request journal
+    let metrics_file = opt(args, "--metrics-json").map(PathBuf::from);
+    let slow_ms: f64 = opt(args, "--slow-ms").and_then(|s| s.parse().ok()).unwrap_or(100.0);
     let server = match Server::start(
         engine_cfg,
         ServerConfig {
             workers,
+            metrics_file: metrics_file.clone(),
+            slow_threshold: std::time::Duration::from_secs_f64(slow_ms.max(0.0) / 1e3),
             ..Default::default()
         },
     ) {
@@ -300,6 +320,86 @@ fn cmd_serve(args: &[String]) -> i32 {
     let snap = server.shutdown();
     println!("served {ok}/{requests} in {wall:.2}s — {:.1} req/s", ok as f64 / wall);
     println!("{snap}");
+    if let Some(path) = &metrics_file {
+        println!("metrics dump -> {}", path.display());
+    }
+    0
+}
+
+/// One-shot metrics export.  With `--file`, summarize an existing
+/// `--metrics-json` dump; without it, run a small built-in CPU-only
+/// workload and print the resulting snapshot as `Display` text (default),
+/// JSON (`--format json`), or Prometheus exposition (`--format prom`).
+fn cmd_stats(args: &[String]) -> i32 {
+    use merge_spmm::util::json::Json;
+    let format = opt(args, "--format").unwrap_or_else(|| "text".into());
+    if let Some(path) = opt(args, "--file") {
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("stats: failed to read {path}: {e}");
+                return 1;
+            }
+        };
+        let v = match Json::parse(&text) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("stats: {path} is not valid JSON: {e}");
+                return 1;
+            }
+        };
+        let count = |key: &str| v.get(key).and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        println!(
+            "requests {}  completed {}  errors {}  fused {}  sharded {}",
+            count("requests"),
+            count("completed"),
+            count("errors"),
+            count("fused_requests"),
+            count("sharded"),
+        );
+        if let Some(per_path) = v.get("per_path") {
+            for path_name in ["solo", "probe", "sharded", "fused", "degraded"] {
+                if let Some(p) = per_path.get(path_name) {
+                    let f = |k: &str| p.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+                    println!(
+                        "  {path_name:<9} count {:<8} p50 {:.3} ms  p99 {:.3} ms",
+                        f("count") as u64,
+                        f("p50_s") * 1e3,
+                        f("p99_s") * 1e3,
+                    );
+                }
+            }
+        }
+        let slow = v.get("slow_requests").and_then(Json::as_arr).map_or(0, <[Json]>::len);
+        println!("slow-journal entries: {slow}");
+        return 0;
+    }
+    // no file: run a tiny workload so every export path is exercised live
+    let server = match Server::start(
+        EngineConfig { artifacts_dir: None, ..Default::default() },
+        ServerConfig::default(),
+    ) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("server start failed: {e}");
+            return 1;
+        }
+    };
+    let a = Arc::new(Csr::random(500, 500, 4.0, 11));
+    let b = Arc::new(gen::dense_matrix(500, 32, 12));
+    for _ in 0..32 {
+        let _ = server.submit_blocking(Arc::clone(&a), Arc::clone(&b), 32);
+    }
+    let snap = server.shutdown();
+    match format.as_str() {
+        "json" => println!("{}", snap.to_json()),
+        "prom" => print!("{}", snap.to_prometheus()),
+        "text" => println!("{snap}"),
+        other => {
+            eprintln!("stats: unknown --format `{other}` (text|json|prom)");
+            return 2;
+        }
+    }
     0
 }
 

@@ -42,6 +42,7 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::engine::{EngineConfig, ExecutionPath, SpmmResult};
+use crate::coordinator::trace::{RequestTrace, Stage, TracePath};
 use crate::coordinator::workers::{panic_message, WorkerRuntime};
 use crate::coordinator::Metrics;
 use crate::exec::{BufferPool, ExecCtx, OutputBuf, OutputRange};
@@ -90,7 +91,12 @@ struct GatherState {
     /// propagated, so the gather always completes)
     error: Mutex<Option<String>>,
     reply: Mutex<Option<Sender<Result<SpmmResult>>>>,
-    t0: Instant,
+    /// the request's lifecycle trace as of scatter completion (queue_end
+    /// + plan + pack spans stamped); the finishing shard adds exec +
+    /// gather and records the breakdown — `Copy`, so no lock needed
+    trace: RequestTrace,
+    /// exec span start: the moment every shard task was enqueued
+    exec_start: Instant,
     metrics: Arc<Metrics>,
 }
 
@@ -135,7 +141,8 @@ impl ShardTask {
                 workers: Mutex::new(Vec::new()),
                 error: Mutex::new(None),
                 reply: Mutex::new(Some(channel().0)),
-                t0: Instant::now(),
+                trace: RequestTrace::begin(0),
+                exec_start: Instant::now(),
                 metrics: Arc::new(Metrics::new()),
             }),
         }
@@ -231,7 +238,22 @@ impl ShardedEngine {
         n: usize,
         reply: Sender<Result<SpmmResult>>,
     ) {
-        if let Err(e) = self.scatter(a, b, n, reply.clone()) {
+        self.submit_traced(a, b, n, reply, RequestTrace::begin(0));
+    }
+
+    /// [`submit_to`](Self::submit_to) with the request's lifecycle trace
+    /// carried through — the router's entry point, so sharded replies get
+    /// the same stage breakdown as every other path (queue-wait measured
+    /// from server admission, not from scatter).
+    pub fn submit_traced(
+        &self,
+        a: &Arc<Csr>,
+        b: &Arc<Vec<f32>>,
+        n: usize,
+        reply: Sender<Result<SpmmResult>>,
+        trace: RequestTrace,
+    ) {
+        if let Err(e) = self.scatter(a, b, n, reply.clone(), trace) {
             self.metrics.errors.fetch_add(1, Ordering::Relaxed);
             let _ = reply.send(Err(e));
         }
@@ -258,6 +280,7 @@ impl ShardedEngine {
         b: &Arc<Vec<f32>>,
         n: usize,
         reply: Sender<Result<SpmmResult>>,
+        mut trace: RequestTrace,
     ) -> Result<()> {
         // count the request before validation so `requests ≥ completed +
         // errors` holds on the sharded path exactly as on the unsharded one
@@ -265,6 +288,13 @@ impl ShardedEngine {
         if b.len() != a.k * n {
             return Err(anyhow!("B must be k×n row-major ({}×{n})", a.k));
         }
+        // queue-wait ends when the scatter starts working on the request
+        trace.queue_ended(Instant::now());
+        // plan span: the cut search plus one plan per shard view — each
+        // zero-copy view fingerprints independently, so a mixed matrix
+        // runs row-split on dense shards and merge on sparse ones, and
+        // repeats replay both the plan and the stored phase-1 partition
+        let plan_start = Instant::now();
         let want = self.policy.shard_count(a, self.sink.workers());
         let cuts = self.planner.shard_cuts(
             a,
@@ -273,16 +303,33 @@ impl ShardedEngine {
             self.policy.max_imbalance,
         );
         let shards = cuts.len() - 1;
+        let mut planned = Vec::with_capacity(shards);
+        for s in 0..shards {
+            let shard = a.shard_view(cuts[s], cuts[s + 1]);
+            let outcome = self.planner.plan(&shard, None);
+            let counter = if outcome.cache_hit {
+                &self.metrics.plan_hits
+            } else {
+                &self.metrics.plan_misses
+            };
+            counter.fetch_add(1, Ordering::Relaxed);
+            planned.push((shard, outcome));
+        }
+        trace.span(Stage::Plan, plan_start, Instant::now());
         self.metrics.sharded.fetch_add(1, Ordering::Relaxed);
         self.metrics.shards_executed.fetch_add(shards as u64, Ordering::Relaxed);
         self.metrics.sync_shard_gauges(shards, cut::imbalance(a, &cuts));
 
+        // pack span: lease the one `m×n` output and split it into
+        // `shards` checked disjoint windows — the leases ride inside the
+        // tasks; the buffer itself waits in the gather
+        let pack_start = Instant::now();
         let mut out = BufferPool::acquire(&self.buffers, a.m * n);
+        let ranges = out.split_rows(&cuts, n);
+        trace.span(Stage::Pack, pack_start, Instant::now());
         self.metrics
             .sync_exec_gauges(&self.sink.exec_stats(), &self.planner.partition_stats());
-        // One allocation, `shards` checked disjoint windows: the leases
-        // ride inside the tasks; the buffer itself waits in the gather.
-        let ranges = out.split_rows(&cuts, n);
+        let exec_start = Instant::now();
         let gather = Arc::new(GatherState {
             out: Mutex::new(Some(out)),
             shards,
@@ -292,23 +339,14 @@ impl ShardedEngine {
             workers: Mutex::new(Vec::with_capacity(shards)),
             error: Mutex::new(None),
             reply: Mutex::new(Some(reply)),
-            t0: Instant::now(),
+            trace,
+            exec_start,
             metrics: Arc::clone(&self.metrics),
         });
 
-        // Per-shard planning on the shared planner: each zero-copy view
-        // fingerprints independently, so a mixed matrix runs row-split on
-        // dense shards and merge on sparse ones, and repeats replay both
-        // the plan and the stored phase-1 partition.
-        for (s, range) in ranges.into_iter().enumerate() {
-            let shard = a.shard_view(cuts[s], cuts[s + 1]);
-            let outcome = self.planner.plan(&shard, None);
-            let counter = if outcome.cache_hit {
-                &self.metrics.plan_hits
-            } else {
-                &self.metrics.plan_misses
-            };
-            counter.fetch_add(1, Ordering::Relaxed);
+        for ((shard, outcome), (s, range)) in
+            planned.into_iter().zip(ranges.into_iter().enumerate())
+        {
             self.sink.submit_shard(ShardTask {
                 shard,
                 row_start: cuts[s],
@@ -381,17 +419,23 @@ pub(crate) fn execute_shard(planner: &Planner, ctx: &mut ExecCtx, task: ShardTas
 
 /// Last shard out: assemble the reply around the single buffer lease.
 fn finish(gather: &GatherState) {
+    // exec ends when the last shard's kernel work is done — i.e. now;
+    // the exec span therefore includes any shard-lane wait, which is
+    // exactly the number a capacity investigation needs
+    let exec_end = Instant::now();
     let out = gather.out.lock().unwrap().take().expect("gather buffer present");
     let reply = gather.reply.lock().unwrap().take().expect("reply slot present");
     let error = gather.error.lock().unwrap().take();
     let mut shard_workers = std::mem::take(&mut *gather.workers.lock().unwrap());
     shard_workers.sort_unstable();
     shard_workers.dedup();
-    let latency = gather.t0.elapsed().as_secs_f64();
+    let mut trace = gather.trace;
+    trace.span(Stage::Exec, gather.exec_start, exec_end);
     let metrics = &gather.metrics;
-    metrics.record_latency(latency);
     match error {
         Some(e) => {
+            let stages = trace.finish(TracePath::Sharded, Instant::now());
+            metrics.record_trace(&stages);
             metrics.errors.fetch_add(1, Ordering::Relaxed);
             drop(out); // lease returns to the pool
             let _ = reply.send(Err(anyhow!(e)));
@@ -412,16 +456,22 @@ fn finish(gather: &GatherState) {
             }
             .fetch_add(1, Ordering::Relaxed);
             let cache_hit = gather.cache_hits.load(Ordering::Relaxed) == gather.shards;
+            // gather span: reply assembly after the last shard landed
+            let end = Instant::now();
+            trace.span(Stage::Gather, exec_end, end);
+            let stages = trace.finish(TracePath::Sharded, end);
+            metrics.record_trace(&stages);
             let _ = reply.send(Ok(SpmmResult {
                 c: out,
                 algorithm,
                 path: ExecutionPath::CpuFallback,
                 bucket: None,
                 cache_hit,
-                latency_s: latency,
+                latency_s: stages.total_s,
                 shards: gather.shards,
                 shard_workers,
                 fused_width: 0,
+                stages,
             }));
         }
     }
@@ -452,11 +502,17 @@ mod tests {
         assert!(r.shard_workers.windows(2).all(|w| w[0] < w[1]));
         assert!(!r.shard_workers.is_empty());
         assert_close(&r.c, &spmm_reference(&a, &b, 16));
+        // the sharded reply carries a coherent stage breakdown
+        assert_eq!(r.stages.path, TracePath::Sharded);
+        assert!(r.stages.plan_s > 0.0 && r.stages.exec_s > 0.0);
+        assert!(r.stages.stage_sum_s() <= r.stages.total_s + 1e-9);
+        assert_eq!(r.stages.total_s, r.latency_s);
         let snap = eng.metrics().snapshot();
         assert_eq!(snap.completed, 1);
         assert_eq!(snap.sharded, 1);
         assert_eq!(snap.shards_executed, r.shards as u64);
         assert_eq!(snap.shard_count_last, r.shards as u64);
+        assert_eq!(snap.per_path[TracePath::Sharded.index()].count, 1);
     }
 
     #[test]

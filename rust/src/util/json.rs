@@ -1,11 +1,12 @@
-//! Minimal JSON parser for `artifacts/manifest.json`.
+//! Minimal JSON parser + serializer.
 //!
 //! The offline vendor set has no serde, so this is a small, strict
 //! recursive-descent parser covering the JSON subset the AOT manifest
-//! uses (objects, arrays, strings, integers/floats, bools, null).  It is
-//! not a general-purpose library — but it is fully tested, rejects
-//! malformed input, and keeps the manifest as the single source of truth
-//! between Python and Rust.
+//! uses (objects, arrays, strings, integers/floats, bools, null), plus a
+//! `Display`-based serializer (used by `MetricsSnapshot::to_json`) whose
+//! output the parser round-trips.  It is not a general-purpose library —
+//! but it is fully tested, rejects malformed input, and keeps the
+//! manifest as the single source of truth between Python and Rust.
 
 use std::collections::BTreeMap;
 
@@ -69,6 +70,68 @@ impl Json {
             _ => None,
         }
     }
+}
+
+/// Serializer: compact JSON (no whitespace) that [`Json::parse`]
+/// round-trips.  Non-finite numbers have no JSON representation and are
+/// emitted as `null`; finite floats use Rust's shortest round-trip
+/// `Display`, with a `.0` suffix dropped (integers print as integers).
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Json::Null => f.write_str("null"),
+            Json::Bool(b) => f.write_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if !n.is_finite() {
+                    f.write_str("null")
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
+                    write!(f, "{}", *n as i64)
+                } else {
+                    write!(f, "{n}")
+                }
+            }
+            Json::Str(s) => write_escaped(f, s),
+            Json::Arr(a) => {
+                f.write_str("[")?;
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                f.write_str("]")
+            }
+            Json::Obj(m) => {
+                f.write_str("{")?;
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write_escaped(f, k)?;
+                    write!(f, ":{v}")?;
+                }
+                f.write_str("}")
+            }
+        }
+    }
+}
+
+fn write_escaped(f: &mut std::fmt::Formatter<'_>, s: &str) -> std::fmt::Result {
+    f.write_str("\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => f.write_str("\\\"")?,
+            '\\' => f.write_str("\\\\")?,
+            '\n' => f.write_str("\\n")?,
+            '\t' => f.write_str("\\t")?,
+            '\r' => f.write_str("\\r")?,
+            '\u{8}' => f.write_str("\\b")?,
+            '\u{c}' => f.write_str("\\f")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    f.write_str("\"")
 }
 
 struct Parser<'a> {
@@ -305,6 +368,32 @@ mod tests {
                 .unwrap(),
             "héllo"
         );
+    }
+
+    #[test]
+    fn serializer_round_trips_through_parser() {
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Json::Str("a\"b\\c\nd\u{1}".into()));
+        m.insert("n".into(), Json::Num(12.0));
+        m.insert("x".into(), Json::Num(0.125));
+        m.insert(
+            "arr".into(),
+            Json::Arr(vec![Json::Null, Json::Bool(true), Json::Num(-3.0)]),
+        );
+        m.insert("empty_obj".into(), Json::Obj(BTreeMap::new()));
+        m.insert("empty_arr".into(), Json::Arr(vec![]));
+        let v = Json::Obj(m);
+        let text = v.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), v, "{text}");
+        // integers serialize without a fractional part
+        assert!(text.contains("\"n\":12,"), "{text}");
+    }
+
+    #[test]
+    fn serializer_maps_non_finite_to_null() {
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(2.5).to_string(), "2.5");
     }
 
     #[test]

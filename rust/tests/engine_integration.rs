@@ -29,6 +29,7 @@ fn concurrent_load_no_drops() {
             max_batch: 4,
             max_wait: Duration::from_millis(1),
             queue_capacity: 64,
+            ..Default::default()
         },
     )
     .unwrap();
@@ -88,6 +89,7 @@ fn throughput_scales_with_workers() {
                 max_batch: 1,
                 max_wait: Duration::from_micros(100),
                 queue_capacity: 512,
+                ..Default::default()
             },
         )
         .unwrap();

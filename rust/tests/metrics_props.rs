@@ -1,0 +1,294 @@
+//! Observability properties: the metrics sink under concurrent hammering
+//! (totals conserved, f64-bits gauges never torn, journal entries never
+//! half-written) and golden export coverage — every `MetricsSnapshot`
+//! field must appear in both `to_json()` and `to_prometheus()`, so a new
+//! metric cannot silently miss an exporter.
+
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use merge_spmm::coordinator::metrics::{RECENT_JOURNAL_CAP, SLOW_JOURNAL_CAP};
+use merge_spmm::coordinator::{Metrics, MetricsSnapshot, Stage, StageBreakdown, TracePath};
+use merge_spmm::plan::CacheStats;
+use merge_spmm::util::json::Json;
+
+/// A synthetic breakdown whose five stage durations all equal `d` and
+/// whose total is exactly `5 d`, with the path index encoded in the id's
+/// high bits — a reader can re-derive every field from `id` alone, so any
+/// torn journal write is detectable.
+fn breakdown(id: u64, path: TracePath, d: f64) -> StageBreakdown {
+    let now = Instant::now();
+    StageBreakdown {
+        id,
+        path,
+        queue_s: d,
+        plan_s: d,
+        pack_s: d,
+        exec_s: d,
+        gather_s: d,
+        total_s: 5.0 * d,
+        admitted: now,
+        plan_span: Some((now, now)),
+        pack_span: Some((now, now)),
+        exec_span: Some((now, now)),
+        gather_span: Some((now, now)),
+    }
+}
+
+/// The id-derived duration the writer used (bit-exact: both sides compute
+/// the same f64 expression).
+fn dur_for(id: u64) -> f64 {
+    1e-6 * ((id % 97) + 1) as f64
+}
+
+/// N writer threads hammer `record_trace` / `record_fused` (one path
+/// each) while gauge writers flip the f64-bits gauges between two exact
+/// values and a reader snapshots continuously.  Every snapshot must be
+/// self-consistent: path totals only grow, p50 ≤ p99 within one copy,
+/// gauges are one of the written values (never a torn bit hybrid), and
+/// every journal entry satisfies its id-derived invariants.
+#[test]
+fn prop_concurrent_recording_conserves_totals_and_never_tears() {
+    const PER_THREAD: u64 = 2000;
+    let metrics = Arc::new(Metrics::new());
+    // 1 µs — sub-µs would truncate to 0 in the µs-integer store and
+    // disable the ring; every synthetic total here is ≥ 5 µs
+    metrics.set_slow_threshold_s(1e-6);
+    let stop = Arc::new(AtomicBool::new(false));
+
+    std::thread::scope(|s| {
+        let writers: Vec<_> = TracePath::ALL
+            .into_iter()
+            .enumerate()
+            .map(|(t, path)| {
+                let m = Arc::clone(&metrics);
+                s.spawn(move || {
+                    for i in 0..PER_THREAD {
+                        let id = ((t as u64) << 32) | i;
+                        m.record_trace(&breakdown(id, path, dur_for(id)));
+                        if i % 64 == 0 {
+                            m.record_fused(4, 32);
+                        }
+                    }
+                })
+            })
+            .collect();
+
+        let gauge_writer = {
+            let m = Arc::clone(&metrics);
+            let st = Arc::clone(&stop);
+            s.spawn(move || {
+                let cache = CacheStats { hits: 1, misses: 2, evictions: 0, len: 3 };
+                let mut flip = false;
+                while !st.load(Ordering::Relaxed) {
+                    m.sync_plan_gauges(&cache, if flip { 1.25 } else { 2.5 });
+                    m.sync_shard_gauges(4, if flip { 1.0 } else { 2.0 });
+                    flip = !flip;
+                }
+            })
+        };
+
+        let reader = {
+            let m = Arc::clone(&metrics);
+            let st = Arc::clone(&stop);
+            s.spawn(move || {
+                let mut last_total = 0u64;
+                let mut snaps = 0u64;
+                while !st.load(Ordering::Relaxed) {
+                    let snap = m.snapshot();
+                    let total: u64 = snap.per_path.iter().map(|p| p.count).sum();
+                    assert!(total >= last_total, "path totals went backwards");
+                    last_total = total;
+                    // both percentiles derive from ONE histogram copy, so
+                    // they can never invert within a snapshot
+                    for p in snap.per_path.iter().chain(&snap.per_stage) {
+                        assert!(p.p50_s <= p.p99_s + 1e-12, "p50 > p99 in one snapshot");
+                    }
+                    // f64 gauges are stored as whole bit patterns: any read
+                    // sees a written value (or the constructor default),
+                    // never a torn hybrid
+                    assert!(
+                        [1.25, 2.5, merge_spmm::spmm::DEFAULT_THRESHOLD]
+                            .contains(&snap.tuner_threshold),
+                        "torn tuner_threshold gauge: {}",
+                        snap.tuner_threshold
+                    );
+                    assert!(
+                        [1.0, 2.0].contains(&snap.shard_imbalance_last),
+                        "torn shard_imbalance gauge: {}",
+                        snap.shard_imbalance_last
+                    );
+                    // journal entries are whole-struct writes under the
+                    // mutex: the id-derived identities must hold bit-exactly
+                    for e in snap.slow_requests.iter().chain(&snap.recent_requests) {
+                        let d = dur_for(e.id);
+                        assert_eq!(e.queue_s.to_bits(), d.to_bits(), "torn journal entry");
+                        assert_eq!(e.total_s.to_bits(), (5.0 * d).to_bits(), "torn journal entry");
+                        assert_eq!(e.path.index() as u64, e.id >> 32, "entry path/id mismatch");
+                    }
+                    snaps += 1;
+                }
+                snaps
+            })
+        };
+
+        for w in writers {
+            w.join().unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        gauge_writer.join().unwrap();
+        assert!(reader.join().unwrap() > 0, "reader never snapshotted");
+    });
+
+    // conservation: every recorded trace landed in exactly one path bucket
+    // and one bucket of every stage histogram
+    let snap = metrics.snapshot();
+    for p in TracePath::ALL {
+        assert_eq!(snap.per_path[p.index()].count, PER_THREAD, "path {} count", p.name());
+    }
+    for st in Stage::ALL {
+        assert_eq!(
+            snap.per_stage[st.index()].count,
+            5 * PER_THREAD,
+            "stage {} count",
+            st.name()
+        );
+    }
+    // fused counters: 5 threads × ⌈2000/64⌉ batches of 4 riders, width 32
+    assert_eq!(snap.fused_batches, 5 * 32);
+    assert_eq!(snap.fused_requests, 5 * 32 * 4);
+    assert_eq!(snap.fused_width_mean, 32.0);
+    // rings at capacity, never beyond
+    assert_eq!(snap.slow_requests.len(), SLOW_JOURNAL_CAP);
+    assert_eq!(snap.recent_requests.len(), RECENT_JOURNAL_CAP);
+}
+
+/// The mean's denominator is the histogram's own total — not `completed`,
+/// which counts different events (regression test for the old mismatch
+/// where a request could complete without recording a latency, skewing
+/// the mean toward zero).
+#[test]
+fn mean_latency_uses_histogram_total_as_denominator() {
+    let m = Metrics::new();
+    m.completed.store(100, Ordering::Relaxed); // unrelated event count
+    for _ in 0..4 {
+        m.record_latency(0.01);
+    }
+    let snap = m.snapshot();
+    assert_eq!(snap.completed, 100);
+    assert_eq!(snap.per_path[TracePath::Solo.index()].count, 4);
+    // sum is tracked in integer µs: 4 × 10000µs / 4 = 0.01s exactly
+    assert!(
+        (snap.mean_latency_s - 0.01).abs() < 1e-9,
+        "mean must be sum/total over the histogram, got {}",
+        snap.mean_latency_s
+    );
+    // interpolated percentile lands inside the containing bucket
+    assert!(snap.p50_s >= 3e-3 && snap.p50_s <= 3e-2, "p50 {} outside bucket", snap.p50_s);
+}
+
+/// A metrics sink with every field exercised: all five paths traced, a
+/// fused pass, plan/shard gauges synced, and a slow threshold low enough
+/// that every trace journals.
+fn populated() -> Metrics {
+    let m = Metrics::new();
+    m.set_slow_threshold_s(1e-6); // 1 µs: every 100 µs+ synthetic trace journals
+    for (i, path) in TracePath::ALL.into_iter().enumerate() {
+        m.record_trace(&breakdown(i as u64, path, 1e-4 * (i + 1) as f64));
+    }
+    m.record_fused(4, 32);
+    m.sync_plan_gauges(&CacheStats { hits: 3, misses: 2, evictions: 1, len: 2 }, 9.35);
+    m.sync_shard_gauges(4, 1.5);
+    m
+}
+
+/// `to_json()` must parse with the crate's own parser and its top-level
+/// key set must equal `MetricsSnapshot::FIELDS` exactly — both directions,
+/// so a new snapshot field without an export (or a stale export) fails.
+#[test]
+fn golden_json_export_covers_every_snapshot_field() {
+    let snap = populated().snapshot();
+    let parsed = Json::parse(&snap.to_json()).expect("to_json must be parseable");
+    let Json::Obj(map) = &parsed else { panic!("to_json top level must be an object") };
+    let got: BTreeSet<&str> = map.keys().map(String::as_str).collect();
+    let want: BTreeSet<&str> = MetricsSnapshot::FIELDS.iter().copied().collect();
+    assert_eq!(got, want, "to_json keys must match MetricsSnapshot::FIELDS exactly");
+
+    // nested digests are keyed by path/stage name and carry the full shape
+    for p in TracePath::ALL {
+        let digest = parsed
+            .get("per_path")
+            .and_then(|v| v.get(p.name()))
+            .unwrap_or_else(|| panic!("per_path missing {}", p.name()));
+        for k in ["count", "mean_s", "p50_s", "p99_s", "buckets", "sum_us"] {
+            assert!(digest.get(k).is_some(), "per_path.{} missing {k}", p.name());
+        }
+        assert_eq!(
+            digest.get("count").and_then(Json::as_f64),
+            Some(1.0),
+            "per_path.{} count",
+            p.name()
+        );
+    }
+    for st in Stage::ALL {
+        let digest = parsed
+            .get("per_stage")
+            .and_then(|v| v.get(st.name()))
+            .unwrap_or_else(|| panic!("per_stage missing {}", st.name()));
+        assert_eq!(digest.get("count").and_then(Json::as_f64), Some(5.0));
+    }
+    // journal arrays carry whole entries
+    let slow = parsed.get("slow_requests").and_then(Json::as_arr).expect("slow_requests array");
+    assert_eq!(slow.len(), TracePath::COUNT);
+    for e in slow {
+        for k in
+            ["id", "path", "queue_s", "plan_s", "pack_s", "exec_s", "gather_s", "total_s", "unix_us"]
+        {
+            assert!(e.get(k).is_some(), "journal entry missing {k}");
+        }
+    }
+}
+
+/// Every `MetricsSnapshot::FIELDS` entry must surface in the Prometheus
+/// exposition under its mapped family name (scalars as `spmm_<name>`,
+/// the digests as labelled histogram series, the journals as ring-depth
+/// gauges).
+#[test]
+fn golden_prometheus_export_covers_every_snapshot_field() {
+    let text = populated().snapshot().to_prometheus();
+    let markers = |field: &str| -> Vec<String> {
+        match field {
+            "p50_s" => vec!["spmm_p50_seconds ".into()],
+            "p99_s" => vec!["spmm_p99_seconds ".into()],
+            "mean_latency_s" => vec!["spmm_mean_latency_seconds ".into()],
+            "slow_threshold_s" => vec!["spmm_slow_threshold_seconds ".into()],
+            "slow_requests" => vec!["spmm_slow_journal_entries ".into()],
+            "recent_requests" => vec!["spmm_recent_journal_entries ".into()],
+            "per_path" => TracePath::ALL
+                .iter()
+                .map(|p| format!("spmm_request_latency_seconds_bucket{{path=\"{}\"", p.name()))
+                .collect(),
+            "per_stage" => Stage::ALL
+                .iter()
+                .map(|s| format!("spmm_stage_latency_seconds_bucket{{stage=\"{}\"", s.name()))
+                .collect(),
+            other => vec![format!("spmm_{other} ")],
+        }
+    };
+    for field in MetricsSnapshot::FIELDS {
+        for marker in markers(field) {
+            assert!(
+                text.contains(&marker),
+                "prometheus exposition missing {marker:?} for snapshot field {field:?}"
+            );
+        }
+    }
+    // histogram series are complete: +Inf bucket, _sum, _count per label
+    for p in TracePath::ALL {
+        let name = p.name();
+        assert!(text.contains(&format!("spmm_request_latency_seconds_bucket{{path=\"{name}\",le=\"+Inf\"}}")));
+        assert!(text.contains(&format!("spmm_request_latency_seconds_count{{path=\"{name}\"}} 1")));
+    }
+}

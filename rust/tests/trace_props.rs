@@ -1,0 +1,200 @@
+//! Trace-coherence properties over the real serve paths.  Every result's
+//! stage breakdown must be internally consistent — non-negative stage
+//! durations summing to no more than the end-to-end wall time, with
+//! `latency_s` equal to the trace total — and the per-path histograms
+//! must agree with the paths the results actually report.  Fused riders
+//! additionally share the batch's span endpoints while keeping their own
+//! admit instants.  (The degraded path needs the `PANIC_N` fault
+//! injection, which is `cfg(test)`-only, so it is covered by the
+//! `workers` unit tests instead.)
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use merge_spmm::coordinator::{
+    EngineConfig, Server, ServerConfig, SpmmEngine, SpmmResult, Stage, TracePath,
+};
+use merge_spmm::formats::Csr;
+use merge_spmm::gen;
+use merge_spmm::shard::ShardPolicy;
+
+fn cpu_cfg() -> EngineConfig {
+    EngineConfig { artifacts_dir: None, cpu_workers: 2, ..Default::default() }
+}
+
+fn assert_coherent(r: &SpmmResult) {
+    let s = &r.stages;
+    for (name, d) in [
+        ("queue", s.queue_s),
+        ("plan", s.plan_s),
+        ("pack", s.pack_s),
+        ("exec", s.exec_s),
+        ("gather", s.gather_s),
+    ] {
+        assert!(d >= 0.0, "{name} stage must be non-negative, got {d}");
+    }
+    assert!(
+        s.stage_sum_s() <= s.total_s + 1e-9,
+        "stage sum {} exceeds end-to-end total {}",
+        s.stage_sum_s(),
+        s.total_s
+    );
+    assert_eq!(
+        s.total_s.to_bits(),
+        r.latency_s.to_bits(),
+        "latency_s must BE the trace total, not a second measurement"
+    );
+}
+
+/// Direct engine calls: solo and probe dispatches stamp queue/plan/exec
+/// and the per-path and per-stage histograms count exactly what the
+/// results report.
+#[test]
+fn prop_solo_and_probe_stages_coherent() {
+    let eng = SpmmEngine::cpu_only(9.35, 2);
+    let b = gen::dense_matrix(400, 8, 0xE01);
+    let solo = Csr::random(400, 400, 4.0, 0xE02); // d = 4: outside the probe band
+    let probe = gen::uniform_rows(400, 9, Some(400), 0xE03); // d ≈ 9: boundary
+
+    for _ in 0..3 {
+        let r = eng.spmm(&solo, &b, 8).unwrap();
+        assert_eq!(r.stages.path, TracePath::Solo);
+        assert_coherent(&r);
+        assert!(r.stages.exec_s > 0.0, "kernel time cannot be zero");
+    }
+    let r = eng.spmm(&probe, &b, 8).unwrap();
+    assert_eq!(r.stages.path, TracePath::Probe, "first boundary request must A/B-probe");
+    assert_coherent(&r);
+
+    let snap = eng.metrics.snapshot();
+    assert_eq!(snap.per_path[TracePath::Solo.index()].count, 3);
+    assert_eq!(snap.per_path[TracePath::Probe.index()].count, 1);
+    // solo dispatch stamps queue/plan/exec; pack and gather belong to the
+    // fused/sharded paths and must NOT be recorded as zeros here
+    assert_eq!(snap.per_stage[Stage::Queue.index()].count, 4);
+    assert_eq!(snap.per_stage[Stage::Plan.index()].count, 4);
+    assert_eq!(snap.per_stage[Stage::Exec.index()].count, 4);
+    assert_eq!(snap.per_stage[Stage::Pack.index()].count, 0);
+    assert_eq!(snap.per_stage[Stage::Gather.index()].count, 0);
+}
+
+/// Through the server, the per-path histograms must count exactly the
+/// paths the replies report, and with a 1ns slow threshold every request
+/// journals — each entry coherent on its own.
+#[test]
+fn prop_server_histograms_match_observed_paths() {
+    let server = Server::start(
+        cpu_cfg(),
+        ServerConfig {
+            max_batch: 1, // no co-batching: replies are solo or probe
+            slow_threshold: Duration::from_micros(1), // sub-µs truncates to "disabled"
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mats: Vec<Arc<Csr>> = (0..4)
+        .map(|i| Arc::new(Csr::random(200 + i * 40, 300, 3.0 + i as f64 * 3.0, 0xE10 + i as u64)))
+        .collect();
+    let b = Arc::new(gen::dense_matrix(300, 8, 0xE14));
+
+    let mut counts = [0u64; TracePath::COUNT];
+    for i in 0..20 {
+        let r = server.submit_blocking(Arc::clone(&mats[i % mats.len()]), Arc::clone(&b), 8).unwrap();
+        assert_coherent(&r);
+        counts[r.stages.path.index()] += 1;
+    }
+    let snap = server.shutdown();
+    for p in TracePath::ALL {
+        assert_eq!(
+            snap.per_path[p.index()].count,
+            counts[p.index()],
+            "histogram vs observed replies disagree on path {}",
+            p.name()
+        );
+    }
+    // every request journalled; the recent ring keeps the newest whole
+    assert!(!snap.recent_requests.is_empty());
+    assert!(!snap.slow_requests.is_empty());
+    for e in snap.slow_requests.iter().chain(&snap.recent_requests) {
+        let sum = e.queue_s + e.plan_s + e.pack_s + e.exec_s + e.gather_s;
+        assert!(sum <= e.total_s + 1e-9, "journal entry stage sum exceeds total");
+    }
+}
+
+/// Co-batched riders over one `Arc`-identical A execute as ONE wide pass:
+/// all four report the Fused path with *identical* plan/pack/exec/gather
+/// span endpoints (the pass is the batch's work, done once), while each
+/// keeps its own admit instant — so queue waits stay per-request.
+#[test]
+fn prop_fused_riders_share_spans_keep_own_queue_waits() {
+    let server = Server::start(
+        cpu_cfg(),
+        ServerConfig {
+            max_batch: 4,
+            max_wait: Duration::from_secs(60), // flush on the 4th rider, deterministically
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let a = Arc::new(Csr::random(250, 250, 4.0, 0xE21));
+    let b = Arc::new(gen::dense_matrix(250, 8, 0xE22));
+    let handles: Vec<_> = (0..4).map(|_| server.submit(Arc::clone(&a), Arc::clone(&b), 8)).collect();
+    let results: Vec<SpmmResult> =
+        handles.iter().map(|h| h.recv().unwrap().unwrap()).collect();
+
+    for r in &results {
+        assert_eq!(r.stages.path, TracePath::Fused);
+        assert_eq!(r.fused_width, 32, "4 riders × n=8");
+        assert_coherent(r);
+        assert!(r.stages.pack_span.is_some(), "fused path must stamp pack");
+        assert!(r.stages.gather_span.is_some(), "fused path must stamp gather");
+    }
+    let first = &results[0].stages;
+    for r in &results[1..] {
+        assert_eq!(r.stages.plan_span, first.plan_span, "riders must share the batch plan span");
+        assert_eq!(r.stages.pack_span, first.pack_span, "riders must share the batch pack span");
+        assert_eq!(r.stages.exec_span, first.exec_span, "riders must share the batch exec span");
+        assert_eq!(
+            r.stages.gather_span, first.gather_span,
+            "riders must share the batch gather span"
+        );
+    }
+    for i in 0..results.len() {
+        for j in i + 1..results.len() {
+            assert_ne!(
+                results[i].stages.admitted, results[j].stages.admitted,
+                "riders {i} and {j} must keep distinct admit instants"
+            );
+        }
+    }
+    let snap = server.shutdown();
+    assert_eq!(snap.per_path[TracePath::Fused.index()].count, 4);
+    assert_eq!(snap.fused_batches, 1);
+}
+
+/// Sharded scatter-gather requests report the Sharded path with all five
+/// stages stamped: plan (cuts + per-shard plans), pack (lease + split),
+/// exec (enqueue → last shard done), gather (reply assembly).
+#[test]
+fn prop_sharded_stages_coherent() {
+    let server = Server::start(
+        EngineConfig { shard: ShardPolicy::auto(), ..cpu_cfg() },
+        ServerConfig { workers: 3, ..Default::default() },
+    )
+    .unwrap();
+    let big = Arc::new(gen::uniform_rows(4000, 24, Some(2048), 0xE31));
+    let b = Arc::new(gen::dense_matrix(2048, 16, 0xE32));
+    for _ in 0..3 {
+        let r = server.submit_blocking(Arc::clone(&big), Arc::clone(&b), 16).unwrap();
+        assert!(r.shards >= 2, "large request must shard, got {}", r.shards);
+        assert_eq!(r.stages.path, TracePath::Sharded);
+        assert_coherent(&r);
+        assert!(r.stages.plan_s > 0.0, "shard planning cannot be free");
+        assert!(r.stages.exec_s > 0.0, "shard execution cannot be free");
+        assert!(r.stages.pack_span.is_some(), "sharded path must stamp pack");
+        assert!(r.stages.gather_span.is_some(), "sharded path must stamp gather");
+    }
+    let snap = server.shutdown();
+    assert_eq!(snap.per_path[TracePath::Sharded.index()].count, 3);
+    assert_eq!(snap.sharded, 3);
+}
