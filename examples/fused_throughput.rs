@@ -65,7 +65,7 @@ fn main() -> anyhow::Result<()> {
         let t0 = Instant::now();
         for _ in 0..rounds {
             let handles: Vec<_> = (0..k)
-                .map(|_| server.submit(Arc::clone(&a), Arc::clone(&b), n))
+                .map(|_| server.submit(Arc::clone(&a), Arc::clone(&b), n).expect("submit"))
                 .collect();
             for h in handles {
                 let r = h.recv()??;

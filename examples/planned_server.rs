@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
         let handles: Vec<_> = (0..requests)
             .map(|_| {
                 let a = Arc::clone(&mats[rng.below(mats.len())]);
-                server.submit(a, Arc::clone(&b), 32)
+                server.submit(a, Arc::clone(&b), 32).expect("submit")
             })
             .collect();
         for h in handles {

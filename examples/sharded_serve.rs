@@ -122,9 +122,9 @@ fn main() -> anyhow::Result<()> {
         let handles: Vec<_> = (0..mixed_reps)
             .map(|i| {
                 if i % 4 == 0 {
-                    server.submit(Arc::clone(&a), Arc::clone(&b), n)
+                    server.submit(Arc::clone(&a), Arc::clone(&b), n).expect("submit")
                 } else {
-                    server.submit(Arc::clone(&small), Arc::clone(&small_b), n)
+                    server.submit(Arc::clone(&small), Arc::clone(&small_b), n).expect("submit")
                 }
             })
             .collect();

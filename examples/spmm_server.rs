@@ -67,17 +67,17 @@ fn main() -> anyhow::Result<()> {
                 Arc::clone(&short[rng.below(short.len())]),
                 Arc::clone(&b900),
                 64,
-            ),
+            ).expect("submit"),
             4..=7 => server.submit(
                 Arc::clone(&long[rng.below(long.len())]),
                 Arc::clone(&b900),
                 64,
-            ),
+            ).expect("submit"),
             _ => server.submit(
                 Arc::clone(&oversize[rng.below(oversize.len())]),
                 Arc::clone(&b5000),
                 64,
-            ),
+            ).expect("submit"),
         })
         .collect();
 

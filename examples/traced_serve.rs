@@ -89,8 +89,10 @@ fn main() -> anyhow::Result<()> {
     let mut served = 0u64;
     for _ in 0..rounds {
         let fused: Vec<_> =
-            (0..4).map(|_| server.submit(Arc::clone(&shared), Arc::clone(&b), n)).collect();
-        let lone = server.submit(Arc::clone(&solo), Arc::clone(&b), n);
+            (0..4)
+                .map(|_| server.submit(Arc::clone(&shared), Arc::clone(&b), n).expect("submit"))
+                .collect();
+        let lone = server.submit(Arc::clone(&solo), Arc::clone(&b), n)?;
         for h in fused {
             let r = h.recv()??;
             std::hint::black_box(r.stages.total_s);

@@ -43,7 +43,7 @@ fn run_server(workers: usize, max_batch: usize, requests: usize) {
     let handles: Vec<_> = (0..requests)
         .map(|i| {
             let m = if i % 2 == 0 { &a } else { &long };
-            server.submit(Arc::clone(m), Arc::clone(&b), 32)
+            server.submit(Arc::clone(m), Arc::clone(&b), 32).expect("submit")
         })
         .collect();
     for h in handles {
@@ -221,7 +221,10 @@ fn plan_cold_vs_warm(requests: usize) {
     let pass = |label: &str| {
         let t0 = Instant::now();
         let handles: Vec<_> = (0..requests)
-            .map(|i| server.submit(Arc::clone(&mats[i % mats.len()]), Arc::clone(&b), 32))
+            .map(|i| {
+                let a = Arc::clone(&mats[i % mats.len()]);
+                server.submit(a, Arc::clone(&b), 32).expect("submit")
+            })
             .collect();
         for h in handles {
             let _ = h.recv().unwrap();

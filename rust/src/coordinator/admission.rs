@@ -1,0 +1,342 @@
+//! Admission control primitives: deadlines, cancellation, and CoDel shedding.
+//!
+//! Every request carries a [`Deadline`] (possibly unbounded) and a
+//! [`CancelToken`] from the moment it enters `Router::submit`. Each stage
+//! boundary — router dispatch, queue pop, fused pack, executor entry, shard
+//! scatter — asks "can this request still finish in time, and does anyone
+//! still want the answer?" before spending work on it. Requests that fail
+//! the check are *shed*: they get a terminal error reply tagged with a
+//! [`ShedReason`], their trace records the [`ShedPoint`], and the matching
+//! metrics counter is bumped — exactly one terminal outcome per request,
+//! never silent disappearance.
+//!
+//! Queue overload is handled by a simplified CoDel controller per lane
+//! ([`CodelState`]): when the *minimum* queue sojourn stays above
+//! [`CODEL_TARGET`] for a full [`CODEL_INTERVAL`], the lane enters dropping
+//! mode and each subsequent pop sheds one victim — newest-past-deadline
+//! first, then newest — until sojourn falls back under target. Shedding
+//! newest-first under overload preserves the oldest (most-invested) work,
+//! and preferring already-dead requests makes the drop free.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::engine::SpmmResult;
+
+/// CoDel sojourn target: lane min-sojourn above this is "bad".
+pub const CODEL_TARGET: Duration = Duration::from_millis(5);
+/// CoDel interval: how long min-sojourn must stay above target before
+/// the lane starts dropping.
+pub const CODEL_INTERVAL: Duration = Duration::from_millis(100);
+
+/// An absolute completion budget for one request. `Deadline::none()` means
+/// "no budget" and never expires; a `Copy` wrapper so it threads through
+/// queues and closures for free.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Deadline(Option<Instant>);
+
+impl Deadline {
+    /// No budget: never expires.
+    pub fn none() -> Self {
+        Deadline(None)
+    }
+
+    /// Expires `budget` from now.
+    pub fn within(budget: Duration) -> Self {
+        Deadline(Some(Instant::now() + budget))
+    }
+
+    /// Expires at an absolute instant.
+    pub fn at(when: Instant) -> Self {
+        Deadline(Some(when))
+    }
+
+    /// True once `now` has reached the budget. Unbounded deadlines never
+    /// expire.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.0.is_some_and(|d| now >= d)
+    }
+
+    /// Time left before expiry; `None` for unbounded deadlines, zero when
+    /// already expired.
+    pub fn remaining(&self, now: Instant) -> Option<Duration> {
+        self.0.map(|d| d.saturating_duration_since(now))
+    }
+}
+
+/// Shared cancellation flag between a [`RequestHandle`] and the in-flight
+/// request. Cancellation is advisory: stages check it at boundaries; work
+/// already running completes (its result is simply discarded).
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> Self {
+        CancelToken(Arc::new(AtomicBool::new(false)))
+    }
+
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+}
+
+/// Why a request was shed instead of executed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The request's own deadline expired before execution started.
+    DeadlineExpired,
+    /// The lane was in CoDel dropping mode and this was the chosen victim.
+    CodelOverload,
+    /// The client cancelled (explicitly or by dropping the handle).
+    Cancelled,
+}
+
+impl ShedReason {
+    /// Stable label used in shed error messages and traces. Tests classify
+    /// terminal outcomes by substring-matching `"shed ({label})"`.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShedReason::DeadlineExpired => "deadline-expired",
+            ShedReason::CodelOverload => "codel-overload",
+            ShedReason::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// Where in the pipeline the shed decision was made.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedPoint {
+    /// Router loop, before planning/bucketing.
+    Router,
+    /// `WorkQueue` pop (CoDel victim selection).
+    Queue,
+    /// Fused pack time (dead rider excluded from the wide pass).
+    Pack,
+    /// Executor entry, just before the kernel would run.
+    Exec,
+    /// Sharded scatter/gather path.
+    Shard,
+}
+
+impl ShedPoint {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShedPoint::Router => "router",
+            ShedPoint::Queue => "queue",
+            ShedPoint::Pack => "pack",
+            ShedPoint::Exec => "exec",
+            ShedPoint::Shard => "shard",
+        }
+    }
+}
+
+/// Typed error from `Router::submit`: the only way submission fails is the
+/// router being gone (shut down or its ingress closed).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The server has shut down (or its router thread exited); the ingress
+    /// channel is closed.
+    Shutdown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Shutdown => write!(f, "server shut down: ingress channel closed"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Client-side handle for one submitted request: a reply receiver plus a
+/// cancel token. Dropping the handle cancels the request (nobody is left to
+/// read the answer), so abandoned work is skipped at the next stage
+/// boundary instead of executed.
+pub struct RequestHandle {
+    rx: Receiver<Result<SpmmResult>>,
+    token: CancelToken,
+    id: u64,
+}
+
+impl RequestHandle {
+    pub(crate) fn new(rx: Receiver<Result<SpmmResult>>, token: CancelToken, id: u64) -> Self {
+        RequestHandle { rx, token, id }
+    }
+
+    /// Router-assigned request id (matches trace/journal ids).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Cancel the request. In-flight work finishes but is discarded; queued
+    /// work is shed with `ShedReason::Cancelled` at the next boundary.
+    pub fn cancel(&self) {
+        self.token.cancel();
+    }
+
+    /// Block for the terminal outcome.
+    pub fn recv(&self) -> std::result::Result<Result<SpmmResult>, std::sync::mpsc::RecvError> {
+        self.rx.recv()
+    }
+
+    pub fn try_recv(&self) -> std::result::Result<Result<SpmmResult>, TryRecvError> {
+        self.rx.try_recv()
+    }
+
+    pub fn recv_timeout(
+        &self,
+        timeout: Duration,
+    ) -> std::result::Result<Result<SpmmResult>, RecvTimeoutError> {
+        self.rx.recv_timeout(timeout)
+    }
+}
+
+impl Drop for RequestHandle {
+    fn drop(&mut self) {
+        // An abandoned handle means nobody will read the reply: flag the
+        // request so queued stages skip it. try_recv distinguishes "reply
+        // already delivered" (terminal outcome exists; cancelling now would
+        // be a no-op anyway) from "still pending".
+        if matches!(self.rx.try_recv(), Err(TryRecvError::Empty)) {
+            self.token.cancel();
+        }
+    }
+}
+
+/// Simplified CoDel controller for one queue lane.
+///
+/// Classic CoDel tracks the minimum sojourn over an interval and drops from
+/// the head with an increasing rate. This variant keeps the load-shedding
+/// essence with queue-friendly mechanics: `observe()` is fed the sojourn of
+/// every popped item; once sojourns have stayed above [`CODEL_TARGET`]
+/// continuously for [`CODEL_INTERVAL`], the lane enters dropping mode and
+/// the caller sheds one victim per pop until a below-target sojourn resets
+/// the controller.
+#[derive(Debug)]
+pub struct CodelState {
+    target: Duration,
+    interval: Duration,
+    above_since: Option<Instant>,
+    dropping: bool,
+}
+
+impl CodelState {
+    pub fn new(target: Duration, interval: Duration) -> Self {
+        CodelState { target, interval, above_since: None, dropping: false }
+    }
+
+    /// Record one popped item's sojourn. Returns true when the lane is in
+    /// dropping mode (the caller should shed one victim).
+    pub fn observe(&mut self, sojourn: Duration, now: Instant) -> bool {
+        if sojourn < self.target {
+            self.above_since = None;
+            self.dropping = false;
+            return false;
+        }
+        let since = *self.above_since.get_or_insert(now);
+        if now.saturating_duration_since(since) >= self.interval {
+            self.dropping = true;
+        }
+        self.dropping
+    }
+
+    pub fn is_dropping(&self) -> bool {
+        self.dropping
+    }
+}
+
+impl Default for CodelState {
+    fn default() -> Self {
+        CodelState::new(CODEL_TARGET, CODEL_INTERVAL)
+    }
+}
+
+/// The terminal error a shed request's reply carries. The `shed ({label})`
+/// prefix is the stable classification key for clients and tests.
+pub(crate) fn shed_error(reason: ShedReason, id: u64) -> anyhow::Error {
+    anyhow!(
+        "shed ({}): request {} dropped by admission control before execution",
+        reason.label(),
+        id
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unbounded_deadline_never_expires() {
+        let d = Deadline::none();
+        assert!(!d.expired(Instant::now() + Duration::from_secs(3600)));
+        assert_eq!(d.remaining(Instant::now()), None);
+    }
+
+    #[test]
+    fn bounded_deadline_expires_and_reports_remaining() {
+        let now = Instant::now();
+        let d = Deadline::at(now + Duration::from_millis(50));
+        assert!(!d.expired(now));
+        assert!(d.remaining(now).unwrap() <= Duration::from_millis(50));
+        assert!(d.expired(now + Duration::from_millis(50)));
+        assert_eq!(d.remaining(now + Duration::from_secs(1)), Some(Duration::ZERO));
+    }
+
+    #[test]
+    fn cancel_token_is_shared_between_clones() {
+        let t = CancelToken::new();
+        let t2 = t.clone();
+        assert!(!t.is_cancelled());
+        t2.cancel();
+        assert!(t.is_cancelled());
+    }
+
+    #[test]
+    fn codel_needs_a_full_interval_above_target_before_dropping() {
+        let target = Duration::from_millis(5);
+        let interval = Duration::from_millis(100);
+        let mut c = CodelState::new(target, interval);
+        let t0 = Instant::now();
+        let bad = Duration::from_millis(20);
+
+        // First bad observation starts the clock but does not drop.
+        assert!(!c.observe(bad, t0));
+        // Still inside the interval: no drop.
+        assert!(!c.observe(bad, t0 + Duration::from_millis(50)));
+        // A full interval continuously above target: dropping begins.
+        assert!(c.observe(bad, t0 + interval));
+        assert!(c.is_dropping());
+        // Stays dropping while sojourns remain bad.
+        assert!(c.observe(bad, t0 + interval + Duration::from_millis(10)));
+        // One good sojourn resets everything.
+        assert!(!c.observe(Duration::from_millis(1), t0 + interval + Duration::from_millis(20)));
+        assert!(!c.is_dropping());
+        // And the clock restarts from scratch.
+        assert!(!c.observe(bad, t0 + interval + Duration::from_millis(30)));
+    }
+
+    #[test]
+    fn shed_error_carries_a_stable_prefix() {
+        let e = shed_error(ShedReason::DeadlineExpired, 7);
+        let msg = format!("{e}");
+        assert!(msg.starts_with("shed (deadline-expired): request 7"), "{msg}");
+        assert!(format!("{}", shed_error(ShedReason::Cancelled, 1)).contains("shed (cancelled)"));
+        let codel = format!("{}", shed_error(ShedReason::CodelOverload, 2));
+        assert!(codel.contains("shed (codel-overload)"));
+    }
+
+    #[test]
+    fn submit_error_displays_helpfully() {
+        let msg = format!("{}", SubmitError::Shutdown);
+        assert!(msg.contains("shut down"), "{msg}");
+    }
+}

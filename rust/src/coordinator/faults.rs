@@ -1,0 +1,160 @@
+//! Deterministic fault injection for chaos testing (feature `faults`).
+//!
+//! Generalizes the old `cfg(test)` `PANIC_N` sentinel into a first-class,
+//! seeded injection layer: a process-global [`FaultPlan`] decides — purely
+//! from `(seed, site, request id)` via a splitmix64-style mixer, so the
+//! decision is independent of thread interleaving — whether a given
+//! request panics at a given [`FaultSite`], is delayed there, or whether
+//! the work queue's capacity is squeezed to simulate queue-full
+//! backpressure. The chaos property suite (`tests/chaos_props.rs`)
+//! installs a plan, floods the server past capacity with tight deadlines,
+//! and proves every request still reaches exactly one terminal outcome.
+//!
+//! The module is compiled only under `--features faults` and every hook
+//! sits inside an existing `catch_unwind` region, so the default build
+//! carries zero overhead and injected panics exercise the *same* recovery
+//! paths real panics would.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Pipeline location where a fault can fire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Per-request executor body (`run_batch`).
+    Exec,
+    /// Fused wide pass (`run_fused`), faulting the whole batch.
+    Fused,
+    /// Shard kernel body (`execute_shard`).
+    Shard,
+    /// Fused pack/staging step (delay only — panics here are covered by
+    /// `Fused`).
+    Pack,
+}
+
+impl FaultSite {
+    fn salt(&self) -> u64 {
+        match self {
+            FaultSite::Exec => 0x45584543,
+            FaultSite::Fused => 0x46555345,
+            FaultSite::Shard => 0x53484152,
+            FaultSite::Pack => 0x5041434b,
+        }
+    }
+}
+
+/// A deterministic fault schedule. `*_one_in == 0` disables that fault
+/// class; `squeeze_queue_to == 0` leaves queue capacity alone.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPlan {
+    /// Seed mixed into every decision.
+    pub seed: u64,
+    /// Panic at a site when `mix(seed, site, id) % panic_one_in == 0`.
+    pub panic_one_in: u64,
+    /// Delay at a site when `mix(seed, site, id) % delay_one_in == 0`.
+    pub delay_one_in: u64,
+    /// How long an injected delay sleeps.
+    pub delay: Duration,
+    /// Clamp `WorkQueue` capacity to this many items (0 = untouched),
+    /// forcing queue-full blocking/backpressure under modest load.
+    pub squeeze_queue_to: usize,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0,
+            panic_one_in: 0,
+            delay_one_in: 0,
+            delay: Duration::from_millis(1),
+            squeeze_queue_to: 0,
+        }
+    }
+}
+
+static PLAN: Mutex<Option<FaultPlan>> = Mutex::new(None);
+
+/// Install a fault plan process-wide. Replaces any previous plan.
+pub fn install(plan: FaultPlan) {
+    *PLAN.lock().unwrap_or_else(|p| p.into_inner()) = Some(plan);
+}
+
+/// Remove the active plan; all hooks become no-ops again.
+pub fn clear() {
+    *PLAN.lock().unwrap_or_else(|p| p.into_inner()) = None;
+}
+
+fn active() -> Option<FaultPlan> {
+    *PLAN.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// splitmix64-style finalizer over (seed, site, id): cheap, well-mixed,
+/// and — critically — a pure function of its inputs, so a given request
+/// faults (or not) identically on every run regardless of scheduling.
+fn mix(seed: u64, site: FaultSite, id: u64) -> u64 {
+    let mut z = seed
+        .wrapping_add(site.salt().wrapping_mul(0x9e3779b97f4a7c15))
+        .wrapping_add(id.wrapping_mul(0xbf58476d1ce4e5b9));
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// Panic at `site` for request `id` if the plan says so. Must only be
+/// called inside a `catch_unwind` region.
+pub fn maybe_panic(site: FaultSite, id: u64) {
+    if let Some(p) = active() {
+        if p.panic_one_in > 0 && mix(p.seed, site, id) % p.panic_one_in == 0 {
+            panic!("injected fault: {:?} panic for request {}", site, id);
+        }
+    }
+}
+
+/// Sleep at `site` for request `id` if the plan says so.
+pub fn maybe_delay(site: FaultSite, id: u64) {
+    if let Some(p) = active() {
+        // Salt the delay decision differently from the panic decision so
+        // the two fault classes hit independent request subsets.
+        if p.delay_one_in > 0 && mix(p.seed ^ 0xde1a, site, id) % p.delay_one_in == 0 {
+            std::thread::sleep(p.delay);
+        }
+    }
+}
+
+/// Clamp a queue capacity per the active plan (identity when no plan or
+/// `squeeze_queue_to == 0`).
+pub fn squeeze_capacity(cap: usize) -> usize {
+    match active() {
+        Some(p) if p.squeeze_queue_to > 0 => cap.min(p.squeeze_queue_to),
+        _ => cap,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decisions_are_deterministic_in_seed_site_and_id() {
+        let a = mix(42, FaultSite::Exec, 7);
+        let b = mix(42, FaultSite::Exec, 7);
+        assert_eq!(a, b);
+        assert_ne!(mix(42, FaultSite::Exec, 7), mix(42, FaultSite::Shard, 7));
+        assert_ne!(mix(42, FaultSite::Exec, 7), mix(42, FaultSite::Exec, 8));
+        assert_ne!(mix(42, FaultSite::Exec, 7), mix(43, FaultSite::Exec, 7));
+    }
+
+    #[test]
+    fn one_in_n_rates_are_roughly_respected() {
+        let n = 5u64;
+        let hits = (0..10_000).filter(|&id| mix(99, FaultSite::Fused, id) % n == 0).count();
+        // Expect ~2000; a well-mixed hash stays well inside [1500, 2500].
+        assert!((1500..2500).contains(&hits), "hits = {hits}");
+    }
+
+    #[test]
+    fn squeeze_is_identity_without_a_plan() {
+        clear();
+        assert_eq!(squeeze_capacity(64), 64);
+    }
+}

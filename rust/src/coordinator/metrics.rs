@@ -23,8 +23,17 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use super::admission::ShedReason;
 use super::trace::{Stage, StageBreakdown, TracePath};
 use crate::util::json::Json;
+
+/// Index of the work queue's shard lane in per-lane metrics arrays
+/// (`queue_sojourn`); also used by `workers::WorkQueue` itself.
+pub const SHARD_LANE: usize = 0;
+/// Index of the work queue's batch lane in per-lane metrics arrays.
+pub const BATCH_LANE: usize = 1;
+/// Display names for the two lanes, indexed by the constants above.
+pub const LANE_NAMES: [&str; 2] = ["shard", "batch"];
 
 /// Log-spaced latency bucket upper bounds (seconds).  A 13th overflow
 /// bucket catches everything past the last bound.
@@ -220,6 +229,18 @@ pub struct Metrics {
     pub requests: AtomicU64,
     pub completed: AtomicU64,
     pub errors: AtomicU64,
+    /// requests dropped by admission control with an expired deadline
+    /// (at the router, a queue pop, pack time, or executor entry)
+    pub shed_deadline: AtomicU64,
+    /// requests dropped by CoDel overload shedding (queue or router bucket
+    /// sojourn stayed above target for a full interval)
+    pub shed_codel: AtomicU64,
+    /// requests whose handle was cancelled (explicitly or by drop) before
+    /// execution
+    pub cancelled: AtomicU64,
+    /// requests that *completed* but past their deadline (served late
+    /// rather than shed — they were already executing when it expired)
+    pub deadline_missed: AtomicU64,
     pub rowsplit: AtomicU64,
     pub merge: AtomicU64,
     pub pjrt: AtomicU64,
@@ -277,6 +298,9 @@ pub struct Metrics {
     path_hist: [AtomicHistogram; TracePath::COUNT],
     /// per-stage durations across all paths, indexed by `Stage`
     stage_hist: [AtomicHistogram; Stage::COUNT],
+    /// work-queue sojourn (enqueue → pop) per lane, indexed by
+    /// [`SHARD_LANE`] / [`BATCH_LANE`] — the signal CoDel sheds on
+    sojourn_hist: [AtomicHistogram; 2],
     /// slow-request threshold in µs (0 disables the slow ring)
     slow_threshold_us: AtomicU64,
     journal: Mutex<Journal>,
@@ -293,6 +317,20 @@ impl Metrics {
         m.slow_threshold_us
             .store((DEFAULT_SLOW_THRESHOLD_S * 1e6) as u64, Ordering::Relaxed);
         m
+    }
+
+    /// Record a work-queue sojourn (enqueue → pop) for one lane.
+    pub fn record_sojourn(&self, lane: usize, secs: f64) {
+        self.sojourn_hist[lane].record(secs);
+    }
+
+    /// The counter tracking requests shed for `reason`.
+    pub fn shed_counter(&self, reason: ShedReason) -> &AtomicU64 {
+        match reason {
+            ShedReason::DeadlineExpired => &self.shed_deadline,
+            ShedReason::CodelOverload => &self.shed_codel,
+            ShedReason::Cancelled => &self.cancelled,
+        }
     }
 
     /// Record one fused wide pass: `k` requests executed as a single
@@ -410,6 +448,8 @@ impl Metrics {
             std::array::from_fn(|i| self.path_hist[i].snapshot());
         let stage_snaps: [HistSnapshot; Stage::COUNT] =
             std::array::from_fn(|i| self.stage_hist[i].snapshot());
+        let sojourn_snaps: [HistSnapshot; 2] =
+            std::array::from_fn(|i| self.sojourn_hist[i].snapshot());
         let combined =
             path_snaps.iter().fold(HistSnapshot::default(), |acc, h| acc.merged(h));
         let (slow_requests, recent_requests) = {
@@ -420,6 +460,10 @@ impl Metrics {
             requests: self.requests.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            shed_deadline: self.shed_deadline.load(Ordering::Relaxed),
+            shed_codel: self.shed_codel.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
+            deadline_missed: self.deadline_missed.load(Ordering::Relaxed),
             rowsplit: self.rowsplit.load(Ordering::Relaxed),
             merge: self.merge.load(Ordering::Relaxed),
             pjrt: self.pjrt.load(Ordering::Relaxed),
@@ -461,6 +505,7 @@ impl Metrics {
             mean_latency_s: combined.mean_s(),
             per_path: std::array::from_fn(|i| LatencyStats::of(path_snaps[i])),
             per_stage: std::array::from_fn(|i| LatencyStats::of(stage_snaps[i])),
+            queue_sojourn: std::array::from_fn(|i| LatencyStats::of(sojourn_snaps[i])),
             slow_threshold_s: self.slow_threshold_s(),
             slow_requests,
             recent_requests,
@@ -511,6 +556,14 @@ pub struct MetricsSnapshot {
     pub requests: u64,
     pub completed: u64,
     pub errors: u64,
+    /// admission-control drops: expired deadline / CoDel overload /
+    /// client cancellation (each request lands in exactly one bucket —
+    /// `completed + errors + shed_* + cancelled` partitions terminals)
+    pub shed_deadline: u64,
+    pub shed_codel: u64,
+    pub cancelled: u64,
+    /// completed but past deadline (served late, not shed)
+    pub deadline_missed: u64,
     pub rowsplit: u64,
     pub merge: u64,
     pub pjrt: u64,
@@ -560,6 +613,9 @@ pub struct MetricsSnapshot {
     pub per_path: [LatencyStats; TracePath::COUNT],
     /// stage-duration digests indexed by [`Stage`]
     pub per_stage: [LatencyStats; Stage::COUNT],
+    /// work-queue sojourn digests per lane, indexed by [`SHARD_LANE`] /
+    /// [`BATCH_LANE`] — the signal CoDel sheds on
+    pub queue_sojourn: [LatencyStats; 2],
     pub slow_threshold_s: f64,
     /// traces over the threshold, oldest → newest (≤ [`SLOW_JOURNAL_CAP`])
     pub slow_requests: Vec<JournalEntry>,
@@ -575,6 +631,10 @@ impl MetricsSnapshot {
         "requests",
         "completed",
         "errors",
+        "shed_deadline",
+        "shed_codel",
+        "cancelled",
+        "deadline_missed",
         "rowsplit",
         "merge",
         "pjrt",
@@ -607,6 +667,7 @@ impl MetricsSnapshot {
         "mean_latency_s",
         "per_path",
         "per_stage",
+        "queue_sojourn",
         "slow_threshold_s",
         "slow_requests",
         "recent_requests",
@@ -628,10 +689,14 @@ impl MetricsSnapshot {
     pub fn to_json(&self) -> String {
         use std::collections::BTreeMap;
         let mut m = BTreeMap::new();
-        let scalars: [(&str, f64); 33] = [
+        let scalars: [(&str, f64); 37] = [
             ("requests", self.requests as f64),
             ("completed", self.completed as f64),
             ("errors", self.errors as f64),
+            ("shed_deadline", self.shed_deadline as f64),
+            ("shed_codel", self.shed_codel as f64),
+            ("cancelled", self.cancelled as f64),
+            ("deadline_missed", self.deadline_missed as f64),
             ("rowsplit", self.rowsplit as f64),
             ("merge", self.merge as f64),
             ("pjrt", self.pjrt as f64),
@@ -676,6 +741,11 @@ impl MetricsSnapshot {
             per_stage.insert(s.name().to_string(), self.per_stage[s.index()].json());
         }
         m.insert("per_stage".into(), Json::Obj(per_stage));
+        let mut sojourn = BTreeMap::new();
+        for (i, name) in LANE_NAMES.iter().enumerate() {
+            sojourn.insert(name.to_string(), self.queue_sojourn[i].json());
+        }
+        m.insert("queue_sojourn".into(), Json::Obj(sojourn));
         m.insert("slow_threshold_s".into(), Json::Num(self.slow_threshold_s));
         m.insert(
             "slow_requests".into(),
@@ -695,10 +765,14 @@ impl MetricsSnapshot {
     pub fn to_prometheus(&self) -> String {
         use std::fmt::Write as _;
         let mut out = String::with_capacity(8192);
-        let counters: [(&str, u64); 15] = [
+        let counters: [(&str, u64); 19] = [
             ("spmm_requests", self.requests),
             ("spmm_completed", self.completed),
             ("spmm_errors", self.errors),
+            ("spmm_shed_deadline", self.shed_deadline),
+            ("spmm_shed_codel", self.shed_codel),
+            ("spmm_cancelled", self.cancelled),
+            ("spmm_deadline_missed", self.deadline_missed),
             ("spmm_rowsplit", self.rowsplit),
             ("spmm_merge", self.merge),
             ("spmm_pjrt", self.pjrt),
@@ -756,6 +830,16 @@ impl MetricsSnapshot {
                 "stage",
                 s.name(),
                 &self.per_stage[s.index()].hist,
+            );
+        }
+        let _ = writeln!(out, "# TYPE spmm_queue_sojourn_seconds histogram");
+        for (i, name) in LANE_NAMES.iter().enumerate() {
+            prom_hist(
+                &mut out,
+                "spmm_queue_sojourn_seconds",
+                "lane",
+                name,
+                &self.queue_sojourn[i].hist,
             );
         }
         let _ = writeln!(
@@ -828,6 +912,11 @@ impl std::fmt::Display for MetricsSnapshot {
             self.p50_s * 1e3,
             self.p99_s * 1e3
         )?;
+        write!(
+            f,
+            " shed={}d/{}c cancel={} miss={}",
+            self.shed_deadline, self.shed_codel, self.cancelled, self.deadline_missed
+        )?;
         for p in TracePath::ALL {
             let s = &self.per_path[p.index()];
             write!(
@@ -873,6 +962,7 @@ mod tests {
             pack_span: span(stages[2]),
             exec_span: span(stages[3]),
             gather_span: span(stages[4]),
+            shed: None,
         }
     }
 
@@ -1103,6 +1193,35 @@ mod tests {
         let text = format!("{snap}");
         assert!(text.contains("pool=3/4") && text.contains("buf=9r/2a"), "{text}");
         assert!(text.contains("part=8h/2m"), "{text}");
+    }
+
+    #[test]
+    fn shed_counters_and_sojourn_histograms_export_everywhere() {
+        let m = Metrics::new();
+        m.shed_counter(ShedReason::DeadlineExpired).fetch_add(2, Ordering::Relaxed);
+        m.shed_counter(ShedReason::CodelOverload).fetch_add(1, Ordering::Relaxed);
+        m.shed_counter(ShedReason::Cancelled).fetch_add(3, Ordering::Relaxed);
+        m.deadline_missed.fetch_add(1, Ordering::Relaxed);
+        m.record_sojourn(SHARD_LANE, 0.001);
+        m.record_sojourn(BATCH_LANE, 0.02);
+        let snap = m.snapshot();
+        assert_eq!(snap.shed_deadline, 2);
+        assert_eq!(snap.shed_codel, 1);
+        assert_eq!(snap.cancelled, 3);
+        assert_eq!(snap.deadline_missed, 1);
+        assert_eq!(snap.queue_sojourn[SHARD_LANE].count, 1);
+        assert_eq!(snap.queue_sojourn[BATCH_LANE].count, 1);
+        assert!(snap.queue_sojourn[BATCH_LANE].mean_s > 0.0);
+        let text = format!("{snap}");
+        assert!(text.contains("shed=2d/1c cancel=3 miss=1"), "{text}");
+        let prom = snap.to_prometheus();
+        assert!(prom.contains("spmm_shed_deadline 2"), "{prom}");
+        assert!(prom.contains("spmm_cancelled 3"), "{prom}");
+        assert!(prom.contains("spmm_queue_sojourn_seconds_bucket{lane=\"batch\""), "{prom}");
+        let parsed = Json::parse(&snap.to_json()).expect("valid JSON");
+        assert_eq!(parsed.get("shed_codel").unwrap().as_f64(), Some(1.0));
+        let batch = parsed.get("queue_sojourn").unwrap().get("batch").unwrap();
+        assert_eq!(batch.get("count").unwrap().as_f64(), Some(1.0));
     }
 
     #[test]

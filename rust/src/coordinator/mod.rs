@@ -48,13 +48,19 @@
 //! threads and allocates nothing (see DESIGN.md §Executor pool & memory
 //! reuse and §Unified worker runtime).
 
+pub mod admission;
 pub mod batcher;
 pub mod engine;
+#[cfg(feature = "faults")]
+pub mod faults;
 pub mod metrics;
 pub mod router;
 pub mod trace;
 pub mod workers;
 
+pub use admission::{
+    CancelToken, CodelState, Deadline, RequestHandle, ShedPoint, ShedReason, SubmitError,
+};
 pub use batcher::{Batch, BatchQueue, RouteKey};
 pub use engine::{EngineConfig, ExecutionPath, SpmmEngine, SpmmResult};
 pub use metrics::{JournalEntry, LatencyStats, Metrics, MetricsSnapshot};

@@ -34,7 +34,7 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{sync_channel, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -46,11 +46,14 @@ use crate::plan::Planner;
 use crate::runtime::Manifest;
 use crate::shard::{ShardedEngine, WorkSink};
 
+use super::admission::{
+    CancelToken, CodelState, Deadline, RequestHandle, ShedPoint, ShedReason, SubmitError,
+};
 use super::batcher::{Batch, BatchQueue, RouteKey};
 use super::engine::{EngineConfig, SpmmResult};
 use super::metrics::{Metrics, MetricsSnapshot, DEFAULT_SLOW_THRESHOLD_S};
 use super::trace::{RequestTrace, Stage};
-use super::workers::{fuse_batch, BatchWork, Request, WorkerRuntime, MAX_FUSED_WIDTH};
+use super::workers::{fuse_batch, shed_request, BatchWork, Request, WorkerRuntime, MAX_FUSED_WIDTH};
 
 /// Server tuning knobs.
 #[derive(Debug, Clone)]
@@ -74,6 +77,11 @@ pub struct ServerConfig {
     /// requests slower than this end-to-end land in the slow-request
     /// journal (zero disables the slow ring; the recent ring always runs)
     pub slow_threshold: Duration,
+    /// default per-request completion budget applied by [`Server::submit`]
+    /// (`serve --deadline-ms`); `None` means requests without an explicit
+    /// deadline never expire.  Clients override per request through
+    /// [`Server::submit_with`].
+    pub deadline: Option<Duration>,
 }
 
 impl Default for ServerConfig {
@@ -86,6 +94,7 @@ impl Default for ServerConfig {
             metrics_file: None,
             metrics_interval: Duration::from_secs(10),
             slow_threshold: Duration::from_secs_f64(DEFAULT_SLOW_THRESHOLD_S),
+            deadline: None,
         }
     }
 }
@@ -115,6 +124,8 @@ pub struct Server {
     dumper_stop: Option<SyncSender<()>>,
     dumper: Option<std::thread::JoinHandle<()>>,
     next_id: AtomicU64,
+    /// default completion budget stamped onto `submit` requests
+    default_deadline: Option<Duration>,
 }
 
 /// Serialize a snapshot and write it atomically (tmp file + rename), so a
@@ -199,12 +210,17 @@ impl Server {
                 // (`Arc<str>: Borrow<str>`, so the set needs no String key)
                 let mut interned: std::collections::HashSet<Arc<str>> =
                     std::collections::HashSet::new();
+                // CoDel over the bucket batcher: sojourn is the flushed
+                // batch's oldest rider's age since admission (ingress wait
+                // included), so sustained pre-exec delay — wherever it
+                // accumulates — flips the batcher into dropping mode.
+                let mut bucket_codel = CodelState::default();
                 // Flush one bucket batch to the workers.  Fingerprint
                 // buckets go through the fuser: runs of Arc-identical-A
                 // requests become wide fused passes, the rest run
                 // back-to-back as before.  Artifact buckets never fuse
                 // (the compiled executable's dense width is fixed).
-                let send_batch = |batch: Batch, pending: &mut HashMap<u64, Request>| {
+                let mut send_batch = |batch: Batch, pending: &mut HashMap<u64, Request>| {
                     let reqs: Vec<Request> = batch
                         .requests
                         .into_iter()
@@ -212,6 +228,40 @@ impl Server {
                         .collect();
                     if reqs.is_empty() {
                         return;
+                    }
+                    // riders that died while bucketed (cancelled handle,
+                    // lapsed deadline) are shed before they reach pack
+                    let now = Instant::now();
+                    let mut live: Vec<Request> = Vec::with_capacity(reqs.len());
+                    for r in reqs {
+                        match r.shed_reason(now) {
+                            Some(reason) => shed_request(&metrics, r, ShedPoint::Pack, reason),
+                            None => live.push(r),
+                        }
+                    }
+                    let mut reqs = live;
+                    if reqs.is_empty() {
+                        return;
+                    }
+                    if let Some(oldest) = reqs.iter().map(|r| r.trace.admitted()).min() {
+                        let sojourn = now.saturating_duration_since(oldest);
+                        if bucket_codel.observe(sojourn, now) && reqs.len() > 1 {
+                            // dropping mode with no dead rider left: shed
+                            // the newest admission (least invested wait)
+                            let idx = reqs
+                                .iter()
+                                .enumerate()
+                                .max_by_key(|(_, r)| r.trace.admitted())
+                                .map(|(i, _)| i)
+                                .expect("reqs is non-empty");
+                            let victim = reqs.remove(idx);
+                            shed_request(
+                                &metrics,
+                                victim,
+                                ShedPoint::Router,
+                                ShedReason::CodelOverload,
+                            );
+                        }
                     }
                     match batch.bucket {
                         RouteKey::Artifact(_) => runtime.submit_batch(BatchWork::Run(reqs)),
@@ -246,6 +296,14 @@ impl Server {
                                     send_batch(batch, &mut pending);
                                 }
                             }
+                            // Router-entry admission: a request that died
+                            // in the ingress queue (deadline lapsed while
+                            // blocked, or handle already cancelled) is
+                            // shed before any planning work is spent on it.
+                            if let Some(reason) = req.shed_reason(now) {
+                                shed_request(&metrics, req, ShedPoint::Router, reason);
+                                continue;
+                            }
                             // Sharded dispatch: when the policy cuts this
                             // request into ≥ 2 shards, scatter it onto the
                             // workers' shard lane (idle workers pick the
@@ -254,8 +312,9 @@ impl Server {
                             // shared pool: at most `workers` shards.
                             if let Some(se) = &sharded {
                                 if se.policy().shard_count(&req.csr, se.workers()) >= 2 {
-                                    let Request { csr, b, n, reply, trace, .. } = req;
-                                    se.submit_traced(&csr, &b, n, reply, trace);
+                                    let Request { csr, b, n, reply, trace, deadline, cancel, .. } =
+                                        req;
+                                    se.submit_admitted(&csr, &b, n, reply, trace, deadline, cancel);
                                     continue;
                                 }
                             }
@@ -365,19 +424,43 @@ impl Server {
             dumper_stop,
             dumper,
             next_id: AtomicU64::new(0),
+            default_deadline: cfg.deadline,
         })
     }
 
-    /// Submit a request; returns a handle to await the result.
-    /// Blocks when the ingress queue is full (backpressure).
+    /// Submit a request under the server's default deadline (if any);
+    /// returns a [`RequestHandle`] to await — or cancel — the result.
+    /// Blocks when the ingress queue is full (backpressure); fails with
+    /// [`SubmitError::Shutdown`] once the router is gone instead of
+    /// panicking or silently dropping the request.
     pub fn submit(
         &self,
         csr: Arc<Csr>,
         b: Arc<Vec<f32>>,
         n: usize,
-    ) -> Receiver<Result<SpmmResult>> {
+    ) -> std::result::Result<RequestHandle, SubmitError> {
+        let deadline = match self.default_deadline {
+            Some(budget) => Deadline::within(budget),
+            None => Deadline::none(),
+        };
+        self.submit_with(csr, b, n, deadline)
+    }
+
+    /// Submit with an explicit per-request deadline (overriding the server
+    /// default).  The budget is measured from this call: every dequeue
+    /// point downstream checks it, and a request that cannot finish in
+    /// time is shed with a `shed (deadline-expired)` error instead of
+    /// executed.
+    pub fn submit_with(
+        &self,
+        csr: Arc<Csr>,
+        b: Arc<Vec<f32>>,
+        n: usize,
+        deadline: Deadline,
+    ) -> std::result::Result<RequestHandle, SubmitError> {
         let (tx, rx) = std::sync::mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let cancel = CancelToken::new();
         let req = Request {
             id,
             csr,
@@ -387,9 +470,13 @@ impl Server {
             reply: tx,
             // admission stamp: every stage span measures from here
             trace: RequestTrace::begin(id),
+            deadline,
+            cancel: cancel.clone(),
         };
-        let _ = self.ingress.send(RouterMsg::Req(req));
-        rx
+        self.ingress
+            .send(RouterMsg::Req(req))
+            .map_err(|_| SubmitError::Shutdown)?;
+        Ok(RequestHandle::new(rx, cancel, id))
     }
 
     /// Submit and wait.
@@ -399,7 +486,8 @@ impl Server {
         b: Arc<Vec<f32>>,
         n: usize,
     ) -> Result<SpmmResult> {
-        self.submit(csr, b, n)
+        let handle = self.submit(csr, b, n).map_err(|e| anyhow::anyhow!("{e}"))?;
+        handle
             .recv()
             .map_err(|e| anyhow::anyhow!("server shut down: {e}"))?
     }
@@ -514,7 +602,7 @@ mod tests {
         let want = crate::spmm::spmm_reference(&a, &b, 8);
 
         let handles: Vec<_> = (0..20)
-            .map(|_| server.submit(Arc::clone(&a), Arc::clone(&b), 8))
+            .map(|_| server.submit(Arc::clone(&a), Arc::clone(&b), 8).unwrap())
             .collect();
         for h in handles {
             let r = h.recv().unwrap().unwrap();
@@ -587,7 +675,7 @@ mod tests {
         let a = Arc::new(Csr::random(50, 50, 4.0, 1206));
         let b = Arc::new(crate::gen::dense_matrix(50, 4, 1207));
         let handles: Vec<_> = (0..5)
-            .map(|_| server.submit(Arc::clone(&a), Arc::clone(&b), 4))
+            .map(|_| server.submit(Arc::clone(&a), Arc::clone(&b), 4).unwrap())
             .collect();
         let snap = server.shutdown(); // must flush the un-full batch
         assert_eq!(snap.completed, 5);
@@ -626,7 +714,7 @@ mod tests {
         let server = Server::start(cpu_cfg(), ServerConfig::default()).unwrap();
         let a = Arc::new(Csr::random(80, 80, 4.0, 1401));
         let b = Arc::new(crate::gen::dense_matrix(80, 4, 1402));
-        let poisoned = server.submit(Arc::clone(&a), Arc::clone(&b), PANIC_N);
+        let poisoned = server.submit(Arc::clone(&a), Arc::clone(&b), PANIC_N).unwrap();
         let err = poisoned.recv().expect("reply channel must stay connected");
         let err = err.expect_err("injected panic must surface as an error");
         assert!(err.to_string().contains("panicked"), "{err}");
@@ -809,7 +897,7 @@ mod tests {
         baseline.shutdown();
 
         let handles: Vec<_> = (0..4)
-            .map(|_| server.submit(Arc::clone(&a), Arc::clone(&b), 8))
+            .map(|_| server.submit(Arc::clone(&a), Arc::clone(&b), 8).unwrap())
             .collect();
         for h in handles {
             let r = h.recv().unwrap().unwrap();
@@ -850,7 +938,7 @@ mod tests {
         let b = Arc::new(crate::gen::dense_matrix(300, 8, 1512));
         let round = |server: &Server| {
             let handles: Vec<_> = (0..4)
-                .map(|_| server.submit(Arc::clone(&a), Arc::clone(&b), 8))
+                .map(|_| server.submit(Arc::clone(&a), Arc::clone(&b), 8).unwrap())
                 .collect();
             for h in handles {
                 let r = h.recv().unwrap().unwrap();
@@ -954,5 +1042,37 @@ mod tests {
         assert_eq!(snap.plan_hits, 1);
         assert_eq!(snap.plan_misses, 0);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn submit_after_router_exit_returns_typed_error() {
+        let server = Server::start(cpu_cfg(), ServerConfig::default()).unwrap();
+        let a = Arc::new(Csr::random(40, 40, 3.0, 1601));
+        let b = Arc::new(crate::gen::dense_matrix(40, 4, 1602));
+        // Kill the router thread out from under the Server (`shutdown`
+        // consumes self, so this is the only way a live handle can meet a
+        // dead router).  Once the router drops its receiver the bounded
+        // ingress channel disconnects, and submit must surface the typed
+        // error instead of panicking on the failed send.
+        server.ingress.send(RouterMsg::Shutdown).unwrap();
+        let give_up = Instant::now() + Duration::from_secs(10);
+        loop {
+            match server.submit(Arc::clone(&a), Arc::clone(&b), 4) {
+                Err(e) => {
+                    assert!(matches!(e, SubmitError::Shutdown));
+                    assert!(e.to_string().contains("shut down"), "{e}");
+                    break;
+                }
+                // the router was still draining its queue; this request is
+                // lost to the closing channel — drop the handle and retry
+                Ok(h) => drop(h),
+            }
+            assert!(Instant::now() < give_up, "submit never observed the shutdown");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // submit_blocking folds the same condition into its Result
+        let err = server.submit_blocking(Arc::clone(&a), Arc::clone(&b), 4).unwrap_err();
+        assert!(err.to_string().contains("shut down"), "{err}");
+        server.shutdown();
     }
 }

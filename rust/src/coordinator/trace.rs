@@ -30,6 +30,8 @@
 
 use std::time::Instant;
 
+use super::admission::{ShedPoint, ShedReason};
+
 /// Which of the five serve-path shapes a request ultimately executed as.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum TracePath {
@@ -132,6 +134,7 @@ pub struct RequestTrace {
     exec: Option<(Instant, Instant)>,
     gather: Option<(Instant, Instant)>,
     degraded: bool,
+    shed: Option<(ShedPoint, ShedReason)>,
 }
 
 impl RequestTrace {
@@ -148,6 +151,7 @@ impl RequestTrace {
             exec: None,
             gather: None,
             degraded: false,
+            shed: None,
         }
     }
 
@@ -191,6 +195,21 @@ impl RequestTrace {
         self.degraded
     }
 
+    /// Record where admission control dropped this request and why.  First
+    /// write wins: the earliest shed point in the pipeline is the one that
+    /// actually terminated the request (a sharded parent marked dead at the
+    /// shard hop must not be re-attributed by later shards).
+    pub fn mark_shed(&mut self, point: ShedPoint, reason: ShedReason) {
+        if self.shed.is_none() {
+            self.shed = Some((point, reason));
+        }
+    }
+
+    /// Where (and why) the request was shed, if it was.
+    pub fn shed(&self) -> Option<(ShedPoint, ShedReason)> {
+        self.shed
+    }
+
     /// Fold the stamped spans into a [`StageBreakdown`] ending at `end`.
     pub fn finish(&self, path: TracePath, end: Instant) -> StageBreakdown {
         let dur = |s: Option<(Instant, Instant)>| {
@@ -226,6 +245,7 @@ impl RequestTrace {
             pack_span: self.pack,
             exec_span: self.exec,
             gather_span: self.gather,
+            shed: self.shed,
         }
     }
 }
@@ -251,6 +271,9 @@ pub struct StageBreakdown {
     pub pack_span: Option<(Instant, Instant)>,
     pub exec_span: Option<(Instant, Instant)>,
     pub gather_span: Option<(Instant, Instant)>,
+    /// set when admission control dropped the request instead of running it
+    /// (which pipeline point, and whether deadline / CoDel / cancellation)
+    pub shed: Option<(ShedPoint, ShedReason)>,
 }
 
 impl StageBreakdown {
@@ -338,6 +361,17 @@ mod tests {
         assert!((b.plan_s - 0.003).abs() < 1e-9);
         // re-planned span sits past the queue window → queue keeps full wait
         assert!((b.queue_s - 0.005).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shed_mark_is_first_write_wins_and_rides_the_breakdown() {
+        let mut tr = RequestTrace::begin(4);
+        assert!(tr.shed().is_none());
+        tr.mark_shed(ShedPoint::Queue, ShedReason::DeadlineExpired);
+        tr.mark_shed(ShedPoint::Exec, ShedReason::CodelOverload); // ignored
+        assert_eq!(tr.shed(), Some((ShedPoint::Queue, ShedReason::DeadlineExpired)));
+        let b = tr.finish(TracePath::Solo, Instant::now());
+        assert_eq!(b.shed, Some((ShedPoint::Queue, ShedReason::DeadlineExpired)));
     }
 
     #[test]

@@ -49,6 +49,21 @@
 //! request's reply channel — never a dead worker, never a cascade of
 //! `lock().unwrap()` panics across siblings.  Shard-task panics were
 //! already confined by the gather (`shard::engine::execute_shard`).
+//!
+//! ## Admission control at the queue
+//!
+//! Every pop records the popped item's **queue sojourn** into a per-lane
+//! histogram and feeds a per-lane CoDel controller
+//! ([`super::admission::CodelState`]): when sojourns stay above target for
+//! a full interval, each batch-lane pop additionally sheds one victim —
+//! a request already past its deadline (or cancelled) if one is queued,
+//! otherwise the newest-admitted request — so overload drops *late* work
+//! instead of queueing into uselessness.  The shard lane observes CoDel
+//! state but **never** drops: a shard task belongs to an already-started
+//! gather whose countdown must reach zero (dead parents are skipped
+//! cheaply inside `execute_shard` instead).  Executors re-check deadlines
+//! and cancellation at entry ([`run_batch`] / [`run_fused`]), so work that
+//! died *while queued* is shed rather than executed.
 
 use std::collections::VecDeque;
 use std::panic::AssertUnwindSafe;
@@ -65,8 +80,11 @@ use crate::plan::{PlanOutcome, Planner};
 use crate::shard::engine::{execute_shard, ShardTask, WorkSink};
 use crate::spmm::{self, Algorithm};
 
+use super::admission::{shed_error, CancelToken, CodelState, Deadline, ShedPoint, ShedReason};
 use super::engine::{EngineConfig, ExecutionPath, SpmmEngine, SpmmResult};
-use super::metrics::Metrics;
+#[cfg(feature = "faults")]
+use super::faults;
+use super::metrics::{Metrics, BATCH_LANE, SHARD_LANE};
 use super::trace::{RequestTrace, Stage, TracePath};
 
 /// Consecutive shard tasks a worker serves before it must service a
@@ -99,6 +117,42 @@ pub(crate) struct Request {
     /// request passes through stamps its span (inline `Copy` state — no
     /// heap, rides through channels and catch_unwind for free)
     pub trace: RequestTrace,
+    /// completion budget; checked at every dequeue/executor boundary
+    pub deadline: Deadline,
+    /// shared with the client's `RequestHandle` — set by `cancel()` or by
+    /// dropping the handle
+    pub cancel: CancelToken,
+}
+
+impl Request {
+    /// Is this request already dead — cancelled, or past its deadline?
+    /// Cancellation wins the tie: a cancelled request is reported as
+    /// cancelled even if its deadline has also lapsed.
+    pub(crate) fn shed_reason(&self, now: Instant) -> Option<ShedReason> {
+        if self.cancel.is_cancelled() {
+            Some(ShedReason::Cancelled)
+        } else if self.deadline.expired(now) {
+            Some(ShedReason::DeadlineExpired)
+        } else {
+            None
+        }
+    }
+}
+
+/// Terminate one request as shed: mark the trace, bump `requests` plus the
+/// reason's counter, and reply with the tagged error — the shed path's
+/// "exactly one terminal outcome" contract.  NOT for the sharded path,
+/// whose `scatter` already counted `requests` at entry.
+pub(crate) fn shed_request(
+    metrics: &Metrics,
+    mut r: Request,
+    point: ShedPoint,
+    reason: ShedReason,
+) {
+    r.trace.mark_shed(point, reason);
+    metrics.requests.fetch_add(1, Ordering::Relaxed);
+    metrics.shed_counter(reason).fetch_add(1, Ordering::Relaxed);
+    let _ = r.reply.send(Err(shed_error(reason, r.id)));
 }
 
 /// Whole-request work on the batch lane.
@@ -113,6 +167,15 @@ pub(crate) enum BatchWork {
 
 impl BatchWork {
     fn into_requests(self) -> Vec<Request> {
+        match self {
+            BatchWork::Run(reqs) | BatchWork::Fused(reqs) => reqs,
+        }
+    }
+
+    /// Mutable view of the queued requests (CoDel victim selection).  A
+    /// `Fused` shrunk below 2 by a removal still executes correctly:
+    /// `run_fused` routes sub-2 batches to the plain path.
+    fn requests_mut(&mut self) -> &mut Vec<Request> {
         match self {
             BatchWork::Run(reqs) | BatchWork::Fused(reqs) => reqs,
         }
@@ -189,8 +252,11 @@ pub(crate) enum WorkItem {
 }
 
 struct Lanes {
-    shard: VecDeque<ShardTask>,
-    batch: VecDeque<BatchWork>,
+    /// each entry carries its enqueue instant for sojourn accounting
+    shard: VecDeque<(ShardTask, Instant)>,
+    batch: VecDeque<(BatchWork, Instant)>,
+    /// per-lane CoDel controllers, indexed by SHARD_LANE / BATCH_LANE
+    codel: [CodelState; 2],
     closed: bool,
 }
 
@@ -215,6 +281,8 @@ pub struct WorkQueue {
     /// capacity; pops notify_all so each waiter rechecks its own lane
     space: Condvar,
     capacity: usize,
+    /// sojourn histograms + shed counters; `None` only in bare-queue tests
+    metrics: Option<Arc<Metrics>>,
 }
 
 impl WorkQueue {
@@ -223,12 +291,32 @@ impl WorkQueue {
             lanes: Mutex::new(Lanes {
                 shard: VecDeque::new(),
                 batch: VecDeque::new(),
+                codel: [CodelState::default(), CodelState::default()],
                 closed: false,
             }),
             available: Condvar::new(),
             space: Condvar::new(),
             capacity: capacity.max(1),
+            metrics: None,
         }
+    }
+
+    /// A queue wired to the server's metrics: queue sojourns land in the
+    /// per-lane histogram and CoDel sheds bump the shed counters.
+    pub fn with_metrics(capacity: usize, metrics: Arc<Metrics>) -> Self {
+        Self { metrics: Some(metrics), ..Self::new(capacity) }
+    }
+
+    /// Lane capacity, optionally squeezed by the fault-injection plan to
+    /// simulate queue-full backpressure under modest load.
+    #[cfg(feature = "faults")]
+    fn effective_capacity(&self) -> usize {
+        faults::squeeze_capacity(self.capacity).max(1)
+    }
+
+    #[cfg(not(feature = "faults"))]
+    fn effective_capacity(&self) -> usize {
+        self.capacity
     }
 
     /// Enqueue one shard task, blocking while the shard lane is at
@@ -242,13 +330,13 @@ impl WorkQueue {
     /// the request's reply channel, which surfaces as a shutdown error.
     pub(crate) fn push_shard(&self, task: ShardTask) {
         let mut lanes = recover(&self.lanes);
-        while lanes.shard.len() >= self.capacity && !lanes.closed {
+        while lanes.shard.len() >= self.effective_capacity() && !lanes.closed {
             lanes = recover_wait(&self.space, lanes);
         }
         if lanes.closed {
             return; // drop: reply channel disconnects
         }
-        lanes.shard.push_back(task);
+        lanes.shard.push_back((task, Instant::now()));
         self.available.notify_one();
     }
 
@@ -258,7 +346,7 @@ impl WorkQueue {
     /// bounded work channel did.
     pub(crate) fn push_batch(&self, work: BatchWork) {
         let mut lanes = recover(&self.lanes);
-        while lanes.batch.len() >= self.capacity && !lanes.closed {
+        while lanes.batch.len() >= self.effective_capacity() && !lanes.closed {
             lanes = recover_wait(&self.space, lanes);
         }
         if lanes.closed {
@@ -267,7 +355,7 @@ impl WorkQueue {
             }
             return;
         }
-        lanes.batch.push_back(work);
+        lanes.batch.push_back((work, Instant::now()));
         self.available.notify_one();
     }
 
@@ -284,21 +372,30 @@ impl WorkQueue {
             //
             // Bounded bypass: after SHARD_BURST shard tasks in a row,
             // service one waiting batch before the next shard.
+            let now = Instant::now();
             if *streak >= SHARD_BURST {
-                if let Some(work) = lanes.batch.pop_front() {
+                if let Some((work, enq)) = lanes.batch.pop_front() {
                     *streak = 0;
-                    self.space.notify_all();
+                    let victim = self.after_batch_pop(&mut lanes, enq, now);
+                    drop(lanes);
+                    self.shed_victim(victim);
                     return Some(WorkItem::Batch(work));
                 }
             }
-            if let Some(task) = lanes.shard.pop_front() {
+            if let Some((task, enq)) = lanes.shard.pop_front() {
                 *streak = streak.saturating_add(1);
+                // the shard lane observes sojourn/CoDel state but never
+                // drops (see module docs): record and move on
+                self.record_sojourn(SHARD_LANE, enq, now);
+                lanes.codel[SHARD_LANE].observe(now.saturating_duration_since(enq), now);
                 self.space.notify_all();
                 return Some(WorkItem::Shard(task));
             }
-            if let Some(work) = lanes.batch.pop_front() {
+            if let Some((work, enq)) = lanes.batch.pop_front() {
                 *streak = 0;
-                self.space.notify_all();
+                let victim = self.after_batch_pop(&mut lanes, enq, now);
+                drop(lanes);
+                self.shed_victim(victim);
                 return Some(WorkItem::Batch(work));
             }
             if lanes.closed {
@@ -311,6 +408,77 @@ impl WorkQueue {
             *streak = 0;
             lanes = recover_wait(&self.available, lanes);
         }
+    }
+
+    fn record_sojourn(&self, lane: usize, enqueued: Instant, now: Instant) {
+        if let Some(m) = &self.metrics {
+            m.record_sojourn(lane, now.saturating_duration_since(enqueued).as_secs_f64());
+        }
+    }
+
+    /// Batch-lane pop bookkeeping: record the popped work's sojourn, feed
+    /// the lane's CoDel controller, and — when the lane is in dropping
+    /// mode — pick ONE victim to shed: the newest already-dead request if
+    /// any is queued (a free drop), otherwise the newest-admitted request
+    /// (the one that has lost the least invested wait).  Runs under the
+    /// lanes lock; the victim's reply is sent by the caller after release.
+    fn after_batch_pop(
+        &self,
+        lanes: &mut Lanes,
+        enqueued: Instant,
+        now: Instant,
+    ) -> Option<(Request, ShedReason)> {
+        self.record_sojourn(BATCH_LANE, enqueued, now);
+        let sojourn = now.saturating_duration_since(enqueued);
+        let dropping = lanes.codel[BATCH_LANE].observe(sojourn, now);
+        self.space.notify_all();
+        if !dropping {
+            return None;
+        }
+        // Prefer a request that is already past its deadline / cancelled,
+        // scanning newest-first so the oldest dead work (closest to being
+        // popped and shed anyway) is left for its natural boundary check.
+        let mut found: Option<(Request, ShedReason)> = None;
+        for (work, _) in lanes.batch.iter_mut().rev() {
+            let reqs = work.requests_mut();
+            if let Some(i) = reqs.iter().rposition(|r| r.shed_reason(now).is_some()) {
+                let r = reqs.remove(i);
+                let reason = r.shed_reason(now).expect("victim was dead when selected");
+                found = Some((r, reason));
+                break;
+            }
+        }
+        if found.is_some() {
+            // sweep the (at most one) shell the removal may have emptied
+            lanes.batch.retain(|(w, _)| match w {
+                BatchWork::Run(rs) | BatchWork::Fused(rs) => !rs.is_empty(),
+            });
+            return found;
+        }
+        // No dead request queued: shed the newest-admitted live one.
+        if let Some((work, _)) = lanes.batch.back_mut() {
+            let reqs = work.requests_mut();
+            if let Some(r) = reqs.pop() {
+                let empty = reqs.is_empty();
+                if empty {
+                    lanes.batch.pop_back();
+                }
+                return Some((r, ShedReason::CodelOverload));
+            }
+        }
+        None
+    }
+
+    /// Complete a CoDel victim outside the lanes lock: exactly one
+    /// terminal outcome, tagged with where and why it was shed.
+    fn shed_victim(&self, victim: Option<(Request, ShedReason)>) {
+        let Some((mut r, reason)) = victim else { return };
+        r.trace.mark_shed(ShedPoint::Queue, reason);
+        if let Some(m) = &self.metrics {
+            m.requests.fetch_add(1, Ordering::Relaxed);
+            m.shed_counter(reason).fetch_add(1, Ordering::Relaxed);
+        }
+        let _ = r.reply.send(Err(shed_error(reason, r.id)));
     }
 
     /// Close the queue: workers drain what is already queued, then exit.
@@ -370,7 +538,7 @@ impl WorkerRuntime {
         metrics: Arc<Metrics>,
     ) -> Arc<Self> {
         let workers = workers.max(1);
-        let queue = Arc::new(WorkQueue::new(queue_capacity));
+        let queue = Arc::new(WorkQueue::with_metrics(queue_capacity, Arc::clone(&metrics)));
         let mut execs = Vec::with_capacity(workers);
         let mut shard_counts = Vec::with_capacity(workers);
         let mut handles = Vec::with_capacity(workers);
@@ -568,8 +736,24 @@ fn run_fused(
     metrics: &Metrics,
     reqs: Vec<Request>,
 ) -> Option<Vec<Request>> {
+    // Pack-time admission: riders that died while queued (deadline lapsed,
+    // handle cancelled/dropped) are shed BEFORE their B is packed into the
+    // wide pass — a dead rider must not widen everyone else's work.
+    let now = Instant::now();
+    let mut reqs = reqs;
+    if reqs.iter().any(|r| r.shed_reason(now).is_some()) {
+        let mut live = Vec::with_capacity(reqs.len());
+        for r in reqs {
+            match r.shed_reason(now) {
+                Some(reason) => shed_request(metrics, r, ShedPoint::Pack, reason),
+                None => live.push(r),
+            }
+        }
+        reqs = live;
+    }
     if reqs.len() < 2 {
-        // fuse_batch never emits these; route stragglers to the plain path
+        // fuse_batch never emits sub-2 batches, but shedding above (or a
+        // straggler) can leave one: route the remainder to the plain path
         return Some(reqs);
     }
     let t0 = Instant::now();
@@ -579,6 +763,11 @@ fn run_fused(
         #[cfg(test)]
         if reqs.iter().any(|r| r.n == PANIC_N) {
             panic!("injected fused panic (test hook: n == PANIC_N)");
+        }
+        #[cfg(feature = "faults")]
+        {
+            faults::maybe_delay(faults::FaultSite::Pack, reqs[0].id);
+            faults::maybe_panic(faults::FaultSite::Fused, reqs[0].id);
         }
         // the router fingerprinted every rider at planning time; reuse it
         // rather than re-walking row_ptr once per batch
@@ -663,6 +852,11 @@ fn run_fused(
     metrics.record_fused(k, n_total as u64);
     let [plan_sp, pack_sp, exec_sp, gather_sp] = spans;
     for (mut r, c) in reqs.into_iter().zip(outs) {
+        // the rider was live at pack time but may have expired during the
+        // wide pass: the work is done, so deliver it — but count the miss
+        if r.deadline.expired(end) {
+            metrics.deadline_missed.fetch_add(1, Ordering::Relaxed);
+        }
         // queue ends for every rider when the fused pass picked the batch
         // up; riders admitted earlier simply show a longer queue wait
         r.trace.queue_ended(t0);
@@ -693,10 +887,21 @@ fn run_fused(
 /// reply channel — the worker, its siblings, and the queue all survive.
 fn run_batch(engine: &SpmmEngine, metrics: &Metrics, reqs: Vec<Request>) {
     for r in reqs {
+        // executor-entry admission: work that died while queued is shed,
+        // not executed — the last check before cycles are spent
+        if let Some(reason) = r.shed_reason(Instant::now()) {
+            shed_request(metrics, r, ShedPoint::Exec, reason);
+            continue;
+        }
         let executed = std::panic::catch_unwind(AssertUnwindSafe(|| {
             #[cfg(test)]
             if r.n == PANIC_N {
                 panic!("injected worker panic (test hook: n == PANIC_N)");
+            }
+            #[cfg(feature = "faults")]
+            {
+                faults::maybe_delay(faults::FaultSite::Exec, r.id);
+                faults::maybe_panic(faults::FaultSite::Exec, r.id);
             }
             match &r.outcome {
                 Some(o) => engine.spmm_traced(&r.csr, &r.b, r.n, o, r.trace),
@@ -711,6 +916,10 @@ fn run_batch(engine: &SpmmEngine, metrics: &Metrics, reqs: Vec<Request>) {
                 panic_message(payload.as_ref())
             ))
         });
+        if res.is_ok() && r.deadline.expired(Instant::now()) {
+            // completed, but too late for the client's budget
+            metrics.deadline_missed.fetch_add(1, Ordering::Relaxed);
+        }
         let _ = r.reply.send(res);
     }
 }
@@ -729,6 +938,8 @@ mod tests {
             outcome: None,
             reply: channel().0,
             trace: RequestTrace::begin(id),
+            deadline: Deadline::none(),
+            cancel: CancelToken::new(),
         }
     }
 
@@ -834,6 +1045,8 @@ mod tests {
                 outcome: None,
                 reply: tx,
                 trace: RequestTrace::begin(id),
+                deadline: Deadline::none(),
+                cancel: CancelToken::new(),
             }]));
             receivers.push(rx);
         }
@@ -874,6 +1087,8 @@ mod tests {
             outcome: None,
             reply: tx,
             trace: RequestTrace::begin(0),
+            deadline: Deadline::none(),
+            cancel: CancelToken::new(),
         }]));
         let err = rx.recv().unwrap().unwrap_err();
         assert!(err.to_string().contains("engine init"), "{err}");
@@ -892,6 +1107,8 @@ mod tests {
                 outcome: None,
                 reply: tx,
                 trace: RequestTrace::begin(id),
+                deadline: Deadline::none(),
+                cancel: CancelToken::new(),
             },
             rx,
         )
@@ -955,6 +1172,8 @@ mod tests {
             outcome: None,
             reply: channel().0,
             trace: RequestTrace::begin(20),
+            deadline: Deadline::none(),
+            cancel: CancelToken::new(),
         };
         let zero = Request {
             id: 21,
@@ -964,6 +1183,8 @@ mod tests {
             outcome: None,
             reply: channel().0,
             trace: RequestTrace::begin(21),
+            deadline: Deadline::none(),
+            cancel: CancelToken::new(),
         };
         let good = req_for(&a1, &b4, 4, 22).0;
         let works = fuse_batch(vec![bad, zero, good], MAX_FUSED_WIDTH);
@@ -1078,5 +1299,140 @@ mod tests {
         assert_eq!(snap.errors, 1);
         assert_eq!(snap.fused_batches, 0, "a failed fuse must not count as fused");
         assert_eq!(snap.per_path[TracePath::Degraded.index()].count, 2);
+    }
+
+    /// Satellite: blocking pushes on BOTH lanes preserve FIFO order per
+    /// producer and never deadlock when producers outnumber the (single)
+    /// consumer and the lanes are far smaller than the offered load.
+    #[test]
+    fn blocking_pushes_preserve_fifo_per_lane_and_never_deadlock() {
+        use std::collections::HashMap;
+        use std::time::Duration;
+
+        let q = Arc::new(WorkQueue::new(2)); // tiny: every producer must block
+        const BATCH_PRODUCERS: u64 = 3;
+        const SHARD_PRODUCERS: usize = 2;
+        const PER_PRODUCER: u64 = 8;
+
+        // consumer first, so blocked producers can make progress
+        let consumer = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                let mut streak = 0u32;
+                let mut last_seq: HashMap<u64, u64> = HashMap::new();
+                let (mut batches, mut shards) = (0u64, 0u64);
+                while let Some(item) = q.pop(&mut streak) {
+                    match item {
+                        WorkItem::Batch(w) => {
+                            for r in w.into_requests() {
+                                // ids encode (producer, sequence); the queue
+                                // must deliver each producer's pushes in order
+                                let (p, s) = (r.id / 100, r.id % 100);
+                                if let Some(prev) = last_seq.insert(p, s) {
+                                    assert!(s > prev, "producer {p}: {s} after {prev}");
+                                }
+                                batches += 1;
+                            }
+                        }
+                        WorkItem::Shard(_) => shards += 1,
+                    }
+                }
+                (batches, shards)
+            })
+        };
+        let mut producers = Vec::new();
+        for p in 0..BATCH_PRODUCERS {
+            let q = Arc::clone(&q);
+            producers.push(std::thread::spawn(move || {
+                for s in 0..PER_PRODUCER {
+                    q.push_batch(BatchWork::Run(vec![dummy_request(p * 100 + s)]));
+                }
+            }));
+        }
+        for _ in 0..SHARD_PRODUCERS {
+            let q = Arc::clone(&q);
+            producers.push(std::thread::spawn(move || {
+                for _ in 0..PER_PRODUCER {
+                    q.push_shard(ShardTask::dummy());
+                }
+            }));
+        }
+        // watchdog: a deadlock must fail the test, not hang the suite
+        let (done_tx, done_rx) = channel();
+        let qc = Arc::clone(&q);
+        let supervisor = std::thread::spawn(move || {
+            for t in producers {
+                t.join().expect("producer panicked");
+            }
+            qc.close();
+            let _ = done_tx.send(());
+        });
+        done_rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("blocking pushes deadlocked");
+        supervisor.join().unwrap();
+        let (batches, shards) = consumer.join().unwrap();
+        assert_eq!(batches, BATCH_PRODUCERS * PER_PRODUCER);
+        assert_eq!(shards, (SHARD_PRODUCERS as u64) * PER_PRODUCER);
+    }
+
+    /// CoDel shedding end to end at the queue: sustained above-target
+    /// sojourn flips the batch lane into dropping mode, and the victim is
+    /// the queued request that is already past its deadline — its live
+    /// batch-mate survives in place.
+    #[test]
+    fn codel_sheds_newest_past_deadline_from_the_batch_lane() {
+        use std::time::Duration;
+
+        let metrics = Arc::new(Metrics::new());
+        let q = WorkQueue::with_metrics(8, Arc::clone(&metrics));
+        let (good_tx, good_rx) = channel();
+        let (dead_tx, dead_rx) = channel();
+        q.push_batch(BatchWork::Run(vec![dummy_request(1)]));
+        q.push_batch(BatchWork::Run(vec![dummy_request(2)]));
+        let mut good = dummy_request(3);
+        good.reply = good_tx;
+        let mut dead = dummy_request(4);
+        dead.reply = dead_tx;
+        dead.deadline = Deadline::within(Duration::ZERO);
+        q.push_batch(BatchWork::Run(vec![good, dead]));
+        // let sojourns exceed CODEL_TARGET (5ms), then start the CoDel
+        // clock with the first pop
+        std::thread::sleep(Duration::from_millis(20));
+        let mut streak = 0u32;
+        assert!(matches!(q.pop(&mut streak), Some(WorkItem::Batch(_))));
+        // stay above target for a full CODEL_INTERVAL (100ms): the next
+        // pop enters dropping mode and sheds exactly one victim
+        std::thread::sleep(Duration::from_millis(120));
+        assert!(matches!(q.pop(&mut streak), Some(WorkItem::Batch(_))));
+        let err = dead_rx
+            .recv_timeout(Duration::from_secs(2))
+            .expect("victim must get a terminal reply")
+            .unwrap_err();
+        assert!(err.to_string().contains("shed (deadline-expired)"), "{err}");
+        assert!(
+            good_rx.try_recv().is_err(),
+            "the live batch-mate must stay queued, not be shed"
+        );
+        // the surviving request is still deliverable
+        let mut found_good = false;
+        while let Some(item) = {
+            q.close();
+            q.pop(&mut streak)
+        } {
+            if let WorkItem::Batch(w) = item {
+                for r in w.into_requests() {
+                    found_good |= r.id == 3;
+                }
+            }
+        }
+        assert!(found_good, "request 3 must survive the shed");
+        let snap = metrics.snapshot();
+        assert_eq!(snap.shed_deadline, 1, "the dead rider sheds under its own reason");
+        assert_eq!(snap.shed_codel, 0, "no live request was sacrificed");
+        assert!(
+            snap.queue_sojourn[BATCH_LANE].count >= 2,
+            "batch-lane sojourns must land in the histogram"
+        );
     }
 }

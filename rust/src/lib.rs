@@ -188,6 +188,32 @@
 //! exporter.  Coherence and concurrency properties live in
 //! `tests/trace_props.rs` and `tests/metrics_props.rs`.
 //!
+//! ## deadline — admission control under overload
+//!
+//! Every request carries a [`coordinator::Deadline`] (a `Copy`
+//! `Option<Instant>`): explicit via [`coordinator::Server::submit_with`],
+//! or defaulted from `ServerConfig::deadline` (`serve --deadline-ms`).
+//! Each hand-off point — router ingress, bucket flush, work-queue pop,
+//! executor entry, shard scatter/gather — re-checks viability
+//! (deadline and the handle's [`coordinator::CancelToken`]) and *sheds*
+//! non-viable work instead of executing it: the reply channel gets
+//! exactly one `Err` whose message starts with the stable prefix
+//! `shed (<reason>)`, and exactly one of the `shed_deadline` /
+//! `shed_codel` / `cancelled` counters increments, preserving the
+//! conservation law `completed + errors + sheds == submitted`.  Both
+//! work-queue lanes run a CoDel controller on queue *sojourn* (5 ms
+//! target, 100 ms interval): a standing queue sheds the newest
+//! past-deadline entry per pop — though the shard lane only observes,
+//! never drops, because shard tasks are countdown obligations to their
+//! gather state.  [`coordinator::Server::submit`] returns a
+//! [`coordinator::RequestHandle`] (cancel, recv, try_recv; dropping it
+//! unreceived cancels) or a typed [`coordinator::SubmitError`] after
+//! shutdown.  The `faults` feature compiles in a deterministic
+//! injection layer (`coordinator::faults`: seeded panics, stage
+//! delays, queue squeeze) and `tests/chaos_props.rs` proves the
+//! terminal-outcome, no-wedge, and bitwise-survivor invariants under
+//! it; `tests/deadline_props.rs` covers the fault-free policy.
+//!
 //! ### The `_into` API contract
 //!
 //! [`spmm::rowsplit_spmm_into`] and [`spmm::merge_spmm_into`] are the

@@ -6,7 +6,7 @@
 //! merge-spmm run --mtx FILE [--n N] [--artifacts DIR]  SpMM one matrix
 //! merge-spmm serve [--requests N] [--workers W] [--cpu-only]
 //!                  [--shards N|auto] [--metrics-json FILE] [--slow-ms MS]
-//!                                                    demo serving workload
+//!                  [--deadline-ms MS]                demo serving workload
 //! merge-spmm stats [--file FILE] [--format text|json|prom]
 //!                                                    one-shot metrics export
 //! merge-spmm suite [--seed N]                        dataset inventory
@@ -62,7 +62,13 @@ USAGE:
                                        on shutdown (atomic write; parse with any
                                        JSON reader or `merge-spmm stats --file`)
                    [--slow-ms MS]      journal requests slower than MS end-to-end
-                                       (default 100; 0 disables the slow journal)
+                                       (default 100; must be ≥ 0.001 — zero and
+                                       sub-microsecond values are rejected)
+                   [--deadline-ms MS]  per-request completion budget: requests
+                                       that cannot finish in time are shed with
+                                       a deadline-expired error instead of
+                                       executed (default: no deadline; must be
+                                       ≥ 0.001 when given)
   merge-spmm stats [--file FILE] [--format text|json|prom]
                                        one-shot metrics export: summarize a
                                        --metrics-json dump (--file), or run a small
@@ -84,6 +90,23 @@ fn opt(args: &[String], name: &str) -> Option<String> {
         .and_then(|i| args.get(i + 1).cloned())
 }
 
+/// Parse a `--*-ms` flag: a finite number of milliseconds no smaller than
+/// one microsecond.  Zero used to *silently disable* the slow journal —
+/// an easy foot-gun when someone meant "very strict" — so it is rejected
+/// outright, as are sub-microsecond and unparseable values.
+fn parse_ms_flag(args: &[String], name: &str) -> Result<Option<f64>, String> {
+    let Some(raw) = opt(args, name) else {
+        return Ok(None);
+    };
+    match raw.parse::<f64>() {
+        Ok(v) if v.is_finite() && v >= 0.001 => Ok(Some(v)),
+        Ok(v) => Err(format!(
+            "serve: {name} {v} is out of range — expected milliseconds ≥ 0.001 (1 µs)"
+        )),
+        Err(_) => Err(format!("serve: {name} expects milliseconds, got `{raw}`")),
+    }
+}
+
 /// Positional argument: first token that is neither a flag nor a flag value.
 fn positional(args: &[String]) -> Option<&str> {
     let mut skip = false;
@@ -95,7 +118,7 @@ fn positional(args: &[String]) -> Option<&str> {
         if a == "--seed" || a == "--out" || a == "--n" || a == "--mtx" || a == "--artifacts"
             || a == "--requests" || a == "--workers" || a == "--engines" || a == "--plans"
             || a == "--shards" || a == "--metrics-json" || a == "--slow-ms"
-            || a == "--file" || a == "--format"
+            || a == "--deadline-ms" || a == "--file" || a == "--format"
         {
             skip = true;
             continue;
@@ -265,13 +288,28 @@ fn cmd_serve(args: &[String]) -> i32 {
     }
     // observability knobs: periodic JSON dumps + slow-request journal
     let metrics_file = opt(args, "--metrics-json").map(PathBuf::from);
-    let slow_ms: f64 = opt(args, "--slow-ms").and_then(|s| s.parse().ok()).unwrap_or(100.0);
+    let slow_ms = match parse_ms_flag(args, "--slow-ms") {
+        Ok(v) => v.unwrap_or(100.0),
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    // admission control: default per-request completion budget
+    let deadline = match parse_ms_flag(args, "--deadline-ms") {
+        Ok(v) => v.map(|ms| std::time::Duration::from_secs_f64(ms / 1e3)),
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
     let server = match Server::start(
         engine_cfg,
         ServerConfig {
             workers,
             metrics_file: metrics_file.clone(),
-            slow_threshold: std::time::Duration::from_secs_f64(slow_ms.max(0.0) / 1e3),
+            slow_threshold: std::time::Duration::from_secs_f64(slow_ms / 1e3),
+            deadline,
             ..Default::default()
         },
     ) {
@@ -301,9 +339,15 @@ fn cmd_serve(args: &[String]) -> i32 {
         })
         .collect();
     let mut ok = 0usize;
+    let mut shed = 0usize;
     for h in handles {
-        if h.recv().map(|r| r.is_ok()).unwrap_or(false) {
-            ok += 1;
+        match h {
+            Ok(h) => match h.recv() {
+                Ok(Ok(_)) => ok += 1,
+                Ok(Err(e)) if e.to_string().starts_with("shed (") => shed += 1,
+                _ => {}
+            },
+            Err(e) => eprintln!("(submit rejected: {e})"),
         }
     }
     let wall = t0.elapsed().as_secs_f64();
@@ -318,7 +362,10 @@ fn cmd_serve(args: &[String]) -> i32 {
         );
     }
     let snap = server.shutdown();
-    println!("served {ok}/{requests} in {wall:.2}s — {:.1} req/s", ok as f64 / wall);
+    println!(
+        "served {ok}/{requests} ({shed} shed) in {wall:.2}s — {:.1} req/s",
+        ok as f64 / wall
+    );
     println!("{snap}");
     if let Some(path) = &metrics_file {
         println!("metrics dump -> {}", path.display());

@@ -41,7 +41,10 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::coordinator::admission::{shed_error, CancelToken, Deadline, ShedPoint, ShedReason};
 use crate::coordinator::engine::{EngineConfig, ExecutionPath, SpmmResult};
+#[cfg(feature = "faults")]
+use crate::coordinator::faults;
 use crate::coordinator::trace::{RequestTrace, Stage, TracePath};
 use crate::coordinator::workers::{panic_message, WorkerRuntime};
 use crate::coordinator::Metrics;
@@ -98,6 +101,27 @@ struct GatherState {
     /// exec span start: the moment every shard task was enqueued
     exec_start: Instant,
     metrics: Arc<Metrics>,
+    /// the parent request's completion budget and cancel token; every
+    /// shard checks them before running its kernel, so a request that
+    /// died mid-scatter stops burning workers after at most the shard
+    /// already in flight
+    deadline: Deadline,
+    cancel: CancelToken,
+    /// first shed reason observed by any shard (the gather replies with a
+    /// shed error instead of a result, counted as shed — not an error)
+    shed: Mutex<Option<ShedReason>>,
+}
+
+/// Why the parent request is dead (cancellation wins the tie), or `None`
+/// while it is still worth executing for.
+fn parent_shed(deadline: Deadline, cancel: &CancelToken, now: Instant) -> Option<ShedReason> {
+    if cancel.is_cancelled() {
+        Some(ShedReason::Cancelled)
+    } else if deadline.expired(now) {
+        Some(ShedReason::DeadlineExpired)
+    } else {
+        None
+    }
 }
 
 /// One shard's work order: everything a pool worker needs to execute the
@@ -144,6 +168,9 @@ impl ShardTask {
                 trace: RequestTrace::begin(0),
                 exec_start: Instant::now(),
                 metrics: Arc::new(Metrics::new()),
+                deadline: Deadline::none(),
+                cancel: CancelToken::new(),
+                shed: Mutex::new(None),
             }),
         }
     }
@@ -253,7 +280,27 @@ impl ShardedEngine {
         reply: Sender<Result<SpmmResult>>,
         trace: RequestTrace,
     ) {
-        if let Err(e) = self.scatter(a, b, n, reply.clone(), trace) {
+        self.submit_admitted(a, b, n, reply, trace, Deadline::none(), CancelToken::new());
+    }
+
+    /// [`submit_traced`](Self::submit_traced) with the request's admission
+    /// state carried through: the router's entry point for requests that
+    /// have a deadline and a live cancel token.  Scatter sheds up front if
+    /// the parent is already dead; otherwise every shard re-checks before
+    /// its kernel and the gather replies with a shed error instead of a
+    /// result when any shard found the parent dead.
+    #[allow(clippy::too_many_arguments)]
+    pub fn submit_admitted(
+        &self,
+        a: &Arc<Csr>,
+        b: &Arc<Vec<f32>>,
+        n: usize,
+        reply: Sender<Result<SpmmResult>>,
+        trace: RequestTrace,
+        deadline: Deadline,
+        cancel: CancelToken,
+    ) {
+        if let Err(e) = self.scatter(a, b, n, reply.clone(), trace, deadline, cancel) {
             self.metrics.errors.fetch_add(1, Ordering::Relaxed);
             let _ = reply.send(Err(e));
         }
@@ -274,6 +321,7 @@ impl ShardedEngine {
             .map_err(|e| anyhow!("sharded engine shut down: {e}"))?
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn scatter(
         &self,
         a: &Arc<Csr>,
@@ -281,12 +329,24 @@ impl ShardedEngine {
         n: usize,
         reply: Sender<Result<SpmmResult>>,
         mut trace: RequestTrace,
+        deadline: Deadline,
+        cancel: CancelToken,
     ) -> Result<()> {
         // count the request before validation so `requests ≥ completed +
         // errors` holds on the sharded path exactly as on the unsharded one
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         if b.len() != a.k * n {
             return Err(anyhow!("B must be k×n row-major ({}×{n})", a.k));
+        }
+        // parent already dead at scatter entry: shed before cutting.  The
+        // request was counted above, so only the reason counter moves (the
+        // sharded path never goes through `workers::shed_request`, which
+        // counts both).
+        if let Some(reason) = parent_shed(deadline, &cancel, Instant::now()) {
+            self.metrics.shed_counter(reason).fetch_add(1, Ordering::Relaxed);
+            trace.mark_shed(ShedPoint::Shard, reason);
+            let _ = reply.send(Err(shed_error(reason, trace.id())));
+            return Ok(());
         }
         // queue-wait ends when the scatter starts working on the request
         trace.queue_ended(Instant::now());
@@ -342,6 +402,9 @@ impl ShardedEngine {
             trace,
             exec_start,
             metrics: Arc::clone(&self.metrics),
+            deadline,
+            cancel,
+            shed: Mutex::new(None),
         });
 
         for ((shard, outcome), (s, range)) in
@@ -375,7 +438,28 @@ pub(crate) fn execute_shard(planner: &Planner, ctx: &mut ExecCtx, task: ShardTas
         outcome,
         gather,
     } = task;
+    // Parent died (deadline passed / handle cancelled) while this shard
+    // waited in the lane: skip the kernel but still count down — the
+    // gather must always complete or the reply channel wedges.
+    if let Some(reason) = parent_shed(gather.deadline, &gather.cancel, Instant::now()) {
+        let mut shed = gather.shed.lock().unwrap();
+        if shed.is_none() {
+            *shed = Some(reason);
+        }
+        drop(shed);
+        drop(out); // lease window back; the backing buffer lives in the gather
+        gather.workers.lock().unwrap().push(worker);
+        if gather.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            finish(&gather);
+        }
+        return;
+    }
     let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+        #[cfg(feature = "faults")]
+        {
+            faults::maybe_delay(faults::FaultSite::Shard, gather.trace.id());
+            faults::maybe_panic(faults::FaultSite::Shard, gather.trace.id());
+        }
         let n = if shard.m == 0 { 0 } else { out.len() / shard.m };
         let c = out.as_mut_slice();
         if shard.nnz() == 0 {
@@ -432,6 +516,18 @@ fn finish(gather: &GatherState) {
     let mut trace = gather.trace;
     trace.span(Stage::Exec, gather.exec_start, exec_end);
     let metrics = &gather.metrics;
+    // A shed parent outranks a shard error: the client walked away (or the
+    // budget did) before the result could matter, so the terminal outcome
+    // is "shed", counted in the reason counter — not `errors`.
+    if let Some(reason) = gather.shed.lock().unwrap().take() {
+        trace.mark_shed(ShedPoint::Shard, reason);
+        let stages = trace.finish(TracePath::Sharded, Instant::now());
+        metrics.record_trace(&stages);
+        metrics.shed_counter(reason).fetch_add(1, Ordering::Relaxed);
+        drop(out); // lease returns to the pool
+        let _ = reply.send(Err(shed_error(reason, trace.id())));
+        return;
+    }
     match error {
         Some(e) => {
             let stages = trace.finish(TracePath::Sharded, Instant::now());
@@ -458,6 +554,10 @@ fn finish(gather: &GatherState) {
             let cache_hit = gather.cache_hits.load(Ordering::Relaxed) == gather.shards;
             // gather span: reply assembly after the last shard landed
             let end = Instant::now();
+            // completed, but past budget: served late rather than shed
+            if gather.deadline.expired(end) {
+                metrics.deadline_missed.fetch_add(1, Ordering::Relaxed);
+            }
             trace.span(Stage::Gather, exec_end, end);
             let stages = trace.finish(TracePath::Sharded, end);
             metrics.record_trace(&stages);
@@ -648,6 +748,51 @@ mod tests {
         let a3 = Arc::new(Csr::empty(0, 40));
         let r3 = eng.spmm(&a3, &b, 4).unwrap();
         assert!(r3.c.is_empty());
+    }
+
+    #[test]
+    fn dead_parent_is_shed_terminally_and_engine_stays_usable() {
+        let eng = ShardedEngine::cpu_only(ShardPolicy::fixed(3), 2, 1);
+        let a = Arc::new(Csr::random(600, 300, 5.0, 153));
+        let b = Arc::new(gen::dense_matrix(300, 8, 154));
+        // deadline already expired at scatter entry → shed before cutting
+        let (tx, rx) = channel();
+        eng.submit_admitted(
+            &a,
+            &b,
+            8,
+            tx,
+            RequestTrace::begin(77),
+            Deadline::within(std::time::Duration::ZERO),
+            CancelToken::new(),
+        );
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(err.to_string().contains("shed (deadline-expired)"), "{err}");
+        assert!(err.to_string().contains("request 77"), "{err}");
+        // cancelled token wins the same gate (and the tie over a deadline)
+        let cancel = CancelToken::new();
+        cancel.cancel();
+        let (tx, rx) = channel();
+        eng.submit_admitted(
+            &a,
+            &b,
+            8,
+            tx,
+            RequestTrace::begin(78),
+            Deadline::within(std::time::Duration::ZERO),
+            cancel,
+        );
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(err.to_string().contains("shed (cancelled)"), "{err}");
+        let snap = eng.metrics().snapshot();
+        assert_eq!(snap.requests, 2);
+        assert_eq!(snap.shed_deadline, 1);
+        assert_eq!(snap.cancelled, 1);
+        assert_eq!(snap.completed, 0);
+        assert_eq!(snap.errors, 0);
+        // the engine still serves fresh requests afterwards
+        let r = eng.spmm(&a, &b, 8).unwrap();
+        assert_close(&r.c, &spmm_reference(&a, &b, 8));
     }
 
     #[test]

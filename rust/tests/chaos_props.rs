@@ -1,0 +1,167 @@
+//! Chaos property suite (`--features faults`): under deterministic
+//! injected panics, delays, and queue squeeze — on top of tight
+//! deadlines, cancellations, and dropped handles — every submission
+//! reaches exactly one terminal outcome, no worker wedges (shutdown
+//! drains and joins), and every surviving result is bitwise-identical
+//! to a fault-free baseline.
+//!
+//! The fault plan is process-global, so this file holds a single test:
+//! a second PLAN-touching test would race it under the parallel test
+//! runner.
+
+#![cfg(feature = "faults")]
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use merge_spmm::coordinator::faults::{self, FaultPlan};
+use merge_spmm::coordinator::{Deadline, EngineConfig, Server, ServerConfig};
+use merge_spmm::formats::Csr;
+use merge_spmm::gen;
+
+fn cpu_cfg() -> EngineConfig {
+    EngineConfig {
+        artifacts_dir: None,
+        threshold: 9.35,
+        cpu_workers: 2,
+        ..Default::default()
+    }
+}
+
+/// Clears the global fault plan even when an assert unwinds mid-test, so
+/// a failure here cannot poison unit tests running in the same process.
+struct ClearGuard;
+impl Drop for ClearGuard {
+    fn drop(&mut self) {
+        faults::clear();
+    }
+}
+
+#[test]
+fn chaos_every_request_reaches_exactly_one_terminal_outcome() {
+    // d ≈ 4 keeps every matrix outside the A/B-probe band: plans are
+    // deterministic, so fused and solo execution are bitwise-identical
+    // and the baseline below is a valid reference for survivors.
+    let mats: Vec<(Arc<Csr>, Arc<Vec<f32>>)> = (0..4)
+        .map(|i| {
+            let m = 200 + i * 40;
+            let seed = 9000 + i as u64 * 10;
+            (
+                Arc::new(Csr::random(m, m, 4.0, seed)),
+                Arc::new(gen::dense_matrix(m, 8, seed + 1)),
+            )
+        })
+        .collect();
+
+    // fault-free baseline, batching off: one solo pass per matrix
+    let clean = Server::start(
+        cpu_cfg(),
+        ServerConfig { max_batch: 1, ..Default::default() },
+    )
+    .unwrap();
+    let baseline: Vec<Vec<f32>> = mats
+        .iter()
+        .map(|(a, b)| {
+            clean
+                .submit_blocking(Arc::clone(a), Arc::clone(b), 8)
+                .unwrap()
+                .c
+                .into_vec()
+        })
+        .collect();
+    clean.shutdown();
+
+    let _guard = ClearGuard;
+    faults::install(FaultPlan {
+        seed: 0xC4A05,
+        panic_one_in: 5,
+        delay_one_in: 3,
+        delay: Duration::from_millis(2),
+        squeeze_queue_to: 4,
+    });
+
+    let server = Server::start(
+        cpu_cfg(),
+        ServerConfig {
+            workers: 2,
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            queue_capacity: 8,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    const N: usize = 48;
+    let mut kept = Vec::new();
+    let mut dropped = 0u64;
+    for i in 0..N {
+        let (a, b) = &mats[i % mats.len()];
+        let deadline = if i == 7 {
+            Deadline::within(Duration::ZERO) // guaranteed dead on arrival
+        } else {
+            match i % 3 {
+                0 => Deadline::none(),
+                1 => Deadline::within(Duration::from_millis(2)), // tight
+                _ => Deadline::within(Duration::from_secs(30)),  // generous
+            }
+        };
+        let h = server
+            .submit_with(Arc::clone(a), Arc::clone(b), 8, deadline)
+            .unwrap();
+        if i % 6 == 5 {
+            h.cancel();
+        }
+        if i % 8 == 3 {
+            drop(h); // Drop cancels: its terminal outcome lands in the counters
+            dropped += 1;
+        } else {
+            kept.push((i, h));
+        }
+    }
+
+    let (mut ok, mut shed, mut errs) = (0u64, 0u64, 0u64);
+    for (i, h) in &kept {
+        match h.recv().expect("every kept handle gets exactly one terminal outcome") {
+            Ok(r) => {
+                let want = &baseline[i % mats.len()];
+                assert_eq!(r.c.len(), want.len(), "request {i}: wrong output shape");
+                assert!(
+                    r.c.iter().zip(want).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "request {i}: survivor must be bitwise-identical to the fault-free baseline"
+                );
+                ok += 1;
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                if msg.starts_with("shed (") {
+                    shed += 1;
+                } else {
+                    assert!(msg.contains("panicked"), "request {i}: unexpected error: {msg}");
+                    errs += 1;
+                }
+            }
+        }
+        assert!(h.try_recv().is_err(), "request {i} got a second terminal message");
+    }
+    let accounted_via_handles = ok + shed + errs;
+    assert_eq!(accounted_via_handles, kept.len() as u64);
+    drop(kept);
+
+    // no worker wedges: shutdown drains the queues and joins every thread
+    let snap = server.shutdown();
+
+    // conservation: every one of the 48 submissions — including dropped
+    // handles, whose replies nobody read — lands in exactly one terminal
+    // counter.
+    let terminal =
+        snap.completed + snap.errors + snap.shed_deadline + snap.shed_codel + snap.cancelled;
+    assert_eq!(terminal, N as u64, "terminal outcomes must conserve submissions: {snap}");
+    // a dropped handle may have slipped into execution before its
+    // cancellation was observed, so completed/errors can each exceed the
+    // handle-side tallies — but only by at most the dropped count.
+    assert!(snap.completed >= ok && snap.completed - ok <= dropped, "{snap}");
+    assert!(snap.errors >= errs && snap.errors - errs <= dropped, "{snap}");
+    assert!(snap.cancelled >= 1, "explicit cancels must register: {snap}");
+    assert!(snap.shed_deadline >= 1, "the dead-on-arrival request must shed: {snap}");
+}

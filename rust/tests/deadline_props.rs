@@ -1,0 +1,197 @@
+//! End-to-end admission-control properties: expired deadlines and
+//! cancelled handles are shed with exactly one terminal error, dropped
+//! handles count as cancellations, the server-wide default deadline
+//! stamps plain `submit`, and an overload mix conserves requests across
+//! the terminal counters.  CPU-only so it runs on a fresh checkout.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use merge_spmm::coordinator::{Deadline, EngineConfig, Server, ServerConfig};
+use merge_spmm::formats::Csr;
+use merge_spmm::gen;
+
+fn cpu_cfg() -> EngineConfig {
+    EngineConfig {
+        artifacts_dir: None,
+        threshold: 9.35,
+        cpu_workers: 2,
+        ..Default::default()
+    }
+}
+
+/// d ≈ 4 keeps every matrix outside the A/B-probe band so plans (and
+/// therefore timing) stay deterministic across servers.
+fn fixture(seed: u64) -> (Arc<Csr>, Arc<Vec<f32>>) {
+    let a = Arc::new(Csr::random(300, 300, 4.0, seed));
+    let b = Arc::new(gen::dense_matrix(300, 8, seed + 1));
+    (a, b)
+}
+
+#[test]
+fn expired_deadline_is_shed_with_one_terminal_error() {
+    let server = Server::start(cpu_cfg(), ServerConfig::default()).unwrap();
+    let (a, b) = fixture(2101);
+
+    let h = server
+        .submit_with(Arc::clone(&a), Arc::clone(&b), 8, Deadline::within(Duration::ZERO))
+        .unwrap();
+    let err = h.recv().expect("a shed request still gets a terminal reply").unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("shed (deadline-expired)"), "{msg}");
+    assert!(msg.contains(&format!("request {}", h.id())), "{msg}");
+    assert!(h.try_recv().is_err(), "a request must get exactly one terminal message");
+
+    // the server keeps serving fresh requests after a shed
+    let r = server.submit_blocking(Arc::clone(&a), Arc::clone(&b), 8).unwrap();
+    assert_eq!(r.c.len(), 300 * 8);
+
+    let snap = server.shutdown();
+    assert_eq!(snap.shed_deadline, 1);
+    assert_eq!(snap.completed, 1);
+    assert_eq!(snap.cancelled, 0);
+    assert_eq!(snap.errors, 0);
+}
+
+#[test]
+fn cancelled_handle_is_shed_before_execution() {
+    let server = Server::start(
+        cpu_cfg(),
+        ServerConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(50),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let (a, b) = fixture(2111);
+
+    let victim = server.submit(Arc::clone(&a), Arc::clone(&b), 8).unwrap();
+    victim.cancel();
+    let rest: Vec<_> = (0..3)
+        .map(|_| server.submit(Arc::clone(&a), Arc::clone(&b), 8).unwrap())
+        .collect();
+
+    let err = victim.recv().expect("cancelled request gets a terminal reply").unwrap_err();
+    assert!(err.to_string().contains("shed (cancelled)"), "{err}");
+    for h in rest {
+        h.recv().unwrap().unwrap();
+    }
+
+    let snap = server.shutdown();
+    assert_eq!(snap.cancelled, 1);
+    assert_eq!(snap.completed, 3);
+    assert_eq!(snap.errors, 0);
+}
+
+#[test]
+fn dropped_handle_counts_as_cancelled() {
+    let server = Server::start(
+        cpu_cfg(),
+        ServerConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(50),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let (a, b) = fixture(2121);
+
+    let victim = server.submit(Arc::clone(&a), Arc::clone(&b), 8).unwrap();
+    drop(victim); // no reply received yet → Drop cancels the token
+    let rest: Vec<_> = (0..3)
+        .map(|_| server.submit(Arc::clone(&a), Arc::clone(&b), 8).unwrap())
+        .collect();
+    for h in rest {
+        h.recv().unwrap().unwrap();
+    }
+
+    let snap = server.shutdown();
+    assert_eq!(snap.cancelled, 1);
+    assert_eq!(snap.completed, 3);
+    assert_eq!(snap.errors, 0);
+}
+
+#[test]
+fn server_default_deadline_applies_to_plain_submit() {
+    let server = Server::start(
+        cpu_cfg(),
+        ServerConfig {
+            deadline: Some(Duration::from_nanos(1)),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let (a, b) = fixture(2131);
+
+    // plain submit inherits the (already-expired) server default …
+    let h = server.submit(Arc::clone(&a), Arc::clone(&b), 8).unwrap();
+    let err = h.recv().unwrap().unwrap_err();
+    assert!(err.to_string().contains("shed (deadline-expired)"), "{err}");
+
+    // … while an explicit Deadline::none() overrides it
+    let h = server
+        .submit_with(Arc::clone(&a), Arc::clone(&b), 8, Deadline::none())
+        .unwrap();
+    h.recv().unwrap().expect("explicit no-deadline request must run");
+
+    let snap = server.shutdown();
+    assert_eq!(snap.shed_deadline, 1);
+    assert_eq!(snap.completed, 1);
+}
+
+#[test]
+fn overload_mix_yields_exactly_one_terminal_outcome_per_request() {
+    let server = Server::start(
+        cpu_cfg(),
+        ServerConfig {
+            workers: 1,
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            queue_capacity: 8,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let a = Arc::new(Csr::random(800, 800, 4.0, 2141));
+    let b = Arc::new(gen::dense_matrix(800, 32, 2142));
+
+    let handles: Vec<_> = (0..16)
+        .map(|i| {
+            let d = if i % 2 == 0 {
+                Deadline::none()
+            } else {
+                Deadline::within(Duration::ZERO)
+            };
+            server
+                .submit_with(Arc::clone(&a), Arc::clone(&b), 32, d)
+                .unwrap()
+        })
+        .collect();
+
+    let (mut ok, mut shed) = (0u64, 0u64);
+    for h in &handles {
+        match h.recv().expect("every request gets exactly one terminal outcome") {
+            Ok(r) => {
+                assert_eq!(r.c.len(), 800 * 32);
+                ok += 1;
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                assert!(msg.starts_with("shed ("), "unexpected error shape: {msg}");
+                shed += 1;
+            }
+        }
+        assert!(h.try_recv().is_err(), "second message for one request");
+    }
+    assert_eq!(ok, 8, "no-deadline requests all complete");
+    assert_eq!(shed, 8, "zero-budget requests all shed");
+
+    let snap = server.shutdown();
+    assert_eq!(snap.completed, 8);
+    assert_eq!(
+        snap.completed + snap.errors + snap.shed_deadline + snap.shed_codel + snap.cancelled,
+        16,
+        "terminal outcomes must conserve submissions: {snap}"
+    );
+}

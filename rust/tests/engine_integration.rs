@@ -47,7 +47,7 @@ fn concurrent_load_no_drops() {
         let a = Arc::clone(&mats[mi]);
         let b = Arc::clone(&bs[0]);
         expect.push(mi);
-        handles.push(server.submit(a, b, 8));
+        handles.push(server.submit(a, b, 8).unwrap());
     }
     let mut ok = 0;
     for (h, &mi) in handles.iter().zip(&expect) {
@@ -71,7 +71,7 @@ fn submissions_during_shutdown_dont_hang() {
     let server = Server::start(cpu_cfg(), ServerConfig::default()).unwrap();
     let a = Arc::new(Csr::random(50, 50, 3.0, 3200));
     let b = Arc::new(gen::dense_matrix(50, 4, 3201));
-    let h = server.submit(Arc::clone(&a), Arc::clone(&b), 4);
+    let h = server.submit(Arc::clone(&a), Arc::clone(&b), 4).unwrap();
     let _ = h.recv();
     let snap = server.shutdown();
     assert!(snap.completed >= 1);
@@ -97,7 +97,7 @@ fn throughput_scales_with_workers() {
         let b = Arc::new(gen::dense_matrix(600, 32, 3301));
         let t0 = std::time::Instant::now();
         let handles: Vec<_> = (0..60)
-            .map(|_| server.submit(Arc::clone(&a), Arc::clone(&b), 32))
+            .map(|_| server.submit(Arc::clone(&a), Arc::clone(&b), 32).unwrap())
             .collect();
         for h in handles {
             let _ = h.recv().unwrap();

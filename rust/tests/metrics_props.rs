@@ -34,6 +34,7 @@ fn breakdown(id: u64, path: TracePath, d: f64) -> StageBreakdown {
         pack_span: Some((now, now)),
         exec_span: Some((now, now)),
         gather_span: Some((now, now)),
+        shed: None,
     }
 }
 
@@ -274,6 +275,10 @@ fn golden_prometheus_export_covers_every_snapshot_field() {
                 .iter()
                 .map(|s| format!("spmm_stage_latency_seconds_bucket{{stage=\"{}\"", s.name()))
                 .collect(),
+            "queue_sojourn" => vec![
+                "spmm_queue_sojourn_seconds_bucket{lane=\"shard\"".into(),
+                "spmm_queue_sojourn_seconds_bucket{lane=\"batch\"".into(),
+            ],
             other => vec![format!("spmm_{other} ")],
         }
     };

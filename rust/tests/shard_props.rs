@@ -389,8 +389,8 @@ fn prop_mixed_traffic_unified_pool() {
                 for _ in 0..10 {
                     // two in flight at once: the bucket holds both when the
                     // deadline fires, so they fuse into one wide pass
-                    let h1 = server.submit(Arc::clone(&small), Arc::clone(&small_b), 8);
-                    let h2 = server.submit(Arc::clone(&small), Arc::clone(&small_b), 8);
+                    let h1 = server.submit(Arc::clone(&small), Arc::clone(&small_b), 8).unwrap();
+                    let h2 = server.submit(Arc::clone(&small), Arc::clone(&small_b), 8).unwrap();
                     for h in [h1, h2] {
                         let r = h.recv().unwrap().unwrap();
                         assert_eq!(r.shards, 1);

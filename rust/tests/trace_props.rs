@@ -138,7 +138,9 @@ fn prop_fused_riders_share_spans_keep_own_queue_waits() {
     .unwrap();
     let a = Arc::new(Csr::random(250, 250, 4.0, 0xE21));
     let b = Arc::new(gen::dense_matrix(250, 8, 0xE22));
-    let handles: Vec<_> = (0..4).map(|_| server.submit(Arc::clone(&a), Arc::clone(&b), 8)).collect();
+    let handles: Vec<_> = (0..4)
+        .map(|_| server.submit(Arc::clone(&a), Arc::clone(&b), 8).unwrap())
+        .collect();
     let results: Vec<SpmmResult> =
         handles.iter().map(|h| h.recv().unwrap().unwrap()).collect();
 
