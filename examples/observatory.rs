@@ -1,0 +1,148 @@
+//! Engine-observatory overhead: what the telemetry subsystem costs a
+//! served request — with the sampler off (the default) and with an
+//! aggressive 1 ms sampler ticking while the same traffic flows.
+//!
+//! Three measurements:
+//!
+//! 1. **micro** — the per-worker attribution path in a tight loop:
+//!    `note_job` → `note_queue_wait` → `note_run` → `note_depth`, the
+//!    exact relaxed-atomic stores a worker pays per retired item.
+//! 2. **serve (sampler off)** — mixed solo + fused traffic through a
+//!    real `Server` with `telemetry_interval: None`; the baseline.
+//! 3. **serve (sampler 1 ms)** — the same workload with the sampler
+//!    ticking 1000×/s (10× the default `serve` cadence), reporting the
+//!    throughput/latency delta plus what the observatory captured: the
+//!    worker table, ring fill, and plan-journal depth.
+//!
+//! Writes `BENCH_obs.json` at the repo root (same schema convention as
+//! `BENCH_trace.json` etc.: the committed file is a `pending-toolchain`
+//! placeholder; running this overwrites it).
+//!
+//! Run: `cargo run --release --example observatory`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use merge_spmm::coordinator::{
+    EngineConfig, JobKind, MetricsSnapshot, Server, ServerConfig, WorkerStats,
+};
+use merge_spmm::formats::Csr;
+use merge_spmm::gen;
+
+/// One run's outcome: (requests served, req/s, final metrics snapshot).
+type Measured = (u64, f64, MetricsSnapshot);
+
+/// Serve the fixed mixed workload and return what it measured.
+fn measure(interval: Option<Duration>, quick: bool) -> anyhow::Result<Measured> {
+    let server = Server::start(
+        EngineConfig { artifacts_dir: None, cpu_workers: 2, ..Default::default() },
+        ServerConfig {
+            workers: 2,
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            telemetry_interval: interval,
+            ..Default::default()
+        },
+    )?;
+    let n = 8usize;
+    let shared = Arc::new(Csr::random(2000, 1024, 6.0, 31)); // fused co-batches
+    let solo = Arc::new(Csr::random(1500, 1024, 3.0, 32)); // singleton path
+    let b = Arc::new(gen::dense_matrix(1024, n, 33));
+
+    // warm both fingerprints so the runs compare plan-cache hits
+    server.submit_blocking(Arc::clone(&shared), Arc::clone(&b), n)?;
+    server.submit_blocking(Arc::clone(&solo), Arc::clone(&b), n)?;
+
+    let rounds = if quick { 20 } else { 100 };
+    let t0 = Instant::now();
+    let mut served = 0u64;
+    for _ in 0..rounds {
+        let fused: Vec<_> = (0..4)
+            .map(|_| server.submit(Arc::clone(&shared), Arc::clone(&b), n).expect("submit"))
+            .collect();
+        let lone = server.submit(Arc::clone(&solo), Arc::clone(&b), n)?;
+        for h in fused {
+            std::hint::black_box(h.recv()??);
+            served += 1;
+        }
+        std::hint::black_box(lone.recv()??);
+        served += 1;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    Ok((served, served as f64 / wall, server.shutdown()))
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+
+    // --- 1) micro: the worker attribution path, per retired item ---
+    let ws = WorkerStats::new();
+    let ops: u64 = if quick { 500_000 } else { 5_000_000 };
+    let t0 = Instant::now();
+    for i in 0..ops {
+        ws.note_job(JobKind::Solo);
+        ws.note_queue_wait(1, 3);
+        ws.note_run(1, 5);
+        ws.note_depth(i % 7);
+    }
+    let note_ns = t0.elapsed().as_nanos() as f64 / ops as f64;
+    std::hint::black_box(ws.snapshot(0));
+    println!("micro: worker attribution path = {note_ns:.1} ns per item");
+
+    // --- 2 + 3) serve: identical workload, sampler off vs 1 ms ---
+    let (off_served, off_rps, off_snap) = measure(None, quick)?;
+    let off_mean_us = off_snap.mean_latency_s * 1e6;
+    println!(
+        "serve (sampler off):  {off_served} requests, {off_rps:.0} req/s, \
+         mean {off_mean_us:.0} µs"
+    );
+
+    let tick = Duration::from_millis(1);
+    let (on_served, on_rps, on_snap) = measure(Some(tick), quick)?;
+    let on_mean_us = on_snap.mean_latency_s * 1e6;
+    let overhead_pct =
+        if off_mean_us > 0.0 { (on_mean_us - off_mean_us) / off_mean_us * 100.0 } else { 0.0 };
+    println!(
+        "serve (sampler 1 ms): {on_served} requests, {on_rps:.0} req/s, mean {on_mean_us:.0} µs \
+         — sampler ≈ {overhead_pct:+.2}% of mean latency"
+    );
+    println!(
+        "  observatory: {} samples, {} plan-journal entries",
+        on_snap.telemetry.len(),
+        on_snap.plan_events.len()
+    );
+    for w in &on_snap.worker_stats {
+        println!(
+            "  wrk {}: {} solo, {} fused, {} shard — busy {:.1} ms, depth hwm {}",
+            w.worker,
+            w.jobs_solo,
+            w.jobs_fused,
+            w.jobs_shard,
+            w.busy_us as f64 / 1e3,
+            w.depth_hwm
+        );
+    }
+
+    let out = format!(
+        "{{\n  \"format\": \"bench-obs-v1\",\n  \"status\": \"measured\",\n  \
+         \"command\": \"cargo run --release --example observatory\",\n  \
+         \"worker_note_path_ns\": {note_ns:.1},\n  \
+         \"off\": {{\"requests\": {off_served}, \"req_per_s\": {off_rps:.1}, \
+         \"mean_latency_us\": {off_mean_us:.1}}},\n  \
+         \"on\": {{\"requests\": {on_served}, \"req_per_s\": {on_rps:.1}, \
+         \"mean_latency_us\": {on_mean_us:.1}, \"interval_ms\": 1, \
+         \"samples\": {}, \"plan_events\": {}}},\n  \
+         \"sampler_overhead_pct_of_mean\": {overhead_pct:.4}\n}}\n",
+        on_snap.telemetry.len(),
+        on_snap.plan_events.len()
+    );
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_obs.json"))
+        .unwrap_or_else(|| "BENCH_obs.json".into());
+    match std::fs::write(&path, out) {
+        Ok(()) => println!("-> {}", path.display()),
+        Err(e) => eprintln!("(BENCH_obs.json write failed: {e})"),
+    }
+    Ok(())
+}

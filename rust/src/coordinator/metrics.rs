@@ -21,9 +21,13 @@
 //! so a new metric cannot silently miss export.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use super::admission::ShedReason;
+use super::telemetry::{
+    EventRing, PlanEvent, PlanJournal, TelemetrySample, WorkerStats, WorkerStatsSnapshot,
+    TELEMETRY_RING_CAP,
+};
 use super::trace::{Stage, StageBreakdown, TracePath};
 use crate::util::json::Json;
 
@@ -282,10 +286,19 @@ pub struct Metrics {
     /// shard lane / batches waiting in the batch lane
     queue_shard_depth: AtomicU64,
     queue_batch_depth: AtomicU64,
+    /// monotonic high-water marks of the lane depths, bumped at **push**
+    /// time ([`Self::note_queue_depth`]) so bursts between snapshots are
+    /// not invisible the way the point-in-time gauges above are
+    queue_shard_depth_hwm: AtomicU64,
+    queue_batch_depth_hwm: AtomicU64,
     /// gauges mirrored from the output-buffer free-list
     buffers_pooled: AtomicU64,
     buffers_allocated: AtomicU64,
     buffer_reuses: AtomicU64,
+    /// monotonic high-water mark of the free-list occupancy (mirrored
+    /// from `BufferStats::pooled_hwm` with `fetch_max`, so whichever
+    /// engine syncs last cannot regress it)
+    buffers_pooled_hwm: AtomicU64,
     /// gauges mirrored from the planner's partition-replay counters
     partition_hits: AtomicU64,
     partition_misses: AtomicU64,
@@ -304,6 +317,16 @@ pub struct Metrics {
     /// slow-request threshold in µs (0 disables the slow ring)
     slow_threshold_us: AtomicU64,
     journal: Mutex<Journal>,
+    /// per-worker attribution slots, registered once by the unified
+    /// runtime at spawn (`register_worker_stats`); workers write their own
+    /// slot with relaxed atomics, the snapshot reader only reads
+    worker_stats: Mutex<Vec<Arc<WorkerStats>>>,
+    /// continuous telemetry ring: written only by the sampler thread
+    /// (`record_sample`), never the request path
+    samples: Mutex<EventRing<TelemetrySample, TELEMETRY_RING_CAP>>,
+    /// plan-decision audit journal, shared with the planner via
+    /// [`Self::plan_journal`]
+    plan_journal: Arc<PlanJournal>,
 }
 
 impl Metrics {
@@ -361,6 +384,65 @@ impl Metrics {
     pub fn sync_queue_gauges(&self, shard_depth: usize, batch_depth: usize) {
         self.queue_shard_depth.store(shard_depth as u64, Ordering::Relaxed);
         self.queue_batch_depth.store(batch_depth as u64, Ordering::Relaxed);
+        self.note_queue_depth(SHARD_LANE, shard_depth as u64);
+        self.note_queue_depth(BATCH_LANE, batch_depth as u64);
+    }
+
+    /// Bump the monotonic high-water mark of one lane's depth (called by
+    /// `WorkQueue` at push time — one relaxed `fetch_max`, no lock).
+    pub fn note_queue_depth(&self, lane: usize, depth: u64) {
+        let hwm = if lane == SHARD_LANE {
+            &self.queue_shard_depth_hwm
+        } else {
+            &self.queue_batch_depth_hwm
+        };
+        hwm.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    /// Adopt the unified runtime's per-worker attribution slots (called
+    /// once at spawn).  Replaces any previous registration.
+    pub fn register_worker_stats(&self, stats: Vec<Arc<WorkerStats>>) {
+        *self.worker_stats.lock().unwrap() = stats;
+    }
+
+    /// The shared plan-decision audit journal (install into a `Planner`
+    /// with `Planner::install_journal`).
+    pub fn plan_journal(&self) -> Arc<PlanJournal> {
+        Arc::clone(&self.plan_journal)
+    }
+
+    /// Build one telemetry sample from the current counters plus the
+    /// runtime-owned gauges only the caller can see (queue depths, exec
+    /// stats).  Wall-clock stamped; counters are cumulative — rates fall
+    /// out as inter-sample deltas at export time.
+    pub fn sample_now(
+        &self,
+        exec: &crate::exec::ExecStats,
+        shard_depth: usize,
+        batch_depth: usize,
+    ) -> TelemetrySample {
+        TelemetrySample {
+            unix_us: 0,
+            queue_shard_depth: shard_depth as u64,
+            queue_batch_depth: batch_depth as u64,
+            workers_busy: exec.workers.saturating_sub(exec.parked) as u64,
+            workers_parked: exec.parked as u64,
+            buffers_pooled: exec.buffers.pooled,
+            plan_hits: self.plan_hits.load(Ordering::Relaxed),
+            plan_misses: self.plan_misses.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            shed: self.shed_deadline.load(Ordering::Relaxed)
+                + self.shed_codel.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
+            deadline_missed: self.deadline_missed.load(Ordering::Relaxed),
+        }
+        .stamped()
+    }
+
+    /// Append one sampler tick to the telemetry ring (sampler thread
+    /// only — the request path never touches this mutex).
+    pub fn record_sample(&self, sample: TelemetrySample) {
+        self.samples.lock().unwrap().push(sample);
     }
 
     /// Mirror executor pool / buffer free-list / partition-replay state
@@ -377,6 +459,8 @@ impl Metrics {
         self.buffers_pooled.store(exec.buffers.pooled, Ordering::Relaxed);
         self.buffers_allocated.store(exec.buffers.allocated, Ordering::Relaxed);
         self.buffer_reuses.store(exec.buffers.reused, Ordering::Relaxed);
+        // max, not store: several engines may sync; none may regress it
+        self.buffers_pooled_hwm.fetch_max(exec.buffers.pooled_hwm, Ordering::Relaxed);
         self.partition_hits.store(partition.hits, Ordering::Relaxed);
         self.partition_misses.store(partition.misses, Ordering::Relaxed);
     }
@@ -456,6 +540,16 @@ impl Metrics {
             let j = self.journal.lock().unwrap();
             (j.slow.to_vec(), j.recent.to_vec())
         };
+        let worker_stats: Vec<WorkerStatsSnapshot> = self
+            .worker_stats
+            .lock()
+            .unwrap()
+            .iter()
+            .enumerate()
+            .map(|(i, w)| w.snapshot(i))
+            .collect();
+        let telemetry = self.samples.lock().unwrap().to_vec();
+        let plan_events = self.plan_journal.to_vec();
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -494,9 +588,12 @@ impl Metrics {
             pool_jobs: self.pool_jobs.load(Ordering::Relaxed),
             queue_shard_depth: self.queue_shard_depth.load(Ordering::Relaxed),
             queue_batch_depth: self.queue_batch_depth.load(Ordering::Relaxed),
+            queue_shard_depth_hwm: self.queue_shard_depth_hwm.load(Ordering::Relaxed),
+            queue_batch_depth_hwm: self.queue_batch_depth_hwm.load(Ordering::Relaxed),
             buffers_pooled: self.buffers_pooled.load(Ordering::Relaxed),
             buffers_allocated: self.buffers_allocated.load(Ordering::Relaxed),
             buffer_reuses: self.buffer_reuses.load(Ordering::Relaxed),
+            buffers_pooled_hwm: self.buffers_pooled_hwm.load(Ordering::Relaxed),
             partition_hits: self.partition_hits.load(Ordering::Relaxed),
             partition_misses: self.partition_misses.load(Ordering::Relaxed),
             tuner_threshold: f64::from_bits(self.tuner_threshold_bits.load(Ordering::Relaxed)),
@@ -509,6 +606,9 @@ impl Metrics {
             slow_threshold_s: self.slow_threshold_s(),
             slow_requests,
             recent_requests,
+            worker_stats,
+            telemetry,
+            plan_events,
         }
     }
 }
@@ -595,10 +695,16 @@ pub struct MetricsSnapshot {
     /// two-lane work-queue depths at snapshot time
     pub queue_shard_depth: u64,
     pub queue_batch_depth: u64,
+    /// monotonic high-water marks of the lane depths, tracked at push
+    /// time — bursts between snapshots show up here
+    pub queue_shard_depth_hwm: u64,
+    pub queue_batch_depth_hwm: u64,
     /// output-buffer free-list gauges
     pub buffers_pooled: u64,
     pub buffers_allocated: u64,
     pub buffer_reuses: u64,
+    /// monotonic high-water mark of the free-list occupancy
+    pub buffers_pooled_hwm: u64,
     /// partition replay: phase-1 splits reused vs recomputed
     pub partition_hits: u64,
     pub partition_misses: u64,
@@ -621,6 +727,14 @@ pub struct MetricsSnapshot {
     pub slow_requests: Vec<JournalEntry>,
     /// the last traces regardless of duration (≤ [`RECENT_JOURNAL_CAP`])
     pub recent_requests: Vec<JournalEntry>,
+    /// per-worker attribution table, one row per unified-runtime worker
+    pub worker_stats: Vec<WorkerStatsSnapshot>,
+    /// continuous telemetry ring, oldest → newest
+    /// (≤ [`TELEMETRY_RING_CAP`] samples)
+    pub telemetry: Vec<TelemetrySample>,
+    /// plan-decision audit journal, oldest → newest
+    /// (≤ [`super::telemetry::PLAN_JOURNAL_CAP`] events)
+    pub plan_events: Vec<PlanEvent>,
 }
 
 impl MetricsSnapshot {
@@ -656,9 +770,12 @@ impl MetricsSnapshot {
         "pool_jobs",
         "queue_shard_depth",
         "queue_batch_depth",
+        "queue_shard_depth_hwm",
+        "queue_batch_depth_hwm",
         "buffers_pooled",
         "buffers_allocated",
         "buffer_reuses",
+        "buffers_pooled_hwm",
         "partition_hits",
         "partition_misses",
         "tuner_threshold",
@@ -671,6 +788,9 @@ impl MetricsSnapshot {
         "slow_threshold_s",
         "slow_requests",
         "recent_requests",
+        "worker_stats",
+        "telemetry",
+        "plan_events",
     ];
 
     /// Plan-cache hit rate over all planned requests (0 when none yet).
@@ -689,7 +809,7 @@ impl MetricsSnapshot {
     pub fn to_json(&self) -> String {
         use std::collections::BTreeMap;
         let mut m = BTreeMap::new();
-        let scalars: [(&str, f64); 37] = [
+        let scalars: [(&str, f64); 40] = [
             ("requests", self.requests as f64),
             ("completed", self.completed as f64),
             ("errors", self.errors as f64),
@@ -718,9 +838,12 @@ impl MetricsSnapshot {
             ("pool_jobs", self.pool_jobs as f64),
             ("queue_shard_depth", self.queue_shard_depth as f64),
             ("queue_batch_depth", self.queue_batch_depth as f64),
+            ("queue_shard_depth_hwm", self.queue_shard_depth_hwm as f64),
+            ("queue_batch_depth_hwm", self.queue_batch_depth_hwm as f64),
             ("buffers_pooled", self.buffers_pooled as f64),
             ("buffers_allocated", self.buffers_allocated as f64),
             ("buffer_reuses", self.buffer_reuses as f64),
+            ("buffers_pooled_hwm", self.buffers_pooled_hwm as f64),
             ("partition_hits", self.partition_hits as f64),
             ("partition_misses", self.partition_misses as f64),
             ("tuner_threshold", self.tuner_threshold),
@@ -755,64 +878,125 @@ impl MetricsSnapshot {
             "recent_requests".into(),
             Json::Arr(self.recent_requests.iter().map(|e| e.json()).collect()),
         );
+        m.insert(
+            "worker_stats".into(),
+            Json::Arr(self.worker_stats.iter().map(|w| w.json()).collect()),
+        );
+        // each sample pairs with its predecessor so the exported objects
+        // carry inter-sample deltas and a windowed plan hit rate
+        m.insert(
+            "telemetry".into(),
+            Json::Arr(
+                self.telemetry
+                    .iter()
+                    .enumerate()
+                    .map(|(i, s)| s.json(if i == 0 { None } else { Some(&self.telemetry[i - 1]) }))
+                    .collect(),
+            ),
+        );
+        m.insert(
+            "plan_events".into(),
+            Json::Arr(self.plan_events.iter().map(|e| e.json()).collect()),
+        );
         Json::Obj(m).to_string()
     }
 
     /// Prometheus-style text exposition: one `spmm_*` family per counter
     /// and gauge, `histogram`-typed families for the per-path and
-    /// per-stage latencies (cumulative `le` buckets), and the journal ring
-    /// depths.
+    /// per-stage latencies (cumulative `le` buckets), labelled families
+    /// for the per-worker attribution table and the plan-event kinds, and
+    /// the ring depths.  Every family carries exactly one `# HELP` and
+    /// one `# TYPE` line (pinned by the headers golden test).
     pub fn to_prometheus(&self) -> String {
         use std::fmt::Write as _;
-        let mut out = String::with_capacity(8192);
-        let counters: [(&str, u64); 19] = [
-            ("spmm_requests", self.requests),
-            ("spmm_completed", self.completed),
-            ("spmm_errors", self.errors),
-            ("spmm_shed_deadline", self.shed_deadline),
-            ("spmm_shed_codel", self.shed_codel),
-            ("spmm_cancelled", self.cancelled),
-            ("spmm_deadline_missed", self.deadline_missed),
-            ("spmm_rowsplit", self.rowsplit),
-            ("spmm_merge", self.merge),
-            ("spmm_pjrt", self.pjrt),
-            ("spmm_cpu_fallback", self.cpu_fallback),
-            ("spmm_plan_hits", self.plan_hits),
-            ("spmm_plan_misses", self.plan_misses),
-            ("spmm_plan_evictions", self.plan_evictions),
-            ("spmm_probes", self.probes),
-            ("spmm_sharded", self.sharded),
-            ("spmm_shards_executed", self.shards_executed),
-            ("spmm_fused_batches", self.fused_batches),
-            ("spmm_fused_requests", self.fused_requests),
+        let mut out = String::with_capacity(16384);
+        let counters: [(&str, &str, u64); 19] = [
+            ("spmm_requests", "requests submitted", self.requests),
+            ("spmm_completed", "requests completed", self.completed),
+            ("spmm_errors", "requests failed", self.errors),
+            ("spmm_shed_deadline", "requests shed with an expired deadline", self.shed_deadline),
+            ("spmm_shed_codel", "requests shed by CoDel overload control", self.shed_codel),
+            ("spmm_cancelled", "requests cancelled before execution", self.cancelled),
+            ("spmm_deadline_missed", "requests served past their deadline", self.deadline_missed),
+            ("spmm_rowsplit", "requests run with row-split", self.rowsplit),
+            ("spmm_merge", "requests run with merge-based", self.merge),
+            ("spmm_pjrt", "requests run on a compiled artifact", self.pjrt),
+            ("spmm_cpu_fallback", "requests run on the CPU executors", self.cpu_fallback),
+            ("spmm_plan_hits", "plan-cache hits", self.plan_hits),
+            ("spmm_plan_misses", "plan-cache misses", self.plan_misses),
+            ("spmm_plan_evictions", "plan-cache LRU evictions", self.plan_evictions),
+            ("spmm_probes", "A/B probes executed", self.probes),
+            ("spmm_sharded", "requests scattered across workers", self.sharded),
+            ("spmm_shards_executed", "shard fragments executed", self.shards_executed),
+            ("spmm_fused_batches", "fused wide passes executed", self.fused_batches),
+            ("spmm_fused_requests", "requests that rode in fused passes", self.fused_requests),
         ];
-        for (name, v) in counters {
-            let _ = writeln!(out, "# TYPE {name} counter\n{name} {v}");
+        for (name, help, v) in counters {
+            let _ = writeln!(out, "# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}");
         }
-        let gauges: [(&str, f64); 18] = [
-            ("spmm_plan_len", self.plan_len as f64),
-            ("spmm_fused_width_mean", self.fused_width_mean),
-            ("spmm_shard_count_last", self.shard_count_last as f64),
-            ("spmm_shard_imbalance_last", self.shard_imbalance_last),
-            ("spmm_pool_workers", self.pool_workers as f64),
-            ("spmm_workers_parked", self.workers_parked as f64),
-            ("spmm_pool_jobs", self.pool_jobs as f64),
-            ("spmm_queue_shard_depth", self.queue_shard_depth as f64),
-            ("spmm_queue_batch_depth", self.queue_batch_depth as f64),
-            ("spmm_buffers_pooled", self.buffers_pooled as f64),
-            ("spmm_buffers_allocated", self.buffers_allocated as f64),
-            ("spmm_buffer_reuses", self.buffer_reuses as f64),
-            ("spmm_partition_hits", self.partition_hits as f64),
-            ("spmm_partition_misses", self.partition_misses as f64),
-            ("spmm_tuner_threshold", self.tuner_threshold),
-            ("spmm_p50_seconds", self.p50_s),
-            ("spmm_p99_seconds", self.p99_s),
-            ("spmm_mean_latency_seconds", self.mean_latency_s),
+        let gauges: [(&str, &str, f64); 21] = [
+            ("spmm_plan_len", "current plan-cache size", self.plan_len as f64),
+            ("spmm_fused_width_mean", "mean fused width", self.fused_width_mean),
+            (
+                "spmm_shard_count_last",
+                "shard count of the last sharded request",
+                self.shard_count_last as f64,
+            ),
+            (
+                "spmm_shard_imbalance_last",
+                "nnz imbalance of the last shard layout",
+                self.shard_imbalance_last,
+            ),
+            ("spmm_pool_workers", "resident pool threads", self.pool_workers as f64),
+            ("spmm_workers_parked", "pool threads currently parked", self.workers_parked as f64),
+            ("spmm_pool_jobs", "broadcast jobs run by the pool", self.pool_jobs as f64),
+            (
+                "spmm_queue_shard_depth",
+                "shard-lane depth at snapshot",
+                self.queue_shard_depth as f64,
+            ),
+            (
+                "spmm_queue_batch_depth",
+                "batch-lane depth at snapshot",
+                self.queue_batch_depth as f64,
+            ),
+            (
+                "spmm_queue_shard_depth_hwm",
+                "push-time high-water mark of the shard lane",
+                self.queue_shard_depth_hwm as f64,
+            ),
+            (
+                "spmm_queue_batch_depth_hwm",
+                "push-time high-water mark of the batch lane",
+                self.queue_batch_depth_hwm as f64,
+            ),
+            ("spmm_buffers_pooled", "output buffers in the free-list", self.buffers_pooled as f64),
+            (
+                "spmm_buffers_allocated",
+                "output buffers ever allocated",
+                self.buffers_allocated as f64,
+            ),
+            ("spmm_buffer_reuses", "output buffers reused", self.buffer_reuses as f64),
+            (
+                "spmm_buffers_pooled_hwm",
+                "high-water mark of free-list occupancy",
+                self.buffers_pooled_hwm as f64,
+            ),
+            ("spmm_partition_hits", "phase-1 splits replayed", self.partition_hits as f64),
+            ("spmm_partition_misses", "phase-1 splits recomputed", self.partition_misses as f64),
+            ("spmm_tuner_threshold", "current d-threshold of the tuner", self.tuner_threshold),
+            ("spmm_p50_seconds", "p50 end-to-end latency", self.p50_s),
+            ("spmm_p99_seconds", "p99 end-to-end latency", self.p99_s),
+            ("spmm_mean_latency_seconds", "mean end-to-end latency", self.mean_latency_s),
         ];
-        for (name, v) in gauges {
-            let _ = writeln!(out, "# TYPE {name} gauge\n{name} {v}");
+        for (name, help, v) in gauges {
+            let _ = writeln!(out, "# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}");
         }
-        let _ = writeln!(out, "# TYPE spmm_request_latency_seconds histogram");
+        let _ = writeln!(
+            out,
+            "# HELP spmm_request_latency_seconds end-to-end latency per execution path\n\
+             # TYPE spmm_request_latency_seconds histogram"
+        );
         for p in TracePath::ALL {
             prom_hist(
                 &mut out,
@@ -822,7 +1006,11 @@ impl MetricsSnapshot {
                 &self.per_path[p.index()].hist,
             );
         }
-        let _ = writeln!(out, "# TYPE spmm_stage_latency_seconds histogram");
+        let _ = writeln!(
+            out,
+            "# HELP spmm_stage_latency_seconds stage duration across all paths\n\
+             # TYPE spmm_stage_latency_seconds histogram"
+        );
         for s in Stage::ALL {
             prom_hist(
                 &mut out,
@@ -832,7 +1020,11 @@ impl MetricsSnapshot {
                 &self.per_stage[s.index()].hist,
             );
         }
-        let _ = writeln!(out, "# TYPE spmm_queue_sojourn_seconds histogram");
+        let _ = writeln!(
+            out,
+            "# HELP spmm_queue_sojourn_seconds work-queue sojourn per lane\n\
+             # TYPE spmm_queue_sojourn_seconds histogram"
+        );
         for (i, name) in LANE_NAMES.iter().enumerate() {
             prom_hist(
                 &mut out,
@@ -842,19 +1034,119 @@ impl MetricsSnapshot {
                 &self.queue_sojourn[i].hist,
             );
         }
+        // --- per-worker attribution table, one labelled series per worker
         let _ = writeln!(
             out,
-            "# TYPE spmm_slow_threshold_seconds gauge\nspmm_slow_threshold_seconds {}",
+            "# HELP spmm_worker_jobs work items retired per worker by kind\n\
+             # TYPE spmm_worker_jobs counter"
+        );
+        for w in &self.worker_stats {
+            for (kind, v) in
+                [("solo", w.jobs_solo), ("fused", w.jobs_fused), ("shard", w.jobs_shard)]
+            {
+                let _ = writeln!(
+                    out,
+                    "spmm_worker_jobs{{worker=\"{}\",kind=\"{kind}\"}} {v}",
+                    w.worker
+                );
+            }
+        }
+        let _ = writeln!(
+            out,
+            "# HELP spmm_worker_busy_seconds wall time spent executing work items\n\
+             # TYPE spmm_worker_busy_seconds counter"
+        );
+        for w in &self.worker_stats {
+            let _ = writeln!(
+                out,
+                "spmm_worker_busy_seconds{{worker=\"{}\"}} {}",
+                w.worker,
+                w.busy_us as f64 / 1e6
+            );
+        }
+        let _ = writeln!(
+            out,
+            "# HELP spmm_worker_queue_wait_seconds time items waited before this worker \
+             popped them\n# TYPE spmm_worker_queue_wait_seconds counter"
+        );
+        for w in &self.worker_stats {
+            for (lane, us) in
+                [("shard", w.queue_wait_shard_us), ("batch", w.queue_wait_batch_us)]
+            {
+                let _ = writeln!(
+                    out,
+                    "spmm_worker_queue_wait_seconds{{worker=\"{}\",lane=\"{lane}\"}} {}",
+                    w.worker,
+                    us as f64 / 1e6
+                );
+            }
+        }
+        let _ = writeln!(
+            out,
+            "# HELP spmm_worker_run_seconds run time attributed per lane\n\
+             # TYPE spmm_worker_run_seconds counter"
+        );
+        for w in &self.worker_stats {
+            for (lane, us) in [("shard", w.run_shard_us), ("batch", w.run_batch_us)] {
+                let _ = writeln!(
+                    out,
+                    "spmm_worker_run_seconds{{worker=\"{}\",lane=\"{lane}\"}} {}",
+                    w.worker,
+                    us as f64 / 1e6
+                );
+            }
+        }
+        let _ = writeln!(
+            out,
+            "# HELP spmm_worker_queue_depth_hwm deepest queue observed at pop time\n\
+             # TYPE spmm_worker_queue_depth_hwm gauge"
+        );
+        for w in &self.worker_stats {
+            let _ = writeln!(
+                out,
+                "spmm_worker_queue_depth_hwm{{worker=\"{}\"}} {}",
+                w.worker, w.depth_hwm
+            );
+        }
+        // --- telemetry ring + plan audit journal (ring depths, plus the
+        //     retained plan events bucketed by kind)
+        let _ = writeln!(
+            out,
+            "# HELP spmm_telemetry_samples telemetry samples retained in the ring\n\
+             # TYPE spmm_telemetry_samples gauge\nspmm_telemetry_samples {}",
+            self.telemetry.len()
+        );
+        let _ = writeln!(
+            out,
+            "# HELP spmm_plan_journal_entries plan-decision events retained in the audit journal\n\
+             # TYPE spmm_plan_journal_entries gauge\nspmm_plan_journal_entries {}",
+            self.plan_events.len()
+        );
+        let _ = writeln!(
+            out,
+            "# HELP spmm_plan_events retained plan-decision events by kind\n\
+             # TYPE spmm_plan_events gauge"
+        );
+        for kind in super::telemetry::PlanEventKind::ALL {
+            let n = self.plan_events.iter().filter(|e| e.kind == kind).count();
+            let _ = writeln!(out, "spmm_plan_events{{kind=\"{}\"}} {n}", kind.name());
+        }
+        let _ = writeln!(
+            out,
+            "# HELP spmm_slow_threshold_seconds slow-request journal threshold\n\
+             # TYPE spmm_slow_threshold_seconds gauge\nspmm_slow_threshold_seconds {}",
             self.slow_threshold_s
         );
         let _ = writeln!(
             out,
-            "# TYPE spmm_slow_journal_entries gauge\nspmm_slow_journal_entries {}",
+            "# HELP spmm_slow_journal_entries traces retained in the slow ring\n\
+             # TYPE spmm_slow_journal_entries gauge\nspmm_slow_journal_entries {}",
             self.slow_requests.len()
         );
         let _ = writeln!(
             out,
-            "# TYPE spmm_recent_journal_entries gauge\nspmm_recent_journal_entries {}",
+            "# HELP spmm_recent_journal_entries traces retained in the recent ring\n\
+             # TYPE spmm_recent_journal_entries gauge\nspmm_recent_journal_entries {}",
             self.recent_requests.len()
         );
         out
@@ -934,6 +1226,16 @@ impl std::fmt::Display for MetricsSnapshot {
             self.slow_requests.len(),
             self.slow_threshold_s * 1e3,
             self.recent_requests.len()
+        )?;
+        write!(
+            f,
+            " hwm={}s/{}b bufhwm={} wrk={} tel={} ev={}",
+            self.queue_shard_depth_hwm,
+            self.queue_batch_depth_hwm,
+            self.buffers_pooled_hwm,
+            self.worker_stats.len(),
+            self.telemetry.len(),
+            self.plan_events.len()
         )
     }
 }
@@ -1177,6 +1479,7 @@ mod tests {
                     allocated: 2,
                     reused: 9,
                     pooled: 1,
+                    pooled_hwm: 3,
                 },
             },
             &crate::plan::PartitionStats { hits: 8, misses: 2 },
@@ -1188,6 +1491,7 @@ mod tests {
         assert_eq!(snap.buffers_pooled, 1);
         assert_eq!(snap.buffers_allocated, 2);
         assert_eq!(snap.buffer_reuses, 9);
+        assert_eq!(snap.buffers_pooled_hwm, 3);
         assert_eq!(snap.partition_hits, 8);
         assert_eq!(snap.partition_misses, 2);
         let text = format!("{snap}");
@@ -1234,5 +1538,120 @@ mod tests {
         assert_eq!(snap.queue_shard_depth, 5);
         assert_eq!(snap.queue_batch_depth, 2);
         assert!(format!("{snap}").contains("q=5s/2b"), "{snap}");
+    }
+
+    #[test]
+    fn queue_depth_hwm_is_monotonic_and_survives_snapshot_sync() {
+        let m = Metrics::new();
+        // a burst between snapshots: the point-in-time gauge never sees
+        // it, the push-time high-water mark does
+        m.note_queue_depth(SHARD_LANE, 9);
+        m.note_queue_depth(SHARD_LANE, 3); // below the mark: no effect
+        m.note_queue_depth(BATCH_LANE, 4);
+        m.sync_queue_gauges(1, 1); // the burst has already drained
+        let snap = m.snapshot();
+        assert_eq!((snap.queue_shard_depth, snap.queue_batch_depth), (1, 1));
+        assert_eq!(snap.queue_shard_depth_hwm, 9);
+        assert_eq!(snap.queue_batch_depth_hwm, 4);
+        // snapshot-time depths feed the mark too (they were observed)
+        m.sync_queue_gauges(12, 1);
+        assert_eq!(m.snapshot().queue_shard_depth_hwm, 12);
+        assert!(format!("{snap}").contains("hwm=9s/4b"), "{snap}");
+    }
+
+    #[test]
+    fn worker_stats_reach_snapshot_and_exports() {
+        use super::super::telemetry::JobKind;
+        let m = Metrics::new();
+        assert!(m.snapshot().worker_stats.is_empty());
+        let slots: Vec<Arc<WorkerStats>> =
+            (0..2).map(|_| Arc::new(WorkerStats::new())).collect();
+        slots[0].note_job(JobKind::Solo);
+        slots[0].note_run(1, 500);
+        slots[1].note_jobs(JobKind::Fused, 3);
+        slots[1].note_queue_wait(0, 250);
+        m.register_worker_stats(slots.clone());
+        let snap = m.snapshot();
+        assert_eq!(snap.worker_stats.len(), 2);
+        assert_eq!(snap.worker_stats[0].worker, 0);
+        assert_eq!(snap.worker_stats[0].jobs_solo, 1);
+        assert_eq!(snap.worker_stats[0].busy_us, 500);
+        assert_eq!(snap.worker_stats[1].jobs_fused, 3);
+        assert_eq!(snap.worker_stats[1].queue_wait_shard_us, 250);
+        let text = format!("{snap}");
+        assert!(text.contains("wrk=2"), "{text}");
+        let prom = snap.to_prometheus();
+        assert!(prom.contains("spmm_worker_jobs{worker=\"0\",kind=\"solo\"} 1"), "{prom}");
+        assert!(prom.contains("spmm_worker_jobs{worker=\"1\",kind=\"fused\"} 3"), "{prom}");
+        assert!(prom.contains("spmm_worker_busy_seconds{worker=\"0\"} 0.0005"), "{prom}");
+        assert!(
+            prom.contains("spmm_worker_queue_wait_seconds{worker=\"1\",lane=\"shard\"} 0.00025"),
+            "{prom}"
+        );
+        let parsed = Json::parse(&snap.to_json()).expect("valid JSON");
+        let table = parsed.get("worker_stats").unwrap().as_arr().unwrap();
+        assert_eq!(table.len(), 2);
+        assert_eq!(table[1].get("jobs_fused").unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn telemetry_ring_reaches_snapshot_and_exports() {
+        let m = Metrics::new();
+        assert!(m.snapshot().telemetry.is_empty());
+        m.plan_hits.store(3, Ordering::Relaxed);
+        m.completed.store(10, Ordering::Relaxed);
+        let exec = crate::exec::ExecStats {
+            workers: 4,
+            parked: 1,
+            jobs: 0,
+            buffers: crate::exec::BufferStats::default(),
+        };
+        let s0 = m.sample_now(&exec, 2, 5);
+        assert_eq!(s0.queue_shard_depth, 2);
+        assert_eq!(s0.queue_batch_depth, 5);
+        assert_eq!(s0.workers_busy, 3);
+        assert_eq!(s0.plan_hits, 3);
+        assert_eq!(s0.completed, 10);
+        assert!(s0.unix_us > 0);
+        m.record_sample(s0);
+        m.completed.store(14, Ordering::Relaxed);
+        m.record_sample(m.sample_now(&exec, 0, 0));
+        let snap = m.snapshot();
+        assert_eq!(snap.telemetry.len(), 2);
+        assert_eq!(snap.telemetry[1].completed, 14);
+        assert!(format!("{snap}").contains("tel=2"), "{snap}");
+        let prom = snap.to_prometheus();
+        assert!(prom.contains("spmm_telemetry_samples 2"), "{prom}");
+        let parsed = Json::parse(&snap.to_json()).expect("valid JSON");
+        let ring = parsed.get("telemetry").unwrap().as_arr().unwrap();
+        assert_eq!(ring.len(), 2);
+        // second sample's delta is derived against the first at export
+        assert_eq!(ring[1].get("completed_delta").unwrap().as_f64(), Some(4.0));
+        assert_eq!(ring[0].get("completed_delta").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn plan_journal_reaches_snapshot_and_exports() {
+        use super::super::telemetry::PlanEventKind;
+        let m = Metrics::new();
+        assert!(m.snapshot().plan_events.is_empty());
+        let fp = crate::plan::Fingerprint::of(&crate::gen::uniform_rows(50, 4, Some(16), 3));
+        let journal = m.plan_journal();
+        journal.push(PlanEventKind::CacheMiss, fp, Some(crate::spmm::Algorithm::RowSplit), 9.35, 0);
+        journal.push(PlanEventKind::CacheHit, fp, Some(crate::spmm::Algorithm::RowSplit), 9.35, 0);
+        let snap = m.snapshot();
+        assert_eq!(snap.plan_events.len(), 2);
+        assert_eq!(snap.plan_events[0].kind, PlanEventKind::CacheMiss);
+        assert_eq!(snap.plan_events[1].fingerprint, fp);
+        assert!(format!("{snap}").contains("ev=2"), "{snap}");
+        let prom = snap.to_prometheus();
+        assert!(prom.contains("spmm_plan_journal_entries 2"), "{prom}");
+        assert!(prom.contains("spmm_plan_events{kind=\"cache_hit\"} 1"), "{prom}");
+        assert!(prom.contains("spmm_plan_events{kind=\"scatter\"} 0"), "{prom}");
+        let parsed = Json::parse(&snap.to_json()).expect("valid JSON");
+        let events = parsed.get("plan_events").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[1].get("kind").unwrap().as_str(), Some("cache_hit"));
+        assert!(!events[1].get("reason").unwrap().as_str().unwrap().is_empty());
     }
 }

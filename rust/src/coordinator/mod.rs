@@ -55,6 +55,7 @@ pub mod engine;
 pub mod faults;
 pub mod metrics;
 pub mod router;
+pub mod telemetry;
 pub mod trace;
 pub mod workers;
 
@@ -65,5 +66,9 @@ pub use batcher::{Batch, BatchQueue, RouteKey};
 pub use engine::{EngineConfig, ExecutionPath, SpmmEngine, SpmmResult};
 pub use metrics::{JournalEntry, LatencyStats, Metrics, MetricsSnapshot};
 pub use router::{Server, ServerConfig};
+pub use telemetry::{
+    JobKind, PlanEvent, PlanEventKind, PlanJournal, TelemetrySample, WorkerStats,
+    WorkerStatsSnapshot,
+};
 pub use trace::{RequestTrace, Stage, StageBreakdown, TracePath};
 pub use workers::{WorkQueue, WorkerRuntime};

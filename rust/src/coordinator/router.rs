@@ -74,6 +74,11 @@ pub struct ServerConfig {
     pub metrics_file: Option<std::path::PathBuf>,
     /// dump cadence for `metrics_file`
     pub metrics_interval: Duration,
+    /// when set, a sampler thread snapshots queue depths, worker busy
+    /// counts, buffer-pool occupancy, and plan/shed counters into the
+    /// fixed telemetry rings every tick (`serve --telemetry-interval`);
+    /// `None` (the default) spawns no thread and leaves the rings empty
+    pub telemetry_interval: Option<Duration>,
     /// requests slower than this end-to-end land in the slow-request
     /// journal (zero disables the slow ring; the recent ring always runs)
     pub slow_threshold: Duration,
@@ -93,6 +98,7 @@ impl Default for ServerConfig {
             queue_capacity: 256,
             metrics_file: None,
             metrics_interval: Duration::from_secs(10),
+            telemetry_interval: None,
             slow_threshold: Duration::from_secs_f64(DEFAULT_SLOW_THRESHOLD_S),
             deadline: None,
         }
@@ -123,6 +129,9 @@ pub struct Server {
     /// dropping this sender stops the dump thread
     dumper_stop: Option<SyncSender<()>>,
     dumper: Option<std::thread::JoinHandle<()>>,
+    /// dropping this sender stops the telemetry sampler
+    sampler_stop: Option<SyncSender<()>>,
+    sampler: Option<std::thread::JoinHandle<()>>,
     next_id: AtomicU64,
     /// default completion budget stamped onto `submit` requests
     default_deadline: Option<Duration>,
@@ -150,6 +159,9 @@ impl Server {
         // One planner for the whole server: the router plans, the workers
         // execute and feed probe measurements back into the same tuner.
         let planner = Arc::new(engine_cfg.build_planner());
+        // Every planning decision lands in the metrics' audit journal, so
+        // "why did request N run merge?" is answerable from any snapshot.
+        planner.install_journal(metrics.plan_journal());
         // One output-buffer free-list for the whole server (leases migrate
         // freely between workers and shard tasks).
         let buffers = Arc::new(BufferPool::new());
@@ -412,6 +424,31 @@ impl Server {
             None => (None, None),
         };
 
+        // Telemetry sampler: one [`TelemetrySample`] into the fixed ring
+        // per tick (rendezvous-stop, the dumper's idiom).  Off by default —
+        // without it the rings stay empty and the request path's only
+        // telemetry cost is the workers' relaxed atomic stores.
+        let (sampler_stop, sampler) = match cfg.telemetry_interval {
+            Some(interval) => {
+                let (stop_tx, stop_rx) = sync_channel::<()>(0);
+                let interval = interval.max(Duration::from_millis(1));
+                let metrics = Arc::clone(&metrics);
+                let runtime = Arc::clone(&runtime);
+                let handle = std::thread::spawn(move || loop {
+                    match stop_rx.recv_timeout(interval) {
+                        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                            let es = runtime.exec_stats();
+                            let (sd, bd) = runtime.queue().depths();
+                            metrics.record_sample(metrics.sample_now(&es, sd, bd));
+                        }
+                        _ => break, // explicit stop or server dropped
+                    }
+                });
+                (Some(stop_tx), Some(handle))
+            }
+            None => (None, None),
+        };
+
         Ok(Self {
             ingress: ingress_tx,
             router: Some(router),
@@ -423,6 +460,8 @@ impl Server {
             metrics_file: cfg.metrics_file,
             dumper_stop,
             dumper,
+            sampler_stop,
+            sampler,
             next_id: AtomicU64::new(0),
             default_deadline: cfg.deadline,
         })
@@ -523,7 +562,8 @@ impl Server {
     }
 
     /// OS threads the server currently owns: router + workers + pool
-    /// threads (+ the metrics dump thread when `metrics_file` is set).
+    /// threads (+ the metrics dump thread when `metrics_file` is set,
+    /// + the telemetry sampler when `telemetry_interval` is set).
     /// One pool set serves both the batcher and shard paths, so this
     /// equals `1 + workers + workers × cpu_workers` whether or not
     /// sharding is enabled.
@@ -531,6 +571,7 @@ impl Server {
         self.runtime.resident_threads()
             + usize::from(self.router.is_some())
             + usize::from(self.dumper.is_some())
+            + usize::from(self.sampler.is_some())
     }
 
     /// Shard tasks executed per unified-pool worker.
@@ -564,6 +605,12 @@ impl Server {
         // the shutdown dump below is the file's last word
         drop(self.dumper_stop.take());
         if let Some(h) = self.dumper.take() {
+            let _ = h.join();
+        }
+        // stop the telemetry sampler the same way; retained samples stay
+        // in the ring for the final snapshot
+        drop(self.sampler_stop.take());
+        if let Some(h) = self.sampler.take() {
             let _ = h.join();
         }
         if let Some(path) = &self.plan_file {
@@ -1014,6 +1061,47 @@ mod tests {
             assert!(parsed.get(key).is_some(), "dump missing {key}");
         }
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Tentpole: the telemetry sampler fills the rings while the server
+    /// runs, costs exactly one resident thread, and the plan journal in
+    /// the same snapshot explains the served fingerprint's decisions.
+    #[test]
+    fn telemetry_sampler_fills_rings_and_journal() {
+        let server = Server::start(
+            cpu_cfg(),
+            ServerConfig {
+                telemetry_interval: Some(Duration::from_millis(1)),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(server.resident_threads(), 1 + 2 + 2 * 2 + 1, "sampler is one thread");
+        let a = Arc::new(Csr::random(100, 100, 4.0, 1701));
+        let b = Arc::new(crate::gen::dense_matrix(100, 8, 1702));
+        for _ in 0..4 {
+            server.submit_blocking(Arc::clone(&a), Arc::clone(&b), 8).unwrap();
+        }
+        // wait for at least two ticks so export-time deltas have a pair
+        let give_up = Instant::now() + Duration::from_secs(10);
+        while server.metrics().telemetry.len() < 2 {
+            assert!(Instant::now() < give_up, "sampler never ticked");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let snap = server.shutdown();
+        assert!(snap.telemetry.len() >= 2);
+        let last = snap.telemetry.last().unwrap();
+        assert_eq!(last.completed, 4);
+        assert!(last.unix_us > 0);
+        // the audit journal explains the served fingerprint's decisions
+        let fp = crate::plan::Fingerprint::of(&a);
+        assert!(
+            snap.plan_events.iter().any(|e| e.fingerprint == fp),
+            "journal must cover the served fingerprint"
+        );
+        // per-worker attribution rode along: all four solo jobs attributed
+        let solo: u64 = snap.worker_stats.iter().map(|w| w.jobs_solo).sum();
+        assert_eq!(solo, 4);
     }
 
     #[test]

@@ -1,0 +1,603 @@
+//! Engine observatory: continuous telemetry rings, per-worker
+//! attribution, and the plan-decision audit journal.
+//!
+//! PR 6 instrumented the *request* axis (stage spans, per-path
+//! histograms, slow journal); this module lights up the *engine* axis:
+//!
+//! - [`WorkerStats`] — one relaxed-atomic slot per unified-runtime
+//!   worker (jobs by kind, busy time, queue-wait vs run-time per lane,
+//!   high-water observed queue depth), so utilization skew and
+//!   stragglers are visible per worker instead of hidden inside the
+//!   aggregated `pool_*` gauges.
+//! - [`TelemetrySample`] + [`EventRing`] — a fixed-capacity
+//!   single-writer ring time-series ([`TELEMETRY_RING_CAP`] samples)
+//!   filled by the server's optional sampler thread
+//!   (`serve --telemetry-interval`, off by default).  Samples carry
+//!   *cumulative* counters; rates are derived as inter-sample deltas at
+//!   export time, so the hot path never divides by wall-clock.
+//! - [`PlanEvent`] + [`PlanJournal`] — a whole-entry-memcpy ring (the
+//!   PR 6 journal idiom) of planner decisions: cache hit/miss/evict,
+//!   probe outcomes, fused width re-decisions, shard-layout cache
+//!   events, scatter fan-outs.  Each event carries the fingerprint the
+//!   decision keyed on plus the decision and its reason, answering
+//!   "why did request N run merge?" post-hoc.
+//!
+//! Overhead contract (see DESIGN.md §Engine observatory): the worker
+//! hot loop touches only its own `WorkerStats` slot with relaxed
+//! stores; the rings are written under a mutex **only** from the
+//! sampler thread and the router/plan path — the same paths that
+//! already take the PR 6 journal mutex — never from a pool worker's
+//! kernel loop.  With the sampler off, the whole subsystem costs a
+//! handful of atomic stores per request (`examples/observatory.rs`
+//! measures it).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::SystemTime;
+
+use crate::plan::Fingerprint;
+use crate::spmm::Algorithm;
+use crate::util::json::Json;
+
+/// Samples retained per telemetry time-series.
+pub const TELEMETRY_RING_CAP: usize = 256;
+/// Plan-decision events retained in the audit journal — sized so a
+/// 32-request mixed solo/probe/fused/sharded run (a few events per
+/// request) fits without wrap.
+pub const PLAN_JOURNAL_CAP: usize = 128;
+
+/// Microseconds since the Unix epoch (same stamp the slow journal uses).
+fn unix_us() -> u64 {
+    SystemTime::now()
+        .duration_since(SystemTime::UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
+}
+
+// ---------------------------------------------------------------------------
+// generic whole-entry ring
+// ---------------------------------------------------------------------------
+
+/// Fixed-capacity ring of `Copy` entries: `push` is one slot memcpy,
+/// `to_vec` returns the retained window oldest-first.  The caller
+/// provides exclusion (single writer, or a mutex around the ring).
+#[derive(Debug)]
+pub struct EventRing<T: Copy, const N: usize> {
+    entries: [Option<T>; N],
+    /// total pushes ever; `next % N` is the slot the next push lands in
+    next: usize,
+}
+
+impl<T: Copy, const N: usize> EventRing<T, N> {
+    pub fn new() -> Self {
+        Self { entries: [None; N], next: 0 }
+    }
+
+    pub fn push(&mut self, e: T) {
+        self.entries[self.next % N] = Some(e);
+        self.next += 1;
+    }
+
+    /// Retained entries, oldest first.
+    pub fn to_vec(&self) -> Vec<T> {
+        (self.next..self.next + N).filter_map(|i| self.entries[i % N]).collect()
+    }
+
+    /// Entries ever pushed (≥ the retained count).
+    pub fn total(&self) -> usize {
+        self.next
+    }
+}
+
+impl<T: Copy, const N: usize> Default for EventRing<T, N> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-worker attribution
+// ---------------------------------------------------------------------------
+
+/// What kind of work item a worker retired (the three shapes the
+/// unified runtime executes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobKind {
+    /// one whole request run alone (`WorkItem::Batch` → `run_batch`)
+    Solo,
+    /// a rider in a fused wide-SpMM batch
+    Fused,
+    /// one shard fragment of a scattered request
+    Shard,
+}
+
+impl JobKind {
+    pub const ALL: [JobKind; 3] = [JobKind::Solo, JobKind::Fused, JobKind::Shard];
+
+    pub fn index(&self) -> usize {
+        match self {
+            JobKind::Solo => 0,
+            JobKind::Fused => 1,
+            JobKind::Shard => 2,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobKind::Solo => "solo",
+            JobKind::Fused => "fused",
+            JobKind::Shard => "shard",
+        }
+    }
+}
+
+/// One worker's attribution slot: every field is a relaxed atomic the
+/// owning worker bumps from its loop — no locks, no allocation, and no
+/// cross-worker cache-line ping-pong beyond the snapshot reader.
+#[derive(Debug, Default)]
+pub struct WorkerStats {
+    jobs: [AtomicU64; 3],
+    /// total wall time spent executing work items, µs
+    busy_us: AtomicU64,
+    /// time items waited in each lane before this worker popped them, µs
+    /// (index = lane: 0 shard, 1 batch)
+    queue_wait_us: [AtomicU64; 2],
+    /// time spent running items from each lane, µs
+    run_us: [AtomicU64; 2],
+    /// deepest queue (both lanes) this worker observed at pop time
+    depth_hwm: AtomicU64,
+}
+
+impl WorkerStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn note_job(&self, kind: JobKind) {
+        self.jobs[kind.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count `k` jobs of one kind at once (a fused batch retires all its
+    /// riders in one pass).
+    pub fn note_jobs(&self, kind: JobKind, k: u64) {
+        self.jobs[kind.index()].fetch_add(k, Ordering::Relaxed);
+    }
+
+    pub fn note_queue_wait(&self, lane: usize, us: u64) {
+        self.queue_wait_us[lane.min(1)].fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// Attribute `us` of run time to `lane`'s work (also accumulates the
+    /// busy total).
+    pub fn note_run(&self, lane: usize, us: u64) {
+        self.run_us[lane.min(1)].fetch_add(us, Ordering::Relaxed);
+        self.busy_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// Monotonic high-water mark of the queue depth seen at pop time.
+    pub fn note_depth(&self, depth: u64) {
+        self.depth_hwm.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self, worker: usize) -> WorkerStatsSnapshot {
+        WorkerStatsSnapshot {
+            worker,
+            jobs_solo: self.jobs[0].load(Ordering::Relaxed),
+            jobs_fused: self.jobs[1].load(Ordering::Relaxed),
+            jobs_shard: self.jobs[2].load(Ordering::Relaxed),
+            busy_us: self.busy_us.load(Ordering::Relaxed),
+            queue_wait_shard_us: self.queue_wait_us[0].load(Ordering::Relaxed),
+            queue_wait_batch_us: self.queue_wait_us[1].load(Ordering::Relaxed),
+            run_shard_us: self.run_us[0].load(Ordering::Relaxed),
+            run_batch_us: self.run_us[1].load(Ordering::Relaxed),
+            depth_hwm: self.depth_hwm.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-value copy of one worker's slot (one row of the exported
+/// worker table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerStatsSnapshot {
+    pub worker: usize,
+    pub jobs_solo: u64,
+    pub jobs_fused: u64,
+    pub jobs_shard: u64,
+    pub busy_us: u64,
+    pub queue_wait_shard_us: u64,
+    pub queue_wait_batch_us: u64,
+    pub run_shard_us: u64,
+    pub run_batch_us: u64,
+    pub depth_hwm: u64,
+}
+
+impl WorkerStatsSnapshot {
+    pub fn jobs_total(&self) -> u64 {
+        self.jobs_solo + self.jobs_fused + self.jobs_shard
+    }
+
+    pub fn json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("worker".into(), Json::Num(self.worker as f64));
+        m.insert("jobs_solo".into(), Json::Num(self.jobs_solo as f64));
+        m.insert("jobs_fused".into(), Json::Num(self.jobs_fused as f64));
+        m.insert("jobs_shard".into(), Json::Num(self.jobs_shard as f64));
+        m.insert("busy_us".into(), Json::Num(self.busy_us as f64));
+        m.insert(
+            "queue_wait_shard_us".into(),
+            Json::Num(self.queue_wait_shard_us as f64),
+        );
+        m.insert(
+            "queue_wait_batch_us".into(),
+            Json::Num(self.queue_wait_batch_us as f64),
+        );
+        m.insert("run_shard_us".into(), Json::Num(self.run_shard_us as f64));
+        m.insert("run_batch_us".into(), Json::Num(self.run_batch_us as f64));
+        m.insert("depth_hwm".into(), Json::Num(self.depth_hwm as f64));
+        Json::Obj(m)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// continuous telemetry samples
+// ---------------------------------------------------------------------------
+
+/// One sampler tick: point-in-time gauges plus *cumulative* counters.
+/// Rates come out as inter-sample deltas at export time
+/// ([`TelemetrySample::json`]), so ticking costs loads and one ring
+/// memcpy — no division, no allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct TelemetrySample {
+    pub unix_us: u64,
+    pub queue_shard_depth: u64,
+    pub queue_batch_depth: u64,
+    pub workers_busy: u64,
+    pub workers_parked: u64,
+    pub buffers_pooled: u64,
+    /// cumulative counters as of this tick
+    pub plan_hits: u64,
+    pub plan_misses: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub cancelled: u64,
+    pub deadline_missed: u64,
+}
+
+impl TelemetrySample {
+    /// Stamp the wall clock on a sample built from gauge reads.
+    pub fn stamped(mut self) -> Self {
+        self.unix_us = unix_us();
+        self
+    }
+
+    /// JSON object for this sample.  With `prev` (the preceding sample
+    /// in the ring) the cumulative counters additionally export as
+    /// per-interval deltas and a delta-window plan hit rate — the
+    /// "rates derived at export time" half of the ring contract.
+    pub fn json(&self, prev: Option<&TelemetrySample>) -> Json {
+        let d = |now: u64, before: u64| now.saturating_sub(before);
+        let (dt_us, dc, ds, dx, dm, dh, dmiss) = match prev {
+            Some(p) => (
+                d(self.unix_us, p.unix_us),
+                d(self.completed, p.completed),
+                d(self.shed, p.shed),
+                d(self.cancelled, p.cancelled),
+                d(self.deadline_missed, p.deadline_missed),
+                d(self.plan_hits, p.plan_hits),
+                d(self.plan_misses, p.plan_misses),
+            ),
+            None => (0, 0, 0, 0, 0, 0, 0),
+        };
+        let hit_rate = if dh + dmiss > 0 { dh as f64 / (dh + dmiss) as f64 } else { 0.0 };
+        let mut m = BTreeMap::new();
+        m.insert("unix_us".into(), Json::Num(self.unix_us as f64));
+        m.insert(
+            "queue_shard_depth".into(),
+            Json::Num(self.queue_shard_depth as f64),
+        );
+        m.insert(
+            "queue_batch_depth".into(),
+            Json::Num(self.queue_batch_depth as f64),
+        );
+        m.insert("workers_busy".into(), Json::Num(self.workers_busy as f64));
+        m.insert("workers_parked".into(), Json::Num(self.workers_parked as f64));
+        m.insert("buffers_pooled".into(), Json::Num(self.buffers_pooled as f64));
+        m.insert("plan_hits".into(), Json::Num(self.plan_hits as f64));
+        m.insert("plan_misses".into(), Json::Num(self.plan_misses as f64));
+        m.insert("completed".into(), Json::Num(self.completed as f64));
+        m.insert("shed".into(), Json::Num(self.shed as f64));
+        m.insert("cancelled".into(), Json::Num(self.cancelled as f64));
+        m.insert(
+            "deadline_missed".into(),
+            Json::Num(self.deadline_missed as f64),
+        );
+        m.insert("interval_us".into(), Json::Num(dt_us as f64));
+        m.insert("completed_delta".into(), Json::Num(dc as f64));
+        m.insert("shed_delta".into(), Json::Num(ds as f64));
+        m.insert("cancelled_delta".into(), Json::Num(dx as f64));
+        m.insert("deadline_missed_delta".into(), Json::Num(dm as f64));
+        m.insert("plan_hit_rate".into(), Json::Num(hit_rate));
+        Json::Obj(m)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// plan-decision audit journal
+// ---------------------------------------------------------------------------
+
+/// What kind of planner decision an audit-journal entry records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanEventKind {
+    /// plan cache returned a stored plan for this fingerprint
+    CacheHit,
+    /// no cached plan: the heuristic decided fresh and the plan was stored
+    CacheMiss,
+    /// inserting a plan evicted this (LRU-victim) fingerprint
+    CacheEvict,
+    /// A/B probe ran; the measurement agreed with the current threshold
+    ProbeKept,
+    /// A/B probe ran; the tuner moved its threshold toward the evidence
+    ProbeAdjusted,
+    /// fused batch replayed the cached plan at its effective width
+    FusedReplay,
+    /// fused batch re-decided at width (`detail` = fused `n_total`)
+    FusedFlip,
+    /// shard-layout cache replayed stored cuts (`detail` = shard count)
+    LayoutHit,
+    /// shard cuts computed fresh and stored (`detail` = shard count)
+    LayoutMiss,
+    /// a request scattered across workers (`detail` = shard count)
+    Scatter,
+}
+
+impl PlanEventKind {
+    pub const ALL: [PlanEventKind; 10] = [
+        PlanEventKind::CacheHit,
+        PlanEventKind::CacheMiss,
+        PlanEventKind::CacheEvict,
+        PlanEventKind::ProbeKept,
+        PlanEventKind::ProbeAdjusted,
+        PlanEventKind::FusedReplay,
+        PlanEventKind::FusedFlip,
+        PlanEventKind::LayoutHit,
+        PlanEventKind::LayoutMiss,
+        PlanEventKind::Scatter,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlanEventKind::CacheHit => "cache_hit",
+            PlanEventKind::CacheMiss => "cache_miss",
+            PlanEventKind::CacheEvict => "cache_evict",
+            PlanEventKind::ProbeKept => "probe_kept",
+            PlanEventKind::ProbeAdjusted => "probe_adjusted",
+            PlanEventKind::FusedReplay => "fused_replay",
+            PlanEventKind::FusedFlip => "fused_flip",
+            PlanEventKind::LayoutHit => "layout_hit",
+            PlanEventKind::LayoutMiss => "layout_miss",
+            PlanEventKind::Scatter => "scatter",
+        }
+    }
+
+    /// The human-readable "why" the journal answers with.
+    pub fn reason(&self) -> &'static str {
+        match self {
+            PlanEventKind::CacheHit => "stored plan replayed for this fingerprint",
+            PlanEventKind::CacheMiss => "no stored plan: d-vs-threshold heuristic decided",
+            PlanEventKind::CacheEvict => "LRU victim displaced by a newer plan",
+            PlanEventKind::ProbeKept => "A/B measurement agreed with the threshold",
+            PlanEventKind::ProbeAdjusted => "A/B measurement moved the threshold",
+            PlanEventKind::FusedReplay => "cached plan still optimal at fused width",
+            PlanEventKind::FusedFlip => "effective threshold at fused width re-decided",
+            PlanEventKind::LayoutHit => "stored shard cuts replayed",
+            PlanEventKind::LayoutMiss => "shard cuts computed fresh",
+            PlanEventKind::Scatter => "request cut across workers",
+        }
+    }
+}
+
+/// One audit-journal entry: the fingerprint a decision keyed on, the
+/// decision itself, and enough context to reconstruct the "why"
+/// (`threshold` at decision time; `detail` is kind-specific — fused
+/// width, shard count, zero otherwise).  `Copy`, so a push is one slot
+/// memcpy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlanEvent {
+    pub unix_us: u64,
+    pub kind: PlanEventKind,
+    pub fingerprint: Fingerprint,
+    /// the algorithm decided (None for events that don't pick one:
+    /// evictions, layout events, scatters)
+    pub algorithm: Option<Algorithm>,
+    /// tuner threshold at decision time
+    pub threshold: f64,
+    pub detail: u64,
+}
+
+impl PlanEvent {
+    pub fn json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("unix_us".into(), Json::Num(self.unix_us as f64));
+        m.insert("kind".into(), Json::Str(self.kind.name().into()));
+        m.insert("fingerprint".into(), Json::Str(self.fingerprint.to_string()));
+        m.insert("d".into(), Json::Num(self.fingerprint.d()));
+        m.insert(
+            "algorithm".into(),
+            match self.algorithm {
+                Some(Algorithm::RowSplit) => Json::Str("rowsplit".into()),
+                Some(Algorithm::MergeBased) => Json::Str("merge".into()),
+                None => Json::Null,
+            },
+        );
+        m.insert("threshold".into(), Json::Num(self.threshold));
+        m.insert("detail".into(), Json::Num(self.detail as f64));
+        m.insert("reason".into(), Json::Str(self.kind.reason().into()));
+        Json::Obj(m)
+    }
+}
+
+/// The shared audit journal: a [`EventRing`] under a poison-tolerant
+/// mutex.  Writers are the router/plan path and the sharded scatter —
+/// paths that already take the PR 6 journal mutex per request — never a
+/// pool worker's kernel loop.
+#[derive(Debug, Default)]
+pub struct PlanJournal {
+    ring: Mutex<EventRing<PlanEvent, PLAN_JOURNAL_CAP>>,
+}
+
+impl PlanJournal {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one decision (stamps the wall clock).
+    pub fn push(
+        &self,
+        kind: PlanEventKind,
+        fingerprint: Fingerprint,
+        algorithm: Option<Algorithm>,
+        threshold: f64,
+        detail: u64,
+    ) {
+        let e = PlanEvent { unix_us: unix_us(), kind, fingerprint, algorithm, threshold, detail };
+        self.ring.lock().unwrap_or_else(|p| p.into_inner()).push(e);
+    }
+
+    /// Retained events, oldest first.
+    pub fn to_vec(&self) -> Vec<PlanEvent> {
+        self.ring.lock().unwrap_or_else(|p| p.into_inner()).to_vec()
+    }
+
+    /// Events ever recorded (≥ the retained count).
+    pub fn total(&self) -> usize {
+        self.ring.lock().unwrap_or_else(|p| p.into_inner()).total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_retains_last_n_in_order() {
+        let mut r: EventRing<u64, 4> = EventRing::new();
+        assert!(r.to_vec().is_empty());
+        for i in 0..3 {
+            r.push(i);
+        }
+        assert_eq!(r.to_vec(), vec![0, 1, 2]);
+        for i in 3..11 {
+            r.push(i);
+        }
+        assert_eq!(r.to_vec(), vec![7, 8, 9, 10]);
+        assert_eq!(r.total(), 11);
+    }
+
+    #[test]
+    fn worker_stats_roundtrip() {
+        let w = WorkerStats::new();
+        w.note_job(JobKind::Solo);
+        w.note_jobs(JobKind::Fused, 4);
+        w.note_job(JobKind::Shard);
+        w.note_queue_wait(0, 10);
+        w.note_queue_wait(1, 20);
+        w.note_run(0, 100);
+        w.note_run(1, 300);
+        w.note_depth(7);
+        w.note_depth(3); // below the mark: no effect
+        let s = w.snapshot(2);
+        assert_eq!(s.worker, 2);
+        assert_eq!((s.jobs_solo, s.jobs_fused, s.jobs_shard), (1, 4, 1));
+        assert_eq!(s.jobs_total(), 6);
+        assert_eq!(s.busy_us, 400);
+        assert_eq!((s.queue_wait_shard_us, s.queue_wait_batch_us), (10, 20));
+        assert_eq!((s.run_shard_us, s.run_batch_us), (100, 300));
+        assert_eq!(s.depth_hwm, 7);
+        let j = s.json();
+        let expected =
+            [("worker", 2.0), ("jobs_fused", 4.0), ("depth_hwm", 7.0), ("busy_us", 400.0)];
+        for (key, want) in expected {
+            assert_eq!(j.get(key).and_then(Json::as_f64), Some(want), "{j}");
+        }
+    }
+
+    #[test]
+    fn sample_json_derives_rates_from_deltas() {
+        let prev = TelemetrySample {
+            unix_us: 1_000_000,
+            plan_hits: 10,
+            plan_misses: 10,
+            completed: 50,
+            shed: 1,
+            ..Default::default()
+        };
+        let cur = TelemetrySample {
+            unix_us: 2_000_000,
+            plan_hits: 40,
+            plan_misses: 20,
+            completed: 80,
+            shed: 3,
+            cancelled: 1,
+            ..Default::default()
+        };
+        let j = cur.json(Some(&prev));
+        let num = |key: &str| j.get(key).and_then(Json::as_f64).unwrap();
+        assert_eq!(num("interval_us"), 1_000_000.0);
+        assert_eq!(num("completed_delta"), 30.0);
+        assert_eq!(num("shed_delta"), 2.0);
+        assert_eq!(num("cancelled_delta"), 1.0);
+        // 30 hits / 40 lookups in the window
+        assert!((num("plan_hit_rate") - 0.75).abs() < 1e-12, "{j}");
+        // first sample has no predecessor: deltas are zero, not garbage
+        let j0 = cur.json(None);
+        assert_eq!(j0.get("interval_us").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(j0.get("completed").and_then(Json::as_f64), Some(80.0));
+    }
+
+    #[test]
+    fn plan_journal_records_whole_events() {
+        let journal = PlanJournal::new();
+        let fp = Fingerprint::of(&crate::gen::uniform_rows(100, 9, Some(64), 7));
+        journal.push(PlanEventKind::CacheMiss, fp, Some(Algorithm::MergeBased), 9.35, 0);
+        journal.push(PlanEventKind::Scatter, fp, None, 9.35, 4);
+        let events = journal.to_vec();
+        assert_eq!(events.len(), 2);
+        assert_eq!(journal.total(), 2);
+        assert_eq!(events[0].kind, PlanEventKind::CacheMiss);
+        assert_eq!(events[0].fingerprint, fp);
+        assert_eq!(events[0].algorithm, Some(Algorithm::MergeBased));
+        assert_eq!(events[1].detail, 4);
+        assert!(events[1].unix_us >= events[0].unix_us);
+        let j = events[1].json();
+        assert_eq!(j.get("kind").and_then(Json::as_str), Some("scatter"));
+        assert_eq!(j.get("detail").and_then(Json::as_f64), Some(4.0));
+        assert_eq!(j.get("algorithm"), Some(&Json::Null));
+        assert!(!j.get("reason").and_then(Json::as_str).unwrap().is_empty());
+        assert_eq!(events[0].json().get("algorithm").and_then(Json::as_str), Some("merge"));
+    }
+
+    #[test]
+    fn plan_journal_caps_at_capacity() {
+        let journal = PlanJournal::new();
+        let fp = Fingerprint::of(&crate::gen::uniform_rows(10, 2, Some(8), 9));
+        for i in 0..(PLAN_JOURNAL_CAP + 10) as u64 {
+            journal.push(PlanEventKind::CacheHit, fp, Some(Algorithm::RowSplit), 9.35, i);
+        }
+        let events = journal.to_vec();
+        assert_eq!(events.len(), PLAN_JOURNAL_CAP);
+        assert_eq!(events[0].detail, 10, "oldest retained = total - cap");
+        assert_eq!(events.last().unwrap().detail, (PLAN_JOURNAL_CAP + 10 - 1) as u64);
+    }
+
+    #[test]
+    fn kind_names_are_unique_and_stable() {
+        let mut names: Vec<_> = PlanEventKind::ALL.iter().map(|k| k.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), PlanEventKind::ALL.len());
+        for k in PlanEventKind::ALL {
+            assert!(!k.reason().is_empty());
+        }
+    }
+}

@@ -85,6 +85,7 @@ use super::engine::{EngineConfig, ExecutionPath, SpmmEngine, SpmmResult};
 #[cfg(feature = "faults")]
 use super::faults;
 use super::metrics::{Metrics, BATCH_LANE, SHARD_LANE};
+use super::telemetry::{JobKind, WorkerStats};
 use super::trace::{RequestTrace, Stage, TracePath};
 
 /// Consecutive shard tasks a worker serves before it must service a
@@ -337,6 +338,11 @@ impl WorkQueue {
             return; // drop: reply channel disconnects
         }
         lanes.shard.push_back((task, Instant::now()));
+        // push-time high-water mark: a burst that drains before the next
+        // snapshot still leaves its footprint (one relaxed fetch_max)
+        if let Some(m) = &self.metrics {
+            m.note_queue_depth(SHARD_LANE, lanes.shard.len() as u64);
+        }
         self.available.notify_one();
     }
 
@@ -356,6 +362,9 @@ impl WorkQueue {
             return;
         }
         lanes.batch.push_back((work, Instant::now()));
+        if let Some(m) = &self.metrics {
+            m.note_queue_depth(BATCH_LANE, lanes.batch.len() as u64);
+        }
         self.available.notify_one();
     }
 
@@ -364,6 +373,18 @@ impl WorkQueue {
     /// `None` only when the queue is closed **and** drained, so shutdown
     /// never abandons admitted work.
     pub(crate) fn pop(&self, streak: &mut u32) -> Option<WorkItem> {
+        self.pop_attributed(streak, None)
+    }
+
+    /// [`Self::pop`] with per-worker attribution: the popping worker's
+    /// [`WorkerStats`] slot additionally records the popped item's
+    /// queue-wait (per lane) and the queue depth observed at pop time —
+    /// relaxed stores into the worker's own slot, nothing else.
+    pub(crate) fn pop_attributed(
+        &self,
+        streak: &mut u32,
+        stats: Option<&WorkerStats>,
+    ) -> Option<WorkItem> {
         let mut lanes = recover(&self.lanes);
         loop {
             // Pops notify_all on `space`: it hosts both batch and shard
@@ -373,11 +394,14 @@ impl WorkQueue {
             // Bounded bypass: after SHARD_BURST shard tasks in a row,
             // service one waiting batch before the next shard.
             let now = Instant::now();
+            // depth as observed before this pop, both lanes
+            let depth = (lanes.shard.len() + lanes.batch.len()) as u64;
             if *streak >= SHARD_BURST {
                 if let Some((work, enq)) = lanes.batch.pop_front() {
                     *streak = 0;
                     let victim = self.after_batch_pop(&mut lanes, enq, now);
                     drop(lanes);
+                    self.attribute_pop(stats, BATCH_LANE, enq, now, depth);
                     self.shed_victim(victim);
                     return Some(WorkItem::Batch(work));
                 }
@@ -389,12 +413,15 @@ impl WorkQueue {
                 self.record_sojourn(SHARD_LANE, enq, now);
                 lanes.codel[SHARD_LANE].observe(now.saturating_duration_since(enq), now);
                 self.space.notify_all();
+                drop(lanes);
+                self.attribute_pop(stats, SHARD_LANE, enq, now, depth);
                 return Some(WorkItem::Shard(task));
             }
             if let Some((work, enq)) = lanes.batch.pop_front() {
                 *streak = 0;
                 let victim = self.after_batch_pop(&mut lanes, enq, now);
                 drop(lanes);
+                self.attribute_pop(stats, BATCH_LANE, enq, now, depth);
                 self.shed_victim(victim);
                 return Some(WorkItem::Batch(work));
             }
@@ -413,6 +440,22 @@ impl WorkQueue {
     fn record_sojourn(&self, lane: usize, enqueued: Instant, now: Instant) {
         if let Some(m) = &self.metrics {
             m.record_sojourn(lane, now.saturating_duration_since(enqueued).as_secs_f64());
+        }
+    }
+
+    /// Per-worker pop attribution (runs after the lanes lock is released).
+    fn attribute_pop(
+        &self,
+        stats: Option<&WorkerStats>,
+        lane: usize,
+        enqueued: Instant,
+        now: Instant,
+        depth: u64,
+    ) {
+        if let Some(s) = stats {
+            let wait = now.saturating_duration_since(enqueued).as_micros() as u64;
+            s.note_queue_wait(lane, wait);
+            s.note_depth(depth);
         }
     }
 
@@ -520,6 +563,9 @@ pub struct WorkerRuntime {
     execs: Vec<Arc<Executor>>,
     buffers: Arc<BufferPool>,
     shard_counts: Vec<Arc<AtomicU64>>,
+    /// per-worker attribution slots (also registered on the shared
+    /// metrics at spawn, so snapshots carry the worker table)
+    worker_stats: Vec<Arc<WorkerStats>>,
     handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
     workers: usize,
 }
@@ -539,6 +585,9 @@ impl WorkerRuntime {
     ) -> Arc<Self> {
         let workers = workers.max(1);
         let queue = Arc::new(WorkQueue::with_metrics(queue_capacity, Arc::clone(&metrics)));
+        let worker_stats: Vec<Arc<WorkerStats>> =
+            (0..workers).map(|_| Arc::new(WorkerStats::new())).collect();
+        metrics.register_worker_stats(worker_stats.clone());
         let mut execs = Vec::with_capacity(workers);
         let mut shard_counts = Vec::with_capacity(workers);
         let mut handles = Vec::with_capacity(workers);
@@ -548,13 +597,17 @@ impl WorkerRuntime {
                 Arc::clone(&buffers),
             ));
             let count = Arc::new(AtomicU64::new(0));
-            let (t_queue, t_exec, t_count) = (Arc::clone(&queue), Arc::clone(&exec), Arc::clone(&count));
+            let (t_queue, t_exec, t_count) =
+                (Arc::clone(&queue), Arc::clone(&exec), Arc::clone(&count));
             let (t_planner, t_metrics, t_cfg) =
                 (Arc::clone(&planner), Arc::clone(&metrics), engine_cfg.clone());
+            let t_ws = Arc::clone(&worker_stats[w]);
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("spmm-worker-{w}"))
-                    .spawn(move || worker_loop(w, t_queue, t_cfg, t_planner, t_metrics, t_exec, t_count))
+                    .spawn(move || {
+                        worker_loop(w, t_queue, t_cfg, t_planner, t_metrics, t_exec, t_count, t_ws)
+                    })
                     .expect("spawn unified worker"),
             );
             execs.push(exec);
@@ -565,6 +618,7 @@ impl WorkerRuntime {
             execs,
             buffers,
             shard_counts,
+            worker_stats,
             handles: Mutex::new(handles),
             workers,
         })
@@ -589,6 +643,12 @@ impl WorkerRuntime {
     /// are not counted — see [`crate::exec::WorkerPool::jobs`]).
     pub fn pool_jobs_per_worker(&self) -> Vec<u64> {
         self.execs.iter().map(|e| e.pool().jobs()).collect()
+    }
+
+    /// Per-worker attribution slots, indexed by worker (tests, dashboards
+    /// reading live state without a snapshot).
+    pub fn worker_stats(&self) -> &[Arc<WorkerStats>] {
+        &self.worker_stats
     }
 
     /// OS threads this runtime currently owns: worker-loop threads plus
@@ -659,6 +719,7 @@ fn worker_loop(
     metrics: Arc<Metrics>,
     exec: Arc<Executor>,
     shard_count: Arc<AtomicU64>,
+    stats: Arc<WorkerStats>,
 ) {
     // scratch for the engine-less execution paths (shard tasks + fused
     // wide passes); the engine keeps its own context for batch requests
@@ -673,7 +734,8 @@ fn worker_loop(
                 .with_shared_metrics(Arc::clone(&metrics))
         });
     let mut streak = 0u32;
-    while let Some(item) = queue.pop(&mut streak) {
+    while let Some(item) = queue.pop_attributed(&mut streak, Some(&stats)) {
+        let started = Instant::now();
         match item {
             WorkItem::Batch(work) => {
                 let reqs = match work {
@@ -681,13 +743,19 @@ fn worker_loop(
                     // riders back for classic per-request execution, where
                     // a poisoned request fails alone.
                     BatchWork::Fused(reqs) => {
+                        let riders = reqs.len() as u64;
                         match run_fused(&planner, &exec, &mut ctx, &metrics, reqs) {
-                            None => continue,
+                            None => {
+                                stats.note_jobs(JobKind::Fused, riders);
+                                stats.note_run(BATCH_LANE, started.elapsed().as_micros() as u64);
+                                continue;
+                            }
                             Some(reqs) => reqs,
                         }
                     }
                     BatchWork::Run(reqs) => reqs,
                 };
+                stats.note_jobs(JobKind::Solo, reqs.len() as u64);
                 match &engine {
                     Ok(engine) => run_batch(engine, &metrics, reqs),
                     Err(e) => {
@@ -702,10 +770,13 @@ fn worker_loop(
                         }
                     }
                 }
+                stats.note_run(BATCH_LANE, started.elapsed().as_micros() as u64);
             }
             WorkItem::Shard(task) => {
                 shard_count.fetch_add(1, Ordering::Relaxed);
                 execute_shard(&planner, &mut ctx, task, index);
+                stats.note_job(JobKind::Shard);
+                stats.note_run(SHARD_LANE, started.elapsed().as_micros() as u64);
             }
         }
     }
@@ -1254,6 +1325,59 @@ mod tests {
         assert_eq!(snap.fused_requests, 2);
         assert_eq!(snap.fused_width_mean, 16.0);
         assert_eq!(snap.per_path[TracePath::Fused.index()].count, 2);
+    }
+
+    /// Tentpole: per-worker attribution — jobs land by kind in the
+    /// `WorkerStats` slots registered on the shared metrics at spawn, and
+    /// push-time queue high-water marks survive into the snapshot even
+    /// after the lanes drain back to empty.
+    #[test]
+    fn worker_stats_attribute_jobs_and_time() {
+        let planner = Arc::new(Planner::new(9.35, 64, 2));
+        let buffers = Arc::new(BufferPool::new());
+        let metrics = Arc::new(Metrics::new());
+        let rt = WorkerRuntime::spawn(
+            2,
+            16,
+            EngineConfig {
+                artifacts_dir: None,
+                cpu_workers: 2,
+                ..Default::default()
+            },
+            planner,
+            buffers,
+            Arc::clone(&metrics),
+        );
+        let a = Arc::new(Csr::random(60, 60, 4.0, 7801));
+        let b = Arc::new(crate::gen::dense_matrix(60, 4, 7802));
+        let mut receivers = Vec::new();
+        for id in 0..4u64 {
+            let (r, rx) = req_for(&a, &b, 4, id);
+            rt.submit_batch(BatchWork::Run(vec![r]));
+            receivers.push(rx);
+        }
+        let (f1, fx1) = req_for(&a, &b, 4, 10);
+        let (f2, fx2) = req_for(&a, &b, 4, 11);
+        rt.submit_batch(BatchWork::Fused(vec![f1, f2]));
+        receivers.push(fx1);
+        receivers.push(fx2);
+        for rx in receivers {
+            rx.recv().unwrap().unwrap();
+        }
+        rt.shutdown();
+        let snaps: Vec<_> =
+            rt.worker_stats().iter().enumerate().map(|(i, w)| w.snapshot(i)).collect();
+        assert_eq!(snaps.len(), 2);
+        assert_eq!(snaps.iter().map(|s| s.jobs_solo).sum::<u64>(), 4);
+        assert_eq!(snaps.iter().map(|s| s.jobs_fused).sum::<u64>(), 2);
+        assert_eq!(snaps.iter().map(|s| s.jobs_shard).sum::<u64>(), 0);
+        let snap = metrics.snapshot();
+        assert_eq!(snap.worker_stats, snaps, "registered slots must reach the snapshot");
+        assert!(
+            snap.queue_batch_depth_hwm >= 1,
+            "push-time HWM must record the queued batches, got {}",
+            snap.queue_batch_depth_hwm
+        );
     }
 
     /// A panic inside the wide pass must degrade to per-request execution:

@@ -30,6 +30,9 @@ pub struct BufferStats {
     pub reused: u64,
     /// buffers currently parked in the free-list
     pub pooled: u64,
+    /// most buffers ever parked at once (monotonic high-water mark, so
+    /// bursts of retention between snapshots stay visible)
+    pub pooled_hwm: u64,
 }
 
 /// Thread-safe free-list of `Vec<f32>` buffers keyed by exact length.
@@ -39,6 +42,7 @@ pub struct BufferPool {
     allocated: AtomicU64,
     reused: AtomicU64,
     pooled: AtomicU64,
+    pooled_hwm: AtomicU64,
 }
 
 impl BufferPool {
@@ -75,7 +79,8 @@ impl BufferPool {
         if let Some(shelf) = shelves.get_mut(&len) {
             if shelf.len() < MAX_PER_SHELF {
                 shelf.push(data);
-                self.pooled.fetch_add(1, Ordering::Relaxed);
+                let now = self.pooled.fetch_add(1, Ordering::Relaxed) + 1;
+                self.pooled_hwm.fetch_max(now, Ordering::Relaxed);
             }
             return;
         }
@@ -91,7 +96,8 @@ impl BufferPool {
             }
         }
         shelves.insert(len, vec![data]);
-        self.pooled.fetch_add(1, Ordering::Relaxed);
+        let now = self.pooled.fetch_add(1, Ordering::Relaxed) + 1;
+        self.pooled_hwm.fetch_max(now, Ordering::Relaxed);
     }
 
     pub fn stats(&self) -> BufferStats {
@@ -99,6 +105,7 @@ impl BufferPool {
             allocated: self.allocated.load(Ordering::Relaxed),
             reused: self.reused.load(Ordering::Relaxed),
             pooled: self.pooled.load(Ordering::Relaxed),
+            pooled_hwm: self.pooled_hwm.load(Ordering::Relaxed),
         }
     }
 }

@@ -218,5 +218,7 @@ mod tests {
         assert_eq!(s.workers, 2);
         assert_eq!(s.buffers.allocated, 1);
         assert_eq!(s.buffers.reused, 1);
+        assert_eq!(s.buffers.pooled, 0, "lease is out again");
+        assert_eq!(s.buffers.pooled_hwm, 1, "high-water mark survives the re-acquire");
     }
 }

@@ -144,6 +144,12 @@ impl WorkerPool {
         self.jobs.load(Ordering::Relaxed)
     }
 
+    /// Workers currently executing tasks (`workers − parked`; racy by
+    /// nature, like [`Self::parked`] — a sampler gauge, not a barrier).
+    pub fn busy(&self) -> usize {
+        self.workers.saturating_sub(self.parked())
+    }
+
     /// Run `f(task)` for every `task` in `0..tasks`, distributing tasks
     /// across the pool's workers (worker `w` runs tasks `w, w + workers,
     /// …`) and blocking until all complete.  Single-task jobs and nested

@@ -214,6 +214,32 @@
 //! terminal-outcome, no-wedge, and bitwise-survivor invariants under
 //! it; `tests/deadline_props.rs` covers the fault-free policy.
 //!
+//! ## telemetry — the engine observatory
+//!
+//! [`coordinator::telemetry`] watches the engine itself, three ways.
+//! `serve --telemetry-interval MS` runs a sampler thread that memcpys
+//! a [`coordinator::TelemetrySample`] (queue depths, workers
+//! busy/parked, pool occupancy, cumulative plan/shed/completion
+//! counters) into a 256-slot ring every tick — rates fall out as
+//! inter-sample deltas at export, and the sampler is off by default.
+//! Each pool worker owns a [`coordinator::WorkerStats`] slot of
+//! relaxed atomics (jobs by kind, busy time, per-lane queue-wait vs
+//! run time, depth high-water) — the hot loop's whole cost, sampler or
+//! not.  And every planner decision (cache hit/miss/evict, probe
+//! outcome, fused replay/flip, layout reuse, scatter) pushes a
+//! [`coordinator::PlanEvent`] carrying the request's
+//! [`plan::Fingerprint`] into a 128-entry audit ring
+//! ([`coordinator::PlanJournal`]), so "why did request N run merge?"
+//! is answerable from the export alone.  Everything lands in
+//! [`coordinator::MetricsSnapshot`] (`worker_stats`, `telemetry`,
+//! `plan_events`, queue/pool high-water gauges) across all three
+//! encodings, and `merge-spmm stats --watch MS --file dump.json`
+//! renders the worker table and ring sparklines from a `serve
+//! --metrics-json` dump.  `tests/telemetry_props.rs` holds the ring
+//! and attribution properties plus the mixed-run audit acceptance
+//! test; `examples/observatory.rs` bounds the overhead
+//! (`BENCH_obs.json`).
+//!
 //! ### The `_into` API contract
 //!
 //! [`spmm::rowsplit_spmm_into`] and [`spmm::merge_spmm_into`] are the

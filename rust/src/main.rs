@@ -6,9 +6,10 @@
 //! merge-spmm run --mtx FILE [--n N] [--artifacts DIR]  SpMM one matrix
 //! merge-spmm serve [--requests N] [--workers W] [--cpu-only]
 //!                  [--shards N|auto] [--metrics-json FILE] [--slow-ms MS]
-//!                  [--deadline-ms MS]                demo serving workload
-//! merge-spmm stats [--file FILE] [--format text|json|prom]
-//!                                                    one-shot metrics export
+//!                  [--deadline-ms MS] [--metrics-interval MS]
+//!                  [--telemetry-interval MS]         demo serving workload
+//! merge-spmm stats [--file FILE] [--format text|json|prom] [--watch MS]
+//!                                                    metrics export / live view
 //! merge-spmm suite [--seed N]                        dataset inventory
 //! merge-spmm info [--artifacts DIR]                  platform + artifacts
 //! ```
@@ -69,11 +70,20 @@ USAGE:
                                        a deadline-expired error instead of
                                        executed (default: no deadline; must be
                                        ≥ 0.001 when given)
-  merge-spmm stats [--file FILE] [--format text|json|prom]
+                   [--metrics-interval MS]  dump cadence for --metrics-json
+                                       (default 10000; must be ≥ 0.001)
+                   [--telemetry-interval MS]  sample queue depths, worker busy
+                                       counts, pool occupancy, and plan/shed
+                                       rates into the telemetry rings every MS
+                                       milliseconds (default: sampler off;
+                                       must be ≥ 0.001 when given)
+  merge-spmm stats [--file FILE] [--format text|json|prom] [--watch MS]
                                        one-shot metrics export: summarize a
                                        --metrics-json dump (--file), or run a small
                                        built-in workload and print the snapshot as
-                                       Display text, JSON, or Prometheus exposition
+                                       Display text, JSON, or Prometheus exposition.
+                                       --watch MS re-reads --file every MS ms and
+                                       renders worker utilization + ring sparklines
   merge-spmm suite [--seed N]
   merge-spmm info [--artifacts DIR]
 
@@ -101,9 +111,9 @@ fn parse_ms_flag(args: &[String], name: &str) -> Result<Option<f64>, String> {
     match raw.parse::<f64>() {
         Ok(v) if v.is_finite() && v >= 0.001 => Ok(Some(v)),
         Ok(v) => Err(format!(
-            "serve: {name} {v} is out of range — expected milliseconds ≥ 0.001 (1 µs)"
+            "{name} {v} is out of range — expected milliseconds ≥ 0.001 (1 µs)"
         )),
-        Err(_) => Err(format!("serve: {name} expects milliseconds, got `{raw}`")),
+        Err(_) => Err(format!("{name} expects milliseconds, got `{raw}`")),
     }
 }
 
@@ -119,6 +129,7 @@ fn positional(args: &[String]) -> Option<&str> {
             || a == "--requests" || a == "--workers" || a == "--engines" || a == "--plans"
             || a == "--shards" || a == "--metrics-json" || a == "--slow-ms"
             || a == "--deadline-ms" || a == "--file" || a == "--format"
+            || a == "--metrics-interval" || a == "--telemetry-interval" || a == "--watch"
         {
             skip = true;
             continue;
@@ -291,7 +302,7 @@ fn cmd_serve(args: &[String]) -> i32 {
     let slow_ms = match parse_ms_flag(args, "--slow-ms") {
         Ok(v) => v.unwrap_or(100.0),
         Err(e) => {
-            eprintln!("{e}");
+            eprintln!("serve: {e}");
             return 2;
         }
     };
@@ -299,7 +310,23 @@ fn cmd_serve(args: &[String]) -> i32 {
     let deadline = match parse_ms_flag(args, "--deadline-ms") {
         Ok(v) => v.map(|ms| std::time::Duration::from_secs_f64(ms / 1e3)),
         Err(e) => {
-            eprintln!("{e}");
+            eprintln!("serve: {e}");
+            return 2;
+        }
+    };
+    // dump cadence + telemetry sampler — both through the strict parser,
+    // so `--metrics-interval 0` fails loudly instead of busy-spinning
+    let metrics_interval = match parse_ms_flag(args, "--metrics-interval") {
+        Ok(v) => v.map(|ms| std::time::Duration::from_secs_f64(ms / 1e3)),
+        Err(e) => {
+            eprintln!("serve: {e}");
+            return 2;
+        }
+    };
+    let telemetry_interval = match parse_ms_flag(args, "--telemetry-interval") {
+        Ok(v) => v.map(|ms| std::time::Duration::from_secs_f64(ms / 1e3)),
+        Err(e) => {
+            eprintln!("serve: {e}");
             return 2;
         }
     };
@@ -310,6 +337,9 @@ fn cmd_serve(args: &[String]) -> i32 {
             metrics_file: metrics_file.clone(),
             slow_threshold: std::time::Duration::from_secs_f64(slow_ms / 1e3),
             deadline,
+            metrics_interval: metrics_interval
+                .unwrap_or(ServerConfig::default().metrics_interval),
+            telemetry_interval,
             ..Default::default()
         },
     ) {
@@ -380,6 +410,21 @@ fn cmd_serve(args: &[String]) -> i32 {
 fn cmd_stats(args: &[String]) -> i32 {
     use merge_spmm::util::json::Json;
     let format = opt(args, "--format").unwrap_or_else(|| "text".into());
+    // --watch MS: live view over a dump that `serve` keeps rewriting
+    match parse_ms_flag(args, "--watch") {
+        Ok(None) => {}
+        Ok(Some(ms)) => {
+            let Some(path) = opt(args, "--file") else {
+                eprintln!("stats: --watch requires --file FILE (a serve --metrics-json dump)");
+                return 2;
+            };
+            return cmd_stats_watch(&path, std::time::Duration::from_secs_f64(ms / 1e3));
+        }
+        Err(e) => {
+            eprintln!("stats: {e}");
+            return 2;
+        }
+    }
     if let Some(path) = opt(args, "--file") {
         let text = match std::fs::read_to_string(&path) {
             Ok(t) => t,
@@ -448,6 +493,120 @@ fn cmd_stats(args: &[String]) -> i32 {
         }
     }
     0
+}
+
+/// Live metrics view: re-read a `--metrics-json` dump every `interval`
+/// and render worker-attribution rows plus telemetry-ring sparklines.
+/// Runs until killed (Ctrl-C), but gives up after five consecutive
+/// unreadable ticks so a typo'd path fails fast instead of polling
+/// forever.  The dump is written atomically (tmp + rename), so a frame
+/// never sees a torn file — at worst it re-renders the previous one.
+fn cmd_stats_watch(path: &str, interval: std::time::Duration) -> i32 {
+    use merge_spmm::util::json::Json;
+    let mut misses = 0u32;
+    loop {
+        match std::fs::read_to_string(path).ok().and_then(|t| Json::parse(&t).ok()) {
+            Some(v) => {
+                misses = 0;
+                render_watch_frame(path, &v);
+            }
+            None => {
+                misses += 1;
+                if misses >= 5 {
+                    eprintln!("stats: gave up — {path} unreadable for {misses} ticks");
+                    return 1;
+                }
+                println!("(waiting for {path} …)");
+            }
+        }
+        std::thread::sleep(interval);
+    }
+}
+
+fn render_watch_frame(path: &str, v: &merge_spmm::util::json::Json) {
+    use merge_spmm::util::json::Json;
+    let count = |key: &str| v.get(key).and_then(Json::as_f64).unwrap_or(0.0) as u64;
+    println!("── stats --watch {path} ──");
+    println!(
+        "requests {}  completed {}  errors {}  shed {}  fused {}  sharded {}",
+        count("requests"),
+        count("completed"),
+        count("errors"),
+        count("shed_deadline") + count("shed_codel"),
+        count("fused_requests"),
+        count("sharded"),
+    );
+    // per-worker attribution: jobs by kind, busy/wait time, and each
+    // worker's share of the total busy time as a bar
+    if let Some(workers) = v.get("worker_stats").and_then(Json::as_arr) {
+        let total_busy: f64 = workers
+            .iter()
+            .map(|w| w.get("busy_us").and_then(Json::as_f64).unwrap_or(0.0))
+            .sum();
+        for w in workers {
+            let f = |k: &str| w.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+            let share = if total_busy > 0.0 { f("busy_us") / total_busy } else { 0.0 };
+            println!(
+                "  wrk {:<2} solo {:<6} fused {:<5} shard {:<5} busy {:>9.1} ms  \
+                 wait {:>8.1} ms  hwm {:<4} {:<10} {:>3.0}%",
+                f("worker") as u64,
+                f("jobs_solo") as u64,
+                f("jobs_fused") as u64,
+                f("jobs_shard") as u64,
+                f("busy_us") / 1e3,
+                (f("queue_wait_shard_us") + f("queue_wait_batch_us")) / 1e3,
+                f("depth_hwm") as u64,
+                "█".repeat((share * 10.0).round() as usize),
+                share * 100.0,
+            );
+        }
+    }
+    // telemetry-ring sparklines, newest sample rightmost; tail the rings
+    // so a full 256-sample ring still fits a terminal row
+    if let Some(samples) = v.get("telemetry").and_then(Json::as_arr) {
+        let series = |key: &str| -> Vec<f64> {
+            let vals: Vec<f64> = samples
+                .iter()
+                .map(|s| s.get(key).and_then(Json::as_f64).unwrap_or(0.0))
+                .collect();
+            vals[vals.len().saturating_sub(72)..].to_vec()
+        };
+        let depth: Vec<f64> = series("queue_shard_depth")
+            .iter()
+            .zip(series("queue_batch_depth"))
+            .map(|(s, b)| s + b)
+            .collect();
+        for (label, vals) in [
+            ("queue depth", depth),
+            ("workers busy", series("workers_busy")),
+            ("completed/tick", series("completed_delta")),
+            ("plan hit rate", series("plan_hit_rate")),
+        ] {
+            let peak = vals.iter().cloned().fold(0.0f64, f64::max);
+            println!("  {label:<15} {} (peak {peak:.1})", sparkline(&vals));
+        }
+        println!(
+            "  {} samples  plan-journal entries {}",
+            samples.len(),
+            v.get("plan_events").and_then(Json::as_arr).map_or(0, <[Json]>::len)
+        );
+    }
+}
+
+/// Scale a series into the eight-step block glyphs `▁▂▃▄▅▆▇█` relative
+/// to the series peak (an all-zero series renders as a flat baseline).
+fn sparkline(vals: &[f64]) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let max = vals.iter().cloned().fold(0.0f64, f64::max);
+    vals.iter()
+        .map(|&v| {
+            if max <= 0.0 {
+                BARS[0]
+            } else {
+                BARS[(((v / max) * 7.0).round() as usize).min(7)]
+            }
+        })
+        .collect()
 }
 
 fn cmd_suite(args: &[String]) -> i32 {

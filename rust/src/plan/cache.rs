@@ -118,8 +118,9 @@ impl PlanCache {
     }
 
     /// Insert or overwrite a plan, evicting the least recently used entry
-    /// when full.
-    pub fn insert(&self, fp: Fingerprint, plan: ExecutionPlan) {
+    /// when full.  Returns the evicted victim's fingerprint, if any, so
+    /// the caller can journal the displacement.
+    pub fn insert(&self, fp: Fingerprint, plan: ExecutionPlan) -> Option<Fingerprint> {
         let mut guard = self.inner.lock().unwrap();
         let inner = &mut *guard;
         let tick = inner.tick + 1;
@@ -129,16 +130,19 @@ impl PlanCache {
             entry.plan = plan;
             inner.lru.remove(&old);
             inner.lru.insert(tick, fp);
-            return;
+            return None;
         }
+        let mut evicted = None;
         if inner.map.len() >= self.capacity {
             if let Some((_, victim)) = inner.lru.pop_first() {
                 inner.map.remove(&victim);
                 self.evictions.fetch_add(1, Ordering::Relaxed);
+                evicted = Some(victim);
             }
         }
         inner.map.insert(fp, CachedPlan { plan, tick });
         inner.lru.insert(tick, fp);
+        evicted
     }
 
     /// Entries in LRU order (least recently used first) — persistence walks

@@ -36,8 +36,9 @@ pub use tuner::{OnlineTuner, TunerStats, THRESHOLD_MAX, THRESHOLD_MIN};
 
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
+use crate::coordinator::telemetry::{PlanEventKind, PlanJournal};
 use crate::formats::Csr;
 use crate::loadbalance::Segment;
 use crate::runtime::{pad, Manifest};
@@ -117,6 +118,10 @@ pub struct Planner {
     default_workers: usize,
     partition_hits: AtomicU64,
     partition_misses: AtomicU64,
+    /// audit journal for every planning decision, installed once by the
+    /// server; a bare planner (lib users, benches) carries none and the
+    /// emission sites cost a single `OnceLock` load
+    journal: OnceLock<Arc<PlanJournal>>,
 }
 
 impl Planner {
@@ -129,7 +134,32 @@ impl Planner {
             default_workers,
             partition_hits: AtomicU64::new(0),
             partition_misses: AtomicU64::new(0),
+            journal: OnceLock::new(),
         }
+    }
+
+    /// Attach the shared plan-decision audit journal (once, at server
+    /// start).  Later calls are no-ops: the first journal wins.
+    pub fn install_journal(&self, journal: Arc<PlanJournal>) {
+        let _ = self.journal.set(journal);
+    }
+
+    fn journal_event(
+        &self,
+        kind: PlanEventKind,
+        fingerprint: Fingerprint,
+        algorithm: Option<Algorithm>,
+        detail: u64,
+    ) {
+        if let Some(j) = self.journal.get() {
+            j.push(kind, fingerprint, algorithm, self.tuner.threshold(), detail);
+        }
+    }
+
+    /// Record a scatter decision — the sharded path cut `fingerprint`
+    /// across `shards` workers ([`crate::shard::engine`]).
+    pub fn journal_scatter(&self, fingerprint: Fingerprint, shards: usize) {
+        self.journal_event(PlanEventKind::Scatter, fingerprint, None, shards as u64);
     }
 
     /// Restore a planner from a [`persist`] file: learned threshold plus
@@ -154,6 +184,7 @@ impl Planner {
     pub fn plan(&self, a: &Csr, manifest: Option<&Manifest>) -> PlanOutcome {
         let fingerprint = Fingerprint::of(a);
         if let Some(plan) = self.cache.get(&fingerprint) {
+            self.journal_event(PlanEventKind::CacheHit, fingerprint, Some(plan.algorithm), 0);
             return PlanOutcome {
                 plan,
                 fingerprint,
@@ -162,7 +193,10 @@ impl Planner {
         }
         let algorithm = self.tuner.decide(a.mean_row_length());
         let plan = self.build_plan(a, algorithm, manifest);
-        self.cache.insert(fingerprint, plan.clone());
+        self.journal_event(PlanEventKind::CacheMiss, fingerprint, Some(algorithm), 0);
+        if let Some(victim) = self.cache.insert(fingerprint, plan.clone()) {
+            self.journal_event(PlanEventKind::CacheEvict, victim, None, 0);
+        }
         PlanOutcome {
             plan,
             fingerprint,
@@ -216,6 +250,12 @@ impl Planner {
             let agrees = n_total <= crate::spmm::TILE_WIDTH
                 || plan.algorithm == self.tuner.decide_at_width(fingerprint.d(), n_total);
             if agrees {
+                self.journal_event(
+                    PlanEventKind::FusedReplay,
+                    fingerprint,
+                    Some(plan.algorithm),
+                    n_total as u64,
+                );
                 return PlanOutcome {
                     plan,
                     fingerprint,
@@ -224,6 +264,7 @@ impl Planner {
             }
         }
         let algorithm = self.tuner.decide_at_width(fingerprint.d(), n_total);
+        self.journal_event(PlanEventKind::FusedFlip, fingerprint, Some(algorithm), n_total as u64);
         PlanOutcome {
             plan: self.build_plan(a, algorithm, None),
             fingerprint,
@@ -262,9 +303,16 @@ impl Planner {
         manifest: Option<&Manifest>,
     ) {
         let d = a.mean_row_length();
+        let adjustments_before = self.tuner.stats().adjustments;
         self.tuner.observe(d, t_rowsplit, t_merge);
         let algorithm = self.tuner.decide(d);
         let fingerprint = Fingerprint::of(a);
+        let kind = if self.tuner.stats().adjustments > adjustments_before {
+            PlanEventKind::ProbeAdjusted
+        } else {
+            PlanEventKind::ProbeKept
+        };
+        self.journal_event(kind, fingerprint, Some(algorithm), 0);
         let mut plan = self.build_plan(a, algorithm, manifest);
         // Carry the stored phase-1 partition forward when the decision is
         // unchanged — probe-band fingerprints are probed repeatedly, and
@@ -275,7 +323,9 @@ impl Planner {
                 plan.partition = old.partition;
             }
         }
-        self.cache.insert(fingerprint, plan);
+        if let Some(victim) = self.cache.insert(fingerprint, plan) {
+            self.journal_event(PlanEventKind::CacheEvict, victim, None, 0);
+        }
     }
 
     fn build_plan(
@@ -355,14 +405,17 @@ impl Planner {
         skew_aware: bool,
         max_imbalance: f64,
     ) -> Arc<Vec<usize>> {
-        let key = ShardLayoutKey::new(Fingerprint::of(a), shards, skew_aware, max_imbalance);
+        let fingerprint = Fingerprint::of(a);
+        let key = ShardLayoutKey::new(fingerprint, shards, skew_aware, max_imbalance);
         if let Some(cuts) = self.shard_layouts.get(&key) {
             if crate::shard::cuts_valid(a, &cuts) {
+                self.journal_event(PlanEventKind::LayoutHit, fingerprint, None, shards as u64);
                 return cuts;
             }
         }
         let cuts = Arc::new(crate::shard::shard_cuts(a, shards, skew_aware, max_imbalance));
         self.shard_layouts.insert(key, Arc::clone(&cuts));
+        self.journal_event(PlanEventKind::LayoutMiss, fingerprint, None, shards as u64);
         cuts
     }
 
@@ -644,6 +697,59 @@ mod tests {
         let cuts_b = p.shard_cuts(&b, 2, false, 1.25);
         assert!(crate::shard::cuts_valid(&b, &cuts_b));
         assert!(Arc::ptr_eq(&cuts_a, &cuts_b), "valid replay is allowed");
+    }
+
+    #[test]
+    fn journal_records_every_decision_kind() {
+        let p = Planner::new(9.35, 1, 2); // capacity 1: second insert evicts
+        let j = Arc::new(PlanJournal::new());
+        p.install_journal(Arc::clone(&j));
+        let a = Csr::random(400, 400, 4.0, 84); // d ≈ 4 → merge
+        let b = Csr::random(800, 800, 12.0, 85); // d ≈ 12 → row-split
+        let first = p.plan(&a, None); // CacheMiss
+        assert!(p.plan(&a, None).cache_hit); // CacheHit
+        p.plan(&b, None); // CacheMiss + CacheEvict(a)
+        let _ = p.plan_fused(&b, 32); // b cached, ≤ tile width → FusedReplay
+        let _ = p.plan_fused(&a, 32); // a evicted → FusedFlip (re-decided)
+        p.record_probe(&a, 1.0, 3.0, None); // merge picked, row-split faster
+                                            // → ProbeAdjusted + CacheEvict(b)
+        p.record_probe(&a, 3.0, 1.0, None); // agrees now → ProbeKept
+        let _ = p.shard_cuts(&a, 2, true, 1.25); // LayoutMiss
+        let _ = p.shard_cuts(&a, 2, true, 1.25); // LayoutHit
+        p.journal_scatter(first.fingerprint, 2); // Scatter
+        let events = j.to_vec();
+        let kinds: Vec<_> = events.iter().map(|e| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                PlanEventKind::CacheMiss,
+                PlanEventKind::CacheHit,
+                PlanEventKind::CacheMiss,
+                PlanEventKind::CacheEvict,
+                PlanEventKind::FusedReplay,
+                PlanEventKind::FusedFlip,
+                PlanEventKind::ProbeAdjusted,
+                PlanEventKind::CacheEvict,
+                PlanEventKind::ProbeKept,
+                PlanEventKind::LayoutMiss,
+                PlanEventKind::LayoutHit,
+                PlanEventKind::Scatter,
+            ]
+        );
+        // the evict victim is the displaced fingerprint, not the inserted one
+        assert_eq!(events[3].fingerprint, first.fingerprint);
+        assert_eq!(events[3].algorithm, None);
+        // decisions carry the algorithm they picked
+        assert_eq!(events[0].algorithm, Some(Algorithm::MergeBased));
+        assert_eq!(events[2].algorithm, Some(Algorithm::RowSplit));
+        // width / shard counts ride in `detail`
+        assert_eq!(events[4].detail, 32);
+        assert_eq!(events[9].detail, 2);
+        assert_eq!(events[11].kind.name(), "scatter");
+        // a planner without a journal pays nothing and panics nowhere
+        let bare = Planner::new(9.35, 4, 2);
+        bare.plan(&a, None);
+        assert_eq!(j.total(), 12, "bare planner must not write anywhere");
     }
 
     #[test]

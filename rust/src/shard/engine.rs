@@ -50,7 +50,7 @@ use crate::coordinator::workers::{panic_message, WorkerRuntime};
 use crate::coordinator::Metrics;
 use crate::exec::{BufferPool, ExecCtx, OutputBuf, OutputRange};
 use crate::formats::Csr;
-use crate::plan::{PlanOutcome, Planner};
+use crate::plan::{Fingerprint, PlanOutcome, Planner};
 use crate::spmm::{self, Algorithm};
 
 use super::{cut, ShardPolicy};
@@ -214,6 +214,7 @@ impl ShardedEngine {
         let planner = Arc::new(Planner::new(spmm::DEFAULT_THRESHOLD, 1024, cpu_workers));
         let buffers = Arc::new(BufferPool::new());
         let metrics = Arc::new(Metrics::new());
+        planner.install_journal(metrics.plan_journal());
         let runtime = WorkerRuntime::spawn(
             workers.max(1),
             256,
@@ -379,6 +380,11 @@ impl ShardedEngine {
         self.metrics.sharded.fetch_add(1, Ordering::Relaxed);
         self.metrics.shards_executed.fetch_add(shards as u64, Ordering::Relaxed);
         self.metrics.sync_shard_gauges(shards, cut::imbalance(a, &cuts));
+        // audit trail: the parent request was cut across workers — keyed by
+        // the PARENT fingerprint, matching the layout events above, so a
+        // sharded reply's decision is traceable even though each shard
+        // journals its own per-shard plan events
+        self.planner.journal_scatter(Fingerprint::of(a), shards);
 
         // pack span: lease the one `m×n` output and split it into
         // `shards` checked disjoint windows — the leases ride inside the

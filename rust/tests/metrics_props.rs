@@ -1,17 +1,27 @@
 //! Observability properties: the metrics sink under concurrent hammering
 //! (totals conserved, f64-bits gauges never torn, journal entries never
-//! half-written) and golden export coverage — every `MetricsSnapshot`
-//! field must appear in both `to_json()` and `to_prometheus()`, so a new
-//! metric cannot silently miss an exporter.
+//! half-written), the telemetry subsystem under the same pressure
+//! (worker attribution slots hammered while a reader snapshots, ring
+//! entries whole), and golden export coverage — every `MetricsSnapshot`
+//! field must appear in `to_json()` and `to_prometheus()` (and the
+//! telemetry counters in `Display`), so a new metric cannot silently
+//! miss an exporter.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
 use merge_spmm::coordinator::metrics::{RECENT_JOURNAL_CAP, SLOW_JOURNAL_CAP};
-use merge_spmm::coordinator::{Metrics, MetricsSnapshot, Stage, StageBreakdown, TracePath};
-use merge_spmm::plan::CacheStats;
+use merge_spmm::coordinator::telemetry::TELEMETRY_RING_CAP;
+use merge_spmm::coordinator::{
+    JobKind, Metrics, MetricsSnapshot, PlanEventKind, Stage, StageBreakdown, TelemetrySample,
+    TracePath, WorkerStats,
+};
+use merge_spmm::exec::{BufferStats, ExecStats};
+use merge_spmm::formats::Csr;
+use merge_spmm::plan::{CacheStats, Fingerprint};
+use merge_spmm::spmm::Algorithm;
 use merge_spmm::util::json::Json;
 
 /// A synthetic breakdown whose five stage durations all equal `d` and
@@ -191,8 +201,11 @@ fn mean_latency_uses_histogram_total_as_denominator() {
 }
 
 /// A metrics sink with every field exercised: all five paths traced, a
-/// fused pass, plan/shard gauges synced, and a slow threshold low enough
-/// that every trace journals.
+/// fused pass, plan/shard gauges synced, a slow threshold low enough
+/// that every trace journals — plus the telemetry subsystem populated
+/// (one worker-attribution slot with every field non-zero, two sampler
+/// ticks so delta fields have a predecessor, and two audit-journal
+/// events), so the golden tests exercise the new fields non-empty.
 fn populated() -> Metrics {
     let m = Metrics::new();
     m.set_slow_threshold_s(1e-6); // 1 µs: every 100 µs+ synthetic trace journals
@@ -202,6 +215,25 @@ fn populated() -> Metrics {
     m.record_fused(4, 32);
     m.sync_plan_gauges(&CacheStats { hits: 3, misses: 2, evictions: 1, len: 2 }, 9.35);
     m.sync_shard_gauges(4, 1.5);
+    // per-worker attribution: one slot, every field non-zero
+    let w = Arc::new(WorkerStats::new());
+    w.note_job(JobKind::Solo);
+    w.note_jobs(JobKind::Fused, 4);
+    w.note_job(JobKind::Shard);
+    w.note_queue_wait(0, 5);
+    w.note_queue_wait(1, 7);
+    w.note_run(0, 11);
+    w.note_run(1, 13);
+    w.note_depth(3);
+    m.register_worker_stats(vec![w]);
+    // two sampler ticks: the second sample's deltas diff against the first
+    let exec = ExecStats { workers: 2, parked: 1, jobs: 6, buffers: BufferStats::default() };
+    m.record_sample(m.sample_now(&exec, 1, 2));
+    m.record_sample(m.sample_now(&exec, 0, 1));
+    // audit journal: a miss then a hit on the same fingerprint
+    let fp = Fingerprint::of(&Csr::random(64, 64, 3.0, 7));
+    m.plan_journal().push(PlanEventKind::CacheMiss, fp, Some(Algorithm::MergeBased), 9.35, 0);
+    m.plan_journal().push(PlanEventKind::CacheHit, fp, Some(Algorithm::MergeBased), 9.35, 0);
     m
 }
 
@@ -250,6 +282,40 @@ fn golden_json_export_covers_every_snapshot_field() {
             assert!(e.get(k).is_some(), "journal entry missing {k}");
         }
     }
+    // telemetry arrays carry the full shapes too
+    let ws = parsed.get("worker_stats").and_then(Json::as_arr).expect("worker_stats array");
+    assert_eq!(ws.len(), 1);
+    for k in [
+        "worker", "jobs_solo", "jobs_fused", "jobs_shard", "busy_us", "queue_wait_shard_us",
+        "queue_wait_batch_us", "run_shard_us", "run_batch_us", "depth_hwm",
+    ] {
+        assert!(ws[0].get(k).is_some(), "worker_stats entry missing {k}");
+    }
+    let tel = parsed.get("telemetry").and_then(Json::as_arr).expect("telemetry array");
+    assert_eq!(tel.len(), 2);
+    for k in [
+        "unix_us", "queue_shard_depth", "queue_batch_depth", "workers_busy", "buffers_pooled",
+        "completed", "interval_us", "completed_delta", "shed_delta", "plan_hit_rate",
+    ] {
+        assert!(tel[1].get(k).is_some(), "telemetry sample missing {k}");
+    }
+    // second tick diffs against the first: a real (non-zero) interval
+    assert!(
+        tel[1].get("interval_us").and_then(Json::as_f64).unwrap_or(-1.0) >= 0.0
+            && tel[0].get("interval_us").and_then(Json::as_f64) == Some(0.0),
+        "delta fields must diff against the preceding ring entry only"
+    );
+    let ev = parsed.get("plan_events").and_then(Json::as_arr).expect("plan_events array");
+    assert_eq!(ev.len(), 2);
+    for k in ["unix_us", "kind", "fingerprint", "d", "algorithm", "threshold", "detail", "reason"] {
+        assert!(ev[0].get(k).is_some(), "plan event missing {k}");
+    }
+    assert_eq!(
+        ev[0].get("kind").and_then(Json::as_str),
+        Some("cache_miss"),
+        "events export in push order"
+    );
+    assert_eq!(ev[1].get("kind").and_then(Json::as_str), Some("cache_hit"));
 }
 
 /// Every `MetricsSnapshot::FIELDS` entry must surface in the Prometheus
@@ -279,6 +345,18 @@ fn golden_prometheus_export_covers_every_snapshot_field() {
                 "spmm_queue_sojourn_seconds_bucket{lane=\"shard\"".into(),
                 "spmm_queue_sojourn_seconds_bucket{lane=\"batch\"".into(),
             ],
+            "worker_stats" => vec![
+                "spmm_worker_jobs{worker=\"0\",kind=\"solo\"} ".into(),
+                "spmm_worker_busy_seconds{worker=\"0\"} ".into(),
+                "spmm_worker_queue_wait_seconds{worker=\"0\",lane=\"shard\"} ".into(),
+                "spmm_worker_run_seconds{worker=\"0\",lane=\"batch\"} ".into(),
+                "spmm_worker_queue_depth_hwm{worker=\"0\"} ".into(),
+            ],
+            "telemetry" => vec!["spmm_telemetry_samples ".into()],
+            "plan_events" => vec![
+                "spmm_plan_journal_entries ".into(),
+                "spmm_plan_events{kind=\"cache_hit\"} ".into(),
+            ],
             other => vec![format!("spmm_{other} ")],
         }
     };
@@ -296,4 +374,202 @@ fn golden_prometheus_export_covers_every_snapshot_field() {
         assert!(text.contains(&format!("spmm_request_latency_seconds_bucket{{path=\"{name}\",le=\"+Inf\"}}")));
         assert!(text.contains(&format!("spmm_request_latency_seconds_count{{path=\"{name}\"}} 1")));
     }
+}
+
+/// Every family in the exposition must carry exactly one `# HELP` and
+/// one `# TYPE` header, and every header must belong to a family that
+/// actually emits samples — both directions, so an orphan header or a
+/// headerless family fails.  Histogram series (`_bucket`/`_sum`/`_count`)
+/// fold back to their base family name, as Prometheus parses them.
+#[test]
+fn golden_prometheus_every_family_has_exactly_one_help_and_type() {
+    let text = populated().snapshot().to_prometheus();
+    let mut help: BTreeMap<String, usize> = BTreeMap::new();
+    let mut typ: BTreeMap<String, usize> = BTreeMap::new();
+    let mut families: BTreeSet<String> = BTreeSet::new();
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split_whitespace().next().expect("HELP line names a family");
+            *help.entry(name.into()).or_insert(0) += 1;
+        } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let name = rest.split_whitespace().next().expect("TYPE line names a family");
+            *typ.entry(name.into()).or_insert(0) += 1;
+        } else if !line.trim().is_empty() {
+            let name = line.split(['{', ' ']).next().expect("sample line names a series");
+            let family = name
+                .strip_suffix("_bucket")
+                .or_else(|| name.strip_suffix("_sum"))
+                .or_else(|| name.strip_suffix("_count"))
+                .unwrap_or(name);
+            families.insert(family.into());
+        }
+    }
+    assert!(families.len() > 40, "suspiciously few families: {}", families.len());
+    for f in &families {
+        assert_eq!(help.get(f), Some(&1), "family {f} must have exactly one # HELP line");
+        assert_eq!(typ.get(f), Some(&1), "family {f} must have exactly one # TYPE line");
+    }
+    for name in help.keys().chain(typ.keys()) {
+        assert!(families.contains(name), "header for {name} but no samples emitted");
+    }
+}
+
+/// The `Display` one-liner surfaces the telemetry counters (ring depths,
+/// worker count, queue/buffer high-water marks) alongside the classic
+/// fields — the third encoding of the export spine.
+#[test]
+fn display_surfaces_telemetry_counters() {
+    let text = populated().snapshot().to_string();
+    for needle in ["hwm=", "bufhwm=", "wrk=1", "tel=2", "ev=2"] {
+        assert!(text.contains(needle), "Display missing {needle:?} in {text:?}");
+    }
+}
+
+/// N workers hammer their attribution slots while a reader snapshots
+/// through the registered `Metrics`: per-location counters only grow, no
+/// snapshot exceeds the final totals, and after the writers join every
+/// slot holds exactly what its owner recorded (totals conserved — the
+/// aggregate over workers equals workers × per-worker writes).
+#[test]
+fn prop_worker_stats_concurrent_attribution_conserves_totals() {
+    const WORKERS: usize = 4;
+    const PER: u64 = 4000;
+    let metrics = Arc::new(Metrics::new());
+    let slots: Vec<Arc<WorkerStats>> =
+        (0..WORKERS).map(|_| Arc::new(WorkerStats::new())).collect();
+    metrics.register_worker_stats(slots.clone());
+    let stop = Arc::new(AtomicBool::new(false));
+
+    std::thread::scope(|s| {
+        let writers: Vec<_> = slots
+            .iter()
+            .map(|w| {
+                let w = Arc::clone(w);
+                s.spawn(move || {
+                    for i in 0..PER {
+                        w.note_job(JobKind::Solo);
+                        w.note_jobs(JobKind::Fused, 2);
+                        w.note_queue_wait(1, 3);
+                        w.note_run(1, 5);
+                        w.note_depth(i % 17);
+                    }
+                })
+            })
+            .collect();
+        let reader = {
+            let m = Arc::clone(&metrics);
+            let st = Arc::clone(&stop);
+            s.spawn(move || {
+                let mut last = 0u64;
+                let mut snaps = 0u64;
+                while !st.load(Ordering::Relaxed) {
+                    let snap = m.snapshot();
+                    assert_eq!(snap.worker_stats.len(), WORKERS, "table tracks every worker");
+                    // each counter is a single monotonic location, so the
+                    // aggregate over workers can never go backwards
+                    let total: u64 = snap.worker_stats.iter().map(|w| w.jobs_total()).sum();
+                    assert!(total >= last, "attribution totals went backwards");
+                    last = total;
+                    for w in &snap.worker_stats {
+                        assert!(w.jobs_solo <= PER, "jobs_solo overshoot: {}", w.jobs_solo);
+                        assert!(w.jobs_fused <= 2 * PER, "jobs_fused overshoot");
+                        assert_eq!(w.jobs_shard, 0, "nobody recorded shard jobs");
+                        assert!(w.queue_wait_batch_us <= 3 * PER);
+                        assert!(w.run_batch_us <= 5 * PER && w.busy_us <= 5 * PER);
+                        assert!(w.depth_hwm <= 16, "hwm beyond any written depth");
+                    }
+                    snaps += 1;
+                }
+                snaps
+            })
+        };
+        for w in writers {
+            w.join().unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        assert!(reader.join().unwrap() > 0, "reader never snapshotted");
+    });
+
+    // after the joins every slot is exact, and the exported table equals
+    // the per-slot snapshots (per-worker sums == aggregate)
+    let snap = metrics.snapshot();
+    let direct: Vec<_> = slots.iter().enumerate().map(|(i, w)| w.snapshot(i)).collect();
+    assert_eq!(snap.worker_stats, direct);
+    for w in &snap.worker_stats {
+        assert_eq!((w.jobs_solo, w.jobs_fused, w.jobs_shard), (PER, 2 * PER, 0));
+        assert_eq!((w.queue_wait_shard_us, w.queue_wait_batch_us), (0, 3 * PER));
+        assert_eq!((w.run_shard_us, w.run_batch_us, w.busy_us), (0, 5 * PER, 5 * PER));
+        assert_eq!(w.depth_hwm, 16);
+    }
+    let total: u64 = snap.worker_stats.iter().map(|w| w.jobs_total()).sum();
+    assert_eq!(total, WORKERS as u64 * 3 * PER);
+}
+
+/// A sampler thread pushes samples with id-derived field identities while
+/// a reader snapshots: every exported ring entry satisfies the identities
+/// bit-exactly (whole-entry memcpy — never torn), entries stay in push
+/// order, and the ring never exceeds its capacity.
+#[test]
+fn prop_telemetry_ring_entries_never_torn() {
+    const TICKS: u64 = 4000;
+    let metrics = Arc::new(Metrics::new());
+    let stop = Arc::new(AtomicBool::new(false));
+
+    std::thread::scope(|s| {
+        let writer = {
+            let m = Arc::clone(&metrics);
+            s.spawn(move || {
+                for i in 1..=TICKS {
+                    // every field derives from i: a torn entry breaks an identity
+                    m.record_sample(TelemetrySample {
+                        unix_us: i,
+                        queue_shard_depth: i,
+                        queue_batch_depth: 2 * i,
+                        workers_busy: i % 5,
+                        workers_parked: 4 - (i % 5).min(4),
+                        buffers_pooled: i % 3,
+                        plan_hits: 3 * i,
+                        plan_misses: 7 * i,
+                        completed: 5 * i,
+                        shed: i,
+                        cancelled: 0,
+                        deadline_missed: 0,
+                    });
+                }
+            })
+        };
+        let reader = {
+            let m = Arc::clone(&metrics);
+            let st = Arc::clone(&stop);
+            s.spawn(move || {
+                let mut snaps = 0u64;
+                while !st.load(Ordering::Relaxed) {
+                    let snap = m.snapshot();
+                    assert!(snap.telemetry.len() <= TELEMETRY_RING_CAP);
+                    let mut prev = 0u64;
+                    for t in &snap.telemetry {
+                        let i = t.unix_us;
+                        assert!(i > prev, "ring entries out of push order");
+                        prev = i;
+                        assert_eq!(
+                            (t.queue_shard_depth, t.queue_batch_depth, t.completed, t.shed),
+                            (i, 2 * i, 5 * i, i),
+                            "torn telemetry ring entry"
+                        );
+                        assert_eq!((t.plan_hits, t.plan_misses), (3 * i, 7 * i));
+                    }
+                    snaps += 1;
+                }
+                snaps
+            })
+        };
+        writer.join().unwrap();
+        stop.store(true, Ordering::Relaxed);
+        assert!(reader.join().unwrap() > 0, "reader never snapshotted");
+    });
+
+    let snap = metrics.snapshot();
+    assert_eq!(snap.telemetry.len(), TELEMETRY_RING_CAP, "ring retains exactly its capacity");
+    assert_eq!(snap.telemetry.last().unwrap().unix_us, TICKS, "newest tick survives");
+    assert_eq!(snap.telemetry[0].unix_us, TICKS - TELEMETRY_RING_CAP as u64 + 1);
 }

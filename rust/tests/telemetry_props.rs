@@ -1,0 +1,144 @@
+//! Telemetry-subsystem properties: the whole-entry event ring under wrap
+//! pressure, and the plan-decision audit journal over a real mixed
+//! serving run — every reply's algorithm decision must be explained by a
+//! journal event carrying the same fingerprint the client can compute
+//! for itself (the observatory's acceptance criterion).
+
+use std::sync::Arc;
+
+use merge_spmm::coordinator::telemetry::{EventRing, PLAN_JOURNAL_CAP};
+use merge_spmm::coordinator::{
+    EngineConfig, PlanEvent, PlanEventKind, PlanJournal, Server, ServerConfig,
+};
+use merge_spmm::formats::Csr;
+use merge_spmm::gen;
+use merge_spmm::plan::Fingerprint;
+use merge_spmm::shard::ShardMode;
+use merge_spmm::spmm::Algorithm;
+
+#[test]
+fn event_ring_wraps_keeping_newest_in_order() {
+    let mut r: EventRing<u64, 8> = EventRing::new();
+    assert!(r.to_vec().is_empty());
+    assert_eq!(r.total(), 0);
+    for i in 0..5u64 {
+        r.push(i);
+    }
+    assert_eq!(r.to_vec(), vec![0, 1, 2, 3, 4], "below capacity nothing is lost");
+    for i in 5..100u64 {
+        r.push(i);
+    }
+    assert_eq!(r.to_vec(), (92..100).collect::<Vec<_>>(), "newest 8 retained, oldest first");
+    assert_eq!(r.total(), 100, "total counts every push, not just the retained window");
+}
+
+#[test]
+fn plan_journal_retains_newest_cap_entries_and_stamps_time() {
+    let j = PlanJournal::default();
+    let fp = Fingerprint::of(&Csr::random(32, 32, 2.0, 3));
+    for i in 0..(PLAN_JOURNAL_CAP + 10) {
+        j.push(PlanEventKind::CacheHit, fp, None, 9.35, i as u64);
+    }
+    let v = j.to_vec();
+    assert_eq!(v.len(), PLAN_JOURNAL_CAP);
+    assert_eq!(j.total(), PLAN_JOURNAL_CAP + 10);
+    assert_eq!(v[0].detail, 10, "the 10 oldest entries were overwritten");
+    assert_eq!(v.last().unwrap().detail, (PLAN_JOURNAL_CAP + 9) as u64);
+    assert!(v.iter().all(|e| e.unix_us > 0), "push stamps the wall clock");
+    let ordered = v.windows(2).all(|w| w[0].unix_us <= w[1].unix_us);
+    assert!(ordered, "entries stay in push order");
+}
+
+/// Does any journal event keyed on `fp` satisfy `pred`?
+fn any_event(events: &[PlanEvent], fp: Fingerprint, pred: fn(PlanEventKind) -> bool) -> bool {
+    events.iter().any(|e| e.fingerprint == fp && pred(e.kind))
+}
+
+fn is_probe(kind: PlanEventKind) -> bool {
+    matches!(kind, PlanEventKind::ProbeKept | PlanEventKind::ProbeAdjusted)
+}
+
+/// Kinds that explain a reply on their own: a probed reply may return
+/// the measured winner rather than the planned algorithm (the probe
+/// event IS its decision record), and a sharded reply's decision is the
+/// scatter keyed on the parent fingerprint.
+fn decides_reply(kind: PlanEventKind) -> bool {
+    is_probe(kind) || kind == PlanEventKind::Scatter
+}
+
+/// A 32-request mixed run — solo repeats (cache miss → hits, plus a
+/// near-boundary A/B probe), a fused burst (16 concurrent requests over
+/// ONE `Arc`-identical matrix), and auto-sharded large requests — after
+/// which the audit journal must explain every reply: for each request's
+/// client-side fingerprint there is at least one journal event keyed on
+/// that fingerprint, and among them one that either carries the reply's
+/// algorithm or records the probe/scatter decision that produced it.
+#[test]
+fn audit_journal_explains_every_decision_in_a_mixed_run() {
+    let mut engine_cfg = EngineConfig { artifacts_dir: None, ..Default::default() };
+    engine_cfg.shard.mode = ShardMode::Auto;
+    let server_cfg = ServerConfig {
+        workers: 2,
+        telemetry_interval: Some(std::time::Duration::from_millis(1)),
+        ..Default::default()
+    };
+    let server = Server::start(engine_cfg, server_cfg).expect("server start");
+
+    // d ≈ 8 sits inside the tuner's probe band (|ln(8/9.35)| < 0.5), so
+    // the solo repeats trigger an A/B probe (1-in-8 cadence, first
+    // boundary request included)
+    let solo = Arc::new(Csr::random(300, 300, 8.0, 41));
+    // fused burst target: d ≈ 4 is outside the probe band, and all 16
+    // requests share one Arc so the batcher's fuser can co-batch them
+    let fused = Arc::new(Csr::random(400, 400, 4.0, 42));
+    // auto-shard: rows + nnz ≈ 39 000 ≫ min_shard_work, cuts into 2
+    let big = Arc::new(Csr::random(3000, 3000, 12.0, 43));
+    let b300 = Arc::new(gen::dense_matrix(300, 32, 7));
+    let b400 = Arc::new(gen::dense_matrix(400, 32, 7));
+    let b3000 = Arc::new(gen::dense_matrix(3000, 32, 7));
+
+    let mut replies: Vec<(Fingerprint, Algorithm)> = Vec::new();
+    for _ in 0..8 {
+        let r = server.submit_blocking(Arc::clone(&solo), Arc::clone(&b300), 32).expect("solo");
+        replies.push((Fingerprint::of(&solo), r.algorithm));
+    }
+    let handles: Vec<_> = (0..16)
+        .map(|_| server.submit(Arc::clone(&fused), Arc::clone(&b400), 32).expect("submit"))
+        .collect();
+    for h in handles {
+        let r = h.recv().expect("server alive").expect("fused-burst request");
+        replies.push((Fingerprint::of(&fused), r.algorithm));
+    }
+    for _ in 0..8 {
+        let r = server.submit_blocking(Arc::clone(&big), Arc::clone(&b3000), 32).expect("big");
+        replies.push((Fingerprint::of(&big), r.algorithm));
+    }
+    assert_eq!(replies.len(), 32);
+
+    let snap = server.shutdown();
+    assert!(!snap.plan_events.is_empty(), "journal captured the run");
+    assert!(snap.plan_events.len() <= PLAN_JOURNAL_CAP);
+    for (fp, algorithm) in &replies {
+        let matching: Vec<_> = snap.plan_events.iter().filter(|e| e.fingerprint == *fp).collect();
+        assert!(!matching.is_empty(), "no journal event for fingerprint {fp:?}");
+        let explained = matching
+            .iter()
+            .any(|e| e.algorithm == Some(*algorithm) || decides_reply(e.kind));
+        assert!(explained, "no event explains algorithm {algorithm:?} for {fp:?}");
+    }
+    // the three traffic shapes each left their signature decision
+    let solo_fp = Fingerprint::of(&solo);
+    let probed = any_event(&snap.plan_events, solo_fp, is_probe);
+    assert!(probed, "solo repeats near the boundary must probe");
+    let replayed = any_event(&snap.plan_events, solo_fp, |k| k == PlanEventKind::CacheHit);
+    assert!(replayed, "solo repeats must replay the cached plan");
+    let big_fp = Fingerprint::of(&big);
+    let scatter = snap.plan_events.iter().find(|e| e.kind == PlanEventKind::Scatter);
+    let scattered = scatter.is_some_and(|e| e.fingerprint == big_fp && e.detail >= 2);
+    assert!(scattered, "large requests must journal their scatter fan-out");
+    assert!(snap.sharded >= 1, "auto mode sharded the big requests");
+    assert!(snap.probes >= 1, "the boundary probe ran");
+    // the sampler ticked while the big phase was in flight
+    assert!(!snap.telemetry.is_empty(), "telemetry ring must have samples");
+    assert!(snap.telemetry.last().unwrap().completed >= 24);
+}
