@@ -80,11 +80,11 @@ impl CancelToken {
     }
 
     pub fn cancel(&self) {
-        self.0.store(true, Ordering::Release);
+        self.0.store(true, Ordering::Release); // ordering: release — pairs with the Acquire in `is_cancelled`
     }
 
     pub fn is_cancelled(&self) -> bool {
-        self.0.load(Ordering::Acquire)
+        self.0.load(Ordering::Acquire) // ordering: acquire — pairs with the Release in `cancel`
     }
 }
 

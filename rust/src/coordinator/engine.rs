@@ -11,6 +11,7 @@ use crate::formats::Csr;
 use crate::plan::{PlanOutcome, Planner};
 use crate::runtime::{pad, Manifest, Runtime};
 use crate::spmm::{self, Algorithm};
+use crate::util::sync::recover;
 
 use super::metrics::Metrics;
 use super::trace::{RequestTrace, Stage, StageBreakdown, TracePath};
@@ -265,7 +266,7 @@ impl SpmmEngine {
         } else {
             &self.metrics.plan_misses
         };
-        plan_counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        plan_counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
         // gauges are mirrored once per request by execute(); no extra
         // plan-cache lock here
         self.execute(a, b, n, &outcome, trace)
@@ -307,7 +308,7 @@ impl SpmmEngine {
         trace.queue_ended(Instant::now());
         self.metrics
             .requests
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
         let e0 = Instant::now();
         let result = self.dispatch(a, b, n, outcome);
         trace.span(Stage::Exec, e0, Instant::now());
@@ -315,17 +316,17 @@ impl SpmmEngine {
             Ok(d) => {
                 self.metrics
                     .completed
-                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
                 match d.algorithm {
                     Algorithm::RowSplit => &self.metrics.rowsplit,
                     Algorithm::MergeBased => &self.metrics.merge,
                 }
-                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
             }
             Err(_) => {
                 self.metrics
                     .errors
-                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
             }
         }
         // fold the trace: probe dispatches report as their own path, and a
@@ -342,7 +343,7 @@ impl SpmmEngine {
                 ExecutionPath::Pjrt => &self.metrics.pjrt,
                 ExecutionPath::CpuFallback => &self.metrics.cpu_fallback,
             }
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
             SpmmResult {
                 c: d.c,
                 algorithm: d.algorithm,
@@ -385,7 +386,7 @@ impl SpmmEngine {
         // one extra pooled buffer).
         let p = plan.cpu_parallelism(a);
         if self.probe && self.planner.should_probe(a) {
-            let mut ctx = self.ctx.lock().unwrap();
+            let mut ctx = recover(&self.ctx);
             let segs_rs = exec::partition(a, Algorithm::RowSplit, p);
             let segs_mg = exec::partition(a, Algorithm::MergeBased, p);
             let mut c_rs = self.exec.acquire(a.m * n);
@@ -399,7 +400,7 @@ impl SpmmEngine {
             self.planner.record_probe(a, t_rs, t_mg, self.manifest());
             self.metrics
                 .probes
-                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
             let (c, algorithm) = if t_mg < t_rs {
                 (c_mg, Algorithm::MergeBased)
             } else {
@@ -417,7 +418,7 @@ impl SpmmEngine {
         // fingerprint), lease a pooled output, run on the warm pool —
         // zero allocation, zero thread creation per request.
         let segs = self.planner.partition_for(a, outcome);
-        let mut ctx = self.ctx.lock().unwrap();
+        let mut ctx = recover(&self.ctx);
         let mut c = self.exec.acquire(a.m * n);
         match plan.algorithm {
             Algorithm::RowSplit => spmm::rowsplit_spmm_into(a, b, n, &segs, &mut ctx, &mut c),

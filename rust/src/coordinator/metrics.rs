@@ -30,6 +30,15 @@ use super::telemetry::{
 };
 use super::trace::{Stage, StageBreakdown, TracePath};
 use crate::util::json::Json;
+use crate::util::sync::recover;
+
+// Every atomic in this module is an independent monotone counter or
+// last-write-wins gauge; no cross-field invariant hangs on an atomic, and
+// readers tolerate torn *cross-counter* views by construction (each
+// snapshot documents it).  Audit rule R4 is satisfied at this one site; a
+// future non-relaxed access must carry its own rationale.
+// ordering: relaxed — standalone statistical counters, no release/acquire pairing
+const RELAXED: Ordering = Ordering::Relaxed;
 
 /// Index of the work queue's shard lane in per-lane metrics arrays
 /// (`queue_sojourn`); also used by `workers::WorkQueue` itself.
@@ -65,8 +74,8 @@ pub struct AtomicHistogram {
 impl AtomicHistogram {
     pub fn record(&self, secs: f64) {
         let idx = BUCKETS.partition_point(|&b| b < secs);
-        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
-        self.sum_us.fetch_add((secs * 1e6) as u64, Ordering::Relaxed);
+        self.buckets[idx].fetch_add(1, RELAXED);
+        self.sum_us.fetch_add((secs * 1e6) as u64, RELAXED);
     }
 
     /// Copy the histogram out in one pass.  Individual bucket loads are
@@ -75,8 +84,8 @@ impl AtomicHistogram {
     /// conserved and only ever grow.
     pub fn snapshot(&self) -> HistSnapshot {
         HistSnapshot {
-            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
-            sum_us: self.sum_us.load(Ordering::Relaxed),
+            buckets: std::array::from_fn(|i| self.buckets[i].load(RELAXED)),
+            sum_us: self.sum_us.load(RELAXED),
         }
     }
 }
@@ -334,11 +343,11 @@ impl Metrics {
         let m = Self::default();
         // threshold gauge starts at the paper's prior, not 0.0
         m.tuner_threshold_bits
-            .store(crate::spmm::DEFAULT_THRESHOLD.to_bits(), Ordering::Relaxed);
+            .store(crate::spmm::DEFAULT_THRESHOLD.to_bits(), RELAXED);
         // imbalance gauge starts at the perfectly-balanced value
-        m.shard_imbalance_bits.store(1.0f64.to_bits(), Ordering::Relaxed);
+        m.shard_imbalance_bits.store(1.0f64.to_bits(), RELAXED);
         m.slow_threshold_us
-            .store((DEFAULT_SLOW_THRESHOLD_S * 1e6) as u64, Ordering::Relaxed);
+            .store((DEFAULT_SLOW_THRESHOLD_S * 1e6) as u64, RELAXED);
         m
     }
 
@@ -359,50 +368,51 @@ impl Metrics {
     /// Record one fused wide pass: `k` requests executed as a single
     /// `m × n_total` SpMM (called by the worker that ran the pass).
     pub fn record_fused(&self, k: u64, n_total: u64) {
-        self.fused_batches.fetch_add(1, Ordering::Relaxed);
-        self.fused_requests.fetch_add(k, Ordering::Relaxed);
-        self.fused_width_total.fetch_add(n_total, Ordering::Relaxed);
+        self.fused_batches.fetch_add(1, RELAXED);
+        self.fused_requests.fetch_add(k, RELAXED);
+        self.fused_width_total.fetch_add(n_total, RELAXED);
     }
 
     /// Mirror the most recent shard layout into the exported gauges
     /// (called by the sharded path at scatter time).
     pub fn sync_shard_gauges(&self, shards: usize, imbalance: f64) {
-        self.shard_count_last.store(shards as u64, Ordering::Relaxed);
-        self.shard_imbalance_bits.store(imbalance.to_bits(), Ordering::Relaxed);
+        self.shard_count_last.store(shards as u64, RELAXED);
+        self.shard_imbalance_bits.store(imbalance.to_bits(), RELAXED);
     }
 
     /// Mirror planner state into the exported gauges (called by whoever
     /// just planned — engine or router).
     pub fn sync_plan_gauges(&self, cache: &crate::plan::CacheStats, threshold: f64) {
-        self.plan_evictions.store(cache.evictions, Ordering::Relaxed);
-        self.plan_len.store(cache.len as u64, Ordering::Relaxed);
-        self.tuner_threshold_bits.store(threshold.to_bits(), Ordering::Relaxed);
+        self.plan_evictions.store(cache.evictions, RELAXED);
+        self.plan_len.store(cache.len as u64, RELAXED);
+        self.tuner_threshold_bits.store(threshold.to_bits(), RELAXED);
     }
 
     /// Mirror the two-lane work queue's depths into the exported gauges
     /// (called by the server at snapshot time).
     pub fn sync_queue_gauges(&self, shard_depth: usize, batch_depth: usize) {
-        self.queue_shard_depth.store(shard_depth as u64, Ordering::Relaxed);
-        self.queue_batch_depth.store(batch_depth as u64, Ordering::Relaxed);
+        self.queue_shard_depth.store(shard_depth as u64, RELAXED);
+        self.queue_batch_depth.store(batch_depth as u64, RELAXED);
         self.note_queue_depth(SHARD_LANE, shard_depth as u64);
         self.note_queue_depth(BATCH_LANE, batch_depth as u64);
     }
 
     /// Bump the monotonic high-water mark of one lane's depth (called by
     /// `WorkQueue` at push time — one relaxed `fetch_max`, no lock).
+    // audit: hot — queue push path; one relaxed fetch_max, nothing else
     pub fn note_queue_depth(&self, lane: usize, depth: u64) {
         let hwm = if lane == SHARD_LANE {
             &self.queue_shard_depth_hwm
         } else {
             &self.queue_batch_depth_hwm
         };
-        hwm.fetch_max(depth, Ordering::Relaxed);
+        hwm.fetch_max(depth, RELAXED);
     }
 
     /// Adopt the unified runtime's per-worker attribution slots (called
     /// once at spawn).  Replaces any previous registration.
     pub fn register_worker_stats(&self, stats: Vec<Arc<WorkerStats>>) {
-        *self.worker_stats.lock().unwrap() = stats;
+        *recover(&self.worker_stats) = stats;
     }
 
     /// The shared plan-decision audit journal (install into a `Planner`
@@ -415,6 +425,7 @@ impl Metrics {
     /// runtime-owned gauges only the caller can see (queue depths, exec
     /// stats).  Wall-clock stamped; counters are cumulative — rates fall
     /// out as inter-sample deltas at export time.
+    // audit: hot — sampler tick; pure relaxed loads into a POD sample
     pub fn sample_now(
         &self,
         exec: &crate::exec::ExecStats,
@@ -428,13 +439,13 @@ impl Metrics {
             workers_busy: exec.workers.saturating_sub(exec.parked) as u64,
             workers_parked: exec.parked as u64,
             buffers_pooled: exec.buffers.pooled,
-            plan_hits: self.plan_hits.load(Ordering::Relaxed),
-            plan_misses: self.plan_misses.load(Ordering::Relaxed),
-            completed: self.completed.load(Ordering::Relaxed),
-            shed: self.shed_deadline.load(Ordering::Relaxed)
-                + self.shed_codel.load(Ordering::Relaxed),
-            cancelled: self.cancelled.load(Ordering::Relaxed),
-            deadline_missed: self.deadline_missed.load(Ordering::Relaxed),
+            plan_hits: self.plan_hits.load(RELAXED),
+            plan_misses: self.plan_misses.load(RELAXED),
+            completed: self.completed.load(RELAXED),
+            shed: self.shed_deadline.load(RELAXED)
+                + self.shed_codel.load(RELAXED),
+            cancelled: self.cancelled.load(RELAXED),
+            deadline_missed: self.deadline_missed.load(RELAXED),
         }
         .stamped()
     }
@@ -442,7 +453,7 @@ impl Metrics {
     /// Append one sampler tick to the telemetry ring (sampler thread
     /// only — the request path never touches this mutex).
     pub fn record_sample(&self, sample: TelemetrySample) {
-        self.samples.lock().unwrap().push(sample);
+        recover(&self.samples).push(sample);
     }
 
     /// Mirror executor pool / buffer free-list / partition-replay state
@@ -453,16 +464,16 @@ impl Metrics {
         exec: &crate::exec::ExecStats,
         partition: &crate::plan::PartitionStats,
     ) {
-        self.pool_workers.store(exec.workers as u64, Ordering::Relaxed);
-        self.workers_parked.store(exec.parked as u64, Ordering::Relaxed);
-        self.pool_jobs.store(exec.jobs, Ordering::Relaxed);
-        self.buffers_pooled.store(exec.buffers.pooled, Ordering::Relaxed);
-        self.buffers_allocated.store(exec.buffers.allocated, Ordering::Relaxed);
-        self.buffer_reuses.store(exec.buffers.reused, Ordering::Relaxed);
+        self.pool_workers.store(exec.workers as u64, RELAXED);
+        self.workers_parked.store(exec.parked as u64, RELAXED);
+        self.pool_jobs.store(exec.jobs, RELAXED);
+        self.buffers_pooled.store(exec.buffers.pooled, RELAXED);
+        self.buffers_allocated.store(exec.buffers.allocated, RELAXED);
+        self.buffer_reuses.store(exec.buffers.reused, RELAXED);
         // max, not store: several engines may sync; none may regress it
-        self.buffers_pooled_hwm.fetch_max(exec.buffers.pooled_hwm, Ordering::Relaxed);
-        self.partition_hits.store(partition.hits, Ordering::Relaxed);
-        self.partition_misses.store(partition.misses, Ordering::Relaxed);
+        self.buffers_pooled_hwm.fetch_max(exec.buffers.pooled_hwm, RELAXED);
+        self.partition_hits.store(partition.hits, RELAXED);
+        self.partition_misses.store(partition.misses, RELAXED);
     }
 
     /// Record a finished request's stage breakdown: end-to-end into its
@@ -485,11 +496,11 @@ impl Metrics {
             self.stage_hist[Stage::Gather.index()].record(t.gather_s);
         }
         let entry = JournalEntry::from_breakdown(t);
-        let thr_us = self.slow_threshold_us.load(Ordering::Relaxed);
+        let thr_us = self.slow_threshold_us.load(RELAXED);
         // The journal is the one mutex on the record path; entries are
         // 80-byte memcpys, so the critical section is a few nanoseconds
         // and a reader can never see a half-written trace.
-        let mut j = self.journal.lock().unwrap();
+        let mut j = recover(&self.journal);
         j.recent.push(entry);
         if thr_us > 0 && (t.total_s * 1e6) as u64 >= thr_us {
             j.slow.push(entry);
@@ -504,11 +515,11 @@ impl Metrics {
 
     /// Set the slow-request journal threshold (seconds; 0 disables).
     pub fn set_slow_threshold_s(&self, secs: f64) {
-        self.slow_threshold_us.store((secs.max(0.0) * 1e6) as u64, Ordering::Relaxed);
+        self.slow_threshold_us.store((secs.max(0.0) * 1e6) as u64, RELAXED);
     }
 
     pub fn slow_threshold_s(&self) -> f64 {
-        self.slow_threshold_us.load(Ordering::Relaxed) as f64 / 1e6
+        self.slow_threshold_us.load(RELAXED) as f64 / 1e6
     }
 
     /// The p-th end-to-end latency percentile across all paths,
@@ -537,7 +548,7 @@ impl Metrics {
         let combined =
             path_snaps.iter().fold(HistSnapshot::default(), |acc, h| acc.merged(h));
         let (slow_requests, recent_requests) = {
-            let j = self.journal.lock().unwrap();
+            let j = recover(&self.journal);
             (j.slow.to_vec(), j.recent.to_vec())
         };
         let worker_stats: Vec<WorkerStatsSnapshot> = self
@@ -548,55 +559,55 @@ impl Metrics {
             .enumerate()
             .map(|(i, w)| w.snapshot(i))
             .collect();
-        let telemetry = self.samples.lock().unwrap().to_vec();
+        let telemetry = recover(&self.samples).to_vec();
         let plan_events = self.plan_journal.to_vec();
         MetricsSnapshot {
-            requests: self.requests.load(Ordering::Relaxed),
-            completed: self.completed.load(Ordering::Relaxed),
-            errors: self.errors.load(Ordering::Relaxed),
-            shed_deadline: self.shed_deadline.load(Ordering::Relaxed),
-            shed_codel: self.shed_codel.load(Ordering::Relaxed),
-            cancelled: self.cancelled.load(Ordering::Relaxed),
-            deadline_missed: self.deadline_missed.load(Ordering::Relaxed),
-            rowsplit: self.rowsplit.load(Ordering::Relaxed),
-            merge: self.merge.load(Ordering::Relaxed),
-            pjrt: self.pjrt.load(Ordering::Relaxed),
-            cpu_fallback: self.cpu_fallback.load(Ordering::Relaxed),
-            plan_hits: self.plan_hits.load(Ordering::Relaxed),
-            plan_misses: self.plan_misses.load(Ordering::Relaxed),
-            plan_evictions: self.plan_evictions.load(Ordering::Relaxed),
-            plan_len: self.plan_len.load(Ordering::Relaxed),
-            probes: self.probes.load(Ordering::Relaxed),
-            sharded: self.sharded.load(Ordering::Relaxed),
-            shards_executed: self.shards_executed.load(Ordering::Relaxed),
-            fused_batches: self.fused_batches.load(Ordering::Relaxed),
-            fused_requests: self.fused_requests.load(Ordering::Relaxed),
+            requests: self.requests.load(RELAXED),
+            completed: self.completed.load(RELAXED),
+            errors: self.errors.load(RELAXED),
+            shed_deadline: self.shed_deadline.load(RELAXED),
+            shed_codel: self.shed_codel.load(RELAXED),
+            cancelled: self.cancelled.load(RELAXED),
+            deadline_missed: self.deadline_missed.load(RELAXED),
+            rowsplit: self.rowsplit.load(RELAXED),
+            merge: self.merge.load(RELAXED),
+            pjrt: self.pjrt.load(RELAXED),
+            cpu_fallback: self.cpu_fallback.load(RELAXED),
+            plan_hits: self.plan_hits.load(RELAXED),
+            plan_misses: self.plan_misses.load(RELAXED),
+            plan_evictions: self.plan_evictions.load(RELAXED),
+            plan_len: self.plan_len.load(RELAXED),
+            probes: self.probes.load(RELAXED),
+            sharded: self.sharded.load(RELAXED),
+            shards_executed: self.shards_executed.load(RELAXED),
+            fused_batches: self.fused_batches.load(RELAXED),
+            fused_requests: self.fused_requests.load(RELAXED),
             fused_width_mean: {
-                let batches = self.fused_batches.load(Ordering::Relaxed);
+                let batches = self.fused_batches.load(RELAXED);
                 if batches == 0 {
                     0.0
                 } else {
-                    self.fused_width_total.load(Ordering::Relaxed) as f64 / batches as f64
+                    self.fused_width_total.load(RELAXED) as f64 / batches as f64
                 }
             },
-            shard_count_last: self.shard_count_last.load(Ordering::Relaxed),
+            shard_count_last: self.shard_count_last.load(RELAXED),
             shard_imbalance_last: f64::from_bits(
-                self.shard_imbalance_bits.load(Ordering::Relaxed),
+                self.shard_imbalance_bits.load(RELAXED),
             ),
-            pool_workers: self.pool_workers.load(Ordering::Relaxed),
-            workers_parked: self.workers_parked.load(Ordering::Relaxed),
-            pool_jobs: self.pool_jobs.load(Ordering::Relaxed),
-            queue_shard_depth: self.queue_shard_depth.load(Ordering::Relaxed),
-            queue_batch_depth: self.queue_batch_depth.load(Ordering::Relaxed),
-            queue_shard_depth_hwm: self.queue_shard_depth_hwm.load(Ordering::Relaxed),
-            queue_batch_depth_hwm: self.queue_batch_depth_hwm.load(Ordering::Relaxed),
-            buffers_pooled: self.buffers_pooled.load(Ordering::Relaxed),
-            buffers_allocated: self.buffers_allocated.load(Ordering::Relaxed),
-            buffer_reuses: self.buffer_reuses.load(Ordering::Relaxed),
-            buffers_pooled_hwm: self.buffers_pooled_hwm.load(Ordering::Relaxed),
-            partition_hits: self.partition_hits.load(Ordering::Relaxed),
-            partition_misses: self.partition_misses.load(Ordering::Relaxed),
-            tuner_threshold: f64::from_bits(self.tuner_threshold_bits.load(Ordering::Relaxed)),
+            pool_workers: self.pool_workers.load(RELAXED),
+            workers_parked: self.workers_parked.load(RELAXED),
+            pool_jobs: self.pool_jobs.load(RELAXED),
+            queue_shard_depth: self.queue_shard_depth.load(RELAXED),
+            queue_batch_depth: self.queue_batch_depth.load(RELAXED),
+            queue_shard_depth_hwm: self.queue_shard_depth_hwm.load(RELAXED),
+            queue_batch_depth_hwm: self.queue_batch_depth_hwm.load(RELAXED),
+            buffers_pooled: self.buffers_pooled.load(RELAXED),
+            buffers_allocated: self.buffers_allocated.load(RELAXED),
+            buffer_reuses: self.buffer_reuses.load(RELAXED),
+            buffers_pooled_hwm: self.buffers_pooled_hwm.load(RELAXED),
+            partition_hits: self.partition_hits.load(RELAXED),
+            partition_misses: self.partition_misses.load(RELAXED),
+            tuner_threshold: f64::from_bits(self.tuner_threshold_bits.load(RELAXED)),
             p50_s: combined.percentile(50.0),
             p99_s: combined.percentile(99.0),
             mean_latency_s: combined.mean_s(),
@@ -1209,6 +1220,28 @@ impl std::fmt::Display for MetricsSnapshot {
             " shed={}d/{}c cancel={} miss={}",
             self.shed_deadline, self.shed_codel, self.cancelled, self.deadline_missed
         )?;
+        write!(
+            f,
+            " plan_len={} shards={} fusedreq={} jobs={} pooled={} mean={:.1}ms",
+            self.plan_len,
+            self.shards_executed,
+            self.fused_requests,
+            self.pool_jobs,
+            self.buffers_pooled,
+            self.mean_latency_s * 1e3
+        )?;
+        for s in Stage::ALL {
+            let st = &self.per_stage[s.index()];
+            if st.count > 0 {
+                write!(f, " {}~{:.1}ms", s.name(), st.p50_s * 1e3)?;
+            }
+        }
+        for (i, name) in ["shard", "batch"].iter().enumerate() {
+            let st = &self.queue_sojourn[i];
+            if st.count > 0 {
+                write!(f, " sojourn_{}~{:.1}ms", name, st.p50_s * 1e3)?;
+            }
+        }
         for p in TracePath::ALL {
             let s = &self.per_path[p.index()];
             write!(
@@ -1277,7 +1310,7 @@ mod tests {
         for _ in 0..10 {
             m.record_latency(0.2); // bucket (1e-1, 3e-1]
         }
-        m.completed.store(100, Ordering::Relaxed);
+        m.completed.store(100, RELAXED);
         let p50 = m.latency_percentile(50.0);
         assert!(p50 > 3e-4 && p50 <= 1e-3, "p50 = {p50}");
         let p99 = m.latency_percentile(99.0);
@@ -1295,7 +1328,7 @@ mod tests {
         m.record_latency(0.3);
         // `completed` deliberately out of sync with the histogram — the
         // mean must use the histogram's own total as denominator
-        m.completed.store(1000, Ordering::Relaxed);
+        m.completed.store(1000, RELAXED);
         let snap = m.snapshot();
         assert!((snap.mean_latency_s - 0.2).abs() < 1e-6, "{}", snap.mean_latency_s);
     }
@@ -1410,8 +1443,8 @@ mod tests {
         let m = Metrics::new();
         // threshold gauge starts at the paper's prior
         assert_eq!(m.snapshot().tuner_threshold, crate::spmm::DEFAULT_THRESHOLD);
-        m.plan_hits.store(3, Ordering::Relaxed);
-        m.plan_misses.store(1, Ordering::Relaxed);
+        m.plan_hits.store(3, RELAXED);
+        m.plan_misses.store(1, RELAXED);
         m.sync_plan_gauges(
             &crate::plan::CacheStats {
                 hits: 3,
@@ -1439,8 +1472,8 @@ mod tests {
         let snap = m.snapshot();
         assert_eq!(snap.shard_count_last, 0);
         assert_eq!(snap.shard_imbalance_last, 1.0);
-        m.sharded.store(2, Ordering::Relaxed);
-        m.shards_executed.store(7, Ordering::Relaxed);
+        m.sharded.store(2, RELAXED);
+        m.shards_executed.store(7, RELAXED);
         m.sync_shard_gauges(4, 1.18);
         let snap = m.snapshot();
         assert_eq!(snap.sharded, 2);
@@ -1502,10 +1535,10 @@ mod tests {
     #[test]
     fn shed_counters_and_sojourn_histograms_export_everywhere() {
         let m = Metrics::new();
-        m.shed_counter(ShedReason::DeadlineExpired).fetch_add(2, Ordering::Relaxed);
-        m.shed_counter(ShedReason::CodelOverload).fetch_add(1, Ordering::Relaxed);
-        m.shed_counter(ShedReason::Cancelled).fetch_add(3, Ordering::Relaxed);
-        m.deadline_missed.fetch_add(1, Ordering::Relaxed);
+        m.shed_counter(ShedReason::DeadlineExpired).fetch_add(2, RELAXED);
+        m.shed_counter(ShedReason::CodelOverload).fetch_add(1, RELAXED);
+        m.shed_counter(ShedReason::Cancelled).fetch_add(3, RELAXED);
+        m.deadline_missed.fetch_add(1, RELAXED);
         m.record_sojourn(SHARD_LANE, 0.001);
         m.record_sojourn(BATCH_LANE, 0.02);
         let snap = m.snapshot();
@@ -1598,8 +1631,8 @@ mod tests {
     fn telemetry_ring_reaches_snapshot_and_exports() {
         let m = Metrics::new();
         assert!(m.snapshot().telemetry.is_empty());
-        m.plan_hits.store(3, Ordering::Relaxed);
-        m.completed.store(10, Ordering::Relaxed);
+        m.plan_hits.store(3, RELAXED);
+        m.completed.store(10, RELAXED);
         let exec = crate::exec::ExecStats {
             workers: 4,
             parked: 1,
@@ -1614,7 +1647,7 @@ mod tests {
         assert_eq!(s0.completed, 10);
         assert!(s0.unix_us > 0);
         m.record_sample(s0);
-        m.completed.store(14, Ordering::Relaxed);
+        m.completed.store(14, RELAXED);
         m.record_sample(m.sample_now(&exec, 0, 0));
         let snap = m.snapshot();
         assert_eq!(snap.telemetry.len(), 2);

@@ -341,7 +341,7 @@ impl Server {
                             } else {
                                 &metrics.plan_misses
                             };
-                            plan_counter.fetch_add(1, Ordering::Relaxed);
+                            plan_counter.fetch_add(1, Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
                             metrics.sync_plan_gauges(
                                 &planner.cache().stats(),
                                 planner.tuner().threshold(),
@@ -497,8 +497,11 @@ impl Server {
         n: usize,
         deadline: Deadline,
     ) -> std::result::Result<RequestHandle, SubmitError> {
+        // ingress boundary: matrices arrive by Arc and never pass through
+        // Csr::new in-process, so debug builds deep-check them here
+        crate::formats::validate::debug_validate(&csr, "Server::submit");
         let (tx, rx) = std::sync::mpsc::channel();
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed); // ordering: relaxed — unique-id ticket; only atomicity matters
         let cancel = CancelToken::new();
         let req = Request {
             id,

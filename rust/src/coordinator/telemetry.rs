@@ -40,6 +40,14 @@ use crate::plan::Fingerprint;
 use crate::spmm::Algorithm;
 use crate::util::json::Json;
 
+// Every atomic in this module is an independent monotone counter or
+// last-write-wins gauge; no cross-field invariant hangs on an atomic, and
+// readers tolerate torn *cross-counter* views by construction (each
+// snapshot documents it).  Audit rule R4 is satisfied at this one site; a
+// future non-relaxed access must carry its own rationale.
+// ordering: relaxed — standalone statistical counters, no release/acquire pairing
+const RELAXED: Ordering = Ordering::Relaxed;
+
 /// Samples retained per telemetry time-series.
 pub const TELEMETRY_RING_CAP: usize = 256;
 /// Plan-decision events retained in the audit journal — sized so a
@@ -154,44 +162,49 @@ impl WorkerStats {
         Self::default()
     }
 
+    // audit: hot — per-job attribution on the worker loop
     pub fn note_job(&self, kind: JobKind) {
-        self.jobs[kind.index()].fetch_add(1, Ordering::Relaxed);
+        self.jobs[kind.index()].fetch_add(1, RELAXED);
     }
 
     /// Count `k` jobs of one kind at once (a fused batch retires all its
     /// riders in one pass).
+    // audit: hot — per-job attribution on the worker loop
     pub fn note_jobs(&self, kind: JobKind, k: u64) {
-        self.jobs[kind.index()].fetch_add(k, Ordering::Relaxed);
+        self.jobs[kind.index()].fetch_add(k, RELAXED);
     }
 
+    // audit: hot — per-job attribution on the worker loop
     pub fn note_queue_wait(&self, lane: usize, us: u64) {
-        self.queue_wait_us[lane.min(1)].fetch_add(us, Ordering::Relaxed);
+        self.queue_wait_us[lane.min(1)].fetch_add(us, RELAXED);
     }
 
     /// Attribute `us` of run time to `lane`'s work (also accumulates the
     /// busy total).
+    // audit: hot — per-job attribution on the worker loop
     pub fn note_run(&self, lane: usize, us: u64) {
-        self.run_us[lane.min(1)].fetch_add(us, Ordering::Relaxed);
-        self.busy_us.fetch_add(us, Ordering::Relaxed);
+        self.run_us[lane.min(1)].fetch_add(us, RELAXED);
+        self.busy_us.fetch_add(us, RELAXED);
     }
 
     /// Monotonic high-water mark of the queue depth seen at pop time.
+    // audit: hot — per-job attribution on the worker loop
     pub fn note_depth(&self, depth: u64) {
-        self.depth_hwm.fetch_max(depth, Ordering::Relaxed);
+        self.depth_hwm.fetch_max(depth, RELAXED);
     }
 
     pub fn snapshot(&self, worker: usize) -> WorkerStatsSnapshot {
         WorkerStatsSnapshot {
             worker,
-            jobs_solo: self.jobs[0].load(Ordering::Relaxed),
-            jobs_fused: self.jobs[1].load(Ordering::Relaxed),
-            jobs_shard: self.jobs[2].load(Ordering::Relaxed),
-            busy_us: self.busy_us.load(Ordering::Relaxed),
-            queue_wait_shard_us: self.queue_wait_us[0].load(Ordering::Relaxed),
-            queue_wait_batch_us: self.queue_wait_us[1].load(Ordering::Relaxed),
-            run_shard_us: self.run_us[0].load(Ordering::Relaxed),
-            run_batch_us: self.run_us[1].load(Ordering::Relaxed),
-            depth_hwm: self.depth_hwm.load(Ordering::Relaxed),
+            jobs_solo: self.jobs[0].load(RELAXED),
+            jobs_fused: self.jobs[1].load(RELAXED),
+            jobs_shard: self.jobs[2].load(RELAXED),
+            busy_us: self.busy_us.load(RELAXED),
+            queue_wait_shard_us: self.queue_wait_us[0].load(RELAXED),
+            queue_wait_batch_us: self.queue_wait_us[1].load(RELAXED),
+            run_shard_us: self.run_us[0].load(RELAXED),
+            run_batch_us: self.run_us[1].load(RELAXED),
+            depth_hwm: self.depth_hwm.load(RELAXED),
         }
     }
 }

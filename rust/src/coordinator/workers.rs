@@ -69,7 +69,7 @@ use std::collections::VecDeque;
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
-use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -79,6 +79,7 @@ use crate::formats::Csr;
 use crate::plan::{PlanOutcome, Planner};
 use crate::shard::engine::{execute_shard, ShardTask, WorkSink};
 use crate::spmm::{self, Algorithm};
+use crate::util::sync::{recover, recover_wait};
 
 use super::admission::{shed_error, CancelToken, CodelState, Deadline, ShedPoint, ShedReason};
 use super::engine::{EngineConfig, ExecutionPath, SpmmEngine, SpmmResult};
@@ -151,7 +152,7 @@ pub(crate) fn shed_request(
     reason: ShedReason,
 ) {
     r.trace.mark_shed(point, reason);
-    metrics.requests.fetch_add(1, Ordering::Relaxed);
+    metrics.requests.fetch_add(1, Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
     metrics.shed_counter(reason).fetch_add(1, Ordering::Relaxed);
     let _ = r.reply.send(Err(shed_error(reason, r.id)));
 }
@@ -259,18 +260,6 @@ struct Lanes {
     /// per-lane CoDel controllers, indexed by SHARD_LANE / BATCH_LANE
     codel: [CodelState; 2],
     closed: bool,
-}
-
-/// Lock that shrugs off poisoning: a panicking holder leaves the data in
-/// a consistent state here (every critical section is a queue push/pop),
-/// so recovery is safe — and it turns "one worker panicked" into "one
-/// request failed" instead of "every sibling's `lock()` now panics".
-fn recover<T>(lock: &Mutex<T>) -> MutexGuard<'_, T> {
-    lock.lock().unwrap_or_else(PoisonError::into_inner)
-}
-
-fn recover_wait<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
-    cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
 }
 
 /// The two-lane work queue shared by every worker.
@@ -518,7 +507,7 @@ impl WorkQueue {
         let Some((mut r, reason)) = victim else { return };
         r.trace.mark_shed(ShedPoint::Queue, reason);
         if let Some(m) = &self.metrics {
-            m.requests.fetch_add(1, Ordering::Relaxed);
+            m.requests.fetch_add(1, Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
             m.shed_counter(reason).fetch_add(1, Ordering::Relaxed);
         }
         let _ = r.reply.send(Err(shed_error(reason, r.id)));
@@ -679,7 +668,7 @@ impl WorkSink for WorkerRuntime {
     }
 
     fn shard_tasks_per_worker(&self) -> Vec<u64> {
-        self.shard_counts.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+        self.shard_counts.iter().map(|c| c.load(Ordering::Relaxed)).collect() // ordering: relaxed — snapshot read; torn cross-field views are acceptable
     }
 
     fn exec_stats(&self) -> ExecStats {
@@ -711,6 +700,9 @@ impl Drop for WorkerRuntime {
 /// context, so they keep executing even when the engine failed to build
 /// (e.g. a missing artifacts manifest) — only batches depend on the
 /// engine.
+// one spawn site; the parameter list IS the worker's whole dependency
+// set, and bundling it into a struct would just move the list
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     index: usize,
     queue: Arc<WorkQueue>,
@@ -764,7 +756,7 @@ fn worker_loop(
                         // Count the failures — monitoring must not see a
                         // healthy idle server while every client errors.
                         for r in reqs {
-                            metrics.requests.fetch_add(1, Ordering::Relaxed);
+                            metrics.requests.fetch_add(1, Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
                             metrics.errors.fetch_add(1, Ordering::Relaxed);
                             let _ = r.reply.send(Err(anyhow::anyhow!("engine init: {e}")));
                         }
@@ -773,7 +765,7 @@ fn worker_loop(
                 stats.note_run(BATCH_LANE, started.elapsed().as_micros() as u64);
             }
             WorkItem::Shard(task) => {
-                shard_count.fetch_add(1, Ordering::Relaxed);
+                shard_count.fetch_add(1, Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
                 execute_shard(&planner, &mut ctx, task, index);
                 stats.note_job(JobKind::Shard);
                 stats.note_run(SHARD_LANE, started.elapsed().as_micros() as u64);
@@ -912,21 +904,21 @@ fn run_fused(
     };
     let end = Instant::now();
     let k = reqs.len() as u64;
-    metrics.requests.fetch_add(k, Ordering::Relaxed);
+    metrics.requests.fetch_add(k, Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
     metrics.completed.fetch_add(k, Ordering::Relaxed);
-    metrics.cpu_fallback.fetch_add(k, Ordering::Relaxed);
+    metrics.cpu_fallback.fetch_add(k, Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
     match outcome.plan.algorithm {
         Algorithm::RowSplit => &metrics.rowsplit,
         Algorithm::MergeBased => &metrics.merge,
     }
-    .fetch_add(k, Ordering::Relaxed);
+    .fetch_add(k, Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
     metrics.record_fused(k, n_total as u64);
     let [plan_sp, pack_sp, exec_sp, gather_sp] = spans;
     for (mut r, c) in reqs.into_iter().zip(outs) {
         // the rider was live at pack time but may have expired during the
         // wide pass: the work is done, so deliver it — but count the miss
         if r.deadline.expired(end) {
-            metrics.deadline_missed.fetch_add(1, Ordering::Relaxed);
+            metrics.deadline_missed.fetch_add(1, Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
         }
         // queue ends for every rider when the fused pass picked the batch
         // up; riders admitted earlier simply show a longer queue wait
@@ -980,7 +972,7 @@ fn run_batch(engine: &SpmmEngine, metrics: &Metrics, reqs: Vec<Request>) {
             }
         }));
         let res = executed.unwrap_or_else(|payload| {
-            metrics.errors.fetch_add(1, Ordering::Relaxed);
+            metrics.errors.fetch_add(1, Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
             Err(anyhow::anyhow!(
                 "request {} panicked during execution: {}",
                 r.id,
@@ -989,7 +981,7 @@ fn run_batch(engine: &SpmmEngine, metrics: &Metrics, reqs: Vec<Request>) {
         });
         if res.is_ok() && r.deadline.expired(Instant::now()) {
             // completed, but too late for the client's budget
-            metrics.deadline_missed.fetch_add(1, Ordering::Relaxed);
+            metrics.deadline_missed.fetch_add(1, Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
         }
         let _ = r.reply.send(res);
     }

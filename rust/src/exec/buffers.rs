@@ -8,12 +8,17 @@
 //! per output shape.  Retention is capped per shape and across shapes so
 //! adversarial shape churn cannot grow the pool without bound.
 
+// unsafe surface: disjoint writable windows of one pooled allocation
+// (OutputRange); every site carries a SAFETY contract.
+#![allow(unsafe_code)]
+
 use std::collections::HashMap;
 use std::ops::{Deref, DerefMut};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::pool::SendPtr;
+use crate::util::sync::recover;
 
 /// Per-length cap on retained buffers.
 const MAX_PER_SHELF: usize = 8;
@@ -55,15 +60,15 @@ impl BufferPool {
     /// zeroing pass is paid here.  (Associated fn rather than a method:
     /// the lease must hold an `Arc` back to the pool for its `Drop`.)
     pub fn acquire(pool: &Arc<BufferPool>, len: usize) -> OutputBuf {
-        let hit = pool.shelves.lock().unwrap().get_mut(&len).and_then(|shelf| shelf.pop());
+        let hit = recover(&pool.shelves).get_mut(&len).and_then(|shelf| shelf.pop());
         let data = match hit {
             Some(buf) => {
-                pool.reused.fetch_add(1, Ordering::Relaxed);
+                pool.reused.fetch_add(1, Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
                 pool.pooled.fetch_sub(1, Ordering::Relaxed);
                 buf
             }
             None => {
-                pool.allocated.fetch_add(1, Ordering::Relaxed);
+                pool.allocated.fetch_add(1, Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
                 vec![0.0; len]
             }
         };
@@ -75,11 +80,11 @@ impl BufferPool {
 
     fn release(&self, data: Vec<f32>) {
         let len = data.len();
-        let mut shelves = self.shelves.lock().unwrap();
+        let mut shelves = recover(&self.shelves);
         if let Some(shelf) = shelves.get_mut(&len) {
             if shelf.len() < MAX_PER_SHELF {
                 shelf.push(data);
-                let now = self.pooled.fetch_add(1, Ordering::Relaxed) + 1;
+                let now = self.pooled.fetch_add(1, Ordering::Relaxed) + 1; // ordering: relaxed — standalone stats counter, no release/acquire pairing
                 self.pooled_hwm.fetch_max(now, Ordering::Relaxed);
             }
             return;
@@ -96,15 +101,15 @@ impl BufferPool {
             }
         }
         shelves.insert(len, vec![data]);
-        let now = self.pooled.fetch_add(1, Ordering::Relaxed) + 1;
+        let now = self.pooled.fetch_add(1, Ordering::Relaxed) + 1; // ordering: relaxed — standalone stats counter, no release/acquire pairing
         self.pooled_hwm.fetch_max(now, Ordering::Relaxed);
     }
 
     pub fn stats(&self) -> BufferStats {
         BufferStats {
-            allocated: self.allocated.load(Ordering::Relaxed),
+            allocated: self.allocated.load(Ordering::Relaxed), // ordering: relaxed — snapshot read; torn cross-field views are acceptable
             reused: self.reused.load(Ordering::Relaxed),
-            pooled: self.pooled.load(Ordering::Relaxed),
+            pooled: self.pooled.load(Ordering::Relaxed), // ordering: relaxed — snapshot read; torn cross-field views are acceptable
             pooled_hwm: self.pooled_hwm.load(Ordering::Relaxed),
         }
     }
@@ -158,7 +163,7 @@ impl OutputBuf {
         let base = self.data.as_mut_ptr();
         cuts.windows(2)
             .map(|w| OutputRange {
-                // Safety: w[0]·n ≤ len by the checks above, so the offset
+                // SAFETY: w[0]·n ≤ len by the checks above, so the offset
                 // stays inside (or one past) the allocation.
                 ptr: SendPtr(unsafe { base.add(w[0] * n) }),
                 len: (w[1] - w[0]) * n,
@@ -194,6 +199,9 @@ impl OutputRange {
     /// (in-bounds, pairwise disjoint) and liveness contract (the backing
     /// `OutputBuf` outlives every range).
     pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        // SAFETY: `split_rows` placed this window in-bounds and pairwise
+        // disjoint, and its liveness contract keeps the backing `OutputBuf`
+        // alive for as long as any range exists.
         unsafe { std::slice::from_raw_parts_mut(self.ptr.0, self.len) }
     }
 }
@@ -227,6 +235,7 @@ impl FusedStaging {
     /// per-request `k_rows × n_j` row-major B's side by side: request
     /// `j`'s columns occupy `[off_j, off_j + n_j)` of every wide row,
     /// with `off_j = Σ_{i<j} n_i`.  The widths must sum to `n_total`.
+    // audit: hot — fused-batch staging; R3 bans allocation/clock tokens here
     pub fn pack<'a>(
         pool: &Arc<BufferPool>,
         k_rows: usize,
@@ -270,6 +279,7 @@ impl FusedStaging {
     /// Scatter a computed `m × n_total` wide output back into per-request
     /// `m × n_j` buffers — the exact inverse column slicing of
     /// [`Self::pack`].  Each copy is a stride-1 row slice.
+    // audit: hot — fused-batch scatter; R3 bans allocation/clock tokens here
     pub fn unpack<'a>(
         c_wide: &[f32],
         m: usize,

@@ -18,8 +18,14 @@
 //! captures) from the caller's stack is sound — the same scoping argument
 //! `std::thread::scope` makes, without the per-call spawn/join.
 
+// unsafe surface: type-erased broadcast jobs — Send/Sync for SendPtr and
+// Job, plus the erased closure call; every site carries a SAFETY contract.
+#![allow(unsafe_code)]
+
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use crate::util::sync::{recover, recover_wait};
 
 /// Raw-pointer wrapper that lets disjoint-index writes cross the closure
 /// boundary into pool workers.  Each task must touch only its own region;
@@ -32,9 +38,11 @@ impl<T> Clone for SendPtr<T> {
     }
 }
 impl<T> Copy for SendPtr<T> {}
-// Safety: disjointness of the regions reached through the pointer is the
+// SAFETY: disjointness of the regions reached through the pointer is the
 // caller's contract (documented on every use site).
 unsafe impl<T> Send for SendPtr<T> {}
+// SAFETY: same contract as `Send` above — shared references only ever read
+// the pointer value itself; dereferences go through disjoint windows.
 unsafe impl<T> Sync for SendPtr<T> {}
 
 thread_local! {
@@ -50,7 +58,7 @@ struct Job {
     call: unsafe fn(*const (), usize),
 }
 
-// Safety: the pointer is only dereferenced while `broadcast` blocks on
+// SAFETY: the pointer is only dereferenced while `broadcast` blocks on
 // completion, so the closure it points at is always alive.
 unsafe impl Send for Job {}
 
@@ -135,13 +143,13 @@ impl WorkerPool {
 
     /// Workers currently parked on the condvar (gauge; racy by nature).
     pub fn parked(&self) -> usize {
-        self.shared.parked.load(Ordering::Relaxed)
+        self.shared.parked.load(Ordering::Relaxed) // ordering: relaxed — snapshot read; torn cross-field views are acceptable
     }
 
     /// Jobs dispatched to the pool over its lifetime (inline-run jobs —
     /// single-task or nested — are not counted).
     pub fn jobs(&self) -> u64 {
-        self.jobs.load(Ordering::Relaxed)
+        self.jobs.load(Ordering::Relaxed) // ordering: relaxed — snapshot read; torn cross-field views are acceptable
     }
 
     /// Workers currently executing tasks (`workers − parked`; racy by
@@ -168,23 +176,25 @@ impl WorkerPool {
             }
             return;
         }
+        // SAFETY (fn body): `broadcast` erased `data` from an `&F` that
+        // outlives the dispatch (it blocks until every task completes).
         unsafe fn call<F: Fn(usize)>(data: *const (), task: usize) {
-            (*(data as *const F))(task);
+            (*data.cast::<F>())(task);
         }
         let job = Job {
-            data: f as *const F as *const (),
+            data: (f as *const F).cast::<()>(),
             call: call::<F>,
         };
-        let own = self.dispatch.lock().unwrap();
-        self.jobs.fetch_add(1, Ordering::Relaxed);
-        let mut slot = self.shared.slot.lock().unwrap();
+        let own = recover(&self.dispatch);
+        self.jobs.fetch_add(1, Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
+        let mut slot = recover(&self.shared.slot);
         slot.job = Some(job);
         slot.tasks = tasks;
         slot.epoch += 1;
         slot.active = self.workers.min(tasks);
         self.shared.work.notify_all();
         while slot.active > 0 {
-            slot = self.shared.done.wait(slot).unwrap();
+            slot = recover_wait(&self.shared.done, slot);
         }
         slot.job = None;
         let payload = slot.panic.take();
@@ -201,7 +211,7 @@ impl WorkerPool {
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         {
-            let mut slot = self.shared.slot.lock().unwrap();
+            let mut slot = recover(&self.shared.slot);
             slot.shutdown = true;
             self.shared.work.notify_all();
         }
@@ -216,7 +226,7 @@ fn worker_loop(shared: Arc<Shared>, workers: usize, index: usize) {
     let mut seen = 0u64;
     loop {
         let (job, tasks) = {
-            let mut slot = shared.slot.lock().unwrap();
+            let mut slot = recover(&shared.slot);
             loop {
                 if slot.shutdown {
                     return;
@@ -225,9 +235,9 @@ fn worker_loop(shared: Arc<Shared>, workers: usize, index: usize) {
                     seen = slot.epoch;
                     break;
                 }
-                shared.parked.fetch_add(1, Ordering::Relaxed);
-                slot = shared.work.wait(slot).unwrap();
-                shared.parked.fetch_sub(1, Ordering::Relaxed);
+                shared.parked.fetch_add(1, Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
+                slot = recover_wait(&shared.work, slot);
+                shared.parked.fetch_sub(1, Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
             }
             (slot.job.unwrap(), slot.tasks)
         };
@@ -237,16 +247,18 @@ fn worker_loop(shared: Arc<Shared>, workers: usize, index: usize) {
             // A panicking job must not kill the worker or strand `active`
             // above zero (that would wedge every future broadcast): catch
             // it here, hand it to the dispatcher, keep the thread alive.
+            // Exercised by fault injection at `FaultSite::Exec` (kernel
+            // panics reach this catch through the broadcast closure).
             let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 let mut t = index;
                 while t < tasks {
-                    // Safety: the dispatcher blocks until `active == 0`, so
+                    // SAFETY: the dispatcher blocks until `active == 0`, so
                     // the closure behind `data` outlives every call.
                     unsafe { (job.call)(job.data, t) };
                     t += workers;
                 }
             }));
-            let mut slot = shared.slot.lock().unwrap();
+            let mut slot = recover(&shared.slot);
             if let Err(payload) = result {
                 if slot.panic.is_none() {
                     slot.panic = Some(payload);

@@ -54,13 +54,17 @@ impl Csr {
         if col_idx.iter().any(|&c| c as usize >= k) {
             return Err("column index out of range".into());
         }
-        Ok(Self {
+        let csr = Self {
             m,
             k,
             row_ptr,
             col_idx: col_idx.into(),
             vals: vals.into(),
-        })
+        };
+        // O(nnz) semantic invariants (sorted columns, finite values) are
+        // debug-only; the O(m) structural checks above run in release too
+        super::validate::debug_validate(&csr, "Csr::new");
+        Ok(csr)
     }
 
     /// An empty `m × k` matrix.
@@ -108,13 +112,19 @@ impl Csr {
             row_ptr.windows(2).all(|w| w[0] <= w[1]),
             "rebased row_ptr must stay non-decreasing"
         );
-        Csr {
+        let view = Csr {
             m: row_end - row_start,
             k: self.k,
             row_ptr,
             col_idx: self.col_idx.slice(nz_start, nz_end),
             vals: self.vals.slice(nz_start, nz_end),
-        }
+        };
+        debug_assert_eq!(
+            super::validate::validate_view(&view, self, row_start),
+            Ok(()),
+            "shard_view must hand out a coherent zero-copy window"
+        );
+        view
     }
 
     #[inline]
@@ -328,7 +338,7 @@ mod tests {
         assert!(v.col_idx.shares_buffer(&a.col_idx));
         assert!(v.vals.shares_buffer(&a.vals));
         assert_eq!(v.col_idx.offset(), a.row_ptr[50]);
-        assert_eq!(v.vals.as_ptr(), unsafe { a.vals.as_ptr().add(a.row_ptr[50]) });
+        assert_eq!(v.vals.as_ptr(), a.vals.as_ptr().wrapping_add(a.row_ptr[50]));
     }
 
     #[test]

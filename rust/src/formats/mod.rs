@@ -23,6 +23,7 @@ pub mod ell;
 pub mod mm;
 pub mod sellp;
 pub mod storage;
+pub mod validate;
 
 pub use coo::Coo;
 pub use csc::Csc;
@@ -31,3 +32,4 @@ pub use dcsr::Dcsr;
 pub use ell::Ell;
 pub use sellp::SellP;
 pub use storage::SharedSlice;
+pub use validate::{validate, validate_view};

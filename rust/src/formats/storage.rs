@@ -180,7 +180,7 @@ mod tests {
         assert_eq!(&w[..], &[20, 30, 40]);
         assert_eq!(w.offset(), 1);
         assert!(w.shares_buffer(&s), "re-windowing must not copy");
-        assert_eq!(w.as_ptr(), unsafe { s.as_ptr().add(1) });
+        assert_eq!(w.as_ptr(), s.as_ptr().wrapping_add(1));
         // window of a window composes offsets
         let w2 = w.slice(1, 2);
         assert_eq!(&w2[..], &[30]);

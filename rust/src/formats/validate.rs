@@ -1,0 +1,174 @@
+//! Debug-build deep validators for the CSR invariants the cheap
+//! constructor checks cannot afford.
+//!
+//! [`Csr::new`] validates the O(m) structural invariants on every build
+//! (offset array shape, monotonicity, in-range columns).  The O(nnz)
+//! *semantic* invariants the rest of the stack silently relies on —
+//! columns sorted within each row (the merge kernel's two-pointer walk
+//! and the fused bitwise-identity argument both assume it) and finite
+//! values (a NaN in `vals` makes every bitwise-identity property
+//! vacuous) — are enforced here, `debug_assert!`-wired at the three
+//! boundaries where a malformed matrix can enter:
+//!
+//! * [`Csr::new`] — every owned construction (generators, conversions,
+//!   Matrix Market I/O, tests),
+//! * [`Csr::shard_view`] — window coherence of the zero-copy view
+//!   ([`validate_view`]),
+//! * server ingress (`coordinator::router`) — matrices arriving from
+//!   callers by `Arc`, which never pass through `Csr::new` in-process.
+//!
+//! Release builds skip all of it; `cargo test` (debug) runs every suite
+//! with the validators armed, so a generator or conversion that breaks
+//! the contract fails loudly at the construction site instead of as a
+//! numeric mismatch three layers later.
+
+use super::csr::Csr;
+
+/// Deep-check every CSR invariant of `a`, structural and semantic.
+/// Returns the first violation as a human-readable message.
+pub fn validate(a: &Csr) -> Result<(), String> {
+    if a.row_ptr.len() != a.m + 1 {
+        return Err(format!("row_ptr len {} != m+1 {}", a.row_ptr.len(), a.m + 1));
+    }
+    if a.row_ptr[0] != 0 {
+        return Err("row_ptr[0] != 0".into());
+    }
+    if let Some(i) = (0..a.m).find(|&i| a.row_ptr[i] > a.row_ptr[i + 1]) {
+        return Err(format!("row_ptr decreases at row {i}"));
+    }
+    let nnz = a.row_ptr[a.m];
+    if a.col_idx.len() != nnz || a.vals.len() != nnz {
+        return Err(format!(
+            "nnz mismatch: row_ptr says {nnz}, col_idx {}, vals {}",
+            a.col_idx.len(),
+            a.vals.len()
+        ));
+    }
+    for i in 0..a.m {
+        let (s, e) = (a.row_ptr[i], a.row_ptr[i + 1]);
+        let cols = &a.col_idx[s..e];
+        if let Some(p) = cols.iter().position(|&c| c as usize >= a.k) {
+            return Err(format!("row {i}: column {} out of range {}", cols[p], a.k));
+        }
+        if let Some(p) = cols.windows(2).position(|w| w[0] > w[1]) {
+            return Err(format!(
+                "row {i}: columns not sorted ({} after {})",
+                cols[p + 1],
+                cols[p]
+            ));
+        }
+        if let Some(p) = a.vals[s..e].iter().position(|v| !v.is_finite()) {
+            return Err(format!("row {i}: non-finite value at nonzero {}", s + p));
+        }
+    }
+    Ok(())
+}
+
+/// Check that `view` is a coherent zero-copy window of `parent` starting
+/// at `row_start`: the nonzero slices alias the parent's allocation at
+/// the right offset and the rebased `row_ptr` reproduces the parent's
+/// row spans exactly.
+pub fn validate_view(view: &Csr, parent: &Csr, row_start: usize) -> Result<(), String> {
+    if view.k != parent.k {
+        return Err(format!("view k {} != parent k {}", view.k, parent.k));
+    }
+    if row_start + view.m > parent.m {
+        return Err(format!(
+            "view rows [{row_start}, {}) overrun parent m {}",
+            row_start + view.m,
+            parent.m
+        ));
+    }
+    let base = parent.row_ptr[row_start];
+    if view.nnz() > 0 {
+        if !view.col_idx.shares_buffer(&parent.col_idx) || !view.vals.shares_buffer(&parent.vals)
+        {
+            return Err("view windows do not alias the parent's allocation".into());
+        }
+        if view.col_idx.offset() != parent.col_idx.offset() + base {
+            return Err(format!(
+                "view col_idx offset {} != parent offset {} + base {base}",
+                view.col_idx.offset(),
+                parent.col_idx.offset()
+            ));
+        }
+    }
+    for i in 0..view.m {
+        if view.row_ptr[i] != parent.row_ptr[row_start + i] - base
+            || view.row_ptr[i + 1] != parent.row_ptr[row_start + i + 1] - base
+        {
+            return Err(format!("view row {i} span does not rebase parent row {}", row_start + i));
+        }
+    }
+    Ok(())
+}
+
+/// `debug_assert!` wrapper around [`validate`] for the wiring sites: a
+/// no-op in release builds, a panic with the violation message in debug.
+#[inline]
+pub fn debug_validate(a: &Csr, site: &str) {
+    #[cfg(debug_assertions)]
+    if let Err(msg) = validate(a) {
+        panic!("CSR invariant violated at {site}: {msg}");
+    }
+    #[cfg(not(debug_assertions))]
+    {
+        let _ = (a, site);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn good() -> Csr {
+        Csr::new(3, 4, vec![0, 2, 2, 4], vec![0, 2, 1, 3], vec![1.0, 2.0, 3.0, 4.0]).unwrap()
+    }
+
+    #[test]
+    fn accepts_valid_matrix() {
+        assert_eq!(validate(&good()), Ok(()));
+    }
+
+    #[test]
+    fn rejects_unsorted_columns() {
+        let mut a = good();
+        a.col_idx = vec![2u32, 0, 1, 3].into();
+        let err = validate(&a).unwrap_err();
+        assert!(err.contains("not sorted"), "{err}");
+    }
+
+    #[test]
+    fn rejects_non_finite_value() {
+        let mut a = good();
+        a.vals = vec![1.0f32, f32::NAN, 3.0, 4.0].into();
+        let err = validate(&a).unwrap_err();
+        assert!(err.contains("non-finite"), "{err}");
+    }
+
+    #[test]
+    fn rejects_out_of_range_column() {
+        let mut a = good();
+        a.col_idx = vec![0u32, 9, 1, 3].into();
+        let err = validate(&a).unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn view_coherence_holds_for_shard_view() {
+        let a = good();
+        let v = a.shard_view(1, 3);
+        assert_eq!(validate_view(&v, &a, 1), Ok(()));
+        // a detached copy with identical numbers is NOT a coherent view
+        let fake = Csr::new(2, 4, v.row_ptr.clone(), vec![1, 3], vec![3.0, 4.0]).unwrap();
+        assert!(validate_view(&fake, &a, 1).is_err());
+    }
+
+    #[test]
+    fn view_with_shifted_rebase_rejected() {
+        let a = good();
+        let v = a.shard_view(0, 2);
+        // claim the view starts at row 1: spans no longer line up
+        assert!(validate_view(&v, &a, 1).is_err());
+    }
+}

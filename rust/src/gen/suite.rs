@@ -14,6 +14,7 @@
 use super::graphs::{banded, erdos_renyi, power_law};
 use super::aspect::uniform_rows;
 use crate::formats::Csr;
+use crate::util::sync::recover;
 
 /// Topology class of a synthetic dataset.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -52,7 +53,7 @@ pub fn suite_157(seed: u64) -> &'static [Dataset] {
     use std::sync::{Mutex, OnceLock};
     static CACHE: OnceLock<Mutex<HashMap<u64, &'static [Dataset]>>> = OnceLock::new();
     let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
-    let mut guard = cache.lock().unwrap();
+    let mut guard = recover(&cache);
     if let Some(&s) = guard.get(&seed) {
         return s;
     }

@@ -253,6 +253,46 @@
 //! its scratch slots are reused in place.  The classic allocating entry
 //! points ([`spmm::rowsplit_spmm`], [`spmm::merge_spmm`]) remain as thin
 //! wrappers that run on a process-wide shared pool.
+//!
+//! ## audit — the repo's own static-analysis pass
+//!
+//! `cargo run -p pallas-audit -- rust/` (the CI `audit` step; mirrored by
+//! `tools/audit/pyaudit.py` for toolchain-free environments) enforces six
+//! repo-specific rules the compiler cannot:
+//!
+//! * **R1** — no `.lock().unwrap()` / `.lock().expect(…)` outside the
+//!   poison-recovering guards [`util::sync::recover`] /
+//!   [`util::sync::recover_wait`] (one panicking holder must cost one
+//!   request, not every sibling's `lock()`),
+//! * **R2** — every `unsafe` block/impl carries an immediately preceding
+//!   `// SAFETY:` comment (also compiler-checked via
+//!   `clippy::undocumented_unsafe_blocks` in CI),
+//! * **R3** — functions stamped `// audit: hot` (the `_into` kernels,
+//!   fused pack/unpack, worker attribution, sampler tick) may not
+//!   allocate, `format!`, `collect`, or read the clock,
+//! * **R4** — every atomic `Ordering::` use carries an `ordering:`
+//!   rationale on the same or preceding line; `SeqCst` is deny-by-default
+//!   (all-relaxed modules centralize the rationale on one
+//!   `const RELAXED` site),
+//! * **R5** — every `catch_unwind` names the [`coordinator::faults`]
+//!   `FaultSite` that exercises it, so no panic boundary exists without a
+//!   chaos-test injection point,
+//! * **R6** — every [`coordinator::MetricsSnapshot`]`::FIELDS` entry is
+//!   referenced by all three exporters (`Display`, `to_json`,
+//!   `to_prometheus`).
+//!
+//! Suppressions are inline and audited: `// audit:allow(R#) <reason>`
+//! on (or immediately above) the offending line; an empty reason or an
+//! unknown rule id is itself a violation.  The unsafe surface is
+//! inventoried in DESIGN.md §"Static analysis & the unsafe inventory";
+//! `#![deny(unsafe_code)]` below holds it to the five modules listed
+//! there.
+
+// The audit pass (R2) plus clippy::undocumented_unsafe_blocks document
+// every unsafe site; this deny pins the *set of modules* allowed to have
+// any.  A new unsafe block elsewhere must flip its module's allow
+// deliberately and land in the DESIGN.md inventory.
+#![deny(unsafe_code)]
 
 // bench wired in after sim/runtime/coordinator land
 pub mod bench;

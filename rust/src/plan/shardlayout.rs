@@ -19,6 +19,8 @@ use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::util::sync::recover;
+
 use super::fingerprint::Fingerprint;
 
 /// Cache key: the parent matrix plus every policy input that shapes cuts.
@@ -84,7 +86,7 @@ impl ShardLayoutCache {
 
     /// Look up a layout, refreshing recency on hit.
     pub fn get(&self, key: &ShardLayoutKey) -> Option<Arc<Vec<usize>>> {
-        let mut guard = self.inner.lock().unwrap();
+        let mut guard = recover(&self.inner);
         let inner = &mut *guard;
         let tick = inner.tick + 1;
         inner.tick = tick;
@@ -100,16 +102,16 @@ impl ShardLayoutCache {
         };
         drop(guard);
         if found.is_some() {
-            self.hits.fetch_add(1, Ordering::Relaxed);
+            self.hits.fetch_add(1, Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
         } else {
-            self.misses.fetch_add(1, Ordering::Relaxed);
+            self.misses.fetch_add(1, Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
         }
         found
     }
 
     /// Insert or overwrite, evicting the least recently used when full.
     pub fn insert(&self, key: ShardLayoutKey, cuts: Arc<Vec<usize>>) {
-        let mut guard = self.inner.lock().unwrap();
+        let mut guard = recover(&self.inner);
         let inner = &mut *guard;
         let tick = inner.tick + 1;
         inner.tick = tick;
@@ -130,7 +132,7 @@ impl ShardLayoutCache {
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().map.len()
+        recover(&self.inner).map.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -139,7 +141,7 @@ impl ShardLayoutCache {
 
     pub fn stats(&self) -> ShardLayoutStats {
         ShardLayoutStats {
-            hits: self.hits.load(Ordering::Relaxed),
+            hits: self.hits.load(Ordering::Relaxed), // ordering: relaxed — snapshot read; torn cross-field views are acceptable
             misses: self.misses.load(Ordering::Relaxed),
             len: self.len(),
         }

@@ -85,13 +85,13 @@ impl OnlineTuner {
 
     /// The current learned threshold.
     pub fn threshold(&self) -> f64 {
-        f64::from_bits(self.threshold_bits.load(Ordering::Relaxed))
+        f64::from_bits(self.threshold_bits.load(Ordering::Relaxed)) // ordering: relaxed — threshold gauge read; any recent value is valid
     }
 
     /// Overwrite the threshold (persistence restore), clamped to range.
     pub fn set_threshold(&self, threshold: f64) {
         self.threshold_bits
-            .store(clamp_threshold(threshold).to_bits(), Ordering::Relaxed);
+            .store(clamp_threshold(threshold).to_bits(), Ordering::Relaxed); // ordering: relaxed — last-write-wins gauge
     }
 
     /// The paper's O(1) selection under the *current* threshold.
@@ -135,13 +135,13 @@ impl OnlineTuner {
     /// near-boundary requests; requests far from the boundary never probe.
     pub fn should_probe(&self, d: f64) -> bool {
         self.near_boundary(d)
-            && self.boundary_seen.fetch_add(1, Ordering::Relaxed) % self.probe_every == 0
+            && self.boundary_seen.fetch_add(1, Ordering::Relaxed) % self.probe_every == 0 // ordering: relaxed — standalone stats counter, no release/acquire pairing
     }
 
     /// Feed back one A/B measurement: both algorithms were timed on the
     /// same request.  Nudges the threshold when it picked the slower one.
     pub fn observe(&self, d: f64, t_rowsplit: f64, t_merge: f64) {
-        self.probes.fetch_add(1, Ordering::Relaxed);
+        self.probes.fetch_add(1, Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
         if !d.is_finite() || d <= 0.0 || !t_rowsplit.is_finite() || !t_merge.is_finite() {
             return;
         }
@@ -151,7 +151,7 @@ impl OnlineTuner {
             Algorithm::RowSplit
         };
         // CAS loop: concurrent probes each apply their own nudge.
-        let mut cur = self.threshold_bits.load(Ordering::Relaxed);
+        let mut cur = self.threshold_bits.load(Ordering::Relaxed); // ordering: relaxed — CAS loop seed read; staleness just retries
         loop {
             let t = f64::from_bits(cur);
             let picked = if d < t {
@@ -173,20 +173,20 @@ impl OnlineTuner {
             match self.threshold_bits.compare_exchange_weak(
                 cur,
                 next.to_bits(),
-                Ordering::Relaxed,
+                Ordering::Relaxed, // ordering: relaxed — CAS on a standalone gauge; no other data published
                 Ordering::Relaxed,
             ) {
                 Ok(_) => break,
                 Err(actual) => cur = actual,
             }
         }
-        self.adjustments.fetch_add(1, Ordering::Relaxed);
+        self.adjustments.fetch_add(1, Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
     }
 
     pub fn stats(&self) -> TunerStats {
         TunerStats {
             threshold: self.threshold(),
-            probes: self.probes.load(Ordering::Relaxed),
+            probes: self.probes.load(Ordering::Relaxed), // ordering: relaxed — snapshot read; torn cross-field views are acceptable
             adjustments: self.adjustments.load(Ordering::Relaxed),
         }
     }

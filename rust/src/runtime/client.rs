@@ -6,6 +6,10 @@
 //! Outputs are 1-tuples (lowered with `return_tuple=True`), unwrapped with
 //! `to_tuple1`.
 
+// unsafe surface: &[i32]/&[f32] → byte reinterpretation for PJRT literal
+// construction; every site carries a SAFETY contract.
+#![allow(unsafe_code)]
+
 use std::collections::HashMap;
 use std::path::Path;
 
@@ -92,8 +96,10 @@ impl Runtime {
     /// Build an i32 literal of the given shape (single copy — §Perf: the
     /// vec1+reshape path copies twice, measurable at serve rates).
     pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+        // SAFETY: reinterpreting an initialized `&[i32]` as bytes — same
+        // allocation, same length in bytes (`size_of_val`), alignment 1.
         let bytes = unsafe {
-            std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+            std::slice::from_raw_parts(data.as_ptr().cast::<u8>(), std::mem::size_of_val(data))
         };
         Ok(xla::Literal::create_from_shape_and_untyped_data(
             xla::ElementType::S32,
@@ -104,8 +110,10 @@ impl Runtime {
 
     /// Build an f32 literal of the given shape (single copy).
     pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+        // SAFETY: reinterpreting an initialized `&[f32]` as bytes — same
+        // allocation, same length in bytes (`size_of_val`), alignment 1.
         let bytes = unsafe {
-            std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+            std::slice::from_raw_parts(data.as_ptr().cast::<u8>(), std::mem::size_of_val(data))
         };
         Ok(xla::Literal::create_from_shape_and_untyped_data(
             xla::ElementType::F32,

@@ -52,6 +52,7 @@ use crate::exec::{BufferPool, ExecCtx, OutputBuf, OutputRange};
 use crate::formats::Csr;
 use crate::plan::{Fingerprint, PlanOutcome, Planner};
 use crate::spmm::{self, Algorithm};
+use crate::util::sync::recover;
 
 use super::{cut, ShardPolicy};
 
@@ -290,6 +291,8 @@ impl ShardedEngine {
     /// the parent is already dead; otherwise every shard re-checks before
     /// its kernel and the gather replies with a shed error instead of a
     /// result when any shard found the parent dead.
+    // the list mirrors submit_traced + the three admission carriers; a
+    // params struct would be built and destructured at one call site each
     #[allow(clippy::too_many_arguments)]
     pub fn submit_admitted(
         &self,
@@ -302,7 +305,7 @@ impl ShardedEngine {
         cancel: CancelToken,
     ) {
         if let Err(e) = self.scatter(a, b, n, reply.clone(), trace, deadline, cancel) {
-            self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+            self.metrics.errors.fetch_add(1, Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
             let _ = reply.send(Err(e));
         }
     }
@@ -322,6 +325,8 @@ impl ShardedEngine {
             .map_err(|e| anyhow!("sharded engine shut down: {e}"))?
     }
 
+    // scatter threads the whole per-request state into the fan-out; one
+    // caller, so a params struct would only add a build/destructure pair
     #[allow(clippy::too_many_arguments)]
     fn scatter(
         &self,
@@ -335,7 +340,7 @@ impl ShardedEngine {
     ) -> Result<()> {
         // count the request before validation so `requests ≥ completed +
         // errors` holds on the sharded path exactly as on the unsharded one
-        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
         if b.len() != a.k * n {
             return Err(anyhow!("B must be k×n row-major ({}×{n})", a.k));
         }
@@ -344,7 +349,7 @@ impl ShardedEngine {
         // sharded path never goes through `workers::shed_request`, which
         // counts both).
         if let Some(reason) = parent_shed(deadline, &cancel, Instant::now()) {
-            self.metrics.shed_counter(reason).fetch_add(1, Ordering::Relaxed);
+            self.metrics.shed_counter(reason).fetch_add(1, Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
             trace.mark_shed(ShedPoint::Shard, reason);
             let _ = reply.send(Err(shed_error(reason, trace.id())));
             return Ok(());
@@ -373,11 +378,11 @@ impl ShardedEngine {
             } else {
                 &self.metrics.plan_misses
             };
-            counter.fetch_add(1, Ordering::Relaxed);
+            counter.fetch_add(1, Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
             planned.push((shard, outcome));
         }
         trace.span(Stage::Plan, plan_start, Instant::now());
-        self.metrics.sharded.fetch_add(1, Ordering::Relaxed);
+        self.metrics.sharded.fetch_add(1, Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
         self.metrics.shards_executed.fetch_add(shards as u64, Ordering::Relaxed);
         self.metrics.sync_shard_gauges(shards, cut::imbalance(a, &cuts));
         // audit trail: the parent request was cut across workers — keyed by
@@ -448,14 +453,14 @@ pub(crate) fn execute_shard(planner: &Planner, ctx: &mut ExecCtx, task: ShardTas
     // waited in the lane: skip the kernel but still count down — the
     // gather must always complete or the reply channel wedges.
     if let Some(reason) = parent_shed(gather.deadline, &gather.cancel, Instant::now()) {
-        let mut shed = gather.shed.lock().unwrap();
+        let mut shed = recover(&gather.shed);
         if shed.is_none() {
             *shed = Some(reason);
         }
         drop(shed);
         drop(out); // lease window back; the backing buffer lives in the gather
-        gather.workers.lock().unwrap().push(worker);
-        if gather.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+        recover(&gather.workers).push(worker);
+        if gather.remaining.fetch_sub(1, Ordering::AcqRel) == 1 { // ordering: AcqRel — last decrement must observe every sibling shard's writes
             finish(&gather);
         }
         return;
@@ -484,14 +489,14 @@ pub(crate) fn execute_shard(planner: &Planner, ctx: &mut ExecCtx, task: ShardTas
     match result {
         Ok(algorithm) => {
             if algorithm == Algorithm::RowSplit {
-                gather.rowsplit_shards.fetch_add(1, Ordering::Relaxed);
+                gather.rowsplit_shards.fetch_add(1, Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
             }
             if outcome.cache_hit {
-                gather.cache_hits.fetch_add(1, Ordering::Relaxed);
+                gather.cache_hits.fetch_add(1, Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
             }
         }
         Err(payload) => {
-            let mut err = gather.error.lock().unwrap();
+            let mut err = recover(&gather.error);
             if err.is_none() {
                 *err = Some(format!(
                     "shard at row {row_start} ({} rows) panicked during execution: {}",
@@ -501,8 +506,8 @@ pub(crate) fn execute_shard(planner: &Planner, ctx: &mut ExecCtx, task: ShardTas
             }
         }
     }
-    gather.workers.lock().unwrap().push(worker);
-    if gather.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+    recover(&gather.workers).push(worker);
+    if gather.remaining.fetch_sub(1, Ordering::AcqRel) == 1 { // ordering: AcqRel — last decrement must observe every sibling shard's writes
         finish(&gather);
     }
 }
@@ -513,10 +518,10 @@ fn finish(gather: &GatherState) {
     // the exec span therefore includes any shard-lane wait, which is
     // exactly the number a capacity investigation needs
     let exec_end = Instant::now();
-    let out = gather.out.lock().unwrap().take().expect("gather buffer present");
-    let reply = gather.reply.lock().unwrap().take().expect("reply slot present");
-    let error = gather.error.lock().unwrap().take();
-    let mut shard_workers = std::mem::take(&mut *gather.workers.lock().unwrap());
+    let out = recover(&gather.out).take().expect("gather buffer present");
+    let reply = recover(&gather.reply).take().expect("reply slot present");
+    let error = recover(&gather.error).take();
+    let mut shard_workers = std::mem::take(&mut *recover(&gather.workers));
     shard_workers.sort_unstable();
     shard_workers.dedup();
     let mut trace = gather.trace;
@@ -525,11 +530,11 @@ fn finish(gather: &GatherState) {
     // A shed parent outranks a shard error: the client walked away (or the
     // budget did) before the result could matter, so the terminal outcome
     // is "shed", counted in the reason counter — not `errors`.
-    if let Some(reason) = gather.shed.lock().unwrap().take() {
+    if let Some(reason) = recover(&gather.shed).take() {
         trace.mark_shed(ShedPoint::Shard, reason);
         let stages = trace.finish(TracePath::Sharded, Instant::now());
         metrics.record_trace(&stages);
-        metrics.shed_counter(reason).fetch_add(1, Ordering::Relaxed);
+        metrics.shed_counter(reason).fetch_add(1, Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
         drop(out); // lease returns to the pool
         let _ = reply.send(Err(shed_error(reason, trace.id())));
         return;
@@ -538,15 +543,15 @@ fn finish(gather: &GatherState) {
         Some(e) => {
             let stages = trace.finish(TracePath::Sharded, Instant::now());
             metrics.record_trace(&stages);
-            metrics.errors.fetch_add(1, Ordering::Relaxed);
+            metrics.errors.fetch_add(1, Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
             drop(out); // lease returns to the pool
             let _ = reply.send(Err(anyhow!(e)));
         }
         None => {
-            metrics.completed.fetch_add(1, Ordering::Relaxed);
+            metrics.completed.fetch_add(1, Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
             metrics.cpu_fallback.fetch_add(1, Ordering::Relaxed);
             // report the algorithm that carried the majority of shards
-            let rowsplit = gather.rowsplit_shards.load(Ordering::Relaxed);
+            let rowsplit = gather.rowsplit_shards.load(Ordering::Relaxed); // ordering: relaxed — snapshot read; torn cross-field views are acceptable
             let algorithm = if 2 * rowsplit >= gather.shards {
                 Algorithm::RowSplit
             } else {
@@ -556,13 +561,13 @@ fn finish(gather: &GatherState) {
                 Algorithm::RowSplit => &metrics.rowsplit,
                 Algorithm::MergeBased => &metrics.merge,
             }
-            .fetch_add(1, Ordering::Relaxed);
-            let cache_hit = gather.cache_hits.load(Ordering::Relaxed) == gather.shards;
+            .fetch_add(1, Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
+            let cache_hit = gather.cache_hits.load(Ordering::Relaxed) == gather.shards; // ordering: relaxed — read after the AcqRel countdown made all writes visible
             // gather span: reply assembly after the last shard landed
             let end = Instant::now();
             // completed, but past budget: served late rather than shed
             if gather.deadline.expired(end) {
-                metrics.deadline_missed.fetch_add(1, Ordering::Relaxed);
+                metrics.deadline_missed.fetch_add(1, Ordering::Relaxed); // ordering: relaxed — standalone stats counter, no release/acquire pairing
             }
             trace.span(Stage::Gather, exec_end, end);
             let stages = trace.finish(TracePath::Sharded, end);

@@ -23,6 +23,10 @@
 //! partition, pooled threads, reused carry arenas, caller-provided
 //! output); [`merge_spmm`] is the classic allocating wrapper over it.
 
+// unsafe surface: per-segment disjoint output windows and carry slots
+// handed to pool workers; every site carries a SAFETY contract.
+#![allow(unsafe_code)]
+
 use crate::exec::{CarrySlot, ExecCtx, SendPtr, NO_CARRY};
 use crate::formats::Csr;
 use crate::loadbalance::{MergePath, NonzeroSplit, Partitioner, Segment};
@@ -70,6 +74,7 @@ pub fn merge_spmm_with(a: &Csr, b: &[f32], n: usize, p: usize, kind: MergeKind) 
 /// `c.len() == a.m * n`.  `c` is fully overwritten (zeroed, then
 /// accumulated).  Steady state performs no heap allocation and no thread
 /// creation: carry-out partials live in `ctx`'s reusable slots.
+// audit: hot — steady-state kernel; R3 bans allocation/clock tokens here
 pub fn merge_spmm_into(
     a: &Csr,
     b: &[f32],
@@ -106,7 +111,7 @@ pub fn merge_spmm_into(
         let seg = segs[s];
         let own_start = seg.row_start + 1;
         let own_end = seg.row_end.max(own_start);
-        // Safety: own ranges are disjoint across tasks (see above) and
+        // SAFETY: own ranges are disjoint across tasks (see above) and
         // in-bounds; carry slot `s` is touched by task `s` only.
         // (own_start can be m+1 only for a degenerate tail segment whose
         // own range is empty — clamp the pointer offset, length is 0)
@@ -116,6 +121,8 @@ pub fn merge_spmm_into(
                 (own_end - own_start) * n,
             )
         };
+        // SAFETY: carry slot `s` is in-bounds (`carries.len() == segs.len()`)
+        // and written by task `s` alone, so no two tasks alias it.
         let slot = unsafe { &mut *carry_base.0.add(s) };
         worker(a, b, n, seg, own_start, chunk, slot);
     });

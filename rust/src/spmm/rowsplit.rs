@@ -17,6 +17,10 @@
 //!   ad-hoc callers), now a thin shell over `_into` on the process-wide
 //!   pool: no per-call thread spawn anywhere.
 
+// unsafe surface: per-segment disjoint output windows handed to pool
+// workers; every site carries a SAFETY contract.
+#![allow(unsafe_code)]
+
 use crate::exec::{ExecCtx, SendPtr};
 use crate::formats::Csr;
 use crate::loadbalance::{Partitioner, RowSplit, Segment};
@@ -75,6 +79,7 @@ pub fn rowsplit_spmm_granular(
 /// `0..a.m` whose nonzero bounds equal the `row_ptr` spans.  `b.len() ==
 /// a.k * n` and `c.len() == a.m * n`.  Every element of `c` is
 /// overwritten; no heap allocation and no thread creation occur.
+// audit: hot — steady-state kernel; R3 bans allocation/clock tokens here
 pub fn rowsplit_spmm_into(
     a: &Csr,
     b: &[f32],
@@ -87,6 +92,7 @@ pub fn rowsplit_spmm_into(
 }
 
 /// [`rowsplit_spmm_into`] with an explicit granularity.
+// audit: hot — steady-state kernel; R3 bans allocation/clock tokens here
 pub fn rowsplit_spmm_into_granular(
     a: &Csr,
     b: &[f32],
@@ -120,7 +126,7 @@ pub fn rowsplit_spmm_into_granular(
     let base = SendPtr(c.as_mut_ptr());
     ctx.pool().broadcast(segs.len(), &|s| {
         let seg = segs[s];
-        // Safety: row ranges are disjoint across segments and in-bounds
+        // SAFETY: row ranges are disjoint across segments and in-bounds
         // (validated above), so this window aliases no other task's.
         let chunk = unsafe {
             std::slice::from_raw_parts_mut(
@@ -203,9 +209,9 @@ pub fn rowsplit_spmv(a: &Csr, x: &[f32], p: usize) -> Vec<f32> {
     let base = SendPtr(y.as_mut_ptr());
     crate::exec::global_pool().broadcast(segs.len(), &|s| {
         let seg = segs[s];
-        // Safety: disjoint row ranges (see rowsplit_spmm_into_granular).
-        let chunk =
-            unsafe { std::slice::from_raw_parts_mut(base.0.add(seg.row_start), seg.rows()) };
+        let ptr = base.0.wrapping_add(seg.row_start);
+        // SAFETY: disjoint row ranges (see rowsplit_spmm_into_granular).
+        let chunk = unsafe { std::slice::from_raw_parts_mut(ptr, seg.rows()) };
         for i in seg.row_start..seg.row_end {
             let (cols, vals) = a.row(i);
             chunk[i - seg.row_start] = cols

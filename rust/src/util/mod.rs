@@ -1,8 +1,10 @@
-//! Small shared utilities: deterministic RNG, statistics, timing.
+//! Small shared utilities: deterministic RNG, statistics, timing, and the
+//! poison-recovering lock guards the audit pass (R1) enforces.
 
 pub mod json;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod timer;
 
 pub use rng::XorShift;

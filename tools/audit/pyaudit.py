@@ -1,0 +1,435 @@
+#!/usr/bin/env python3
+"""Line-for-line Python mirror of pallas-audit (tools/audit/src/lib.rs).
+
+The container this repo grows in has no Rust toolchain, so the audit pass
+is verified by running this mirror over rust/ (the repo convention used by
+the BENCH_* placeholders).  Keep the two implementations in lock-step:
+every rule change lands in lib.rs AND here, and the fixture expectations
+in tools/audit/tests/rules.rs pin both.
+
+usage: python3 tools/audit/pyaudit.py [PATH ...]   (default: rust/)
+"""
+
+import os
+import sys
+
+RULES = ["R1", "R2", "R3", "R4", "R5", "R6"]
+HOT_BANNED = [
+    "Instant::now",
+    "Vec::new",
+    "with_capacity",
+    ".to_vec",
+    ".collect",
+    "Box::new",
+    "format!",
+]
+ATOMIC_ORDERINGS = [
+    "Ordering::Relaxed",
+    "Ordering::Acquire",
+    "Ordering::Release",
+    "Ordering::AcqRel",
+    "Ordering::SeqCst",
+]
+R5_BEFORE, R5_AFTER = 3, 40
+SKIP_DIRS = {"target", "vendor", ".git", "fixtures"}
+
+
+class Lex:
+    def __init__(self):
+        self.block_depth = 0
+        self.in_str = False
+        self.raw_hashes = None
+
+
+def split_line(st, line):
+    b = list(line)
+    n = len(b)
+    code, comment = [], []
+    i = 0
+    while i < n:
+        if st.block_depth > 0:
+            if b[i] == "*" and i + 1 < n and b[i + 1] == "/":
+                st.block_depth -= 1
+                i += 2
+            elif b[i] == "/" and i + 1 < n and b[i + 1] == "*":
+                st.block_depth += 1
+                i += 2
+            else:
+                comment.append(b[i])
+                i += 1
+            continue
+        if st.raw_hashes is not None:
+            h = st.raw_hashes
+            if b[i] == '"' and all(j < n and b[j] == "#" for j in range(i + 1, i + 1 + h)):
+                st.raw_hashes = None
+                code.append('"')
+                i += 1 + h
+            else:
+                code.append(" ")
+                i += 1
+            continue
+        if st.in_str:
+            if b[i] == "\\":
+                code.append("  ")
+                i += 2
+            elif b[i] == '"':
+                st.in_str = False
+                code.append('"')
+                i += 1
+            else:
+                code.append(" ")
+                i += 1
+            continue
+        c = b[i]
+        if c == "/" and i + 1 < n and b[i + 1] == "/":
+            comment.extend(b[i + 2:])
+            i = n
+        elif c == "/" and i + 1 < n and b[i + 1] == "*":
+            st.block_depth = 1
+            i += 2
+        elif c == '"':
+            st.in_str = True
+            code.append('"')
+            i += 1
+        elif c == "r" and i + 1 < n and b[i + 1] in ('"', "#"):
+            h, j = 0, i + 1
+            while j < n and b[j] == "#":
+                h += 1
+                j += 1
+            if j < n and b[j] == '"':
+                st.raw_hashes = h
+                code.append('"')
+                i = j + 1
+            else:
+                code.append("r")
+                i += 1
+        elif c == "'":
+            if i + 1 < n and b[i + 1] == "\\":
+                j = i + 2
+                while j < n and b[j] != "'":
+                    j += 1
+                code.append("' '")
+                i = j + 1
+            elif i + 2 < n and b[i + 2] == "'":
+                code.append("' '")
+                i += 3
+            else:
+                code.append("'")
+                i += 1
+        else:
+            code.append(c)
+            i += 1
+    return "".join(code), "".join(comment)
+
+
+def depth_before(codes):
+    out, depth = [], 0
+    for c in codes:
+        out.append(depth)
+        depth += c.count("{") - c.count("}")
+    return out
+
+
+def mark_region(mark, depths, start):
+    base = depths[start]
+    mark[start] = True
+    j = start + 1
+    while j < len(mark) and depths[j] > base:
+        mark[j] = True
+        j += 1
+    return j
+
+
+def test_regions(codes, depths, whole_file):
+    n = len(codes)
+    t = [whole_file] * n
+    if whole_file:
+        return t
+    i = 0
+    while i < n:
+        if "#[cfg(test)]" in codes[i]:
+            t[i] = True
+            j = i + 1
+            while j < n:
+                t[j] = True
+                if "{" in codes[j]:
+                    i = mark_region(t, depths, j)
+                    break
+                if codes[j].rstrip().endswith(";"):
+                    i = j + 1
+                    break
+                j += 1
+            if j >= n:
+                break
+        else:
+            i += 1
+    return t
+
+
+def hot_regions(comments, codes, depths):
+    n = len(codes)
+    h = [False] * n
+    i = 0
+    while i < n:
+        if "audit: hot" in comments[i] or "audit:hot" in comments[i]:
+            j = i + 1
+            while j < n and "{" not in codes[j]:
+                j += 1
+            if j < n:
+                i = mark_region(h, depths, j)
+                continue
+        i += 1
+    return h
+
+
+def parse_allow(comment):
+    # the marker must open the comment: prose that merely mentions the
+    # syntax mid-sentence (docs) is not a suppression
+    trimmed = comment.lstrip()
+    if not trimmed.startswith("audit:allow("):
+        return None
+    rest = trimmed[len("audit:allow("):]
+    close = rest.find(")")
+    if close < 0:
+        return None
+    return rest[:close].strip(), bool(rest[close + 1:].strip())
+
+
+def unsafe_keyword_rests(code):
+    # `unsafe` keyword occurrences only — `unsafe_code` (a lint name) and
+    # other identifiers containing the substring are not keywords
+    def ident(c):
+        return c.isalnum() or c == "_"
+    at = code.find("unsafe")
+    while at >= 0:
+        rest = code[at + len("unsafe"):]
+        if (at == 0 or not ident(code[at - 1])) and (not rest or not ident(rest[0])):
+            yield rest
+        at = code.find("unsafe", at + 1)
+
+
+def has_safety_comment(codes, comments, i):
+    if "SAFETY:" in comments[i]:
+        return True
+    j = i
+    while j > 0:
+        j -= 1
+        code = codes[j].strip()
+        if not code:
+            if "SAFETY:" in comments[j]:
+                return True
+            if not comments[j].strip():
+                return False
+        elif code.startswith("#[") or code.startswith("#!["):
+            continue
+        else:
+            return False
+    return False
+
+
+def has_ordering_tag(comment):
+    lower = comment.lower()
+    start = 0
+    while True:
+        at = lower.find("ordering:", start)
+        if at < 0:
+            return False
+        end = at + len("ordering:")
+        if lower[end:end + 1] != ":":
+            return True
+        start = end
+
+
+def scan_file(path, src, is_test_file, fault_sites):
+    st = Lex()
+    raws = src.splitlines()
+    pairs = [split_line(st, r) for r in raws]
+    codes = [p[0] for p in pairs]
+    comments = [p[1] for p in pairs]
+    n = len(raws)
+    depths = depth_before(codes)
+    test = test_regions(codes, depths, is_test_file)
+    hot = hot_regions(comments, codes, depths)
+    allows = [parse_allow(c) for c in comments]
+    out = []
+
+    for i, a in enumerate(allows):
+        if a is not None:
+            rule, ok = a
+            if rule not in RULES:
+                out.append((path, i + 1, "R0", f"audit:allow names unknown rule `{rule}`"))
+            elif not ok:
+                out.append((path, i + 1, "R0",
+                            "audit:allow requires a non-empty reason after the rule id"))
+
+    def allowed(i, rule):
+        a = allows[i]
+        if a is not None and a[0] == rule and a[1]:
+            return True
+        if i > 0 and not codes[i - 1].strip():
+            a = allows[i - 1]
+            if a is not None and a[0] == rule and a[1]:
+                return True
+        return False
+
+    def push(i, rule, msg):
+        if not allowed(i, rule):
+            out.append((path, i + 1, rule, msg))
+
+    for i in range(n):
+        code = codes[i]
+
+        if not test[i] and (".lock().unwrap()" in code or ".lock().expect(" in code):
+            push(i, "R1", "poisonable lock acquisition; use util::sync::recover / recover_wait")
+
+        needs = any(
+            not rest.lstrip().startswith("fn") for rest in unsafe_keyword_rests(code)
+        )
+        if needs and not has_safety_comment(codes, comments, i):
+            push(i, "R2", "unsafe block without an immediately preceding // SAFETY: comment")
+
+        if hot[i] and not test[i]:
+            for tok in HOT_BANNED:
+                if tok in code:
+                    push(i, "R3", f"`{tok}` inside an `audit: hot` function body")
+
+        if not test[i] and any(o in code for o in ATOMIC_ORDERINGS):
+            if "Ordering::SeqCst" in code:
+                push(i, "R4", "Ordering::SeqCst is deny-by-default; justify with audit:allow(R4)")
+            else:
+                here = has_ordering_tag(comments[i])
+                above = i > 0 and has_ordering_tag(comments[i - 1])
+                if not here and not above:
+                    push(i, "R4", "atomic Ordering:: without an `ordering:` rationale "
+                                  "on this or the preceding line")
+
+        if not test[i] and "catch_unwind" in code:
+            lo = max(0, i - R5_BEFORE)
+            hi = min(n - 1, i + R5_AFTER)
+            named = any(
+                f"FaultSite::{v}" in raws[j] for j in range(lo, hi + 1) for v in fault_sites
+            )
+            if not named:
+                push(i, "R5", "catch_unwind without a FaultSite:: injection point named "
+                              "in its window")
+
+    scan_exporters(path, raws, codes, depths, out, allowed)
+    return out
+
+
+def scan_exporters(path, raws, codes, depths, out, allowed):
+    n = len(codes)
+    fields_at = next((i for i in range(n) if "const FIELDS" in codes[i]), None)
+    if fields_at is None:
+        return
+    fields = []
+    for j in range(fields_at, n):
+        raw = raws[j].strip()
+        if not raw.startswith("//"):
+            rest = raws[j]
+            while True:
+                a = rest.find('"')
+                if a < 0:
+                    break
+                b = rest.find('"', a + 1)
+                if b < 0:
+                    break
+                name = rest[a + 1:b]
+                if name and all(c.isalnum() or c == "_" for c in name):
+                    fields.append(name)
+                rest = rest[b + 1:]
+        if "];" in codes[j]:
+            break
+    if not fields:
+        return
+    exporters = [
+        ("to_json", "fn to_json"),
+        ("to_prometheus", "fn to_prometheus"),
+        ("Display", "Display for MetricsSnapshot"),
+    ]
+    for name, anchor in exporters:
+        at = next((i for i in range(n) if anchor in codes[i]), None)
+        if at is None:
+            if not allowed(fields_at, "R6"):
+                out.append((path, fields_at + 1, "R6",
+                            f"exporter `{name}` not found for MetricsSnapshot::FIELDS"))
+            continue
+        base = depths[at]
+        body = []
+        j = at
+        while True:
+            body.append(codes[j])
+            j += 1
+            if j >= n or (j > at and depths[j] <= base):
+                break
+        body = "\n".join(body)
+        for f in fields:
+            if f"self.{f}" not in body and not allowed(at, "R6"):
+                out.append((path, at + 1, "R6",
+                            f"FIELDS entry `{f}` is not referenced by exporter `{name}`"))
+
+
+def parse_fault_sites(src):
+    at = src.find("enum FaultSite")
+    if at < 0:
+        return None
+    op = src.find("{", at)
+    cl = src.find("}", op)
+    if op < 0 or cl < 0:
+        return None
+    vars_ = []
+    for chunk in src[op + 1:cl].split(","):
+        v = "".join(l.split("//")[0] for l in chunk.splitlines()).strip()
+        if v and v.isalnum():
+            vars_.append(v)
+    return vars_ or None
+
+
+def is_test_path(p):
+    parts = p.replace("\\", "/").split("/")
+    return "tests" in parts or "benches" in parts
+
+
+def collect_files(root, files):
+    if os.path.isfile(root):
+        if root.endswith(".rs"):
+            files.append(root)
+        return
+    for entry in sorted(os.listdir(root)):
+        p = os.path.join(root, entry)
+        if os.path.isdir(p):
+            if entry not in SKIP_DIRS:
+                collect_files(p, files)
+        elif p.endswith(".rs"):
+            files.append(p)
+
+
+def main(argv):
+    roots = argv or ["rust"]
+    files = []
+    for r in roots:
+        if not os.path.exists(r):
+            print(f"pallas-audit: path does not exist: {r}", file=sys.stderr)
+            return 1
+        collect_files(r, files)
+    fault_sites = ["Exec", "Fused", "Shard", "Pack"]
+    for f in files:
+        if f.replace("\\", "/").endswith("coordinator/faults.rs"):
+            sites = parse_fault_sites(open(f).read())
+            if sites:
+                fault_sites = sites
+    out = []
+    for f in files:
+        out.extend(scan_file(f, open(f).read(), is_test_path(f), fault_sites))
+    out.sort(key=lambda v: (v[0], v[1]))
+    if not out:
+        print(f"pallas-audit: clean ({len(files)} files)")
+        return 0
+    for p, line, rule, msg in out:
+        print(f"{p}:{line} {rule} {msg}")
+    print(f"pallas-audit: {len(out)} violation(s) across {len(files)} files")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

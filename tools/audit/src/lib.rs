@@ -1,0 +1,724 @@
+//! `pallas-audit` — the repo's own static-analysis pass.
+//!
+//! The serve core leans on invariants no compiler checks: disjoint-row
+//! writes through raw `SendPtr` windows, poison-recovering lock
+//! discipline, zero-allocation `_into` hot paths, and relaxed-atomic
+//! telemetry with argued orderings.  Each of those has regressed (or
+//! nearly regressed) in review at least once, so this crate encodes them
+//! as scanner rules and CI runs it before the test suite:
+//!
+//! | rule | invariant |
+//! |------|-----------|
+//! | R1   | no `.lock().unwrap()` / `.lock().expect(` outside the poison-recovering guard helpers (`util::sync`) |
+//! | R2   | every `unsafe` block / `unsafe impl` is immediately preceded by a `// SAFETY:` comment |
+//! | R3   | no `Instant::now()` / `Vec::new` / `with_capacity` / `to_vec` / `collect` / `Box::new` / `format!` inside functions stamped `// audit: hot` |
+//! | R4   | every atomic `Ordering::` use site carries an `ordering:` rationale comment (same or preceding line); `SeqCst` is deny-by-default |
+//! | R5   | every production `catch_unwind` names a matching `FaultSite::` injection point within a ±few-line window |
+//! | R6   | every `MetricsSnapshot::FIELDS` entry appears in all three exporters (`to_json`, `to_prometheus`, `Display`) |
+//!
+//! Suppression is inline and per-site: `// audit:allow(R4) <reason>` on
+//! the flagged line, or alone on the line directly above it.  The reason
+//! is mandatory — a bare allow is itself a violation.
+//!
+//! The scanner is a hand-rolled line/token pass, not a parser: the
+//! offline vendor convention rules out `syn`/dylint, and these rules are
+//! all line-local (plus two brace-matched region kinds: `#[cfg(test)]`
+//! items, where R1/R3/R4/R5 relax, and `// audit: hot` function bodies,
+//! where R3 arms).  Files under `tests/` or `benches/` directories are
+//! wholly test code.  R2 applies everywhere — test unsafe needs a safety
+//! argument too.
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Rule ids with one-line descriptions (the `--rules` listing).
+pub const RULES: &[(&str, &str)] = &[
+    ("R1", "lock discipline: use the poison-recovering guards, not .lock().unwrap()"),
+    ("R2", "every unsafe block/impl needs an immediately preceding // SAFETY: comment"),
+    ("R3", "no allocation/clock tokens inside functions stamped `// audit: hot`"),
+    ("R4", "atomic Ordering:: sites need an `ordering:` rationale; SeqCst is deny-by-default"),
+    ("R5", "catch_unwind sites must name a FaultSite:: injection point nearby"),
+    ("R6", "every MetricsSnapshot::FIELDS entry must appear in all three exporters"),
+];
+
+/// Tokens banned inside `// audit: hot` function bodies (R3).
+pub const HOT_BANNED: &[&str] = &[
+    "Instant::now",
+    "Vec::new",
+    "with_capacity",
+    ".to_vec",
+    ".collect",
+    "Box::new",
+    "format!",
+];
+
+/// Atomic memory orderings (R4 matches these, not `cmp::Ordering`).
+const ATOMIC_ORDERINGS: &[&str] = &[
+    "Ordering::Relaxed",
+    "Ordering::Acquire",
+    "Ordering::Release",
+    "Ordering::AcqRel",
+    "Ordering::SeqCst",
+];
+
+/// How many lines around a `catch_unwind` may carry its `FaultSite::`
+/// marker (R5): a few lines above for a comment, the closure body below.
+const R5_BEFORE: usize = 3;
+const R5_AFTER: usize = 40;
+
+/// One diagnostic, formatted `file:line R# message`.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub file: PathBuf,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{} {} {}", self.file.display(), self.line, self.rule, self.msg)
+    }
+}
+
+/// Scanner configuration shared across files.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// `FaultSite` variants the chaos plan can inject (parsed from
+    /// `coordinator/faults.rs` when the walk finds it).
+    pub fault_sites: Vec<String>,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            fault_sites: ["Exec", "Fused", "Shard", "Pack"].iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lexing: split each line into (code, comment), carrying string/comment
+// state across lines.  String contents are blanked in `code` so tokens
+// inside literals never match a rule.
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct LexState {
+    /// `/* */` nesting depth (Rust block comments nest)
+    block_depth: usize,
+    /// inside a normal `"…"` string (may span lines)
+    in_str: bool,
+    /// inside a raw string, with its `#` count
+    raw_hashes: Option<usize>,
+}
+
+struct Line {
+    /// code text with string contents blanked to spaces
+    code: String,
+    /// comment text (line + block comments on this line)
+    comment: String,
+    /// the raw source line
+    raw: String,
+}
+
+fn split_line(st: &mut LexState, line: &str) -> (String, String) {
+    let b: Vec<char> = line.chars().collect();
+    let n = b.len();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut i = 0usize;
+    while i < n {
+        if st.block_depth > 0 {
+            if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                st.block_depth -= 1;
+                i += 2;
+            } else if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                st.block_depth += 1;
+                i += 2;
+            } else {
+                comment.push(b[i]);
+                i += 1;
+            }
+            continue;
+        }
+        if let Some(h) = st.raw_hashes {
+            if b[i] == '"' && (i + 1..=i + h).all(|j| j < n && b[j] == '#') {
+                st.raw_hashes = None;
+                code.push('"');
+                i += 1 + h;
+            } else {
+                code.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        if st.in_str {
+            if b[i] == '\\' {
+                code.push(' ');
+                if i + 1 < n {
+                    code.push(' ');
+                }
+                i += 2;
+            } else if b[i] == '"' {
+                st.in_str = false;
+                code.push('"');
+                i += 1;
+            } else {
+                code.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        match b[i] {
+            '/' if i + 1 < n && b[i + 1] == '/' => {
+                comment.extend(&b[i + 2..]);
+                i = n;
+            }
+            '/' if i + 1 < n && b[i + 1] == '*' => {
+                st.block_depth = 1;
+                i += 2;
+            }
+            '"' => {
+                st.in_str = true;
+                code.push('"');
+                i += 1;
+            }
+            'r' if i + 1 < n && (b[i + 1] == '"' || b[i + 1] == '#') => {
+                // raw string r"…" / r#"…"# — but not raw idents (r#ident)
+                let mut h = 0usize;
+                let mut j = i + 1;
+                while j < n && b[j] == '#' {
+                    h += 1;
+                    j += 1;
+                }
+                if j < n && b[j] == '"' {
+                    st.raw_hashes = Some(h);
+                    code.push('"');
+                    i = j + 1;
+                } else {
+                    code.push('r');
+                    i += 1;
+                }
+            }
+            '\'' => {
+                // char literal vs lifetime: 'x' has a closing quote two
+                // chars on; '\…' is always a char escape
+                if i + 1 < n && b[i + 1] == '\\' {
+                    let mut j = i + 2;
+                    while j < n && b[j] != '\'' {
+                        j += 1;
+                    }
+                    code.push_str("' '");
+                    i = j + 1;
+                } else if i + 2 < n && b[i + 2] == '\'' {
+                    code.push_str("' '");
+                    i += 3;
+                } else {
+                    code.push('\'');
+                    i += 1;
+                }
+            }
+            c => {
+                code.push(c);
+                i += 1;
+            }
+        }
+    }
+    (code, comment)
+}
+
+// ---------------------------------------------------------------------------
+// Region detection
+// ---------------------------------------------------------------------------
+
+/// Brace depth at the start of each line (from blanked code text).
+fn depth_before(lines: &[Line]) -> Vec<i32> {
+    let mut out = Vec::with_capacity(lines.len());
+    let mut depth = 0i32;
+    for l in lines {
+        out.push(depth);
+        for c in l.code.chars() {
+            match c {
+                '{' => depth += 1,
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+    }
+    out
+}
+
+/// Mark the brace-matched region of the item that starts at (or follows)
+/// line `i`: every line until depth returns to the item's base depth.
+/// Returns the first line index past the region.
+fn mark_region(mark: &mut [bool], depths: &[i32], start: usize) -> usize {
+    let base = depths[start];
+    mark[start] = true;
+    let mut j = start + 1;
+    while j < mark.len() && depths[j] > base {
+        mark[j] = true;
+        j += 1;
+    }
+    j
+}
+
+/// Lines inside `#[cfg(test)]` items (R1/R3/R4/R5 relax there).
+fn test_regions(lines: &[Line], depths: &[i32], whole_file: bool) -> Vec<bool> {
+    let n = lines.len();
+    let mut t = vec![whole_file; n];
+    if whole_file {
+        return t;
+    }
+    let mut i = 0usize;
+    while i < n {
+        if lines[i].code.contains("#[cfg(test)]") {
+            t[i] = true;
+            // skip further attributes / signature lines to the item's `{`
+            // (a brace-less item — a const, a use — ends at its `;`)
+            let mut j = i + 1;
+            while j < n {
+                t[j] = true;
+                if lines[j].code.contains('{') {
+                    i = mark_region(&mut t, depths, j);
+                    break;
+                }
+                if lines[j].code.trim_end().ends_with(';') {
+                    i = j + 1;
+                    break;
+                }
+                j += 1;
+            }
+            if j >= n {
+                break;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    t
+}
+
+/// Function bodies stamped `// audit: hot` (R3 arms inside them).
+fn hot_regions(lines: &[Line], depths: &[i32]) -> Vec<bool> {
+    let n = lines.len();
+    let mut h = vec![false; n];
+    let mut i = 0usize;
+    while i < n {
+        if lines[i].comment.contains("audit: hot") || lines[i].comment.contains("audit:hot") {
+            // find the stamped fn's opening brace (attributes and a
+            // multi-line signature may sit in between)
+            let mut j = i + 1;
+            while j < n && !lines[j].code.contains('{') {
+                j += 1;
+            }
+            if j < n {
+                i = mark_region(&mut h, depths, j);
+                continue;
+            }
+        }
+        i += 1;
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Inline allow-list
+// ---------------------------------------------------------------------------
+
+struct Allow {
+    rule: String,
+    reason_ok: bool,
+}
+
+/// Parse `audit:allow(<rule>) <reason>` out of a comment.  The marker
+/// must open the comment (after whitespace): prose that merely *mentions*
+/// the syntax mid-sentence (docs, this file) is not a suppression.
+fn parse_allow(comment: &str) -> Option<Allow> {
+    let trimmed = comment.trim_start();
+    let rest = trimmed.strip_prefix("audit:allow(")?;
+    let close = rest.find(')')?;
+    let rule = rest[..close].trim().to_string();
+    let reason_ok = !rest[close + 1..].trim().is_empty();
+    Some(Allow { rule, reason_ok })
+}
+
+/// The `unsafe` *keyword* occurrences in a code line — an identifier that
+/// merely contains the substring (the `unsafe_code` lint name, a
+/// `not_unsafe` symbol) is not a keyword.  Yields the rest of the line
+/// after each keyword.
+fn unsafe_keyword_rests(code: &str) -> impl Iterator<Item = &str> {
+    code.match_indices("unsafe").filter_map(|(at, _)| {
+        let before_ok = at == 0
+            || !code[..at]
+                .chars()
+                .next_back()
+                .is_some_and(|c| c.is_alphanumeric() || c == '_');
+        let rest = &code[at + "unsafe".len()..];
+        let after_ok = !rest.chars().next().is_some_and(|c| c.is_alphanumeric() || c == '_');
+        (before_ok && after_ok).then_some(rest)
+    })
+}
+
+// ---------------------------------------------------------------------------
+// The per-file scan
+// ---------------------------------------------------------------------------
+
+/// Scan one file's source.  `is_test_file` marks whole-file test code
+/// (anything under a `tests/` or `benches/` directory).
+pub fn scan_file(path: &Path, src: &str, is_test_file: bool, cfg: &Config) -> Vec<Violation> {
+    let mut st = LexState::default();
+    let lines: Vec<Line> = src
+        .lines()
+        .map(|raw| {
+            let (code, comment) = split_line(&mut st, raw);
+            Line { code, comment, raw: raw.to_string() }
+        })
+        .collect();
+    let n = lines.len();
+    let depths = depth_before(&lines);
+    let test = test_regions(&lines, &depths, is_test_file);
+    let hot = hot_regions(&lines, &depths);
+
+    let allows: Vec<Option<Allow>> = lines.iter().map(|l| parse_allow(&l.comment)).collect();
+    let mut out: Vec<Violation> = Vec::new();
+
+    // malformed allows are themselves violations (unknown rule, no reason)
+    for (i, a) in allows.iter().enumerate() {
+        if let Some(a) = a {
+            if !RULES.iter().any(|(r, _)| *r == a.rule) {
+                out.push(Violation {
+                    file: path.to_path_buf(),
+                    line: i + 1,
+                    rule: "R0",
+                    msg: format!("audit:allow names unknown rule `{}`", a.rule),
+                });
+            } else if !a.reason_ok {
+                out.push(Violation {
+                    file: path.to_path_buf(),
+                    line: i + 1,
+                    rule: "R0",
+                    msg: "audit:allow requires a non-empty reason after the rule id".into(),
+                });
+            }
+        }
+    }
+
+    // a violation at line i is suppressed by an allow for its rule on the
+    // same line, or alone on the comment-only line directly above
+    let allowed = |i: usize, rule: &str| -> bool {
+        if let Some(a) = &allows[i] {
+            if a.rule == rule && a.reason_ok {
+                return true;
+            }
+        }
+        if i > 0 && lines[i - 1].code.trim().is_empty() {
+            if let Some(a) = &allows[i - 1] {
+                if a.rule == rule && a.reason_ok {
+                    return true;
+                }
+            }
+        }
+        false
+    };
+    let push = |i: usize, rule: &'static str, msg: String, out: &mut Vec<Violation>| {
+        if !allowed(i, rule) {
+            out.push(Violation { file: path.to_path_buf(), line: i + 1, rule, msg });
+        }
+    };
+
+    for i in 0..n {
+        let code = &lines[i].code;
+
+        // R1 — lock discipline (production code only; the guard helpers
+        // use unwrap_or_else(PoisonError::into_inner), which never matches)
+        if !test[i] && (code.contains(".lock().unwrap()") || code.contains(".lock().expect(")) {
+            push(
+                i,
+                "R1",
+                "poisonable lock acquisition; use util::sync::recover / recover_wait".into(),
+                &mut out,
+            );
+        }
+
+        // R2 — SAFETY comments on unsafe blocks and unsafe impls
+        // (`unsafe fn` declarations and fn-pointer types are not blocks)
+        {
+            let needs = unsafe_keyword_rests(code)
+                .any(|rest| !rest.trim_start().starts_with("fn"));
+            if needs && !has_safety_comment(&lines, i) {
+                push(
+                    i,
+                    "R2",
+                    "unsafe block without an immediately preceding // SAFETY: comment".into(),
+                    &mut out,
+                );
+            }
+        }
+
+        // R3 — allocation/clock bans inside `// audit: hot` bodies
+        if hot[i] && !test[i] {
+            for tok in HOT_BANNED {
+                if code.contains(tok) {
+                    push(
+                        i,
+                        "R3",
+                        format!("`{tok}` inside an `audit: hot` function body"),
+                        &mut out,
+                    );
+                }
+            }
+        }
+
+        // R4 — atomic ordering rationales
+        if !test[i] && ATOMIC_ORDERINGS.iter().any(|o| code.contains(o)) {
+            if code.contains("Ordering::SeqCst") {
+                push(
+                    i,
+                    "R4",
+                    "Ordering::SeqCst is deny-by-default; justify with audit:allow(R4)".into(),
+                    &mut out,
+                );
+            } else {
+                let here = has_ordering_tag(&lines[i].comment);
+                let above = i > 0 && has_ordering_tag(&lines[i - 1].comment);
+                if !here && !above {
+                    push(
+                        i,
+                        "R4",
+                        "atomic Ordering:: without an `ordering:` rationale on this or the preceding line"
+                            .into(),
+                        &mut out,
+                    );
+                }
+            }
+        }
+
+        // R5 — chaos coverage of panic boundaries
+        if !test[i] && code.contains("catch_unwind") {
+            let lo = i.saturating_sub(R5_BEFORE);
+            let hi = (i + R5_AFTER).min(n.saturating_sub(1));
+            let named = (lo..=hi).any(|j| {
+                cfg.fault_sites
+                    .iter()
+                    .any(|v| lines[j].raw.contains(&format!("FaultSite::{v}")))
+            });
+            if !named {
+                push(
+                    i,
+                    "R5",
+                    "catch_unwind without a FaultSite:: injection point named in its window".into(),
+                    &mut out,
+                );
+            }
+        }
+    }
+
+    scan_exporters(path, &lines, &depths, &mut out, &allowed);
+    out
+}
+
+/// R2 helper: `// SAFETY:` on the same line, or in the contiguous
+/// comment/attribute block directly above.
+fn has_safety_comment(lines: &[Line], i: usize) -> bool {
+    if lines[i].comment.contains("SAFETY:") {
+        return true;
+    }
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let code = lines[j].code.trim();
+        if code.is_empty() {
+            if lines[j].comment.contains("SAFETY:") {
+                return true;
+            }
+            if lines[j].comment.trim().is_empty() {
+                return false; // blank line breaks the block
+            }
+        } else if code.starts_with("#[") || code.starts_with("#![") {
+            continue; // attributes are transparent
+        } else {
+            return false;
+        }
+    }
+    false
+}
+
+/// R4 helper: an `ordering:` tag (the rationale convention), but not the
+/// `Ordering::` type path itself appearing inside a comment.
+fn has_ordering_tag(comment: &str) -> bool {
+    let lower = comment.to_lowercase();
+    let mut from = 0usize;
+    while let Some(at) = lower[from..].find("ordering:") {
+        let end = from + at + "ordering:".len();
+        if lower[end..].chars().next() != Some(':') {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+/// R6 — cross-check `MetricsSnapshot::FIELDS` against the three exporters.
+fn scan_exporters(
+    path: &Path,
+    lines: &[Line],
+    depths: &[i32],
+    out: &mut Vec<Violation>,
+    allowed: &dyn Fn(usize, &str) -> bool,
+) {
+    let n = lines.len();
+    let Some(fields_at) = (0..n).find(|&i| lines[i].code.contains("const FIELDS")) else {
+        return;
+    };
+    // collect the entry names (string literals up to the closing `];`)
+    let mut fields: Vec<(String, usize)> = Vec::new();
+    for (j, l) in lines.iter().enumerate().skip(fields_at) {
+        let raw = l.raw.trim();
+        if !raw.starts_with("//") {
+            let mut rest = l.raw.as_str();
+            while let Some(a) = rest.find('"') {
+                let Some(b) = rest[a + 1..].find('"') else { break };
+                let name = &rest[a + 1..a + 1 + b];
+                if !name.is_empty() && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+                    fields.push((name.to_string(), j));
+                }
+                rest = &rest[a + b + 2..];
+            }
+        }
+        if l.code.contains("];") {
+            break;
+        }
+    }
+    if fields.is_empty() {
+        return;
+    }
+    let exporters: [(&str, &[&str]); 3] = [
+        ("to_json", &["fn to_json"]),
+        ("to_prometheus", &["fn to_prometheus"]),
+        ("Display", &["Display for MetricsSnapshot"]),
+    ];
+    for (name, anchors) in exporters {
+        let Some(at) = (0..n).find(|&i| anchors.iter().any(|a| lines[i].code.contains(a))) else {
+            if !allowed(fields_at, "R6") {
+                out.push(Violation {
+                    file: path.to_path_buf(),
+                    line: fields_at + 1,
+                    rule: "R6",
+                    msg: format!("exporter `{name}` not found for MetricsSnapshot::FIELDS"),
+                });
+            }
+            continue;
+        };
+        // brace-matched body of the exporter
+        let base = depths[at];
+        let mut body = String::new();
+        let mut j = at;
+        loop {
+            body.push_str(&lines[j].code);
+            body.push('\n');
+            j += 1;
+            if j >= n || (j > at && depths[j] <= base) {
+                break;
+            }
+        }
+        for (f, _) in &fields {
+            if !body.contains(&format!("self.{f}")) && !allowed(at, "R6") {
+                out.push(Violation {
+                    file: path.to_path_buf(),
+                    line: at + 1,
+                    rule: "R6",
+                    msg: format!("FIELDS entry `{f}` is not referenced by exporter `{name}`"),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Walking
+// ---------------------------------------------------------------------------
+
+/// Directories never scanned: build output, the offline vendor shims, VCS
+/// metadata, and the scanner's own violation fixtures.
+const SKIP_DIRS: &[&str] = &["target", "vendor", ".git", "fixtures"];
+
+fn collect_files(root: &Path, files: &mut Vec<PathBuf>) {
+    if root.is_file() {
+        if root.extension().and_then(|e| e.to_str()) == Some("rs") {
+            files.push(root.to_path_buf());
+        }
+        return;
+    }
+    let Ok(entries) = fs::read_dir(root) else { return };
+    let mut names: Vec<PathBuf> = entries.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    names.sort();
+    for p in names {
+        if p.is_dir() {
+            let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if !SKIP_DIRS.contains(&name) {
+                collect_files(&p, files);
+            }
+        } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            files.push(p);
+        }
+    }
+}
+
+fn is_test_path(p: &Path) -> bool {
+    p.components().any(|c| {
+        matches!(c.as_os_str().to_str(), Some("tests") | Some("benches"))
+    })
+}
+
+/// Parse `enum FaultSite { … }` variants out of `coordinator/faults.rs`.
+fn parse_fault_sites(src: &str) -> Option<Vec<String>> {
+    let at = src.find("enum FaultSite")?;
+    let open = src[at..].find('{')? + at;
+    let close = src[open..].find('}')? + open;
+    let vars: Vec<String> = src[open + 1..close]
+        .split(',')
+        .map(|v| {
+            // strip comments and attributes from the variant line(s)
+            v.lines()
+                .map(|l| l.split("//").next().unwrap_or(""))
+                .collect::<String>()
+                .trim()
+                .to_string()
+        })
+        .filter(|v| !v.is_empty() && v.chars().all(|c| c.is_ascii_alphanumeric()))
+        .collect();
+    if vars.is_empty() {
+        None
+    } else {
+        Some(vars)
+    }
+}
+
+/// Scan every `.rs` file under the given roots.  Returns the violations
+/// and the number of files scanned.
+pub fn scan_paths(roots: &[PathBuf]) -> (Vec<Violation>, usize) {
+    let mut files = Vec::new();
+    for r in roots {
+        collect_files(r, &mut files);
+    }
+    files.dedup();
+    let mut cfg = Config::default();
+    for f in &files {
+        if f.ends_with("coordinator/faults.rs") {
+            if let Ok(src) = fs::read_to_string(f) {
+                if let Some(sites) = parse_fault_sites(&src) {
+                    cfg.fault_sites = sites;
+                }
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for f in &files {
+        let Ok(src) = fs::read_to_string(f) else { continue };
+        out.extend(scan_file(f, &src, is_test_path(f), &cfg));
+    }
+    out.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    (out, files.len())
+}

@@ -1,0 +1,16 @@
+// R1 fixture: one bare lock().unwrap() violation, one suppressed site,
+// and one guard-helper use that must NOT match.
+use std::sync::Mutex;
+
+fn violating(m: &Mutex<u32>) -> u32 {
+    *m.lock().unwrap() // line 6: R1 violation
+}
+
+fn suppressed(m: &Mutex<u32>) -> u32 {
+    // audit:allow(R1) fixture: exercising the suppression path
+    *m.lock().unwrap()
+}
+
+fn guard(m: &Mutex<u32>) -> u32 {
+    *m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}

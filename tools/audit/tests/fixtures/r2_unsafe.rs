@@ -1,0 +1,20 @@
+// R2 fixture: one undocumented unsafe block, one suppressed, one
+// documented (must NOT flag), and an `unsafe fn` declaration (exempt).
+
+fn violating(p: *const u8) -> u8 {
+    unsafe { *p } // line 5: R2 violation
+}
+
+fn suppressed(p: *const u8) -> u8 {
+    // audit:allow(R2) fixture: exercising the suppression path
+    unsafe { *p }
+}
+
+fn documented(p: *const u8) -> u8 {
+    // SAFETY: fixture pointer is always valid
+    unsafe { *p }
+}
+
+unsafe fn declaration_is_exempt(p: *const u8) -> u8 {
+    *p
+}

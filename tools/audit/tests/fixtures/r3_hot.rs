@@ -1,0 +1,19 @@
+// R3 fixture: an allocation inside a hot-stamped body, a suppressed one,
+// and the same token in a cold function (must NOT flag).
+
+// audit: hot — fixture kernel
+fn hot_violating(n: usize) -> Vec<u32> {
+    let out = Vec::with_capacity(n); // line 6: R3 violation
+    out
+}
+
+// audit: hot — fixture kernel with a justified allocation
+fn hot_suppressed(n: usize) -> Vec<u32> {
+    // audit:allow(R3) fixture: exercising the suppression path
+    let out = Vec::with_capacity(n);
+    out
+}
+
+fn cold_is_exempt(n: usize) -> Vec<u32> {
+    Vec::with_capacity(n)
+}

@@ -1,0 +1,25 @@
+// R4 fixture: an unannotated atomic ordering, a SeqCst (deny-by-default),
+// a suppressed SeqCst, and two annotated sites (must NOT flag).
+use std::sync::atomic::{AtomicU64, Ordering};
+
+fn violating(a: &AtomicU64) -> u64 {
+    a.load(Ordering::Relaxed) // line 6: R4 violation (no rationale)
+}
+
+fn seqcst_denied(a: &AtomicU64) {
+    a.store(1, Ordering::SeqCst); // line 10: R4 violation (SeqCst)
+}
+
+fn seqcst_suppressed(a: &AtomicU64) {
+    // audit:allow(R4) fixture: exercising the SeqCst suppression path
+    a.store(1, Ordering::SeqCst);
+}
+
+fn annotated_trailing(a: &AtomicU64) -> u64 {
+    a.load(Ordering::Relaxed) // ordering: relaxed — fixture counter
+}
+
+fn annotated_preceding(a: &AtomicU64) -> u64 {
+    // ordering: relaxed — fixture counter
+    a.load(Ordering::Relaxed)
+}

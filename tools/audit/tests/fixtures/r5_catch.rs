@@ -1,0 +1,56 @@
+// R5 fixture: a catch_unwind with no FaultSite in its window, a
+// suppressed one, and one that names its injection site (must NOT flag).
+// The named site sits more than R5_AFTER lines below the violating catch
+// so their windows cannot overlap.
+
+fn violating() {
+    let _ = std::panic::catch_unwind(|| {}); // line 7: R5 violation
+}
+
+fn suppressed() {
+    // audit:allow(R5) fixture: exercising the suppression path
+    let _ = std::panic::catch_unwind(|| {});
+}
+
+// -- window padding ---------------------------------------------------------
+// pad 01
+// pad 02
+// pad 03
+// pad 04
+// pad 05
+// pad 06
+// pad 07
+// pad 08
+// pad 09
+// pad 10
+// pad 11
+// pad 12
+// pad 13
+// pad 14
+// pad 15
+// pad 16
+// pad 17
+// pad 18
+// pad 19
+// pad 20
+// pad 21
+// pad 22
+// pad 23
+// pad 24
+// pad 25
+// pad 26
+// pad 27
+// pad 28
+// pad 29
+// pad 30
+// pad 31
+// pad 32
+// pad 33
+// pad 34
+// pad 35
+// ---------------------------------------------------------------------------
+
+fn named() {
+    // exercised by fault injection at FaultSite::Exec
+    let _ = std::panic::catch_unwind(|| {});
+}

@@ -1,0 +1,30 @@
+// R6 fixture: a FIELDS inventory whose `missing` entry is exported by
+// to_json and to_prometheus but NOT by Display → exactly one violation,
+// anchored at the Display line.
+
+pub struct MetricsSnapshot {
+    pub covered: u64,
+    pub missing: u64,
+}
+
+impl MetricsSnapshot {
+    pub const FIELDS: &'static [&'static str] = &[
+        "covered", // line 12
+        "missing", // line 13
+    ];
+
+    pub fn to_json(&self) -> String {
+        format!("{{\"covered\":{},\"missing\":{}}}", self.covered, self.missing)
+    }
+
+    pub fn to_prometheus(&self) -> String {
+        format!("covered {}\nmissing {}\n", self.covered, self.missing)
+    }
+}
+
+impl std::fmt::Display for MetricsSnapshot {
+    // line 25 anchors the violation: `missing` never printed here
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "covered={}", self.covered)
+    }
+}

@@ -1,0 +1,122 @@
+//! Fixture tests: one file per rule under `tests/fixtures/`, each holding
+//! exactly one intended violation at a pinned line, one `audit:allow`
+//! suppression, and the rule's negative cases. The fixtures directory is in
+//! the walker's skip list, so these tests feed `scan_file` directly.
+//!
+//! Integration tests run with the package directory as cwd, so fixture
+//! paths are relative to `tools/audit/`.
+
+use std::path::Path;
+
+use pallas_audit::{scan_file, Config, RULES};
+
+/// Scan a fixture as if it were production code (`is_test_file = false`)
+/// and return its `(rule, line)` pairs in file order.
+fn scan_fixture(name: &str) -> Vec<(&'static str, usize)> {
+    let path = Path::new("tests/fixtures").join(name);
+    let src = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("fixture {} unreadable: {e}", path.display()));
+    scan_file(&path, &src, false, &Config::default())
+        .into_iter()
+        .map(|v| (v.rule, v.line))
+        .collect()
+}
+
+#[test]
+fn r1_flags_bare_lock_unwrap_once() {
+    // Line 6 is the bare `.lock().unwrap()`; line 11 is suppressed and the
+    // `unwrap_or_else(PoisonError::into_inner)` guard at 15 must not match.
+    assert_eq!(scan_fixture("r1_lock.rs"), vec![("R1", 6)]);
+}
+
+#[test]
+fn r2_flags_undocumented_unsafe_once() {
+    // Line 5 lacks a SAFETY comment; the suppressed (10), documented (15),
+    // and `unsafe fn` declaration (18) sites are exempt.
+    assert_eq!(scan_fixture("r2_unsafe.rs"), vec![("R2", 5)]);
+}
+
+#[test]
+fn r3_flags_hot_allocation_once() {
+    // Line 6 allocates inside an `audit: hot` body; the suppressed hot site
+    // (13) and the cold function (18) are exempt.
+    assert_eq!(scan_fixture("r3_hot.rs"), vec![("R3", 6)]);
+}
+
+#[test]
+fn r4_flags_unannotated_and_seqcst() {
+    // Line 6 has no `ordering:` rationale; line 10 is SeqCst
+    // (deny-by-default). Suppressed SeqCst (15) and both annotated sites
+    // (19, 24) are exempt.
+    assert_eq!(scan_fixture("r4_ordering.rs"), vec![("R4", 6), ("R4", 10)]);
+}
+
+#[test]
+fn r5_flags_unnamed_catch_unwind_once() {
+    // Line 7's window names no FaultSite; the suppressed site (12) and the
+    // named site (55, with `FaultSite::Exec` in-window) are exempt.
+    assert_eq!(scan_fixture("r5_catch.rs"), vec![("R5", 7)]);
+}
+
+#[test]
+fn r6_flags_missing_exporter_field_once() {
+    // `missing` is exported by to_json and to_prometheus but not Display;
+    // the violation anchors at the Display impl line.
+    assert_eq!(scan_fixture("r6_exporters.rs"), vec![("R6", 25)]);
+}
+
+#[test]
+fn r6_names_the_field_and_exporter() {
+    let path = Path::new("tests/fixtures/r6_exporters.rs");
+    let src = std::fs::read_to_string(path).unwrap();
+    let vs = scan_file(path, &src, false, &Config::default());
+    assert_eq!(vs.len(), 1);
+    assert!(vs[0].msg.contains("`missing`"), "msg: {}", vs[0].msg);
+    assert!(vs[0].msg.contains("`Display`"), "msg: {}", vs[0].msg);
+}
+
+#[test]
+fn test_files_relax_lock_and_ordering_rules() {
+    // The same fixtures scanned as test code keep only the rules that still
+    // apply there (R2 documents unsafe everywhere; R6 is structural).
+    assert_eq!(scan_fixture_as_test("r1_lock.rs"), vec![]);
+    assert_eq!(scan_fixture_as_test("r4_ordering.rs"), vec![]);
+    assert_eq!(scan_fixture_as_test("r2_unsafe.rs"), vec![("R2", 5)]);
+}
+
+fn scan_fixture_as_test(name: &str) -> Vec<(&'static str, usize)> {
+    let path = Path::new("tests/fixtures").join(name);
+    let src = std::fs::read_to_string(&path).unwrap();
+    scan_file(&path, &src, true, &Config::default())
+        .into_iter()
+        .map(|v| (v.rule, v.line))
+        .collect()
+}
+
+#[test]
+fn allow_with_unknown_rule_is_r0() {
+    let src = "// audit:allow(R9) no such rule\nfn f() {}\n";
+    let vs = scan_file(Path::new("inline.rs"), src, false, &Config::default());
+    assert_eq!(vs.len(), 1);
+    assert_eq!((vs[0].rule, vs[0].line), ("R0", 1));
+    assert!(vs[0].msg.contains("unknown rule"), "msg: {}", vs[0].msg);
+}
+
+#[test]
+fn allow_without_reason_is_r0() {
+    let src = "fn f(m: &std::sync::Mutex<u32>) -> u32 {\n    // audit:allow(R1)\n    *m.lock().unwrap()\n}\n";
+    let vs = scan_file(Path::new("inline.rs"), src, false, &Config::default());
+    // The empty reason is R0 *and* fails to suppress the R1 underneath.
+    let pairs: Vec<_> = vs.iter().map(|v| (v.rule, v.line)).collect();
+    assert_eq!(pairs, vec![("R0", 2), ("R1", 3)]);
+}
+
+#[test]
+fn every_fixture_rule_is_registered() {
+    for rule in ["R1", "R2", "R3", "R4", "R5", "R6"] {
+        assert!(
+            RULES.iter().any(|(id, _)| *id == rule),
+            "rule {rule} missing from RULES"
+        );
+    }
+}
