@@ -1,0 +1,143 @@
+//! Wire front-door overhead: what the framed TCP path costs a served
+//! request versus calling the engine in-process.
+//!
+//! Three measurements over the same engine and workload:
+//!
+//! 1. **in-process** — `submit_blocking` straight into the `Server`; the
+//!    baseline the wire path is judged against.
+//! 2. **wire (serial)** — one `net::Client` doing submit → wait round
+//!    trips over loopback TCP: framing + CRC + two socket hops + the
+//!    poll-registry pump, all on the critical path.
+//! 3. **wire (pipelined)** — the same client keeping a window of
+//!    requests in flight, the way a batching front-end would drive the
+//!    door; shows how much of the serial gap is just round-trip stalls.
+//!
+//! Writes `BENCH_net.json` at the repo root (same schema convention as
+//! `BENCH_obs.json` etc.: the committed file is a `pending-toolchain`
+//! placeholder; running this overwrites it).
+//!
+//! Run: `cargo run --release --example net_serve`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use merge_spmm::coordinator::{EngineConfig, Server, ServerConfig};
+use merge_spmm::formats::Csr;
+use merge_spmm::gen;
+use merge_spmm::net::{Client, ClientConfig, NetConfig, NetServer, WireOutcome};
+
+/// In-flight window for the pipelined run — deep enough to hide the
+/// loopback round trip, shallow enough not to trip admission control.
+const WINDOW: usize = 8;
+
+fn engine() -> anyhow::Result<Server> {
+    Server::start(
+        EngineConfig { artifacts_dir: None, cpu_workers: 2, ..Default::default() },
+        ServerConfig {
+            workers: 2,
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        },
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let rounds: usize = if quick { 40 } else { 400 };
+
+    let n = 8usize;
+    let a = Arc::new(Csr::random(2000, 1024, 6.0, 41));
+    let b = Arc::new(gen::dense_matrix(1024, n, 42));
+
+    // --- 1) in-process baseline: the engine without the wire ---
+    let server = engine()?;
+    server.submit_blocking(Arc::clone(&a), Arc::clone(&b), n)?; // warm the plan cache
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        std::hint::black_box(server.submit_blocking(Arc::clone(&a), Arc::clone(&b), n)?);
+    }
+    let base_wall = t0.elapsed().as_secs_f64();
+    let base_rps = rounds as f64 / base_wall;
+    let base_us = base_wall / rounds as f64 * 1e6;
+    server.shutdown();
+    println!("in-process:       {rounds} requests, {base_rps:.0} req/s, {base_us:.0} µs each");
+
+    // --- 2 + 3) the same engine behind the front door ---
+    let net = NetServer::start(engine()?, NetConfig::default())?;
+    let addr = net.local_addr().to_string();
+    let mut client = Client::new(addr, ClientConfig::default());
+    client.upload("bench", &a)?;
+    client.request("bench", b.as_slice(), n as u32, 0)?; // warm plan cache + connection
+
+    // serial: submit → wait, the full round trip on the critical path
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        match client.request("bench", b.as_slice(), n as u32, 0)? {
+            WireOutcome::Result(r) => std::hint::black_box(r),
+            WireOutcome::Error(e) => anyhow::bail!("serial request failed: {}", e.message),
+        };
+    }
+    let serial_wall = t0.elapsed().as_secs_f64();
+    let serial_rps = rounds as f64 / serial_wall;
+    let serial_us = serial_wall / rounds as f64 * 1e6;
+    println!(
+        "wire (serial):    {rounds} requests, {serial_rps:.0} req/s, {serial_us:.0} µs each \
+         — +{:.0} µs over in-process",
+        serial_us - base_us
+    );
+
+    // pipelined: keep WINDOW requests in flight through one connection
+    let t0 = Instant::now();
+    let mut pending = std::collections::VecDeque::with_capacity(WINDOW);
+    let mut done = 0usize;
+    while done < rounds {
+        while pending.len() < WINDOW && pending.len() + done < rounds {
+            pending.push_back(client.submit("bench", b.as_slice(), n as u32, 0)?);
+        }
+        let id = pending.pop_front().expect("window is non-empty");
+        match client.wait(id)? {
+            WireOutcome::Result(r) => std::hint::black_box(r),
+            WireOutcome::Error(e) => anyhow::bail!("pipelined request failed: {}", e.message),
+        };
+        done += 1;
+    }
+    let pipe_wall = t0.elapsed().as_secs_f64();
+    let pipe_rps = rounds as f64 / pipe_wall;
+    let pipe_us = pipe_wall / rounds as f64 * 1e6;
+    println!(
+        "wire (pipelined): {rounds} requests, {pipe_rps:.0} req/s, {pipe_us:.0} µs each \
+         (window {WINDOW})"
+    );
+
+    let snap = net.shutdown();
+    println!(
+        "  wire counters: {} frames in, {} frames out, {} conns, {} wire errors",
+        snap.frames_in, snap.frames_out, snap.conns_accepted, snap.wire_errors
+    );
+
+    let out = format!(
+        "{{\n  \"format\": \"bench-net-v1\",\n  \"status\": \"measured\",\n  \
+         \"command\": \"cargo run --release --example net_serve\",\n  \
+         \"rounds\": {rounds},\n  \
+         \"in_process\": {{\"req_per_s\": {base_rps:.1}, \"mean_us\": {base_us:.1}}},\n  \
+         \"wire_serial\": {{\"req_per_s\": {serial_rps:.1}, \"mean_us\": {serial_us:.1}, \
+         \"overhead_us\": {:.1}}},\n  \
+         \"wire_pipelined\": {{\"req_per_s\": {pipe_rps:.1}, \"mean_us\": {pipe_us:.1}, \
+         \"window\": {WINDOW}}},\n  \
+         \"frames_in\": {},\n  \"frames_out\": {},\n  \"wire_errors\": {}\n}}\n",
+        serial_us - base_us,
+        snap.frames_in,
+        snap.frames_out,
+        snap.wire_errors
+    );
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_net.json"))
+        .unwrap_or_else(|| "BENCH_net.json".into());
+    match std::fs::write(&path, out) {
+        Ok(()) => println!("-> {}", path.display()),
+        Err(e) => eprintln!("(BENCH_net.json write failed: {e})"),
+    }
+    Ok(())
+}

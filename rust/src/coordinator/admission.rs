@@ -165,11 +165,12 @@ pub struct RequestHandle {
     rx: Receiver<Result<SpmmResult>>,
     token: CancelToken,
     id: u64,
+    cancel_on_drop: bool,
 }
 
 impl RequestHandle {
     pub(crate) fn new(rx: Receiver<Result<SpmmResult>>, token: CancelToken, id: u64) -> Self {
-        RequestHandle { rx, token, id }
+        RequestHandle { rx, token, id, cancel_on_drop: true }
     }
 
     /// Router-assigned request id (matches trace/journal ids).
@@ -181,6 +182,16 @@ impl RequestHandle {
     /// work is shed with `ShedReason::Cancelled` at the next boundary.
     pub fn cancel(&self) {
         self.token.cancel();
+    }
+
+    /// Disarm cancel-on-drop: after `detach()`, dropping the handle no
+    /// longer cancels the request. Server-side handle tables (the network
+    /// front door's poll registry) hold handles on behalf of a *remote*
+    /// client; evicting a table entry — or the owning connection dying
+    /// after submit — must not spuriously cancel work the client may still
+    /// poll for. Explicit [`cancel`](Self::cancel) still works.
+    pub fn detach(&mut self) {
+        self.cancel_on_drop = false;
     }
 
     /// Block for the terminal outcome.
@@ -205,8 +216,9 @@ impl Drop for RequestHandle {
         // An abandoned handle means nobody will read the reply: flag the
         // request so queued stages skip it. try_recv distinguishes "reply
         // already delivered" (terminal outcome exists; cancelling now would
-        // be a no-op anyway) from "still pending".
-        if matches!(self.rx.try_recv(), Err(TryRecvError::Empty)) {
+        // be a no-op anyway) from "still pending". Detached handles skip
+        // this entirely — see `detach()`.
+        if self.cancel_on_drop && matches!(self.rx.try_recv(), Err(TryRecvError::Empty)) {
             self.token.cancel();
         }
     }
@@ -332,6 +344,36 @@ mod tests {
         assert!(format!("{}", shed_error(ShedReason::Cancelled, 1)).contains("shed (cancelled)"));
         let codel = format!("{}", shed_error(ShedReason::CodelOverload, 2));
         assert!(codel.contains("shed (codel-overload)"));
+    }
+
+    #[test]
+    fn dropping_a_pending_handle_cancels() {
+        let (_tx, rx) = std::sync::mpsc::channel();
+        let token = CancelToken::new();
+        let h = RequestHandle::new(rx, token.clone(), 1);
+        assert!(!token.is_cancelled());
+        drop(h);
+        assert!(token.is_cancelled());
+    }
+
+    #[test]
+    fn dropping_a_detached_handle_does_not_cancel() {
+        let (_tx, rx) = std::sync::mpsc::channel();
+        let token = CancelToken::new();
+        let mut h = RequestHandle::new(rx, token.clone(), 2);
+        h.detach();
+        drop(h);
+        assert!(!token.is_cancelled());
+    }
+
+    #[test]
+    fn explicit_cancel_still_works_after_detach() {
+        let (_tx, rx) = std::sync::mpsc::channel();
+        let token = CancelToken::new();
+        let mut h = RequestHandle::new(rx, token.clone(), 3);
+        h.detach();
+        h.cancel();
+        assert!(token.is_cancelled());
     }
 
     #[test]

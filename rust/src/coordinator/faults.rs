@@ -30,6 +30,16 @@ pub enum FaultSite {
     /// Fused pack/staging step (delay only — panics here are covered by
     /// `Fused`).
     Pack,
+    /// Wire ingress: frame read path (delay only — simulates a slow or
+    /// stalled client mid-request).
+    NetRead,
+    /// Wire egress: reply write path (torn frames — the writer emits a
+    /// partial frame and closes, simulating a crash mid-write).
+    NetWrite,
+    /// Connection lifetime: the server drops the socket right after
+    /// accepting a frame (mid-request disconnect; the request itself keeps
+    /// running server-side).
+    NetConn,
 }
 
 impl FaultSite {
@@ -39,6 +49,9 @@ impl FaultSite {
             FaultSite::Fused => 0x46555345,
             FaultSite::Shard => 0x53484152,
             FaultSite::Pack => 0x5041434b,
+            FaultSite::NetRead => 0x4e455452,
+            FaultSite::NetWrite => 0x4e455457,
+            FaultSite::NetConn => 0x4e455443,
         }
     }
 }
@@ -58,6 +71,12 @@ pub struct FaultPlan {
     /// Clamp `WorkQueue` capacity to this many items (0 = untouched),
     /// forcing queue-full blocking/backpressure under modest load.
     pub squeeze_queue_to: usize,
+    /// Tear a reply frame when `mix(seed, NetWrite, id) % torn_one_in == 0`:
+    /// the writer emits only a prefix of the frame and closes the socket.
+    pub torn_one_in: u64,
+    /// Drop the connection right after reading a frame when
+    /// `mix(seed, NetConn, id) % drop_conn_one_in == 0`.
+    pub drop_conn_one_in: u64,
 }
 
 impl Default for FaultPlan {
@@ -68,6 +87,8 @@ impl Default for FaultPlan {
             delay_one_in: 0,
             delay: Duration::from_millis(1),
             squeeze_queue_to: 0,
+            torn_one_in: 0,
+            drop_conn_one_in: 0,
         }
     }
 }
@@ -118,6 +139,27 @@ pub fn maybe_delay(site: FaultSite, id: u64) {
         if p.delay_one_in > 0 && mix(p.seed ^ 0xde1a, site, id) % p.delay_one_in == 0 {
             std::thread::sleep(p.delay);
         }
+    }
+}
+
+/// True when the active plan tears the reply frame for request `id`
+/// (site [`FaultSite::NetWrite`]): the writer should emit only a prefix
+/// and close the connection.
+pub fn wire_torn(id: u64) -> bool {
+    match active() {
+        Some(p) if p.torn_one_in > 0 => mix(p.seed, FaultSite::NetWrite, id) % p.torn_one_in == 0,
+        _ => false,
+    }
+}
+
+/// True when the active plan drops the connection right after reading the
+/// frame for request `id` (site [`FaultSite::NetConn`]).
+pub fn wire_drop_conn(id: u64) -> bool {
+    match active() {
+        Some(p) if p.drop_conn_one_in > 0 => {
+            mix(p.seed, FaultSite::NetConn, id) % p.drop_conn_one_in == 0
+        }
+        _ => false,
     }
 }
 

@@ -316,6 +316,24 @@ pub struct Metrics {
     /// gauge: max/mean nnz imbalance of the most recent shard layout,
     /// stored as f64 bits (1.0 = perfectly balanced)
     shard_imbalance_bits: AtomicU64,
+    /// wire front-door counters (see `crate::net`): connections accepted,
+    /// currently open (gauge: inc at accept, dec at reader exit), and shed
+    /// at accept time because `max_conns` was reached
+    pub conns_accepted: AtomicU64,
+    pub conns_open: AtomicU64,
+    pub conns_shed: AtomicU64,
+    /// frames successfully read from / written to sockets
+    pub frames_in: AtomicU64,
+    pub frames_out: AtomicU64,
+    /// wire-level failures: malformed/oversized/CRC-bad frames, plus
+    /// replies that could not be delivered (slow-client disconnects, write
+    /// errors, torn frames)
+    pub wire_errors: AtomicU64,
+    /// gauge: duration of the last wire drain in seconds, stored as f64
+    /// bits — set by `NetServer::shutdown` after the listener drains and
+    /// *before* the inner server's final metrics dump, so the last
+    /// snapshot on disk carries it
+    net_drain_bits: AtomicU64,
     /// end-to-end latency per execution path, indexed by `TracePath`
     path_hist: [AtomicHistogram; TracePath::COUNT],
     /// per-stage durations across all paths, indexed by `Stage`
@@ -513,6 +531,12 @@ impl Metrics {
         self.path_hist[TracePath::Solo.index()].record(secs);
     }
 
+    /// Record the wire drain duration (called once by `NetServer::shutdown`
+    /// after the listener drains, before the inner server's final dump).
+    pub fn set_net_drain_s(&self, secs: f64) {
+        self.net_drain_bits.store(secs.to_bits(), RELAXED);
+    }
+
     /// Set the slow-request journal threshold (seconds; 0 disables).
     pub fn set_slow_threshold_s(&self, secs: f64) {
         self.slow_threshold_us.store((secs.max(0.0) * 1e6) as u64, RELAXED);
@@ -607,6 +631,13 @@ impl Metrics {
             buffers_pooled_hwm: self.buffers_pooled_hwm.load(RELAXED),
             partition_hits: self.partition_hits.load(RELAXED),
             partition_misses: self.partition_misses.load(RELAXED),
+            conns_accepted: self.conns_accepted.load(RELAXED),
+            conns_open: self.conns_open.load(RELAXED),
+            conns_shed: self.conns_shed.load(RELAXED),
+            frames_in: self.frames_in.load(RELAXED),
+            frames_out: self.frames_out.load(RELAXED),
+            wire_errors: self.wire_errors.load(RELAXED),
+            net_drain_s: f64::from_bits(self.net_drain_bits.load(RELAXED)),
             tuner_threshold: f64::from_bits(self.tuner_threshold_bits.load(RELAXED)),
             p50_s: combined.percentile(50.0),
             p99_s: combined.percentile(99.0),
@@ -719,6 +750,16 @@ pub struct MetricsSnapshot {
     /// partition replay: phase-1 splits reused vs recomputed
     pub partition_hits: u64,
     pub partition_misses: u64,
+    /// wire front door: connections accepted / open (gauge) / shed at
+    /// accept, frames read / written, wire-level errors
+    pub conns_accepted: u64,
+    pub conns_open: u64,
+    pub conns_shed: u64,
+    pub frames_in: u64,
+    pub frames_out: u64,
+    pub wire_errors: u64,
+    /// gauge: duration of the last wire drain (seconds; 0 before any)
+    pub net_drain_s: f64,
     pub tuner_threshold: f64,
     /// end-to-end latency across all paths, from the combined histogram
     pub p50_s: f64,
@@ -789,6 +830,13 @@ impl MetricsSnapshot {
         "buffers_pooled_hwm",
         "partition_hits",
         "partition_misses",
+        "conns_accepted",
+        "conns_open",
+        "conns_shed",
+        "frames_in",
+        "frames_out",
+        "wire_errors",
+        "net_drain_s",
         "tuner_threshold",
         "p50_s",
         "p99_s",
@@ -820,7 +868,7 @@ impl MetricsSnapshot {
     pub fn to_json(&self) -> String {
         use std::collections::BTreeMap;
         let mut m = BTreeMap::new();
-        let scalars: [(&str, f64); 40] = [
+        let scalars: [(&str, f64); 47] = [
             ("requests", self.requests as f64),
             ("completed", self.completed as f64),
             ("errors", self.errors as f64),
@@ -857,6 +905,13 @@ impl MetricsSnapshot {
             ("buffers_pooled_hwm", self.buffers_pooled_hwm as f64),
             ("partition_hits", self.partition_hits as f64),
             ("partition_misses", self.partition_misses as f64),
+            ("conns_accepted", self.conns_accepted as f64),
+            ("conns_open", self.conns_open as f64),
+            ("conns_shed", self.conns_shed as f64),
+            ("frames_in", self.frames_in as f64),
+            ("frames_out", self.frames_out as f64),
+            ("wire_errors", self.wire_errors as f64),
+            ("net_drain_s", self.net_drain_s),
             ("tuner_threshold", self.tuner_threshold),
             ("p50_s", self.p50_s),
             ("p99_s", self.p99_s),
@@ -921,7 +976,7 @@ impl MetricsSnapshot {
     pub fn to_prometheus(&self) -> String {
         use std::fmt::Write as _;
         let mut out = String::with_capacity(16384);
-        let counters: [(&str, &str, u64); 19] = [
+        let counters: [(&str, &str, u64); 24] = [
             ("spmm_requests", "requests submitted", self.requests),
             ("spmm_completed", "requests completed", self.completed),
             ("spmm_errors", "requests failed", self.errors),
@@ -941,11 +996,16 @@ impl MetricsSnapshot {
             ("spmm_shards_executed", "shard fragments executed", self.shards_executed),
             ("spmm_fused_batches", "fused wide passes executed", self.fused_batches),
             ("spmm_fused_requests", "requests that rode in fused passes", self.fused_requests),
+            ("spmm_conns_accepted", "wire connections accepted", self.conns_accepted),
+            ("spmm_conns_shed", "wire connections shed at accept", self.conns_shed),
+            ("spmm_frames_in", "wire frames read", self.frames_in),
+            ("spmm_frames_out", "wire frames written", self.frames_out),
+            ("spmm_wire_errors", "wire protocol or delivery errors", self.wire_errors),
         ];
         for (name, help, v) in counters {
             let _ = writeln!(out, "# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}");
         }
-        let gauges: [(&str, &str, f64); 21] = [
+        let gauges: [(&str, &str, f64); 23] = [
             ("spmm_plan_len", "current plan-cache size", self.plan_len as f64),
             ("spmm_fused_width_mean", "mean fused width", self.fused_width_mean),
             (
@@ -995,6 +1055,8 @@ impl MetricsSnapshot {
             ),
             ("spmm_partition_hits", "phase-1 splits replayed", self.partition_hits as f64),
             ("spmm_partition_misses", "phase-1 splits recomputed", self.partition_misses as f64),
+            ("spmm_conns_open", "wire connections currently open", self.conns_open as f64),
+            ("spmm_net_drain_seconds", "duration of the last wire drain", self.net_drain_s),
             ("spmm_tuner_threshold", "current d-threshold of the tuner", self.tuner_threshold),
             ("spmm_p50_seconds", "p50 end-to-end latency", self.p50_s),
             ("spmm_p99_seconds", "p99 end-to-end latency", self.p99_s),
@@ -1259,6 +1321,17 @@ impl std::fmt::Display for MetricsSnapshot {
             self.slow_requests.len(),
             self.slow_threshold_s * 1e3,
             self.recent_requests.len()
+        )?;
+        write!(
+            f,
+            " net={}a/{}o/{}s fr={}i/{}o werr={} drain={:.1}ms",
+            self.conns_accepted,
+            self.conns_open,
+            self.conns_shed,
+            self.frames_in,
+            self.frames_out,
+            self.wire_errors,
+            self.net_drain_s * 1e3
         )?;
         write!(
             f,

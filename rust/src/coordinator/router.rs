@@ -542,6 +542,13 @@ impl Server {
         self.metrics.snapshot()
     }
 
+    /// Shared metrics registry, for in-crate subsystems (the network front
+    /// door bumps its wire counters directly on the server's registry so
+    /// they land in the same snapshots and final dump).
+    pub(crate) fn metrics_arc(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
     fn sync_runtime_gauges(&self) {
         self.metrics
             .sync_exec_gauges(&self.runtime.exec_stats(), &self.planner.partition_stats());

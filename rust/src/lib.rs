@@ -254,6 +254,38 @@
 //! points ([`spmm::rowsplit_spmm`], [`spmm::merge_spmm`]) remain as thin
 //! wrappers that run on a process-wide shared pool.
 //!
+//! ## net — the wire front door
+//!
+//! [`net`] puts a real network protocol in front of the serve path: a
+//! dependency-free TCP listener ([`net::NetServer`]) speaking a small
+//! length-prefixed binary protocol ([`net::frame`]: 24-byte header with
+//! magic / version / frame type / client-generated request id / payload
+//! length / CRC32, then typed payloads).  `Submit` frames reference a
+//! named CSR artifact (uploaded once via `UploadArtifact`) and carry the
+//! dense B inline plus a per-request deadline in milliseconds that
+//! becomes a [`coordinator::Deadline`] in `Server::submit_with`;
+//! `Cancel` maps onto [`coordinator::RequestHandle::cancel`]; every
+//! shed / submit error / executor panic comes back as a typed `Error`
+//! frame with a machine-readable code and retry hint — never a dropped
+//! connection for the other clients.  Robustness mechanics: accept-time
+//! shedding at `--max-conns`, per-connection io/idle timeouts, a
+//! max-frame-size guard, malformed-frame isolation (typed error frame,
+//! close *that* connection only), bounded per-connection reply queues
+//! (slow clients lose their own replies, nothing else), and a poll
+//! registry of **detached** handles ([`coordinator::RequestHandle::detach`])
+//! so a dying connection never spuriously cancels in-flight work.
+//! [`net::Client`] reconnects with capped exponential backoff and
+//! resubmits idempotently by request id.  Shutdown drains the wire
+//! first (stop accepting → flush terminal frames → join connection
+//! threads → record `net_drain_s`) and only then runs the inner
+//! [`coordinator::Server::shutdown`], so the final metrics dump carries
+//! complete wire counters (`conns_*`, `frames_*`, `wire_errors`).
+//! `serve --listen ADDR` turns it on; `tests/net_props.rs` fuzzes the
+//! codec and pins the on-wire layout, and `tests/wire_chaos_props.rs`
+//! proves the exactly-one-terminal-outcome and bitwise-survivor
+//! invariants over real sockets under torn frames, delayed reads,
+//! dropped connections, and executor panics.
+//!
 //! ## audit — the repo's own static-analysis pass
 //!
 //! `cargo run -p pallas-audit -- rust/` (the CI `audit` step; mirrored by
@@ -301,6 +333,7 @@ pub mod exec;
 pub mod formats;
 pub mod gen;
 pub mod loadbalance;
+pub mod net;
 pub mod plan;
 pub mod runtime;
 pub mod shard;

@@ -8,6 +8,8 @@
 //!                  [--shards N|auto] [--metrics-json FILE] [--slow-ms MS]
 //!                  [--deadline-ms MS] [--metrics-interval MS]
 //!                  [--telemetry-interval MS]         demo serving workload
+//!                  [--listen ADDR] [--max-conns N] [--net-timeout-ms MS]
+//!                                                    …or serve over the wire
 //! merge-spmm stats [--file FILE] [--format text|json|prom] [--watch MS]
 //!                                                    metrics export / live view
 //! merge-spmm suite [--seed N]                        dataset inventory
@@ -77,6 +79,16 @@ USAGE:
                                        rates into the telemetry rings every MS
                                        milliseconds (default: sampler off;
                                        must be ≥ 0.001 when given)
+                   [--listen ADDR]     network front door: bind the binary frame
+                                       protocol on ADDR (HOST:PORT; port 0 picks
+                                       a free port) and drive the demo workload
+                                       through a loopback wire client.
+                                       --requests 0 serves until killed instead.
+                   [--max-conns N]     accept-time connection cap for --listen
+                                       (default 64; 0 would shed every
+                                       connection and is rejected)
+                   [--net-timeout-ms MS]  per-connection read/write budget for
+                                       --listen (default 5000; must be ≥ 0.001)
   merge-spmm stats [--file FILE] [--format text|json|prom] [--watch MS]
                                        one-shot metrics export: summarize a
                                        --metrics-json dump (--file), or run a small
@@ -130,6 +142,7 @@ fn positional(args: &[String]) -> Option<&str> {
             || a == "--shards" || a == "--metrics-json" || a == "--slow-ms"
             || a == "--deadline-ms" || a == "--file" || a == "--format"
             || a == "--metrics-interval" || a == "--telemetry-interval" || a == "--watch"
+            || a == "--listen" || a == "--max-conns" || a == "--net-timeout-ms"
         {
             skip = true;
             continue;
@@ -330,6 +343,40 @@ fn cmd_serve(args: &[String]) -> i32 {
             return 2;
         }
     };
+    // network front door: every flag is validated before any server
+    // thread starts, so a typo fails fast with a per-flag message
+    let listen = opt(args, "--listen");
+    if let Some(addr) = &listen {
+        if addr.parse::<std::net::SocketAddr>().is_err() {
+            eprintln!("serve: --listen expects HOST:PORT (e.g. 127.0.0.1:7070), got `{addr}`");
+            return 2;
+        }
+    }
+    let max_conns = match opt(args, "--max-conns") {
+        None => None,
+        Some(raw) => match raw.parse::<usize>() {
+            Ok(0) => {
+                eprintln!("serve: --max-conns 0 would shed every connection — use ≥ 1");
+                return 2;
+            }
+            Ok(n) => Some(n),
+            Err(_) => {
+                eprintln!("serve: --max-conns expects a positive integer, got `{raw}`");
+                return 2;
+            }
+        },
+    };
+    let net_timeout = match parse_ms_flag(args, "--net-timeout-ms") {
+        Ok(v) => v.map(|ms| std::time::Duration::from_secs_f64(ms / 1e3)),
+        Err(e) => {
+            eprintln!("serve: {e}");
+            return 2;
+        }
+    };
+    if listen.is_none() && (max_conns.is_some() || net_timeout.is_some()) {
+        eprintln!("serve: --max-conns / --net-timeout-ms only apply with --listen ADDR");
+        return 2;
+    }
     let server = match Server::start(
         engine_cfg,
         ServerConfig {
@@ -361,6 +408,18 @@ fn cmd_serve(args: &[String]) -> i32 {
         })
         .collect();
     let b = Arc::new(gen::dense_matrix(1000, 64, 9));
+    if let Some(addr) = listen {
+        return serve_over_wire(
+            server,
+            addr,
+            max_conns,
+            net_timeout,
+            requests,
+            &mats,
+            &b,
+            metrics_file.as_deref(),
+        );
+    }
     let t0 = std::time::Instant::now();
     let handles: Vec<_> = (0..requests)
         .map(|_| {
@@ -398,6 +457,89 @@ fn cmd_serve(args: &[String]) -> i32 {
     );
     println!("{snap}");
     if let Some(path) = &metrics_file {
+        println!("metrics dump -> {}", path.display());
+    }
+    0
+}
+
+/// `serve --listen`: put the wire front door in front of the server and
+/// drive the same mixed demo workload through a loopback client — every
+/// request crosses the frame protocol, the poll registry, and the pump.
+/// `--requests 0` skips the demo and serves until the process is killed.
+// one call site; the list is cmd_serve's already-validated flag set plus
+// the demo workload — a struct would be built and destructured once
+#[allow(clippy::too_many_arguments)]
+fn serve_over_wire(
+    server: Server,
+    listen: String,
+    max_conns: Option<usize>,
+    io_timeout: Option<std::time::Duration>,
+    requests: usize,
+    mats: &[Arc<Csr>],
+    b: &Arc<Vec<f32>>,
+    metrics_file: Option<&std::path::Path>,
+) -> i32 {
+    use merge_spmm::net::{Client, ClientConfig, ErrCode, NetConfig, NetServer, WireOutcome};
+    let mut cfg = NetConfig { listen, ..NetConfig::default() };
+    if let Some(n) = max_conns {
+        cfg.max_conns = n;
+    }
+    if let Some(t) = io_timeout {
+        cfg.io_timeout = t;
+    }
+    let net = match NetServer::start(server, cfg) {
+        Ok(n) => n,
+        Err(e) => {
+            eprintln!("serve: {e}");
+            return 1;
+        }
+    };
+    println!("listening on {} (wire protocol v1)", net.local_addr());
+    if requests == 0 {
+        println!("(--requests 0: serving until killed)");
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    let mut client = Client::new(net.local_addr().to_string(), ClientConfig::default());
+    for (i, a) in mats.iter().enumerate() {
+        if let Err(e) = client.upload(&format!("mat{i}"), a) {
+            eprintln!("serve: artifact upload failed: {e}");
+            return 1;
+        }
+    }
+    let mut rng = XorShift::new(2);
+    let t0 = std::time::Instant::now();
+    let ids: Vec<u64> = (0..requests)
+        .filter_map(|_| {
+            let which = rng.below(mats.len());
+            client.submit(&format!("mat{which}"), b.as_slice(), 64, 0).ok()
+        })
+        .collect();
+    let mut ok = 0usize;
+    let mut shed = 0usize;
+    for id in ids {
+        match client.wait(id) {
+            Ok(WireOutcome::Result(_)) => ok += 1,
+            Ok(WireOutcome::Error(e))
+                if matches!(
+                    e.code,
+                    ErrCode::ShedDeadline | ErrCode::ShedCodel | ErrCode::Cancelled
+                ) =>
+            {
+                shed += 1;
+            }
+            _ => {}
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = net.shutdown();
+    println!(
+        "served {ok}/{requests} over the wire ({shed} shed) in {wall:.2}s — {:.1} req/s",
+        ok as f64 / wall
+    );
+    println!("{snap}");
+    if let Some(path) = metrics_file {
         println!("metrics dump -> {}", path.display());
     }
     0

@@ -1,0 +1,437 @@
+//! Wire client: reconnect with capped exponential backoff, idempotent
+//! resubmit via client-generated request ids.
+//!
+//! The client owns the id space: every operation (submit, upload, stats)
+//! gets a fresh id, and the encoded request frame is kept in an in-flight
+//! table until its terminal reply arrives. Any transport failure —
+//! refused connect, torn frame, mid-request disconnect, accept-time shed
+//! — is handled the same way: drop the socket, back off, reconnect, and
+//! replay every in-flight frame. Replay is safe because the server's poll
+//! registry keys on the client's ids: a request still running re-attaches
+//! (no duplicate execution), and a request whose terminal frame was lost
+//! re-executes deterministically.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::formats::Csr;
+use crate::net::frame::{
+    self, DecodeError, ErrCode, ErrorPayload, Frame, FrameType, ResultPayload, SubmitPayload,
+    UploadPayload,
+};
+
+/// Client knobs.
+#[derive(Clone, Debug)]
+pub struct ClientConfig {
+    /// Socket read/write timeout.
+    pub io_timeout: Duration,
+    /// Consecutive transport failures tolerated per operation before
+    /// giving up.
+    pub max_reconnects: u32,
+    /// First backoff delay; doubles per consecutive failure.
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_cap: Duration,
+    /// Max accepted payload size per frame (bytes).
+    pub max_frame: u32,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        ClientConfig {
+            io_timeout: Duration::from_secs(10),
+            max_reconnects: 8,
+            backoff_base: Duration::from_millis(10),
+            backoff_cap: Duration::from_secs(1),
+            max_frame: frame::DEFAULT_MAX_FRAME,
+        }
+    }
+}
+
+/// Terminal outcome of one wire request.
+#[derive(Clone, Debug)]
+pub enum WireOutcome {
+    /// The computed `C` plus execution facts.
+    Result(ResultPayload),
+    /// A typed terminal error (shed, cancelled, executor failure, …).
+    Error(ErrorPayload),
+}
+
+impl WireOutcome {
+    pub fn is_ok(&self) -> bool {
+        matches!(self, WireOutcome::Result(_))
+    }
+
+    /// The shed/error code, when the outcome is an error.
+    pub fn err_code(&self) -> Option<ErrCode> {
+        match self {
+            WireOutcome::Result(_) => None,
+            WireOutcome::Error(e) => Some(e.code),
+        }
+    }
+}
+
+/// What reply retires an in-flight entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Expect {
+    /// `Submit`: retired by `Result` or `Error`.
+    Terminal,
+    /// `UploadArtifact`: retired by `Ack` or `Error`.
+    Ack,
+    /// `Stats`: retired by `StatsReply` or `Error`.
+    Stats,
+}
+
+struct Inflight {
+    bytes: Vec<u8>,
+    expects: Expect,
+}
+
+/// Each client claims its own 2^32-wide id block: the server's poll
+/// registry keys on the raw wire id, so ids must never collide across
+/// clients sharing one server. This guarantees uniqueness within a
+/// process; across processes the operator partitions the id space (or
+/// runs one client per process).
+static ID_BLOCK: AtomicU64 = AtomicU64::new(0);
+
+/// A blocking wire client for one server address.
+pub struct Client {
+    addr: String,
+    cfg: ClientConfig,
+    stream: Option<TcpStream>,
+    rbuf: Vec<u8>,
+    next_id: u64,
+    inflight: HashMap<u64, Inflight>,
+    /// Terminal outcomes read while waiting for a different id.
+    mailbox: HashMap<u64, WireOutcome>,
+}
+
+impl Client {
+    /// A client for `addr` (no connection is made until the first
+    /// operation).
+    pub fn new(addr: impl Into<String>, cfg: ClientConfig) -> Client {
+        // ordering: relaxed — unique block handout, no ordering dependency
+        let block = ID_BLOCK.fetch_add(1, Ordering::Relaxed);
+        Client {
+            addr: addr.into(),
+            cfg,
+            stream: None,
+            rbuf: Vec::new(),
+            next_id: (block << 32) | 1,
+            inflight: HashMap::new(),
+            mailbox: HashMap::new(),
+        }
+    }
+
+    /// Upload a named CSR artifact and wait for the acknowledgement.
+    pub fn upload(&mut self, name: &str, csr: &Csr) -> Result<()> {
+        let payload = UploadPayload {
+            name: name.into(),
+            m: csr.m as u32,
+            k: csr.k as u32,
+            row_ptr: csr.row_ptr.iter().map(|&v| v as u32).collect(),
+            col_idx: csr.col_idx.to_vec(),
+            vals: csr.vals.to_vec(),
+        };
+        let id = self.fresh_id();
+        let bytes =
+            Frame { kind: FrameType::UploadArtifact, id, payload: payload.encode() }.encode();
+        self.track_and_send(id, bytes, Expect::Ack)?;
+        loop {
+            let fr = self.next_reply(id)?;
+            match fr.kind {
+                FrameType::Ack => return Ok(()),
+                FrameType::Error => {
+                    let e = ErrorPayload::parse(&fr.payload).map_err(|m| anyhow!(m))?;
+                    bail!("upload {name:?} rejected ({:?}): {}", e.code, e.message);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Submit `C = A·B` against the named artifact; returns the request
+    /// id to [`wait`](Self::wait) on. `deadline_ms == 0` means no
+    /// deadline.
+    pub fn submit(&mut self, artifact: &str, b: &[f32], n: u32, deadline_ms: u32) -> Result<u64> {
+        let payload =
+            SubmitPayload { deadline_ms, artifact: artifact.into(), n, b: b.to_vec() };
+        let id = self.fresh_id();
+        let bytes = Frame { kind: FrameType::Submit, id, payload: payload.encode() }.encode();
+        self.track_and_send(id, bytes, Expect::Terminal)?;
+        Ok(id)
+    }
+
+    /// Block for the terminal outcome of `id` (submitted earlier).
+    pub fn wait(&mut self, id: u64) -> Result<WireOutcome> {
+        if let Some(o) = self.mailbox.remove(&id) {
+            return Ok(o);
+        }
+        loop {
+            let fr = self.next_reply(id)?;
+            match fr.kind {
+                FrameType::Result => {
+                    let p = ResultPayload::parse(&fr.payload).map_err(|m| anyhow!(m))?;
+                    return Ok(WireOutcome::Result(p));
+                }
+                FrameType::Error => {
+                    let p = ErrorPayload::parse(&fr.payload).map_err(|m| anyhow!(m))?;
+                    return Ok(WireOutcome::Error(p));
+                }
+                // Pending (poll answers) and acks for this id (a cancel's
+                // Ack shares the request id) are not terminal.
+                _ => {}
+            }
+        }
+    }
+
+    /// Submit and wait.
+    pub fn request(
+        &mut self,
+        artifact: &str,
+        b: &[f32],
+        n: u32,
+        deadline_ms: u32,
+    ) -> Result<WireOutcome> {
+        let id = self.submit(artifact, b, n, deadline_ms)?;
+        self.wait(id)
+    }
+
+    /// Fire a cancel for `id`. The server acks (or reports the id
+    /// unknown, if the request already finished); either way the terminal
+    /// outcome still arrives through [`wait`](Self::wait).
+    pub fn cancel(&mut self, id: u64) -> Result<()> {
+        let bytes = Frame::empty(FrameType::Cancel, id).encode();
+        self.send_with_retry(&bytes)
+    }
+
+    /// Ask whether `id` is still in flight server-side.
+    pub fn poll(&mut self, id: u64) -> Result<()> {
+        let bytes = Frame::empty(FrameType::Poll, id).encode();
+        self.send_with_retry(&bytes)
+    }
+
+    /// Fetch the server's metrics snapshot as JSON.
+    pub fn stats(&mut self) -> Result<String> {
+        let id = self.fresh_id();
+        let bytes = Frame::empty(FrameType::Stats, id).encode();
+        self.track_and_send(id, bytes, Expect::Stats)?;
+        loop {
+            let fr = self.next_reply(id)?;
+            match fr.kind {
+                FrameType::StatsReply => {
+                    return String::from_utf8(fr.payload)
+                        .map_err(|_| anyhow!("stats reply is not UTF-8"));
+                }
+                FrameType::Error => {
+                    let e = ErrorPayload::parse(&fr.payload).map_err(|m| anyhow!(m))?;
+                    bail!("stats rejected ({:?}): {}", e.code, e.message);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    fn backoff(&self, attempt: u32) -> Duration {
+        let factor = 1u32 << attempt.min(16);
+        self.cfg.backoff_base.saturating_mul(factor).min(self.cfg.backoff_cap)
+    }
+
+    fn drop_stream(&mut self) {
+        self.stream = None;
+        self.rbuf.clear();
+    }
+
+    /// Dial (with backoff) if disconnected, then replay every in-flight
+    /// frame — the idempotent-resubmit half of the reconnect story.
+    fn ensure_connected(&mut self) -> Result<()> {
+        if self.stream.is_some() {
+            return Ok(());
+        }
+        let mut attempt = 0u32;
+        loop {
+            if let Ok(s) = TcpStream::connect(&self.addr) {
+                let _ = s.set_read_timeout(Some(self.cfg.io_timeout));
+                let _ = s.set_write_timeout(Some(self.cfg.io_timeout));
+                let _ = s.set_nodelay(true);
+                self.stream = Some(s);
+                self.rbuf.clear();
+                let frames: Vec<Vec<u8>> =
+                    self.inflight.values().map(|e| e.bytes.clone()).collect();
+                if frames.iter().all(|f| self.write_now(f).is_ok()) {
+                    return Ok(());
+                }
+                // A replay write failed: fall through to back off and
+                // redial (write_now already dropped the stream).
+            }
+            attempt += 1;
+            if attempt > self.cfg.max_reconnects {
+                bail!("cannot connect to {} after {attempt} attempts", self.addr);
+            }
+            std::thread::sleep(self.backoff(attempt));
+        }
+    }
+
+    fn write_now(&mut self, bytes: &[u8]) -> std::io::Result<()> {
+        let s = self
+            .stream
+            .as_mut()
+            .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::NotConnected, "no stream"))?;
+        let r = s.write_all(bytes).and_then(|_| s.flush());
+        if r.is_err() {
+            self.drop_stream();
+        }
+        r
+    }
+
+    fn track_and_send(&mut self, id: u64, bytes: Vec<u8>, expects: Expect) -> Result<()> {
+        self.inflight.insert(id, Inflight { bytes: bytes.clone(), expects });
+        self.send_with_retry(&bytes)
+    }
+
+    fn send_with_retry(&mut self, bytes: &[u8]) -> Result<()> {
+        let mut failures = 0u32;
+        loop {
+            self.ensure_connected()?;
+            if self.write_now(bytes).is_ok() {
+                return Ok(());
+            }
+            failures += 1;
+            if failures > self.cfg.max_reconnects {
+                bail!("cannot send to {} after {failures} attempts", self.addr);
+            }
+            std::thread::sleep(self.backoff(failures));
+        }
+    }
+
+    /// Read frames until one addressed to `id` arrives, transparently
+    /// absorbing transport failures (reconnect + replay) and accept-time
+    /// sheds (`Error(Overloaded)` on id 0 → back off and redial).
+    /// Terminal frames for *other* ids are parked in the mailbox.
+    fn next_reply(&mut self, id: u64) -> Result<Frame> {
+        let mut failures = 0u32;
+        loop {
+            self.ensure_connected()?;
+            match self.read_frame() {
+                Ok(fr) => {
+                    failures = 0;
+                    if fr.kind == FrameType::Error {
+                        if let Ok(e) = ErrorPayload::parse(&fr.payload) {
+                            if e.code == ErrCode::Overloaded && fr.id == 0 {
+                                self.drop_stream();
+                                let ms = u64::from(e.retry_after_ms.max(1));
+                                std::thread::sleep(Duration::from_millis(ms));
+                                continue;
+                            }
+                        }
+                    }
+                    self.retire(fr.id, fr.kind);
+                    if fr.id == id {
+                        return Ok(fr);
+                    }
+                    self.stash(fr);
+                }
+                Err(_) => {
+                    self.drop_stream();
+                    failures += 1;
+                    if failures > self.cfg.max_reconnects {
+                        bail!(
+                            "connection to {} keeps failing while waiting for request {id}",
+                            self.addr
+                        );
+                    }
+                    std::thread::sleep(self.backoff(failures));
+                }
+            }
+        }
+    }
+
+    /// Remove the in-flight entry for `id` if `kind` retires it.
+    fn retire(&mut self, id: u64, kind: FrameType) {
+        let done = match self.inflight.get(&id) {
+            Some(e) => match e.expects {
+                Expect::Terminal => matches!(kind, FrameType::Result | FrameType::Error),
+                Expect::Ack => matches!(kind, FrameType::Ack | FrameType::Error),
+                Expect::Stats => matches!(kind, FrameType::StatsReply | FrameType::Error),
+            },
+            None => false,
+        };
+        if done {
+            self.inflight.remove(&id);
+        }
+    }
+
+    /// Park a terminal frame for a different id in the mailbox.
+    fn stash(&mut self, fr: Frame) {
+        let outcome = match fr.kind {
+            FrameType::Result => {
+                ResultPayload::parse(&fr.payload).ok().map(WireOutcome::Result)
+            }
+            FrameType::Error => ErrorPayload::parse(&fr.payload).ok().map(WireOutcome::Error),
+            _ => None,
+        };
+        if let Some(o) = outcome {
+            self.mailbox.insert(fr.id, o);
+        }
+    }
+
+    /// Decode one frame out of the read buffer, reading more bytes as
+    /// needed. Any error (EOF, timeout, protocol violation) surfaces to
+    /// the caller, which drops the stream and reconnects.
+    fn read_frame(&mut self) -> Result<Frame> {
+        loop {
+            match frame::decode(&self.rbuf, self.cfg.max_frame) {
+                Ok((fr, used)) => {
+                    self.rbuf.drain(..used);
+                    return Ok(fr);
+                }
+                Err(DecodeError::Incomplete { .. }) => {}
+                Err(e) => bail!("protocol error from server: {e}"),
+            }
+            let s = self.stream.as_mut().ok_or_else(|| anyhow!("not connected"))?;
+            let mut tmp = [0u8; 16 * 1024];
+            match s.read(&mut tmp) {
+                Ok(0) => bail!("server closed the connection"),
+                Ok(n) => self.rbuf.extend_from_slice(&tmp[..n]),
+                Err(e) => bail!("read failed: {e}"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let c = Client::new("127.0.0.1:1", ClientConfig::default());
+        assert_eq!(c.backoff(1), Duration::from_millis(20));
+        assert_eq!(c.backoff(2), Duration::from_millis(40));
+        assert_eq!(c.backoff(30), Duration::from_secs(1));
+    }
+
+    #[test]
+    fn connect_failure_gives_up_after_max_reconnects() {
+        // A port from the discard range that nothing listens on.
+        let cfg = ClientConfig {
+            max_reconnects: 1,
+            backoff_base: Duration::from_millis(1),
+            ..ClientConfig::default()
+        };
+        let mut c = Client::new("127.0.0.1:9", cfg);
+        let err = c.request("x", &[1.0], 1, 0).unwrap_err().to_string();
+        assert!(err.contains("cannot connect"), "{err}");
+    }
+}

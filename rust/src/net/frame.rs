@@ -1,0 +1,603 @@
+//! Wire frame codec: a small length-prefixed binary protocol.
+//!
+//! Every frame is a fixed 24-byte little-endian header followed by a
+//! CRC32-checksummed payload:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic         b"SPMM"
+//! 4       1     version       1
+//! 5       1     frame type    (see [`FrameType`])
+//! 6       2     flags         reserved, must be 0
+//! 8       8     request id    client-generated; echoed on every reply
+//! 16      4     payload len   bytes following the header
+//! 20      4     payload crc   CRC32 (IEEE) of the payload bytes
+//! 24      len   payload
+//! ```
+//!
+//! The decoder ([`decode`]) is a total function over arbitrary byte
+//! slices: it never panics, never reads past `HEADER_LEN + payload len`,
+//! and reports every CRC mismatch — the properties `tests/net_props.rs`
+//! fuzzes. Typed payload views ([`SubmitPayload`] etc.) parse with the
+//! same discipline: every length is bounds-checked against the remaining
+//! buffer *before* any allocation, so a hostile length field cannot
+//! trigger an over-read or an over-allocation.
+
+/// Frame magic: the first four bytes of every frame.
+pub const MAGIC: [u8; 4] = *b"SPMM";
+/// Protocol version carried in byte 4.
+pub const VERSION: u8 = 1;
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 24;
+/// Default max-frame-size guard (header excluded): 16 MiB.
+pub const DEFAULT_MAX_FRAME: u32 = 16 * 1024 * 1024;
+
+/// Frame discriminant (byte 5 of the header).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameType {
+    /// Client → server: run `C = A·B` where `A` is a named uploaded
+    /// artifact and `B` rides inline ([`SubmitPayload`]).
+    Submit = 1,
+    /// Client → server: register a named CSR artifact ([`UploadPayload`]).
+    UploadArtifact = 2,
+    /// Client → server: ask about an in-flight request id (empty payload).
+    Poll = 3,
+    /// Client → server: cancel an in-flight request id (empty payload).
+    Cancel = 4,
+    /// Client → server: request a metrics snapshot (empty payload).
+    Stats = 5,
+    /// Server → client: terminal success ([`ResultPayload`]).
+    Result = 6,
+    /// Server → client: terminal typed error ([`ErrorPayload`]).
+    Error = 7,
+    /// Server → client: `Poll` answer — still in flight (empty payload).
+    Pending = 8,
+    /// Server → client: `Stats` answer (JSON snapshot as UTF-8 payload).
+    StatsReply = 9,
+    /// Server → client: non-terminal acknowledgement (upload accepted,
+    /// cancel flagged).
+    Ack = 10,
+}
+
+impl FrameType {
+    pub fn from_u8(v: u8) -> Option<FrameType> {
+        match v {
+            1 => Some(FrameType::Submit),
+            2 => Some(FrameType::UploadArtifact),
+            3 => Some(FrameType::Poll),
+            4 => Some(FrameType::Cancel),
+            5 => Some(FrameType::Stats),
+            6 => Some(FrameType::Result),
+            7 => Some(FrameType::Error),
+            8 => Some(FrameType::Pending),
+            9 => Some(FrameType::StatsReply),
+            10 => Some(FrameType::Ack),
+            _ => None,
+        }
+    }
+}
+
+/// Machine-readable error code carried by [`ErrorPayload`] (the wire
+/// projection of `ShedReason`/`SubmitError`/execution failures).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrCode {
+    /// Shed: the request's deadline expired before execution.
+    ShedDeadline = 1,
+    /// Shed: CoDel overload victim — retry after `retry_after_ms`.
+    ShedCodel = 2,
+    /// Shed: the request was cancelled.
+    Cancelled = 3,
+    /// The executor failed or panicked (the request was the poison pill;
+    /// resubmitting will fail again).
+    Exec = 4,
+    /// The connection sent a malformed frame; the server closes it.
+    Malformed = 5,
+    /// Accept-time shed: the server is at `max_conns` — reconnect after
+    /// `retry_after_ms`.
+    Overloaded = 6,
+    /// The server is shutting down; no new work is admitted.
+    Shutdown = 7,
+    /// `Submit` referenced an artifact name never uploaded.
+    UnknownArtifact = 8,
+    /// `Poll`/`Cancel` referenced a request id the server is not holding
+    /// (already delivered, or never submitted on this server).
+    UnknownRequest = 9,
+    /// The frame's declared payload length exceeds the server's guard.
+    FrameTooLarge = 10,
+    /// The payload parsed but failed validation (bad CSR, shape
+    /// mismatch, …).
+    BadRequest = 11,
+}
+
+impl ErrCode {
+    pub fn from_u8(v: u8) -> Option<ErrCode> {
+        match v {
+            1 => Some(ErrCode::ShedDeadline),
+            2 => Some(ErrCode::ShedCodel),
+            3 => Some(ErrCode::Cancelled),
+            4 => Some(ErrCode::Exec),
+            5 => Some(ErrCode::Malformed),
+            6 => Some(ErrCode::Overloaded),
+            7 => Some(ErrCode::Shutdown),
+            8 => Some(ErrCode::UnknownArtifact),
+            9 => Some(ErrCode::UnknownRequest),
+            10 => Some(ErrCode::FrameTooLarge),
+            11 => Some(ErrCode::BadRequest),
+            _ => None,
+        }
+    }
+
+    /// True when the condition is transient and the client should retry
+    /// the same request (possibly after `retry_after_ms`).
+    pub fn retryable(&self) -> bool {
+        matches!(self, ErrCode::ShedCodel | ErrCode::Overloaded)
+    }
+}
+
+/// One decoded frame: type, client-generated request id, raw payload.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Frame {
+    pub kind: FrameType,
+    pub id: u64,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    /// A payload-less frame (Poll/Cancel/Stats/Pending/Ack).
+    pub fn empty(kind: FrameType, id: u64) -> Frame {
+        Frame { kind, id, payload: Vec::new() }
+    }
+
+    /// Serialize to the on-wire layout documented at module level.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(HEADER_LEN + self.payload.len());
+        out.extend_from_slice(&MAGIC);
+        out.push(VERSION);
+        out.push(self.kind as u8);
+        out.extend_from_slice(&0u16.to_le_bytes());
+        out.extend_from_slice(&self.id.to_le_bytes());
+        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&crc32(&self.payload).to_le_bytes());
+        out.extend_from_slice(&self.payload);
+        out
+    }
+}
+
+/// Why a byte slice failed to decode as a frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodeError {
+    /// Not enough bytes yet: the frame needs `need` total bytes. Not a
+    /// protocol violation — a streaming reader keeps reading.
+    Incomplete { need: usize },
+    /// First four bytes are not [`MAGIC`].
+    BadMagic,
+    /// Unknown protocol version.
+    BadVersion(u8),
+    /// Unknown frame type.
+    BadType(u8),
+    /// Reserved flags were nonzero.
+    BadFlags(u16),
+    /// Declared payload length exceeds the max-frame guard.
+    TooLarge { len: u32, max: u32 },
+    /// Payload checksum mismatch.
+    BadCrc { expected: u32, actual: u32 },
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::Incomplete { need } => write!(f, "incomplete frame: need {need} bytes"),
+            DecodeError::BadMagic => write!(f, "bad magic (expected \"SPMM\")"),
+            DecodeError::BadVersion(v) => write!(f, "unsupported protocol version {v}"),
+            DecodeError::BadType(t) => write!(f, "unknown frame type {t}"),
+            DecodeError::BadFlags(x) => write!(f, "reserved flags must be 0, got {x:#x}"),
+            DecodeError::TooLarge { len, max } => {
+                write!(f, "payload of {len} bytes exceeds max frame size {max}")
+            }
+            DecodeError::BadCrc { expected, actual } => {
+                write!(f, "payload crc mismatch: header says {expected:#010x}, got {actual:#010x}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+/// Try to decode one frame from the front of `buf`. On success returns
+/// the frame and the exact number of bytes consumed
+/// (`HEADER_LEN + payload len` — never more, regardless of how much extra
+/// data follows). [`DecodeError::Incomplete`] means "keep reading";
+/// every other error is a protocol violation that should close the
+/// connection.
+pub fn decode(buf: &[u8], max_frame: u32) -> Result<(Frame, usize), DecodeError> {
+    if buf.len() < HEADER_LEN {
+        return Err(DecodeError::Incomplete { need: HEADER_LEN });
+    }
+    if buf[0..4] != MAGIC {
+        return Err(DecodeError::BadMagic);
+    }
+    if buf[4] != VERSION {
+        return Err(DecodeError::BadVersion(buf[4]));
+    }
+    let kind = FrameType::from_u8(buf[5]).ok_or(DecodeError::BadType(buf[5]))?;
+    let flags = u16::from_le_bytes([buf[6], buf[7]]);
+    if flags != 0 {
+        return Err(DecodeError::BadFlags(flags));
+    }
+    let id = u64::from_le_bytes([
+        buf[8], buf[9], buf[10], buf[11], buf[12], buf[13], buf[14], buf[15],
+    ]);
+    let len = u32::from_le_bytes([buf[16], buf[17], buf[18], buf[19]]);
+    if len > max_frame {
+        return Err(DecodeError::TooLarge { len, max: max_frame });
+    }
+    let expected = u32::from_le_bytes([buf[20], buf[21], buf[22], buf[23]]);
+    let total = HEADER_LEN + len as usize;
+    if buf.len() < total {
+        return Err(DecodeError::Incomplete { need: total });
+    }
+    let payload = &buf[HEADER_LEN..total];
+    let actual = crc32(payload);
+    if actual != expected {
+        return Err(DecodeError::BadCrc { expected, actual });
+    }
+    Ok((Frame { kind, id, payload: payload.to_vec() }, total))
+}
+
+const CRC_TABLE: [u32; 256] = build_crc_table();
+
+const fn build_crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xedb8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// CRC32 (IEEE 802.3 polynomial, reflected), the checksum over every
+/// frame payload.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = !0u32;
+    for &b in data {
+        c = (c >> 8) ^ CRC_TABLE[((c ^ b as u32) & 0xff) as usize];
+    }
+    !c
+}
+
+/// Bounds-checked little-endian reader over a payload slice. Every read
+/// validates the remaining length first, so parsers never panic and never
+/// allocate more than the buffer can actually back.
+struct Rd<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Rd { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], String> {
+        let remaining = self.buf.len() - self.pos;
+        if remaining < n {
+            return Err(format!("truncated payload: {what} needs {n} bytes, {remaining} left"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8, String> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &str) -> Result<u16, String> {
+        let s = self.take(2, what)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32, String> {
+        let s = self.take(4, what)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64, String> {
+        let s = self.take(8, what)?;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+
+    fn string(&mut self, what: &str) -> Result<String, String> {
+        let len = self.u16(what)? as usize;
+        let s = self.take(len, what)?;
+        String::from_utf8(s.to_vec()).map_err(|_| format!("{what} is not valid UTF-8"))
+    }
+
+    fn u32s(&mut self, count: usize, what: &str) -> Result<Vec<u32>, String> {
+        let bytes = count.checked_mul(4).ok_or_else(|| format!("{what}: length overflow"))?;
+        let s = self.take(bytes, what)?;
+        Ok(s.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    fn f32s(&mut self, count: usize, what: &str) -> Result<Vec<f32>, String> {
+        let bytes = count.checked_mul(4).ok_or_else(|| format!("{what}: length overflow"))?;
+        let s = self.take(bytes, what)?;
+        Ok(s.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    fn finish(self, what: &str) -> Result<(), String> {
+        if self.pos != self.buf.len() {
+            let extra = self.buf.len() - self.pos;
+            return Err(format!("{what}: {extra} trailing bytes after payload"));
+        }
+        Ok(())
+    }
+}
+
+fn push_string(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u16).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// `Submit` payload: deadline, artifact reference for `A`, inline dense
+/// `B` (`k×n` row-major f32).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SubmitPayload {
+    /// Per-request deadline in milliseconds; 0 = no deadline.
+    pub deadline_ms: u32,
+    /// Name of the uploaded artifact to use as `A`.
+    pub artifact: String,
+    /// Dense width `n`.
+    pub n: u32,
+    /// `B`, `k×n` row-major (length must be `A.k × n`).
+    pub b: Vec<f32>,
+}
+
+impl SubmitPayload {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(14 + self.artifact.len() + self.b.len() * 4);
+        out.extend_from_slice(&self.deadline_ms.to_le_bytes());
+        push_string(&mut out, &self.artifact);
+        out.extend_from_slice(&self.n.to_le_bytes());
+        out.extend_from_slice(&(self.b.len() as u32).to_le_bytes());
+        for v in &self.b {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn parse(buf: &[u8]) -> Result<SubmitPayload, String> {
+        let mut r = Rd::new(buf);
+        let deadline_ms = r.u32("deadline_ms")?;
+        let artifact = r.string("artifact name")?;
+        let n = r.u32("n")?;
+        let b_len = r.u32("b length")? as usize;
+        let b = r.f32s(b_len, "b data")?;
+        r.finish("submit")?;
+        Ok(SubmitPayload { deadline_ms, artifact, n, b })
+    }
+}
+
+/// `UploadArtifact` payload: a named CSR matrix by parts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct UploadPayload {
+    pub name: String,
+    pub m: u32,
+    pub k: u32,
+    /// `m + 1` row offsets.
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl UploadPayload {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(
+            14 + self.name.len() + (self.row_ptr.len() + self.col_idx.len() + self.vals.len()) * 4,
+        );
+        push_string(&mut out, &self.name);
+        out.extend_from_slice(&self.m.to_le_bytes());
+        out.extend_from_slice(&self.k.to_le_bytes());
+        out.extend_from_slice(&(self.col_idx.len() as u32).to_le_bytes());
+        for v in &self.row_ptr {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in &self.col_idx {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in &self.vals {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn parse(buf: &[u8]) -> Result<UploadPayload, String> {
+        let mut r = Rd::new(buf);
+        let name = r.string("artifact name")?;
+        let m = r.u32("m")?;
+        let k = r.u32("k")?;
+        let nnz = r.u32("nnz")? as usize;
+        let row_ptr = r.u32s(m as usize + 1, "row_ptr")?;
+        let col_idx = r.u32s(nnz, "col_idx")?;
+        let vals = r.f32s(nnz, "vals")?;
+        r.finish("upload")?;
+        Ok(UploadPayload { name, m, k, row_ptr, col_idx, vals })
+    }
+}
+
+/// `Error` payload: typed code + retry hint + human-readable message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ErrorPayload {
+    pub code: ErrCode,
+    /// Suggested backoff before retrying, in milliseconds (0 = no hint).
+    pub retry_after_ms: u32,
+    pub message: String,
+}
+
+impl ErrorPayload {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(7 + self.message.len());
+        out.push(self.code as u8);
+        out.extend_from_slice(&self.retry_after_ms.to_le_bytes());
+        push_string(&mut out, &self.message);
+        out
+    }
+
+    pub fn parse(buf: &[u8]) -> Result<ErrorPayload, String> {
+        let mut r = Rd::new(buf);
+        let code_raw = r.u8("error code")?;
+        let code =
+            ErrCode::from_u8(code_raw).ok_or_else(|| format!("unknown error code {code_raw}"))?;
+        let retry_after_ms = r.u32("retry_after_ms")?;
+        let message = r.string("message")?;
+        r.finish("error")?;
+        Ok(ErrorPayload { code, retry_after_ms, message })
+    }
+}
+
+/// `Result` payload: the computed `C` plus summary execution facts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResultPayload {
+    /// 0 = row-split, 1 = merge-based.
+    pub algorithm: u8,
+    /// Server-side end-to-end latency in microseconds.
+    pub latency_us: u64,
+    /// `m×n` row-major.
+    pub c: Vec<f32>,
+}
+
+impl ResultPayload {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(13 + self.c.len() * 4);
+        out.push(self.algorithm);
+        out.extend_from_slice(&self.latency_us.to_le_bytes());
+        out.extend_from_slice(&(self.c.len() as u32).to_le_bytes());
+        for v in &self.c {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn parse(buf: &[u8]) -> Result<ResultPayload, String> {
+        let mut r = Rd::new(buf);
+        let algorithm = r.u8("algorithm")?;
+        let latency_us = r.u64("latency_us")?;
+        let c_len = r.u32("c length")? as usize;
+        let c = r.f32s(c_len, "c data")?;
+        r.finish("result")?;
+        Ok(ResultPayload { algorithm, latency_us, c })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_the_ieee_check_value() {
+        // The standard CRC32 check vector.
+        assert_eq!(crc32(b"123456789"), 0xcbf4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn frame_roundtrips_through_encode_decode() {
+        let f = Frame { kind: FrameType::Submit, id: 0xdead_beef_0042, payload: vec![1, 2, 3] };
+        let bytes = f.encode();
+        let (back, consumed) = decode(&bytes, DEFAULT_MAX_FRAME).unwrap();
+        assert_eq!(back, f);
+        assert_eq!(consumed, bytes.len());
+    }
+
+    #[test]
+    fn decode_consumes_exactly_one_frame_from_a_stream() {
+        let a = Frame::empty(FrameType::Poll, 1).encode();
+        let b = Frame::empty(FrameType::Cancel, 2).encode();
+        let mut stream = a.clone();
+        stream.extend_from_slice(&b);
+        let (f1, used) = decode(&stream, DEFAULT_MAX_FRAME).unwrap();
+        assert_eq!(f1.kind, FrameType::Poll);
+        assert_eq!(used, a.len());
+        let (f2, used2) = decode(&stream[used..], DEFAULT_MAX_FRAME).unwrap();
+        assert_eq!(f2.kind, FrameType::Cancel);
+        assert_eq!(used2, b.len());
+    }
+
+    #[test]
+    fn corrupt_payload_is_flagged_as_bad_crc() {
+        let mut bytes = Frame { kind: FrameType::Ack, id: 9, payload: vec![7, 7, 7] }.encode();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xff;
+        assert!(matches!(decode(&bytes, DEFAULT_MAX_FRAME), Err(DecodeError::BadCrc { .. })));
+    }
+
+    #[test]
+    fn oversized_declared_length_is_rejected_before_reading() {
+        let mut bytes = Frame::empty(FrameType::Poll, 1).encode();
+        bytes[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(decode(&bytes, 1024), Err(DecodeError::TooLarge { .. })));
+    }
+
+    #[test]
+    fn submit_payload_roundtrips() {
+        let p = SubmitPayload {
+            deadline_ms: 250,
+            artifact: "graph-a".into(),
+            n: 4,
+            b: vec![1.0, -2.5, 3.25, 0.0],
+        };
+        assert_eq!(SubmitPayload::parse(&p.encode()).unwrap(), p);
+    }
+
+    #[test]
+    fn upload_payload_roundtrips() {
+        let p = UploadPayload {
+            name: "m".into(),
+            m: 2,
+            k: 3,
+            row_ptr: vec![0, 1, 2],
+            col_idx: vec![0, 2],
+            vals: vec![0.5, 1.5],
+        };
+        assert_eq!(UploadPayload::parse(&p.encode()).unwrap(), p);
+    }
+
+    #[test]
+    fn error_and_result_payloads_roundtrip() {
+        let e =
+            ErrorPayload { code: ErrCode::ShedCodel, retry_after_ms: 50, message: "busy".into() };
+        assert_eq!(ErrorPayload::parse(&e.encode()).unwrap(), e);
+        let r = ResultPayload { algorithm: 1, latency_us: 12345, c: vec![1.0, 2.0] };
+        assert_eq!(ResultPayload::parse(&r.encode()).unwrap(), r);
+    }
+
+    #[test]
+    fn truncated_typed_payloads_error_instead_of_panicking() {
+        let full = SubmitPayload {
+            deadline_ms: 1,
+            artifact: "x".into(),
+            n: 1,
+            b: vec![1.0],
+        }
+        .encode();
+        for cut in 0..full.len() {
+            assert!(SubmitPayload::parse(&full[..cut]).is_err(), "cut at {cut} should fail");
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_after_a_typed_payload_is_rejected() {
+        let mut bytes =
+            ErrorPayload { code: ErrCode::Exec, retry_after_ms: 0, message: "boom".into() }
+                .encode();
+        bytes.push(0);
+        assert!(ErrorPayload::parse(&bytes).is_err());
+    }
+}

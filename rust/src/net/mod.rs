@@ -1,0 +1,39 @@
+//! The network front door: a dependency-free TCP ingress for the serving
+//! engine.
+//!
+//! Three layers (see DESIGN.md §Wire protocol & the front door):
+//!
+//! - [`frame`] — the length-prefixed binary protocol: 24-byte header
+//!   (magic, version, type, request id, payload length, CRC32) plus typed
+//!   payloads for submit / artifact upload / results / errors. The
+//!   decoder is total: arbitrary bytes never panic it, never make it
+//!   over-read, and every checksum mismatch is flagged.
+//! - [`server`] — [`server::NetServer`]: accept loop with accept-time
+//!   shedding, per-connection reader/writer threads with bounded reply
+//!   queues, a poll registry of detached [`RequestHandle`]s pumped back
+//!   onto the wire, and graceful drain that runs *before* the inner
+//!   server's final metrics dump.
+//! - [`client`] — [`client::Client`]: blocking client with reconnect,
+//!   capped exponential backoff, and idempotent resubmit keyed on
+//!   client-generated request ids.
+//!
+//! Everything maps onto the existing admission-control machinery: frame
+//! deadlines become [`Deadline`]s in `Server::submit_with`, `Cancel`
+//! frames hit [`RequestHandle::cancel`], and every shed / submit error /
+//! executor panic becomes a typed `Error` frame with a machine-readable
+//! code — never a dropped connection for the other clients.
+//!
+//! [`Deadline`]: crate::coordinator::Deadline
+//! [`RequestHandle`]: crate::coordinator::RequestHandle
+//! [`RequestHandle::cancel`]: crate::coordinator::RequestHandle::cancel
+
+pub mod client;
+pub mod frame;
+pub mod server;
+
+pub use client::{Client, ClientConfig, WireOutcome};
+pub use frame::{
+    DecodeError, ErrCode, ErrorPayload, Frame, FrameType, ResultPayload, SubmitPayload,
+    UploadPayload,
+};
+pub use server::{ArtifactStore, NetConfig, NetServer};

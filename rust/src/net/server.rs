@@ -1,0 +1,844 @@
+//! The TCP front door: accept loop, per-connection reader/writer threads,
+//! the poll registry that pumps terminal outcomes back onto the wire, and
+//! graceful drain.
+//!
+//! # Threading model
+//!
+//! - **Accept loop** (one thread): non-blocking `accept()` polled at
+//!   [`POLL_TICK`]; at-capacity connections are shed with a best-effort
+//!   `Error(Overloaded)` frame before the socket drops.
+//! - **Per connection**: a *reader* thread (frame reassembly, dispatch)
+//!   and a *writer* thread draining a bounded reply queue. The reader
+//!   never writes to the socket directly — every reply is enqueued, so a
+//!   slow client can only stall its own writer.
+//! - **Pump** (one thread): polls the poll registry's detached
+//!   [`RequestHandle`]s and encodes each terminal outcome onto the owning
+//!   connection's reply queue — the single place engine results become
+//!   wire frames.
+//!
+//! # Slow-client policy
+//!
+//! Reply queues are bounded at [`NetConfig::write_queue`] frames. When a
+//! queue is full the reply is *dropped* and counted in `wire_errors`;
+//! replies enqueued by the reader additionally tear the connection down.
+//! A torn-down or disconnected client loses nothing durable: request ids
+//! are client-generated, so a reconnect + resubmit either re-attaches to
+//! the in-flight request (same id in the registry) or re-executes it
+//! deterministically.
+//!
+//! # Drain
+//!
+//! [`NetServer::shutdown`] stops accepting, lets in-flight requests reach
+//! their terminal frames (bounded by [`NetConfig::drain_timeout`]), joins
+//! every connection thread, records the drain duration, and only *then*
+//! runs the inner [`Server::shutdown`] — so the final metrics dump
+//! carries complete wire counters.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender, TryRecvError, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+#[cfg(feature = "faults")]
+use crate::coordinator::faults::{self, FaultSite};
+use crate::coordinator::{Deadline, Metrics, MetricsSnapshot, RequestHandle, Server, SubmitError};
+use crate::formats::Csr;
+use crate::net::frame::{
+    self, DecodeError, ErrCode, ErrorPayload, Frame, FrameType, ResultPayload, SubmitPayload,
+    UploadPayload,
+};
+use crate::spmm::Algorithm;
+use crate::util::sync::recover;
+
+/// How often blocking reads and the pump wake up to check stop flags.
+const POLL_TICK: Duration = Duration::from_millis(20);
+/// Retry hint attached to `Overloaded` / `ShedCodel` error frames.
+const RETRY_AFTER_MS: u32 = 50;
+
+/// Front-door configuration.
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Bind address, e.g. `127.0.0.1:7070` (`:0` picks a free port).
+    pub listen: String,
+    /// Accept-time connection cap; connections beyond it are shed with an
+    /// `Error(Overloaded)` frame.
+    pub max_conns: usize,
+    /// Per-connection I/O budget: a partial frame older than this, or a
+    /// reply write stalled longer than this, tears the connection down.
+    pub io_timeout: Duration,
+    /// Idle reap: a connection with no complete frame for this long is
+    /// closed.
+    pub idle_timeout: Duration,
+    /// Max accepted payload size per frame (bytes).
+    pub max_frame: u32,
+    /// Bounded reply-queue depth per connection (frames).
+    pub write_queue: usize,
+    /// How long `shutdown` waits for in-flight requests to reach their
+    /// terminal frames before tearing the registry down.
+    pub drain_timeout: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            listen: "127.0.0.1:0".into(),
+            max_conns: 64,
+            io_timeout: Duration::from_secs(5),
+            idle_timeout: Duration::from_secs(60),
+            max_frame: frame::DEFAULT_MAX_FRAME,
+            write_queue: 64,
+            drain_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Named CSR artifacts uploaded over the wire (`A` references in
+/// `Submit` frames resolve here).
+#[derive(Default)]
+pub struct ArtifactStore {
+    map: Mutex<HashMap<String, Arc<Csr>>>,
+}
+
+impl ArtifactStore {
+    pub fn insert(&self, name: String, csr: Arc<Csr>) {
+        recover(&self.map).insert(name, csr);
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<Csr>> {
+        recover(&self.map).get(name).cloned()
+    }
+
+    pub fn len(&self) -> usize {
+        recover(&self.map).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One in-flight wire request: the detached engine handle plus the reply
+/// queue of the connection that should receive the terminal frame.
+struct Pending {
+    handle: RequestHandle,
+    reply: SyncSender<(u64, Vec<u8>)>,
+}
+
+/// The poll registry: wire request id → in-flight state. Detached handles
+/// (see [`RequestHandle::detach`]) make this table safe — evicting an
+/// entry or dropping a dead connection's queue never cancels the request.
+#[derive(Default)]
+struct Registry {
+    map: Mutex<HashMap<u64, Pending>>,
+}
+
+impl Registry {
+    fn len(&self) -> usize {
+        recover(&self.map).len()
+    }
+}
+
+/// Join handles of connection reader/writer threads, reaped opportunistically
+/// by the accept loop and drained fully at shutdown.
+#[derive(Default)]
+struct ConnSet {
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl ConnSet {
+    fn push(&self, h: JoinHandle<()>) {
+        recover(&self.handles).push(h);
+    }
+
+    /// Drop handles of threads that already exited (drop detaches, which
+    /// is fine — they are finished).
+    fn reap(&self) {
+        recover(&self.handles).retain(|h| !h.is_finished());
+    }
+
+    fn drain(&self) -> Vec<JoinHandle<()>> {
+        std::mem::take(&mut *recover(&self.handles))
+    }
+}
+
+/// The network front door over a running [`Server`].
+pub struct NetServer {
+    server: Option<Arc<Server>>,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    pump_stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    pump: Option<JoinHandle<()>>,
+    conns: Arc<ConnSet>,
+    registry: Arc<Registry>,
+    store: Arc<ArtifactStore>,
+    drain_timeout: Duration,
+}
+
+impl NetServer {
+    /// Bind `cfg.listen` and start serving `server` over the wire.
+    pub fn start(server: Server, cfg: NetConfig) -> Result<NetServer> {
+        let listener = TcpListener::bind(&cfg.listen)
+            .map_err(|e| anyhow!("cannot bind {}: {e}", cfg.listen))?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let server = Arc::new(server);
+        let stop = Arc::new(AtomicBool::new(false));
+        let pump_stop = Arc::new(AtomicBool::new(false));
+        let conns = Arc::new(ConnSet::default());
+        let registry = Arc::new(Registry::default());
+        let store = Arc::new(ArtifactStore::default());
+        let metrics = Arc::clone(server.metrics_arc());
+
+        let pump = {
+            let registry = Arc::clone(&registry);
+            let metrics = Arc::clone(&metrics);
+            let pump_stop = Arc::clone(&pump_stop);
+            std::thread::Builder::new()
+                .name("net-pump".into())
+                .spawn(move || pump_loop(&registry, &metrics, &pump_stop))?
+        };
+
+        let accept = {
+            let server = Arc::clone(&server);
+            let stop = Arc::clone(&stop);
+            let conns = Arc::clone(&conns);
+            let registry = Arc::clone(&registry);
+            let store = Arc::clone(&store);
+            let cfg = cfg.clone();
+            std::thread::Builder::new().name("net-accept".into()).spawn(move || {
+                accept_loop(listener, server, metrics, cfg, stop, conns, registry, store)
+            })?
+        };
+
+        Ok(NetServer {
+            server: Some(server),
+            addr,
+            stop,
+            pump_stop,
+            accept: Some(accept),
+            pump: Some(pump),
+            conns,
+            registry,
+            store,
+            drain_timeout: cfg.drain_timeout,
+        })
+    }
+
+    /// The bound address (useful with `listen = "127.0.0.1:0"`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The inner engine server.
+    pub fn server(&self) -> &Server {
+        self.server.as_ref().expect("server present until shutdown")
+    }
+
+    /// Snapshot the serving metrics (wire counters included).
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.server().metrics()
+    }
+
+    /// Uploaded artifacts (visible for in-process seeding and tests).
+    pub fn artifacts(&self) -> &Arc<ArtifactStore> {
+        &self.store
+    }
+
+    /// Graceful drain, then inner shutdown: stop accepting, flush
+    /// in-flight replies (bounded by `drain_timeout`), join every wire
+    /// thread, record the drain duration, and only then run
+    /// [`Server::shutdown`] — so its final metrics dump includes the
+    /// complete wire counters.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        let t0 = Instant::now();
+        // ordering: release — stop flag; readers/accept observe with acquire
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // Flush in-flight replies: the pump keeps delivering while we wait.
+        while self.registry.len() > 0 && t0.elapsed() < self.drain_timeout {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // ordering: release — pump observes with acquire on its next tick
+        self.pump_stop.store(true, Ordering::Release);
+        if let Some(h) = self.pump.take() {
+            let _ = h.join();
+        }
+        // Entries that outlived the drain window are abandoned, not
+        // cancelled: the handles are detached, so the engine still runs
+        // them to a terminal outcome and accounts them in the snapshot.
+        recover(&self.registry.map).clear();
+        // Readers exit on the stop flag at the next poll tick; writers
+        // exit once every sender (reader + registry) is gone and their
+        // queues are drained.
+        for h in self.conns.drain() {
+            let _ = h.join();
+        }
+        let mut server = self.server.take().expect("first shutdown");
+        server.metrics_arc().set_net_drain_s(t0.elapsed().as_secs_f64());
+        // All wire threads are joined, so ours is the last strong ref;
+        // the brief spin covers a conn thread that exited between
+        // is_finished() and dropping its Arc clone.
+        loop {
+            match Arc::try_unwrap(server) {
+                Ok(inner) => return inner.shutdown(),
+                Err(back) => {
+                    server = back;
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        // Best-effort stop when shutdown() was never called; threads exit
+        // on their next poll tick (not joined here).
+        // ordering: release — matches the acquire loads in the wire threads
+        self.stop.store(true, Ordering::Release);
+        // ordering: release — matches the acquire load in the pump loop
+        self.pump_stop.store(true, Ordering::Release);
+    }
+}
+
+// one spawn site; the list is the shared wire state every connection
+// needs, and a struct would be built and destructured exactly once
+#[allow(clippy::too_many_arguments)]
+fn accept_loop(
+    listener: TcpListener,
+    server: Arc<Server>,
+    metrics: Arc<Metrics>,
+    cfg: NetConfig,
+    stop: Arc<AtomicBool>,
+    conns: Arc<ConnSet>,
+    registry: Arc<Registry>,
+    store: Arc<ArtifactStore>,
+) {
+    // ordering: acquire — pairs with the release store in shutdown/drop
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                conns.reap();
+                // ordering: relaxed — standalone stats counter, no release/acquire pairing
+                metrics.conns_accepted.fetch_add(1, Ordering::Relaxed);
+                // ordering: relaxed — approximate gauge read is fine for accept-time admission
+                let open = metrics.conns_open.load(Ordering::Relaxed);
+                if open >= cfg.max_conns as u64 {
+                    shed_connection(stream, &metrics, cfg.io_timeout);
+                    continue;
+                }
+                // ordering: relaxed — gauge increment, decremented by the reader's exit guard
+                metrics.conns_open.fetch_add(1, Ordering::Relaxed);
+                spawn_conn(stream, &server, &metrics, &cfg, &stop, &conns, &registry, &store);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(POLL_TICK);
+            }
+            Err(_) => std::thread::sleep(POLL_TICK),
+        }
+    }
+}
+
+/// Accept-time shed: best-effort `Error(Overloaded)` frame, then drop the
+/// socket. The client backoff-retries against `retry_after_ms`.
+fn shed_connection(stream: TcpStream, metrics: &Metrics, io_timeout: Duration) {
+    // ordering: relaxed — standalone stats counter, no release/acquire pairing
+    metrics.conns_shed.fetch_add(1, Ordering::Relaxed);
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_write_timeout(Some(io_timeout));
+    let mut stream = stream;
+    let bytes = err_frame(0, ErrCode::Overloaded, RETRY_AFTER_MS, "connection limit reached");
+    let _ = stream.write_all(&bytes);
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+// called only from accept_loop, forwarding its own parameter set down
+// one level — a params struct would just move the list
+#[allow(clippy::too_many_arguments)]
+fn spawn_conn(
+    stream: TcpStream,
+    server: &Arc<Server>,
+    metrics: &Arc<Metrics>,
+    cfg: &NetConfig,
+    stop: &Arc<AtomicBool>,
+    conns: &Arc<ConnSet>,
+    registry: &Arc<Registry>,
+    store: &Arc<ArtifactStore>,
+) {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_nodelay(true);
+    // Short read timeout = the reader's poll tick for the stop flag;
+    // io/idle budgets are enforced by bookkeeping in the read loop.
+    let _ = stream.set_read_timeout(Some(POLL_TICK));
+    let _ = stream.set_write_timeout(Some(cfg.io_timeout));
+
+    let (tx, rx) = std::sync::mpsc::sync_channel::<(u64, Vec<u8>)>(cfg.write_queue);
+    let writer = {
+        let stream = match stream.try_clone() {
+            Ok(s) => s,
+            Err(_) => {
+                // ordering: relaxed — standalone stats counter, no release/acquire pairing
+                metrics.wire_errors.fetch_add(1, Ordering::Relaxed);
+                // ordering: relaxed — gauge decrement, pairs with accept-time increment
+                metrics.conns_open.fetch_sub(1, Ordering::Relaxed);
+                return;
+            }
+        };
+        let metrics = Arc::clone(metrics);
+        std::thread::Builder::new()
+            .name("net-writer".into())
+            .spawn(move || writer_loop(stream, rx, &metrics))
+    };
+    let writer = match writer {
+        Ok(h) => h,
+        Err(_) => {
+            // ordering: relaxed — gauge decrement mirroring the accept-side increment
+            metrics.conns_open.fetch_sub(1, Ordering::Relaxed);
+            return;
+        }
+    };
+
+    let reader = {
+        let server = Arc::clone(server);
+        let metrics = Arc::clone(metrics);
+        let cfg = cfg.clone();
+        let stop = Arc::clone(stop);
+        let registry = Arc::clone(registry);
+        let store = Arc::clone(store);
+        std::thread::Builder::new().name("net-reader".into()).spawn(move || {
+            reader_loop(stream, tx, &server, &metrics, &cfg, &stop, &registry, &store);
+            // ordering: relaxed — gauge decrement mirroring the accept-side increment
+            metrics.conns_open.fetch_sub(1, Ordering::Relaxed);
+        })
+    };
+    match reader {
+        Ok(h) => {
+            conns.push(h);
+            conns.push(writer);
+        }
+        Err(_) => {
+            // ordering: relaxed — gauge decrement mirroring the accept-side increment
+            metrics.conns_open.fetch_sub(1, Ordering::Relaxed);
+            conns.push(writer);
+        }
+    }
+}
+
+/// What the dispatcher wants done with the connection after a frame.
+enum ConnAction {
+    Continue,
+    Close,
+}
+
+// one spawn site; the list IS the connection's dependency set (socket,
+// reply queue, engine, registry, store) — bundling hides nothing
+#[allow(clippy::too_many_arguments)]
+fn reader_loop(
+    mut stream: TcpStream,
+    reply: SyncSender<(u64, Vec<u8>)>,
+    server: &Arc<Server>,
+    metrics: &Metrics,
+    cfg: &NetConfig,
+    stop: &AtomicBool,
+    registry: &Registry,
+    store: &ArtifactStore,
+) {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut tmp = [0u8; 16 * 1024];
+    let mut last_frame = Instant::now();
+    // When a partial frame sits in `buf`, the instant its first byte
+    // arrived — the io_timeout clock.
+    let mut partial_since: Option<Instant> = None;
+
+    // ordering: acquire — pairs with the release store in shutdown/drop
+    while !stop.load(Ordering::Acquire) {
+        match stream.read(&mut tmp) {
+            Ok(0) => break,
+            Ok(n) => {
+                if buf.is_empty() {
+                    partial_since = Some(Instant::now());
+                }
+                buf.extend_from_slice(&tmp[..n]);
+                loop {
+                    match frame::decode(&buf, cfg.max_frame) {
+                        Ok((fr, used)) => {
+                            buf.drain(..used);
+                            partial_since = (!buf.is_empty()).then(Instant::now);
+                            last_frame = Instant::now();
+                            // ordering: relaxed — standalone stats counter
+                            metrics.frames_in.fetch_add(1, Ordering::Relaxed);
+                            match dispatch(fr, &reply, server, metrics, registry, store) {
+                                ConnAction::Continue => {}
+                                ConnAction::Close => {
+                                    let _ = stream.shutdown(Shutdown::Both);
+                                    return;
+                                }
+                            }
+                        }
+                        Err(DecodeError::Incomplete { .. }) => break,
+                        Err(e) => {
+                            // Malformed-frame isolation: typed error frame,
+                            // close THIS connection, neighbors unaffected.
+                            // ordering: relaxed — standalone stats counter
+                            metrics.wire_errors.fetch_add(1, Ordering::Relaxed);
+                            let code = match e {
+                                DecodeError::TooLarge { .. } => ErrCode::FrameTooLarge,
+                                _ => ErrCode::Malformed,
+                            };
+                            let _ = reply.try_send((0, err_frame(0, code, 0, &e.to_string())));
+                            // Give the writer a moment to flush the error
+                            // frame before the socket closes under it.
+                            std::thread::sleep(Duration::from_millis(20));
+                            let _ = stream.shutdown(Shutdown::Both);
+                            return;
+                        }
+                    }
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // Poll tick: enforce the io/idle budgets.
+                if let Some(t0) = partial_since {
+                    if t0.elapsed() >= cfg.io_timeout {
+                        // A frame started but never finished: stalled client.
+                        // ordering: relaxed — standalone stats counter
+                        metrics.wire_errors.fetch_add(1, Ordering::Relaxed);
+                        break;
+                    }
+                } else if last_frame.elapsed() >= cfg.idle_timeout {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => break,
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// Handle one well-formed frame. Replies go through the bounded queue; a
+/// full queue is the slow-client policy kicking in (drop + close).
+fn dispatch(
+    fr: Frame,
+    reply: &SyncSender<(u64, Vec<u8>)>,
+    server: &Arc<Server>,
+    metrics: &Metrics,
+    registry: &Registry,
+    store: &ArtifactStore,
+) -> ConnAction {
+    let id = fr.id;
+    match fr.kind {
+        FrameType::Submit => dispatch_submit(fr, reply, server, metrics, registry, store),
+        FrameType::UploadArtifact => {
+            let out = match UploadPayload::parse(&fr.payload) {
+                Ok(p) => match build_csr(p) {
+                    Ok((name, csr)) => {
+                        store.insert(name, Arc::new(csr));
+                        Frame::empty(FrameType::Ack, id).encode()
+                    }
+                    Err(msg) => err_frame(id, ErrCode::BadRequest, 0, &msg),
+                },
+                Err(msg) => err_frame(id, ErrCode::Malformed, 0, &msg),
+            };
+            send_reply(reply, metrics, id, out)
+        }
+        FrameType::Poll => {
+            let held = recover(&registry.map).contains_key(&id);
+            let out = if held {
+                Frame::empty(FrameType::Pending, id).encode()
+            } else {
+                err_frame(id, ErrCode::UnknownRequest, 0, "not in flight on this server")
+            };
+            send_reply(reply, metrics, id, out)
+        }
+        FrameType::Cancel => {
+            let out = {
+                let map = recover(&registry.map);
+                match map.get(&id) {
+                    Some(p) => {
+                        p.handle.cancel();
+                        Frame::empty(FrameType::Ack, id).encode()
+                    }
+                    None => err_frame(id, ErrCode::UnknownRequest, 0, "not in flight"),
+                }
+            };
+            send_reply(reply, metrics, id, out)
+        }
+        FrameType::Stats => {
+            let json = server.metrics().to_json();
+            let out =
+                Frame { kind: FrameType::StatsReply, id, payload: json.into_bytes() }.encode();
+            send_reply(reply, metrics, id, out)
+        }
+        // Server→client frame types arriving at the server are protocol
+        // violations: typed error, close this connection only.
+        FrameType::Result
+        | FrameType::Error
+        | FrameType::Pending
+        | FrameType::StatsReply
+        | FrameType::Ack => {
+            // ordering: relaxed — standalone stats counter
+            metrics.wire_errors.fetch_add(1, Ordering::Relaxed);
+            let _ = reply.try_send((id, err_frame(id, ErrCode::Malformed, 0, "not a request")));
+            ConnAction::Close
+        }
+    }
+}
+
+fn dispatch_submit(
+    fr: Frame,
+    reply: &SyncSender<(u64, Vec<u8>)>,
+    server: &Arc<Server>,
+    metrics: &Metrics,
+    registry: &Registry,
+    store: &ArtifactStore,
+) -> ConnAction {
+    let id = fr.id;
+    let p = match SubmitPayload::parse(&fr.payload) {
+        Ok(p) => p,
+        Err(msg) => {
+            // ordering: relaxed — standalone stats counter
+            metrics.wire_errors.fetch_add(1, Ordering::Relaxed);
+            let _ = reply.try_send((id, err_frame(id, ErrCode::Malformed, 0, &msg)));
+            return ConnAction::Close;
+        }
+    };
+    #[cfg(feature = "faults")]
+    faults::maybe_delay(FaultSite::NetRead, id);
+    let a = match store.get(&p.artifact) {
+        Some(a) => a,
+        None => {
+            let msg = format!("artifact {:?} not uploaded", p.artifact);
+            return send_reply(reply, metrics, id, err_frame(id, ErrCode::UnknownArtifact, 0, &msg));
+        }
+    };
+    let n = p.n as usize;
+    if n == 0 || p.b.len() != a.k * n {
+        let msg = format!(
+            "B must be k×n = {}×{} = {} values, got {}",
+            a.k,
+            n,
+            a.k * n,
+            p.b.len()
+        );
+        return send_reply(reply, metrics, id, err_frame(id, ErrCode::BadRequest, 0, &msg));
+    }
+    let deadline = if p.deadline_ms == 0 {
+        Deadline::none()
+    } else {
+        Deadline::within(Duration::from_millis(p.deadline_ms as u64))
+    };
+    let action = {
+        let mut map = recover(&registry.map);
+        if let Some(entry) = map.get_mut(&id) {
+            // Idempotent resubmit: the id is already in flight (a client
+            // reconnected and replayed). Re-attach the terminal frame to
+            // this connection instead of re-executing.
+            entry.reply = reply.clone();
+            ConnAction::Continue
+        } else {
+            match server.submit_with(a, Arc::new(p.b), n, deadline) {
+                Ok(mut handle) => {
+                    // Detached: if this connection (or the whole table)
+                    // goes away, the request still runs to a terminal
+                    // outcome — see RequestHandle::detach.
+                    handle.detach();
+                    map.insert(id, Pending { handle, reply: reply.clone() });
+                    ConnAction::Continue
+                }
+                Err(SubmitError::Shutdown) => {
+                    drop(map);
+                    let msg = SubmitError::Shutdown.to_string();
+                    let out = err_frame(id, ErrCode::Shutdown, 0, &msg);
+                    return send_reply(reply, metrics, id, out);
+                }
+            }
+        }
+    };
+    #[cfg(feature = "faults")]
+    if faults::wire_drop_conn(id) {
+        // Mid-request disconnect: the request keeps running server-side;
+        // the client's reconnect + resubmit re-attaches by id above.
+        return ConnAction::Close;
+    }
+    action
+}
+
+fn build_csr(p: UploadPayload) -> Result<(String, Csr), String> {
+    let row_ptr: Vec<usize> = p.row_ptr.iter().map(|&v| v as usize).collect();
+    let csr = Csr::new(p.m as usize, p.k as usize, row_ptr, p.col_idx, p.vals)?;
+    Ok((p.name, csr))
+}
+
+/// Enqueue a reply from the reader. Slow-client policy: a full queue
+/// drops the reply, counts a wire error, and closes the connection.
+fn send_reply(
+    reply: &SyncSender<(u64, Vec<u8>)>,
+    metrics: &Metrics,
+    id: u64,
+    bytes: Vec<u8>,
+) -> ConnAction {
+    match reply.try_send((id, bytes)) {
+        Ok(()) => ConnAction::Continue,
+        Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+            // ordering: relaxed — standalone stats counter
+            metrics.wire_errors.fetch_add(1, Ordering::Relaxed);
+            ConnAction::Close
+        }
+    }
+}
+
+/// Writer thread: drain the bounded reply queue onto the socket. Exits
+/// when every sender (reader + registry entries) is gone, or on the first
+/// write failure (the reply is lost; the client recovers by resubmit).
+fn writer_loop(mut stream: TcpStream, rx: Receiver<(u64, Vec<u8>)>, metrics: &Metrics) {
+    while let Ok((_id, bytes)) = rx.recv() {
+        #[cfg(feature = "faults")]
+        if faults::wire_torn(_id) {
+            // Torn frame: emit a prefix, then kill the socket — the client
+            // sees a truncated stream, never a bad-CRC "success".
+            // ordering: relaxed — standalone stats counter
+            metrics.wire_errors.fetch_add(1, Ordering::Relaxed);
+            let _ = stream.write_all(&bytes[..bytes.len() / 2]);
+            let _ = stream.shutdown(Shutdown::Both);
+            break;
+        }
+        match stream.write_all(&bytes) {
+            Ok(()) => {
+                let _ = stream.flush();
+                // ordering: relaxed — standalone stats counter
+                metrics.frames_out.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(_) => {
+                // ordering: relaxed — standalone stats counter
+                metrics.wire_errors.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// Pump thread: move terminal outcomes from detached handles onto the
+/// owning connection's reply queue. The single consumer of the registry's
+/// receivers, so `try_recv` races nothing.
+fn pump_loop(registry: &Registry, metrics: &Metrics, pump_stop: &AtomicBool) {
+    loop {
+        let done: Vec<(u64, Vec<u8>, SyncSender<(u64, Vec<u8>)>)> = {
+            let mut map = recover(&registry.map);
+            let ids: Vec<u64> = map.keys().copied().collect();
+            let mut finished = Vec::new();
+            for id in ids {
+                // try_recv consumes the outcome, so each handle is polled
+                // exactly once per tick and removed the tick it resolves.
+                let outcome = match map.get(&id).map(|p| p.handle.try_recv()) {
+                    Some(Err(TryRecvError::Empty)) | None => continue,
+                    Some(Ok(outcome)) => Some(outcome),
+                    Some(Err(TryRecvError::Disconnected)) => None,
+                };
+                if let Some(p) = map.remove(&id) {
+                    let bytes = match outcome {
+                        Some(o) => terminal_frame(id, o),
+                        None => {
+                            err_frame(id, ErrCode::Shutdown, 0, "server shut down mid-request")
+                        }
+                    };
+                    finished.push((id, bytes, p.reply));
+                }
+            }
+            finished
+        };
+        for (id, bytes, reply) in done {
+            if reply.try_send((id, bytes)).is_err() {
+                // Undeliverable terminal (slow or dead client): the
+                // outcome is dropped; a resubmit re-executes
+                // deterministically.
+                // ordering: relaxed — standalone stats counter
+                metrics.wire_errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        // ordering: acquire — pairs with the release store in shutdown
+        if pump_stop.load(Ordering::Acquire) {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// Encode one engine outcome as its terminal wire frame.
+fn terminal_frame(id: u64, outcome: Result<crate::coordinator::SpmmResult>) -> Vec<u8> {
+    match outcome {
+        Ok(res) => {
+            let algorithm = match res.algorithm {
+                Algorithm::RowSplit => 0u8,
+                Algorithm::MergeBased => 1u8,
+            };
+            let payload = ResultPayload {
+                algorithm,
+                latency_us: (res.latency_s * 1e6) as u64,
+                c: res.c.into_vec(),
+            };
+            Frame { kind: FrameType::Result, id, payload: payload.encode() }.encode()
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            let (code, retry) = classify_error(&msg);
+            err_frame(id, code, retry, &msg)
+        }
+    }
+}
+
+/// Map an engine error message onto the wire's typed error codes, keyed
+/// by the stable `shed ({label})` prefixes from admission control.
+fn classify_error(msg: &str) -> (ErrCode, u32) {
+    if msg.starts_with("shed (deadline-expired") {
+        (ErrCode::ShedDeadline, 0)
+    } else if msg.starts_with("shed (codel-overload") {
+        (ErrCode::ShedCodel, RETRY_AFTER_MS)
+    } else if msg.starts_with("shed (cancelled") {
+        (ErrCode::Cancelled, 0)
+    } else {
+        (ErrCode::Exec, 0)
+    }
+}
+
+fn err_frame(id: u64, code: ErrCode, retry_after_ms: u32, message: &str) -> Vec<u8> {
+    let payload = ErrorPayload { code, retry_after_ms, message: message.into() };
+    Frame { kind: FrameType::Error, id, payload: payload.encode() }.encode()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_classification_follows_the_shed_prefixes() {
+        assert_eq!(classify_error("shed (deadline-expired): request 1").0, ErrCode::ShedDeadline);
+        assert_eq!(classify_error("shed (codel-overload): request 2").0, ErrCode::ShedCodel);
+        assert_eq!(classify_error("shed (cancelled): request 3").0, ErrCode::Cancelled);
+        assert_eq!(classify_error("worker panicked: boom").0, ErrCode::Exec);
+        assert!(classify_error("shed (codel-overload): x").1 > 0);
+    }
+
+    #[test]
+    fn artifact_store_roundtrips() {
+        let store = ArtifactStore::default();
+        assert!(store.is_empty());
+        let csr = Csr::new(1, 1, vec![0, 1], vec![0], vec![2.0]).unwrap();
+        store.insert("a".into(), Arc::new(csr));
+        assert_eq!(store.len(), 1);
+        assert!(store.get("a").is_some());
+        assert!(store.get("b").is_none());
+    }
+}

@@ -78,6 +78,7 @@ fn chaos_every_request_reaches_exactly_one_terminal_outcome() {
         delay_one_in: 3,
         delay: Duration::from_millis(2),
         squeeze_queue_to: 4,
+        ..FaultPlan::default()
     });
 
     let server = Server::start(

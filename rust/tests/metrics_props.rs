@@ -330,6 +330,7 @@ fn golden_prometheus_export_covers_every_snapshot_field() {
             "p50_s" => vec!["spmm_p50_seconds ".into()],
             "p99_s" => vec!["spmm_p99_seconds ".into()],
             "mean_latency_s" => vec!["spmm_mean_latency_seconds ".into()],
+            "net_drain_s" => vec!["spmm_net_drain_seconds ".into()],
             "slow_threshold_s" => vec!["spmm_slow_threshold_seconds ".into()],
             "slow_requests" => vec!["spmm_slow_journal_entries ".into()],
             "recent_requests" => vec!["spmm_recent_journal_entries ".into()],

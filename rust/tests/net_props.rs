@@ -1,0 +1,485 @@
+//! Wire-protocol properties and front-door integration tests.
+//!
+//! Codec half (pure, no sockets): the decoder is a *total* function —
+//! deterministic pseudo-random byte streams never panic it and never make
+//! it over-read; every truncation reports `Incomplete`; every corrupted
+//! payload byte is flagged as a CRC mismatch; and the on-wire layout of
+//! every frame type is pinned byte-for-byte, so an accidental format
+//! change fails loudly instead of silently breaking old clients.
+//!
+//! Socket half (loopback): upload + submit round-trips bitwise against
+//! in-process execution, typed errors for unknown artifacts/requests,
+//! malformed-frame isolation (the neighbor connection keeps working),
+//! accept-time shedding at `max_conns`, the detach guarantee (a dead
+//! connection never cancels in-flight work), and idempotent resubmit
+//! after reconnect.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use merge_spmm::coordinator::{EngineConfig, Server, ServerConfig};
+use merge_spmm::formats::Csr;
+use merge_spmm::gen;
+use merge_spmm::net::frame::{self, crc32, DecodeError};
+use merge_spmm::net::{
+    Client, ClientConfig, ErrCode, ErrorPayload, Frame, FrameType, NetConfig, NetServer,
+    ResultPayload, SubmitPayload, UploadPayload, WireOutcome,
+};
+
+// ---------------------------------------------------------------------------
+// codec properties
+// ---------------------------------------------------------------------------
+
+/// Deterministic LCG so the fuzz sweep is reproducible.
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0
+    }
+
+    fn byte(&mut self) -> u8 {
+        (self.next() >> 56) as u8
+    }
+
+    fn below(&mut self, n: usize) -> usize {
+        (self.next() % n as u64) as usize
+    }
+}
+
+#[test]
+fn decoder_is_total_over_arbitrary_byte_streams() {
+    let mut rng = Lcg(0x5eed_0001);
+    for _ in 0..4000 {
+        let len = rng.below(192);
+        let mut buf: Vec<u8> = (0..len).map(|_| rng.byte()).collect();
+        // Bias half the streams toward valid-looking prefixes so the
+        // deeper branches (type, flags, length, crc) get fuzzed too.
+        if len >= 8 && rng.below(2) == 0 {
+            buf[0..4].copy_from_slice(b"SPMM");
+            buf[4] = 1;
+            buf[5] = rng.below(16) as u8;
+            if rng.below(2) == 0 {
+                buf[6] = 0;
+                buf[7] = 0;
+            }
+        }
+        let max = [64u32, 1024, frame::DEFAULT_MAX_FRAME][rng.below(3)];
+        match frame::decode(&buf, max) {
+            Ok((fr, used)) => {
+                // exactly one frame, never a byte more
+                assert_eq!(used, frame::HEADER_LEN + fr.payload.len());
+                assert!(used <= buf.len(), "decoder consumed bytes it never had");
+            }
+            Err(DecodeError::Incomplete { need }) => {
+                assert!(need > buf.len(), "Incomplete must ask for more than it was given");
+            }
+            Err(_) => {} // typed rejection is always acceptable
+        }
+    }
+}
+
+#[test]
+fn every_truncation_of_a_valid_frame_reports_incomplete() {
+    let payload = SubmitPayload {
+        deadline_ms: 99,
+        artifact: "graph".into(),
+        n: 2,
+        b: vec![1.0, 2.0, 3.0, 4.0],
+    }
+    .encode();
+    let full = Frame { kind: FrameType::Submit, id: 31337, payload }.encode();
+    for cut in 0..full.len() {
+        match frame::decode(&full[..cut], frame::DEFAULT_MAX_FRAME) {
+            Err(DecodeError::Incomplete { need }) => {
+                assert!(need > cut, "cut {cut}: need {need} must exceed what was given");
+                assert!(need <= full.len(), "cut {cut}: need {need} beyond the real frame");
+            }
+            other => panic!("cut {cut}: expected Incomplete, got {other:?}"),
+        }
+    }
+    // the untruncated frame round-trips
+    let (fr, used) = frame::decode(&full, frame::DEFAULT_MAX_FRAME).unwrap();
+    assert_eq!(used, full.len());
+    assert_eq!(fr.id, 31337);
+}
+
+#[test]
+fn every_corrupted_payload_byte_is_flagged_as_bad_crc() {
+    let payload = ErrorPayload {
+        code: ErrCode::Exec,
+        retry_after_ms: 0,
+        message: "executor failure".into(),
+    }
+    .encode();
+    let clean = Frame { kind: FrameType::Error, id: 5, payload }.encode();
+    for i in frame::HEADER_LEN..clean.len() {
+        for flip in [0x01u8, 0x80, 0xff] {
+            let mut bytes = clean.clone();
+            bytes[i] ^= flip;
+            assert!(
+                matches!(
+                    frame::decode(&bytes, frame::DEFAULT_MAX_FRAME),
+                    Err(DecodeError::BadCrc { .. })
+                ),
+                "payload byte {i} flipped by {flip:#x} must fail the checksum"
+            );
+        }
+    }
+}
+
+#[test]
+fn header_corruptions_yield_their_typed_errors() {
+    let clean = Frame::empty(FrameType::Poll, 1).encode();
+    let case = |mutate: fn(&mut Vec<u8>)| {
+        let mut b = clean.clone();
+        mutate(&mut b);
+        frame::decode(&b, frame::DEFAULT_MAX_FRAME)
+    };
+    assert!(matches!(case(|b| b[0] = b'X'), Err(DecodeError::BadMagic)));
+    assert!(matches!(case(|b| b[4] = 9), Err(DecodeError::BadVersion(9))));
+    assert!(matches!(case(|b| b[5] = 200), Err(DecodeError::BadType(200))));
+    assert!(matches!(case(|b| b[6] = 1), Err(DecodeError::BadFlags(1))));
+    // declared length beyond the guard is rejected before any read
+    let mut big = clean.clone();
+    big[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(matches!(frame::decode(&big, 1024), Err(DecodeError::TooLarge { .. })));
+}
+
+/// The on-wire layout, pinned byte-for-byte. Any diff here is a wire
+/// format break: old clients stop interoperating. Bump [`frame::VERSION`]
+/// instead of editing the expectations.
+#[test]
+fn golden_on_wire_layout_of_every_frame_type() {
+    // Submit id=7: deadline 250 ms, artifact "A", n=2, B=[1.0, -2.0]
+    let submit = Frame {
+        kind: FrameType::Submit,
+        id: 7,
+        payload: SubmitPayload {
+            deadline_ms: 250,
+            artifact: "A".into(),
+            n: 2,
+            b: vec![1.0, -2.0],
+        }
+        .encode(),
+    }
+    .encode();
+    assert_eq!(
+        submit,
+        &[
+            0x53, 0x50, 0x4d, 0x4d, 0x01, 0x01, 0x00, 0x00, // magic "SPMM", v1, Submit, flags
+            0x07, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // id 7
+            0x17, 0x00, 0x00, 0x00, // payload len 23
+            0x23, 0x79, 0x7a, 0x52, // crc32
+            0xfa, 0x00, 0x00, 0x00, // deadline_ms 250
+            0x01, 0x00, 0x41, // name len 1, "A"
+            0x02, 0x00, 0x00, 0x00, // n 2
+            0x02, 0x00, 0x00, 0x00, // b len 2
+            0x00, 0x00, 0x80, 0x3f, // 1.0f32
+            0x00, 0x00, 0x00, 0xc0, // -2.0f32
+        ]
+    );
+
+    // UploadArtifact id=8: "M", 1×2, nnz 2, row_ptr [0,2], cols [0,1],
+    // vals [1.5, 2.5]
+    let upload = Frame {
+        kind: FrameType::UploadArtifact,
+        id: 8,
+        payload: UploadPayload {
+            name: "M".into(),
+            m: 1,
+            k: 2,
+            row_ptr: vec![0, 2],
+            col_idx: vec![0, 1],
+            vals: vec![1.5, 2.5],
+        }
+        .encode(),
+    }
+    .encode();
+    assert_eq!(
+        upload,
+        &[
+            0x53, 0x50, 0x4d, 0x4d, 0x01, 0x02, 0x00, 0x00, // header: UploadArtifact
+            0x08, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // id 8
+            0x27, 0x00, 0x00, 0x00, // payload len 39
+            0x6a, 0x2a, 0x8a, 0x81, // crc32
+            0x01, 0x00, 0x4d, // name len 1, "M"
+            0x01, 0x00, 0x00, 0x00, // m 1
+            0x02, 0x00, 0x00, 0x00, // k 2
+            0x02, 0x00, 0x00, 0x00, // nnz 2
+            0x00, 0x00, 0x00, 0x00, 0x02, 0x00, 0x00, 0x00, // row_ptr [0, 2]
+            0x00, 0x00, 0x00, 0x00, 0x01, 0x00, 0x00, 0x00, // col_idx [0, 1]
+            0x00, 0x00, 0xc0, 0x3f, 0x00, 0x00, 0x20, 0x40, // vals [1.5, 2.5]
+        ]
+    );
+
+    // Result id=7: merge-based, 7 µs, C=[1.0]
+    let result = Frame {
+        kind: FrameType::Result,
+        id: 7,
+        payload: ResultPayload { algorithm: 1, latency_us: 7, c: vec![1.0] }.encode(),
+    }
+    .encode();
+    assert_eq!(
+        result,
+        &[
+            0x53, 0x50, 0x4d, 0x4d, 0x01, 0x06, 0x00, 0x00, // header: Result
+            0x07, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // id 7
+            0x11, 0x00, 0x00, 0x00, // payload len 17
+            0x63, 0x77, 0xff, 0xf2, // crc32
+            0x01, // algorithm 1 (merge-based)
+            0x07, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // latency_us 7
+            0x01, 0x00, 0x00, 0x00, // c len 1
+            0x00, 0x00, 0x80, 0x3f, // 1.0f32
+        ]
+    );
+
+    // Error id=7: ShedCodel, retry after 50 ms, "busy"
+    let error = Frame {
+        kind: FrameType::Error,
+        id: 7,
+        payload: ErrorPayload {
+            code: ErrCode::ShedCodel,
+            retry_after_ms: 50,
+            message: "busy".into(),
+        }
+        .encode(),
+    }
+    .encode();
+    assert_eq!(
+        error,
+        &[
+            0x53, 0x50, 0x4d, 0x4d, 0x01, 0x07, 0x00, 0x00, // header: Error
+            0x07, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // id 7
+            0x0b, 0x00, 0x00, 0x00, // payload len 11
+            0xa0, 0x6e, 0xa2, 0x2a, // crc32
+            0x02, // code 2 (ShedCodel)
+            0x32, 0x00, 0x00, 0x00, // retry_after_ms 50
+            0x04, 0x00, 0x62, 0x75, 0x73, 0x79, // msg len 4, "busy"
+        ]
+    );
+
+    // Empty-payload frames: header only, len 0, crc32("") == 0.
+    for (kind, byte, id) in [
+        (FrameType::Poll, 0x03u8, 0x0102030405060708u64),
+        (FrameType::Cancel, 0x04, 9),
+        (FrameType::Stats, 0x05, 10),
+        (FrameType::Pending, 0x08, 9),
+        (FrameType::Ack, 0x0a, 8),
+    ] {
+        let bytes = Frame::empty(kind, id).encode();
+        let mut want = vec![0x53, 0x50, 0x4d, 0x4d, 0x01, byte, 0x00, 0x00];
+        want.extend_from_slice(&id.to_le_bytes());
+        want.extend_from_slice(&[0u8; 8]); // len 0, crc 0
+        assert_eq!(bytes, want, "{kind:?} layout drifted");
+    }
+
+    // and the checksum itself is the standard IEEE CRC32
+    assert_eq!(crc32(b"123456789"), 0xcbf4_3926);
+}
+
+// ---------------------------------------------------------------------------
+// loopback integration
+// ---------------------------------------------------------------------------
+
+fn cpu_cfg() -> EngineConfig {
+    EngineConfig {
+        artifacts_dir: None,
+        threshold: 9.35,
+        cpu_workers: 2,
+        ..Default::default()
+    }
+}
+
+/// A front door over a batching-off server on an ephemeral loopback port.
+fn start_net(cfg: NetConfig) -> NetServer {
+    let server =
+        Server::start(cpu_cfg(), ServerConfig { max_batch: 1, ..Default::default() }).unwrap();
+    NetServer::start(server, cfg).unwrap()
+}
+
+/// Fault-free in-process reference result for `C = A·B`.
+fn baseline(a: &Arc<Csr>, b: &Arc<Vec<f32>>, n: usize) -> Vec<f32> {
+    let s = Server::start(cpu_cfg(), ServerConfig { max_batch: 1, ..Default::default() }).unwrap();
+    let c = s.submit_blocking(Arc::clone(a), Arc::clone(b), n).unwrap().c.into_vec();
+    s.shutdown();
+    c
+}
+
+/// Read frames off a raw socket until one decodes.
+fn read_one_frame(s: &mut TcpStream) -> Frame {
+    let mut buf = Vec::new();
+    let mut tmp = [0u8; 4096];
+    loop {
+        match frame::decode(&buf, frame::DEFAULT_MAX_FRAME) {
+            Ok((fr, _)) => return fr,
+            Err(DecodeError::Incomplete { .. }) => {}
+            Err(e) => panic!("protocol error from server: {e}"),
+        }
+        let n = s.read(&mut tmp).expect("socket read");
+        assert!(n > 0, "connection closed before a frame arrived");
+        buf.extend_from_slice(&tmp[..n]);
+    }
+}
+
+#[test]
+fn upload_submit_roundtrip_matches_in_process_execution() {
+    // d ≈ 4 keeps the matrix outside the probe band: execution is
+    // deterministic, so the wire result must be bitwise-identical.
+    let a = Arc::new(Csr::random(120, 120, 4.0, 77));
+    let b = Arc::new(gen::dense_matrix(120, 8, 78));
+    let want = baseline(&a, &b, 8);
+
+    let net = start_net(NetConfig::default());
+    let mut client = Client::new(net.local_addr().to_string(), ClientConfig::default());
+    client.upload("a0", &a).unwrap();
+    match client.request("a0", b.as_slice(), 8, 0).unwrap() {
+        WireOutcome::Result(r) => {
+            assert_eq!(r.c.len(), want.len());
+            assert!(
+                r.c.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "wire result must be bitwise-identical to in-process execution"
+            );
+        }
+        WireOutcome::Error(e) => panic!("wire request failed: {:?}: {}", e.code, e.message),
+    }
+    let snap = net.shutdown();
+    assert_eq!(snap.completed, 1, "{snap}");
+    assert!(snap.conns_accepted >= 1, "{snap}");
+    assert!(snap.frames_in >= 2 && snap.frames_out >= 2, "{snap}");
+}
+
+#[test]
+fn unknown_artifact_poll_and_cancel_yield_typed_errors() {
+    let net = start_net(NetConfig::default());
+    let mut client = Client::new(net.local_addr().to_string(), ClientConfig::default());
+    // submit against an artifact nobody uploaded
+    let out = client.request("ghost", &[1.0; 8], 8, 0).unwrap();
+    assert_eq!(out.err_code(), Some(ErrCode::UnknownArtifact));
+    // poll / cancel ids the server is not holding
+    client.poll(4242).unwrap();
+    assert_eq!(client.wait(4242).unwrap().err_code(), Some(ErrCode::UnknownRequest));
+    client.cancel(4343).unwrap();
+    assert_eq!(client.wait(4343).unwrap().err_code(), Some(ErrCode::UnknownRequest));
+    // the stats frame returns the full JSON snapshot, wire counters included
+    let stats = client.stats().unwrap();
+    assert!(stats.contains("\"frames_in\""), "{stats}");
+    assert!(stats.contains("\"conns_open\""), "{stats}");
+    net.shutdown();
+}
+
+#[test]
+fn malformed_frames_are_isolated_to_their_connection() {
+    let net = start_net(NetConfig::default());
+    let addr = net.local_addr();
+    let a = Arc::new(Csr::random(60, 60, 4.0, 5));
+    let b = Arc::new(gen::dense_matrix(60, 4, 6));
+    let mut good = Client::new(addr.to_string(), ClientConfig::default());
+    good.upload("a", &a).unwrap();
+
+    // hostile neighbor: 64 bytes of junk instead of a frame
+    let mut bad = TcpStream::connect(addr).unwrap();
+    bad.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    bad.write_all(&[b'X'; 64]).unwrap();
+    let fr = read_one_frame(&mut bad);
+    assert_eq!(fr.kind, FrameType::Error);
+    let e = ErrorPayload::parse(&fr.payload).unwrap();
+    assert_eq!(e.code, ErrCode::Malformed);
+    // …and the server closes only that connection
+    let mut rest = Vec::new();
+    let _ = bad.read_to_end(&mut rest);
+
+    // the well-behaved neighbor is unaffected, before and after
+    let out = good.request("a", b.as_slice(), 4, 0).unwrap();
+    assert!(out.is_ok(), "healthy connection must survive a hostile neighbor");
+    let snap = net.shutdown();
+    assert!(snap.wire_errors >= 1, "{snap}");
+    assert_eq!(snap.completed, 1, "{snap}");
+}
+
+#[test]
+fn connections_beyond_max_conns_are_shed_with_overloaded() {
+    let net = start_net(NetConfig { max_conns: 1, ..NetConfig::default() });
+    let addr = net.local_addr();
+    let a = Arc::new(Csr::random(40, 40, 4.0, 3));
+    let mut first = Client::new(addr.to_string(), ClientConfig::default());
+    first.upload("a", &a).unwrap(); // guarantees the first slot is held
+
+    let mut second = TcpStream::connect(addr).unwrap();
+    second.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let fr = read_one_frame(&mut second);
+    assert_eq!(fr.kind, FrameType::Error);
+    assert_eq!(fr.id, 0, "accept-time sheds are not tied to a request id");
+    let e = ErrorPayload::parse(&fr.payload).unwrap();
+    assert_eq!(e.code, ErrCode::Overloaded);
+    assert!(e.code.retryable() && e.retry_after_ms > 0, "shed must carry a retry hint");
+    let snap = net.shutdown();
+    assert_eq!(snap.conns_shed, 1, "{snap}");
+}
+
+#[test]
+fn dropping_the_connection_mid_request_does_not_cancel_it() {
+    let net = start_net(NetConfig::default());
+    let addr = net.local_addr();
+    let a = Arc::new(Csr::random(150, 150, 4.0, 21));
+    let b = gen::dense_matrix(150, 8, 22);
+    {
+        let mut client = Client::new(addr.to_string(), ClientConfig::default());
+        client.upload("a", &a).unwrap();
+        client.submit("a", &b, 8, 0).unwrap();
+        // client dropped here: its TCP connection closes with the request
+        // still in flight
+    }
+    // the registry holds a *detached* handle, so the request still runs
+    let t0 = Instant::now();
+    while net.metrics().completed < 1 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "request was lost with its connection"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let snap = net.shutdown();
+    assert_eq!(snap.completed, 1, "{snap}");
+    assert_eq!(snap.cancelled, 0, "a dead connection must not cancel in-flight work: {snap}");
+}
+
+#[test]
+fn resubmitting_the_same_id_after_reconnect_delivers_the_result() {
+    let net = start_net(NetConfig::default());
+    let addr = net.local_addr();
+    let a = Arc::new(Csr::random(80, 80, 4.0, 31));
+    let b = gen::dense_matrix(80, 4, 32);
+    let mut client = Client::new(addr.to_string(), ClientConfig::default());
+    client.upload("a", &a).unwrap();
+
+    let payload =
+        SubmitPayload { deadline_ms: 0, artifact: "a".into(), n: 4, b: b.clone() }.encode();
+    let bytes = Frame { kind: FrameType::Submit, id: 4242, payload }.encode();
+    {
+        // first connection dies right after submitting
+        let mut s1 = TcpStream::connect(addr).unwrap();
+        s1.write_all(&bytes).unwrap();
+        s1.flush().unwrap();
+    }
+    // wait until that submit reached the engine — its registry insert
+    // happened strictly before (same critical section), so the replay
+    // below deterministically either re-attaches to the in-flight request
+    // or re-executes a finished one; both must deliver here
+    let t0 = Instant::now();
+    while net.metrics().requests < 1 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "first submit never dispatched");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let mut s2 = TcpStream::connect(addr).unwrap();
+    s2.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s2.write_all(&bytes).unwrap();
+    s2.flush().unwrap();
+    let fr = read_one_frame(&mut s2);
+    assert_eq!(fr.id, 4242, "reply must carry the client's request id");
+    assert_eq!(fr.kind, FrameType::Result, "resubmit after reconnect must yield the result");
+    net.shutdown();
+}

@@ -1,0 +1,268 @@
+//! Wire chaos suite (`--features faults`): concurrent socket clients with
+//! mixed deadlines and cancellations, under injected executor panics,
+//! delayed reads, torn terminal frames, and mid-request connection drops.
+//!
+//! Invariants proved here:
+//! - every wire request reaches exactly one client-side terminal outcome
+//!   (result, typed error, or a bounded transport give-up — never a hang);
+//! - the server-side conservation law holds in the final snapshot:
+//!   `completed + errors + shed_deadline + shed_codel + cancelled ==
+//!   requests` (each engine submission lands in exactly one terminal
+//!   counter, no matter how many times a wire id was replayed);
+//! - every survivor is bitwise-identical to a fault-free in-process run;
+//! - a mid-traffic `NetServer::shutdown` drains the poll registry and
+//!   joins every wire thread — no wedged connections (`conns_open == 0`).
+//!
+//! The fault plan is process-global, so this file holds a single test: a
+//! second PLAN-touching test would race it under the parallel runner.
+
+#![cfg(feature = "faults")]
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use merge_spmm::coordinator::faults::{self, FaultPlan};
+use merge_spmm::coordinator::{EngineConfig, Server, ServerConfig};
+use merge_spmm::formats::Csr;
+use merge_spmm::gen;
+use merge_spmm::net::{Client, ClientConfig, ErrCode, NetConfig, NetServer, WireOutcome};
+
+fn cpu_cfg() -> EngineConfig {
+    EngineConfig {
+        artifacts_dir: None,
+        threshold: 9.35,
+        cpu_workers: 2,
+        ..Default::default()
+    }
+}
+
+/// Clears the global fault plan even when an assert unwinds mid-test, so
+/// a failure here cannot poison unit tests running in the same process.
+struct ClearGuard;
+impl Drop for ClearGuard {
+    fn drop(&mut self) {
+        faults::clear();
+    }
+}
+
+/// Client-side terminal tallies; every request lands in exactly one.
+#[derive(Default)]
+struct Tally {
+    /// delivered results (bitwise-checked against the baseline)
+    ok: u64,
+    /// typed shed errors: deadline-expired, codel-overload, cancelled
+    shed: u64,
+    /// typed execution errors (injected worker panics)
+    errs: u64,
+    /// typed refusals from a server already shutting down
+    refused: u64,
+    /// transport gave up after bounded reconnects (torn-frame loop,
+    /// dropped connection, or the listener already gone)
+    lost: u64,
+}
+
+impl Tally {
+    fn add(&mut self, o: Tally) {
+        self.ok += o.ok;
+        self.shed += o.shed;
+        self.errs += o.errs;
+        self.refused += o.refused;
+        self.lost += o.lost;
+    }
+
+    fn total(&self) -> u64 {
+        self.ok + self.shed + self.errs + self.refused + self.lost
+    }
+}
+
+const N_CLIENTS: usize = 4;
+const PER_CLIENT: usize = 12;
+
+#[test]
+fn wire_chaos_conserves_outcomes_and_drains_cleanly() {
+    // d ≈ 4 keeps every matrix outside the A/B-probe band: execution is
+    // deterministic, so survivors must match the baseline bitwise even
+    // when a replayed id re-executes from scratch.
+    let mats: Vec<(Arc<Csr>, Arc<Vec<f32>>)> = (0..4)
+        .map(|i| {
+            let m = 200 + i * 40;
+            let seed = 9100 + i as u64 * 10;
+            (
+                Arc::new(Csr::random(m, m, 4.0, seed)),
+                Arc::new(gen::dense_matrix(m, 8, seed + 1)),
+            )
+        })
+        .collect();
+
+    // fault-free in-process baseline, batching off
+    let clean = Server::start(
+        cpu_cfg(),
+        ServerConfig { max_batch: 1, ..Default::default() },
+    )
+    .unwrap();
+    let baseline: Arc<Vec<Vec<f32>>> = Arc::new(
+        mats.iter()
+            .map(|(a, b)| {
+                clean
+                    .submit_blocking(Arc::clone(a), Arc::clone(b), 8)
+                    .unwrap()
+                    .c
+                    .into_vec()
+            })
+            .collect(),
+    );
+    clean.shutdown();
+
+    // the front door over a small, contended engine
+    let server = Server::start(
+        cpu_cfg(),
+        ServerConfig {
+            workers: 2,
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            queue_capacity: 8,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let net = NetServer::start(server, NetConfig::default()).unwrap();
+    let addr = net.local_addr().to_string();
+
+    // artifacts go up before the faults come on, so setup is reliable and
+    // the chaos phase targets exactly the request path
+    {
+        let mut setup = Client::new(addr.clone(), ClientConfig::default());
+        for (i, (a, _)) in mats.iter().enumerate() {
+            setup.upload(&format!("m{i}"), a).unwrap();
+        }
+    }
+
+    let _guard = ClearGuard;
+    faults::install(FaultPlan {
+        seed: 0x3173_C4A0,
+        panic_one_in: 7,
+        delay_one_in: 4,
+        delay: Duration::from_millis(2),
+        torn_one_in: 5,
+        drop_conn_one_in: 6,
+        ..FaultPlan::default()
+    });
+
+    let outcomes = Arc::new(AtomicU64::new(0));
+    let mats = Arc::new(mats);
+    let clients: Vec<_> = (0..N_CLIENTS)
+        .map(|t| {
+            let addr = addr.clone();
+            let mats = Arc::clone(&mats);
+            let baseline = Arc::clone(&baseline);
+            let outcomes = Arc::clone(&outcomes);
+            std::thread::spawn(move || {
+                // tight reconnect budget keeps an always-torn id bounded:
+                // the client gives up (counted `lost`) instead of hanging
+                let mut client = Client::new(
+                    addr,
+                    ClientConfig {
+                        max_reconnects: 6,
+                        backoff_base: Duration::from_millis(5),
+                        backoff_cap: Duration::from_millis(100),
+                        ..ClientConfig::default()
+                    },
+                );
+                let mut tally = Tally::default();
+                for j in 0..PER_CLIENT {
+                    let idx = (t + j) % mats.len();
+                    let (_, b) = &mats[idx];
+                    // mixed deadlines: none / tight / generous
+                    let deadline_ms = match j % 3 {
+                        0 => 0,
+                        1 => 1,
+                        _ => 30_000,
+                    };
+                    let sub = client.submit(&format!("m{idx}"), b.as_slice(), 8, deadline_ms);
+                    let id = match sub {
+                        Ok(id) => id,
+                        Err(_) => {
+                            tally.lost += 1;
+                            // ordering: relaxed — progress counter for the test driver
+                            outcomes.fetch_add(1, Ordering::Relaxed);
+                            continue;
+                        }
+                    };
+                    if j % 6 == 5 {
+                        let _ = client.cancel(id);
+                    }
+                    match client.wait(id) {
+                        Ok(WireOutcome::Result(r)) => {
+                            let want = &baseline[idx];
+                            assert_eq!(r.c.len(), want.len(), "request {t}/{j}: wrong shape");
+                            assert!(
+                                r.c.iter().zip(want).all(|(x, y)| x.to_bits() == y.to_bits()),
+                                "request {t}/{j}: survivor must match the fault-free baseline"
+                            );
+                            tally.ok += 1;
+                        }
+                        Ok(WireOutcome::Error(e)) => match e.code {
+                            ErrCode::ShedDeadline | ErrCode::ShedCodel | ErrCode::Cancelled => {
+                                tally.shed += 1;
+                            }
+                            ErrCode::Shutdown => tally.refused += 1,
+                            _ => tally.errs += 1,
+                        },
+                        Err(_) => tally.lost += 1,
+                    }
+                    // ordering: relaxed — progress counter for the test driver
+                    outcomes.fetch_add(1, Ordering::Relaxed);
+                }
+                tally
+            })
+        })
+        .collect();
+
+    // mid-traffic shutdown: drain once half the requests have resolved,
+    // while the other half are still in flight or still being submitted
+    let half = (N_CLIENTS * PER_CLIENT / 2) as u64;
+    // ordering: relaxed — progress polling, no synchronization carried
+    while outcomes.load(Ordering::Relaxed) < half {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let snap = net.shutdown();
+
+    let mut total = Tally::default();
+    for h in clients {
+        total.add(h.join().expect("client thread must not panic"));
+    }
+
+    // exactly one terminal outcome per request, client-side
+    assert_eq!(total.total(), (N_CLIENTS * PER_CLIENT) as u64);
+    assert!(total.ok >= 1, "some survivors must make it through the chaos");
+
+    // conservation, server-side: every engine submission — including
+    // replays that re-executed — lands in exactly one terminal counter
+    let terminal =
+        snap.completed + snap.errors + snap.shed_deadline + snap.shed_codel + snap.cancelled;
+    assert_eq!(terminal, snap.requests, "terminal outcomes must conserve submissions: {snap}");
+
+    // each delivered client outcome is backed by at least one server-side
+    // terminal of the same class (replays can only add, never subtract)
+    assert!(snap.completed >= total.ok, "{snap}");
+    assert!(snap.errors >= total.errs, "{snap}");
+    assert!(
+        snap.shed_deadline + snap.shed_codel + snap.cancelled >= total.shed,
+        "{snap}"
+    );
+
+    // the drain actually drained: no wedged connections, wire counters
+    // complete in the final snapshot, drain duration recorded
+    assert_eq!(snap.conns_open, 0, "shutdown must join every connection: {snap}");
+    // at least the setup client plus one chaos client got through the
+    // door (threads that lost the race to the shutdown may not have)
+    assert!(snap.conns_accepted >= 2, "{snap}");
+    assert!(snap.frames_in >= half / 2, "{snap}");
+    assert!(snap.frames_out >= total.ok, "{snap}");
+    assert!(snap.net_drain_s >= 0.0, "{snap}");
+    assert!(
+        snap.wire_errors >= 1,
+        "torn frames and dropped connections must register as wire errors: {snap}"
+    );
+}
